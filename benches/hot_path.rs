@@ -1,0 +1,49 @@
+//! Per-edge hot-path benchmark: the edge-centric subgraph enumeration that
+//! dominates every descriptor (paper Table 2 complexity).  Reports edges/s
+//! for each estimator across graph families and budgets.
+
+use stream_descriptors::descriptors::santa::{SantaConfig, SantaEstimator};
+use stream_descriptors::descriptors::{gabe::GabeEstimator, maeve::MaeveEstimator};
+use stream_descriptors::gen;
+use stream_descriptors::graph::stream::VecStream;
+use stream_descriptors::graph::Graph;
+use stream_descriptors::util::bench::Bencher;
+use stream_descriptors::util::rng::Pcg64;
+
+fn families() -> Vec<(&'static str, Graph)> {
+    let mut rng = Pcg64::seed_from_u64(1);
+    vec![
+        ("er-sparse", gen::er_graph(50_000, 150_000, &mut rng)),
+        ("ba-hubs", gen::ba_graph(50_000, 3, &mut rng)),
+        ("plc-clustered", gen::powerlaw_cluster_graph(30_000, 5, 0.5, &mut rng)),
+        ("road-grid", gen::road_graph(220, &mut rng)),
+    ]
+}
+
+fn main() {
+    let mut b = Bencher::new(1, 5);
+    for (name, g) in families() {
+        let m = g.m() as u64;
+        for frac in [0.1, 0.5] {
+            let budget = ((g.m() as f64 * frac) as usize).max(8);
+            b.bench(format!("gabe/{name}/b={frac}|E|"), Some(m), || {
+                let mut s = VecStream::shuffled(g.edges.clone(), 7);
+                GabeEstimator::new(budget).with_seed(3).run(&mut s).counts[5]
+            });
+            b.bench(format!("maeve/{name}/b={frac}|E|"), Some(m), || {
+                let mut s = VecStream::shuffled(g.edges.clone(), 7);
+                MaeveEstimator::new(budget).with_seed(3).run(&mut s).nv
+            });
+            b.bench(format!("santa/{name}/b={frac}|E|"), Some(2 * m), || {
+                let mut s = VecStream::shuffled(g.edges.clone(), 7);
+                SantaEstimator::new(budget).with_seed(3).run(&mut s).traces[4]
+            });
+            // ablation (DESIGN.md §4): closed-form wedge term vs sampling
+            b.bench(format!("santa-xw/{name}/b={frac}|E|"), Some(2 * m), || {
+                let cfg = SantaConfig::new(budget).with_seed(3).with_exact_wedges(true);
+                let mut s = VecStream::shuffled(g.edges.clone(), 7);
+                SantaEstimator::from_config(cfg).run(&mut s).traces[4]
+            });
+        }
+    }
+}

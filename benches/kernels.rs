@@ -1,0 +1,73 @@
+//! L2/L1 artifact benchmark: PJRT executable latency per batched call vs
+//! the pure-rust mirrors — quantifies what the AOT path costs/buys.
+
+use stream_descriptors::classify::{DistanceMatrix, Metric};
+use stream_descriptors::descriptors::psi::psi_from_traces;
+use stream_descriptors::runtime::Runtime;
+use stream_descriptors::util::bench::Bencher;
+use stream_descriptors::util::rng::Pcg64;
+
+fn main() {
+    let Ok(rt) = Runtime::load_default() else {
+        eprintln!("artifacts not built — run `make artifacts` first");
+        std::process::exit(0);
+    };
+    let mut rng = Pcg64::seed_from_u64(5);
+    let mut b = Bencher::new(2, 7);
+
+    // pairwise distance: one full 256x256 tile at D=128
+    let m = rt.manifest.shapes.dist_m;
+    let x: Vec<Vec<f64>> = (0..m)
+        .map(|_| (0..60).map(|_| rng.gen_range_f64(-2.0, 2.0)).collect())
+        .collect();
+    b.bench("l1/pairwise_dist/256x256xD60", Some((m * m) as u64), || {
+        rt.pairwise_dist(&x, &x).unwrap().0[0]
+    });
+    b.bench("rust/pairwise_dist/256x256xD60", Some((m * m) as u64), || {
+        DistanceMatrix::compute(&x, Metric::Canberra).d[1]
+    });
+
+    // santa psi finalization, one full batch
+    let sb = rt.manifest.shapes.santa_b;
+    let traces: Vec<[f64; 5]> = (0..sb)
+        .map(|_| {
+            let n = rng.gen_range_f64(100.0, 5000.0);
+            [n, n, n * 1.5, n * 0.2, n * 2.5]
+        })
+        .collect();
+    let nv: Vec<f64> = traces.iter().map(|t| t[0]).collect();
+    b.bench("l2/santa_psi/batch64", Some(sb as u64), || {
+        rt.santa_psi(&traces, &nv).unwrap()[0].0[0]
+    });
+    b.bench("rust/santa_psi/batch64", Some(sb as u64), || {
+        let mut acc = 0.0;
+        for (t, n) in traces.iter().zip(&nv) {
+            acc += psi_from_traces(t, *n)[0][0];
+        }
+        acc
+    });
+
+    // gabe finalize
+    let gb = rt.manifest.shapes.gabe_b;
+    let counts: Vec<[f64; 17]> = (0..gb)
+        .map(|_| std::array::from_fn(|_| rng.gen_range_f64(0.0, 1e6)))
+        .collect();
+    let gnv: Vec<f64> = (0..gb).map(|_| rng.gen_range_f64(10.0, 2000.0)).collect();
+    b.bench("l2/gabe_finalize/batch64", Some(gb as u64), || {
+        rt.gabe_finalize(&counts, &gnv).unwrap()[0][0]
+    });
+
+    // trace powers (512x512 blocked matmul through the Pallas kernel)
+    let n = 384;
+    let mut lap = vec![0.0f64; n * n];
+    for i in 0..n {
+        lap[i * n + i] = 1.0;
+        if i + 1 < n {
+            lap[i * n + i + 1] = -0.5;
+            lap[(i + 1) * n + i] = -0.5;
+        }
+    }
+    b.bench("l2/trace_powers/512pad", Some((n * n) as u64), || {
+        rt.trace_powers(&lap, n).unwrap()[4]
+    });
+}

@@ -1,0 +1,43 @@
+//! End-to-end pipeline benchmark (Tables 16/17 analog): coordinator fan-out
+//! over a massive synthetic network, absolute budget, all descriptors.
+
+use stream_descriptors::coordinator::{run_pipeline, CoordinatorConfig, DescriptorKind};
+use stream_descriptors::gen::massive::{massive_graph, MassiveKind};
+use stream_descriptors::graph::stream::VecStream;
+use stream_descriptors::util::bench::Bencher;
+
+fn main() {
+    let scale: f64 = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.02);
+    let mut b = Bencher::new(1, 3);
+    for kind in [MassiveKind::Cs, MassiveKind::Fl, MassiveKind::Fo] {
+        let g = massive_graph(kind, scale, 7);
+        let m = g.m() as u64;
+        println!("# {} |V|={} |E|={}", kind.name(), g.n, g.m());
+        for (dname, dk) in [
+            ("gabe", DescriptorKind::Gabe),
+            ("maeve", DescriptorKind::Maeve),
+            ("santa", DescriptorKind::Santa { exact_wedges: false }),
+        ] {
+            for workers in [1usize, 4] {
+                let cfg = CoordinatorConfig {
+                    workers,
+                    budget: (m as usize / 10).clamp(1_000, 100_000),
+                    chunk_size: 8192,
+                    queue_depth: 8,
+                    seed: 7,
+                };
+                b.bench(
+                    format!("pipeline/{}/{dname}/w={workers}", kind.name()),
+                    Some(m),
+                    || {
+                        let mut s = VecStream::shuffled(g.edges.clone(), 3);
+                        run_pipeline(&mut s, dk, &cfg).edges
+                    },
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,59 @@
+//! Coordinator scaling benchmark: fan-out throughput vs worker count and
+//! chunk size (backpressure ablation — DESIGN.md §4 design-choice bench).
+
+use stream_descriptors::coordinator::{run_pipeline, CoordinatorConfig, DescriptorKind};
+use stream_descriptors::gen;
+use stream_descriptors::graph::stream::VecStream;
+use stream_descriptors::util::bench::Bencher;
+use stream_descriptors::util::rng::Pcg64;
+
+fn main() {
+    let g = gen::ba_graph(200_000, 4, &mut Pcg64::seed_from_u64(9));
+    let m = g.m() as u64;
+    println!("# BA graph |V|={} |E|={}", g.n, g.m());
+    let mut b = Bencher::new(1, 3);
+
+    for workers in [1usize, 2, 4, 8, 16] {
+        let cfg = CoordinatorConfig {
+            workers,
+            budget: 50_000,
+            chunk_size: 8192,
+            queue_depth: 8,
+            seed: 1,
+        };
+        b.bench(format!("workers/gabe/w={workers}"), Some(m), || {
+            let mut s = VecStream::shuffled(g.edges.clone(), 2);
+            run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).edges
+        });
+    }
+
+    // chunk-size ablation at fixed W=4
+    for chunk in [64usize, 1024, 8192, 65_536] {
+        let cfg = CoordinatorConfig {
+            workers: 4,
+            budget: 50_000,
+            chunk_size: chunk,
+            queue_depth: 8,
+            seed: 1,
+        };
+        b.bench(format!("chunks/gabe/c={chunk}"), Some(m), || {
+            let mut s = VecStream::shuffled(g.edges.clone(), 2);
+            run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).edges
+        });
+    }
+
+    // queue-depth (backpressure) ablation
+    for depth in [1usize, 4, 32] {
+        let cfg = CoordinatorConfig {
+            workers: 4,
+            budget: 50_000,
+            chunk_size: 8192,
+            queue_depth: depth,
+            seed: 1,
+        };
+        b.bench(format!("queue/gabe/d={depth}"), Some(m), || {
+            let mut s = VecStream::shuffled(g.edges.clone(), 2);
+            run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).edges
+        });
+    }
+}

@@ -1,0 +1,60 @@
+//! Quickstart: stream one graph through all three descriptors and compare
+//! against the exact baselines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use stream_descriptors::analyze::{canberra, euclidean};
+use stream_descriptors::descriptors::psi::psi_from_traces;
+use stream_descriptors::descriptors::santa::SantaEstimator;
+use stream_descriptors::descriptors::{gabe::GabeEstimator, maeve::MaeveEstimator};
+use stream_descriptors::exact;
+use stream_descriptors::gen;
+use stream_descriptors::graph::stream::VecStream;
+use stream_descriptors::util::rng::Pcg64;
+
+fn main() -> stream_descriptors::Result<()> {
+    let seed = 42;
+    let g = gen::powerlaw_cluster_graph(20_000, 4, 0.3, &mut Pcg64::seed_from_u64(seed));
+    println!("graph: |V|={} |E|={} (Holme–Kim power-law cluster)", g.n, g.m());
+
+    let gabe_exact = exact::gabe_exact(&g).descriptor();
+    let maeve_exact = exact::maeve_exact(&g).descriptor();
+    let santa_ref = exact::santa_exact(&g);
+    let psi_exact = psi_from_traces(&santa_ref.traces, santa_ref.nv as f64);
+
+    for frac in [0.1, 0.25, 0.5] {
+        let b = (g.m() as f64 * frac) as usize;
+
+        let mut s = VecStream::shuffled(g.edges.clone(), seed);
+        let gabe = GabeEstimator::new(b).with_seed(seed).run(&mut s);
+        let gabe_err = canberra(&gabe.descriptor(), &gabe_exact);
+
+        let mut s = VecStream::shuffled(g.edges.clone(), seed ^ 1);
+        let maeve = MaeveEstimator::new(b).with_seed(seed).run(&mut s);
+        let maeve_err = canberra(&maeve.descriptor(), &maeve_exact);
+
+        let mut s = VecStream::shuffled(g.edges.clone(), seed ^ 2);
+        let santa = SantaEstimator::new(b).with_seed(seed).run(&mut s);
+        let psi = psi_from_traces(&santa.traces, santa.nv as f64);
+        let santa_err = euclidean(&psi[2], &psi_exact[2]); // HC variant
+
+        println!(
+            "b = {frac:>4}·|E|  GABE canberra {gabe_err:8.4}   MAEVE canberra \
+             {maeve_err:8.4}   SANTA-HC l2 {santa_err:8.5}"
+        );
+    }
+
+    // Optional: finalize through the PJRT artifacts (L2/L1 path).
+    match stream_descriptors::runtime::Runtime::load_default() {
+        Ok(rt) => {
+            let mut s = VecStream::shuffled(g.edges.clone(), seed ^ 3);
+            let est = GabeEstimator::new(g.m() / 4).with_seed(seed).run(&mut s);
+            let phi = rt.gabe_finalize(&[est.counts], &[est.nv as f64])?;
+            println!("\nL2-finalized GABE φ (PJRT, {}): {:?}", rt.platform(), &phi[0][..4]);
+        }
+        Err(e) => println!("\n(skipping PJRT finalization: {e}; run `make artifacts`)"),
+    }
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! §3.4 demo: the variance of the averaged estimate falls like 1/W as
+//! workers are added, at constant per-worker budget.
+//!
+//! ```bash
+//! cargo run --release --example worker_scaling
+//! ```
+
+use stream_descriptors::coordinator::{
+    run_pipeline, CoordinatorConfig, DescriptorKind, WorkerEstimate,
+};
+use stream_descriptors::count::idx;
+use stream_descriptors::exact;
+use stream_descriptors::gen;
+use stream_descriptors::graph::stream::VecStream;
+use stream_descriptors::util::rng::Pcg64;
+
+fn main() {
+    let g = gen::powerlaw_cluster_graph(4000, 4, 0.5, &mut Pcg64::seed_from_u64(3));
+    let truth = exact::gabe_exact(&g).counts[idx::TRIANGLE];
+    let b = g.m() / 4;
+    println!(
+        "graph |V|={} |E|={}, true triangles {truth:.0}, per-worker b=|E|/4",
+        g.n,
+        g.m()
+    );
+    println!("{:>3}  {:>12}  {:>12}  {:>10}  {:>8}", "W", "mean", "variance", "var ratio", "1/W");
+
+    let trials = 16u64;
+    let mut base = None;
+    for w in [1usize, 2, 4, 8, 16] {
+        let vals: Vec<f64> = (0..trials)
+            .map(|trial| {
+                let cfg = CoordinatorConfig {
+                    workers: w,
+                    budget: b,
+                    chunk_size: 4096,
+                    queue_depth: 8,
+                    seed: 0x5eed ^ trial << 8 ^ (w as u64) << 32,
+                };
+                let mut s = VecStream::shuffled(g.edges.clone(), trial);
+                let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg);
+                let WorkerEstimate::Gabe(e) = r.averaged else { unreachable!() };
+                e.counts[idx::TRIANGLE]
+            })
+            .collect();
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        let var =
+            vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+        let base_var = *base.get_or_insert(var);
+        println!(
+            "{w:>3}  {mean:>12.1}  {var:>12.1}  {:>10.3}  {:>8.3}",
+            var / base_var,
+            1.0 / w as f64
+        );
+    }
+}

@@ -1,0 +1,121 @@
+"""AOT pipeline: lower every L2 graph to HLO text + write the manifest.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProto with 64-bit instruction ids which the published xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  See
+/opt/xla-example/gen_hlo.py and README.md there.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .graphlets import NAMES, ORDERS, overlap_inverse, overlap_matrix
+from .kernels.psi import J_GRID
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (ids reassigned by parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_specs():
+    """name -> (fn, input ShapeDtypeStructs, output shapes for the manifest)."""
+    m = model
+    return {
+        "gabe_finalize": (
+            m.gabe_finalize,
+            (f32(m.GABE_B, 17), f32(m.GABE_B)),
+            [[m.GABE_B, 17]],
+        ),
+        "maeve_moments": (
+            m.maeve_model,
+            (f32(m.MAEVE_B, m.MAEVE_NV, 5), f32(m.MAEVE_B, m.MAEVE_NV)),
+            [[m.MAEVE_B, 20]],
+        ),
+        "santa_psi": (
+            m.santa_model,
+            (f32(m.SANTA_B, 5), f32(m.SANTA_B)),
+            [[m.SANTA_B, 6, 60], [m.SANTA_B, 3, 60], [m.SANTA_B, 2, 60]],
+        ),
+        "pairwise_dist": (
+            m.dist_model,
+            (f32(m.DIST_M, m.DIST_D), f32(m.DIST_N, m.DIST_D)),
+            [[m.DIST_M, m.DIST_N], [m.DIST_M, m.DIST_N]],
+        ),
+        "trace_powers": (
+            m.trace_model,
+            (f32(m.TRACE_N, m.TRACE_N), f32(1)),
+            [[5]],
+        ),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "format": "hlo-text",
+        "jax_version": jax.__version__,
+        "j_grid": [float(x) for x in J_GRID],
+        "graphlet_names": NAMES,
+        "graphlet_orders": [int(x) for x in ORDERS],
+        "overlap_matrix": [[int(x) for x in row] for row in overlap_matrix()],
+        "overlap_inverse": [[float(x) for x in row] for row in overlap_inverse()],
+        "shapes": {
+            "gabe_b": model.GABE_B,
+            "maeve_b": model.MAEVE_B,
+            "maeve_nv": model.MAEVE_NV,
+            "santa_b": model.SANTA_B,
+            "dist_m": model.DIST_M,
+            "dist_n": model.DIST_N,
+            "dist_d": model.DIST_D,
+            "trace_n": model.TRACE_N,
+        },
+        "artifacts": {},
+    }
+
+    for name, (fn, specs, out_shapes) in artifact_specs().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "inputs": [list(s.shape) for s in specs],
+            "outputs": out_shapes,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+            "bytes": len(text),
+        }
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {os.path.join(args.out_dir, 'manifest.json')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,119 @@
+"""The 17 graphs on at most four vertices and their overlap matrix.
+
+Paper §4.1.1 / Fig. 2: GABE estimates non-induced subgraph counts
+H = (|H_G^{F_1}|, ..., |H_G^{F_17}|) and converts them to induced counts via
+the overlap matrix O:  H = O @ H_induced, O(i, j) = number of subgraphs of
+F_j isomorphic to F_i (same order; 0 otherwise).  O is unit upper
+triangular under an edge-count-sorted ordering, hence invertible.
+
+The canonical ordering below is the contract shared with the rust side
+(``rust/src/count/overlap.rs``); the AOT manifest embeds both O and O^{-1}
+and the rust test-suite recomputes them independently and cross-checks.
+
+Index  name                order  edges
+  0    e2   (empty-2)        2      0
+  1    edge                  2      1
+  2    e3   (empty-3)        3      0
+  3    edge+1               3      1
+  4    wedge (path-3)        3      2
+  5    triangle              3      3
+  6    e4   (empty-4)        4      0
+  7    edge+2               4      1
+  8    two-edges (disjoint)  4      2
+  9    wedge+1              4      2
+ 10    triangle+1           4      3
+ 11    claw (K1,3)           4      3
+ 12    path-4                4      3
+ 13    cycle-4               4      4
+ 14    paw (tailed tri)      4      4
+ 15    diamond               4      5
+ 16    k4                    4      6
+"""
+
+from __future__ import annotations
+
+import itertools
+from fractions import Fraction
+
+import numpy as np
+
+#: name -> (order, edge list) in the canonical index order above.
+GRAPHLETS: list[tuple[str, int, list[tuple[int, int]]]] = [
+    ("e2", 2, []),
+    ("edge", 2, [(0, 1)]),
+    ("e3", 3, []),
+    ("edge+1", 3, [(0, 1)]),
+    ("wedge", 3, [(0, 1), (1, 2)]),
+    ("triangle", 3, [(0, 1), (1, 2), (0, 2)]),
+    ("e4", 4, []),
+    ("edge+2", 4, [(0, 1)]),
+    ("two-edges", 4, [(0, 1), (2, 3)]),
+    ("wedge+1", 4, [(0, 1), (1, 2)]),
+    ("triangle+1", 4, [(0, 1), (1, 2), (0, 2)]),
+    ("claw", 4, [(0, 1), (0, 2), (0, 3)]),
+    ("path-4", 4, [(0, 1), (1, 2), (2, 3)]),
+    ("cycle-4", 4, [(0, 1), (1, 2), (2, 3), (0, 3)]),
+    ("paw", 4, [(0, 1), (1, 2), (0, 2), (0, 3)]),
+    ("diamond", 4, [(0, 1), (1, 2), (0, 2), (0, 3), (1, 3)]),
+    ("k4", 4, [(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]),
+]
+
+NAMES = [g[0] for g in GRAPHLETS]
+ORDERS = np.array([g[1] for g in GRAPHLETS], dtype=np.int64)
+N_GRAPHLETS = len(GRAPHLETS)
+
+
+def _canon(order: int, edges: frozenset[tuple[int, int]]) -> frozenset:
+    """Canonical form of a graph on [0, order) under vertex permutation."""
+    best = None
+    for perm in itertools.permutations(range(order)):
+        relabeled = frozenset(
+            (min(perm[u], perm[v]), max(perm[u], perm[v])) for u, v in edges
+        )
+        key = tuple(sorted(relabeled))
+        if best is None or key < best[0]:
+            best = (key, relabeled)
+    return best[1]
+
+
+_CANON = {
+    i: _canon(order, frozenset((min(u, v), max(u, v)) for u, v in edges))
+    for i, (_, order, edges) in enumerate(GRAPHLETS)
+}
+
+
+def overlap_matrix() -> np.ndarray:
+    """O(i, j) = #subgraphs of F_j isomorphic to F_i (same order), else 0."""
+    o = np.zeros((N_GRAPHLETS, N_GRAPHLETS), dtype=np.int64)
+    for j, (_, order_j, edges_j) in enumerate(GRAPHLETS):
+        ej = [tuple(sorted(e)) for e in edges_j]
+        for subset_size in range(len(ej) + 1):
+            for subset in itertools.combinations(ej, subset_size):
+                c = _canon(order_j, frozenset(subset))
+                for i in range(N_GRAPHLETS):
+                    if ORDERS[i] == order_j and _CANON[i] == c:
+                        o[i, j] += 1
+    return o
+
+
+def overlap_inverse() -> np.ndarray:
+    """Exact rational inverse of the overlap matrix, as float64."""
+    o = overlap_matrix()
+    n = N_GRAPHLETS
+    # Gauss-Jordan over Fractions: O is unit-determinant-free but integer;
+    # the inverse is rational and must be exact for the count conversion.
+    a = [[Fraction(int(o[r, c])) for c in range(n)] for r in range(n)]
+    inv = [[Fraction(int(r == c)) for c in range(n)] for r in range(n)]
+    for col in range(n):
+        piv = next(r for r in range(col, n) if a[r][col] != 0)
+        a[col], a[piv] = a[piv], a[col]
+        inv[col], inv[piv] = inv[piv], inv[col]
+        p = a[col][col]
+        a[col] = [x / p for x in a[col]]
+        inv[col] = [x / p for x in inv[col]]
+        for r in range(n):
+            if r != col and a[r][col] != 0:
+                f = a[r][col]
+                a[r] = [x - f * y for x, y in zip(a[r], a[col])]
+                inv[r] = [x - f * y for x, y in zip(inv[r], inv[col])]
+    return np.array([[float(x) for x in row] for row in inv], dtype=np.float64)

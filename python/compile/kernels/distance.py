@@ -1,0 +1,77 @@
+"""L1 Pallas kernel: tiled pairwise Canberra + Euclidean distance.
+
+This is the analytics hot-spot of the reproduction: k-NN classification
+(paper §6.2) and approximation-error measurement (§6.1) both reduce to
+dense pairwise distance matrices over descriptor batches.  The kernel is
+tiled so each (BM, D) x (BN, D) block pair fits comfortably in VMEM and the
+(BM, BN) output tile is produced in one shot.
+
+TPU adaptation note (DESIGN.md §Hardware-Adaptation): the paper's system is
+CPU/MPI; on a TPU this kernel is VPU-bound elementwise work over
+(BM, BN, D) broadcasts.  Block sizes are chosen so the 3-D intermediate is
+BM*BN*D*4 bytes = 64*64*64*4 = 1 MiB < VMEM.  We run it with
+interpret=True on CPU (Mosaic custom-calls cannot execute on the CPU PJRT
+plugin) — correctness is what pytest checks; the VMEM budget is recorded in
+EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block sizes: output tile is (BM, BN); inputs are (BM, D) and (BN, D).
+BM = 64
+BN = 64
+
+
+def _dist_kernel(x_ref, y_ref, can_ref, euc_ref):
+    """One (BM, BN) output tile of the Canberra + Euclidean matrices."""
+    x = x_ref[...]  # (BM, D)
+    y = y_ref[...]  # (BN, D)
+    diff = x[:, None, :] - y[None, :, :]  # (BM, BN, D)
+    absdiff = jnp.abs(diff)
+    denom = jnp.abs(x)[:, None, :] + jnp.abs(y)[None, :, :]
+    # Canberra convention: 0/0 contributes 0 (also makes zero-padding of the
+    # feature dimension a no-op).
+    can = jnp.where(denom > 0.0, absdiff / jnp.where(denom > 0.0, denom, 1.0), 0.0)
+    can_ref[...] = jnp.sum(can, axis=-1)
+    euc_ref[...] = jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pairwise_distances(x: jax.Array, y: jax.Array, *, interpret: bool = True):
+    """Pairwise (canberra, euclidean) distance matrices via the Pallas kernel.
+
+    Args:
+      x: (M, D) float32 descriptor batch; M must be a multiple of BM.
+      y: (N, D) float32 descriptor batch; N must be a multiple of BN.
+
+    Returns:
+      (canberra, euclidean), each (M, N) float32.
+    """
+    m, d = x.shape
+    n, _ = y.shape
+    assert m % BM == 0 and n % BN == 0, (m, n)
+    grid = (m // BM, n // BN)
+    out_shape = (
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+    )
+    return pl.pallas_call(
+        _dist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BM, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((BN, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+            pl.BlockSpec((BM, BN), lambda i, j: (i, j)),
+        ],
+        out_shape=out_shape,
+        interpret=interpret,
+    )(x, y)

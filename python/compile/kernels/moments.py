@@ -1,0 +1,64 @@
+"""L1 Pallas kernel: masked statistical moments over per-vertex features.
+
+MAEVE (paper §4.2) aggregates five per-vertex features with four moments
+(mean, standard deviation, skewness, excess kurtosis).  The streaming rust
+side produces padded per-vertex feature arrays; this kernel reduces them to
+the 20-dimensional MAEVE descriptor in one pass per graph.
+
+Layout: the grid iterates over the batch; each step reduces one graph's
+(NV, 5) feature block under its (NV, 1) validity mask.  The block is
+NV*5*4 bytes (6144*5*4 = 120 KiB) — VMEM-trivial; the reduction is
+VPU-shaped.  interpret=True on CPU (see distance.py for why).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+N_FEATURES = 5
+N_MOMENTS = 4  # mean, std, skewness, excess kurtosis
+
+
+def _moments_kernel(feat_ref, mask_ref, out_ref):
+    feats = feat_ref[...][0]  # (NV, 5)
+    mask = mask_ref[...][0]  # (NV, 1)
+    cnt = jnp.maximum(jnp.sum(mask), 1.0)
+    m = mask  # broadcastable (NV, 1)
+    mean = jnp.sum(feats * m, axis=0) / cnt  # (5,)
+    cen = (feats - mean[None, :]) * m
+    m2 = jnp.sum(cen**2, axis=0) / cnt
+    m3 = jnp.sum(cen**3, axis=0) / cnt
+    m4 = jnp.sum(cen**4, axis=0) / cnt
+    std = jnp.sqrt(m2)
+    safe2 = jnp.where(m2 > 0.0, m2, 1.0)
+    skew = jnp.where(m2 > 0.0, m3 / safe2**1.5, 0.0)
+    kurt = jnp.where(m2 > 0.0, m4 / safe2**2 - 3.0, 0.0)
+    # (4, 5) -> flat (20,): moment-major [mean(5), std(5), skew(5), kurt(5)]
+    out_ref[...] = jnp.stack([mean, std, skew, kurt], axis=0).reshape(1, -1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def maeve_moments(feats: jax.Array, mask: jax.Array, *, interpret: bool = True):
+    """Reduce (B, NV, 5) masked vertex features to (B, 20) MAEVE descriptors.
+
+    Args:
+      feats: (B, NV, 5) float32; rows beyond the graph order are padding.
+      mask: (B, NV) float32 validity mask (1.0 = real vertex).
+    """
+    b, nv, nf = feats.shape
+    assert nf == N_FEATURES
+    return pl.pallas_call(
+        _moments_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((1, nv, nf), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, nv, 1), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, N_FEATURES * N_MOMENTS), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, N_FEATURES * N_MOMENTS), jnp.float32),
+        interpret=interpret,
+    )(feats, mask[..., None])

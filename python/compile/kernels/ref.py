@@ -1,0 +1,92 @@
+"""Pure-jnp correctness oracles for every Pallas kernel.
+
+pytest (and hypothesis sweeps) assert_allclose each kernel in
+``kernels/*.py`` against the functions here; the rust test-suite
+cross-checks its own exact path against the AOT artifacts, closing the loop
+rust <-> L2 <-> L1 <-> ref.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .psi import J_GRID
+
+
+def pairwise_distances_ref(x, y):
+    """(canberra, euclidean) distance matrices, dense jnp."""
+    diff = x[:, None, :] - y[None, :, :]
+    absdiff = jnp.abs(diff)
+    denom = jnp.abs(x)[:, None, :] + jnp.abs(y)[None, :, :]
+    can = jnp.where(denom > 0.0, absdiff / jnp.where(denom > 0.0, denom, 1.0), 0.0)
+    return jnp.sum(can, axis=-1), jnp.sqrt(jnp.sum(diff * diff, axis=-1))
+
+
+def maeve_moments_ref(feats, mask):
+    """(B, 20) moment-major [mean, std, skew, excess-kurtosis] x 5 features."""
+    m = mask[..., None]  # (B, NV, 1)
+    cnt = jnp.maximum(jnp.sum(mask, axis=1), 1.0)[:, None]  # (B, 1)
+    mean = jnp.sum(feats * m, axis=1) / cnt  # (B, 5)
+    cen = (feats - mean[:, None, :]) * m
+    m2 = jnp.sum(cen**2, axis=1) / cnt
+    m3 = jnp.sum(cen**3, axis=1) / cnt
+    m4 = jnp.sum(cen**4, axis=1) / cnt
+    std = jnp.sqrt(m2)
+    safe2 = jnp.where(m2 > 0.0, m2, 1.0)
+    skew = jnp.where(m2 > 0.0, m3 / safe2**1.5, 0.0)
+    kurt = jnp.where(m2 > 0.0, m4 / safe2**2 - 3.0, 0.0)
+    return jnp.concatenate([mean, std, skew, kurt], axis=1)
+
+
+def santa_psi_ref(traces, nv):
+    """Reference psi finalization; mirrors psi._psi_kernel shapes."""
+    j = jnp.asarray(J_GRID)[None, :]
+    t = [traces[:, k][:, None] for k in range(5)]
+    h3 = t[0] - j * t[1] + j**2 / 2.0 * t[2]
+    h4 = h3 - j**3 / 6.0 * t[3]
+    h5 = h4 + j**4 / 24.0 * t[4]
+    w3 = t[0] - j**2 / 2.0 * t[2]
+    w5 = w3 + j**4 / 24.0 * t[4]
+    nvc = nv[:, None]
+    heat_c = 1.0 + (nvc - 1.0) * jnp.exp(-j)
+    wave_c = 1.0 + (nvc - 1.0) * jnp.cos(j)
+    wave_c = jnp.where(jnp.abs(wave_c) > 1e-6, wave_c, 1e-6)
+    nv_safe = jnp.maximum(nvc, 1.0)
+    psi = jnp.stack(
+        [h5, h5 / nv_safe, h5 / heat_c, w5, w5 / nv_safe, w5 / wave_c], axis=1
+    )
+    heat = jnp.stack([h3, h4, h5], axis=1)
+    wave = jnp.stack([w3, w5], axis=1)
+    return psi, heat, wave
+
+
+def trace_powers_ref(lap, nv):
+    """tr(L^0..L^4) by plain dense matmul."""
+    l2 = lap @ lap
+    return jnp.stack(
+        [
+            jnp.reshape(nv, ()),
+            jnp.trace(lap),
+            jnp.trace(l2),
+            jnp.trace(l2 @ lap),
+            jnp.trace(l2 @ l2),
+        ]
+    )
+
+
+def psi_exact_from_eigs(eigs, nv):
+    """Exact NetLSD psi over J_GRID from a full eigenspectrum.
+
+    Used by tests to bound the Taylor-truncation error and by the rust
+    cross-check fixtures.  Returns (6, 60) for one graph.
+    """
+    j = np.asarray(J_GRID)[:, None]  # (60, 1)
+    lam = np.asarray(eigs)[None, :]  # (1, n)
+    heat = np.exp(-j * lam).sum(axis=1)  # (60,)
+    wave = np.cos(j * lam).sum(axis=1)
+    heat_c = 1.0 + (nv - 1.0) * np.exp(-j[:, 0])
+    wave_c = 1.0 + (nv - 1.0) * np.cos(j[:, 0])
+    return np.stack(
+        [heat, heat / nv, heat / heat_c, wave, wave / nv, wave / wave_c]
+    )

@@ -1,0 +1,75 @@
+"""L1 Pallas kernel: blocked Laplacian square for exact trace computation.
+
+The exact-path reference for SANTA (paper §4.3, Theorem 4) needs
+tr(L^k), k in {0..4}, of the dense normalized Laplacian.  With L symmetric,
+
+    tr(L^2) = sum_ij L_ij^2
+    tr(L^3) = sum_ij (L @ L)_ij * L_ij
+    tr(L^4) = sum_ij (L @ L)_ij^2
+
+so a single blocked matmul L @ L plus elementwise reductions suffices.  The
+matmul is the MXU-shaped hot-spot: (BT, BK) x (BK, BT) tiles with an
+accumulation grid dimension.  128x128 f32 tiles: 3 * 64 KiB live blocks,
+VMEM-trivial; on a real TPU the accumulate loop would be the innermost grid
+dim exactly as written.  interpret=True on CPU (see distance.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BT = 128  # output tile edge
+BK = 128  # contraction block
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def matmul_square(lap: jax.Array, *, interpret: bool = True) -> jax.Array:
+    """Blocked L @ L for a square (N, N) matrix, N a multiple of BT/BK."""
+    n = lap.shape[0]
+    assert lap.shape == (n, n) and n % BT == 0 and n % BK == 0, lap.shape
+    grid = (n // BT, n // BT, n // BK)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BT, BK), lambda i, j, k: (i, k)),
+            pl.BlockSpec((BK, BT), lambda i, j, k: (k, j)),
+        ],
+        out_specs=pl.BlockSpec((BT, BT), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, n), jnp.float32),
+        interpret=interpret,
+    )(lap, lap)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def trace_powers(lap: jax.Array, nv: jax.Array, *, interpret: bool = True):
+    """tr(L^0..L^4) of a zero-padded dense symmetric Laplacian.
+
+    Args:
+      lap: (N, N) float32, rows/cols beyond the graph order zero-padded.
+      nv: () or (1,) float32 — the true |V_G| (tr(L^0) of the unpadded L).
+
+    Returns:
+      (5,) float32: [|V|, tr(L), tr(L^2), tr(L^3), tr(L^4)].
+    """
+    l2 = matmul_square(lap, interpret=interpret)
+    t0 = jnp.reshape(nv, ())
+    t1 = jnp.trace(lap)
+    t2 = jnp.sum(lap * lap)
+    t3 = jnp.sum(l2 * lap)
+    t4 = jnp.sum(l2 * l2)
+    return jnp.stack([t0, t1, t2, t3, t4])

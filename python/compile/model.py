@@ -1,0 +1,80 @@
+"""L2: the jax compute graphs that become AOT artifacts.
+
+Each function here is a fixed-shape jax program calling the L1 Pallas
+kernels (interpret=True), lowered once by ``aot.py`` to HLO text and
+executed from the rust coordinator via PJRT.  Python never runs on the
+stream path: the rust side produces the raw estimates (counts, traces,
+per-vertex features) and these graphs finalize them into descriptors and
+distance matrices.
+
+Fixed batch shapes (padded by the rust side, see artifacts/manifest.json):
+
+  gabe_finalize   counts (B17, 17), nv (B17,)        -> phi (B17, 17)
+  maeve_moments   feats (BM, NV, 5), mask (BM, NV)    -> desc (BM, 20)
+  santa_psi       traces (BS, 5), nv (BS,)            -> psi (BS, 6, 60), ...
+  pairwise_dist   x (M, D), y (N, D)                  -> can (M, N), euc (M, N)
+  trace_powers    lap (NL, NL), nv (1,)               -> traces (5,)
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .graphlets import ORDERS, overlap_inverse
+from .kernels.distance import pairwise_distances
+from .kernels.moments import maeve_moments
+from .kernels.psi import santa_psi
+from .kernels.traces import trace_powers
+
+# ---- artifact shapes (the padding contract with rust) ----
+GABE_B = 64
+MAEVE_B = 16
+MAEVE_NV = 6144
+SANTA_B = 64
+DIST_M = 256
+DIST_N = 256
+DIST_D = 128  # max descriptor dim (FEATHER/SF = 128); smaller ones zero-pad
+TRACE_N = 512
+
+_OINV = jnp.asarray(overlap_inverse(), dtype=jnp.float32)
+_ORDERS = np.asarray(ORDERS)
+
+
+def _binom(n: jnp.ndarray, k: int) -> jnp.ndarray:
+    """C(n, k) for k in {2,3,4}, elementwise over a float array."""
+    out = jnp.ones_like(n)
+    for i in range(k):
+        out = out * (n - float(i))
+    from math import factorial
+
+    return jnp.maximum(out / float(factorial(k)), 1.0)
+
+
+def gabe_finalize(counts: jnp.ndarray, nv: jnp.ndarray):
+    """Estimated non-induced counts -> normalized induced-count descriptor.
+
+    phi_k entries are induced counts divided by C(|V|, k), concatenated for
+    k in {2, 3, 4} (paper §4.1); induced counts come from O^{-1} @ H.
+    """
+    induced = counts @ _OINV.T  # (B, 17)
+    norm = jnp.stack(
+        [_binom(nv, int(_ORDERS[i])) for i in range(17)], axis=1
+    )  # (B, 17)
+    return (induced / norm,)
+
+
+def maeve_model(feats: jnp.ndarray, mask: jnp.ndarray):
+    return (maeve_moments(feats, mask),)
+
+
+def santa_model(traces: jnp.ndarray, nv: jnp.ndarray):
+    return santa_psi(traces, nv)
+
+
+def dist_model(x: jnp.ndarray, y: jnp.ndarray):
+    return pairwise_distances(x, y)
+
+
+def trace_model(lap: jnp.ndarray, nv: jnp.ndarray):
+    return (trace_powers(lap, nv),)

@@ -1,0 +1,213 @@
+"""L1 Pallas kernels vs pure-jnp oracles — the core numerics signal.
+
+Hypothesis sweeps shapes and value regimes; fixed-seed cases pin the exact
+artifact shapes used by the AOT pipeline.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels import ref
+from compile.kernels.distance import BM, BN, pairwise_distances
+from compile.kernels.moments import maeve_moments
+from compile.kernels.psi import BB, J_GRID, santa_psi
+from compile.kernels.traces import matmul_square, trace_powers
+
+jax.config.update("jax_enable_x64", False)
+
+
+def rng(seed):
+    return np.random.default_rng(seed)
+
+
+# ---------------------------------------------------------------- distance
+@settings(max_examples=10, deadline=None)
+@given(
+    mb=st.integers(1, 3),
+    nb=st.integers(1, 3),
+    d=st.sampled_from([8, 17, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_distance_matches_ref(mb, nb, d, seed):
+    r = rng(seed)
+    x = r.normal(size=(mb * BM, d)).astype(np.float32)
+    y = r.normal(size=(nb * BN, d)).astype(np.float32)
+    can, euc = pairwise_distances(jnp.asarray(x), jnp.asarray(y))
+    can_r, euc_r = ref.pairwise_distances_ref(jnp.asarray(x), jnp.asarray(y))
+    assert_allclose(np.asarray(can), np.asarray(can_r), rtol=1e-5, atol=1e-5)
+    assert_allclose(np.asarray(euc), np.asarray(euc_r), rtol=1e-5, atol=1e-5)
+
+
+def test_distance_zero_padding_is_noop():
+    r = rng(0)
+    x = r.normal(size=(BM, 16)).astype(np.float32)
+    y = r.normal(size=(BN, 16)).astype(np.float32)
+    xp = np.zeros((BM, 64), np.float32)
+    yp = np.zeros((BN, 64), np.float32)
+    xp[:, :16], yp[:, :16] = x, y
+    can_a, euc_a = pairwise_distances(jnp.asarray(x), jnp.asarray(y))
+    can_b, euc_b = pairwise_distances(jnp.asarray(xp), jnp.asarray(yp))
+    assert_allclose(np.asarray(can_a), np.asarray(can_b), rtol=1e-5, atol=1e-6)
+    assert_allclose(np.asarray(euc_a), np.asarray(euc_b), rtol=1e-5, atol=1e-6)
+
+
+def test_distance_identity_diagonal_zero():
+    r = rng(1)
+    x = r.normal(size=(BM, 32)).astype(np.float32)
+    can, euc = pairwise_distances(jnp.asarray(x), jnp.asarray(x))
+    assert_allclose(np.diag(np.asarray(can)), np.zeros(BM), atol=1e-6)
+    assert_allclose(np.diag(np.asarray(euc)), np.zeros(BM), atol=1e-6)
+
+
+def test_canberra_known_value():
+    # canberra([1, -1, 0], [1, 1, 0]) = 0 + 2/2 + 0 = 1
+    x = np.zeros((BM, 3), np.float32)
+    y = np.zeros((BN, 3), np.float32)
+    x[0] = [1, -1, 0]
+    y[0] = [1, 1, 0]
+    can, euc = pairwise_distances(jnp.asarray(x), jnp.asarray(y))
+    assert_allclose(float(can[0, 0]), 1.0, rtol=1e-6)
+    assert_allclose(float(euc[0, 0]), 2.0, rtol=1e-6)
+
+
+# ---------------------------------------------------------------- moments
+@settings(max_examples=10, deadline=None)
+@given(
+    b=st.integers(1, 4),
+    nv=st.sampled_from([64, 257, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_moments_match_ref(b, nv, seed):
+    r = rng(seed)
+    feats = r.normal(size=(b, nv, 5)).astype(np.float32) * 10.0
+    mask = (r.random((b, nv)) < 0.8).astype(np.float32)
+    mask[:, 0] = 1.0  # at least one valid vertex
+    got = maeve_moments(jnp.asarray(feats), jnp.asarray(mask))
+    want = ref.maeve_moments_ref(jnp.asarray(feats), jnp.asarray(mask))
+    assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_moments_scipy_semantics():
+    """Moment-major layout; skew/kurt match the standard definitions."""
+    nv = 128
+    vals = rng(7).normal(size=nv).astype(np.float32)
+    feats = np.zeros((1, nv, 5), np.float32)
+    feats[0, :, 2] = vals
+    mask = np.ones((1, nv), np.float32)
+    out = np.asarray(maeve_moments(jnp.asarray(feats), jnp.asarray(mask)))[0]
+    mean, std = vals.mean(), vals.std()
+    m2 = ((vals - mean) ** 2).mean()
+    m3 = ((vals - mean) ** 3).mean()
+    m4 = ((vals - mean) ** 4).mean()
+    assert_allclose(out[2], mean, rtol=1e-4, atol=1e-4)  # mean block
+    assert_allclose(out[5 + 2], std, rtol=1e-4, atol=1e-4)  # std block
+    assert_allclose(out[10 + 2], m3 / m2**1.5, rtol=1e-3, atol=1e-3)
+    assert_allclose(out[15 + 2], m4 / m2**2 - 3.0, rtol=1e-3, atol=1e-3)
+
+
+def test_moments_constant_feature_zero_higher_moments():
+    feats = np.full((1, 64, 5), 3.0, np.float32)
+    mask = np.ones((1, 64), np.float32)
+    out = np.asarray(maeve_moments(jnp.asarray(feats), jnp.asarray(mask)))[0]
+    assert_allclose(out[:5], 3.0, rtol=1e-6)
+    assert_allclose(out[5:], 0.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------- psi
+@settings(max_examples=10, deadline=None)
+@given(b=st.integers(1, 4), seed=st.integers(0, 2**31 - 1))
+def test_psi_matches_ref(b, seed):
+    r = rng(seed)
+    n = b * BB
+    nv = r.integers(5, 2000, size=n).astype(np.float32)
+    # plausible trace magnitudes: tr(L^0)=|V|, tr(L)=|V|, others O(|V|)
+    traces = np.stack(
+        [nv, nv, nv * r.random(n) * 2, nv * r.normal(size=n), nv * r.random(n) * 3],
+        axis=1,
+    ).astype(np.float32)
+    got = santa_psi(jnp.asarray(traces), jnp.asarray(nv))
+    want = ref.santa_psi_ref(jnp.asarray(traces), jnp.asarray(nv))
+    for g, w in zip(got, want):
+        assert_allclose(np.asarray(g), np.asarray(w), rtol=1e-4, atol=1e-4)
+
+
+def test_psi_taylor_converges_to_exact_for_small_j():
+    """5-term Taylor vs exact spectrum psi: tight at j<=0.1 (paper Fig. 4)."""
+    r = rng(3)
+    n = 40
+    a = (r.random((n, n)) < 0.2).astype(np.float64)
+    a = np.triu(a, 1)
+    a = a + a.T
+    d = a.sum(1)
+    d[d == 0] = 1.0
+    dm = np.diag(1.0 / np.sqrt(d))
+    lap = np.eye(n) - dm @ a @ dm
+    eigs = np.linalg.eigvalsh(lap)
+    traces = np.array(
+        [[n, np.trace(lap), *(np.trace(np.linalg.matrix_power(lap, k)) for k in (2, 3, 4))]],
+        dtype=np.float32,
+    )
+    traces = np.repeat(traces, BB, axis=0)
+    nv = np.full(BB, n, np.float32)
+    psi, _, _ = santa_psi(jnp.asarray(traces), jnp.asarray(nv))
+    exact = ref.psi_exact_from_eigs(eigs, float(n))  # (6, 60)
+    small = J_GRID <= 0.1
+    rel = np.abs(np.asarray(psi)[0, 0, small] - exact[0, small]) / np.abs(
+        exact[0, small]
+    )
+    assert rel.max() < 1e-3
+
+
+# ---------------------------------------------------------------- traces
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_matmul_square_matches_ref(seed):
+    r = rng(seed)
+    lap = r.normal(size=(256, 256)).astype(np.float32)
+    lap = (lap + lap.T) / 2
+    got = matmul_square(jnp.asarray(lap))
+    assert_allclose(np.asarray(got), lap @ lap, rtol=1e-3, atol=1e-3)
+
+
+def test_trace_powers_matches_dense():
+    r = rng(11)
+    n_real = 100
+    a = (r.random((n_real, n_real)) < 0.1).astype(np.float32)
+    a = np.triu(a, 1)
+    a = a + a.T
+    d = a.sum(1)
+    d[d == 0] = 1.0
+    dm = np.diag(1.0 / np.sqrt(d)).astype(np.float32)
+    lap_small = (np.eye(n_real, dtype=np.float32) - dm @ a @ dm).astype(np.float32)
+    lap = np.zeros((512, 512), np.float32)
+    lap[:n_real, :n_real] = lap_small
+    got = np.asarray(trace_powers(jnp.asarray(lap), jnp.asarray([float(n_real)])))
+    want = np.asarray(
+        ref.trace_powers_ref(jnp.asarray(lap_small), jnp.asarray(float(n_real)))
+    )
+    assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_trace_powers_zero_padding_invariant():
+    """Padding rows with zeros must not change tr(L^k) for k >= 1."""
+    r = rng(13)
+    m = 64
+    lap_small = r.normal(size=(m, m)).astype(np.float32)
+    lap_small = (lap_small + lap_small.T) / 2
+    for pad in (128, 512):
+        lap = np.zeros((pad, pad), np.float32)
+        lap[:m, :m] = lap_small
+        if pad % 128 == 0:
+            got = np.asarray(
+                trace_powers(jnp.asarray(lap), jnp.asarray([float(m)]))
+            )
+            want = np.asarray(
+                ref.trace_powers_ref(jnp.asarray(lap_small), jnp.asarray(float(m)))
+            )
+            assert_allclose(got, want, rtol=1e-3, atol=1e-2)

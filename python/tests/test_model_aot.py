@@ -1,0 +1,100 @@
+"""L2 model graphs + AOT lowering: shapes, finalization semantics, manifest."""
+
+from __future__ import annotations
+
+import itertools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from numpy.testing import assert_allclose
+
+from compile import model
+from compile.aot import artifact_specs, to_hlo_text
+from compile.graphlets import GRAPHLETS, NAMES, ORDERS, overlap_matrix, overlap_inverse
+
+
+def test_every_artifact_lowers_to_parsable_hlo():
+    for name, (fn, specs, out_shapes) in artifact_specs().items():
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        assert text.startswith("HloModule"), name
+        assert "ENTRY" in text, name
+
+
+def test_artifact_outputs_match_manifest_shapes():
+    for name, (fn, specs, out_shapes) in artifact_specs().items():
+        outs = jax.eval_shape(fn, *specs)
+        got = [list(o.shape) for o in outs]
+        assert got == out_shapes, (name, got, out_shapes)
+
+
+def test_gabe_finalize_recovers_known_induced_counts():
+    """Feed exact non-induced counts of a triangle graph; induced counts and
+    normalization must match hand computation."""
+    # Triangle K3: |V|=3, H = [C(3,2)=3 pairs, 3 edges, C(3,3)=1, |E|(|V|-2)=3,
+    # wedges=3, triangles=1, zeros for order-4].
+    counts = np.zeros((model.GABE_B, 17), np.float32)
+    counts[0, :6] = [3, 3, 1, 3, 3, 1]
+    nv = np.zeros(model.GABE_B, np.float32)
+    nv[0] = 3
+    (phi,) = model.gabe_finalize(jnp.asarray(counts), jnp.asarray(nv))
+    phi = np.asarray(phi)[0]
+    # Induced: e2 = 3 - 3 = 0; edge = 3; e3 = 1 - 3 + 2*3 - ... use O^-1.
+    o = overlap_matrix().astype(np.float64)
+    induced = np.linalg.solve(o, counts[0].astype(np.float64))
+    want = induced.copy()
+    want[:2] /= 3.0  # C(3,2)
+    want[2:6] /= 1.0  # C(3,3)
+    want[6:] /= 1.0  # C(3,4) = 0 -> clamped to 1 in the model
+    assert_allclose(phi, want.astype(np.float32), rtol=1e-5, atol=1e-5)
+    # Sanity: the only induced order-3 subgraph of K3 is the triangle itself.
+    assert_allclose(induced[2:6], [0, 0, 0, 1], atol=1e-9)
+
+
+def test_overlap_matrix_unit_upper_triangular_per_order():
+    o = overlap_matrix()
+    assert np.all(np.diag(o) == 1)
+    # Entries below the diagonal are zero under the canonical ordering.
+    assert np.all(np.tril(o, -1) == 0)
+    # Same-order blocks only.
+    for i, j in itertools.product(range(17), range(17)):
+        if ORDERS[i] != ORDERS[j]:
+            assert o[i, j] == 0, (NAMES[i], NAMES[j])
+
+
+def test_overlap_known_columns():
+    o = overlap_matrix()
+    k4 = NAMES.index("k4")
+    assert o[NAMES.index("wedge+1"), k4] == 12
+    assert o[NAMES.index("path-4"), k4] == 12
+    assert o[NAMES.index("cycle-4"), k4] == 3
+    assert o[NAMES.index("diamond"), k4] == 6
+    assert o[NAMES.index("claw"), k4] == 4
+    assert o[NAMES.index("triangle+1"), k4] == 4
+    tri = NAMES.index("triangle")
+    assert o[NAMES.index("wedge"), tri] == 3
+    assert o[NAMES.index("edge+1"), tri] == 3
+
+
+def test_overlap_inverse_is_exact():
+    o = overlap_matrix().astype(np.float64)
+    oi = overlap_inverse()
+    assert_allclose(o @ oi, np.eye(17), atol=1e-9)
+
+
+def test_graphlet_edge_lists_are_valid():
+    for name, order, edges in GRAPHLETS:
+        for u, v in edges:
+            assert 0 <= u < order and 0 <= v < order and u != v, name
+        # no duplicate edges
+        norm = {(min(u, v), max(u, v)) for u, v in edges}
+        assert len(norm) == len(edges), name
+
+
+def test_maeve_model_handles_full_padding_batch():
+    feats = np.zeros((model.MAEVE_B, model.MAEVE_NV, 5), np.float32)
+    mask = np.zeros((model.MAEVE_B, model.MAEVE_NV), np.float32)
+    (out,) = model.maeve_model(jnp.asarray(feats), jnp.asarray(mask))
+    assert np.all(np.isfinite(np.asarray(out)))

@@ -1,0 +1,82 @@
+"""Property-style invariants of the L1 kernels beyond point comparisons."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+from numpy.testing import assert_allclose
+
+from compile.kernels.distance import BM, BN, pairwise_distances
+from compile.kernels.moments import maeve_moments
+from compile.kernels.psi import BB, J_GRID, santa_psi
+from compile.kernels.traces import matmul_square
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), d=st.sampled_from([4, 33, 128]))
+def test_distance_symmetry_and_triangle_inequality(seed, d):
+    r = np.random.default_rng(seed)
+    x = r.normal(size=(BM, d)).astype(np.float32)
+    can, euc = pairwise_distances(jnp.asarray(x), jnp.asarray(x))
+    can, euc = np.asarray(can), np.asarray(euc)
+    assert_allclose(can, can.T, atol=1e-5)
+    assert_allclose(euc, euc.T, atol=1e-4)
+    # euclidean triangle inequality on a probe triple
+    i, j, k = 0, BM // 2, BM - 1
+    assert euc[i, k] <= euc[i, j] + euc[j, k] + 1e-3
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_distance_scale_invariance_of_canberra(seed):
+    """Canberra is invariant to positive rescaling of both vectors."""
+    r = np.random.default_rng(seed)
+    x = np.abs(r.normal(size=(BM, 16))).astype(np.float32) + 0.1
+    y = np.abs(r.normal(size=(BN, 16))).astype(np.float32) + 0.1
+    can1, _ = pairwise_distances(jnp.asarray(x), jnp.asarray(y))
+    can2, _ = pairwise_distances(jnp.asarray(3.0 * x), jnp.asarray(3.0 * y))
+    assert_allclose(np.asarray(can1), np.asarray(can2), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_moments_permutation_invariant(seed):
+    """Moments must not depend on vertex order."""
+    r = np.random.default_rng(seed)
+    nv = 256
+    feats = r.normal(size=(1, nv, 5)).astype(np.float32)
+    mask = np.ones((1, nv), np.float32)
+    perm = r.permutation(nv)
+    a = maeve_moments(jnp.asarray(feats), jnp.asarray(mask))
+    b = maeve_moments(jnp.asarray(feats[:, perm]), jnp.asarray(mask))
+    assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-4, atol=1e-4)
+
+
+def test_psi_heat_decreases_in_j_for_positive_spectrum():
+    """For traces of a PSD Laplacian, the heat sum decreases with j."""
+    nv = 50.0
+    # traces of eigenvalues all equal 1: tr(L^k) = nv
+    traces = np.full((BB, 5), nv, np.float32)
+    psi, _, _ = santa_psi(jnp.asarray(traces), jnp.asarray(np.full(BB, nv, np.float32)))
+    heat = np.asarray(psi)[0, 0]  # HN variant
+    assert np.all(np.diff(heat) < 0), "heat trace must decay in j"
+    # j→0 limit is nv
+    assert abs(heat[0] - nv) / nv < 5e-3
+
+
+def test_matmul_square_idempotent_on_projection():
+    """P @ P == P for a projection matrix survives the blocked kernel."""
+    n = 256
+    p = np.zeros((n, n), np.float32)
+    p[:8, :8] = np.eye(8)
+    got = np.asarray(matmul_square(jnp.asarray(p)))
+    assert_allclose(got, p, atol=1e-6)
+
+
+def test_j_grid_matches_manifest_contract():
+    assert len(J_GRID) == 60
+    assert abs(J_GRID[0] - 1e-3) < 1e-9
+    assert abs(J_GRID[-1] - 1.0) < 1e-6
+    ratios = J_GRID[1:] / J_GRID[:-1]
+    assert np.allclose(ratios, ratios[0], rtol=1e-4)

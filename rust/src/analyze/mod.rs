@@ -1,0 +1,66 @@
+//! Analysis utilities: distance/error metrics (§5.1) and t-SNE (§5.4).
+
+pub mod tsne;
+
+/// Canberra distance Σ |x−y| / (|x|+|y|), 0/0 → 0 (GABE/MAEVE error metric).
+pub fn canberra(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| {
+            let d = (a.abs() + b.abs()).max(f64::MIN_POSITIVE);
+            if a == b {
+                0.0
+            } else {
+                (a - b).abs() / d
+            }
+        })
+        .sum()
+}
+
+/// Euclidean (ℓ₂) distance (SANTA/NetLSD error metric).
+pub fn euclidean(x: &[f64], y: &[f64]) -> f64 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt()
+}
+
+/// Mean relative error |x − x̂| / |x| over positions where x ≠ 0 (Fig. 4).
+pub fn mean_relative_error(truth: &[f64], approx: &[f64]) -> f64 {
+    let mut total = 0.0;
+    let mut n = 0usize;
+    for (t, a) in truth.iter().zip(approx) {
+        if t.abs() > 0.0 {
+            total += (t - a).abs() / t.abs();
+            n += 1;
+        }
+    }
+    if n == 0 {
+        0.0
+    } else {
+        total / n as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn canberra_basics() {
+        assert_eq!(canberra(&[0.0, 0.0], &[0.0, 0.0]), 0.0);
+        assert!((canberra(&[1.0], &[-1.0]) - 1.0).abs() < 1e-12);
+        assert!((canberra(&[1.0, 0.0], &[3.0, 0.0]) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn euclidean_basics() {
+        assert!((euclidean(&[0.0, 3.0], &[4.0, 0.0]) - 5.0).abs() < 1e-12);
+        assert_eq!(euclidean(&[1.0], &[1.0]), 0.0);
+    }
+
+    #[test]
+    fn mre_ignores_zero_truth() {
+        assert!((mean_relative_error(&[2.0, 0.0], &[1.0, 5.0]) - 0.5).abs() < 1e-12);
+        assert_eq!(mean_relative_error(&[0.0], &[1.0]), 0.0);
+    }
+}

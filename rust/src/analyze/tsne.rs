@@ -1,0 +1,213 @@
+//! Exact t-SNE (van der Maaten & Hinton) for the Fig. 3 visualizations.
+//!
+//! `O(n²)` per iteration — ample for the ≤ few-thousand-point descriptor
+//! sets the paper plots.  Deterministic given the seed; output is a CSV
+//! the harness writes next to the experiment logs.
+
+use crate::util::rng::Pcg64;
+
+/// t-SNE configuration.
+#[derive(Debug, Clone)]
+pub struct TsneConfig {
+    pub perplexity: f64,
+    pub iterations: usize,
+    pub learning_rate: f64,
+    pub seed: u64,
+}
+
+impl Default for TsneConfig {
+    fn default() -> Self {
+        TsneConfig { perplexity: 30.0, iterations: 400, learning_rate: 100.0, seed: 0x75e }
+    }
+}
+
+/// Embed `points` (row-major, `n × dim`) into 2-D.
+pub fn tsne(points: &[Vec<f64>], cfg: &TsneConfig) -> Vec<[f64; 2]> {
+    let n = points.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    if n == 1 {
+        return vec![[0.0, 0.0]];
+    }
+    let perplexity = cfg.perplexity.min((n as f64 - 1.0) / 3.0).max(2.0);
+
+    // squared euclidean distances
+    let mut d2 = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in i + 1..n {
+            let d: f64 = points[i]
+                .iter()
+                .zip(&points[j])
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum();
+            d2[i * n + j] = d;
+            d2[j * n + i] = d;
+        }
+    }
+
+    // binary-search per-row precision for target perplexity
+    let mut p = vec![0.0f64; n * n];
+    for i in 0..n {
+        let (mut lo, mut hi) = (1e-20f64, 1e20f64);
+        let mut beta = 1.0f64;
+        let target = perplexity.ln();
+        for _ in 0..64 {
+            let mut sum = 0.0;
+            let mut sum_dp = 0.0;
+            for j in 0..n {
+                if j == i {
+                    continue;
+                }
+                let e = (-beta * d2[i * n + j]).exp();
+                sum += e;
+                sum_dp += beta * d2[i * n + j] * e;
+            }
+            let h = if sum > 0.0 { sum.ln() + sum_dp / sum } else { 0.0 };
+            if (h - target).abs() < 1e-5 {
+                break;
+            }
+            if h > target {
+                lo = beta;
+                beta = if hi >= 1e19 { beta * 2.0 } else { (beta + hi) / 2.0 };
+            } else {
+                hi = beta;
+                beta = (beta + lo) / 2.0;
+            }
+        }
+        let mut sum = 0.0;
+        for j in 0..n {
+            if j != i {
+                let e = (-beta * d2[i * n + j]).exp();
+                p[i * n + j] = e;
+                sum += e;
+            }
+        }
+        if sum > 0.0 {
+            for j in 0..n {
+                p[i * n + j] /= sum;
+            }
+        }
+    }
+    // symmetrize
+    let mut pij = vec![0.0f64; n * n];
+    for i in 0..n {
+        for j in 0..n {
+            pij[i * n + j] = ((p[i * n + j] + p[j * n + i]) / (2.0 * n as f64)).max(1e-12);
+        }
+    }
+
+    // gradient descent with momentum + early exaggeration
+    let mut rng = Pcg64::seed_from_u64(cfg.seed);
+    let mut y: Vec<[f64; 2]> = (0..n)
+        .map(|_| [rng.gen_range_f64(-1e-4, 1e-4), rng.gen_range_f64(-1e-4, 1e-4)])
+        .collect();
+    let mut vel = vec![[0.0f64; 2]; n];
+    let mut grad = vec![[0.0f64; 2]; n];
+    let mut q = vec![0.0f64; n * n];
+
+    for iter in 0..cfg.iterations {
+        let exagg = if iter < 100 { 4.0 } else { 1.0 };
+        let momentum = if iter < 100 { 0.5 } else { 0.8 };
+        // student-t affinities
+        let mut qsum = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                let dx = y[i][0] - y[j][0];
+                let dy = y[i][1] - y[j][1];
+                let v = 1.0 / (1.0 + dx * dx + dy * dy);
+                q[i * n + j] = v;
+                q[j * n + i] = v;
+                qsum += 2.0 * v;
+            }
+        }
+        qsum = qsum.max(1e-12);
+        for g in grad.iter_mut() {
+            *g = [0.0, 0.0];
+        }
+        for i in 0..n {
+            for j in 0..n {
+                if i == j {
+                    continue;
+                }
+                let num = q[i * n + j];
+                let mult = (exagg * pij[i * n + j] - num / qsum) * num;
+                grad[i][0] += 4.0 * mult * (y[i][0] - y[j][0]);
+                grad[i][1] += 4.0 * mult * (y[i][1] - y[j][1]);
+            }
+        }
+        for i in 0..n {
+            for d in 0..2 {
+                vel[i][d] = momentum * vel[i][d] - cfg.learning_rate * grad[i][d];
+                y[i][d] += vel[i][d];
+            }
+        }
+        // re-center
+        let (mx, my) = y.iter().fold((0.0, 0.0), |(a, b), p| (a + p[0], b + p[1]));
+        for p in y.iter_mut() {
+            p[0] -= mx / n as f64;
+            p[1] -= my / n as f64;
+        }
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two well-separated Gaussian blobs must stay separated in 2-D.
+    #[test]
+    fn separates_two_blobs() {
+        let mut rng = Pcg64::seed_from_u64(1);
+        let mut pts = Vec::new();
+        let mut labels = Vec::new();
+        for c in 0..2 {
+            for _ in 0..40 {
+                let base = c as f64 * 50.0;
+                pts.push(vec![
+                    base + rng.gen_range_f64(-1.0, 1.0),
+                    base + rng.gen_range_f64(-1.0, 1.0),
+                    rng.gen_range_f64(-1.0, 1.0),
+                ]);
+                labels.push(c);
+            }
+        }
+        let cfg = TsneConfig { iterations: 250, ..Default::default() };
+        let y = tsne(&pts, &cfg);
+        // centroid separation vs intra-class spread
+        let mut cents = [[0.0f64; 2]; 2];
+        for (p, &l) in y.iter().zip(&labels) {
+            cents[l][0] += p[0] / 40.0;
+            cents[l][1] += p[1] / 40.0;
+        }
+        let sep = ((cents[0][0] - cents[1][0]).powi(2)
+            + (cents[0][1] - cents[1][1]).powi(2))
+        .sqrt();
+        let mut spread = 0.0;
+        for (p, &l) in y.iter().zip(&labels) {
+            spread += ((p[0] - cents[l][0]).powi(2) + (p[1] - cents[l][1]).powi(2)).sqrt()
+                / y.len() as f64;
+        }
+        assert!(sep > 2.0 * spread, "sep {sep} spread {spread}");
+    }
+
+    #[test]
+    fn handles_degenerate_inputs() {
+        assert!(tsne(&[], &TsneConfig::default()).is_empty());
+        assert_eq!(tsne(&[vec![1.0, 2.0]], &TsneConfig::default()), vec![[0.0, 0.0]]);
+        let same = vec![vec![1.0, 1.0]; 5];
+        let cfg = TsneConfig { iterations: 20, ..Default::default() };
+        let y = tsne(&same, &cfg);
+        assert_eq!(y.len(), 5);
+        assert!(y.iter().all(|p| p[0].is_finite() && p[1].is_finite()));
+    }
+
+    #[test]
+    fn deterministic() {
+        let pts: Vec<Vec<f64>> =
+            (0..20).map(|i| vec![i as f64, (i * i % 7) as f64]).collect();
+        let cfg = TsneConfig { iterations: 50, ..Default::default() };
+        assert_eq!(tsne(&pts, &cfg), tsne(&pts, &cfg));
+    }
+}

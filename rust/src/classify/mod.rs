@@ -1,0 +1,191 @@
+//! k-NN graph classification with repeated k-fold cross-validation (§6.2).
+//!
+//! The paper uses a nearest-neighbor classifier, 10-fold CV repeated over
+//! 10 random splits, reporting mean fold accuracy.  Distances: Canberra
+//! for GABE/MAEVE, ℓ₂ for spectral descriptors (§5.1).  When the PJRT
+//! runtime is available the distance matrix comes from the L2
+//! `pairwise_dist` artifact; [`DistanceMatrix`] is the backend-agnostic
+//! consumer.
+
+use crate::util::rng::Pcg64;
+
+use crate::analyze::{canberra, euclidean};
+
+/// Distance used to compare descriptor vectors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Metric {
+    Canberra,
+    Euclidean,
+}
+
+/// Dense symmetric distance matrix.
+#[derive(Debug, Clone)]
+pub struct DistanceMatrix {
+    pub n: usize,
+    pub d: Vec<f64>,
+}
+
+impl DistanceMatrix {
+    /// Compute on the CPU (rust fallback / test oracle for the L2 kernel).
+    pub fn compute(descriptors: &[Vec<f64>], metric: Metric) -> Self {
+        let n = descriptors.len();
+        let mut d = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in i + 1..n {
+                let v = match metric {
+                    Metric::Canberra => canberra(&descriptors[i], &descriptors[j]),
+                    Metric::Euclidean => euclidean(&descriptors[i], &descriptors[j]),
+                };
+                d[i * n + j] = v;
+                d[j * n + i] = v;
+            }
+        }
+        DistanceMatrix { n, d }
+    }
+
+    /// Wrap an externally computed (e.g. PJRT) matrix.
+    pub fn from_raw(n: usize, d: Vec<f64>) -> Self {
+        assert_eq!(d.len(), n * n);
+        DistanceMatrix { n, d }
+    }
+
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f64 {
+        self.d[i * self.n + j]
+    }
+}
+
+/// 1-NN prediction for `test` items against `train` indices.
+fn knn_predict(dm: &DistanceMatrix, labels: &[usize], train: &[usize], item: usize) -> usize {
+    let mut best = f64::INFINITY;
+    let mut lab = 0;
+    for &t in train {
+        let d = dm.get(item, t);
+        if d < best {
+            best = d;
+            lab = labels[t];
+        }
+    }
+    lab
+}
+
+/// Result of a cross-validation run.
+#[derive(Debug, Clone)]
+pub struct CvResult {
+    /// Mean fold accuracy in percent.
+    pub accuracy: f64,
+    /// Std dev of fold accuracies.
+    pub std: f64,
+    pub folds: usize,
+    pub repeats: usize,
+}
+
+/// `repeats` × `folds`-fold CV of a 1-NN classifier over a precomputed
+/// distance matrix (paper §6.2: 10 × 10).
+pub fn cross_validate(
+    dm: &DistanceMatrix,
+    labels: &[usize],
+    folds: usize,
+    repeats: usize,
+    seed: u64,
+) -> CvResult {
+    assert_eq!(dm.n, labels.len());
+    let n = dm.n;
+    let folds = folds.min(n).max(2);
+    let mut accs: Vec<f64> = Vec::with_capacity(folds * repeats);
+    for rep in 0..repeats {
+        let mut order: Vec<usize> = (0..n).collect();
+        Pcg64::seed_from_u64(seed ^ (rep as u64) << 17).shuffle(&mut order);
+        for f in 0..folds {
+            let test: Vec<usize> =
+                order.iter().copied().skip(f).step_by(folds).collect();
+            let train: Vec<usize> = order
+                .iter()
+                .copied()
+                .enumerate()
+                .filter(|(i, _)| i % folds != f)
+                .map(|(_, v)| v)
+                .collect();
+            if test.is_empty() || train.is_empty() {
+                continue;
+            }
+            let correct = test
+                .iter()
+                .filter(|&&i| knn_predict(dm, labels, &train, i) == labels[i])
+                .count();
+            accs.push(correct as f64 / test.len() as f64 * 100.0);
+        }
+    }
+    let mean = accs.iter().sum::<f64>() / accs.len() as f64;
+    let var = accs.iter().map(|a| (a - mean) * (a - mean)).sum::<f64>()
+        / accs.len() as f64;
+    CvResult { accuracy: mean, std: var.sqrt(), folds, repeats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn blobs(n_per: usize, sep: f64, seed: u64) -> (Vec<Vec<f64>>, Vec<usize>) {
+        let mut rng = Pcg64::seed_from_u64(seed);
+        let mut x = Vec::new();
+        let mut y = Vec::new();
+        for c in 0..2 {
+            for _ in 0..n_per {
+                x.push(vec![
+                    c as f64 * sep + rng.gen_range_f64(-1.0, 1.0),
+                    rng.gen_range_f64(-1.0, 1.0),
+                ]);
+                y.push(c);
+            }
+        }
+        (x, y)
+    }
+
+    #[test]
+    fn distance_matrix_symmetric_zero_diag() {
+        let (x, _) = blobs(10, 3.0, 1);
+        let dm = DistanceMatrix::compute(&x, Metric::Euclidean);
+        for i in 0..dm.n {
+            assert_eq!(dm.get(i, i), 0.0);
+            for j in 0..dm.n {
+                assert_eq!(dm.get(i, j), dm.get(j, i));
+            }
+        }
+    }
+
+    #[test]
+    fn separable_blobs_classify_perfectly() {
+        let (x, y) = blobs(30, 20.0, 2);
+        let dm = DistanceMatrix::compute(&x, Metric::Euclidean);
+        let r = cross_validate(&dm, &y, 10, 3, 7);
+        assert!(r.accuracy > 99.0, "accuracy {}", r.accuracy);
+    }
+
+    #[test]
+    fn random_labels_near_chance() {
+        let mut rng = Pcg64::seed_from_u64(3);
+        let x: Vec<Vec<f64>> =
+            (0..200).map(|_| vec![rng.gen_range_f64(-1.0, 1.0); 4]).collect();
+        let y: Vec<usize> = (0..200).map(|_| rng.gen_range_usize(0, 2)).collect();
+        let dm = DistanceMatrix::compute(&x, Metric::Euclidean);
+        let r = cross_validate(&dm, &y, 10, 3, 8);
+        assert!(r.accuracy > 30.0 && r.accuracy < 70.0, "accuracy {}", r.accuracy);
+    }
+
+    #[test]
+    fn canberra_metric_used() {
+        let x = vec![vec![1.0, 0.0], vec![3.0, 0.0]];
+        let dm = DistanceMatrix::compute(&x, Metric::Canberra);
+        assert!((dm.get(0, 1) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cv_deterministic() {
+        let (x, y) = blobs(20, 5.0, 4);
+        let dm = DistanceMatrix::compute(&x, Metric::Euclidean);
+        let a = cross_validate(&dm, &y, 5, 2, 11);
+        let b = cross_validate(&dm, &y, 5, 2, 11);
+        assert_eq!(a.accuracy, b.accuracy);
+    }
+}

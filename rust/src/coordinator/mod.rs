@@ -1,0 +1,371 @@
+//! Master/worker streaming coordinator (paper §3.4, Tri-Fly [41]).
+//!
+//! The master consumes the edge stream once (twice for SANTA), fans each
+//! chunk out to `W` workers over *bounded* queues (blocking send =
+//! backpressure, constraint C2 never violated by buffering), and averages
+//! the workers' independent estimates — Shin et al. show the averaged
+//! estimator's variance drops by `1/W`.  Workers differ only in their
+//! reservoir RNG seed, exactly like Tri-Fly's independently-sampling
+//! machines.
+//!
+//! Workers are OS threads (CPU-bound inner loop); the async binary drives
+//! the pipeline through `tokio::task::spawn_blocking`.
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use crate::descriptors::gabe::{GabeEstimate, GabeState};
+use crate::descriptors::maeve::{MaeveEstimate, MaeveState};
+use crate::descriptors::santa::{SantaConfig, SantaEstimate, SantaPass2};
+use crate::graph::stream::EdgeStream;
+use crate::graph::Edge;
+
+/// Which estimator the workers run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DescriptorKind {
+    Gabe,
+    Maeve,
+    Santa { exact_wedges: bool },
+}
+
+/// Pipeline configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorConfig {
+    /// Number of parallel workers (the paper uses 24).
+    pub workers: usize,
+    /// Reservoir budget *per worker* (the paper's b).
+    pub budget: usize,
+    /// Edges per fan-out message.
+    pub chunk_size: usize,
+    /// Bounded queue depth per worker — the backpressure knob.
+    pub queue_depth: usize,
+    pub seed: u64,
+}
+
+impl Default for CoordinatorConfig {
+    fn default() -> Self {
+        CoordinatorConfig {
+            workers: 4,
+            budget: 100_000,
+            chunk_size: 4096,
+            queue_depth: 8,
+            seed: 0xc00d,
+        }
+    }
+}
+
+/// One worker's raw estimate.
+#[derive(Debug, Clone)]
+pub enum WorkerEstimate {
+    Gabe(GabeEstimate),
+    Maeve(MaeveEstimate),
+    Santa(SantaEstimate),
+}
+
+enum WorkerState {
+    Gabe(GabeState),
+    Maeve(MaeveState),
+    Santa(SantaPass2),
+}
+
+impl WorkerState {
+    fn push(&mut self, e: Edge) {
+        match self {
+            WorkerState::Gabe(s) => s.push(e),
+            WorkerState::Maeve(s) => s.push(e),
+            WorkerState::Santa(s) => s.push(e),
+        }
+    }
+
+    fn finish(self) -> WorkerEstimate {
+        match self {
+            WorkerState::Gabe(s) => WorkerEstimate::Gabe(s.finish()),
+            WorkerState::Maeve(s) => WorkerEstimate::Maeve(s.finish()),
+            WorkerState::Santa(s) => WorkerEstimate::Santa(s.finish()),
+        }
+    }
+}
+
+/// Aggregated pipeline output.
+#[derive(Debug)]
+pub struct PipelineResult {
+    /// The master's averaged estimate.
+    pub averaged: WorkerEstimate,
+    /// Raw per-worker estimates (variance analysis, §3.4 experiment).
+    pub per_worker: Vec<WorkerEstimate>,
+    pub edges: u64,
+    pub elapsed: Duration,
+}
+
+impl PipelineResult {
+    /// Edges per second through the full fan-out.
+    pub fn throughput(&self) -> f64 {
+        self.edges as f64 / self.elapsed.as_secs_f64().max(1e-9)
+    }
+}
+
+fn average(per_worker: &[WorkerEstimate]) -> WorkerEstimate {
+    let w = per_worker.len() as f64;
+    match &per_worker[0] {
+        WorkerEstimate::Gabe(first) => {
+            let mut counts = [0.0f64; crate::count::N_GRAPHLETS];
+            for est in per_worker {
+                let WorkerEstimate::Gabe(e) = est else { unreachable!() };
+                for (c, v) in counts.iter_mut().zip(&e.counts) {
+                    *c += v / w;
+                }
+            }
+            WorkerEstimate::Gabe(GabeEstimate {
+                counts,
+                nv: first.nv,
+                ne: first.ne,
+                degrees: first.degrees.clone(),
+            })
+        }
+        WorkerEstimate::Maeve(first) => {
+            let n = first.degrees.len();
+            let mut tri = vec![0.0f64; n];
+            let mut path = vec![0.0f64; n];
+            for est in per_worker {
+                let WorkerEstimate::Maeve(e) = est else { unreachable!() };
+                for i in 0..n {
+                    tri[i] += e.triangles[i] / w;
+                    path[i] += e.paths[i] / w;
+                }
+            }
+            WorkerEstimate::Maeve(MaeveEstimate {
+                nv: first.nv,
+                ne: first.ne,
+                degrees: first.degrees.clone(),
+                triangles: tri,
+                paths: path,
+            })
+        }
+        WorkerEstimate::Santa(first) => {
+            let mut traces = [0.0f64; 5];
+            for est in per_worker {
+                let WorkerEstimate::Santa(e) = est else { unreachable!() };
+                for (t, v) in traces.iter_mut().zip(&e.traces) {
+                    *t += v / w;
+                }
+            }
+            WorkerEstimate::Santa(SantaEstimate {
+                nv: first.nv,
+                ne: first.ne,
+                traces,
+            })
+        }
+    }
+}
+
+/// Run the fan-out pipeline over a stream.
+///
+/// SANTA runs the master's exact degree pass first (pass 1), then fans out
+/// pass 2; GABE/MAEVE are single-pass.
+pub fn run_pipeline(
+    stream: &mut impl EdgeStream,
+    kind: DescriptorKind,
+    cfg: &CoordinatorConfig,
+) -> PipelineResult {
+    assert!(cfg.workers >= 1);
+    let start = Instant::now();
+
+    // SANTA pass 1 (master-side, exact)
+    let degrees: Option<Arc<Vec<u32>>> = match kind {
+        DescriptorKind::Santa { .. } => {
+            let mut deg: Vec<u32> = Vec::new();
+            while let Some(e) = stream.next_edge() {
+                if deg.len() <= e.v as usize {
+                    deg.resize(e.v as usize + 1, 0);
+                }
+                deg[e.u as usize] += 1;
+                deg[e.v as usize] += 1;
+            }
+            stream.reset();
+            Some(Arc::new(deg))
+        }
+        _ => None,
+    };
+
+    let mut edges = 0u64;
+    let per_worker: Vec<WorkerEstimate> = std::thread::scope(|scope| {
+        let mut senders: Vec<SyncSender<Vec<Edge>>> = Vec::with_capacity(cfg.workers);
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for wid in 0..cfg.workers {
+            let (tx, rx): (SyncSender<Vec<Edge>>, Receiver<Vec<Edge>>) =
+                sync_channel(cfg.queue_depth.max(1));
+            senders.push(tx);
+            let seed = cfg.seed ^ (wid as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+            let mut state = match kind {
+                DescriptorKind::Gabe => WorkerState::Gabe(GabeState::new(cfg.budget, seed)),
+                DescriptorKind::Maeve => {
+                    WorkerState::Maeve(MaeveState::new(cfg.budget, seed))
+                }
+                DescriptorKind::Santa { exact_wedges } => {
+                    let scfg = SantaConfig::new(cfg.budget)
+                        .with_seed(seed)
+                        .with_exact_wedges(exact_wedges);
+                    WorkerState::Santa(SantaPass2::new(
+                        scfg,
+                        degrees.clone().expect("santa needs pass-1 degrees"),
+                    ))
+                }
+            };
+            handles.push(scope.spawn(move || {
+                while let Ok(chunk) = rx.recv() {
+                    for e in chunk {
+                        state.push(e);
+                    }
+                }
+                state.finish()
+            }));
+        }
+
+        // master: chunk + broadcast with backpressure
+        let mut chunk: Vec<Edge> = Vec::with_capacity(cfg.chunk_size);
+        while let Some(e) = stream.next_edge() {
+            edges += 1;
+            chunk.push(e);
+            if chunk.len() >= cfg.chunk_size {
+                for tx in &senders {
+                    tx.send(chunk.clone()).expect("worker died");
+                }
+                chunk.clear();
+            }
+        }
+        if !chunk.is_empty() {
+            for tx in &senders {
+                tx.send(chunk.clone()).expect("worker died");
+            }
+        }
+        drop(senders); // close queues -> workers finish
+        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
+    });
+
+    PipelineResult {
+        averaged: average(&per_worker),
+        per_worker,
+        edges,
+        elapsed: start.elapsed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::count::brute::subgraph_census;
+    use crate::count::idx;
+    use crate::gen;
+    use crate::graph::stream::VecStream;
+    use crate::util::rng::Pcg64;
+
+    fn triangle_of(est: &WorkerEstimate) -> f64 {
+        match est {
+            WorkerEstimate::Gabe(e) => e.counts[idx::TRIANGLE],
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn single_worker_matches_sequential_estimator() {
+        let g = gen::powerlaw_cluster_graph(200, 3, 0.5, &mut Pcg64::seed_from_u64(61));
+        let cfg = CoordinatorConfig {
+            workers: 1,
+            budget: g.m(),
+            chunk_size: 7,
+            queue_depth: 2,
+            seed: 5,
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 1);
+        let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg);
+        assert_eq!(r.edges as usize, g.m());
+        let want = subgraph_census(&g);
+        assert!((triangle_of(&r.averaged) - want[idx::TRIANGLE]).abs() < 1e-6);
+    }
+
+    #[test]
+    fn averaging_reduces_variance() {
+        // §3.4: Var[mean of W workers] = Var/W. Check the spread of the
+        // averaged estimate shrinks with more workers.
+        let g = gen::powerlaw_cluster_graph(150, 4, 0.6, &mut Pcg64::seed_from_u64(62));
+        let b = g.m() / 3;
+        let spread = |workers: usize| {
+            let mut vals = Vec::new();
+            for trial in 0..12 {
+                let mut s = VecStream::shuffled(g.edges.clone(), trial);
+                let cfg = CoordinatorConfig {
+                    workers,
+                    budget: b,
+                    chunk_size: 64,
+                    queue_depth: 4,
+                    seed: trial * 31 + 1,
+                };
+                let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg);
+                vals.push(triangle_of(&r.averaged));
+            }
+            let m = vals.iter().sum::<f64>() / vals.len() as f64;
+            vals.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / vals.len() as f64
+        };
+        let v1 = spread(1);
+        let v8 = spread(8);
+        assert!(v8 < v1 * 0.6, "variance: W=1 {v1:.1} vs W=8 {v8:.1}");
+    }
+
+    #[test]
+    fn santa_pipeline_two_pass_exact() {
+        let g = gen::er_graph(60, 150, &mut Pcg64::seed_from_u64(63));
+        let mut s = VecStream::shuffled(g.edges.clone(), 2);
+        let cfg = CoordinatorConfig {
+            workers: 3,
+            budget: g.m(),
+            chunk_size: 13,
+            queue_depth: 2,
+            seed: 9,
+        };
+        let r = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg);
+        let WorkerEstimate::Santa(avg) = &r.averaged else { panic!() };
+        // exact budget: every worker identical and exact
+        let exact = crate::exact::santa_exact(&g);
+        for k in 0..5 {
+            assert!(
+                (avg.traces[k] - exact.traces[k]).abs() < 1e-9 * exact.traces[k].abs().max(1.0)
+            );
+        }
+    }
+
+    #[test]
+    fn maeve_pipeline_averages_vertex_arrays() {
+        let g = gen::er_graph(40, 100, &mut Pcg64::seed_from_u64(64));
+        let mut s = VecStream::shuffled(g.edges.clone(), 3);
+        let cfg = CoordinatorConfig {
+            workers: 4,
+            budget: g.m(),
+            chunk_size: 8,
+            queue_depth: 2,
+            seed: 10,
+        };
+        let r = run_pipeline(&mut s, DescriptorKind::Maeve, &cfg);
+        let WorkerEstimate::Maeve(avg) = &r.averaged else { panic!() };
+        let exact = crate::exact::maeve_exact(&g);
+        for v in 0..g.n {
+            assert!((avg.triangles[v] - exact.triangles[v]).abs() < 1e-9);
+        }
+        assert_eq!(r.per_worker.len(), 4);
+    }
+
+    #[test]
+    fn backpressure_tiny_queue_still_completes() {
+        let g = gen::ba_graph(2000, 2, &mut Pcg64::seed_from_u64(65));
+        let mut s = VecStream::shuffled(g.edges.clone(), 4);
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            budget: 100,
+            chunk_size: 1,
+            queue_depth: 1,
+            seed: 11,
+        };
+        let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg);
+        assert_eq!(r.edges as usize, g.m());
+    }
+}

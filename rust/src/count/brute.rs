@@ -1,0 +1,138 @@
+//! Brute-force subgraph census for small graphs — the test oracle.
+//!
+//! Classifies every induced subgraph on 2, 3 and 4 vertices by degree
+//! signature and converts to non-induced counts via the overlap matrix.
+//! `O(n^4)`; only for tests and tiny exactness checks.
+
+use super::overlap::overlap_matrix;
+use super::{idx, N_GRAPHLETS};
+use crate::graph::csr::Csr;
+use crate::graph::Graph;
+
+/// Classify an induced 4-vertex graph by (edge count, sorted degrees).
+fn classify4(m: usize, dsorted: [u8; 4]) -> usize {
+    match (m, dsorted) {
+        (0, _) => idx::E4,
+        (1, _) => idx::EDGE_P2,
+        (2, [1, 1, 1, 1]) => idx::TWO_EDGES,
+        (2, [0, 1, 1, 2]) => idx::WEDGE_P1,
+        (3, [0, 2, 2, 2]) => idx::TRIANGLE_P1,
+        (3, [1, 1, 1, 3]) => idx::CLAW,
+        (3, [1, 1, 2, 2]) => idx::PATH4,
+        (4, [2, 2, 2, 2]) => idx::CYCLE4,
+        (4, [1, 2, 2, 3]) => idx::PAW,
+        (5, _) => idx::DIAMOND,
+        (6, _) => idx::K4,
+        _ => unreachable!("impossible induced signature {m} {dsorted:?}"),
+    }
+}
+
+/// Exact induced-subgraph counts Ĥ for all 17 graphlets.
+pub fn induced_census(g: &Graph) -> [f64; N_GRAPHLETS] {
+    let csr = Csr::from_graph(g);
+    let n = g.n;
+    let mut h = [0.0; N_GRAPHLETS];
+    // order 2
+    for u in 0..n {
+        for v in u + 1..n {
+            let e = csr.has_edge(u as u32, v as u32);
+            h[if e { idx::EDGE } else { idx::E2 }] += 1.0;
+        }
+    }
+    // order 3
+    for u in 0..n {
+        for v in u + 1..n {
+            for w in v + 1..n {
+                let m = csr.has_edge(u as u32, v as u32) as usize
+                    + csr.has_edge(u as u32, w as u32) as usize
+                    + csr.has_edge(v as u32, w as u32) as usize;
+                h[[idx::E3, idx::EDGE_P1, idx::WEDGE, idx::TRIANGLE][m]] += 1.0;
+            }
+        }
+    }
+    // order 4
+    for u in 0..n {
+        for v in u + 1..n {
+            for w in v + 1..n {
+                for x in w + 1..n {
+                    let verts = [u as u32, v as u32, w as u32, x as u32];
+                    let mut deg = [0u8; 4];
+                    let mut m = 0usize;
+                    for i in 0..4 {
+                        for j in i + 1..4 {
+                            if csr.has_edge(verts[i], verts[j]) {
+                                deg[i] += 1;
+                                deg[j] += 1;
+                                m += 1;
+                            }
+                        }
+                    }
+                    deg.sort_unstable();
+                    h[classify4(m, deg)] += 1.0;
+                }
+            }
+        }
+    }
+    h
+}
+
+/// Exact non-induced counts H = O · Ĥ.
+pub fn subgraph_census(g: &Graph) -> [f64; N_GRAPHLETS] {
+    let induced = induced_census(g);
+    let o = overlap_matrix();
+    let mut h = [0.0; N_GRAPHLETS];
+    for i in 0..N_GRAPHLETS {
+        for j in 0..N_GRAPHLETS {
+            if o[i][j] != 0 {
+                h[i] += o[i][j] as f64 * induced[j];
+            }
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn census_of_k4() {
+        let g = Graph::from_pairs([(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)]);
+        let h = subgraph_census(&g);
+        assert_eq!(h[idx::EDGE], 6.0);
+        assert_eq!(h[idx::WEDGE], 12.0);
+        assert_eq!(h[idx::TRIANGLE], 4.0);
+        assert_eq!(h[idx::CLAW], 4.0);
+        assert_eq!(h[idx::PATH4], 12.0);
+        assert_eq!(h[idx::CYCLE4], 3.0);
+        assert_eq!(h[idx::PAW], 12.0);
+        assert_eq!(h[idx::DIAMOND], 6.0);
+        assert_eq!(h[idx::K4], 1.0);
+        let induced = induced_census(&g);
+        assert_eq!(induced[idx::K4], 1.0);
+        assert_eq!(induced[idx::TRIANGLE], 4.0);
+        assert_eq!(induced[idx::WEDGE], 0.0);
+    }
+
+    #[test]
+    fn census_of_c5() {
+        let g = Graph::from_pairs([(0, 1), (1, 2), (2, 3), (3, 4), (0, 4)]);
+        let h = subgraph_census(&g);
+        assert_eq!(h[idx::EDGE], 5.0);
+        assert_eq!(h[idx::WEDGE], 5.0);
+        assert_eq!(h[idx::TRIANGLE], 0.0);
+        assert_eq!(h[idx::PATH4], 5.0);
+        assert_eq!(h[idx::CYCLE4], 0.0);
+        assert_eq!(h[idx::TWO_EDGES], 5.0);
+    }
+
+    #[test]
+    fn census_counts_all_subsets() {
+        let g = Graph::from_pairs([(0, 1), (1, 2)]);
+        let induced = induced_census(&g);
+        // C(3,2) pairs + C(3,3) triples (n = 3)
+        let order2: f64 = induced[idx::E2] + induced[idx::EDGE];
+        assert_eq!(order2, 3.0);
+        assert_eq!(induced[idx::WEDGE], 1.0);
+    }
+}

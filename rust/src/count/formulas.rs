@@ -1,0 +1,127 @@
+//! Closed-form counts (paper Table 4): stars from the degree sequence,
+//! disconnected patterns from |V|, |E| and the connected estimates.
+//!
+//! Degrees are known *exactly* from the stream (an `O(|V|)` integer array),
+//! so the star counts Σ C(d,2) (wedges) and Σ C(d,3) (claws) and every
+//! disconnected-pattern count derived from them are exact given exact or
+//! estimated connected counts.
+
+use super::{idx, N_GRAPHLETS};
+
+#[inline]
+pub fn binom2(n: f64) -> f64 {
+    (n * (n - 1.0) / 2.0).max(0.0)
+}
+
+#[inline]
+pub fn binom3(n: f64) -> f64 {
+    (n * (n - 1.0) * (n - 2.0) / 6.0).max(0.0)
+}
+
+#[inline]
+pub fn binom4(n: f64) -> f64 {
+    (n * (n - 1.0) * (n - 2.0) * (n - 3.0) / 24.0).max(0.0)
+}
+
+/// Σ_v C(d_v, 2) — wedge (3-path) count from the degree sequence.
+pub fn wedges_from_degrees(deg: &[u32]) -> f64 {
+    deg.iter().map(|&d| binom2(d as f64)).sum()
+}
+
+/// Σ_v C(d_v, 3) — claw (K_{1,3}) count from the degree sequence.
+pub fn claws_from_degrees(deg: &[u32]) -> f64 {
+    deg.iter().map(|&d| binom3(d as f64)).sum()
+}
+
+/// Connected-pattern estimates the stream produces (non-induced counts).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ConnectedCounts {
+    pub triangle: f64,
+    pub path4: f64,
+    pub cycle4: f64,
+    pub paw: f64,
+    pub diamond: f64,
+    pub k4: f64,
+}
+
+/// Assemble the full 17-dimensional non-induced count vector `H` (Table 4).
+pub fn assemble_counts(
+    nv: f64,
+    ne: f64,
+    deg: &[u32],
+    c: &ConnectedCounts,
+) -> [f64; N_GRAPHLETS] {
+    let wedges = wedges_from_degrees(deg);
+    let claws = claws_from_degrees(deg);
+    let mut h = [0.0; N_GRAPHLETS];
+    h[idx::E2] = binom2(nv);
+    h[idx::EDGE] = ne;
+    h[idx::E3] = binom3(nv);
+    h[idx::EDGE_P1] = ne * (nv - 2.0).max(0.0);
+    h[idx::WEDGE] = wedges;
+    h[idx::TRIANGLE] = c.triangle;
+    h[idx::E4] = binom4(nv);
+    h[idx::EDGE_P2] = ne * binom2((nv - 2.0).max(0.0));
+    h[idx::TWO_EDGES] = (binom2(ne) - wedges).max(0.0);
+    h[idx::WEDGE_P1] = wedges * (nv - 3.0).max(0.0);
+    h[idx::TRIANGLE_P1] = c.triangle * (nv - 3.0).max(0.0);
+    h[idx::CLAW] = claws;
+    h[idx::PATH4] = c.path4;
+    h[idx::CYCLE4] = c.cycle4;
+    h[idx::PAW] = c.paw;
+    h[idx::DIAMOND] = c.diamond;
+    h[idx::K4] = c.k4;
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn binomials() {
+        assert_eq!(binom2(4.0), 6.0);
+        assert_eq!(binom3(4.0), 4.0);
+        assert_eq!(binom4(4.0), 1.0);
+        assert_eq!(binom4(3.0), 0.0);
+        assert_eq!(binom2(0.0), 0.0);
+    }
+
+    #[test]
+    fn star_counts_for_k4() {
+        let deg = [3u32, 3, 3, 3];
+        assert_eq!(wedges_from_degrees(&deg), 12.0);
+        assert_eq!(claws_from_degrees(&deg), 4.0);
+    }
+
+    #[test]
+    fn assemble_for_triangle() {
+        let deg = [2u32, 2, 2];
+        let c = ConnectedCounts { triangle: 1.0, ..Default::default() };
+        let h = assemble_counts(3.0, 3.0, &deg, &c);
+        assert_eq!(h[idx::E2], 3.0);
+        assert_eq!(h[idx::EDGE], 3.0);
+        assert_eq!(h[idx::E3], 1.0);
+        assert_eq!(h[idx::EDGE_P1], 3.0);
+        assert_eq!(h[idx::WEDGE], 3.0);
+        assert_eq!(h[idx::TRIANGLE], 1.0);
+        // order-4 disconnected counts vanish on a 3-vertex graph
+        assert_eq!(h[idx::E4], 0.0);
+        assert_eq!(h[idx::WEDGE_P1], 0.0);
+        assert_eq!(h[idx::TRIANGLE_P1], 0.0);
+        // two disjoint edges: C(3,2) - 3 = 0
+        assert_eq!(h[idx::TWO_EDGES], 0.0);
+    }
+
+    #[test]
+    fn assemble_for_two_disjoint_edges() {
+        // graph: 0-1, 2-3
+        let deg = [1u32, 1, 1, 1];
+        let c = ConnectedCounts::default();
+        let h = assemble_counts(4.0, 2.0, &deg, &c);
+        assert_eq!(h[idx::TWO_EDGES], 1.0);
+        assert_eq!(h[idx::WEDGE], 0.0);
+        assert_eq!(h[idx::EDGE_P2], 2.0);
+        assert_eq!(h[idx::E4], 1.0);
+    }
+}

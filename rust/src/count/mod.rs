@@ -1,0 +1,98 @@
+//! Subgraph counting machinery (paper §3.3, §4.1).
+//!
+//! * [`edge_centric`] — per-arriving-edge enumeration of every connected
+//!   pattern instance completed by `e_t` in `sample ∪ {e_t}`,
+//! * [`overlap`] — the 17 graphs on ≤ 4 vertices, their overlap matrix `O`
+//!   and its exact integer inverse (Fig. 2),
+//! * [`formulas`] — Table 4's closed forms for stars and disconnected
+//!   patterns from `|V|`, `|E|` and the degree sequence,
+//! * [`brute`] — brute-force induced-subgraph census for test oracles.
+
+pub mod brute;
+pub mod edge_centric;
+pub mod formulas;
+pub mod overlap;
+
+/// Canonical indices of the 17 graphs on at most four vertices.  This
+/// ordering is the contract shared with `python/compile/graphlets.py` (the
+/// AOT manifest embeds the same tables; `runtime` cross-checks them).
+pub mod idx {
+    pub const E2: usize = 0; // two isolated vertices
+    pub const EDGE: usize = 1;
+    pub const E3: usize = 2;
+    pub const EDGE_P1: usize = 3; // edge + isolated vertex
+    pub const WEDGE: usize = 4; // path on 3 vertices
+    pub const TRIANGLE: usize = 5;
+    pub const E4: usize = 6;
+    pub const EDGE_P2: usize = 7; // edge + two isolated vertices
+    pub const TWO_EDGES: usize = 8; // two disjoint edges
+    pub const WEDGE_P1: usize = 9; // wedge + isolated vertex
+    pub const TRIANGLE_P1: usize = 10; // triangle + isolated vertex
+    pub const CLAW: usize = 11; // star K_{1,3}
+    pub const PATH4: usize = 12;
+    pub const CYCLE4: usize = 13;
+    pub const PAW: usize = 14; // tailed triangle
+    pub const DIAMOND: usize = 15;
+    pub const K4: usize = 16;
+}
+
+/// Number of graphlets tracked by GABE.
+pub const N_GRAPHLETS: usize = 17;
+
+/// Order (vertex count) of each canonical graphlet.
+pub const ORDERS: [usize; N_GRAPHLETS] =
+    [2, 2, 3, 3, 3, 3, 4, 4, 4, 4, 4, 4, 4, 4, 4, 4, 4];
+
+/// Edge count of each canonical graphlet.
+pub const SIZES: [usize; N_GRAPHLETS] =
+    [0, 1, 0, 1, 2, 3, 0, 1, 2, 2, 3, 3, 3, 4, 4, 5, 6];
+
+/// Human-readable names, aligned with the python manifest.
+pub const NAMES: [&str; N_GRAPHLETS] = [
+    "e2", "edge", "e3", "edge+1", "wedge", "triangle", "e4", "edge+2",
+    "two-edges", "wedge+1", "triangle+1", "claw", "path-4", "cycle-4", "paw",
+    "diamond", "k4",
+];
+
+/// Edge lists of the canonical graphlets (vertices `0..order`).
+pub const GRAPHLET_EDGES: [&[(u32, u32)]; N_GRAPHLETS] = [
+    &[],
+    &[(0, 1)],
+    &[],
+    &[(0, 1)],
+    &[(0, 1), (1, 2)],
+    &[(0, 1), (1, 2), (0, 2)],
+    &[],
+    &[(0, 1)],
+    &[(0, 1), (2, 3)],
+    &[(0, 1), (1, 2)],
+    &[(0, 1), (1, 2), (0, 2)],
+    &[(0, 1), (0, 2), (0, 3)],
+    &[(0, 1), (1, 2), (2, 3)],
+    &[(0, 1), (1, 2), (2, 3), (0, 3)],
+    &[(0, 1), (1, 2), (0, 2), (0, 3)],
+    &[(0, 1), (1, 2), (0, 2), (0, 3), (1, 3)],
+    &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)],
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tables_are_consistent() {
+        for i in 0..N_GRAPHLETS {
+            assert_eq!(GRAPHLET_EDGES[i].len(), SIZES[i], "{}", NAMES[i]);
+            for &(u, v) in GRAPHLET_EDGES[i] {
+                assert!(u != v && (u as usize) < ORDERS[i] && (v as usize) < ORDERS[i]);
+            }
+        }
+    }
+
+    #[test]
+    fn seventeen_graphlets_two_plus_four_plus_eleven() {
+        assert_eq!(ORDERS.iter().filter(|&&o| o == 2).count(), 2);
+        assert_eq!(ORDERS.iter().filter(|&&o| o == 3).count(), 4);
+        assert_eq!(ORDERS.iter().filter(|&&o| o == 4).count(), 11);
+    }
+}

@@ -1,0 +1,210 @@
+//! The overlap matrix `O` (paper §4.1.1, Fig. 2) and its exact inverse.
+//!
+//! `O(i, j)` = number of subgraphs of graphlet `F_j` isomorphic to graphlet
+//! `F_i` when their orders match (0 otherwise).  Non-induced counts relate
+//! to induced counts by `H = O · Ĥ`, so `Ĥ = O⁻¹ · H`.  Under the canonical
+//! edge-count-sorted ordering `O` is unit upper triangular with integer
+//! entries, hence its inverse is integral and computed exactly by back
+//! substitution.
+//!
+//! This module *recomputes* `O` from the graphlet edge lists (no hardcoded
+//! table); the runtime cross-checks it against the matrix the python side
+//! embedded in `artifacts/manifest.json`, pinning the rust↔python contract.
+
+use super::{GRAPHLET_EDGES, N_GRAPHLETS, ORDERS};
+
+/// Canonical form of a ≤4-vertex graph: lexicographically-minimal sorted
+/// edge list over all vertex permutations, packed into a u64 (each edge
+/// as a (u,v) nibble pair; ≤ 6 edges).
+fn canonical_form(order: usize, edges: &[(u32, u32)]) -> u64 {
+    const PERMS4: [[u32; 4]; 24] = {
+        let mut out = [[0u32; 4]; 24];
+        let mut idx = 0;
+        let mut a = 0;
+        while a < 4 {
+            let mut b = 0;
+            while b < 4 {
+                let mut c = 0;
+                while c < 4 {
+                    let mut d = 0;
+                    while d < 4 {
+                        if a != b && a != c && a != d && b != c && b != d && c != d {
+                            out[idx] = [a as u32, b as u32, c as u32, d as u32];
+                            idx += 1;
+                        }
+                        d += 1;
+                    }
+                    c += 1;
+                }
+                b += 1;
+            }
+            a += 1;
+        }
+        out
+    };
+    let mut best = u64::MAX;
+    for perm in PERMS4.iter() {
+        if perm[..order].iter().any(|&p| p as usize >= order) {
+            continue;
+        }
+        let mut packed: Vec<u8> = edges
+            .iter()
+            .map(|&(u, v)| {
+                let (a, b) = (perm[u as usize], perm[v as usize]);
+                let (lo, hi) = if a < b { (a, b) } else { (b, a) };
+                (lo * 4 + hi) as u8
+            })
+            .collect();
+        packed.sort_unstable();
+        let mut key = 1u64; // leading 1 distinguishes edge counts
+        for p in packed {
+            key = (key << 5) | (p as u64 + 1);
+        }
+        if key < best {
+            best = key;
+        }
+    }
+    best
+}
+
+/// Compute the 17×17 overlap matrix from the graphlet definitions.
+pub fn overlap_matrix() -> [[i64; N_GRAPHLETS]; N_GRAPHLETS] {
+    let canon: Vec<u64> = (0..N_GRAPHLETS)
+        .map(|i| canonical_form(ORDERS[i], GRAPHLET_EDGES[i]))
+        .collect();
+    let mut o = [[0i64; N_GRAPHLETS]; N_GRAPHLETS];
+    for j in 0..N_GRAPHLETS {
+        let edges = GRAPHLET_EDGES[j];
+        let m = edges.len();
+        // enumerate every edge subset of F_j (≤ 2^6 = 64)
+        for mask in 0u32..(1 << m) {
+            let subset: Vec<(u32, u32)> = edges
+                .iter()
+                .enumerate()
+                .filter(|(k, _)| mask >> k & 1 == 1)
+                .map(|(_, &e)| e)
+                .collect();
+            let c = canonical_form(ORDERS[j], &subset);
+            for i in 0..N_GRAPHLETS {
+                if ORDERS[i] == ORDERS[j] && canon[i] == c {
+                    o[i][j] += 1;
+                }
+            }
+        }
+    }
+    o
+}
+
+/// Exact integer inverse of the (unit upper triangular) overlap matrix.
+pub fn overlap_inverse() -> [[i64; N_GRAPHLETS]; N_GRAPHLETS] {
+    let o = overlap_matrix();
+    let n = N_GRAPHLETS;
+    let mut inv = [[0i64; N_GRAPHLETS]; N_GRAPHLETS];
+    for k in 0..n {
+        // solve O x = e_k by back substitution (O unit upper triangular)
+        let mut x = [0i64; N_GRAPHLETS];
+        for i in (0..n).rev() {
+            let mut rhs = if i == k { 1 } else { 0 };
+            for j in i + 1..n {
+                rhs -= o[i][j] * x[j];
+            }
+            debug_assert_eq!(o[i][i], 1);
+            x[i] = rhs;
+        }
+        for i in 0..n {
+            inv[i][k] = x[i];
+        }
+    }
+    inv
+}
+
+/// Convert estimated non-induced counts to induced counts: `Ĥ = O⁻¹ H`.
+pub fn to_induced(counts: &[f64; N_GRAPHLETS], oinv: &[[i64; N_GRAPHLETS]; N_GRAPHLETS]) -> [f64; N_GRAPHLETS] {
+    let mut out = [0.0; N_GRAPHLETS];
+    for i in 0..N_GRAPHLETS {
+        let mut acc = 0.0;
+        for j in 0..N_GRAPHLETS {
+            if oinv[i][j] != 0 {
+                acc += oinv[i][j] as f64 * counts[j];
+            }
+        }
+        out[i] = acc;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::idx;
+    use super::*;
+
+    #[test]
+    fn unit_upper_triangular() {
+        let o = overlap_matrix();
+        for i in 0..N_GRAPHLETS {
+            assert_eq!(o[i][i], 1, "diag {i}");
+            for j in 0..i {
+                assert_eq!(o[i][j], 0, "below diag ({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn known_entries() {
+        let o = overlap_matrix();
+        assert_eq!(o[idx::WEDGE][idx::TRIANGLE], 3);
+        assert_eq!(o[idx::EDGE_P1][idx::TRIANGLE], 3);
+        assert_eq!(o[idx::WEDGE_P1][idx::K4], 12);
+        assert_eq!(o[idx::PATH4][idx::K4], 12);
+        assert_eq!(o[idx::CYCLE4][idx::K4], 3);
+        assert_eq!(o[idx::DIAMOND][idx::K4], 6);
+        assert_eq!(o[idx::CLAW][idx::K4], 4);
+        assert_eq!(o[idx::PAW][idx::DIAMOND], 4);
+        assert_eq!(o[idx::CYCLE4][idx::DIAMOND], 1);
+        assert_eq!(o[idx::TWO_EDGES][idx::CYCLE4], 2);
+        assert_eq!(o[idx::PATH4][idx::CYCLE4], 4);
+    }
+
+    #[test]
+    fn zero_across_orders() {
+        let o = overlap_matrix();
+        for i in 0..N_GRAPHLETS {
+            for j in 0..N_GRAPHLETS {
+                if ORDERS[i] != ORDERS[j] {
+                    assert_eq!(o[i][j], 0);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn inverse_is_exact() {
+        let o = overlap_matrix();
+        let inv = overlap_inverse();
+        for i in 0..N_GRAPHLETS {
+            for j in 0..N_GRAPHLETS {
+                let mut acc = 0i64;
+                for k in 0..N_GRAPHLETS {
+                    acc += o[i][k] * inv[k][j];
+                }
+                assert_eq!(acc, (i == j) as i64, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn to_induced_recovers_triangle_census() {
+        // For K3: non-induced counts H over order-3 graphlets:
+        // e3 = C(3,3) = 1, edge+1 = 3, wedge = 3, triangle = 1.
+        let mut h = [0.0; N_GRAPHLETS];
+        h[idx::E3] = 1.0;
+        h[idx::EDGE_P1] = 3.0;
+        h[idx::WEDGE] = 3.0;
+        h[idx::TRIANGLE] = 1.0;
+        let induced = to_induced(&h, &overlap_inverse());
+        assert_eq!(induced[idx::TRIANGLE], 1.0);
+        assert_eq!(induced[idx::WEDGE], 0.0);
+        assert_eq!(induced[idx::EDGE_P1], 0.0);
+        assert_eq!(induced[idx::E3], 0.0);
+    }
+}

@@ -1,0 +1,172 @@
+//! FEATHER (Rozemberczki & Sarkar, CIKM'20) — characteristic-function
+//! comparator (§5.3).
+//!
+//! FEATHER-G pools node-level characteristic functions of node features
+//! under r-step normalized-adjacency propagation:
+//!
+//! ```text
+//! φ_u^{(r)}(θ) = Σ_v (D⁻¹A)^r_{uv} · e^{i θ x_v}
+//! ```
+//!
+//! evaluated on an evenly spaced θ grid, real and imaginary parts pooled by
+//! mean over vertices.  Features: log-degree and clustering coefficient
+//! (karateclub defaults); orders r ∈ {1, 2}; 16 θ points in (0, 2.5] —
+//! a 128-dim descriptor.
+
+use super::GraphDescriptor;
+use crate::graph::csr::Csr;
+use crate::graph::Graph;
+
+/// θ grid resolution.
+pub const N_THETA: usize = 16;
+/// Propagation orders used.
+pub const ORDERS_R: usize = 2;
+/// Node features used (log-degree, clustering coefficient).
+pub const N_FEATURES: usize = 2;
+/// Total descriptor dimensionality.
+pub const FEATHER_DIM: usize = N_FEATURES * ORDERS_R * N_THETA * 2;
+
+/// FEATHER-G with mean pooling.
+#[derive(Debug, Clone, Default)]
+pub struct Feather;
+
+impl Feather {
+    /// Per-node features: [log(1+d_v), clustering(v)].
+    fn node_features(csr: &Csr) -> Vec<[f64; N_FEATURES]> {
+        let n = csr.n;
+        let mut tri = vec![0.0f64; n];
+        for u in 0..n as u32 {
+            for &v in csr.neighbors(u) {
+                if v <= u {
+                    continue;
+                }
+                let (a, b) = (csr.neighbors(u), csr.neighbors(v));
+                let (mut i, mut j) = (0, 0);
+                while i < a.len() && j < b.len() {
+                    match a[i].cmp(&b[j]) {
+                        std::cmp::Ordering::Less => i += 1,
+                        std::cmp::Ordering::Greater => j += 1,
+                        std::cmp::Ordering::Equal => {
+                            if a[i] > v {
+                                tri[u as usize] += 1.0;
+                                tri[v as usize] += 1.0;
+                                tri[a[i] as usize] += 1.0;
+                            }
+                            i += 1;
+                            j += 1;
+                        }
+                    }
+                }
+            }
+        }
+        (0..n)
+            .map(|v| {
+                let d = csr.degree(v as u32) as f64;
+                let c = if d >= 2.0 { tri[v] / (d * (d - 1.0) / 2.0) } else { 0.0 };
+                [(1.0 + d).ln(), c]
+            })
+            .collect()
+    }
+
+    pub fn descriptor(&self, g: &Graph) -> Vec<f64> {
+        let csr = Csr::from_graph(g);
+        let n = csr.n.max(1);
+        let feats = Self::node_features(&csr);
+        let thetas: Vec<f64> =
+            (1..=N_THETA).map(|k| 2.5 * k as f64 / N_THETA as f64).collect();
+
+        let mut out = Vec::with_capacity(FEATHER_DIM);
+        for f in 0..N_FEATURES {
+            // wave[v] = (re, im) of e^{iθ x_v} for each θ; propagate r times.
+            for &theta in &thetas {
+                let mut re: Vec<f64> =
+                    feats.iter().map(|x| (theta * x[f]).cos()).collect();
+                let mut im: Vec<f64> =
+                    feats.iter().map(|x| (theta * x[f]).sin()).collect();
+                for _r in 0..ORDERS_R {
+                    // one step of D⁻¹A propagation
+                    let mut nre = vec![0.0; n];
+                    let mut nim = vec![0.0; n];
+                    for u in 0..n {
+                        let d = csr.degree(u as u32);
+                        if d == 0 {
+                            continue;
+                        }
+                        let inv = 1.0 / d as f64;
+                        let (mut ar, mut ai) = (0.0, 0.0);
+                        for &v in csr.neighbors(u as u32) {
+                            ar += re[v as usize];
+                            ai += im[v as usize];
+                        }
+                        nre[u] = ar * inv;
+                        nim[u] = ai * inv;
+                    }
+                    re = nre;
+                    im = nim;
+                    // mean pooling of this order
+                    out.push(re.iter().sum::<f64>() / n as f64);
+                    out.push(im.iter().sum::<f64>() / n as f64);
+                }
+            }
+        }
+        debug_assert_eq!(out.len(), FEATHER_DIM);
+        out
+    }
+}
+
+impl GraphDescriptor for Feather {
+    fn name(&self) -> String {
+        "FEATHER".into()
+    }
+
+    fn dim(&self) -> usize {
+        FEATHER_DIM
+    }
+
+    fn compute(&self, g: &Graph, _seed: u64) -> Vec<f64> {
+        self.descriptor(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn dimension_is_fixed() {
+        let g = Graph::from_pairs([(0, 1), (1, 2)]);
+        assert_eq!(Feather.descriptor(&g).len(), FEATHER_DIM);
+    }
+
+    #[test]
+    fn values_bounded_by_unit_circle() {
+        let mut rng = Pcg64::seed_from_u64(41);
+        let g = gen::ba_graph(200, 3, &mut rng);
+        let d = Feather.descriptor(&g);
+        assert!(d.iter().all(|x| x.abs() <= 1.0 + 1e-9));
+    }
+
+    #[test]
+    fn isomorphism_invariant() {
+        let g1 = Graph::from_pairs([(0, 1), (1, 2), (2, 3), (0, 2)]);
+        let g2 = Graph::from_pairs([(3, 2), (2, 1), (1, 0), (3, 1)]); // relabel
+        let a = Feather.descriptor(&g1);
+        let b = Feather.descriptor(&g2);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn distinguishes_star_from_cycle() {
+        let star = Graph::from_pairs((1..8u32).map(|i| (0, i)));
+        let cycle =
+            Graph::from_pairs((0..8u32).map(|i| (i, (i + 1) % 8)));
+        let a = Feather.descriptor(&star);
+        let b = Feather.descriptor(&cycle);
+        let diff: f64 = a.iter().zip(&b).map(|(x, y)| (x - y).abs()).sum();
+        assert!(diff > 0.5, "diff = {diff}");
+    }
+}

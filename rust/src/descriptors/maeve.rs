@@ -1,0 +1,309 @@
+//! MAEVE — Moments of Attributes Estimated on Vertices Efficiently (§4.2).
+//!
+//! One pass.  Per-vertex triangle counts `|T_G(v)|` and 3-path-endpoint
+//! counts `|P_G(v)|` are estimated with the reservoir scheme; degrees are
+//! exact.  Theorem 3 turns (d, T, P) into the five NetSimile-style
+//! features, and four moments (mean, std, skew, excess kurtosis) aggregate
+//! each feature over the vertices — a 20-dim descriptor.
+
+use crate::util::rng::Pcg64;
+
+use super::{Budget, GraphDescriptor};
+use crate::graph::adjacency::SampleGraph;
+use crate::graph::stream::EdgeStream;
+use crate::graph::Graph;
+use crate::linalg::moments::maeve_layout;
+use crate::sampling::{Reservoir, ReservoirAction, Weights};
+
+/// Raw output of a MAEVE streaming run.
+#[derive(Debug, Clone)]
+pub struct MaeveEstimate {
+    pub nv: u64,
+    pub ne: u64,
+    /// Exact degrees.
+    pub degrees: Vec<u32>,
+    /// Estimated per-vertex triangle counts |T_G(v)|.
+    pub triangles: Vec<f64>,
+    /// Estimated per-vertex 3-path endpoint counts |P_G(v)|.
+    pub paths: Vec<f64>,
+}
+
+impl MaeveEstimate {
+    /// The five per-vertex features of Table 6, as columns.
+    ///
+    /// `[degree, clustering, avg-neighbor-degree, egonet-edges,
+    /// egonet-leaving-edges]`
+    pub fn features(&self) -> [Vec<f64>; 5] {
+        let n = self.degrees.len();
+        let mut f: [Vec<f64>; 5] = Default::default();
+        for c in f.iter_mut() {
+            c.reserve(n);
+        }
+        for v in 0..n {
+            let d = self.degrees[v] as f64;
+            let t = self.triangles[v];
+            let p = self.paths[v];
+            f[0].push(d);
+            f[1].push(if d >= 2.0 { t / (d * (d - 1.0) / 2.0) } else { 0.0 });
+            f[2].push(if d > 0.0 { 1.0 + p / d } else { 0.0 });
+            f[3].push(d + t);
+            f[4].push(p - 2.0 * t);
+        }
+        f
+    }
+
+    /// 20-dim descriptor (moment-major; rust mirror of the L2 kernel).
+    pub fn descriptor(&self) -> [f64; 20] {
+        maeve_layout(&self.features())
+    }
+}
+
+/// Streaming MAEVE estimator.
+#[derive(Debug, Clone)]
+pub struct MaeveEstimator {
+    budget: usize,
+    seed: u64,
+}
+
+impl MaeveEstimator {
+    pub fn new(budget: usize) -> Self {
+        MaeveEstimator { budget, seed: 0x3a3e }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn run(&self, stream: &mut impl EdgeStream) -> MaeveEstimate {
+        let mut state = MaeveState::new(self.budget, self.seed);
+        while let Some(e) = stream.next_edge() {
+            state.push(e);
+        }
+        state.finish()
+    }
+}
+
+/// Incremental MAEVE estimator state (coordinator worker API).
+#[derive(Debug)]
+pub struct MaeveState {
+    budget: usize,
+    reservoir: Reservoir,
+    sample: SampleGraph,
+    degrees: Vec<u32>,
+    tri: Vec<f64>,
+    path: Vec<f64>,
+    common: Vec<u32>,
+    ne: u64,
+}
+
+impl MaeveState {
+    pub fn new(budget: usize, seed: u64) -> Self {
+        let b = budget.max(1);
+        MaeveState {
+            budget: b,
+            reservoir: Reservoir::new(b, Pcg64::seed_from_u64(seed)),
+            sample: SampleGraph::new(),
+            degrees: Vec::new(),
+            tri: Vec::new(),
+            path: Vec::new(),
+            common: Vec::new(),
+            ne: 0,
+        }
+    }
+
+    pub fn push(&mut self, e: crate::graph::Edge) {
+        self.ne += 1;
+        let (u, v) = (e.u, e.v);
+        let need = v as usize + 1;
+        if self.degrees.len() < need {
+            self.degrees.resize(need, 0);
+            self.tri.resize(need, 0.0);
+            self.path.resize(need, 0.0);
+        }
+        self.degrees[u as usize] += 1;
+        self.degrees[v as usize] += 1;
+
+        let t = self.reservoir.t() + 1;
+        if !self.sample.insert(u, v) {
+            self.reservoir.offer(e);
+            return;
+        }
+        let w = Weights::at(t, self.budget);
+
+        // triangles {u, v, w}: credit all three corners
+        self.sample.common_neighbors_into(u, v, &mut self.common);
+        for &wv in &self.common {
+            self.tri[u as usize] += w.w3;
+            self.tri[v as usize] += w.w3;
+            self.tri[wv as usize] += w.w3;
+        }
+        // 3-paths w-u-v (endpoints w, v) and u-v-x (endpoints u, x)
+        for &wv in self.sample.neighbors(u) {
+            if wv == v {
+                continue;
+            }
+            self.path[wv as usize] += w.w2;
+            self.path[v as usize] += w.w2;
+        }
+        for &x in self.sample.neighbors(v) {
+            if x == u {
+                continue;
+            }
+            self.path[x as usize] += w.w2;
+            self.path[u as usize] += w.w2;
+        }
+
+        match self.reservoir.offer(e) {
+            ReservoirAction::Stored => {}
+            ReservoirAction::Replaced(old) => {
+                self.sample.remove(old.u, old.v);
+            }
+            ReservoirAction::Discarded => {
+                self.sample.remove(u, v);
+            }
+        }
+    }
+
+    pub fn finish(self) -> MaeveEstimate {
+        MaeveEstimate {
+            nv: self.degrees.len() as u64,
+            ne: self.ne,
+            degrees: self.degrees,
+            triangles: self.tri,
+            paths: self.path,
+        }
+    }
+}
+
+/// [`GraphDescriptor`] adapter.
+#[derive(Debug, Clone)]
+pub struct Maeve {
+    pub budget: Budget,
+}
+
+impl GraphDescriptor for Maeve {
+    fn name(&self) -> String {
+        match self.budget {
+            Budget::Fraction(f) => format!("MAEVE@{f}"),
+            Budget::Edges(b) => format!("MAEVE@b={b}"),
+            Budget::Exact => "MAEVE@exact".into(),
+        }
+    }
+
+    fn dim(&self) -> usize {
+        20
+    }
+
+    fn compute(&self, g: &Graph, seed: u64) -> Vec<f64> {
+        let mut stream = super::stream_of(g, seed);
+        let b = super::resolve_budget(self.budget, &stream);
+        let est = MaeveEstimator::new(b).with_seed(seed ^ 0x3ae0).run(&mut stream);
+        est.descriptor().to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::graph::csr::Csr;
+    use crate::graph::stream::VecStream;
+
+    /// Exact per-vertex triangle / 3-path counts on the full graph.
+    fn exact_tp(g: &Graph) -> (Vec<f64>, Vec<f64>) {
+        let c = Csr::from_graph(g);
+        let mut tri = vec![0.0; g.n];
+        let mut path = vec![0.0; g.n];
+        for u in 0..g.n as u32 {
+            for &v in c.neighbors(u) {
+                if v <= u {
+                    continue;
+                }
+                // triangles on edge (u, v)
+                for &w in c.neighbors(u) {
+                    if w > v && c.has_edge(w, v) {
+                        tri[u as usize] += 1.0;
+                        tri[v as usize] += 1.0;
+                        tri[w as usize] += 1.0;
+                    }
+                }
+            }
+            // 3-paths with endpoint u: u-m-w
+            for &m in c.neighbors(u) {
+                for &w in c.neighbors(m) {
+                    if w != u {
+                        path[u as usize] += 0.5; // counted from both ends below
+                        path[w as usize] += 0.5;
+                    }
+                }
+            }
+        }
+        (tri, path)
+    }
+
+    #[test]
+    fn exact_mode_matches_direct_computation() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let g = gen::er_graph(25, 60, &mut rng);
+        let (tri, path) = exact_tp(&g);
+        let mut s = VecStream::shuffled(g.edges.clone(), 1);
+        let est = MaeveEstimator::new(g.m()).run(&mut s);
+        for v in 0..g.n {
+            assert!((est.triangles[v] - tri[v]).abs() < 1e-6, "tri[{v}]");
+            assert!((est.paths[v] - path[v]).abs() < 1e-6, "path[{v}]");
+        }
+    }
+
+    #[test]
+    fn theorem3_feature_identities_on_exact_counts() {
+        // On exact counts, egonet edges = d + T and avg neighbor degree =
+        // 1 + P/d must match direct inspection.
+        let g = Graph::from_pairs([(0, 1), (1, 2), (0, 2), (0, 3), (3, 4)]);
+        let mut s = VecStream::new(g.edges.clone());
+        let est = MaeveEstimator::new(100).run(&mut s);
+        let f = est.features();
+        // vertex 0: N={1,2,3}; egonet edges: (0,1),(0,2),(0,3),(1,2) = 4
+        assert_eq!(f[3][0], 4.0);
+        // vertex 0 avg neighbor degree: (2+2+2)/3 = 2
+        assert!((f[2][0] - 2.0).abs() < 1e-9);
+        // edges leaving egonet of 0: (3,4) only = 1
+        assert!((f[4][0] - 1.0).abs() < 1e-9);
+        // clustering of 0: T=1, C(3,2)=3
+        assert!((f[1][0] - 1.0 / 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budgeted_vertex_counts_unbiased() {
+        let mut rng = Pcg64::seed_from_u64(12);
+        let g = gen::powerlaw_cluster_graph(50, 4, 0.6, &mut rng);
+        let (tri, _) = exact_tp(&g);
+        let runs = 400;
+        let mut mean = vec![0.0; g.n];
+        for r in 0..runs {
+            let mut s = VecStream::shuffled(g.edges.clone(), r);
+            let est = MaeveEstimator::new(g.m() / 2).with_seed(r ^ 1).run(&mut s);
+            for v in 0..g.n {
+                mean[v] += est.triangles[v] / runs as f64;
+            }
+        }
+        let total_true: f64 = tri.iter().sum();
+        let total_mean: f64 = mean.iter().sum();
+        assert!(
+            (total_mean - total_true).abs() / total_true < 0.06,
+            "{total_mean} vs {total_true}"
+        );
+    }
+
+    #[test]
+    fn descriptor_finite_on_star_and_empty_vertices() {
+        // star: center degree n-1, leaves degree 1, no triangles
+        let g = Graph::from_pairs((1..20).map(|i| (0u32, i)));
+        let mut s = VecStream::new(g.edges.clone());
+        let est = MaeveEstimator::new(1000).run(&mut s);
+        let d = est.descriptor();
+        assert!(d.iter().all(|x| x.is_finite()));
+        let f = est.features();
+        assert_eq!(f[1][0], 0.0); // clustering of center
+    }
+}

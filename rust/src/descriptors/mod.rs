@@ -1,0 +1,78 @@
+//! The paper's three streaming descriptors (§4) and the SOTA comparators
+//! (§5.3).
+//!
+//! | descriptor | paper basis | passes | module |
+//! |------------|-------------------|--------|--------|
+//! | GABE       | Graphlet Kernel   | 1      | [`gabe`] |
+//! | MAEVE      | NetSimile subset  | 1      | [`maeve`] |
+//! | SANTA      | NetLSD (Taylor)   | 2      | [`santa`] |
+//! | NetLSD     | full spectrum     | n/a    | [`netlsd`] |
+//! | FEATHER    | char. functions   | n/a    | [`feather`] |
+//! | SF         | bottom-k spectrum | n/a    | [`sf`] |
+
+pub mod feather;
+pub mod gabe;
+pub mod maeve;
+pub mod netlsd;
+pub mod netsimile;
+pub mod psi;
+pub mod santa;
+pub mod sf;
+
+use crate::graph::stream::{EdgeStream, VecStream};
+use crate::graph::Graph;
+
+/// How much of the stream a budgeted estimator may store (constraint C2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Budget {
+    /// Absolute number of edges.
+    Edges(usize),
+    /// Fraction of `|E_G|` (the paper's ¼/½ settings).
+    Fraction(f64),
+    /// Unlimited — the estimator degenerates to the exact algorithm.
+    Exact,
+}
+
+impl Budget {
+    /// Resolve against a stream length.
+    pub fn resolve(&self, m: usize) -> usize {
+        match *self {
+            Budget::Edges(b) => b.max(1),
+            Budget::Fraction(f) => ((m as f64 * f).ceil() as usize).max(1),
+            Budget::Exact => m.max(1),
+        }
+    }
+}
+
+/// A descriptor that runs on a full in-memory graph (SOTA baselines) or by
+/// streaming its shuffled edges (our estimators).  `seed` drives both the
+/// stream shuffle and the reservoir.
+pub trait GraphDescriptor: Send + Sync {
+    fn name(&self) -> String;
+    fn dim(&self) -> usize;
+    fn compute(&self, g: &Graph, seed: u64) -> Vec<f64>;
+}
+
+/// Helper: shuffled stream for a graph (paper §5.2).
+pub fn stream_of(g: &Graph, seed: u64) -> VecStream {
+    VecStream::shuffled(g.edges.clone(), seed)
+}
+
+/// Helper: resolve a budget against a stream.
+pub fn resolve_budget(b: Budget, s: &impl EdgeStream) -> usize {
+    b.resolve(s.len_hint().unwrap_or(1 << 20))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn budget_resolution() {
+        assert_eq!(Budget::Edges(10).resolve(100), 10);
+        assert_eq!(Budget::Fraction(0.25).resolve(100), 25);
+        assert_eq!(Budget::Fraction(0.5).resolve(101), 51);
+        assert_eq!(Budget::Exact.resolve(100), 100);
+        assert_eq!(Budget::Edges(0).resolve(100), 1);
+    }
+}

@@ -1,0 +1,211 @@
+//! NetSimile (Berlingerio et al., ASONAM'13) — the full-graph descriptor
+//! MAEVE derives from (paper §4.2).
+//!
+//! Seven per-vertex features aggregated by five moments (median, mean,
+//! std, skewness, kurtosis) → a 35-dim descriptor.  MAEVE keeps the five
+//! features computable in one stream pass and drops the median; this
+//! full-graph implementation is the reference point for that design choice
+//! (ablation: how much does the streaming restriction cost?).
+//!
+//! Features per vertex v (the paper's Table 6 superset):
+//!   1. degree d_v
+//!   2. clustering coefficient c_v
+//!   3. average degree of neighbors
+//!   4. average clustering coefficient of neighbors
+//!   5. edges in ego(v)
+//!   6. edges leaving ego(v)
+//!   7. neighbors of ego(v)
+
+use super::GraphDescriptor;
+use crate::graph::csr::Csr;
+use crate::graph::Graph;
+use crate::linalg::moments::moments;
+
+/// Full NetSimile descriptor (requires the whole graph in memory).
+#[derive(Debug, Clone, Default)]
+pub struct NetSimile;
+
+pub const NETSIMILE_DIM: usize = 35;
+
+fn median(xs: &mut [f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    if n % 2 == 1 {
+        xs[n / 2]
+    } else {
+        (xs[n / 2 - 1] + xs[n / 2]) / 2.0
+    }
+}
+
+impl NetSimile {
+    /// The 7×|V| feature matrix.
+    pub fn features(g: &Graph) -> [Vec<f64>; 7] {
+        let csr = Csr::from_graph(g);
+        let n = g.n;
+        // per-vertex triangles via sorted intersections
+        let mut tri = vec![0.0f64; n];
+        for u in 0..n as u32 {
+            for &v in csr.neighbors(u) {
+                if v <= u {
+                    continue;
+                }
+                let (a, b) = (csr.neighbors(u), csr.neighbors(v));
+                let (mut i, mut j) = (0, 0);
+                while i < a.len() && j < b.len() {
+                    match a[i].cmp(&b[j]) {
+                        std::cmp::Ordering::Less => i += 1,
+                        std::cmp::Ordering::Greater => j += 1,
+                        std::cmp::Ordering::Equal => {
+                            if a[i] > v {
+                                tri[u as usize] += 1.0;
+                                tri[v as usize] += 1.0;
+                                tri[a[i] as usize] += 1.0;
+                            }
+                            i += 1;
+                            j += 1;
+                        }
+                    }
+                }
+            }
+        }
+        let clustering: Vec<f64> = (0..n)
+            .map(|v| {
+                let d = csr.degree(v as u32) as f64;
+                if d >= 2.0 {
+                    tri[v] / (d * (d - 1.0) / 2.0)
+                } else {
+                    0.0
+                }
+            })
+            .collect();
+
+        let mut f: [Vec<f64>; 7] = Default::default();
+        for c in f.iter_mut() {
+            c.reserve(n);
+        }
+        for v in 0..n {
+            let vu = v as u32;
+            let d = csr.degree(vu) as f64;
+            let nbrs = csr.neighbors(vu);
+            // avg degree / clustering of neighbors
+            let (mut sd, mut sc) = (0.0, 0.0);
+            for &w in nbrs {
+                sd += csr.degree(w) as f64;
+                sc += clustering[w as usize];
+            }
+            let avg_deg = if d > 0.0 { sd / d } else { 0.0 };
+            let avg_clu = if d > 0.0 { sc / d } else { 0.0 };
+            // ego edges = d + triangles at v; ego-leaving & ego-neighborhood
+            let ego_edges = d + tri[v];
+            let mut leaving = 0.0;
+            let mut ego_nbrs = std::collections::HashSet::new();
+            for &w in nbrs {
+                for &x in csr.neighbors(w) {
+                    if x != vu && !nbrs.binary_search(&x).is_ok() {
+                        leaving += 1.0;
+                        ego_nbrs.insert(x);
+                    }
+                }
+            }
+            f[0].push(d);
+            f[1].push(clustering[v]);
+            f[2].push(avg_deg);
+            f[3].push(avg_clu);
+            f[4].push(ego_edges);
+            f[5].push(leaving);
+            f[6].push(ego_nbrs.len() as f64);
+        }
+        f
+    }
+
+    /// 35-dim descriptor: per feature [median, mean, std, skew, kurtosis].
+    pub fn descriptor(&self, g: &Graph) -> Vec<f64> {
+        let feats = Self::features(g);
+        let mut out = Vec::with_capacity(NETSIMILE_DIM);
+        for f in feats {
+            let m = moments(&f);
+            let mut copy = f;
+            out.push(median(&mut copy));
+            out.extend_from_slice(&m);
+        }
+        out
+    }
+}
+
+impl GraphDescriptor for NetSimile {
+    fn name(&self) -> String {
+        "NetSimile".into()
+    }
+
+    fn dim(&self) -> usize {
+        NETSIMILE_DIM
+    }
+
+    fn compute(&self, g: &Graph, _seed: u64) -> Vec<f64> {
+        self.descriptor(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::exact;
+    use crate::gen;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn dimension_and_finiteness() {
+        let g = gen::ba_graph(300, 3, &mut Pcg64::seed_from_u64(1));
+        let d = NetSimile.descriptor(&g);
+        assert_eq!(d.len(), NETSIMILE_DIM);
+        assert!(d.iter().all(|x| x.is_finite()));
+    }
+
+    /// The five MAEVE features must agree with NetSimile's overlapping ones
+    /// when MAEVE runs exactly (Theorem 3 cross-check between modules).
+    #[test]
+    fn maeve_subset_matches() {
+        let g = gen::powerlaw_cluster_graph(150, 3, 0.6, &mut Pcg64::seed_from_u64(2));
+        let ns = NetSimile::features(&g);
+        let mv = exact::maeve_exact(&g).features();
+        for v in 0..g.n {
+            assert!((ns[0][v] - mv[0][v]).abs() < 1e-9, "degree at {v}");
+            assert!((ns[1][v] - mv[1][v]).abs() < 1e-9, "clustering at {v}");
+            // MAEVE's avg-neighbor-degree uses 1 + P/d; equal on exact counts
+            if ns[0][v] > 0.0 {
+                assert!((ns[2][v] - mv[2][v]).abs() < 1e-9, "avg nbr degree at {v}");
+            }
+            assert!((ns[4][v] - mv[3][v]).abs() < 1e-9, "ego edges at {v}");
+            assert!((ns[5][v] - mv[4][v]).abs() < 1e-9, "ego leaving at {v}");
+        }
+    }
+
+    #[test]
+    fn triangle_graph_hand_check() {
+        // K3 + pendant: vertex 0 in triangle with pendant 3
+        let g = Graph::from_pairs([(0, 1), (1, 2), (0, 2), (0, 3)]);
+        let f = NetSimile::features(&g);
+        assert_eq!(f[0][0], 3.0); // degree
+        assert!((f[1][0] - 1.0 / 3.0).abs() < 1e-12); // clustering
+        assert_eq!(f[4][0], 4.0); // ego edges: 3 incident + (1,2)
+        assert_eq!(f[5][0], 0.0); // nothing leaves ego(0) (ego is whole graph)
+        assert_eq!(f[6][0], 0.0);
+        // pendant vertex 3: ego = {3, 0}; leaving = edges (0,1),(0,2)
+        assert_eq!(f[5][3], 2.0);
+        assert_eq!(f[6][3], 2.0);
+    }
+
+    #[test]
+    fn isomorphism_invariant() {
+        let g1 = Graph::from_pairs([(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)]);
+        let g2 = Graph::from_pairs([(3, 2), (2, 0), (0, 1), (1, 3), (3, 0)]);
+        let a = NetSimile.descriptor(&g1);
+        let b = NetSimile.descriptor(&g2);
+        for (x, y) in a.iter().zip(&b) {
+            assert!((x - y).abs() < 1e-9);
+        }
+    }
+}

@@ -1,0 +1,178 @@
+//! ψ_j evaluation (NetLSD's heat/wave functionals, paper §4.3 Table 8) —
+//! the rust mirror of the L1 `psi` kernel, plus the exact-spectrum form.
+//!
+//! The j-grid (60 log-spaced values in [1e-3, 1], §5.1) must match the
+//! python side bit-for-bit in spirit; the runtime cross-checks it against
+//! `artifacts/manifest.json`.
+
+/// Number of grid points.
+pub const N_J: usize = 60;
+
+/// Number of descriptor variants: {Heat,Wave} × {None,Empty,Complete}.
+pub const N_VARIANTS: usize = 6;
+
+/// Variant names in canonical order.
+pub const VARIANT_NAMES: [&str; N_VARIANTS] = ["HN", "HE", "HC", "WN", "WE", "WC"];
+
+/// 60 log-spaced values in [1e-3, 1].
+pub fn j_grid() -> [f64; N_J] {
+    let mut out = [0.0; N_J];
+    let (lo, hi) = (-3.0f64, 0.0f64);
+    for (k, o) in out.iter_mut().enumerate() {
+        *o = 10f64.powf(lo + (hi - lo) * k as f64 / (N_J - 1) as f64);
+    }
+    out
+}
+
+/// Five-term Taylor ψ for all six variants from trace estimates
+/// `[tr L⁰, tr L¹, tr L², tr L³, tr L⁴]` (mirror of the L2 kernel).
+pub fn psi_from_traces(traces: &[f64; 5], nv: f64) -> [[f64; N_J]; N_VARIANTS] {
+    let j = j_grid();
+    let mut out = [[0.0; N_J]; N_VARIANTS];
+    for (k, &jv) in j.iter().enumerate() {
+        let heat = traces[0] - jv * traces[1] + jv * jv / 2.0 * traces[2]
+            - jv.powi(3) / 6.0 * traces[3]
+            + jv.powi(4) / 24.0 * traces[4];
+        let wave = traces[0] - jv * jv / 2.0 * traces[2] + jv.powi(4) / 24.0 * traces[4];
+        let nv_safe = nv.max(1.0);
+        let heat_c = 1.0 + (nv - 1.0) * (-jv).exp();
+        let wave_c = {
+            let w = 1.0 + (nv - 1.0) * jv.cos();
+            if w.abs() > 1e-6 {
+                w
+            } else {
+                1e-6
+            }
+        };
+        out[0][k] = heat;
+        out[1][k] = heat / nv_safe;
+        out[2][k] = heat / heat_c;
+        out[3][k] = wave;
+        out[4][k] = wave / nv_safe;
+        out[5][k] = wave / wave_c;
+    }
+    out
+}
+
+/// Truncated-Taylor heat/wave sums for the Fig. 4 comparison.
+/// `terms ∈ {3, 4, 5}`; wave ignores the (imaginary) odd terms, so 4-term
+/// wave equals 3-term wave (the paper drops it).
+pub fn taylor_partial(traces: &[f64; 5], terms: usize) -> ([f64; N_J], [f64; N_J]) {
+    assert!((3..=5).contains(&terms));
+    let j = j_grid();
+    let mut heat = [0.0; N_J];
+    let mut wave = [0.0; N_J];
+    for (k, &jv) in j.iter().enumerate() {
+        let mut h = traces[0] - jv * traces[1] + jv * jv / 2.0 * traces[2];
+        let mut w = traces[0] - jv * jv / 2.0 * traces[2];
+        if terms >= 4 {
+            h -= jv.powi(3) / 6.0 * traces[3];
+        }
+        if terms >= 5 {
+            h += jv.powi(4) / 24.0 * traces[4];
+            w += jv.powi(4) / 24.0 * traces[4];
+        }
+        heat[k] = h;
+        wave[k] = w;
+    }
+    (heat, wave)
+}
+
+/// Exact ψ from a full eigenspectrum (NetLSD proper, Table 8).
+pub fn psi_from_eigenvalues(eigs: &[f64], nv: f64) -> [[f64; N_J]; N_VARIANTS] {
+    let j = j_grid();
+    let mut out = [[0.0; N_J]; N_VARIANTS];
+    for (k, &jv) in j.iter().enumerate() {
+        let mut heat = 0.0;
+        let mut wave = 0.0;
+        for &l in eigs {
+            heat += (-jv * l).exp();
+            wave += (jv * l).cos();
+        }
+        let nv_safe = nv.max(1.0);
+        let heat_c = 1.0 + (nv - 1.0) * (-jv).exp();
+        let wave_c = {
+            let w = 1.0 + (nv - 1.0) * jv.cos();
+            if w.abs() > 1e-6 {
+                w
+            } else {
+                1e-6
+            }
+        };
+        out[0][k] = heat;
+        out[1][k] = heat / nv_safe;
+        out[2][k] = heat / heat_c;
+        out[3][k] = wave;
+        out[4][k] = wave / nv_safe;
+        out[5][k] = wave / wave_c;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_is_logspaced_and_bounded() {
+        let j = j_grid();
+        assert!((j[0] - 1e-3).abs() < 1e-12);
+        assert!((j[N_J - 1] - 1.0).abs() < 1e-12);
+        let r0 = j[1] / j[0];
+        let r1 = j[31] / j[30];
+        assert!((r0 - r1).abs() < 1e-9, "constant ratio");
+    }
+
+    #[test]
+    fn taylor5_equals_full_psi_unnormalized() {
+        let traces = [10.0, 10.0, 14.0, 3.0, 22.0];
+        let psi = psi_from_traces(&traces, 10.0);
+        let (h5, w5) = taylor_partial(&traces, 5);
+        for k in 0..N_J {
+            assert!((psi[0][k] - h5[k]).abs() < 1e-12);
+            assert!((psi[3][k] - w5[k]).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn taylor_matches_exact_spectrum_at_small_j() {
+        // Exact traces of a known spectrum => 5-term Taylor ≈ exact ψ for
+        // small j (the premise of SANTA).
+        let eigs = [0.0, 0.5, 1.0, 1.5, 2.0];
+        let nv = eigs.len() as f64;
+        let traces = [
+            nv,
+            eigs.iter().sum::<f64>(),
+            eigs.iter().map(|l| l * l).sum(),
+            eigs.iter().map(|l| l.powi(3)).sum(),
+            eigs.iter().map(|l| l.powi(4)).sum(),
+        ];
+        let approx = psi_from_traces(&traces, nv);
+        let exact = psi_from_eigenvalues(&eigs, nv);
+        let j = j_grid();
+        for k in 0..N_J {
+            if j[k] <= 0.05 {
+                for v in 0..N_VARIANTS {
+                    let rel = (approx[v][k] - exact[v][k]).abs() / exact[v][k].abs();
+                    assert!(rel < 1e-5, "variant {v} j={} rel={rel}", j[k]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn heat_none_at_zero_j_is_nv() {
+        let eigs = [0.0, 1.0, 2.0];
+        let psi = psi_from_eigenvalues(&eigs, 3.0);
+        // j→1e-3: sum e^{-jλ} ≈ 3 - j*3
+        assert!((psi[0][0] - 3.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn wave_ignores_odd_terms() {
+        let traces = [5.0, 5.0, 8.0, 2.0, 12.0];
+        let (_, w3) = taylor_partial(&traces, 3);
+        let (_, w4) = taylor_partial(&traces, 4);
+        assert_eq!(w3, w4);
+    }
+}

@@ -1,0 +1,432 @@
+//! SANTA — Spectral Attributes for Networks via Taylor Approximation (§4.3).
+//!
+//! Two passes (constraint C1).  Pass 1 records exact degrees.  Pass 2
+//! accumulates tr(𝓛ⁿ), n ≤ 4, by walk-weight enumeration (Tables 9–11):
+//!
+//! * vertex and edge terms are **exact** (every edge is seen once and its
+//!   endpoints' true degrees are known from pass 1),
+//! * wedge, triangle and 4-cycle terms are estimated with the reservoir
+//!   scheme, each instance credited `δ_h / p_t` at its completing edge
+//!   (Theorem 5: unbiased).
+//!
+//! `exact_wedges` (an ablation; DESIGN.md §4) replaces the sampled wedge
+//! term with a closed form over `Σ_{w∈N(y)} 1/d_w` accumulators, which is
+//! exact in one pass with `O(|V|)` extra floats.
+
+use crate::util::rng::Pcg64;
+
+use super::psi::{psi_from_traces, N_J, N_VARIANTS};
+use super::{Budget, GraphDescriptor};
+use crate::graph::adjacency::SampleGraph;
+use crate::graph::stream::EdgeStream;
+use crate::graph::{Graph, VertexId};
+use crate::sampling::{Reservoir, ReservoirAction, Weights};
+
+/// Raw output of a SANTA streaming run.
+#[derive(Debug, Clone)]
+pub struct SantaEstimate {
+    pub nv: u64,
+    pub ne: u64,
+    /// Estimates of `[tr L⁰, tr L¹, tr L², tr L³, tr L⁴]`.
+    pub traces: [f64; 5],
+}
+
+impl SantaEstimate {
+    /// Finalize to the 6×60 ψ descriptor (rust mirror of the L2 artifact).
+    pub fn descriptor(&self) -> [[f64; N_J]; N_VARIANTS] {
+        psi_from_traces(&self.traces, self.nv as f64)
+    }
+}
+
+/// Configuration for the SANTA estimator.
+#[derive(Debug, Clone)]
+pub struct SantaConfig {
+    pub budget: usize,
+    pub seed: u64,
+    /// Use the exact closed-form wedge term instead of sampling (ablation).
+    pub exact_wedges: bool,
+}
+
+impl SantaConfig {
+    pub fn new(budget: usize) -> Self {
+        SantaConfig { budget, seed: 0x5a27a, exact_wedges: false }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn with_exact_wedges(mut self, on: bool) -> Self {
+        self.exact_wedges = on;
+        self
+    }
+}
+
+/// Two-pass streaming SANTA estimator.
+#[derive(Debug, Clone)]
+pub struct SantaEstimator {
+    cfg: SantaConfig,
+}
+
+impl SantaEstimator {
+    pub fn new(budget: usize) -> Self {
+        SantaEstimator { cfg: SantaConfig::new(budget) }
+    }
+
+    pub fn from_config(cfg: SantaConfig) -> Self {
+        SantaEstimator { cfg }
+    }
+
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.cfg.seed = seed;
+        self
+    }
+
+    /// Run both passes over the (resettable) stream.
+    pub fn run(&self, stream: &mut impl EdgeStream) -> SantaEstimate {
+        // ---- pass 1: exact degrees ----
+        let mut degrees: Vec<u32> = Vec::new();
+        let mut ne = 0u64;
+        while let Some(e) = stream.next_edge() {
+            ne += 1;
+            if degrees.len() <= e.v as usize {
+                degrees.resize(e.v as usize + 1, 0);
+            }
+            degrees[e.u as usize] += 1;
+            degrees[e.v as usize] += 1;
+        }
+        stream.reset();
+
+        // ---- pass 2: trace accumulation ----
+        let mut state = SantaPass2::new(self.cfg.clone(), std::sync::Arc::new(degrees));
+        while let Some(e) = stream.next_edge() {
+            state.push(e);
+        }
+        let mut est = state.finish();
+        est.ne = ne;
+        est
+    }
+}
+
+/// Pass-2 incremental state.  Degrees come from pass 1 (the coordinator's
+/// master computes them once and shares them with every worker).
+#[derive(Debug)]
+pub struct SantaPass2 {
+    cfg: SantaConfig,
+    degrees: std::sync::Arc<Vec<u32>>,
+    reservoir: Reservoir,
+    sample: SampleGraph,
+    common: Vec<u32>,
+    tr2_edge: f64,
+    tr3_edge: f64,
+    tr4_edge: f64,
+    tr3_tri: f64,
+    tr4_wedge: f64,
+    tr4_tri: f64,
+    tr4_c4: f64,
+    inv: Vec<f64>,
+    inv2: Vec<f64>,
+    ne: u64,
+}
+
+impl SantaPass2 {
+    pub fn new(cfg: SantaConfig, degrees: std::sync::Arc<Vec<u32>>) -> Self {
+        let b = cfg.budget.max(1);
+        let (inv, inv2) = if cfg.exact_wedges {
+            (vec![0.0f64; degrees.len()], vec![0.0f64; degrees.len()])
+        } else {
+            (Vec::new(), Vec::new())
+        };
+        let seed = cfg.seed;
+        SantaPass2 {
+            cfg,
+            degrees,
+            reservoir: Reservoir::new(b, Pcg64::seed_from_u64(seed)),
+            sample: SampleGraph::new(),
+            common: Vec::new(),
+            tr2_edge: 0.0,
+            tr3_edge: 0.0,
+            tr4_edge: 0.0,
+            tr3_tri: 0.0,
+            tr4_wedge: 0.0,
+            tr4_tri: 0.0,
+            tr4_c4: 0.0,
+            inv,
+            inv2,
+            ne: 0,
+        }
+    }
+
+    #[inline]
+    fn deg(&self, v: VertexId) -> f64 {
+        self.degrees[v as usize] as f64
+    }
+
+    pub fn push(&mut self, e: crate::graph::Edge) {
+        self.ne += 1;
+        let (u, v) = (e.u, e.v);
+        let (du, dv) = (self.deg(u), self.deg(v));
+        let dudv = du * dv;
+        // exact edge terms (Tables 9–11, edge rows)
+        self.tr2_edge += 2.0 / dudv;
+        self.tr3_edge += 6.0 / dudv;
+        self.tr4_edge += 12.0 / dudv + 2.0 / (dudv * dudv);
+        if self.cfg.exact_wedges {
+            self.inv[u as usize] += 1.0 / dv;
+            self.inv[v as usize] += 1.0 / du;
+            self.inv2[u as usize] += 1.0 / (dv * dv);
+            self.inv2[v as usize] += 1.0 / (du * du);
+        }
+
+        let t = self.reservoir.t() + 1;
+        if !self.sample.insert(u, v) {
+            self.reservoir.offer(e);
+            return;
+        }
+        let w = Weights::at(t, self.cfg.budget.max(1));
+
+        if !self.cfg.exact_wedges {
+            // wedges completed by e: centered at u (other edge (u,w))
+            for &wv in self.sample.neighbors(u) {
+                if wv != v {
+                    self.tr4_wedge += w.w2 * 4.0 / (self.deg(wv) * du * du * dv);
+                }
+            }
+            for &x in self.sample.neighbors(v) {
+                if x != u {
+                    self.tr4_wedge += w.w2 * 4.0 / (self.deg(x) * dv * dv * du);
+                }
+            }
+        }
+
+        // triangles completed by e
+        let mut common = std::mem::take(&mut self.common);
+        self.sample.common_neighbors_into(u, v, &mut common);
+        for &wv in &common {
+            let dw = self.deg(wv);
+            self.tr3_tri -= w.w3 * 6.0 / (dudv * dw);
+            self.tr4_tri -= w.w3 * 24.0 / (dudv * dw);
+        }
+        self.common = common;
+
+        // 4-cycles completed by e: u-v-x-w-u with w ∈ N'(u), x ∈ N'(v)∩N'(w)
+        for &wv in self.sample.neighbors(u) {
+            if wv == v {
+                continue;
+            }
+            let (nw, nv_list) = (self.sample.neighbors(wv), self.sample.neighbors(v));
+            let (mut i, mut jj) = (0, 0);
+            while i < nw.len() && jj < nv_list.len() {
+                match nw[i].cmp(&nv_list[jj]) {
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => jj += 1,
+                    std::cmp::Ordering::Equal => {
+                        let x = nw[i];
+                        if x != u && x != wv {
+                            self.tr4_c4 +=
+                                w.w4 * 8.0 / (dudv * self.deg(wv) * self.deg(x));
+                        }
+                        i += 1;
+                        jj += 1;
+                    }
+                }
+            }
+        }
+
+        match self.reservoir.offer(e) {
+            ReservoirAction::Stored => {}
+            ReservoirAction::Replaced(old) => {
+                self.sample.remove(old.u, old.v);
+            }
+            ReservoirAction::Discarded => {
+                self.sample.remove(u, v);
+            }
+        }
+    }
+
+    pub fn finish(mut self) -> SantaEstimate {
+        if self.cfg.exact_wedges {
+            for y in 0..self.degrees.len() {
+                let dy = self.degrees[y] as f64;
+                if dy > 0.0 {
+                    self.tr4_wedge +=
+                        2.0 * (self.inv[y] * self.inv[y] - self.inv2[y]) / (dy * dy);
+                }
+            }
+        }
+        let nv = self.degrees.len() as u64;
+        let non_isolated = self.degrees.iter().filter(|&&d| d > 0).count() as f64;
+        let traces = [
+            nv as f64,
+            non_isolated,
+            non_isolated + self.tr2_edge,
+            non_isolated + self.tr3_edge + self.tr3_tri,
+            non_isolated + self.tr4_edge + self.tr4_wedge + self.tr4_tri + self.tr4_c4,
+        ];
+        SantaEstimate { nv, ne: self.ne, traces }
+    }
+}
+
+/// [`GraphDescriptor`] adapter for one SANTA variant (flattened 60-dim).
+#[derive(Debug, Clone)]
+pub struct Santa {
+    pub budget: Budget,
+    /// Variant index 0..6 = HN, HE, HC, WN, WE, WC.
+    pub variant: usize,
+    pub exact_wedges: bool,
+}
+
+impl Santa {
+    pub fn hc(budget: Budget) -> Self {
+        Santa { budget, variant: 2, exact_wedges: false }
+    }
+}
+
+impl GraphDescriptor for Santa {
+    fn name(&self) -> String {
+        let v = super::psi::VARIANT_NAMES[self.variant];
+        match self.budget {
+            Budget::Fraction(f) => format!("SANTA-{v}@{f}"),
+            Budget::Edges(b) => format!("SANTA-{v}@b={b}"),
+            Budget::Exact => format!("SANTA-{v}@exact"),
+        }
+    }
+
+    fn dim(&self) -> usize {
+        N_J
+    }
+
+    fn compute(&self, g: &Graph, seed: u64) -> Vec<f64> {
+        let mut stream = super::stream_of(g, seed);
+        let b = super::resolve_budget(self.budget, &stream);
+        let cfg = SantaConfig::new(b)
+            .with_seed(seed ^ 0x5a27a)
+            .with_exact_wedges(self.exact_wedges);
+        let est = SantaEstimator::from_config(cfg).run(&mut stream);
+        est.descriptor()[self.variant].to_vec()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::graph::csr::Csr;
+    use crate::graph::stream::VecStream;
+    use crate::linalg::symmetric_eigenvalues;
+
+    /// Exact traces from the dense normalized Laplacian.
+    fn dense_traces(g: &Graph) -> [f64; 5] {
+        let c = Csr::from_graph(g);
+        let n = g.n;
+        let lap = c.normalized_laplacian();
+        let mut l2 = vec![0.0; n * n];
+        for i in 0..n {
+            for k in 0..n {
+                let a = lap[i * n + k];
+                if a != 0.0 {
+                    for j in 0..n {
+                        l2[i * n + j] += a * lap[k * n + j];
+                    }
+                }
+            }
+        }
+        let tr = |m: &[f64]| (0..n).map(|i| m[i * n + i]).sum::<f64>();
+        let tr3: f64 = (0..n * n).map(|i| l2[i] * lap[i]).sum();
+        let tr4: f64 = l2.iter().map(|x| x * x).sum();
+        [n as f64, tr(&lap), tr(&l2), tr3, tr4]
+    }
+
+    #[test]
+    fn exact_mode_matches_dense_traces() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        for trial in 0..6 {
+            let g = gen::er_graph(30, 70 + 5 * trial, &mut rng);
+            let want = dense_traces(&g);
+            let mut s = VecStream::shuffled(g.edges.clone(), trial as u64);
+            let est = SantaEstimator::new(g.m() + 1).run(&mut s);
+            for k in 0..5 {
+                assert!(
+                    (est.traces[k] - want[k]).abs() < 1e-6 * want[k].abs().max(1.0),
+                    "trial {trial} tr(L^{k}): {} vs {}",
+                    est.traces[k],
+                    want[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn exact_wedge_mode_matches_sampled_exact_mode() {
+        let mut rng = Pcg64::seed_from_u64(22);
+        let g = gen::powerlaw_cluster_graph(40, 3, 0.5, &mut rng);
+        let mut s1 = VecStream::shuffled(g.edges.clone(), 1);
+        let a = SantaEstimator::new(g.m()).run(&mut s1);
+        let mut s2 = VecStream::shuffled(g.edges.clone(), 1);
+        let b = SantaEstimator::from_config(
+            SantaConfig::new(g.m()).with_exact_wedges(true),
+        )
+        .run(&mut s2);
+        for k in 0..5 {
+            assert!(
+                (a.traces[k] - b.traces[k]).abs() < 1e-8 * a.traces[k].abs().max(1.0),
+                "tr(L^{k})"
+            );
+        }
+    }
+
+    #[test]
+    fn traces_match_eigenvalue_power_sums() {
+        let mut rng = Pcg64::seed_from_u64(23);
+        let g = gen::er_graph(25, 60, &mut rng);
+        let c = Csr::from_graph(&g);
+        let eigs = symmetric_eigenvalues(&c.normalized_laplacian(), g.n);
+        let mut s = VecStream::shuffled(g.edges.clone(), 2);
+        let est = SantaEstimator::new(g.m()).run(&mut s);
+        for k in 1..5 {
+            let want: f64 = eigs.iter().map(|l| l.powi(k as i32)).sum();
+            assert!(
+                (est.traces[k] - want).abs() < 1e-6 * want.abs().max(1.0),
+                "tr(L^{k}): {} vs {want}",
+                est.traces[k]
+            );
+        }
+    }
+
+    #[test]
+    fn budgeted_traces_unbiased() {
+        let mut rng = Pcg64::seed_from_u64(24);
+        let g = gen::powerlaw_cluster_graph(60, 3, 0.6, &mut rng);
+        let want = dense_traces(&g);
+        let runs = 300;
+        let mut mean = [0.0f64; 5];
+        for r in 0..runs {
+            let mut s = VecStream::shuffled(g.edges.clone(), r);
+            let est = SantaEstimator::new(g.m() / 2).with_seed(r ^ 7).run(&mut s);
+            for k in 0..5 {
+                mean[k] += est.traces[k] / runs as f64;
+            }
+        }
+        for k in 0..5 {
+            let rel = (mean[k] - want[k]).abs() / want[k].abs().max(1.0);
+            assert!(rel < 0.05, "tr(L^{k}): mean {} vs {}", mean[k], want[k]);
+        }
+    }
+
+    #[test]
+    fn descriptor_shape_and_finiteness() {
+        let mut rng = Pcg64::seed_from_u64(25);
+        let g = gen::ba_graph(300, 3, &mut rng);
+        let mut s = VecStream::shuffled(g.edges.clone(), 5);
+        let est = SantaEstimator::new(200).run(&mut s);
+        let d = est.descriptor();
+        for row in &d {
+            assert!(row.iter().all(|x| x.is_finite()));
+        }
+        // HE = HN / nv
+        for k in 0..N_J {
+            assert!((d[1][k] - d[0][k] / est.nv as f64).abs() < 1e-9);
+        }
+    }
+}

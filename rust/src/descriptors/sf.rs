@@ -1,0 +1,97 @@
+//! SF (de Lara & Pineau, 2018) — the "simple baseline": the bottom-k
+//! eigenvalues of the normalized Laplacian as the embedding (§5.3).
+//!
+//! The paper sets the embedding dimension to the dataset's average order;
+//! we cap it so dense solves stay tractable and zero-pad smaller graphs
+//! (the reference implementation does the same).
+
+use crate::util::rng::Pcg64;
+
+use super::GraphDescriptor;
+use crate::graph::csr::Csr;
+use crate::graph::Graph;
+use crate::linalg::lanczos::lanczos_ritz_values;
+use crate::linalg::symmetric_eigenvalues;
+
+/// SF baseline descriptor.
+#[derive(Debug, Clone)]
+pub struct Sf {
+    /// Embedding dimension (bottom-k eigenvalues, zero-padded).
+    pub k: usize,
+    /// Dense eigensolve cutoff; Lanczos beyond.
+    pub dense_cutoff: usize,
+}
+
+impl Sf {
+    pub fn new(k: usize) -> Self {
+        Sf { k: k.max(1), dense_cutoff: 1024 }
+    }
+
+    /// Dimension from a dataset's average order (paper's suggestion),
+    /// capped at 128.
+    pub fn for_dataset(avg_order: f64) -> Self {
+        Self::new((avg_order.round() as usize).clamp(4, 128))
+    }
+
+    pub fn descriptor(&self, g: &Graph, seed: u64) -> Vec<f64> {
+        let csr = Csr::from_graph(g);
+        let eigs = if g.n <= self.dense_cutoff {
+            symmetric_eigenvalues(&csr.normalized_laplacian(), g.n)
+        } else {
+            let mut rng = Pcg64::seed_from_u64(seed ^ 0x5f);
+            lanczos_ritz_values(
+                g.n,
+                |x, y| csr.laplacian_matvec(x, y),
+                (4 * self.k).min(g.n),
+                &mut rng,
+            )
+        };
+        let mut out = vec![0.0; self.k];
+        for (i, v) in eigs.iter().take(self.k).enumerate() {
+            out[i] = *v;
+        }
+        out
+    }
+}
+
+impl GraphDescriptor for Sf {
+    fn name(&self) -> String {
+        format!("SF-k{}", self.k)
+    }
+
+    fn dim(&self) -> usize {
+        self.k
+    }
+
+    fn compute(&self, g: &Graph, seed: u64) -> Vec<f64> {
+        self.descriptor(g, seed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pads_with_zeros() {
+        let g = Graph::from_pairs([(0, 1), (1, 2)]);
+        let d = Sf::new(8).descriptor(&g, 0);
+        assert_eq!(d.len(), 8);
+        assert!(d[0].abs() < 1e-12); // λ₁ = 0
+        assert_eq!(&d[3..], &[0.0; 5]);
+    }
+
+    #[test]
+    fn connected_components_show_as_zeros() {
+        let g = Graph::from_pairs([(0, 1), (1, 2), (0, 2), (3, 4), (4, 5), (3, 5)]);
+        let d = Sf::new(4).descriptor(&g, 0);
+        assert!(d[0].abs() < 1e-10 && d[1].abs() < 1e-10);
+        assert!(d[2] > 0.5);
+    }
+
+    #[test]
+    fn for_dataset_clamps() {
+        assert_eq!(Sf::for_dataset(3000.0).k, 128);
+        assert_eq!(Sf::for_dataset(1.0).k, 4);
+    }
+}

@@ -1,0 +1,113 @@
+//! Ablations for the design choices DESIGN.md calls out:
+//!
+//! 1. **MAEVE's streaming restriction** — MAEVE keeps the 5 NetSimile
+//!    features computable in one pass and drops the median aggregator;
+//!    how much accuracy does that cost vs full NetSimile (7 feat × 5 agg)?
+//! 2. **SANTA wedge term: sampled vs closed form** — the `exact_wedges`
+//!    option replaces the sampled tr(𝓛⁴) wedge contribution with an exact
+//!    `O(|V|)`-memory accumulator; how much estimator variance does it buy?
+
+use crate::classify::Metric;
+use crate::descriptors::maeve::MaeveEstimator;
+use crate::descriptors::netsimile::NetSimile;
+use crate::descriptors::santa::{SantaConfig, SantaEstimator};
+use crate::exact;
+use crate::gen;
+use crate::gen::datasets::make_dataset;
+use crate::graph::stream::VecStream;
+use crate::util::par::par_map;
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+use super::{print_table, Ctx};
+
+pub fn ablation(ctx: &Ctx) -> Result<()> {
+    // ---- 1. MAEVE (streamed) vs NetSimile (full graph) ----
+    let mut rows = Vec::new();
+    for name in ["OHSU", "DD"] {
+        let ds = make_dataset(name, ctx.scale, ctx.seed);
+        let seed0 = ctx.seed;
+        let maeve = par_map(&ds.graphs, ctx.threads, |gi, g| {
+            let b = (g.m() / 2).max(2);
+            let s1 = seed0 ^ (gi as u64) << 2;
+            let mut s = VecStream::shuffled(g.edges.clone(), s1);
+            MaeveEstimator::new(b).with_seed(s1).run(&mut s).descriptor().to_vec()
+        });
+        let netsimile = par_map(&ds.graphs, ctx.threads, |_, g| NetSimile.descriptor(g));
+        let a_m = super::classification::accuracy_of(ctx, &maeve, &ds.labels, Metric::Canberra);
+        let a_n =
+            super::classification::accuracy_of(ctx, &netsimile, &ds.labels, Metric::Canberra);
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.2}", a_m),
+            format!("{:.2}", a_n),
+            format!("{:+.2}", a_n - a_m),
+        ]);
+    }
+    print_table(
+        "Ablation 1 — MAEVE@½|E| (streamed, 20-dim) vs NetSimile (full, 35-dim)",
+        &["dataset", "MAEVE@1/2", "NetSimile", "full-graph gain"],
+        &rows,
+    );
+
+    // ---- 2. SANTA wedge term: sampled vs exact accumulator ----
+    let g = gen::powerlaw_cluster_graph(
+        ((2000.0 * ctx.scale).ceil() as usize).clamp(200, 20_000),
+        4,
+        0.5,
+        &mut Pcg64::seed_from_u64(ctx.seed ^ 0xab1),
+    );
+    let truth = exact::santa_exact(&g).traces[4];
+    let runs: Vec<u64> = (0..60).collect();
+    let mut rows = Vec::new();
+    for exact_wedges in [false, true] {
+        let vals = par_map(&runs, ctx.threads, |_, &r| {
+            let cfg = SantaConfig::new(g.m() / 4)
+                .with_seed(r ^ 0x77)
+                .with_exact_wedges(exact_wedges);
+            let mut s = VecStream::shuffled(g.edges.clone(), r);
+            SantaEstimator::from_config(cfg).run(&mut s).traces[4]
+        });
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        let var =
+            vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+        rows.push(vec![
+            if exact_wedges { "closed-form" } else { "sampled" }.to_string(),
+            format!("{truth:.3}"),
+            format!("{mean:.3}"),
+            format!("{:.5}", (mean - truth).abs() / truth.abs()),
+            format!("{var:.6}"),
+        ]);
+    }
+    print_table(
+        "Ablation 2 — SANTA tr(𝓛⁴) wedge term at b=|E|/4 (60 runs)",
+        &["wedge term", "truth", "mean", "rel.bias", "variance"],
+        &rows,
+    );
+    let csv: Vec<String> = rows
+        .iter()
+        .map(|r| r.join(","))
+        .collect();
+    ctx.write_csv("ablation_santa_wedges.csv", "mode,truth,mean,relbias,variance", &csv)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ablation_tiny_run() {
+        let tmp = crate::util::tmp::TempDir::new("abl").unwrap();
+        let ctx = Ctx {
+            runtime: None,
+            scale: 0.02,
+            massive_scale: 0.01,
+            seed: 3,
+            out_dir: tmp.path().to_path_buf(),
+            threads: 0,
+        };
+        ablation(&ctx).unwrap();
+        assert!(tmp.path().join("ablation_santa_wedges.csv").exists());
+    }
+}

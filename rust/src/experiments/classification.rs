@@ -1,0 +1,352 @@
+//! Graph-classification experiments (paper §6.2): Table 14 (SANTA variants
+//! vs NetLSD on the same j) and Table 15 (proposed vs SOTA descriptors).
+//!
+//! Descriptors for each dataset are computed in parallel on the rust side;
+//! finalization (ψ grids, MAEVE moments, GABE normalization) runs through
+//! the PJRT artifacts when available, and the k-NN distance matrix comes
+//! from the L1 tiled distance kernel.
+
+use crate::classify::{cross_validate, CvResult, DistanceMatrix, Metric};
+use crate::descriptors::feather::Feather;
+use crate::descriptors::netlsd::NetLsd;
+use crate::descriptors::psi::{psi_from_eigenvalues, psi_from_traces, N_J, VARIANT_NAMES};
+use crate::descriptors::santa::SantaEstimator;
+use crate::descriptors::sf::Sf;
+use crate::descriptors::{gabe::GabeEstimator, maeve::MaeveEstimator};
+use crate::gen::datasets::{make_dataset, Dataset, SPECS};
+use crate::graph::stream::VecStream;
+use crate::runtime::Runtime;
+use crate::util::par::par_map;
+use crate::Result;
+
+use super::{print_table, Ctx};
+
+const FOLDS: usize = 10;
+const REPEATS: usize = 10;
+
+/// Distance matrix via the PJRT kernel when available, rust otherwise.
+fn distances(
+    runtime: Option<&Runtime>,
+    descs: &[Vec<f64>],
+    metric: Metric,
+) -> DistanceMatrix {
+    if let Some(rt) = runtime {
+        if descs[0].len() <= rt.manifest.shapes.dist_d {
+            if let Ok((can, euc)) = rt.pairwise_dist(descs, descs) {
+                return DistanceMatrix::from_raw(
+                    descs.len(),
+                    match metric {
+                        Metric::Canberra => can,
+                        Metric::Euclidean => euc,
+                    },
+                );
+            }
+        }
+    }
+    DistanceMatrix::compute(descs, metric)
+}
+
+fn accuracy(
+    ctx: &Ctx,
+    descs: &[Vec<f64>],
+    labels: &[usize],
+    metric: Metric,
+) -> CvResult {
+    let dm = distances(ctx.runtime.as_ref(), descs, metric);
+    cross_validate(&dm, labels, FOLDS, REPEATS, ctx.seed ^ 0xcf)
+}
+
+/// Public accuracy helper for sibling experiments (ablations).
+pub fn accuracy_of(ctx: &Ctx, descs: &[Vec<f64>], labels: &[usize], metric: Metric) -> f64 {
+    accuracy(ctx, descs, labels, metric).accuracy
+}
+
+/// SANTA descriptors (all 6 variants) for every graph of a dataset at a
+/// budget fraction.  Returns per-variant descriptor sets.
+fn santa_descriptors(
+    ctx: &Ctx,
+    ds: &Dataset,
+    frac: f64,
+) -> Vec<Vec<Vec<f64>>> {
+    // stream estimates in parallel
+    let seed0 = ctx.seed;
+    let ests = par_map(&ds.graphs, ctx.threads, |gi, g| {
+        let b = ((g.m() as f64 * frac).ceil() as usize).max(2);
+        let seed = seed0 ^ (gi as u64) << 4 ^ (frac * 8.0) as u64;
+        let mut s = VecStream::shuffled(g.edges.clone(), seed);
+        SantaEstimator::new(b).with_seed(seed).run(&mut s)
+    });
+    // finalize via L2 artifact (batched) or rust mirror
+    let psi_all: Vec<[Vec<f64>; 6]> = if let Some(rt) = ctx.runtime.as_ref() {
+        let traces: Vec<[f64; 5]> = ests.iter().map(|e| e.traces).collect();
+        let nv: Vec<f64> = ests.iter().map(|e| e.nv as f64).collect();
+        match rt.santa_psi(&traces, &nv) {
+            Ok(out) => out
+                .into_iter()
+                .map(|(psi, _, _)| {
+                    let mut v: [Vec<f64>; 6] = Default::default();
+                    for k in 0..6 {
+                        v[k] = psi[k * N_J..(k + 1) * N_J].to_vec();
+                    }
+                    v
+                })
+                .collect(),
+            Err(e) => {
+                eprintln!("warn: santa_psi artifact failed ({e}); rust fallback");
+                ests.iter()
+                    .map(|est| {
+                        let p = psi_from_traces(&est.traces, est.nv as f64);
+                        std::array::from_fn(|k| p[k].to_vec())
+                    })
+                    .collect()
+            }
+        }
+    } else {
+        ests.iter()
+            .map(|est| {
+                let p = psi_from_traces(&est.traces, est.nv as f64);
+                std::array::from_fn(|k| p[k].to_vec())
+            })
+            .collect()
+    };
+    (0..6)
+        .map(|v| psi_all.iter().map(|p| p[v].clone()).collect())
+        .collect()
+}
+
+/// NetLSD ψ (same j values as SANTA) for every graph.
+fn netlsd_descriptors(ctx: &Ctx, ds: &Dataset) -> Vec<[Vec<f64>; 6]> {
+    let engine = NetLsd { dense_cutoff: 512, k_ends: 100 };
+    let seed0 = ctx.seed;
+    par_map(&ds.graphs, ctx.threads, |gi, g| {
+        let spec = engine.spectrum(g, seed0 ^ gi as u64);
+        let p = psi_from_eigenvalues(&spec, g.n as f64);
+        std::array::from_fn(|k| p[k].to_vec())
+    })
+}
+
+/// Table 14: all SANTA variants at ¼/½ budgets vs NetLSD on the same j.
+pub fn table14(ctx: &Ctx, dataset_filter: Option<&str>) -> Result<()> {
+    let names: Vec<&str> = SPECS
+        .iter()
+        .map(|(n, _, _)| *n)
+        .filter(|n| dataset_filter.map(|f| f.eq_ignore_ascii_case(n)).unwrap_or(true))
+        .collect();
+    println!(
+        "Table 14: SANTA variants vs NetLSD* on {} dataset(s), scale {}",
+        names.len(),
+        ctx.scale
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for name in &names {
+        let ds = make_dataset(name, ctx.scale, ctx.seed);
+        let q = santa_descriptors(ctx, &ds, 0.25);
+        let h = santa_descriptors(ctx, &ds, 0.5);
+        let nl = netlsd_descriptors(ctx, &ds);
+        for v in 0..6 {
+            let a_q = accuracy(ctx, &q[v], &ds.labels, Metric::Euclidean);
+            let a_h = accuracy(ctx, &h[v], &ds.labels, Metric::Euclidean);
+            let nld: Vec<Vec<f64>> = nl.iter().map(|p| p[v].clone()).collect();
+            let a_n = accuracy(ctx, &nld, &ds.labels, Metric::Euclidean);
+            rows.push(vec![
+                name.to_string(),
+                VARIANT_NAMES[v].to_string(),
+                format!("{:.2}", a_q.accuracy),
+                format!("{:.2}", a_h.accuracy),
+                format!("{:.2}", a_n.accuracy),
+            ]);
+            csv.push(format!(
+                "{name},{},{},{},{}",
+                VARIANT_NAMES[v], a_q.accuracy, a_h.accuracy, a_n.accuracy
+            ));
+        }
+    }
+    print_table(
+        "Table 14 — accuracy (%): SANTA ¼|E|, ½|E|, NetLSD* (same j)",
+        &["dataset", "variant", "SANTA@1/4", "SANTA@1/2", "NetLSD*"],
+        &rows,
+    );
+    ctx.write_csv(
+        "table14_santa_variants.csv",
+        "dataset,variant,santa_q,santa_h,netlsd_same_j",
+        &csv,
+    )?;
+    Ok(())
+}
+
+/// Table 15: GABE/MAEVE/SANTA-HC vs NetLSD / FEATHER / SF.
+pub fn table15(ctx: &Ctx, dataset_filter: Option<&str>) -> Result<()> {
+    let names: Vec<&str> = SPECS
+        .iter()
+        .map(|(n, _, _)| *n)
+        .filter(|n| dataset_filter.map(|f| f.eq_ignore_ascii_case(n)).unwrap_or(true))
+        .collect();
+    println!(
+        "Table 15: proposed vs benchmark descriptors on {} dataset(s), scale {}",
+        names.len(),
+        ctx.scale
+    );
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for name in &names {
+        let ds = make_dataset(name, ctx.scale, ctx.seed);
+        let avg_order =
+            ds.graphs.iter().map(|g| g.n).sum::<usize>() as f64 / ds.len() as f64;
+
+        // ---- proposed streaming descriptors at ¼ and ½ budgets ----
+        let mut acc_cells: Vec<(String, f64)> = Vec::new();
+        for frac in [0.25, 0.5] {
+            let seed0 = ctx.seed;
+            let gabe = par_map(&ds.graphs, ctx.threads, |gi, g| {
+                let b = ((g.m() as f64 * frac).ceil() as usize).max(2);
+                let seed = seed0 ^ (gi as u64) << 3 ^ (frac * 8.0) as u64;
+                let mut s = VecStream::shuffled(g.edges.clone(), seed);
+                let est = GabeEstimator::new(b).with_seed(seed).run(&mut s);
+                (est.counts, est.nv as f64)
+            });
+            let gabe_desc: Vec<Vec<f64>> = if let Some(rt) = ctx.runtime.as_ref() {
+                let counts: Vec<[f64; 17]> = gabe.iter().map(|(c, _)| *c).collect();
+                let nv: Vec<f64> = gabe.iter().map(|(_, n)| *n).collect();
+                rt.gabe_finalize(&counts, &nv).unwrap_or_else(|e| {
+                    eprintln!("warn: gabe artifact failed ({e}); rust fallback");
+                    gabe.iter()
+                        .map(|(c, n)| {
+                            crate::descriptors::gabe::GabeEstimate {
+                                counts: *c,
+                                nv: *n as u64,
+                                ne: 0,
+                                degrees: Vec::new(),
+                            }
+                            .descriptor()
+                            .to_vec()
+                        })
+                        .collect()
+                })
+            } else {
+                gabe.iter()
+                    .map(|(c, n)| {
+                        crate::descriptors::gabe::GabeEstimate {
+                            counts: *c,
+                            nv: *n as u64,
+                            ne: 0,
+                            degrees: Vec::new(),
+                        }
+                        .descriptor()
+                        .to_vec()
+                    })
+                    .collect()
+            };
+            let a = accuracy(ctx, &gabe_desc, &ds.labels, Metric::Canberra);
+            acc_cells.push((format!("GABE@{frac}"), a.accuracy));
+
+            let maeve = par_map(&ds.graphs, ctx.threads, |gi, g| {
+                let b = ((g.m() as f64 * frac).ceil() as usize).max(2);
+                let seed = seed0 ^ (gi as u64) << 5 ^ (frac * 8.0) as u64;
+                let mut s = VecStream::shuffled(g.edges.clone(), seed);
+                MaeveEstimator::new(b).with_seed(seed).run(&mut s).descriptor().to_vec()
+            });
+            let a = accuracy(ctx, &maeve, &ds.labels, Metric::Canberra);
+            acc_cells.push((format!("MAEVE@{frac}"), a.accuracy));
+
+            let santa = santa_descriptors(ctx, &ds, frac);
+            let a = accuracy(ctx, &santa[2], &ds.labels, Metric::Euclidean); // HC
+            acc_cells.push((format!("SANTA-HC@{frac}"), a.accuracy));
+        }
+
+        // ---- benchmarks (full graph) ----
+        let nl = netlsd_descriptors(ctx, &ds);
+        let nl_best = (0..6)
+            .map(|v| {
+                let d: Vec<Vec<f64>> = nl.iter().map(|p| p[v].clone()).collect();
+                accuracy(ctx, &d, &ds.labels, Metric::Euclidean).accuracy
+            })
+            .fold(0.0f64, f64::max);
+        let feather = par_map(&ds.graphs, ctx.threads, |_, g| Feather.descriptor(g));
+        let f_best = [Metric::Euclidean, Metric::Canberra]
+            .into_iter()
+            .map(|m| accuracy(ctx, &feather, &ds.labels, m).accuracy)
+            .fold(0.0f64, f64::max);
+        let sf_engine = Sf::for_dataset(avg_order);
+        let seed0 = ctx.seed;
+        let sf = par_map(&ds.graphs, ctx.threads, |gi, g| {
+            sf_engine.descriptor(g, seed0 ^ gi as u64)
+        });
+        let s_best = [Metric::Euclidean, Metric::Canberra]
+            .into_iter()
+            .map(|m| accuracy(ctx, &sf, &ds.labels, m).accuracy)
+            .fold(0.0f64, f64::max);
+
+        let mut row = vec![name.to_string()];
+        row.push(format!("{nl_best:.2}"));
+        row.push(format!("{f_best:.2}"));
+        row.push(format!("{s_best:.2}"));
+        for (_, a) in &acc_cells {
+            row.push(format!("{a:.2}"));
+        }
+        csv.push(format!(
+            "{name},{nl_best},{f_best},{s_best},{}",
+            acc_cells
+                .iter()
+                .map(|(_, a)| a.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        ));
+        rows.push(row);
+    }
+    print_table(
+        "Table 15 — accuracy (%): benchmarks vs proposed",
+        &[
+            "dataset",
+            "NetLSD",
+            "FEATHER",
+            "SF",
+            "GABE@1/4",
+            "MAEVE@1/4",
+            "SANTA-HC@1/4",
+            "GABE@1/2",
+            "MAEVE@1/2",
+            "SANTA-HC@1/2",
+        ],
+        &rows,
+    );
+    ctx.write_csv(
+        "table15_benchmarks.csv",
+        "dataset,netlsd,feather,sf,gabe_q,maeve_q,santahc_q,gabe_h,maeve_h,santahc_h",
+        &csv,
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tiny_ctx() -> Ctx {
+        Ctx {
+            runtime: None,
+            scale: 0.02,
+            massive_scale: 0.01,
+            seed: 3,
+            out_dir: PathBuf::from(std::env::temp_dir().join("sd-exp-test")),
+            threads: 0,
+        }
+    }
+
+    #[test]
+    fn santa_descriptor_sets_have_right_shape() {
+        let ctx = tiny_ctx();
+        let ds = make_dataset("OHSU", 0.2, 1);
+        let out = santa_descriptors(&ctx, &ds, 0.5);
+        assert_eq!(out.len(), 6);
+        assert_eq!(out[0].len(), ds.len());
+        assert_eq!(out[0][0].len(), N_J);
+    }
+
+    #[test]
+    fn table15_runs_on_tiny_dataset() {
+        let ctx = tiny_ctx();
+        table15(&ctx, Some("OHSU")).unwrap();
+    }
+}

@@ -1,0 +1,118 @@
+//! Experiment harness: regenerates every table and figure of the paper's
+//! evaluation (§5–§6) on the synthetic substrate (DESIGN.md §4 maps each
+//! experiment to its modules).
+//!
+//! Every experiment prints the paper-shaped rows to stdout and writes a CSV
+//! under `results/`.  All runs are deterministic given `--seed`.
+
+pub mod ablation;
+pub mod approx;
+pub mod classification;
+pub mod scalability;
+pub mod visualization;
+pub mod workers;
+
+use std::io::Write;
+use std::path::PathBuf;
+
+use crate::runtime::Runtime;
+use crate::Result;
+
+/// Shared experiment context.
+pub struct Ctx {
+    /// PJRT runtime when artifacts are built; experiments fall back to the
+    /// rust mirrors (and say so) when absent.
+    pub runtime: Option<Runtime>,
+    /// Dataset scale factor (1.0 = paper-sized graph counts).
+    pub scale: f64,
+    /// Massive-network scale factor (1.0 ≈ paper sizes; default much lower).
+    pub massive_scale: f64,
+    pub seed: u64,
+    pub out_dir: PathBuf,
+    pub threads: usize,
+}
+
+impl Ctx {
+    pub fn new(scale: f64, massive_scale: f64, seed: u64) -> Self {
+        let runtime = match Runtime::load_default() {
+            Ok(r) => Some(r),
+            Err(e) => {
+                eprintln!(
+                    "note: PJRT artifacts unavailable ({e}); using rust finalizers \
+                     (run `make artifacts`)"
+                );
+                None
+            }
+        };
+        Ctx {
+            runtime,
+            scale,
+            massive_scale,
+            seed,
+            out_dir: PathBuf::from("results"),
+            threads: 0,
+        }
+    }
+
+    /// Write a CSV file under the results dir.
+    pub fn write_csv(&self, name: &str, header: &str, rows: &[String]) -> Result<()> {
+        std::fs::create_dir_all(&self.out_dir)?;
+        let path = self.out_dir.join(name);
+        let mut f = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        writeln!(f, "{header}")?;
+        for r in rows {
+            writeln!(f, "{r}")?;
+        }
+        println!("  -> wrote {}", path.display());
+        Ok(())
+    }
+}
+
+/// Render an aligned text table.
+pub fn print_table(title: &str, header: &[&str], rows: &[Vec<String>]) {
+    println!("\n== {title} ==");
+    let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate() {
+            if i < widths.len() {
+                widths[i] = widths[i].max(cell.len());
+            }
+        }
+    }
+    let fmt_row = |cells: &[String]| {
+        cells
+            .iter()
+            .enumerate()
+            .map(|(i, c)| format!("{:>w$}", c, w = widths.get(i).copied().unwrap_or(8)))
+            .collect::<Vec<_>>()
+            .join("  ")
+    };
+    println!("{}", fmt_row(&header.iter().map(|s| s.to_string()).collect::<Vec<_>>()));
+    for row in rows {
+        println!("{}", fmt_row(row));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn print_table_does_not_panic() {
+        print_table(
+            "t",
+            &["a", "bb"],
+            &[vec!["1".into(), "2".into()], vec!["333".into(), "4".into()]],
+        );
+    }
+
+    #[test]
+    fn ctx_writes_csv() {
+        let mut ctx = Ctx { runtime: None, scale: 1.0, massive_scale: 1.0, seed: 0, out_dir: PathBuf::new(), threads: 1 };
+        let tmp = crate::util::tmp::TempDir::new("exp").unwrap();
+        ctx.out_dir = tmp.path().to_path_buf();
+        ctx.write_csv("x.csv", "a,b", &["1,2".to_string()]).unwrap();
+        let text = std::fs::read_to_string(tmp.path().join("x.csv")).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+    }
+}

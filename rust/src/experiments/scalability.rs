@@ -1,0 +1,202 @@
+//! Scalability experiments (paper §6.3, Tables 16–17): wall-clock time and
+//! approximation distance on KONECT-like massive networks at absolute
+//! budgets, run through the master/worker coordinator.
+
+use std::time::Instant;
+
+use crate::analyze::{canberra, euclidean};
+use crate::coordinator::{run_pipeline, CoordinatorConfig, DescriptorKind, WorkerEstimate};
+use crate::descriptors::psi::{psi_from_eigenvalues, psi_from_traces, N_J, VARIANT_NAMES};
+use crate::exact;
+use crate::gen::massive::{massive_graph, MassiveKind};
+use crate::graph::csr::Csr;
+use crate::graph::stream::VecStream;
+use crate::linalg::lanczos::{interpolate_spectrum, lanczos_extreme_eigenvalues};
+use crate::linalg::symmetric_eigenvalues;
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+use super::{print_table, Ctx};
+
+/// One network's row: times + distances per descriptor.
+struct Row {
+    name: String,
+    nv: usize,
+    ne: usize,
+    gabe_time: f64,
+    gabe_dist: f64,
+    maeve_time: f64,
+    maeve_dist: f64,
+    santa_time: f64,
+    santa_dist: [f64; 6],
+}
+
+fn run_network(ctx: &Ctx, kind: MassiveKind, budget: usize, workers: usize) -> Row {
+    let g = massive_graph(kind, ctx.massive_scale, ctx.seed);
+    let (nv, ne) = (g.n, g.m());
+    println!("  {} |V|={} |E|={} (paper: |V|={} |E|={})", kind.name(), nv, ne,
+             kind.paper_size().0, kind.paper_size().1);
+    let cfg = CoordinatorConfig {
+        workers,
+        budget,
+        chunk_size: 8192,
+        queue_depth: 8,
+        seed: ctx.seed ^ 0x5ca1e,
+    };
+
+    // exact ("real") embeddings — GABE/MAEVE by the unlimited-budget
+    // streaming pass; SANTA truth via NetLSD's Lanczos-ends spectrum (§6.3).
+    let exact_gabe = exact::gabe_exact(&g).descriptor();
+    let exact_maeve = exact::maeve_exact(&g).descriptor();
+    let csr = Csr::from_graph(&g);
+    let netlsd_psi = if g.n <= 512 {
+        psi_from_eigenvalues(
+            &symmetric_eigenvalues(&csr.normalized_laplacian(), g.n),
+            g.n as f64,
+        )
+    } else {
+        let mut rng = Pcg64::seed_from_u64(ctx.seed ^ 0x2e7);
+        let k = 100.min(g.n / 4).max(8);
+        let (low, high) =
+            lanczos_extreme_eigenvalues(g.n, |x, y| csr.laplacian_matvec(x, y), k, &mut rng);
+        let spec = interpolate_spectrum(&low, &high, g.n);
+        psi_from_eigenvalues(&spec, g.n as f64)
+    };
+
+    // ---- GABE ----
+    let t0 = Instant::now();
+    let mut s = VecStream::shuffled(g.edges.clone(), ctx.seed);
+    let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg);
+    let gabe_time = t0.elapsed().as_secs_f64();
+    let WorkerEstimate::Gabe(est) = &r.averaged else { unreachable!() };
+    let gabe_dist = canberra(&est.descriptor(), &exact_gabe);
+
+    // ---- MAEVE ----
+    let t0 = Instant::now();
+    let mut s = VecStream::shuffled(g.edges.clone(), ctx.seed ^ 1);
+    let r = run_pipeline(&mut s, DescriptorKind::Maeve, &cfg);
+    let maeve_time = t0.elapsed().as_secs_f64();
+    let WorkerEstimate::Maeve(est) = &r.averaged else { unreachable!() };
+    let maeve_dist = canberra(&est.descriptor(), &exact_maeve);
+
+    // ---- SANTA (all variants share one run, as in the paper) ----
+    let t0 = Instant::now();
+    let mut s = VecStream::shuffled(g.edges.clone(), ctx.seed ^ 2);
+    let r = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg);
+    let santa_time = t0.elapsed().as_secs_f64();
+    let WorkerEstimate::Santa(est) = &r.averaged else { unreachable!() };
+    let psi = psi_from_traces(&est.traces, est.nv as f64);
+    let mut santa_dist = [0.0; 6];
+    for v in 0..6 {
+        santa_dist[v] = euclidean(&psi[v], &netlsd_psi[v]);
+    }
+
+    Row {
+        name: kind.name().to_string(),
+        nv,
+        ne,
+        gabe_time,
+        gabe_dist,
+        maeve_time,
+        maeve_dist,
+        santa_time,
+        santa_dist,
+    }
+}
+
+/// Tables 16 (b = 100k) and 17 (b = 500k). Budgets scale with
+/// `massive_scale` so the sample:graph ratio matches the paper's.
+pub fn table(ctx: &Ctx, b_paper: usize, workers: usize, only: Option<MassiveKind>) -> Result<()> {
+    let budget = ((b_paper as f64 * ctx.massive_scale).ceil() as usize).max(1000);
+    println!(
+        "Table {}: massive networks at paper-b={} (scaled b={}), {} workers, scale {}",
+        if b_paper == 100_000 { "16" } else { "17" },
+        b_paper,
+        budget,
+        workers,
+        ctx.massive_scale
+    );
+    let kinds: Vec<MassiveKind> = MassiveKind::ALL
+        .into_iter()
+        .filter(|k| only.map(|o| o == *k).unwrap_or(true))
+        .collect();
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for kind in kinds {
+        let r = run_network(ctx, kind, budget, workers);
+        rows.push(vec![
+            r.name.clone(),
+            format!("{}", r.nv),
+            format!("{}", r.ne),
+            format!("{:.2}", r.gabe_time / 60.0),
+            format!("{:.2}", r.gabe_dist),
+            format!("{:.2}", r.maeve_time / 60.0),
+            format!("{:.2}", r.maeve_dist),
+            format!("{:.2}", r.santa_time / 60.0),
+            format!("{:.2}", r.santa_dist[0]),
+            format!("{:.2}", r.santa_dist[2]),
+            format!("{:.2}", r.santa_dist[5]),
+        ]);
+        csv.push(format!(
+            "{},{},{},{},{},{},{},{},{}",
+            r.name,
+            r.nv,
+            r.ne,
+            r.gabe_time,
+            r.gabe_dist,
+            r.maeve_time,
+            r.maeve_dist,
+            r.santa_time,
+            r.santa_dist
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        ));
+    }
+    print_table(
+        "Tables 16/17 — time [min] and distance per descriptor",
+        &[
+            "net", "|V|", "|E|", "GABE t", "GABE d", "MAEVE t", "MAEVE d", "SANTA t",
+            "d(HN)", "d(HC)", "d(WC)",
+        ],
+        &rows,
+    );
+    let name = if b_paper == 100_000 { "table16_b100k.csv" } else { "table17_b500k.csv" };
+    ctx.write_csv(
+        name,
+        &format!(
+            "net,nv,ne,gabe_s,gabe_dist,maeve_s,maeve_dist,santa_s,{}",
+            VARIANT_NAMES
+                .iter()
+                .map(|v| format!("d_{v}"))
+                .collect::<Vec<_>>()
+                .join(",")
+        ),
+        &csv,
+    )?;
+    let _ = N_J;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn tiny_network_row_is_sane() {
+        let ctx = Ctx {
+            runtime: None,
+            scale: 1.0,
+            massive_scale: 0.002,
+            seed: 1,
+            out_dir: PathBuf::from(std::env::temp_dir().join("sd-scal-test")),
+            threads: 1,
+        };
+        let r = run_network(&ctx, MassiveKind::Fo, 2_000, 2);
+        assert!(r.ne > 50);
+        assert!(r.gabe_time >= 0.0 && r.gabe_dist.is_finite());
+        assert!(r.santa_dist.iter().all(|d| d.is_finite()));
+    }
+}

@@ -1,0 +1,87 @@
+//! Fig. 3 (paper §5.4): t-SNE projections of the descriptors on a DD-like
+//! dataset, written as CSV scatter data (x, y, label) per descriptor.
+
+use crate::analyze::tsne::{tsne, TsneConfig};
+use crate::descriptors::netlsd::NetLsd;
+use crate::descriptors::psi::psi_from_traces;
+use crate::descriptors::santa::SantaEstimator;
+use crate::descriptors::{gabe::GabeEstimator, maeve::MaeveEstimator};
+use crate::gen::datasets::make_dataset;
+use crate::graph::stream::VecStream;
+use crate::util::par::par_map;
+use crate::Result;
+
+use super::Ctx;
+
+/// Run t-SNE for each descriptor at ¼ and ½ budgets plus NetLSD, write CSVs.
+pub fn fig3(ctx: &Ctx) -> Result<()> {
+    let ds = make_dataset("DD", ctx.scale.min(0.3), ctx.seed);
+    println!("Fig 3: t-SNE on DD-like dataset ({} graphs)", ds.len());
+    let tsne_cfg = TsneConfig { iterations: 300, seed: ctx.seed, ..Default::default() };
+
+    let emit = |name: &str, descs: &[Vec<f64>]| -> Result<()> {
+        let y = tsne(descs, &tsne_cfg);
+        let rows: Vec<String> = y
+            .iter()
+            .zip(&ds.labels)
+            .map(|(p, l)| format!("{},{},{}", p[0], p[1], l))
+            .collect();
+        ctx.write_csv(&format!("fig3_tsne_{name}.csv"), "x,y,label", &rows)
+    };
+
+    let seed0 = ctx.seed;
+    for frac in [0.25, 0.5] {
+        let tag = if frac == 0.25 { "q" } else { "h" };
+        let gabe = par_map(&ds.graphs, ctx.threads, |gi, g| {
+            let b = ((g.m() as f64 * frac).ceil() as usize).max(2);
+            let seed = seed0 ^ (gi as u64) << 2;
+            let mut s = VecStream::shuffled(g.edges.clone(), seed);
+            GabeEstimator::new(b).with_seed(seed).run(&mut s).descriptor().to_vec()
+        });
+        emit(&format!("gabe_{tag}"), &gabe)?;
+        let maeve = par_map(&ds.graphs, ctx.threads, |gi, g| {
+            let b = ((g.m() as f64 * frac).ceil() as usize).max(2);
+            let seed = seed0 ^ (gi as u64) << 2 ^ 1;
+            let mut s = VecStream::shuffled(g.edges.clone(), seed);
+            MaeveEstimator::new(b).with_seed(seed).run(&mut s).descriptor().to_vec()
+        });
+        emit(&format!("maeve_{tag}"), &maeve)?;
+        let santa = par_map(&ds.graphs, ctx.threads, |gi, g| {
+            let b = ((g.m() as f64 * frac).ceil() as usize).max(2);
+            let seed = seed0 ^ (gi as u64) << 2 ^ 2;
+            let mut s = VecStream::shuffled(g.edges.clone(), seed);
+            let est = SantaEstimator::new(b).with_seed(seed).run(&mut s);
+            psi_from_traces(&est.traces, est.nv as f64)[2].to_vec() // HC
+        });
+        emit(&format!("santa_hc_{tag}"), &santa)?;
+    }
+    let engine = NetLsd { dense_cutoff: 512, k_ends: 100 };
+    let netlsd = par_map(&ds.graphs, ctx.threads, |gi, g| {
+        engine.descriptor(g, seed0 ^ gi as u64)[2].to_vec()
+    });
+    emit("netlsd_hc", &netlsd)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    #[test]
+    fn fig3_tiny_run_writes_csvs() {
+        let tmp = crate::util::tmp::TempDir::new("fig3").unwrap();
+        let ctx = Ctx {
+            runtime: None,
+            scale: 0.01,
+            massive_scale: 0.01,
+            seed: 2,
+            out_dir: tmp.path().to_path_buf(),
+            threads: 0,
+        };
+        fig3(&ctx).unwrap();
+        assert!(tmp.path().join("fig3_tsne_gabe_q.csv").exists());
+        assert!(tmp.path().join("fig3_tsne_netlsd_hc.csv").exists());
+        let _ = PathBuf::new();
+    }
+}

@@ -1,0 +1,96 @@
+//! §3.4 experiment: averaging W independent workers cuts the estimator
+//! variance ≈ 1/W (Tri-Fly's claim, which our coordinator inherits).
+
+use crate::coordinator::{run_pipeline, CoordinatorConfig, DescriptorKind, WorkerEstimate};
+use crate::count::idx;
+use crate::exact;
+use crate::gen;
+use crate::graph::stream::VecStream;
+use crate::util::par::par_map;
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+use super::{print_table, Ctx};
+
+/// Variance of the averaged triangle estimate vs number of workers.
+pub fn workers(ctx: &Ctx) -> Result<()> {
+    let mut rng = Pcg64::seed_from_u64(ctx.seed ^ 0x3a4);
+    let g = gen::powerlaw_cluster_graph(
+        ((3000.0 * ctx.scale).ceil() as usize).clamp(300, 20_000),
+        4,
+        0.5,
+        &mut rng,
+    );
+    let truth = exact::gabe_exact(&g).counts[idx::TRIANGLE];
+    let b = g.m() / 4;
+    let trials: Vec<u64> = (0..24).collect();
+    println!(
+        "Workers: variance vs W on |V|={} |E|={} (b=|E|/4, {} trials/W)",
+        g.n,
+        g.m(),
+        trials.len()
+    );
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    let mut var1 = None;
+    for w in [1usize, 2, 4, 8, 16, 24] {
+        let seed0 = ctx.seed;
+        let vals = par_map(&trials, ctx.threads, |_, &trial| {
+            let cfg = CoordinatorConfig {
+                workers: w,
+                budget: b,
+                chunk_size: 4096,
+                queue_depth: 8,
+                seed: seed0 ^ trial << 6 ^ (w as u64) << 40,
+            };
+            let mut s = VecStream::shuffled(g.edges.clone(), trial);
+            let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg);
+            let WorkerEstimate::Gabe(e) = r.averaged else { unreachable!() };
+            e.counts[idx::TRIANGLE]
+        });
+        let mean = vals.iter().sum::<f64>() / vals.len() as f64;
+        let var =
+            vals.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / vals.len() as f64;
+        if w == 1 {
+            var1 = Some(var);
+        }
+        let ratio = var / var1.unwrap();
+        rows.push(vec![
+            w.to_string(),
+            format!("{mean:.1}"),
+            format!("{:.4}", (mean - truth).abs() / truth),
+            format!("{var:.1}"),
+            format!("{ratio:.3}"),
+            format!("{:.3}", 1.0 / w as f64),
+        ]);
+        csv.push(format!("{w},{mean},{var},{ratio}"));
+    }
+    print_table(
+        &format!("§3.4 — worker averaging (true triangles = {truth:.0})"),
+        &["W", "mean", "rel.bias", "variance", "var/var(1)", "1/W"],
+        &rows,
+    );
+    ctx.write_csv("workers_variance.csv", "workers,mean,variance,ratio", &csv)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workers_tiny_run() {
+        let tmp = crate::util::tmp::TempDir::new("wk").unwrap();
+        let ctx = Ctx {
+            runtime: None,
+            scale: 0.1,
+            massive_scale: 0.01,
+            seed: 5,
+            out_dir: tmp.path().to_path_buf(),
+            threads: 0,
+        };
+        workers(&ctx).unwrap();
+        assert!(tmp.path().join("workers_variance.csv").exists());
+    }
+}

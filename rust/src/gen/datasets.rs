@@ -1,0 +1,177 @@
+//! Class-structured classification datasets standing in for the paper's
+//! TUDataset benchmarks (Table 12).
+//!
+//! Each dataset is a list of `(Graph, label)` pairs whose classes come from
+//! *distinct generator families / parameter bands*, giving the k-NN
+//! classifier genuine structure to find (DESIGN.md §3).  Graph counts and
+//! order/size bands mirror Table 12, scaled by `scale` so CI runs stay
+//! cheap (`scale = 1.0` reproduces the paper's magnitudes).
+
+use crate::util::rng::Pcg64;
+
+use super::{ba_graph, community_graph, er_graph, powerlaw_cluster_graph, ws_graph};
+use crate::graph::Graph;
+
+/// A labelled classification dataset.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub graphs: Vec<Graph>,
+    pub labels: Vec<usize>,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn len(&self) -> usize {
+        self.graphs.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.graphs.is_empty()
+    }
+    pub fn max_order(&self) -> usize {
+        self.graphs.iter().map(|g| g.n).max().unwrap_or(0)
+    }
+    pub fn max_size(&self) -> usize {
+        self.graphs.iter().map(|g| g.m()).max().unwrap_or(0)
+    }
+}
+
+/// Table 12 stand-in specs: (name, #graphs, #classes).
+pub const SPECS: [(&str, usize, usize); 8] = [
+    ("FMM", 41, 11),
+    ("OHSU", 79, 2),
+    ("DD", 1178, 2),
+    ("RDT2", 2000, 2),
+    ("RDT5", 4999, 5),
+    ("CLB", 5000, 3),
+    ("RDT12", 11929, 11),
+    ("GHUB", 12725, 2),
+];
+
+/// Generate one graph for (dataset, class) with per-class parameter bands.
+fn class_graph(name: &str, class: usize, rng: &mut Pcg64) -> Graph {
+    match name {
+        // protein-like (DD): medium sparse graphs; classes differ in
+        // clustering (lattice-ish vs random).
+        "DD" => {
+            let n = rng.gen_range_usize(60, 800);
+            if class == 0 {
+                ws_graph(n.max(12), 6, 0.15, rng)
+            } else {
+                er_graph(n.max(12), (n as f64 * 2.4) as usize, rng)
+            }
+        }
+        // reddit-binary-like: sparse trees-with-hubs; classes differ in
+        // hub dominance (Q&A threads vs discussions).
+        "RDT2" => {
+            let n = rng.gen_range_usize(80, 2500);
+            let m = if class == 0 { 1 } else { 2 };
+            ba_graph(n.max(8), m, rng)
+        }
+        // reddit-5/12: star-vs-community mixtures per class band.
+        "RDT5" | "RDT12" => {
+            let n = rng.gen_range_usize(100, 2200);
+            let k = 2 + class % 4;
+            let din = 1.0 + 0.5 * (class as f64 / 2.0);
+            let m_in = (n as f64 * din) as usize;
+            community_graph(n.max(4 * k), k, m_in, m_in / 8 + 1, rng)
+        }
+        // collab-like (CLB): dense ego-networks; classes = density bands.
+        "CLB" => {
+            let n = rng.gen_range_usize(40, 400);
+            let m = [4usize, 8, 16][class % 3].min(n / 2 - 1).max(1);
+            powerlaw_cluster_graph(n.max(2 * m + 2), m, 0.7, rng)
+        }
+        // brain-network-like (OHSU): small, two density regimes.
+        "OHSU" => {
+            let n = rng.gen_range_usize(30, 170);
+            let dens = if class == 0 { 2.0 } else { 3.2 };
+            er_graph(n, (n as f64 * dens) as usize, rng)
+        }
+        // github-stargazer-like: bipartite-ish sparse vs clustered.
+        "GHUB" => {
+            let n = rng.gen_range_usize(40, 950);
+            if class == 0 {
+                ba_graph(n.max(6), 1, rng)
+            } else {
+                powerlaw_cluster_graph(n.max(8), 2, 0.5, rng)
+            }
+        }
+        // robot-motion-like (FMM): 11 classes, tiny set; vary family+params.
+        "FMM" => {
+            let n = rng.gen_range_usize(200, 4000);
+            match class % 4 {
+                0 => ws_graph(n.max(12), 4 + 2 * (class / 4), 0.1, rng),
+                1 => ba_graph(n.max(8), 1 + class / 4, rng),
+                2 => er_graph(n, n * (2 + class / 4), rng),
+                _ => powerlaw_cluster_graph(n.max(10), 2 + class / 4, 0.4, rng),
+            }
+        }
+        other => panic!("unknown dataset {other}"),
+    }
+}
+
+/// Build a Table 12 stand-in dataset. `scale ∈ (0, 1]` shrinks the graph
+/// *count* (class balance preserved); graph sizes are unaffected.
+pub fn make_dataset(name: &str, scale: f64, seed: u64) -> Dataset {
+    let (_, total, n_classes) = SPECS
+        .iter()
+        .find(|(n, _, _)| *n == name)
+        .copied()
+        .unwrap_or_else(|| panic!("unknown dataset {name}"));
+    let count = ((total as f64 * scale).round() as usize).max(n_classes * 4);
+    let mut rng = Pcg64::seed_from_u64(seed ^ 0x5eed_d474);
+    let mut graphs = Vec::with_capacity(count);
+    let mut labels = Vec::with_capacity(count);
+    for i in 0..count {
+        let class = i % n_classes;
+        graphs.push(class_graph(name, class, &mut rng));
+        labels.push(class);
+    }
+    Dataset { name: name.to_string(), graphs, labels, n_classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_specs_generate() {
+        for (name, _, classes) in SPECS {
+            let d = make_dataset(name, 0.02, 7);
+            assert!(d.len() >= classes * 4, "{name}");
+            assert_eq!(d.n_classes, classes);
+            assert!(d.graphs.iter().all(|g| g.m() > 0), "{name}");
+            // labels cover all classes
+            let mut seen = vec![false; classes];
+            for &l in &d.labels {
+                seen[l] = true;
+            }
+            assert!(seen.iter().all(|&s| s), "{name}");
+        }
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = make_dataset("OHSU", 0.5, 3);
+        let b = make_dataset("OHSU", 0.5, 3);
+        assert_eq!(a.graphs[0].edges, b.graphs[0].edges);
+        let c = make_dataset("OHSU", 0.5, 4);
+        assert_ne!(a.graphs[0].edges, c.graphs[0].edges);
+    }
+
+    #[test]
+    fn dd_classes_differ_in_clustering() {
+        use crate::graph::csr::Csr;
+        let d = make_dataset("DD", 0.05, 11);
+        let mut tri = [0.0f64; 2];
+        let mut cnt = [0usize; 2];
+        for (g, &l) in d.graphs.iter().zip(&d.labels) {
+            tri[l] += Csr::from_graph(g).triangle_count() as f64 / g.n as f64;
+            cnt[l] += 1;
+        }
+        let a = tri[0] / cnt[0] as f64;
+        let b = tri[1] / cnt[1] as f64;
+        assert!(a > b * 1.5, "WS class should have far more triangles: {a} vs {b}");
+    }
+}

@@ -1,0 +1,132 @@
+//! KONECT-like massive networks (paper Table 13, §6.3 scalability runs).
+//!
+//! Type-matched synthetic stand-ins for the seven KONECT graphs; `scale`
+//! multiplies the default sizes (which are reduced from the paper's so the
+//! harness finishes on one machine — the *shape* of Tables 16/17 is what we
+//! reproduce).
+
+use crate::util::rng::Pcg64;
+
+use super::{ba_graph, community_graph, powerlaw_cluster_graph, road_graph};
+use crate::graph::Graph;
+
+/// The seven network types of Table 13.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MassiveKind {
+    /// Florida road network (road: grid-like, tiny degree).
+    Fo,
+    /// USA road network (road, larger).
+    Us,
+    /// CiteSeer citations (citation: BA-like).
+    Cs,
+    /// Patent citations (citation, larger).
+    Pt,
+    /// Flickr friendships (social: heavy tail + clustering).
+    Fl,
+    /// Stanford hyperlinks (hyperlink: dense communities).
+    Sf,
+    /// UK-2002 hyperlinks (hyperlink, largest).
+    U2,
+}
+
+impl MassiveKind {
+    pub const ALL: [MassiveKind; 7] = [
+        MassiveKind::Fo,
+        MassiveKind::Us,
+        MassiveKind::Cs,
+        MassiveKind::Pt,
+        MassiveKind::Fl,
+        MassiveKind::Sf,
+        MassiveKind::U2,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MassiveKind::Fo => "FO",
+            MassiveKind::Us => "US",
+            MassiveKind::Cs => "CS",
+            MassiveKind::Pt => "PT",
+            MassiveKind::Fl => "FL",
+            MassiveKind::Sf => "SF",
+            MassiveKind::U2 => "U2",
+        }
+    }
+
+    /// Paper-reported |V|, |E| (Table 13) — for the scale-factor note in
+    /// experiment output.
+    pub fn paper_size(&self) -> (u64, u64) {
+        match self {
+            MassiveKind::Fo => (1_070_376, 1_343_951),
+            MassiveKind::Us => (23_947_347, 28_854_312),
+            MassiveKind::Cs => (384_054, 1_736_145),
+            MassiveKind::Pt => (3_774_768, 16_518_937),
+            MassiveKind::Fl => (2_302_925, 22_838_276),
+            MassiveKind::Sf => (281_903, 1_992_636),
+            MassiveKind::U2 => (18_483_186, 261_787_258),
+        }
+    }
+}
+
+impl std::str::FromStr for MassiveKind {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        MassiveKind::ALL
+            .iter()
+            .find(|k| k.name().eq_ignore_ascii_case(s))
+            .copied()
+            .ok_or_else(|| format!("unknown network {s} (want FO/US/CS/PT/FL/SF/U2)"))
+    }
+}
+
+/// Generate the stand-in network. Default sizes are ~1/10 of the paper's
+/// (U2 ~1/40) so the full Table 16/17 harness completes locally.
+pub fn massive_graph(kind: MassiveKind, scale: f64, seed: u64) -> Graph {
+    let mut rng = Pcg64::seed_from_u64(seed ^ (kind as u64) << 32);
+    let s = scale.max(1e-3);
+    match kind {
+        MassiveKind::Fo => road_graph(((330.0 * s.sqrt()) as usize).max(10), &mut rng),
+        MassiveKind::Us => road_graph(((1550.0 * s.sqrt()) as usize).max(10), &mut rng),
+        MassiveKind::Cs => ba_graph(((40_000.0 * s) as usize).max(16), 4, &mut rng),
+        MassiveKind::Pt => ba_graph(((380_000.0 * s) as usize).max(16), 4, &mut rng),
+        MassiveKind::Fl => {
+            powerlaw_cluster_graph(((230_000.0 * s) as usize).max(20), 9, 0.35, &mut rng)
+        }
+        MassiveKind::Sf => {
+            let n = ((28_000.0 * s) as usize).max(40);
+            community_graph(n, (n / 2000).max(2), n * 6, n, &mut rng)
+        }
+        MassiveKind::U2 => {
+            let n = ((450_000.0 * s) as usize).max(40);
+            community_graph(n, (n / 10_000).max(2), n * 12, n, &mut rng)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_kinds_generate_small() {
+        for kind in MassiveKind::ALL {
+            let g = massive_graph(kind, 0.01, 1);
+            assert!(g.m() > 50, "{:?}: m = {}", kind, g.m());
+        }
+    }
+
+    #[test]
+    fn road_vs_social_density() {
+        let road = massive_graph(MassiveKind::Fo, 0.05, 2);
+        let social = massive_graph(MassiveKind::Fl, 0.05, 2);
+        assert!(road.avg_degree() < 5.0);
+        assert!(social.avg_degree() > 8.0);
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = massive_graph(MassiveKind::Cs, 0.01, 5);
+        let b = massive_graph(MassiveKind::Cs, 0.01, 5);
+        assert_eq!(a.edges.len(), b.edges.len());
+        assert_eq!(a.edges[..10], b.edges[..10]);
+    }
+}

@@ -1,0 +1,329 @@
+//! Synthetic graph substrate (DESIGN.md §3 substitutions).
+//!
+//! The paper evaluates on REDDIT samples, eight TUDataset collections and
+//! seven KONECT networks — none redistributable here.  This module builds
+//! type-matched synthetic equivalents: random-graph families whose degree
+//! shape, density and community structure exercise the same code paths and
+//! preserve the experiments' qualitative behaviour (error ↓ with budget ↑,
+//! class separability, wall-clock scaling).
+//!
+//! All generators are deterministic given the seed (Pcg64).
+
+pub mod datasets;
+pub mod massive;
+
+use std::collections::HashSet;
+
+use crate::util::rng::Pcg64;
+
+use crate::graph::{Edge, Graph, VertexId};
+
+/// Erdős–Rényi `G(n, m)`: `m` distinct uniform non-loop edges.
+pub fn er_graph(n: usize, m: usize, rng: &mut Pcg64) -> Graph {
+    assert!(n >= 2);
+    let max_m = n * (n - 1) / 2;
+    let m = m.min(max_m);
+    let mut seen = HashSet::with_capacity(m * 2);
+    let mut edges = Vec::with_capacity(m);
+    while edges.len() < m {
+        let a = rng.gen_range_u32(0, n as VertexId);
+        let b = rng.gen_range_u32(0, n as VertexId);
+        if a == b {
+            continue;
+        }
+        let e = Edge::new(a, b);
+        if seen.insert(e) {
+            edges.push(e);
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Barabási–Albert preferential attachment: each new vertex attaches to
+/// `m_attach` existing vertices chosen ∝ degree (repeated-endpoint trick).
+pub fn ba_graph(n: usize, m_attach: usize, rng: &mut Pcg64) -> Graph {
+    assert!(n > m_attach && m_attach >= 1);
+    let mut endpoints: Vec<VertexId> = Vec::with_capacity(2 * n * m_attach);
+    let mut edges: Vec<Edge> = Vec::with_capacity(n * m_attach);
+    // seed clique-ish core
+    for v in 1..=m_attach as VertexId {
+        edges.push(Edge::new(0, v));
+        endpoints.extend([0, v]);
+    }
+    for v in (m_attach + 1) as VertexId..n as VertexId {
+        let mut targets: Vec<VertexId> = Vec::with_capacity(m_attach);
+        while targets.len() < m_attach {
+            let t = endpoints[rng.gen_range_usize(0, endpoints.len())];
+            if t != v && !targets.contains(&t) {
+                targets.push(t);
+            }
+        }
+        for t in targets {
+            edges.push(Edge::new(v, t));
+            endpoints.extend([v, t]);
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Watts–Strogatz small world: ring of degree `k` (even), rewired w.p. `beta`.
+pub fn ws_graph(n: usize, k: usize, beta: f64, rng: &mut Pcg64) -> Graph {
+    assert!(k % 2 == 0 && k < n && n >= 4);
+    let mut seen: HashSet<Edge> = HashSet::new();
+    let mut ring: Vec<Edge> = Vec::with_capacity(n * k / 2);
+    for v in 0..n {
+        for d in 1..=k / 2 {
+            let e = Edge::new(v as VertexId, ((v + d) % n) as VertexId);
+            if seen.insert(e) {
+                ring.push(e);
+            }
+        }
+    }
+    for e in ring {
+        if rng.gen_bool(beta) {
+            // rewire the far endpoint
+            for _ in 0..16 {
+                let w = rng.gen_range_u32(0, n as VertexId);
+                if w != e.u && w != e.v {
+                    let ne = Edge::new(e.u, w);
+                    if !seen.contains(&ne) {
+                        seen.remove(&e);
+                        seen.insert(ne);
+                        break;
+                    }
+                }
+            }
+        }
+    }
+    Graph::from_edges(n, seen.into_iter().collect())
+}
+
+/// Holme–Kim power-law cluster graph: BA with triad-closure probability `p`.
+/// Produces the heavy-tailed, high-clustering graphs social datasets show.
+pub fn powerlaw_cluster_graph(
+    n: usize,
+    m_attach: usize,
+    p: f64,
+    rng: &mut Pcg64,
+) -> Graph {
+    assert!(n > m_attach && m_attach >= 1);
+    let mut endpoints: Vec<VertexId> = Vec::new();
+    let mut edges: HashSet<Edge> = HashSet::new();
+    let mut nbrs: Vec<Vec<VertexId>> = vec![Vec::new(); n];
+    for v in 1..=m_attach as VertexId {
+        edges.insert(Edge::new(0, v));
+        endpoints.extend([0, v]);
+        nbrs[0].push(v);
+        nbrs[v as usize].push(0);
+    }
+    for v in (m_attach + 1) as VertexId..n as VertexId {
+        let mut added: Vec<VertexId> = Vec::with_capacity(m_attach);
+        while added.len() < m_attach {
+            let candidate = if !added.is_empty() && rng.gen_bool(p) {
+                // triad closure: neighbor of a previously-linked vertex
+                let anchor = added[rng.gen_range_usize(0, added.len())];
+                let anbrs = &nbrs[anchor as usize];
+                anbrs[rng.gen_range_usize(0, anbrs.len())]
+            } else {
+                endpoints[rng.gen_range_usize(0, endpoints.len())]
+            };
+            if candidate == v || added.contains(&candidate) {
+                continue;
+            }
+            let e = Edge::new(v, candidate);
+            if edges.insert(e) {
+                added.push(candidate);
+                endpoints.extend([v, candidate]);
+                nbrs[v as usize].push(candidate);
+                nbrs[candidate as usize].push(v);
+            }
+        }
+    }
+    Graph::from_edges(n, edges.into_iter().collect())
+}
+
+/// Planted-partition community graph: `k` equal communities, `m_in` edges
+/// inside communities, `m_out` across — REDDIT-thread-like structure.
+pub fn community_graph(
+    n: usize,
+    k: usize,
+    m_in: usize,
+    m_out: usize,
+    rng: &mut Pcg64,
+) -> Graph {
+    assert!(k >= 1 && n >= 2 * k);
+    let csize = n / k;
+    let mut seen = HashSet::with_capacity((m_in + m_out) * 2);
+    let mut edges = Vec::with_capacity(m_in + m_out);
+    let mut tries = 0usize;
+    while edges.len() < m_in && tries < m_in * 50 {
+        tries += 1;
+        let c = rng.gen_range_usize(0, k);
+        let base = (c * csize) as VertexId;
+        let hi = if c == k - 1 { n } else { (c + 1) * csize } as VertexId;
+        let a = rng.gen_range_u32(base, hi);
+        let b = rng.gen_range_u32(base, hi);
+        if a == b {
+            continue;
+        }
+        let e = Edge::new(a, b);
+        if seen.insert(e) {
+            edges.push(e);
+        }
+    }
+    tries = 0;
+    let target = edges.len() + m_out;
+    while edges.len() < target && tries < m_out * 50 {
+        tries += 1;
+        let a = rng.gen_range_u32(0, n as VertexId);
+        let b = rng.gen_range_u32(0, n as VertexId);
+        if a == b || (a as usize / csize).min(k - 1) == (b as usize / csize).min(k - 1)
+        {
+            continue;
+        }
+        let e = Edge::new(a, b);
+        if seen.insert(e) {
+            edges.push(e);
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// Road-network-like graph: 2D grid with Poisson-perturbed deletions and a
+/// few diagonal shortcuts (low, near-constant degree; huge diameter).
+pub fn road_graph(side: usize, rng: &mut Pcg64) -> Graph {
+    let n = side * side;
+    let id = |r: usize, c: usize| (r * side + c) as VertexId;
+    let mut edges = Vec::with_capacity(2 * n);
+    for r in 0..side {
+        for c in 0..side {
+            if c + 1 < side && rng.gen_bool(0.95) {
+                edges.push(Edge::new(id(r, c), id(r, c + 1)));
+            }
+            if r + 1 < side && rng.gen_bool(0.95) {
+                edges.push(Edge::new(id(r, c), id(r + 1, c)));
+            }
+            if r + 1 < side && c + 1 < side && rng.gen_bool(0.03) {
+                edges.push(Edge::new(id(r, c), id(r + 1, c + 1)));
+            }
+        }
+    }
+    Graph::from_edges(n, edges)
+}
+
+/// REDDIT-like interaction graph (paper §6.1): community structure over a
+/// heavy-tailed degree profile, sized to land in the paper's 10k–50k-edge
+/// band.
+pub fn reddit_like(rng: &mut Pcg64) -> Graph {
+    let m_target = rng.gen_range_usize(10_000, 50_001);
+    let n = (m_target as f64 / rng.gen_range_f64(1.8, 3.2)) as usize;
+    let k = rng.gen_range_usize(4, 12);
+    let m_in = (m_target as f64 * 0.8) as usize;
+    let m_out = m_target - m_in;
+    let base = community_graph(n.max(2 * k), k, m_in, m_out, rng);
+    // splice in a few hubs (poisson bursts) for the heavy tail
+    let mut edges = base.edges;
+    let hubs = rng.gen_range_usize(3, 10);
+    let lambda = (m_target as f64 * 0.01).max(2.0);
+    let mut seen: HashSet<Edge> = edges.iter().copied().collect();
+    for _ in 0..hubs {
+        let h = rng.gen_range_u32(0, base.n as VertexId);
+        let burst = rng.poisson(lambda) as usize;
+        for _ in 0..burst {
+            let t = rng.gen_range_u32(0, base.n as VertexId);
+            if t != h {
+                let e = Edge::new(h, t);
+                if seen.insert(e) {
+                    edges.push(e);
+                }
+            }
+        }
+    }
+    Graph::from_edges(base.n, edges)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn rng(seed: u64) -> Pcg64 {
+        Pcg64::seed_from_u64(seed)
+    }
+
+    #[test]
+    fn er_exact_edge_count_and_simple() {
+        let g = er_graph(100, 300, &mut rng(1));
+        assert_eq!(g.m(), 300);
+        assert_eq!(g.n, 100);
+        let mut e = g.edges.clone();
+        e.sort_unstable();
+        e.dedup();
+        assert_eq!(e.len(), 300);
+    }
+
+    #[test]
+    fn er_caps_at_complete_graph() {
+        let g = er_graph(5, 100, &mut rng(2));
+        assert_eq!(g.m(), 10);
+    }
+
+    #[test]
+    fn ba_size_and_heavy_tail() {
+        let g = ba_graph(2000, 3, &mut rng(3));
+        assert_eq!(g.m(), 3 + (2000 - 4) * 3);
+        let deg = g.degrees();
+        let dmax = *deg.iter().max().unwrap();
+        assert!(dmax > 30, "BA should grow hubs, max degree {dmax}");
+    }
+
+    #[test]
+    fn ws_keeps_edge_count_close() {
+        let g = ws_graph(500, 6, 0.1, &mut rng(4));
+        assert!(g.m() >= 1400 && g.m() <= 1500, "m = {}", g.m());
+    }
+
+    #[test]
+    fn powerlaw_cluster_has_more_triangles_than_ba() {
+        use crate::graph::csr::Csr;
+        let hk = powerlaw_cluster_graph(1500, 3, 0.8, &mut rng(5));
+        let ba = ba_graph(1500, 3, &mut rng(5));
+        let t_hk = Csr::from_graph(&hk).triangle_count();
+        let t_ba = Csr::from_graph(&ba).triangle_count();
+        assert!(t_hk > t_ba, "triad closure: {t_hk} vs {t_ba}");
+    }
+
+    #[test]
+    fn community_graph_is_modular() {
+        let g = community_graph(1000, 5, 4000, 400, &mut rng(6));
+        let within = g
+            .edges
+            .iter()
+            .filter(|e| (e.u as usize / 200) == (e.v as usize / 200))
+            .count();
+        assert!(within as f64 / g.m() as f64 > 0.8);
+    }
+
+    #[test]
+    fn road_graph_low_degree() {
+        let g = road_graph(50, &mut rng(7));
+        let deg = g.degrees();
+        assert!(*deg.iter().max().unwrap() <= 8);
+        assert!(g.avg_degree() > 2.0 && g.avg_degree() < 5.0);
+    }
+
+    #[test]
+    fn reddit_like_in_band() {
+        for seed in 0..5 {
+            let g = reddit_like(&mut rng(100 + seed));
+            assert!(g.m() >= 9_000 && g.m() <= 60_000, "m = {}", g.m());
+        }
+    }
+
+    #[test]
+    fn generators_are_deterministic() {
+        let a = ba_graph(300, 2, &mut rng(42));
+        let b = ba_graph(300, 2, &mut rng(42));
+        assert_eq!(a.edges, b.edges);
+    }
+}

@@ -1,0 +1,191 @@
+//! The budget-bounded sample graph `G'` (paper §4.1.2).
+//!
+//! Holds the reservoir's edges as sorted adjacency vectors, giving
+//! `O(log b)` adjacency checks and linear-time sorted intersections — the
+//! exact data structure the paper's complexity analysis assumes ("the list
+//! of neighbors for each vertex is stored in a sorted, tree-like
+//! structure").  Vectors beat trees here: neighborhoods are tiny (≤ b
+//! entries overall) and insertion cost `O(d)` is dominated by the log-factor
+//! lookups during enumeration.
+
+use super::VertexId;
+
+/// Sorted-adjacency dynamic graph over the sampled edges.
+#[derive(Debug, Clone, Default)]
+pub struct SampleGraph {
+    adj: Vec<Vec<VertexId>>,
+    m: usize,
+}
+
+impl SampleGraph {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Pre-allocate for an expected order (vertex count grows on demand).
+    pub fn with_capacity(n: usize) -> Self {
+        SampleGraph { adj: Vec::with_capacity(n), m: 0 }
+    }
+
+    #[inline]
+    fn ensure(&mut self, v: VertexId) {
+        if self.adj.len() <= v as usize {
+            self.adj.resize(v as usize + 1, Vec::new());
+        }
+    }
+
+    /// Insert an edge; returns false if it was already present.
+    pub fn insert(&mut self, u: VertexId, v: VertexId) -> bool {
+        debug_assert_ne!(u, v);
+        self.ensure(u.max(v));
+        let lu = &mut self.adj[u as usize];
+        match lu.binary_search(&v) {
+            Ok(_) => return false,
+            Err(pos) => lu.insert(pos, v),
+        }
+        let lv = &mut self.adj[v as usize];
+        let pos = lv.binary_search(&u).unwrap_err();
+        lv.insert(pos, u);
+        self.m += 1;
+        true
+    }
+
+    /// Remove an edge; returns false if it was absent.
+    pub fn remove(&mut self, u: VertexId, v: VertexId) -> bool {
+        if self.adj.len() <= u.max(v) as usize {
+            return false;
+        }
+        let lu = &mut self.adj[u as usize];
+        match lu.binary_search(&v) {
+            Ok(pos) => lu.remove(pos),
+            Err(_) => return false,
+        };
+        let lv = &mut self.adj[v as usize];
+        if let Ok(pos) = lv.binary_search(&u) {
+            lv.remove(pos);
+        }
+        self.m -= 1;
+        true
+    }
+
+    /// Sorted neighbors of `v` in the sample.
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        self.adj
+            .get(v as usize)
+            .map(Vec::as_slice)
+            .unwrap_or(&[])
+    }
+
+    /// Sample degree of `v`.
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.neighbors(v).len()
+    }
+
+    /// `O(log b)` adjacency check.
+    #[inline]
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Number of edges currently stored.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.m
+    }
+
+    /// Sorted intersection of two neighbor lists into `out` (cleared first),
+    /// excluding `ex1`/`ex2` — the common-neighbor primitive of every
+    /// edge-centric counter.
+    pub fn common_neighbors_into(
+        &self,
+        u: VertexId,
+        v: VertexId,
+        out: &mut Vec<VertexId>,
+    ) {
+        out.clear();
+        let (a, b) = (self.neighbors(u), self.neighbors(v));
+        let (mut i, mut j) = (0, 0);
+        while i < a.len() && j < b.len() {
+            match a[i].cmp(&b[j]) {
+                std::cmp::Ordering::Less => i += 1,
+                std::cmp::Ordering::Greater => j += 1,
+                std::cmp::Ordering::Equal => {
+                    if a[i] != u && a[i] != v {
+                        out.push(a[i]);
+                    }
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+    }
+
+    /// Clear all edges but keep allocated capacity (worker reuse).
+    pub fn clear(&mut self) {
+        for l in &mut self.adj {
+            l.clear();
+        }
+        self.m = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_roundtrip() {
+        let mut g = SampleGraph::new();
+        assert!(g.insert(3, 1));
+        assert!(!g.insert(1, 3));
+        assert_eq!(g.m(), 1);
+        assert!(g.has_edge(1, 3));
+        assert!(g.has_edge(3, 1));
+        assert!(g.remove(1, 3));
+        assert!(!g.remove(1, 3));
+        assert_eq!(g.m(), 0);
+    }
+
+    #[test]
+    fn neighbors_stay_sorted() {
+        let mut g = SampleGraph::new();
+        for v in [5, 2, 9, 1] {
+            g.insert(0, v);
+        }
+        assert_eq!(g.neighbors(0), &[1, 2, 5, 9]);
+        assert_eq!(g.degree(0), 4);
+    }
+
+    #[test]
+    fn common_neighbors_excludes_endpoints() {
+        let mut g = SampleGraph::new();
+        // triangle 0-1-2 plus 0-3, 1-3
+        for (a, b) in [(0, 1), (0, 2), (1, 2), (0, 3), (1, 3)] {
+            g.insert(a, b);
+        }
+        let mut out = Vec::new();
+        g.common_neighbors_into(0, 1, &mut out);
+        assert_eq!(out, vec![2, 3]);
+    }
+
+    #[test]
+    fn unknown_vertices_are_isolated() {
+        let g = SampleGraph::new();
+        assert_eq!(g.neighbors(42), &[] as &[VertexId]);
+        assert_eq!(g.degree(42), 0);
+        assert!(!g.has_edge(41, 42));
+    }
+
+    #[test]
+    fn clear_retains_capacity() {
+        let mut g = SampleGraph::new();
+        g.insert(0, 1);
+        g.insert(2, 3);
+        g.clear();
+        assert_eq!(g.m(), 0);
+        assert_eq!(g.neighbors(0), &[] as &[VertexId]);
+        assert!(g.insert(0, 1));
+    }
+}

@@ -1,0 +1,197 @@
+//! Compressed-sparse-row adjacency for *exact* (full-graph) algorithms.
+//!
+//! The streaming path never materializes a CSR of the whole graph — this is
+//! the substrate for the exact baselines the paper measures approximation
+//! error against (§6.1) and for the SOTA comparators (NetLSD, FEATHER, SF).
+
+use super::{Edge, Graph, VertexId};
+
+/// Sorted CSR adjacency. Neighbor lists are strictly increasing, enabling
+/// `O(log d)` adjacency checks and linear-time sorted intersections.
+#[derive(Debug, Clone)]
+pub struct Csr {
+    pub n: usize,
+    offsets: Vec<usize>,
+    nbrs: Vec<VertexId>,
+}
+
+impl Csr {
+    pub fn from_graph(g: &Graph) -> Self {
+        Self::from_edges(g.n, &g.edges)
+    }
+
+    pub fn from_edges(n: usize, edges: &[Edge]) -> Self {
+        let mut deg = vec![0usize; n];
+        for e in edges {
+            deg[e.u as usize] += 1;
+            deg[e.v as usize] += 1;
+        }
+        let mut offsets = vec![0usize; n + 1];
+        for i in 0..n {
+            offsets[i + 1] = offsets[i] + deg[i];
+        }
+        let mut nbrs = vec![0 as VertexId; offsets[n]];
+        let mut cursor = offsets.clone();
+        for e in edges {
+            nbrs[cursor[e.u as usize]] = e.v;
+            cursor[e.u as usize] += 1;
+            nbrs[cursor[e.v as usize]] = e.u;
+            cursor[e.v as usize] += 1;
+        }
+        for i in 0..n {
+            nbrs[offsets[i]..offsets[i + 1]].sort_unstable();
+        }
+        Csr { n, offsets, nbrs }
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
+        &self.nbrs[self.offsets[v as usize]..self.offsets[v as usize + 1]]
+    }
+
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.offsets[v as usize + 1] - self.offsets[v as usize]
+    }
+
+    #[inline]
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        self.neighbors(u).binary_search(&v).is_ok()
+    }
+
+    /// Number of edges.
+    pub fn m(&self) -> usize {
+        self.nbrs.len() / 2
+    }
+
+    /// Exact triangle count via sorted-intersection over edges (u < v < w).
+    pub fn triangle_count(&self) -> u64 {
+        let mut count = 0u64;
+        for u in 0..self.n as VertexId {
+            for &v in self.neighbors(u).iter().filter(|&&v| v > u) {
+                count += intersect_gt(self.neighbors(u), self.neighbors(v), v);
+            }
+        }
+        count
+    }
+
+    /// Dense normalized Laplacian (f64, row-major), for exact spectral
+    /// baselines. `L(u,u) = 1` iff `d_u > 0`; `L(u,v) = -1/sqrt(d_u d_v)`.
+    pub fn normalized_laplacian(&self) -> Vec<f64> {
+        let n = self.n;
+        let mut lap = vec![0.0f64; n * n];
+        for u in 0..n {
+            if self.degree(u as VertexId) > 0 {
+                lap[u * n + u] = 1.0;
+            }
+            for &v in self.neighbors(u as VertexId) {
+                let w = -1.0
+                    / ((self.degree(u as VertexId) as f64)
+                        * (self.degree(v) as f64))
+                        .sqrt();
+                lap[u * n + v as usize] = w;
+            }
+        }
+        lap
+    }
+
+    /// y = L x for the normalized Laplacian, without materializing it.
+    pub fn laplacian_matvec(&self, x: &[f64], y: &mut [f64]) {
+        debug_assert_eq!(x.len(), self.n);
+        for u in 0..self.n {
+            let du = self.degree(u as VertexId);
+            if du == 0 {
+                y[u] = 0.0;
+                continue;
+            }
+            let mut acc = x[u];
+            let su = (du as f64).sqrt();
+            for &v in self.neighbors(u as VertexId) {
+                acc -= x[v as usize] / (su * (self.degree(v) as f64).sqrt());
+            }
+            y[u] = acc;
+        }
+    }
+}
+
+/// |{w in a ∩ b : w > min_excl}|.
+#[inline]
+fn intersect_gt(a: &[VertexId], b: &[VertexId], min_excl: VertexId) -> u64 {
+    let mut i = a.partition_point(|&x| x <= min_excl);
+    let mut j = b.partition_point(|&x| x <= min_excl);
+    let mut count = 0;
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                count += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn k4() -> Csr {
+        Csr::from_graph(&Graph::from_pairs([
+            (0, 1),
+            (0, 2),
+            (0, 3),
+            (1, 2),
+            (1, 3),
+            (2, 3),
+        ]))
+    }
+
+    #[test]
+    fn neighbors_sorted_and_degrees() {
+        let c = k4();
+        assert_eq!(c.neighbors(0), &[1, 2, 3]);
+        assert_eq!(c.degree(2), 3);
+        assert_eq!(c.m(), 6);
+    }
+
+    #[test]
+    fn k4_has_4_triangles() {
+        assert_eq!(k4().triangle_count(), 4);
+    }
+
+    #[test]
+    fn path_has_no_triangles() {
+        let c = Csr::from_graph(&Graph::from_pairs([(0, 1), (1, 2), (2, 3)]));
+        assert_eq!(c.triangle_count(), 0);
+        assert!(c.has_edge(1, 2));
+        assert!(!c.has_edge(0, 2));
+    }
+
+    #[test]
+    fn laplacian_diag_and_matvec_agree() {
+        let c = Csr::from_graph(&Graph::from_pairs([(0, 1), (1, 2), (0, 2), (2, 3)]));
+        let n = c.n;
+        let lap = c.normalized_laplacian();
+        // matvec against dense for a few basis vectors
+        for k in 0..n {
+            let mut x = vec![0.0; n];
+            x[k] = 1.0;
+            let mut y = vec![0.0; n];
+            c.laplacian_matvec(&x, &mut y);
+            for r in 0..n {
+                assert!((y[r] - lap[r * n + k]).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn laplacian_isolated_vertex_row_is_zero() {
+        let c = Csr::from_edges(3, &[Edge::new(0, 1)]);
+        let lap = c.normalized_laplacian();
+        assert_eq!(lap[2 * 3 + 2], 0.0);
+        assert_eq!(lap[0], 1.0);
+    }
+}

@@ -1,0 +1,148 @@
+//! Graph substrate: edges, full graphs, CSR, sampled adjacency, streams.
+//!
+//! The paper (§3.1–§3.2) models the input as an *edge stream* over a simple
+//! undirected graph with vertices labelled `0..|V|-1`.  This module provides:
+//!
+//! * [`Edge`] — a canonicalized undirected edge,
+//! * [`Graph`] — an in-memory edge list (generators, exact baselines),
+//! * [`csr::Csr`] — compressed sparse rows for exact algorithms,
+//! * [`adjacency::SampleGraph`] — the sorted-adjacency structure holding the
+//!   budget-bounded sample (`O(log b)` adjacency checks, paper §4.1.2),
+//! * [`stream`] — single- and two-pass edge stream abstractions.
+
+pub mod adjacency;
+pub mod csr;
+pub mod stream;
+
+/// Vertex identifier; the paper labels vertices `0..|V_G|-1`.
+pub type VertexId = u32;
+
+/// An undirected, canonicalized edge: `u < v` always holds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Edge {
+    pub u: VertexId,
+    pub v: VertexId,
+}
+
+impl Edge {
+    /// Canonicalize `(a, b)` into `u < v`. Panics on self-loops (the paper
+    /// considers simple graphs only; generators never emit them).
+    #[inline]
+    pub fn new(a: VertexId, b: VertexId) -> Self {
+        assert_ne!(a, b, "self-loop ({a},{b}) in a simple graph");
+        if a < b {
+            Edge { u: a, v: b }
+        } else {
+            Edge { u: b, v: a }
+        }
+    }
+
+    /// Canonicalize, returning `None` for self-loops (stream preprocessing).
+    #[inline]
+    pub fn try_new(a: VertexId, b: VertexId) -> Option<Self> {
+        if a == b {
+            None
+        } else {
+            Some(Self::new(a, b))
+        }
+    }
+}
+
+/// An in-memory simple undirected graph as a deduplicated edge list.
+///
+/// `n` is the order |V| (vertices are `0..n`, isolated vertices allowed).
+#[derive(Debug, Clone, Default)]
+pub struct Graph {
+    pub n: usize,
+    pub edges: Vec<Edge>,
+}
+
+impl Graph {
+    /// Build from raw pairs: drops self-loops, dedupes, infers the order
+    /// from the maximum label (paper §5.2 preprocessing).
+    pub fn from_pairs(pairs: impl IntoIterator<Item = (VertexId, VertexId)>) -> Self {
+        let mut edges: Vec<Edge> = pairs
+            .into_iter()
+            .filter_map(|(a, b)| Edge::try_new(a, b))
+            .collect();
+        edges.sort_unstable();
+        edges.dedup();
+        let n = edges
+            .iter()
+            .map(|e| e.v as usize + 1)
+            .max()
+            .unwrap_or(0);
+        Graph { n, edges }
+    }
+
+    /// Build from already-canonical edges with an explicit order.
+    pub fn from_edges(n: usize, mut edges: Vec<Edge>) -> Self {
+        edges.sort_unstable();
+        edges.dedup();
+        debug_assert!(edges.iter().all(|e| (e.v as usize) < n));
+        Graph { n, edges }
+    }
+
+    /// Number of edges |E|.
+    #[inline]
+    pub fn m(&self) -> usize {
+        self.edges.len()
+    }
+
+    /// Exact degree sequence.
+    pub fn degrees(&self) -> Vec<u32> {
+        let mut d = vec![0u32; self.n];
+        for e in &self.edges {
+            d[e.u as usize] += 1;
+            d[e.v as usize] += 1;
+        }
+        d
+    }
+
+    /// Average degree `2|E|/|V|`.
+    pub fn avg_degree(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            2.0 * self.m() as f64 / self.n as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn edge_canonicalizes() {
+        let e = Edge::new(5, 2);
+        assert_eq!((e.u, e.v), (2, 5));
+        assert_eq!(Edge::new(2, 5), e);
+    }
+
+    #[test]
+    #[should_panic]
+    fn edge_rejects_self_loop() {
+        let _ = Edge::new(3, 3);
+    }
+
+    #[test]
+    fn try_new_filters_loops() {
+        assert!(Edge::try_new(1, 1).is_none());
+        assert!(Edge::try_new(1, 2).is_some());
+    }
+
+    #[test]
+    fn from_pairs_dedupes_and_infers_order() {
+        let g = Graph::from_pairs([(0, 1), (1, 0), (2, 2), (1, 4)]);
+        assert_eq!(g.n, 5);
+        assert_eq!(g.m(), 2);
+        assert_eq!(g.degrees(), vec![1, 2, 0, 0, 1]);
+    }
+
+    #[test]
+    fn avg_degree_matches_formula() {
+        let g = Graph::from_pairs([(0, 1), (1, 2), (2, 3)]);
+        assert!((g.avg_degree() - 2.0 * 3.0 / 4.0).abs() < 1e-12);
+    }
+}

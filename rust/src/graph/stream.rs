@@ -1,0 +1,224 @@
+//! Edge streams (paper §3.2): the input arrives one edge at a time.
+//!
+//! All descriptors run in ≤ 2 passes (constraint **C1**); [`EdgeStream`]
+//! therefore supports `reset()` for the second pass (SANTA).  Streams carry
+//! an optional length hint so harnesses can report progress, but no
+//! algorithm *requires* knowing `|E|` in advance.
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, Seek, Write};
+use std::path::{Path, PathBuf};
+
+use super::Edge;
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+/// A resettable stream of canonical edges.
+pub trait EdgeStream {
+    /// Next edge, or `None` at end of stream.
+    fn next_edge(&mut self) -> Option<Edge>;
+    /// Rewind to the beginning (for the second pass; constraint C1 allows 2).
+    fn reset(&mut self);
+    /// Total number of edges if known.
+    fn len_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+/// In-memory stream over a `Vec<Edge>`.
+#[derive(Debug, Clone)]
+pub struct VecStream {
+    edges: Vec<Edge>,
+    pos: usize,
+}
+
+impl VecStream {
+    pub fn new(edges: Vec<Edge>) -> Self {
+        VecStream { edges, pos: 0 }
+    }
+
+    /// Randomly shuffle the order first — the paper (§5.2) shuffles edge
+    /// lists "to ensure that the input stream is unbiased".
+    pub fn shuffled(mut edges: Vec<Edge>, seed: u64) -> Self {
+        Pcg64::seed_from_u64(seed).shuffle(&mut edges);
+        VecStream { edges, pos: 0 }
+    }
+
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+}
+
+impl EdgeStream for VecStream {
+    #[inline]
+    fn next_edge(&mut self) -> Option<Edge> {
+        let e = self.edges.get(self.pos).copied();
+        if e.is_some() {
+            self.pos += 1;
+        }
+        e
+    }
+
+    fn reset(&mut self) {
+        self.pos = 0;
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        Some(self.edges.len())
+    }
+}
+
+/// Stream over a whitespace-separated `u v` edge-list file.  Self-loops are
+/// dropped and edges canonicalized on the fly; duplicates are *not* removed
+/// (preprocessing is expected to have done that, §5.2 — see
+/// [`write_edge_list`] / [`preprocess_pairs`]).
+pub struct FileStream {
+    path: PathBuf,
+    reader: BufReader<File>,
+    len: Option<usize>,
+    line: String,
+}
+
+impl FileStream {
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let reader = BufReader::new(File::open(&path)?);
+        Ok(FileStream { path, reader, len: None, line: String::new() })
+    }
+}
+
+impl EdgeStream for FileStream {
+    fn next_edge(&mut self) -> Option<Edge> {
+        loop {
+            self.line.clear();
+            let n = self.reader.read_line(&mut self.line).ok()?;
+            if n == 0 {
+                return None;
+            }
+            let mut it = self.line.split_whitespace();
+            let (Some(a), Some(b)) = (it.next(), it.next()) else {
+                continue;
+            };
+            let (Ok(a), Ok(b)) = (a.parse(), b.parse()) else {
+                continue;
+            };
+            if let Some(e) = Edge::try_new(a, b) {
+                return Some(e);
+            }
+        }
+    }
+
+    fn reset(&mut self) {
+        if let Ok(f) = File::open(&self.path) {
+            self.reader = BufReader::new(f);
+        } else {
+            // Keep the exhausted reader; next_edge will return None.
+            let _ = self.reader.seek(std::io::SeekFrom::End(0));
+        }
+    }
+
+    fn len_hint(&self) -> Option<usize> {
+        self.len
+    }
+}
+
+/// Write a canonical edge list (one `u v` per line).
+pub fn write_edge_list(path: impl AsRef<Path>, edges: &[Edge]) -> Result<()> {
+    let mut f = std::io::BufWriter::new(File::create(path)?);
+    for e in edges {
+        writeln!(f, "{} {}", e.u, e.v)?;
+    }
+    Ok(())
+}
+
+/// Paper §5.2 preprocessing: drop self-loops, dedupe, relabel vertices to
+/// `0..|V|-1` (dense), shuffle with the given seed.
+pub fn preprocess_pairs(
+    pairs: impl IntoIterator<Item = (u32, u32)>,
+    seed: u64,
+) -> Vec<Edge> {
+    let mut edges: Vec<Edge> = pairs
+        .into_iter()
+        .filter_map(|(a, b)| Edge::try_new(a, b))
+        .collect();
+    edges.sort_unstable();
+    edges.dedup();
+    // dense relabel
+    let mut labels: Vec<u32> = edges.iter().flat_map(|e| [e.u, e.v]).collect();
+    labels.sort_unstable();
+    labels.dedup();
+    let lookup = |x: u32| labels.binary_search(&x).unwrap() as u32;
+    let mut out: Vec<Edge> = edges
+        .iter()
+        .map(|e| Edge::new(lookup(e.u), lookup(e.v)))
+        .collect();
+    Pcg64::seed_from_u64(seed).shuffle(&mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vec_stream_iterates_and_resets() {
+        let edges = vec![Edge::new(0, 1), Edge::new(1, 2)];
+        let mut s = VecStream::new(edges.clone());
+        assert_eq!(s.next_edge(), Some(edges[0]));
+        assert_eq!(s.next_edge(), Some(edges[1]));
+        assert_eq!(s.next_edge(), None);
+        s.reset();
+        assert_eq!(s.next_edge(), Some(edges[0]));
+        assert_eq!(s.len_hint(), Some(2));
+    }
+
+    #[test]
+    fn shuffle_is_deterministic_and_permutation() {
+        let edges: Vec<Edge> = (0..50).map(|i| Edge::new(i, i + 1)).collect();
+        let a = VecStream::shuffled(edges.clone(), 9);
+        let b = VecStream::shuffled(edges.clone(), 9);
+        assert_eq!(a.edges(), b.edges());
+        let mut sorted = a.edges().to_vec();
+        sorted.sort_unstable();
+        assert_eq!(sorted, edges);
+        let c = VecStream::shuffled(edges.clone(), 10);
+        assert_ne!(a.edges(), c.edges());
+    }
+
+    #[test]
+    fn file_stream_roundtrip_and_two_pass() {
+        let dir = crate::util::tmp::TempDir::new("stream").unwrap();
+        let path = dir.path().join("g.txt");
+        let edges = vec![Edge::new(0, 3), Edge::new(1, 2), Edge::new(2, 3)];
+        write_edge_list(&path, &edges).unwrap();
+        let mut s = FileStream::open(&path).unwrap();
+        let mut got = Vec::new();
+        while let Some(e) = s.next_edge() {
+            got.push(e);
+        }
+        assert_eq!(got, edges);
+        s.reset();
+        assert_eq!(s.next_edge(), Some(edges[0]));
+    }
+
+    #[test]
+    fn file_stream_skips_garbage_and_loops() {
+        let dir = crate::util::tmp::TempDir::new("stream").unwrap();
+        let path = dir.path().join("g.txt");
+        std::fs::write(&path, "# comment\n1 1\n0 2\nbroken\n3 1\n").unwrap();
+        let mut s = FileStream::open(&path).unwrap();
+        assert_eq!(s.next_edge(), Some(Edge::new(0, 2)));
+        assert_eq!(s.next_edge(), Some(Edge::new(1, 3)));
+        assert_eq!(s.next_edge(), None);
+    }
+
+    #[test]
+    fn preprocess_relabels_densely() {
+        let out = preprocess_pairs([(10, 20), (20, 30), (10, 30), (10, 10)], 1);
+        let mut labels: Vec<u32> = out.iter().flat_map(|e| [e.u, e.v]).collect();
+        labels.sort_unstable();
+        labels.dedup();
+        assert_eq!(labels, vec![0, 1, 2]);
+        assert_eq!(out.len(), 3);
+    }
+}

@@ -1,0 +1,40 @@
+//! # stream-descriptors
+//!
+//! A production-grade reproduction of **"Computing Graph Descriptors on Edge
+//! Streams"** (Hassan, Ali, Khan, Shabbir, Abbas — ACM TKDD 2022): streaming
+//! algorithms that compute three graph descriptors — **GABE** (graphlet
+//! amounts via budgeted estimates), **MAEVE** (moments of vertex attributes)
+//! and **SANTA** (spectral attributes via Taylor approximation) — over *edge
+//! streams* while storing at most `b` edges (the *budget*).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 (this crate)** — the streaming data-pipeline coordinator: edge
+//!   streams, reservoir sampling, edge-centric subgraph estimation,
+//!   Tri-Fly-style master/worker fan-out, classification and the experiment
+//!   harness.  Rust owns the entire request path.
+//! * **L2 (jax, build time)** — descriptor finalization and analytics
+//!   compute graphs, AOT-lowered to HLO text under `artifacts/` and executed
+//!   from [`runtime`] via PJRT.
+//! * **L1 (Pallas, build time)** — the compute hot-spots inside the L2
+//!   graphs (tiled pairwise distances, masked moments, ψ_j evaluation,
+//!   blocked Laplacian powers), lowered with `interpret=True`.
+//!
+//! See `DESIGN.md` for the full system inventory and experiment index.
+
+pub mod analyze;
+pub mod classify;
+pub mod coordinator;
+pub mod count;
+pub mod descriptors;
+pub mod exact;
+pub mod experiments;
+pub mod gen;
+pub mod graph;
+pub mod linalg;
+pub mod runtime;
+pub mod sampling;
+pub mod util;
+
+/// Crate-wide result alias.
+pub type Result<T> = anyhow::Result<T>;

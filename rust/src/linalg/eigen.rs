@@ -1,0 +1,276 @@
+//! Dense symmetric eigensolver: Householder tridiagonalization followed by
+//! the implicit-shift QL iteration (EISPACK `tred1`/`tql1` lineage).
+//! Eigenvalues only — NetLSD needs the spectrum, not the vectors.
+
+/// Eigenvalues (ascending) of a dense symmetric matrix in row-major order.
+///
+/// Panics if `a.len() != n * n`. `O(n^3)`; fine for the ≤ few-thousand-order
+/// graphs the exact baselines run on.
+pub fn symmetric_eigenvalues(a: &[f64], n: usize) -> Vec<f64> {
+    assert_eq!(a.len(), n * n, "matrix must be n x n");
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut m = a.to_vec();
+    let (mut d, mut e) = tridiagonalize(&mut m, n);
+    ql_implicit(&mut d, &mut e);
+    d.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    d
+}
+
+/// Householder reduction to tridiagonal form; returns (diagonal, off-diag).
+fn tridiagonalize(a: &mut [f64], n: usize) -> (Vec<f64>, Vec<f64>) {
+    let mut d = vec![0.0; n];
+    let mut e = vec![0.0; n];
+    for i in (1..n).rev() {
+        let l = i; // columns 0..l of row i
+        let mut h = 0.0;
+        let mut scale = 0.0;
+        if l > 1 {
+            for k in 0..l {
+                scale += a[i * n + k].abs();
+            }
+            if scale == 0.0 {
+                e[i] = a[i * n + l - 1];
+            } else {
+                for k in 0..l {
+                    a[i * n + k] /= scale;
+                    h += a[i * n + k] * a[i * n + k];
+                }
+                let mut f = a[i * n + l - 1];
+                let g = if f >= 0.0 { -h.sqrt() } else { h.sqrt() };
+                e[i] = scale * g;
+                h -= f * g;
+                a[i * n + l - 1] = f - g;
+                f = 0.0;
+                for j in 0..l {
+                    // form element of A*u in e[j]
+                    let mut g = 0.0;
+                    for k in 0..=j {
+                        g += a[j * n + k] * a[i * n + k];
+                    }
+                    for k in j + 1..l {
+                        g += a[k * n + j] * a[i * n + k];
+                    }
+                    e[j] = g / h;
+                    f += e[j] * a[i * n + j];
+                }
+                let hh = f / (h + h);
+                for j in 0..l {
+                    let fj = a[i * n + j];
+                    let gj = e[j] - hh * fj;
+                    e[j] = gj;
+                    for k in 0..=j {
+                        a[j * n + k] -= fj * e[k] + gj * a[i * n + k];
+                    }
+                }
+            }
+        } else {
+            e[i] = a[i * n + l - 1];
+        }
+        d[i] = h;
+    }
+    e[0] = 0.0;
+    for i in 0..n {
+        d[i] = a[i * n + i];
+    }
+    (d, e)
+}
+
+/// Implicit-shift QL on a symmetric tridiagonal (d = diag, e = subdiag with
+/// e[0] unused). Destroys e; leaves eigenvalues in d (unsorted).
+fn ql_implicit(d: &mut [f64], e: &mut [f64]) {
+    let n = d.len();
+    if n <= 1 {
+        return;
+    }
+    for i in 1..n {
+        e[i - 1] = e[i];
+    }
+    e[n - 1] = 0.0;
+    // Absolute deflation floor: with large zero eigenspaces (isolated
+    // vertices) the relative criterion alone never fires because
+    // |d[m]|+|d[m+1]| is itself ~0; dropping couplings below eps*||T||
+    // perturbs eigenvalues by no more than the roundoff already present.
+    let anorm = d
+        .iter()
+        .zip(e.iter())
+        .map(|(a, b)| a.abs() + b.abs())
+        .fold(0.0f64, f64::max);
+    let floor = f64::EPSILON * anorm.max(f64::MIN_POSITIVE);
+    for l in 0..n {
+        let mut iter = 0;
+        loop {
+            // find small off-diagonal to split
+            let mut m = l;
+            while m + 1 < n {
+                let dd = d[m].abs() + d[m + 1].abs();
+                if e[m].abs() <= f64::EPSILON * dd || e[m].abs() <= floor {
+                    break;
+                }
+                m += 1;
+            }
+            if m == l {
+                break;
+            }
+            iter += 1;
+            assert!(iter < 64, "QL iteration failed to converge");
+            // form shift
+            let mut g = (d[l + 1] - d[l]) / (2.0 * e[l]);
+            let mut r = g.hypot(1.0);
+            g = d[m] - d[l] + e[l] / (g + r.copysign(g));
+            let (mut s, mut c) = (1.0, 1.0);
+            let mut p = 0.0;
+            let mut underflow = false;
+            for i in (l..m).rev() {
+                let f = s * e[i];
+                let b = c * e[i];
+                r = f.hypot(g);
+                e[i + 1] = r;
+                if r == 0.0 {
+                    // deflate on underflow and restart the sweep (NR tqli)
+                    d[i + 1] -= p;
+                    e[m] = 0.0;
+                    underflow = true;
+                    break;
+                }
+                s = f / r;
+                c = g / r;
+                g = d[i + 1] - p;
+                r = (d[i] - g) * s + 2.0 * c * b;
+                p = s * r;
+                d[i + 1] = g + p;
+                g = c * r - b;
+            }
+            if underflow {
+                continue;
+            }
+            d[l] -= p;
+            e[l] = g;
+            e[m] = 0.0;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: &[f64], b: &[f64], tol: f64) {
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b) {
+            assert!((x - y).abs() < tol, "{a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn diagonal_matrix() {
+        let a = [3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0];
+        assert_close(&symmetric_eigenvalues(&a, 3), &[1.0, 2.0, 3.0], 1e-12);
+    }
+
+    #[test]
+    fn known_2x2() {
+        // [[2,1],[1,2]] -> {1, 3}
+        let a = [2.0, 1.0, 1.0, 2.0];
+        assert_close(&symmetric_eigenvalues(&a, 2), &[1.0, 3.0], 1e-12);
+    }
+
+    #[test]
+    fn path_laplacian_spectrum() {
+        // Normalized Laplacian of P3: eigenvalues {0, 1, 2}
+        let s = 1.0 / (2.0f64).sqrt();
+        let a = [
+            1.0, -s, 0.0, //
+            -s, 1.0, -s, //
+            0.0, -s, 1.0,
+        ];
+        assert_close(&symmetric_eigenvalues(&a, 3), &[0.0, 1.0, 2.0], 1e-12);
+    }
+
+    #[test]
+    fn complete_graph_spectrum() {
+        // K_n normalized Laplacian: 0 once, n/(n-1) with multiplicity n-1
+        let n = 6;
+        let w = -1.0 / (n as f64 - 1.0);
+        let mut a = vec![w; n * n];
+        for i in 0..n {
+            a[i * n + i] = 1.0;
+        }
+        let eig = symmetric_eigenvalues(&a, n);
+        assert!((eig[0]).abs() < 1e-12);
+        for k in 1..n {
+            assert!((eig[k] - n as f64 / (n as f64 - 1.0)).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn trace_and_frobenius_preserved_random() {
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(12);
+        let n = 40;
+        let mut a = vec![0.0; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.gen_range_f64(-1.0, 1.0);
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        let eig = symmetric_eigenvalues(&a, n);
+        let tr: f64 = (0..n).map(|i| a[i * n + i]).sum();
+        let fro: f64 = a.iter().map(|x| x * x).sum();
+        let tr_e: f64 = eig.iter().sum();
+        let fro_e: f64 = eig.iter().map(|x| x * x).sum();
+        assert!((tr - tr_e).abs() < 1e-9, "trace {tr} vs {tr_e}");
+        assert!((fro - fro_e).abs() < 1e-8, "frobenius {fro} vs {fro_e}");
+        // ascending
+        for w in eig.windows(2) {
+            assert!(w[0] <= w[1] + 1e-14);
+        }
+    }
+
+    #[test]
+    fn degenerate_tree_spectra_converge() {
+        // BA trees (m_attach = 1) produce highly degenerate Laplacian
+        // spectra that used to stall the QL sweep.
+        use crate::graph::csr::Csr;
+        use crate::util::rng::Pcg64;
+        for seed in 0..4 {
+            let g = crate::gen::ba_graph(300, 1, &mut Pcg64::seed_from_u64(seed));
+            let c = Csr::from_graph(&g);
+            let eig = symmetric_eigenvalues(&c.normalized_laplacian(), g.n);
+            let tr: f64 = eig.iter().sum();
+            assert!((tr - g.n as f64).abs() < 1e-6, "trace of tree laplacian");
+            assert!(eig[0].abs() < 1e-9 && *eig.last().unwrap() <= 2.0 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn many_isolated_vertices_converge() {
+        // Regression: community graphs with ~10% isolated vertices used to
+        // stall the QL sweep (relative criterion never fired on the large
+        // zero eigenspace).
+        use crate::graph::csr::Csr;
+        use crate::util::rng::Pcg64;
+        let ds = crate::gen::community_graph(900, 4, 1000, 90,
+            &mut Pcg64::seed_from_u64(2024));
+        let c = Csr::from_graph(&ds);
+        let eig = symmetric_eigenvalues(&c.normalized_laplacian(), ds.n);
+        assert!(eig.iter().all(|x| x.is_finite()));
+        let nonzero_rows = ds.degrees().iter().filter(|&&d| d > 0).count() as f64;
+        let tr: f64 = eig.iter().sum();
+        assert!((tr - nonzero_rows).abs() < 1e-9 * nonzero_rows);
+    }
+
+    #[test]
+    fn normalized_laplacian_range() {
+        use crate::graph::csr::Csr;
+        use crate::graph::Graph;
+        let g = Graph::from_pairs([(0, 1), (1, 2), (2, 3), (3, 0), (0, 2)]);
+        let c = Csr::from_graph(&g);
+        let lap = c.normalized_laplacian();
+        let eig = symmetric_eigenvalues(&lap, g.n);
+        assert!(eig[0].abs() < 1e-12, "lambda_min = {}", eig[0]);
+        assert!(*eig.last().unwrap() <= 2.0 + 1e-12);
+    }
+}

@@ -1,0 +1,14 @@
+//! Dense/iterative symmetric eigensolvers and moment accumulators.
+//!
+//! The exact NetLSD baseline (paper §5.3) needs the full eigenspectrum of
+//! the normalized Laplacian for small graphs and the ends of the spectrum
+//! (via Lanczos, as the paper does in §6.3) for large ones.  No external
+//! linear-algebra crate: [`eigen`] is a Householder + implicit-shift QL
+//! solver, [`lanczos`] a full-reorthogonalization Lanczos.
+
+pub mod eigen;
+pub mod lanczos;
+pub mod moments;
+
+pub use eigen::symmetric_eigenvalues;
+pub use lanczos::lanczos_extreme_eigenvalues;

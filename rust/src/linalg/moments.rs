@@ -1,0 +1,96 @@
+//! Moment aggregation (MAEVE finalization, paper §4.2).
+//!
+//! The rust implementation mirrors the L2 `maeve_moments` kernel exactly
+//! (moment-major layout, population moments, Fisher excess kurtosis) — the
+//! runtime test-suite asserts both agree.  It is the fallback used on
+//! massive graphs whose order exceeds the AOT padding bound.
+
+/// mean, population std, skewness, excess kurtosis of a slice.
+pub fn moments(xs: &[f64]) -> [f64; 4] {
+    if xs.is_empty() {
+        return [0.0; 4];
+    }
+    let n = xs.len() as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let mut m2 = 0.0;
+    let mut m3 = 0.0;
+    let mut m4 = 0.0;
+    for &x in xs {
+        let d = x - mean;
+        let d2 = d * d;
+        m2 += d2;
+        m3 += d2 * d;
+        m4 += d2 * d2;
+    }
+    m2 /= n;
+    m3 /= n;
+    m4 /= n;
+    let std = m2.sqrt();
+    let (skew, kurt) = if m2 > 0.0 {
+        (m3 / m2.powf(1.5), m4 / (m2 * m2) - 3.0)
+    } else {
+        (0.0, 0.0)
+    };
+    [mean, std, skew, kurt]
+}
+
+/// MAEVE layout: 5 features × 4 moments, moment-major
+/// `[mean×5, std×5, skew×5, kurt×5]` — matches the L2 kernel.
+pub fn maeve_layout(features: &[Vec<f64>; 5]) -> [f64; 20] {
+    let per: Vec<[f64; 4]> = features.iter().map(|f| moments(f)).collect();
+    let mut out = [0.0; 20];
+    for (fi, m) in per.iter().enumerate() {
+        for (mi, &v) in m.iter().enumerate() {
+            out[mi * 5 + fi] = v;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constant_sequence() {
+        let m = moments(&[2.0; 10]);
+        assert_eq!(m, [2.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn known_values() {
+        // [0, 1]: mean .5, std .5, skew 0, kurtosis m4/m2^2-3 = -2
+        let m = moments(&[0.0, 1.0]);
+        assert!((m[0] - 0.5).abs() < 1e-12);
+        assert!((m[1] - 0.5).abs() < 1e-12);
+        assert!(m[2].abs() < 1e-12);
+        assert!((m[3] + 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn skew_sign() {
+        let right = moments(&[0.0, 0.0, 0.0, 10.0]);
+        assert!(right[2] > 0.5);
+        let left = moments(&[0.0, 10.0, 10.0, 10.0]);
+        assert!(left[2] < -0.5);
+    }
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(moments(&[]), [0.0; 4]);
+    }
+
+    #[test]
+    fn layout_is_moment_major() {
+        let f: [Vec<f64>; 5] = [
+            vec![1.0, 1.0],
+            vec![2.0, 2.0],
+            vec![3.0, 3.0],
+            vec![4.0, 4.0],
+            vec![5.0, 5.0],
+        ];
+        let out = maeve_layout(&f);
+        assert_eq!(&out[..5], &[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(&out[5..10], &[0.0; 5]);
+    }
+}

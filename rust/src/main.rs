@@ -1,0 +1,184 @@
+//! `repro` — the experiment harness CLI.
+//!
+//! Every table and figure from the paper's evaluation has a subcommand
+//! (DESIGN.md §4 maps them to modules).  Examples:
+//!
+//! ```text
+//! repro fig4                      # Taylor-term error sweep
+//! repro fig5 --scale 1.0          # budget sweep at full corpus size
+//! repro table14 --dataset OHSU    # SANTA variants on one dataset
+//! repro table15                   # benchmarks vs proposed, all datasets
+//! repro table16 --workers 8       # massive-network scalability, b=100k
+//! repro workers                   # §3.4 variance-vs-W experiment
+//! repro all                       # everything (long)
+//! ```
+
+use std::process::ExitCode;
+
+use stream_descriptors::experiments::{self, Ctx};
+use stream_descriptors::gen::massive::MassiveKind;
+
+#[derive(Debug)]
+struct Args {
+    cmd: String,
+    scale: f64,
+    massive_scale: f64,
+    seed: u64,
+    workers: usize,
+    threads: usize,
+    dataset: Option<String>,
+    net: Option<MassiveKind>,
+    out_dir: Option<String>,
+}
+
+const USAGE: &str = "\
+repro — streaming graph descriptors (GABE/MAEVE/SANTA) experiment harness
+
+USAGE: repro <COMMAND> [OPTIONS]
+
+COMMANDS:
+  quickstart     tiny end-to-end smoke run
+  fig3           t-SNE scatter CSVs on the DD-like dataset
+  fig4           SANTA Taylor-terms vs relative error
+  fig5           approximation error vs budget
+  table14        SANTA variants vs NetLSD (same j) accuracy
+  table15        proposed vs NetLSD/FEATHER/SF accuracy
+  table16        massive networks, paper-b = 100k
+  table17        massive networks, paper-b = 500k
+  workers        §3.4 variance vs number of workers
+  unbiased       Theorem 1/2 empirical check
+  ablation       design-choice ablations (MAEVE vs NetSimile; SANTA wedge term)
+  all            run everything
+
+OPTIONS:
+  --scale F          dataset scale factor (default 0.25; 1.0 = paper sizes)
+  --massive-scale F  massive-network scale (default 0.02)
+  --seed N           RNG seed (default 7)
+  --workers N        coordinator workers for table16/17 (default 4)
+  --threads N        harness threads (default: all cores)
+  --dataset NAME     restrict table14/15 to one dataset (e.g. OHSU)
+  --net NAME         restrict table16/17 to one network (FO/US/CS/PT/FL/SF/U2)
+  --results DIR      output directory (default results/)
+";
+
+fn parse_args() -> Result<Args, String> {
+    let mut it = std::env::args().skip(1);
+    let cmd = it.next().ok_or_else(|| USAGE.to_string())?;
+    let mut a = Args {
+        cmd,
+        scale: 0.25,
+        massive_scale: 0.02,
+        seed: 7,
+        workers: 4,
+        threads: 0,
+        dataset: None,
+        net: None,
+        out_dir: None,
+    };
+    while let Some(flag) = it.next() {
+        let mut val = || it.next().ok_or(format!("{flag} needs a value"));
+        match flag.as_str() {
+            "--scale" => a.scale = val()?.parse().map_err(|e| format!("{e}"))?,
+            "--massive-scale" => {
+                a.massive_scale = val()?.parse().map_err(|e| format!("{e}"))?
+            }
+            "--seed" => a.seed = val()?.parse().map_err(|e| format!("{e}"))?,
+            "--workers" => a.workers = val()?.parse().map_err(|e| format!("{e}"))?,
+            "--threads" => a.threads = val()?.parse().map_err(|e| format!("{e}"))?,
+            "--dataset" => a.dataset = Some(val()?),
+            "--net" => a.net = Some(val()?.parse()?),
+            "--results" => a.out_dir = Some(val()?),
+            "-h" | "--help" => return Err(USAGE.to_string()),
+            other => return Err(format!("unknown flag {other}\n\n{USAGE}")),
+        }
+    }
+    Ok(a)
+}
+
+fn quickstart(ctx: &Ctx) -> stream_descriptors::Result<()> {
+    use stream_descriptors::descriptors::gabe::GabeEstimator;
+    use stream_descriptors::exact;
+    use stream_descriptors::gen;
+    use stream_descriptors::graph::stream::VecStream;
+    use stream_descriptors::util::rng::Pcg64;
+
+    println!("quickstart: estimating descriptors of one BA graph");
+    let g = gen::ba_graph(5000, 4, &mut Pcg64::seed_from_u64(ctx.seed));
+    let exact = exact::gabe_exact(&g);
+    let mut s = VecStream::shuffled(g.edges.clone(), ctx.seed);
+    let est = GabeEstimator::new(g.m() / 4).with_seed(ctx.seed).run(&mut s);
+    println!("  |V|={} |E|={} budget=|E|/4", g.n, g.m());
+    for (i, name) in stream_descriptors::count::NAMES.iter().enumerate() {
+        if stream_descriptors::count::SIZES[i] >= 3 {
+            println!(
+                "  {:<10} exact {:>14.0}  estimate {:>14.0}  rel.err {:.3}",
+                name,
+                exact.counts[i],
+                est.counts[i],
+                (est.counts[i] - exact.counts[i]).abs() / exact.counts[i].max(1.0)
+            );
+        }
+    }
+    if let Some(rt) = ctx.runtime.as_ref() {
+        let phi = rt.gabe_finalize(&[est.counts], &[est.nv as f64])?;
+        println!("  L2-finalized φ (first 6): {:?}", &phi[0][..6]);
+        println!("  (finalized through PJRT on {})", rt.platform());
+    } else {
+        println!("  (PJRT artifacts not built; run `make artifacts` for the L2 path)");
+    }
+    Ok(())
+}
+
+fn main() -> ExitCode {
+    let args = match parse_args() {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            return ExitCode::from(2);
+        }
+    };
+    let mut ctx = Ctx::new(args.scale, args.massive_scale, args.seed);
+    ctx.threads = args.threads;
+    if let Some(dir) = &args.out_dir {
+        ctx.out_dir = dir.into();
+    }
+
+    let run = || -> stream_descriptors::Result<()> {
+        match args.cmd.as_str() {
+            "quickstart" => quickstart(&ctx),
+            "fig3" => experiments::visualization::fig3(&ctx),
+            "fig4" => experiments::approx::fig4(&ctx),
+            "fig5" => experiments::approx::fig5(&ctx),
+            "table14" => experiments::classification::table14(&ctx, args.dataset.as_deref()),
+            "table15" => experiments::classification::table15(&ctx, args.dataset.as_deref()),
+            "table16" => experiments::scalability::table(&ctx, 100_000, args.workers, args.net),
+            "table17" => experiments::scalability::table(&ctx, 500_000, args.workers, args.net),
+            "workers" => experiments::workers::workers(&ctx),
+            "unbiased" => experiments::approx::unbiased(&ctx),
+            "ablation" => experiments::ablation::ablation(&ctx),
+            "all" => {
+                experiments::approx::fig4(&ctx)?;
+                experiments::approx::fig5(&ctx)?;
+                experiments::approx::unbiased(&ctx)?;
+                experiments::ablation::ablation(&ctx)?;
+                experiments::workers::workers(&ctx)?;
+                experiments::classification::table14(&ctx, args.dataset.as_deref())?;
+                experiments::classification::table15(&ctx, args.dataset.as_deref())?;
+                experiments::visualization::fig3(&ctx)?;
+                experiments::scalability::table(&ctx, 100_000, args.workers, args.net)?;
+                experiments::scalability::table(&ctx, 500_000, args.workers, args.net)
+            }
+            other => {
+                eprintln!("unknown command {other}\n\n{USAGE}");
+                std::process::exit(2);
+            }
+        }
+    };
+    match run() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,196 @@
+//! `artifacts/manifest.json` — the rust↔python shape/semantics contract.
+//! Parsed with the in-tree JSON parser ([`crate::util::json`]).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, ensure, Context};
+
+use crate::util::json::Json;
+use crate::Result;
+
+/// Per-artifact metadata.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub file: String,
+    pub inputs: Vec<Vec<usize>>,
+    pub outputs: Vec<Vec<usize>>,
+    pub sha256: String,
+    pub bytes: usize,
+}
+
+/// The fixed batch shapes the python side compiled for.
+#[derive(Debug, Clone)]
+pub struct Shapes {
+    pub gabe_b: usize,
+    pub maeve_b: usize,
+    pub maeve_nv: usize,
+    pub santa_b: usize,
+    pub dist_m: usize,
+    pub dist_n: usize,
+    pub dist_d: usize,
+    pub trace_n: usize,
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub format: String,
+    pub jax_version: String,
+    pub j_grid: Vec<f64>,
+    pub graphlet_names: Vec<String>,
+    pub graphlet_orders: Vec<usize>,
+    pub overlap_matrix: Vec<Vec<i64>>,
+    pub overlap_inverse: Vec<Vec<f64>>,
+    pub shapes: Shapes,
+    pub artifacts: BTreeMap<String, ArtifactMeta>,
+}
+
+fn req<'a>(v: &'a Json, key: &str) -> Result<&'a Json> {
+    v.get(key).ok_or_else(|| anyhow!("manifest missing key {key}"))
+}
+
+fn usize_field(v: &Json, key: &str) -> Result<usize> {
+    req(v, key)?.as_usize().ok_or_else(|| anyhow!("{key} not a number"))
+}
+
+fn str_field(v: &Json, key: &str) -> Result<String> {
+    Ok(req(v, key)?
+        .as_str()
+        .ok_or_else(|| anyhow!("{key} not a string"))?
+        .to_string())
+}
+
+fn matrix_f64(v: &Json) -> Result<Vec<Vec<f64>>> {
+    v.as_arr()
+        .ok_or_else(|| anyhow!("expected array"))?
+        .iter()
+        .map(|row| row.as_f64_vec().ok_or_else(|| anyhow!("expected numeric row")))
+        .collect()
+}
+
+fn shape_list(v: &Json) -> Result<Vec<Vec<usize>>> {
+    Ok(matrix_f64(v)?
+        .into_iter()
+        .map(|row| row.into_iter().map(|x| x as usize).collect())
+        .collect())
+}
+
+impl Manifest {
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let v = Json::parse(&text)
+            .map_err(|e| anyhow!("parsing {}: {e}", path.display()))?;
+
+        let format = str_field(&v, "format")?;
+        ensure!(format == "hlo-text", "unsupported artifact format {format}");
+
+        let shapes_v = req(&v, "shapes")?;
+        let shapes = Shapes {
+            gabe_b: usize_field(shapes_v, "gabe_b")?,
+            maeve_b: usize_field(shapes_v, "maeve_b")?,
+            maeve_nv: usize_field(shapes_v, "maeve_nv")?,
+            santa_b: usize_field(shapes_v, "santa_b")?,
+            dist_m: usize_field(shapes_v, "dist_m")?,
+            dist_n: usize_field(shapes_v, "dist_n")?,
+            dist_d: usize_field(shapes_v, "dist_d")?,
+            trace_n: usize_field(shapes_v, "trace_n")?,
+        };
+
+        let mut artifacts = BTreeMap::new();
+        for (name, av) in req(&v, "artifacts")?
+            .as_obj()
+            .ok_or_else(|| anyhow!("artifacts not an object"))?
+        {
+            artifacts.insert(
+                name.clone(),
+                ArtifactMeta {
+                    file: str_field(av, "file")?,
+                    inputs: shape_list(req(av, "inputs")?)?,
+                    outputs: shape_list(req(av, "outputs")?)?,
+                    sha256: str_field(av, "sha256")?,
+                    bytes: usize_field(av, "bytes")?,
+                },
+            );
+        }
+
+        let m = Manifest {
+            format,
+            jax_version: str_field(&v, "jax_version")?,
+            j_grid: req(&v, "j_grid")?
+                .as_f64_vec()
+                .ok_or_else(|| anyhow!("j_grid not numeric"))?,
+            graphlet_names: req(&v, "graphlet_names")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("graphlet_names not array"))?
+                .iter()
+                .map(|x| {
+                    x.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| anyhow!("graphlet name not a string"))
+                })
+                .collect::<Result<_>>()?,
+            graphlet_orders: req(&v, "graphlet_orders")?
+                .as_f64_vec()
+                .ok_or_else(|| anyhow!("graphlet_orders not numeric"))?
+                .into_iter()
+                .map(|x| x as usize)
+                .collect(),
+            overlap_matrix: matrix_f64(req(&v, "overlap_matrix")?)?
+                .into_iter()
+                .map(|row| row.into_iter().map(|x| x as i64).collect())
+                .collect(),
+            overlap_inverse: matrix_f64(req(&v, "overlap_inverse")?)?,
+            shapes,
+            artifacts,
+        };
+        ensure!(m.graphlet_names.len() == 17, "expected 17 graphlets");
+        ensure!(m.j_grid.len() == 60, "expected 60 j values");
+        Ok(m)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    #[test]
+    fn rejects_bad_format() {
+        let dir = TempDir::new("manifest").unwrap();
+        let p = dir.path().join("manifest.json");
+        std::fs::write(
+            &p,
+            r#"{"format":"protobuf","jax_version":"0","j_grid":[],
+                "graphlet_names":[],"graphlet_orders":[],"overlap_matrix":[],
+                "overlap_inverse":[],
+                "shapes":{"gabe_b":1,"maeve_b":1,"maeve_nv":1,"santa_b":1,
+                          "dist_m":1,"dist_n":1,"dist_d":1,"trace_n":1},
+                "artifacts":{}}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&p).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(Manifest::load("/nonexistent/manifest.json").is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_when_present() {
+        let dir = crate::runtime::Runtime::default_dir();
+        let p = dir.join("manifest.json");
+        if !p.exists() {
+            eprintln!("[skip] no artifacts built");
+            return;
+        }
+        let m = Manifest::load(&p).unwrap();
+        assert_eq!(m.graphlet_names.len(), 17);
+        assert_eq!(m.j_grid.len(), 60);
+        assert!(m.artifacts.contains_key("pairwise_dist"));
+        assert_eq!(m.overlap_matrix[0][0], 1);
+    }
+}

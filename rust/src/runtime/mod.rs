@@ -1,0 +1,421 @@
+//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) and execute
+//! the L2 compute graphs from the rust hot path.
+//!
+//! The interchange format is HLO *text* — jax ≥ 0.5 emits protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see `python/compile/aot.py` and /opt/xla-example).
+//!
+//! Every executable is compiled once at [`Runtime::load`]; calls are
+//! batched and zero-padded to the fixed artifact shapes recorded in
+//! `manifest.json`.  The manifest also carries the overlap matrix and the
+//! ψ j-grid, which the test-suite cross-checks against this crate's own
+//! implementations — pinning the rust↔python contract.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::anyhow;
+
+pub use manifest::Manifest;
+
+use crate::Result;
+
+/// Compiled-artifact registry over a PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    pub manifest: Manifest,
+}
+
+impl Runtime {
+    /// Load every artifact listed in `<dir>/manifest.json` and compile it.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref();
+        let manifest = Manifest::load(dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+        let mut exes = HashMap::new();
+        for (name, art) in &manifest.artifacts {
+            let path = dir.join(&art.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e}"))?;
+            exes.insert(name.clone(), exe);
+        }
+        Ok(Runtime { client, exes, manifest })
+    }
+
+    /// Default artifact location (repo-relative), overridable via
+    /// `STREAM_DESCRIPTORS_ARTIFACTS`.
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var_os("STREAM_DESCRIPTORS_ARTIFACTS")
+            .map(Into::into)
+            .unwrap_or_else(|| {
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+
+    /// Convenience: load from [`Runtime::default_dir`].
+    pub fn load_default() -> Result<Self> {
+        Self::load(Self::default_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Execute an artifact on f32 tensors; returns the flat f32 outputs.
+    fn exec(&self, name: &str, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let lits: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, dims)| {
+                xla::Literal::vec1(data)
+                    .reshape(dims)
+                    .map_err(|e| anyhow!("reshape {dims:?}: {e}"))
+            })
+            .collect::<Result<_>>()?;
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| anyhow!("execute {name}: {e}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+        let tuple = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"))?;
+        tuple
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e}")))
+            .collect()
+    }
+
+    // ------------------------------------------------------------------
+    // batched wrappers (pad → execute → strip)
+    // ------------------------------------------------------------------
+
+    /// GABE finalization: estimated H counts (+|V|) → φ descriptors.
+    pub fn gabe_finalize(&self, counts: &[[f64; 17]], nv: &[f64]) -> Result<Vec<Vec<f64>>> {
+        assert_eq!(counts.len(), nv.len());
+        let b = self.manifest.shapes.gabe_b;
+        let mut out = Vec::with_capacity(counts.len());
+        for chunk_start in (0..counts.len()).step_by(b) {
+            let chunk = &counts[chunk_start..(chunk_start + b).min(counts.len())];
+            let nvc = &nv[chunk_start..chunk_start + chunk.len()];
+            let mut cbuf = vec![0.0f32; b * 17];
+            let mut nbuf = vec![0.0f32; b];
+            for (i, row) in chunk.iter().enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    cbuf[i * 17 + j] = v as f32;
+                }
+                nbuf[i] = nvc[i] as f32;
+            }
+            let outs = self.exec(
+                "gabe_finalize",
+                &[(cbuf, vec![b as i64, 17]), (nbuf, vec![b as i64])],
+            )?;
+            for i in 0..chunk.len() {
+                out.push(outs[0][i * 17..(i + 1) * 17].iter().map(|&x| x as f64).collect());
+            }
+        }
+        Ok(out)
+    }
+
+    /// MAEVE moment aggregation for graphs with ≤ `maeve_nv` vertices.
+    /// Each item: per-vertex 5-feature rows. Returns 20-dim descriptors.
+    pub fn maeve_moments(&self, graphs: &[Vec<[f64; 5]>]) -> Result<Vec<Vec<f64>>> {
+        let b = self.manifest.shapes.maeve_b;
+        let nv_pad = self.manifest.shapes.maeve_nv;
+        for g in graphs {
+            if g.len() > nv_pad {
+                return Err(anyhow!(
+                    "graph order {} exceeds artifact padding {nv_pad}; use the rust \
+                     fallback (linalg::moments)",
+                    g.len()
+                ));
+            }
+        }
+        let mut out = Vec::with_capacity(graphs.len());
+        for chunk_start in (0..graphs.len()).step_by(b) {
+            let chunk = &graphs[chunk_start..(chunk_start + b).min(graphs.len())];
+            let mut feats = vec![0.0f32; b * nv_pad * 5];
+            let mut mask = vec![0.0f32; b * nv_pad];
+            for (i, g) in chunk.iter().enumerate() {
+                for (v, row) in g.iter().enumerate() {
+                    for (f, &x) in row.iter().enumerate() {
+                        feats[(i * nv_pad + v) * 5 + f] = x as f32;
+                    }
+                    mask[i * nv_pad + v] = 1.0;
+                }
+            }
+            let outs = self.exec(
+                "maeve_moments",
+                &[
+                    (feats, vec![b as i64, nv_pad as i64, 5]),
+                    (mask, vec![b as i64, nv_pad as i64]),
+                ],
+            )?;
+            for i in 0..chunk.len() {
+                out.push(outs[0][i * 20..(i + 1) * 20].iter().map(|&x| x as f64).collect());
+            }
+        }
+        Ok(out)
+    }
+
+    /// SANTA ψ finalization: trace estimates → (ψ[6][60], heat-taylor[3][60],
+    /// wave-taylor[2][60]) per graph.
+    #[allow(clippy::type_complexity)]
+    pub fn santa_psi(
+        &self,
+        traces: &[[f64; 5]],
+        nv: &[f64],
+    ) -> Result<Vec<(Vec<f64>, Vec<f64>, Vec<f64>)>> {
+        assert_eq!(traces.len(), nv.len());
+        let b = self.manifest.shapes.santa_b;
+        let mut out = Vec::with_capacity(traces.len());
+        for chunk_start in (0..traces.len()).step_by(b) {
+            let chunk = &traces[chunk_start..(chunk_start + b).min(traces.len())];
+            let nvc = &nv[chunk_start..chunk_start + chunk.len()];
+            let mut tbuf = vec![0.0f32; b * 5];
+            let mut nbuf = vec![0.0f32; b];
+            for (i, row) in chunk.iter().enumerate() {
+                for (j, &v) in row.iter().enumerate() {
+                    tbuf[i * 5 + j] = v as f32;
+                }
+                nbuf[i] = nvc[i] as f32;
+            }
+            let outs = self.exec(
+                "santa_psi",
+                &[(tbuf, vec![b as i64, 5]), (nbuf, vec![b as i64])],
+            )?;
+            for i in 0..chunk.len() {
+                let psi = outs[0][i * 360..(i + 1) * 360].iter().map(|&x| x as f64).collect();
+                let ht = outs[1][i * 180..(i + 1) * 180].iter().map(|&x| x as f64).collect();
+                let wt = outs[2][i * 120..(i + 1) * 120].iter().map(|&x| x as f64).collect();
+                out.push((psi, ht, wt));
+            }
+        }
+        Ok(out)
+    }
+
+    /// Tiled pairwise distances between two descriptor sets.
+    /// Returns (canberra, euclidean) as row-major `x.len() × y.len()`.
+    pub fn pairwise_dist(
+        &self,
+        x: &[Vec<f64>],
+        y: &[Vec<f64>],
+    ) -> Result<(Vec<f64>, Vec<f64>)> {
+        let m_tile = self.manifest.shapes.dist_m;
+        let n_tile = self.manifest.shapes.dist_n;
+        let d_pad = self.manifest.shapes.dist_d;
+        let dim = x.first().or(y.first()).map(|v| v.len()).unwrap_or(0);
+        if dim > d_pad {
+            return Err(anyhow!("descriptor dim {dim} exceeds artifact padding {d_pad}"));
+        }
+        let (m, n) = (x.len(), y.len());
+        let mut can = vec![0.0f64; m * n];
+        let mut euc = vec![0.0f64; m * n];
+        let pack = |rows: &[Vec<f64>], tile: usize| -> Vec<f32> {
+            let mut buf = vec![0.0f32; tile * d_pad];
+            for (i, r) in rows.iter().enumerate() {
+                for (j, &v) in r.iter().enumerate() {
+                    buf[i * d_pad + j] = v as f32;
+                }
+            }
+            buf
+        };
+        for is in (0..m).step_by(m_tile) {
+            let xe = (is + m_tile).min(m);
+            let xbuf = pack(&x[is..xe], m_tile);
+            for js in (0..n).step_by(n_tile) {
+                let ye = (js + n_tile).min(n);
+                let ybuf = pack(&y[js..ye], n_tile);
+                let outs = self.exec(
+                    "pairwise_dist",
+                    &[
+                        (xbuf.clone(), vec![m_tile as i64, d_pad as i64]),
+                        (ybuf, vec![n_tile as i64, d_pad as i64]),
+                    ],
+                )?;
+                for i in is..xe {
+                    for j in js..ye {
+                        let src = (i - is) * n_tile + (j - js);
+                        can[i * n + j] = outs[0][src] as f64;
+                        euc[i * n + j] = outs[1][src] as f64;
+                    }
+                }
+            }
+        }
+        Ok((can, euc))
+    }
+
+    /// Exact Laplacian power traces of a dense normalized Laplacian
+    /// (order ≤ `trace_n`): returns `[|V|, tr L, tr L², tr L³, tr L⁴]`.
+    pub fn trace_powers(&self, lap: &[f64], n: usize) -> Result<[f64; 5]> {
+        let pad = self.manifest.shapes.trace_n;
+        if n > pad {
+            return Err(anyhow!("order {n} exceeds artifact padding {pad}"));
+        }
+        assert_eq!(lap.len(), n * n);
+        let mut buf = vec![0.0f32; pad * pad];
+        for i in 0..n {
+            for j in 0..n {
+                buf[i * pad + j] = lap[i * n + j] as f32;
+            }
+        }
+        let outs = self.exec(
+            "trace_powers",
+            &[(buf, vec![pad as i64, pad as i64]), (vec![n as f32], vec![1])],
+        )?;
+        let t = &outs[0];
+        Ok([t[0] as f64, t[1] as f64, t[2] as f64, t[3] as f64, t[4] as f64])
+    }
+}
+
+/// Test/harness helper: load the runtime or skip with a notice when the
+/// artifacts have not been built (`make artifacts`).
+pub fn runtime_or_skip() -> Option<Runtime> {
+    let dir = Runtime::default_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!(
+            "[skip] artifacts not found at {} — run `make artifacts`",
+            dir.display()
+        );
+        return None;
+    }
+    match Runtime::load(&dir) {
+        Ok(r) => Some(r),
+        Err(e) => panic!("artifacts present but failed to load: {e:#}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::count::overlap;
+    use crate::descriptors::psi;
+
+    #[test]
+    fn manifest_contract_matches_rust_mirrors() {
+        let Some(rt) = runtime_or_skip() else { return };
+        // j-grid
+        let jg = psi::j_grid();
+        assert_eq!(rt.manifest.j_grid.len(), jg.len());
+        for (a, b) in rt.manifest.j_grid.iter().zip(&jg) {
+            assert!((a - b).abs() < 1e-6, "j-grid mismatch {a} vs {b}");
+        }
+        // overlap matrix
+        let o = overlap::overlap_matrix();
+        for i in 0..17 {
+            for j in 0..17 {
+                assert_eq!(rt.manifest.overlap_matrix[i][j], o[i][j], "O({i},{j})");
+            }
+        }
+        // graphlet names
+        for (a, b) in rt.manifest.graphlet_names.iter().zip(crate::count::NAMES) {
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn gabe_finalize_matches_rust() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let g = crate::gen::er_graph(
+            20,
+            50,
+            &mut crate::util::rng::Pcg64::seed_from_u64(71),
+        );
+        let est = crate::exact::gabe_exact(&g);
+        let want = est.descriptor();
+        let got = rt
+            .gabe_finalize(&[est.counts], &[est.nv as f64])
+            .unwrap();
+        for (a, b) in got[0].iter().zip(&want) {
+            assert!((a - b).abs() < 1e-3 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn santa_psi_matches_rust() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let traces = [100.0, 98.0, 140.0, 60.0, 250.0];
+        let nv = 100.0;
+        let got = rt.santa_psi(&[traces], &[nv]).unwrap();
+        let want = psi::psi_from_traces(&traces, nv);
+        for v in 0..6 {
+            for k in 0..60 {
+                let a = got[0].0[v * 60 + k];
+                let b = want[v][k];
+                assert!((a - b).abs() < 1e-3 * b.abs().max(1e-3), "v{v} k{k}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn maeve_moments_matches_rust() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let g = crate::gen::ba_graph(
+            150,
+            3,
+            &mut crate::util::rng::Pcg64::seed_from_u64(72),
+        );
+        let est = crate::exact::maeve_exact(&g);
+        let feats = est.features();
+        let rows: Vec<[f64; 5]> = (0..g.n)
+            .map(|v| [feats[0][v], feats[1][v], feats[2][v], feats[3][v], feats[4][v]])
+            .collect();
+        let got = rt.maeve_moments(&[rows]).unwrap();
+        let want = est.descriptor();
+        for (a, b) in got[0].iter().zip(&want) {
+            assert!((a - b).abs() < 2e-3 * b.abs().max(1.0), "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn pairwise_dist_matches_rust() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let mut rng = crate::util::rng::Pcg64::seed_from_u64(73);
+        let x: Vec<Vec<f64>> =
+            (0..300).map(|_| (0..17).map(|_| rng.gen_range_f64(-2.0, 2.0)).collect()).collect();
+        let (can, euc) = rt.pairwise_dist(&x, &x).unwrap();
+        let dm_c = crate::classify::DistanceMatrix::compute(&x, crate::classify::Metric::Canberra);
+        let dm_e =
+            crate::classify::DistanceMatrix::compute(&x, crate::classify::Metric::Euclidean);
+        for i in 0..300 {
+            for j in 0..300 {
+                assert!(
+                    (can[i * 300 + j] - dm_c.get(i, j)).abs() < 1e-3 * dm_c.get(i, j).max(1.0)
+                );
+                assert!(
+                    (euc[i * 300 + j] - dm_e.get(i, j)).abs() < 1e-3 * dm_e.get(i, j).max(1.0)
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn trace_powers_matches_streaming_exact() {
+        let Some(rt) = runtime_or_skip() else { return };
+        let g = crate::gen::er_graph(
+            80,
+            200,
+            &mut crate::util::rng::Pcg64::seed_from_u64(74),
+        );
+        let lap = crate::graph::csr::Csr::from_graph(&g).normalized_laplacian();
+        let got = rt.trace_powers(&lap, g.n).unwrap();
+        let want = crate::exact::santa_exact(&g).traces;
+        for k in 0..5 {
+            assert!(
+                (got[k] - want[k]).abs() < 1e-2 * want[k].abs().max(1.0),
+                "tr(L^{k}): {} vs {}",
+                got[k],
+                want[k]
+            );
+        }
+    }
+}

@@ -1,0 +1,130 @@
+//! Reservoir sampling and subgraph detection probabilities (paper §3.3).
+//!
+//! The estimator framework (Algorithm 1) maintains a uniform reservoir of at
+//! most `b` edges.  When edge `e_t` arrives, every instance of a pattern `F`
+//! completed by `e_t` within `sample ∪ {e_t}` is credited `1/p_t^F`, where
+//!
+//! ```text
+//! p_t^F = min(1, Π_{i=0}^{|E_F|-2} (b - i) / (t - 1 - i))
+//! ```
+//!
+//! is the probability that the other `|E_F|-1` edges of the instance are
+//! still in the reservoir after `t-1` steps (Theorem 1: the estimates are
+//! unbiased).
+
+pub mod reservoir;
+
+pub use reservoir::{Reservoir, ReservoirAction};
+
+/// Detection probability `p_t^F` for a pattern with `f_edges` edges at the
+/// arrival of the `t`-th edge (1-based) under budget `b`.
+///
+/// For `f_edges == 1` this is 1 (the arriving edge is always seen).
+#[inline]
+pub fn detection_probability(f_edges: usize, t: usize, b: usize) -> f64 {
+    debug_assert!(f_edges >= 1 && t >= 1);
+    let mut p = 1.0f64;
+    for i in 0..f_edges.saturating_sub(1) {
+        let denom = t as f64 - 1.0 - i as f64;
+        if denom <= 0.0 {
+            continue; // fewer than i+1 prior edges: everything is stored
+        }
+        let num = (b as f64 - i as f64).min(denom);
+        if num <= 0.0 {
+            return 0.0; // budget smaller than the pattern; undetectable
+        }
+        p *= num / denom;
+    }
+    p.min(1.0)
+}
+
+/// Inverse detection probabilities for patterns with 2, 3 and 4 edges —
+/// the three weights every per-edge enumeration step needs.  Computed once
+/// per arriving edge.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Weights {
+    /// 1/p for 2-edge patterns (wedges / 3-paths).
+    pub w2: f64,
+    /// 1/p for 3-edge patterns (triangles, paths on 4 vertices, ...).
+    pub w3: f64,
+    /// 1/p for 4-edge patterns (4-cycles, paws, ...).
+    pub w4: f64,
+    /// 1/p for 5-edge patterns (diamonds).
+    pub w5: f64,
+    /// 1/p for 6-edge patterns (4-cliques).
+    pub w6: f64,
+}
+
+impl Weights {
+    #[inline]
+    pub fn at(t: usize, b: usize) -> Self {
+        Weights {
+            w2: 1.0 / detection_probability(2, t, b),
+            w3: 1.0 / detection_probability(3, t, b),
+            w4: 1.0 / detection_probability(4, t, b),
+            w5: 1.0 / detection_probability(5, t, b),
+            w6: 1.0 / detection_probability(6, t, b),
+        }
+    }
+
+    /// Exact counting (infinite budget): all weights 1.
+    pub const EXACT: Weights =
+        Weights { w2: 1.0, w3: 1.0, w4: 1.0, w5: 1.0, w6: 1.0 };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probability_is_one_before_budget_fills() {
+        for t in 1..=101 {
+            assert_eq!(detection_probability(3, t, 100), 1.0, "t={t}");
+        }
+    }
+
+    #[test]
+    fn probability_formula_after_budget() {
+        // t-1 = 200, b = 100, 3-edge pattern: p = (100/200) * (99/199)
+        let p = detection_probability(3, 201, 100);
+        assert!((p - (100.0 / 200.0) * (99.0 / 199.0)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn probability_monotone_decreasing_in_t() {
+        let mut last = 1.0;
+        for t in 1..5000 {
+            let p = detection_probability(4, t, 50);
+            assert!(p <= last + 1e-15);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn probability_monotone_increasing_in_b() {
+        let t = 10_000;
+        let mut last = 0.0;
+        for b in [10, 100, 1000, 10_000] {
+            let p = detection_probability(3, t, b);
+            assert!(p >= last);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn single_edge_pattern_always_detected() {
+        assert_eq!(detection_probability(1, 1_000_000, 1), 1.0);
+    }
+
+    #[test]
+    fn tiny_budget_cannot_detect_big_patterns() {
+        // b = 2 cannot hold the 3 remaining edges of a 4-edge pattern.
+        assert_eq!(detection_probability(4, 1000, 2), 0.0);
+    }
+
+    #[test]
+    fn weights_exact_is_all_ones() {
+        let w = Weights::at(5, 1000);
+        assert_eq!(w, Weights::EXACT);
+    }
+}

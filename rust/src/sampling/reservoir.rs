@@ -1,0 +1,169 @@
+//! Vitter's reservoir sampling over edges (paper §3.3, [46]).
+//!
+//! The reservoir keeps a uniform sample of `b` edges from the prefix seen so
+//! far: the first `b` edges are stored; afterwards, edge `e_t` replaces a
+//! uniformly random stored edge with probability `b/t`.  The
+//! [`ReservoirAction`] returned by [`Reservoir::offer`] tells the caller
+//! which edge (if any) to evict from its adjacency structure — keeping the
+//! sample graph and the reservoir in lock-step.
+
+
+use crate::graph::Edge;
+use crate::util::rng::Pcg64;
+
+/// What happened to the offered edge.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReservoirAction {
+    /// Edge stored; nothing evicted (reservoir not yet full).
+    Stored,
+    /// Edge stored; the contained edge was evicted.
+    Replaced(Edge),
+    /// Edge discarded.
+    Discarded,
+}
+
+/// Fixed-budget edge reservoir.
+#[derive(Debug, Clone)]
+pub struct Reservoir {
+    budget: usize,
+    edges: Vec<Edge>,
+    t: usize,
+    rng: Pcg64,
+}
+
+impl Reservoir {
+    pub fn new(budget: usize, rng: Pcg64) -> Self {
+        assert!(budget > 0, "budget must be positive");
+        Reservoir { budget, edges: Vec::with_capacity(budget.min(1 << 20)), t: 0, rng }
+    }
+
+    /// Current time step (number of edges offered so far).
+    #[inline]
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    #[inline]
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// Edges currently stored.
+    #[inline]
+    pub fn edges(&self) -> &[Edge] {
+        &self.edges
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.edges.len()
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.edges.is_empty()
+    }
+
+    /// Offer the next stream edge. Must be called exactly once per arriving
+    /// edge, in stream order.
+    pub fn offer(&mut self, e: Edge) -> ReservoirAction {
+        self.t += 1;
+        if self.edges.len() < self.budget {
+            self.edges.push(e);
+            return ReservoirAction::Stored;
+        }
+        // keep with probability b/t
+        if self.rng.gen_range_usize(0, self.t) < self.budget {
+            let slot = self.rng.gen_range_usize(0, self.budget);
+            let evicted = std::mem::replace(&mut self.edges[slot], e);
+            ReservoirAction::Replaced(evicted)
+        } else {
+            ReservoirAction::Discarded
+        }
+    }
+
+    /// Reset for a fresh stream (keeps budget and RNG state).
+    pub fn clear(&mut self) {
+        self.edges.clear();
+        self.t = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg64;
+
+    fn edges(n: u32) -> Vec<Edge> {
+        (0..n).map(|i| Edge::new(i, i + 1)).collect()
+    }
+
+    #[test]
+    fn stores_everything_under_budget() {
+        let mut r = Reservoir::new(100, Pcg64::seed_from_u64(1));
+        for e in edges(50) {
+            assert_eq!(r.offer(e), ReservoirAction::Stored);
+        }
+        assert_eq!(r.len(), 50);
+        assert_eq!(r.t(), 50);
+    }
+
+    #[test]
+    fn never_exceeds_budget() {
+        let mut r = Reservoir::new(10, Pcg64::seed_from_u64(2));
+        for e in edges(10_000) {
+            r.offer(e);
+            assert!(r.len() <= 10);
+        }
+        assert_eq!(r.len(), 10);
+    }
+
+    #[test]
+    fn replaced_edge_was_in_reservoir() {
+        let mut r = Reservoir::new(5, Pcg64::seed_from_u64(3));
+        for e in edges(1000) {
+            let before = r.edges().to_vec();
+            match r.offer(e) {
+                ReservoirAction::Replaced(old) => {
+                    assert!(before.contains(&old));
+                    assert!(r.edges().contains(&e));
+                }
+                ReservoirAction::Stored => assert!(before.len() < 5),
+                ReservoirAction::Discarded => {
+                    assert_eq!(before, r.edges());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sampling_is_approximately_uniform() {
+        // Each of 100 edges should appear in a b=20 reservoir with p = 0.2.
+        let trials = 2000;
+        let mut hits = vec![0u32; 100];
+        for seed in 0..trials {
+            let mut r = Reservoir::new(20, Pcg64::seed_from_u64(seed));
+            for e in edges(100) {
+                r.offer(e);
+            }
+            for e in r.edges() {
+                hits[e.u as usize] += 1;
+            }
+        }
+        for (i, &h) in hits.iter().enumerate() {
+            let p = h as f64 / trials as f64;
+            assert!((p - 0.2).abs() < 0.05, "edge {i}: p={p}");
+        }
+    }
+
+    #[test]
+    fn clear_resets_time() {
+        let mut r = Reservoir::new(5, Pcg64::seed_from_u64(4));
+        for e in edges(100) {
+            r.offer(e);
+        }
+        r.clear();
+        assert_eq!(r.t(), 0);
+        assert!(r.is_empty());
+    }
+}

@@ -1,0 +1,125 @@
+//! Criterion-style micro-benchmark harness (the registry has no criterion;
+//! `benches/*.rs` are `harness = false` binaries built on this).
+//!
+//! Reports min/median/mean over timed iterations after warmup, with a
+//! throughput column when the caller supplies an element count.
+
+use std::time::{Duration, Instant};
+
+/// One benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min: Duration,
+    pub median: Duration,
+    pub mean: Duration,
+    /// Optional elements-per-iteration for throughput reporting.
+    pub elements: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.elements
+            .map(|e| e as f64 / self.median.as_secs_f64().max(1e-12))
+    }
+}
+
+fn fmt_dur(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.0} ns", s * 1e9)
+    }
+}
+
+/// Benchmark runner: fixed warmup iterations then timed iterations.
+pub struct Bencher {
+    pub warmup: usize,
+    pub iters: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, iters: 7, results: Vec::new() }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bencher { warmup, iters: iters.max(1), results: Vec::new() }
+    }
+
+    /// Time `f`; `elements` enables a throughput column (e.g. edges/s).
+    pub fn bench<T>(
+        &mut self,
+        name: impl Into<String>,
+        elements: Option<u64>,
+        mut f: impl FnMut() -> T,
+    ) -> &BenchResult {
+        let name = name.into();
+        for _ in 0..self.warmup {
+            std::hint::black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let min = times[0];
+        let median = times[times.len() / 2];
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let r = BenchResult { name: name.clone(), iters: self.iters, min, median, mean, elements };
+        println!(
+            "bench {:<44} min {:>11}  median {:>11}  mean {:>11}{}",
+            r.name,
+            fmt_dur(r.min),
+            fmt_dur(r.median),
+            fmt_dur(r.mean),
+            r.throughput()
+                .map(|t| format!("  thpt {:.3e}/s", t))
+                .unwrap_or_default()
+        );
+        self.results.push(r);
+        self.results.last().unwrap()
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reports_plausible_times() {
+        let mut b = Bencher::new(1, 3);
+        let r = b.bench("spin", Some(1000), || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(i * i);
+            }
+            acc
+        });
+        assert!(r.min <= r.median && r.median <= r.mean * 2);
+        assert!(r.throughput().unwrap() > 0.0);
+        assert_eq!(b.results().len(), 1);
+    }
+
+    #[test]
+    fn format_durations() {
+        assert_eq!(fmt_dur(Duration::from_secs(2)), "2.000 s");
+        assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
+        assert!(fmt_dur(Duration::from_nanos(100)).contains("ns"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-contained substrates the offline build environment forces us to
+//! own: a PCG PRNG ([`rng`]), a JSON parser ([`json`]), a
+//! criterion-style micro-benchmark harness ([`bench`]) and temp-dir helpers
+//! ([`tmp`]).  (The image's cargo registry carries only the xla crate's
+//! build closure — no rand/serde_json/criterion/tokio — so these are
+//! implemented from scratch and tested like everything else.)
+
+pub mod bench;
+pub mod json;
+pub mod par;
+pub mod rng;
+pub mod tmp;

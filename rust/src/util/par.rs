@@ -1,0 +1,78 @@
+//! Scoped-thread parallel map (no rayon in the offline registry).
+
+/// Parallel map over `items` with work stealing via an atomic cursor.
+/// Results keep input order.  `threads = 0` ⇒ available parallelism.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(4)
+    } else {
+        threads
+    }
+    .min(items.len().max(1));
+
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, t)| f(i, t)).collect();
+    }
+
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    let cursor = AtomicUsize::new(0);
+    let mut out: Vec<Option<R>> = (0..items.len()).map(|_| None).collect();
+    let slots: Vec<std::sync::Mutex<&mut Option<R>>> =
+        out.iter_mut().map(std::sync::Mutex::new).collect();
+    std::thread::scope(|scope| {
+        for _ in 0..threads {
+            scope.spawn(|| loop {
+                let i = cursor.fetch_add(1, Ordering::Relaxed);
+                if i >= items.len() {
+                    break;
+                }
+                let r = f(i, &items[i]);
+                **slots[i].lock().unwrap() = Some(r);
+            });
+        }
+    });
+    drop(slots);
+    out.into_iter().map(|o| o.expect("worker missed a slot")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn preserves_order_and_values() {
+        let items: Vec<u64> = (0..1000).collect();
+        let got = par_map(&items, 8, |i, &x| {
+            assert_eq!(i as u64, x);
+            x * x
+        });
+        for (i, v) in got.iter().enumerate() {
+            assert_eq!(*v, (i * i) as u64);
+        }
+    }
+
+    #[test]
+    fn single_thread_and_empty() {
+        let got = par_map(&[1, 2, 3], 1, |_, &x| x + 1);
+        assert_eq!(got, vec![2, 3, 4]);
+        let empty: Vec<i32> = par_map(&[] as &[i32], 4, |_, &x| x);
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn uneven_work() {
+        let items: Vec<usize> = (0..50).collect();
+        let got = par_map(&items, 4, |_, &x| {
+            if x % 7 == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            x
+        });
+        assert_eq!(got, items);
+    }
+}

@@ -1,0 +1,246 @@
+//! Integration tests: cross-module flows (stream → estimator → finalize →
+//! classify) and runtime-backed paths when artifacts are present.
+
+use stream_descriptors::analyze::canberra;
+use stream_descriptors::classify::{cross_validate, DistanceMatrix, Metric};
+use stream_descriptors::coordinator::{
+    run_pipeline, CoordinatorConfig, DescriptorKind, WorkerEstimate,
+};
+use stream_descriptors::count::idx;
+use stream_descriptors::descriptors::psi::{psi_from_eigenvalues, psi_from_traces};
+use stream_descriptors::descriptors::santa::SantaEstimator;
+use stream_descriptors::descriptors::{gabe::GabeEstimator, maeve::MaeveEstimator};
+use stream_descriptors::exact;
+use stream_descriptors::gen;
+use stream_descriptors::gen::datasets::make_dataset;
+use stream_descriptors::graph::csr::Csr;
+use stream_descriptors::graph::stream::{
+    preprocess_pairs, EdgeStream, FileStream, VecStream,
+};
+use stream_descriptors::linalg::symmetric_eigenvalues;
+use stream_descriptors::runtime::runtime_or_skip;
+use stream_descriptors::util::rng::Pcg64;
+
+/// File-backed stream → two-pass SANTA → same traces as in-memory stream.
+#[test]
+fn file_stream_two_pass_equals_vec_stream() {
+    let g = gen::er_graph(200, 600, &mut Pcg64::seed_from_u64(1));
+    let dir = std::env::temp_dir().join(format!("sd-int-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("edges.txt");
+    stream_descriptors::graph::stream::write_edge_list(&path, &g.edges).unwrap();
+
+    let mut fs = FileStream::open(&path).unwrap();
+    let a = SantaEstimator::new(g.m()).run(&mut fs);
+    let mut vs = VecStream::new(g.edges.clone());
+    let b = SantaEstimator::new(g.m()).run(&mut vs);
+    for k in 0..5 {
+        assert!((a.traces[k] - b.traces[k]).abs() < 1e-12);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Raw-pair preprocessing → stream → estimator is robust to junk input.
+#[test]
+fn preprocessing_pipeline_end_to_end() {
+    let pairs: Vec<(u32, u32)> = vec![
+        (100, 200),
+        (200, 100), // duplicate (reversed)
+        (5, 5),     // self loop
+        (100, 300),
+        (200, 300),
+        (300, 400),
+    ];
+    let edges = preprocess_pairs(pairs, 3);
+    assert_eq!(edges.len(), 4);
+    let mut s = VecStream::new(edges);
+    let est = GabeEstimator::new(100).run(&mut s);
+    assert_eq!(est.ne, 4);
+    assert_eq!(est.nv, 4); // dense relabel 0..3
+}
+
+/// Full classification flow on a small two-class dataset: streamed
+/// descriptors must beat chance decisively.
+#[test]
+fn streamed_descriptors_classify_above_chance() {
+    let ds = make_dataset("OHSU", 0.6, 5);
+    let descs: Vec<Vec<f64>> = ds
+        .graphs
+        .iter()
+        .enumerate()
+        .map(|(i, g)| {
+            let mut s = VecStream::shuffled(g.edges.clone(), i as u64);
+            GabeEstimator::new((g.m() / 2).max(2))
+                .with_seed(i as u64)
+                .run(&mut s)
+                .descriptor()
+                .to_vec()
+        })
+        .collect();
+    let dm = DistanceMatrix::compute(&descs, Metric::Canberra);
+    let cv = cross_validate(&dm, &ds.labels, 10, 3, 1);
+    assert!(cv.accuracy > 60.0, "accuracy {}", cv.accuracy);
+}
+
+/// Coordinator + SANTA + ψ finalization against the exact spectral path.
+#[test]
+fn pipeline_santa_close_to_spectrum() {
+    let g = gen::er_graph(300, 900, &mut Pcg64::seed_from_u64(9));
+    let cfg = CoordinatorConfig {
+        workers: 4,
+        budget: g.m() / 2,
+        chunk_size: 128,
+        queue_depth: 4,
+        seed: 13,
+    };
+    let mut s = VecStream::shuffled(g.edges.clone(), 2);
+    let r = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg);
+    let WorkerEstimate::Santa(est) = &r.averaged else { unreachable!() };
+    let psi = psi_from_traces(&est.traces, est.nv as f64);
+    let eigs = symmetric_eigenvalues(&Csr::from_graph(&g).normalized_laplacian(), g.n);
+    let truth = psi_from_eigenvalues(&eigs, g.n as f64);
+    // HC variant, small j: tight agreement
+    for k in 0..20 {
+        let rel = (psi[2][k] - truth[2][k]).abs() / truth[2][k].abs();
+        assert!(rel < 0.05, "k={k}: {} vs {}", psi[2][k], truth[2][k]);
+    }
+}
+
+/// Exact-budget MAEVE through the coordinator equals the single-threaded
+/// exact baseline, independent of worker count and chunking.
+#[test]
+fn coordinator_invariant_to_chunking() {
+    let g = gen::ba_graph(400, 3, &mut Pcg64::seed_from_u64(21));
+    let exact = exact::maeve_exact(&g);
+    for (workers, chunk) in [(1, 1), (3, 17), (7, 1024)] {
+        let cfg = CoordinatorConfig {
+            workers,
+            budget: g.m(),
+            chunk_size: chunk,
+            queue_depth: 2,
+            seed: 5,
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 1);
+        let r = run_pipeline(&mut s, DescriptorKind::Maeve, &cfg);
+        let WorkerEstimate::Maeve(est) = &r.averaged else { unreachable!() };
+        for v in 0..g.n {
+            assert!((est.triangles[v] - exact.triangles[v]).abs() < 1e-9);
+            assert!((est.paths[v] - exact.paths[v]).abs() < 1e-9);
+        }
+    }
+}
+
+/// PJRT end-to-end: streamed estimates finalized by the artifacts, distance
+/// kernel vs rust metric, classification accuracy unchanged.
+#[test]
+fn pjrt_end_to_end_classification() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let ds = make_dataset("OHSU", 0.4, 7);
+    let raw: Vec<_> = ds
+        .graphs
+        .iter()
+        .enumerate()
+        .map(|(i, g)| {
+            let mut s = VecStream::shuffled(g.edges.clone(), i as u64);
+            SantaEstimator::new((g.m() / 2).max(2))
+                .with_seed(i as u64)
+                .run(&mut s)
+        })
+        .collect();
+    let traces: Vec<[f64; 5]> = raw.iter().map(|e| e.traces).collect();
+    let nv: Vec<f64> = raw.iter().map(|e| e.nv as f64).collect();
+    let finalized = rt.santa_psi(&traces, &nv).unwrap();
+    let descs: Vec<Vec<f64>> = finalized
+        .iter()
+        .map(|(psi, _, _)| psi[2 * 60..3 * 60].to_vec())
+        .collect();
+    // cross-check vs rust mirror
+    for (d, e) in descs.iter().zip(&raw) {
+        let mirror = psi_from_traces(&e.traces, e.nv as f64)[2];
+        for (a, b) in d.iter().zip(&mirror) {
+            assert!((a - b).abs() < 1e-3 * b.abs().max(1e-3));
+        }
+    }
+    let (_, euc) = rt.pairwise_dist(&descs, &descs).unwrap();
+    let dm = DistanceMatrix::from_raw(descs.len(), euc);
+    let cv = cross_validate(&dm, &ds.labels, 5, 2, 3);
+    assert!(cv.accuracy > 40.0);
+}
+
+/// MAEVE features derived from a streamed estimate satisfy Theorem 3's
+/// identities against an exact recount on the same graph.
+#[test]
+fn theorem3_identities_hold_end_to_end() {
+    let g = gen::powerlaw_cluster_graph(120, 3, 0.7, &mut Pcg64::seed_from_u64(31));
+    let est = exact::maeve_exact(&g);
+    let feats = est.features();
+    let csr = Csr::from_graph(&g);
+    for v in 0..g.n {
+        let d = csr.degree(v as u32) as f64;
+        // egonet edge count by direct inspection
+        let nb = csr.neighbors(v as u32);
+        let mut ego = d;
+        for (i, &a) in nb.iter().enumerate() {
+            for &b in &nb[i + 1..] {
+                if csr.has_edge(a, b) {
+                    ego += 1.0;
+                }
+            }
+        }
+        assert!((feats[3][v] - ego).abs() < 1e-9, "egonet edges at {v}");
+    }
+}
+
+/// The GABE vector of a disjoint union relates sanely to its parts
+/// (connected counts add; a quick linearity sanity check).
+#[test]
+fn counts_additive_over_disjoint_union() {
+    let g1 = gen::er_graph(40, 120, &mut Pcg64::seed_from_u64(41));
+    let shift = g1.n as u32;
+    let mut pairs: Vec<(u32, u32)> = g1.edges.iter().map(|e| (e.u, e.v)).collect();
+    pairs.extend(g1.edges.iter().map(|e| (e.u + shift, e.v + shift)));
+    let union = stream_descriptors::graph::Graph::from_pairs(pairs);
+    let a = exact::gabe_exact(&g1).counts;
+    let u = exact::gabe_exact(&union).counts;
+    for gi in [idx::TRIANGLE, idx::PATH4, idx::CYCLE4, idx::PAW, idx::DIAMOND, idx::K4] {
+        assert!((u[gi] - 2.0 * a[gi]).abs() < 1e-6, "graphlet {gi}");
+    }
+}
+
+/// Descriptor distance between a graph and itself under different stream
+/// orders shrinks as budget grows (stability check used by Fig. 5).
+#[test]
+fn estimate_stability_improves_with_budget() {
+    let g = gen::reddit_like(&mut Pcg64::seed_from_u64(51));
+    let spread = |frac: f64| {
+        let b = (g.m() as f64 * frac) as usize;
+        let d1 = {
+            let mut s = VecStream::shuffled(g.edges.clone(), 1);
+            GabeEstimator::new(b).with_seed(1).run(&mut s).descriptor()
+        };
+        let d2 = {
+            let mut s = VecStream::shuffled(g.edges.clone(), 2);
+            GabeEstimator::new(b).with_seed(2).run(&mut s).descriptor()
+        };
+        canberra(&d1, &d2)
+    };
+    let lo = spread(0.1);
+    let hi = spread(0.8);
+    assert!(hi < lo, "spread at 0.8|E| ({hi}) should beat 0.1|E| ({lo})");
+}
+
+/// Stream length mismatch handling: estimators cope with empty streams.
+#[test]
+fn empty_and_tiny_streams() {
+    let mut s = VecStream::new(Vec::new());
+    let est = GabeEstimator::new(10).run(&mut s);
+    assert_eq!(est.nv, 0);
+    assert_eq!(est.ne, 0);
+    assert!(est.counts.iter().all(|c| *c == 0.0));
+
+    let mut s = VecStream::new(vec![stream_descriptors::graph::Edge::new(0, 1)]);
+    let est = MaeveEstimator::new(10).run(&mut s);
+    assert_eq!(est.nv, 2);
+    let d = est.descriptor();
+    assert!(d.iter().all(|x| x.is_finite()));
+}
