@@ -8,6 +8,12 @@ use stream_descriptors::util::bench::Bencher;
 use stream_descriptors::util::rng::Pcg64;
 
 fn main() {
+    // `cargo bench -- --test` (the CI smoke check) verifies the bench
+    // compiles and launches, then exits without timing anything.
+    if std::env::args().any(|a| a == "--test") {
+        println!("workers: smoke mode, skipping timed runs");
+        return;
+    }
     let g = gen::ba_graph(200_000, 4, &mut Pcg64::seed_from_u64(9));
     let m = g.m() as u64;
     println!("# BA graph |V|={} |E|={}", g.n, g.m());

@@ -104,7 +104,7 @@ impl NetSimile {
             let mut ego_nbrs = std::collections::HashSet::new();
             for &w in nbrs {
                 for &x in csr.neighbors(w) {
-                    if x != vu && !nbrs.binary_search(&x).is_ok() {
+                    if x != vu && nbrs.binary_search(&x).is_err() {
                         leaving += 1.0;
                         ego_nbrs.insert(x);
                     }

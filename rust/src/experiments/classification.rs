@@ -205,37 +205,15 @@ pub fn table15(ctx: &Ctx, dataset_filter: Option<&str>) -> Result<()> {
                 let est = GabeEstimator::new(b).with_seed(seed).run(&mut s);
                 (est.counts, est.nv as f64)
             });
+            let counts: Vec<[f64; 17]> = gabe.iter().map(|(c, _)| *c).collect();
+            let gnv: Vec<f64> = gabe.iter().map(|(_, n)| *n).collect();
             let gabe_desc: Vec<Vec<f64>> = if let Some(rt) = ctx.runtime.as_ref() {
-                let counts: Vec<[f64; 17]> = gabe.iter().map(|(c, _)| *c).collect();
-                let nv: Vec<f64> = gabe.iter().map(|(_, n)| *n).collect();
-                rt.gabe_finalize(&counts, &nv).unwrap_or_else(|e| {
-                    eprintln!("warn: gabe artifact failed ({e}); rust fallback");
-                    gabe.iter()
-                        .map(|(c, n)| {
-                            crate::descriptors::gabe::GabeEstimate {
-                                counts: *c,
-                                nv: *n as u64,
-                                ne: 0,
-                                degrees: Vec::new(),
-                            }
-                            .descriptor()
-                            .to_vec()
-                        })
-                        .collect()
+                rt.gabe_finalize(&counts, &gnv).unwrap_or_else(|e| {
+                    eprintln!("warn: gabe artifact failed ({e}); native fallback");
+                    crate::runtime::native::gabe_finalize(&counts, &gnv)
                 })
             } else {
-                gabe.iter()
-                    .map(|(c, n)| {
-                        crate::descriptors::gabe::GabeEstimate {
-                            counts: *c,
-                            nv: *n as u64,
-                            ne: 0,
-                            degrees: Vec::new(),
-                        }
-                        .descriptor()
-                        .to_vec()
-                    })
-                    .collect()
+                crate::runtime::native::gabe_finalize(&counts, &gnv)
             };
             let a = accuracy(ctx, &gabe_desc, &ds.labels, Metric::Canberra);
             acc_cells.push((format!("GABE@{frac}"), a.accuracy));

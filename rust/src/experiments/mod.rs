@@ -20,8 +20,10 @@ use crate::Result;
 
 /// Shared experiment context.
 pub struct Ctx {
-    /// PJRT runtime when artifacts are built; experiments fall back to the
-    /// rust mirrors (and say so) when absent.
+    /// The L2 runtime: PJRT when the `pjrt` feature and artifacts are
+    /// present, the native backend otherwise.  `None` only when a PJRT
+    /// build finds broken artifacts (experiments then fall back to the
+    /// rust mirrors and say so).
     pub runtime: Option<Runtime>,
     /// Dataset scale factor (1.0 = paper-sized graph counts).
     pub scale: f64,
@@ -35,11 +37,18 @@ pub struct Ctx {
 impl Ctx {
     pub fn new(scale: f64, massive_scale: f64, seed: u64) -> Self {
         let runtime = match Runtime::load_default() {
-            Ok(r) => Some(r),
+            Ok(r) => {
+                if r.is_native() {
+                    eprintln!(
+                        "note: L2 running on the native backend (enable the `pjrt` \
+                         feature and `make artifacts` for the XLA path)"
+                    );
+                }
+                Some(r)
+            }
             Err(e) => {
                 eprintln!(
-                    "note: PJRT artifacts unavailable ({e}); using rust finalizers \
-                     (run `make artifacts`)"
+                    "note: PJRT artifacts failed to load ({e}); using rust finalizers"
                 );
                 None
             }

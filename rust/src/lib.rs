@@ -15,7 +15,10 @@
 //!   harness.  Rust owns the entire request path.
 //! * **L2 (jax, build time)** — descriptor finalization and analytics
 //!   compute graphs, AOT-lowered to HLO text under `artifacts/` and executed
-//!   from [`runtime`] via PJRT.
+//!   from [`runtime`] via PJRT when the `pjrt` cargo feature is enabled; by
+//!   default the same call surface is served by the pure-rust native
+//!   backend ([`runtime::native`]), so the crate builds and runs on
+//!   machines without any XLA toolchain.
 //! * **L1 (Pallas, build time)** — the compute hot-spots inside the L2
 //!   graphs (tiled pairwise distances, masked moments, ψ_j evaluation,
 //!   blocked Laplacian powers), lowered with `interpret=True`.
@@ -36,5 +39,5 @@ pub mod runtime;
 pub mod sampling;
 pub mod util;
 
-/// Crate-wide result alias.
-pub type Result<T> = anyhow::Result<T>;
+/// Crate-wide result alias over the in-tree error type ([`util::err`]).
+pub type Result<T> = std::result::Result<T, util::err::Error>;

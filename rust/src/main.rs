@@ -122,9 +122,9 @@ fn quickstart(ctx: &Ctx) -> stream_descriptors::Result<()> {
     if let Some(rt) = ctx.runtime.as_ref() {
         let phi = rt.gabe_finalize(&[est.counts], &[est.nv as f64])?;
         println!("  L2-finalized φ (first 6): {:?}", &phi[0][..6]);
-        println!("  (finalized through PJRT on {})", rt.platform());
+        println!("  (finalized through the {} L2 backend)", rt.platform());
     } else {
-        println!("  (PJRT artifacts not built; run `make artifacts` for the L2 path)");
+        println!("  (L2 runtime unavailable; used the in-crate finalizers)");
     }
     Ok(())
 }

@@ -1,13 +1,14 @@
-//! `artifacts/manifest.json` — the rust↔python shape/semantics contract.
-//! Parsed with the in-tree JSON parser ([`crate::util::json`]).
+//! The runtime's shape/semantics contract.  The PJRT backend parses it
+//! from `artifacts/manifest.json` with the in-tree JSON parser
+//! ([`crate::util::json`]); the native backend synthesizes the same
+//! structure in code ([`crate::runtime::native::native_manifest`]).
 
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, ensure, Context};
-
+use crate::util::err::Context;
 use crate::util::json::Json;
-use crate::Result;
+use crate::{anyhow, ensure, Result};
 
 /// Per-artifact metadata.
 #[derive(Debug, Clone)]

@@ -1,170 +1,120 @@
-//! PJRT runtime: load the AOT artifacts (`artifacts/*.hlo.txt`) and execute
-//! the L2 compute graphs from the rust hot path.
+//! L2 runtime: execute the descriptor-finalization compute graphs.
 //!
-//! The interchange format is HLO *text* — jax ≥ 0.5 emits protos with
-//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see `python/compile/aot.py` and /opt/xla-example).
+//! Two interchangeable backends sit behind [`Runtime`]:
 //!
-//! Every executable is compiled once at [`Runtime::load`]; calls are
-//! batched and zero-padded to the fixed artifact shapes recorded in
-//! `manifest.json`.  The manifest also carries the overlap matrix and the
-//! ψ j-grid, which the test-suite cross-checks against this crate's own
-//! implementations — pinning the rust↔python contract.
+//! * **native** (always available, the default) — pure-rust implementations
+//!   of the five kernels (GABE finalization, masked MAEVE moments, ψ_j
+//!   evaluation, tiled pairwise distances, blocked Laplacian traces) built
+//!   on [`crate::linalg`] and friends; see [`native`].
+//! * **pjrt** (cargo feature `pjrt`) — loads the AOT artifacts
+//!   (`artifacts/*.hlo.txt`) produced by `python/compile/aot.py` and
+//!   executes them through a PJRT CPU client.  The interchange format is
+//!   HLO *text* — jax ≥ 0.5 emits protos with 64-bit instruction ids that
+//!   xla_extension 0.5.1 rejects; the text parser reassigns ids.  Calls are
+//!   batched and zero-padded to the fixed artifact shapes recorded in
+//!   `manifest.json`.
+//!
+//! Both backends share the [`Manifest`] contract (batch shapes, ψ j-grid,
+//! overlap matrix, graphlet names).  The test-suite cross-checks every
+//! kernel against the in-crate reference implementations
+//! ([`crate::count::overlap`], [`crate::linalg::moments`],
+//! [`crate::descriptors::psi`]), pinning the backend↔reference contract —
+//! and, when the artifacts are built, the rust↔python contract too.
 
 pub mod manifest;
+pub mod native;
 
-use std::collections::HashMap;
-use std::path::Path;
-
-use anyhow::anyhow;
+use std::path::{Path, PathBuf};
 
 pub use manifest::Manifest;
 
 use crate::Result;
 
-/// Compiled-artifact registry over a PJRT CPU client.
+/// Compiled-kernel registry: PJRT executables when the `pjrt` feature and
+/// artifacts are present, the in-crate native executor otherwise.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    exes: HashMap<String, xla::PjRtLoadedExecutable>,
     pub manifest: Manifest,
+    backend: Backend,
+}
+
+enum Backend {
+    Native,
+    #[cfg(feature = "pjrt")]
+    Pjrt(pjrt::PjrtBackend),
 }
 
 impl Runtime {
-    /// Load every artifact listed in `<dir>/manifest.json` and compile it.
+    /// The always-available pure-rust backend (manifest synthesized in
+    /// code — see [`native::native_manifest`]).
+    pub fn native() -> Self {
+        Runtime { manifest: native::native_manifest(), backend: Backend::Native }
+    }
+
+    /// True when this runtime executes through the native backend.
+    pub fn is_native(&self) -> bool {
+        matches!(self.backend, Backend::Native)
+    }
+
+    /// Load every artifact listed in `<dir>/manifest.json` and compile it
+    /// through PJRT.
+    #[cfg(feature = "pjrt")]
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref();
         let manifest = Manifest::load(dir.join("manifest.json"))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
-        let mut exes = HashMap::new();
-        for (name, art) in &manifest.artifacts {
-            let path = dir.join(&art.file);
-            let proto = xla::HloModuleProto::from_text_file(&path)
-                .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e}"))?;
-            exes.insert(name.clone(), exe);
-        }
-        Ok(Runtime { client, exes, manifest })
+        let backend = pjrt::PjrtBackend::load(dir, &manifest)?;
+        Ok(Runtime { manifest, backend: Backend::Pjrt(backend) })
     }
 
     /// Default artifact location (repo-relative), overridable via
     /// `STREAM_DESCRIPTORS_ARTIFACTS`.
-    pub fn default_dir() -> std::path::PathBuf {
+    pub fn default_dir() -> PathBuf {
         std::env::var_os("STREAM_DESCRIPTORS_ARTIFACTS")
             .map(Into::into)
-            .unwrap_or_else(|| {
-                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-            })
+            .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
     }
 
-    /// Convenience: load from [`Runtime::default_dir`].
+    /// Best runtime this build can execute: the PJRT artifacts when the
+    /// `pjrt` feature is on and `<default_dir>/manifest.json` exists, the
+    /// native backend otherwise.  Errs only when artifacts are present but
+    /// fail to load (contract drift must not be silently papered over).
     pub fn load_default() -> Result<Self> {
-        Self::load(Self::default_dir())
+        #[cfg(feature = "pjrt")]
+        {
+            if Self::default_dir().join("manifest.json").exists() {
+                return Self::load(Self::default_dir());
+            }
+        }
+        Ok(Self::native())
     }
 
+    /// Executor platform name (PJRT's, or `native-cpu`).
     pub fn platform(&self) -> String {
-        self.client.platform_name()
+        match &self.backend {
+            Backend::Native => "native-cpu".to_string(),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.platform(),
+        }
     }
-
-    /// Execute an artifact on f32 tensors; returns the flat f32 outputs.
-    fn exec(&self, name: &str, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
-        let exe = self
-            .exes
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
-        let lits: Vec<xla::Literal> = inputs
-            .iter()
-            .map(|(data, dims)| {
-                xla::Literal::vec1(data)
-                    .reshape(dims)
-                    .map_err(|e| anyhow!("reshape {dims:?}: {e}"))
-            })
-            .collect::<Result<_>>()?;
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("execute {name}: {e}"))?;
-        let lit = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e}"))?;
-        let tuple = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"))?;
-        tuple
-            .into_iter()
-            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e}")))
-            .collect()
-    }
-
-    // ------------------------------------------------------------------
-    // batched wrappers (pad → execute → strip)
-    // ------------------------------------------------------------------
 
     /// GABE finalization: estimated H counts (+|V|) → φ descriptors.
     pub fn gabe_finalize(&self, counts: &[[f64; 17]], nv: &[f64]) -> Result<Vec<Vec<f64>>> {
         assert_eq!(counts.len(), nv.len());
-        let b = self.manifest.shapes.gabe_b;
-        let mut out = Vec::with_capacity(counts.len());
-        for chunk_start in (0..counts.len()).step_by(b) {
-            let chunk = &counts[chunk_start..(chunk_start + b).min(counts.len())];
-            let nvc = &nv[chunk_start..chunk_start + chunk.len()];
-            let mut cbuf = vec![0.0f32; b * 17];
-            let mut nbuf = vec![0.0f32; b];
-            for (i, row) in chunk.iter().enumerate() {
-                for (j, &v) in row.iter().enumerate() {
-                    cbuf[i * 17 + j] = v as f32;
-                }
-                nbuf[i] = nvc[i] as f32;
-            }
-            let outs = self.exec(
-                "gabe_finalize",
-                &[(cbuf, vec![b as i64, 17]), (nbuf, vec![b as i64])],
-            )?;
-            for i in 0..chunk.len() {
-                out.push(outs[0][i * 17..(i + 1) * 17].iter().map(|&x| x as f64).collect());
-            }
+        match &self.backend {
+            Backend::Native => Ok(native::gabe_finalize(counts, nv)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.gabe_finalize(&self.manifest, counts, nv),
         }
-        Ok(out)
     }
 
-    /// MAEVE moment aggregation for graphs with ≤ `maeve_nv` vertices.
-    /// Each item: per-vertex 5-feature rows. Returns 20-dim descriptors.
+    /// MAEVE moment aggregation.  Each item: per-vertex 5-feature rows.
+    /// Returns 20-dim descriptors.  (The PJRT path additionally requires
+    /// every graph order ≤ the artifact padding `maeve_nv`.)
     pub fn maeve_moments(&self, graphs: &[Vec<[f64; 5]>]) -> Result<Vec<Vec<f64>>> {
-        let b = self.manifest.shapes.maeve_b;
-        let nv_pad = self.manifest.shapes.maeve_nv;
-        for g in graphs {
-            if g.len() > nv_pad {
-                return Err(anyhow!(
-                    "graph order {} exceeds artifact padding {nv_pad}; use the rust \
-                     fallback (linalg::moments)",
-                    g.len()
-                ));
-            }
+        match &self.backend {
+            Backend::Native => Ok(native::maeve_moments(graphs)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.maeve_moments(&self.manifest, graphs),
         }
-        let mut out = Vec::with_capacity(graphs.len());
-        for chunk_start in (0..graphs.len()).step_by(b) {
-            let chunk = &graphs[chunk_start..(chunk_start + b).min(graphs.len())];
-            let mut feats = vec![0.0f32; b * nv_pad * 5];
-            let mut mask = vec![0.0f32; b * nv_pad];
-            for (i, g) in chunk.iter().enumerate() {
-                for (v, row) in g.iter().enumerate() {
-                    for (f, &x) in row.iter().enumerate() {
-                        feats[(i * nv_pad + v) * 5 + f] = x as f32;
-                    }
-                    mask[i * nv_pad + v] = 1.0;
-                }
-            }
-            let outs = self.exec(
-                "maeve_moments",
-                &[
-                    (feats, vec![b as i64, nv_pad as i64, 5]),
-                    (mask, vec![b as i64, nv_pad as i64]),
-                ],
-            )?;
-            for i in 0..chunk.len() {
-                out.push(outs[0][i * 20..(i + 1) * 20].iter().map(|&x| x as f64).collect());
-            }
-        }
-        Ok(out)
     }
 
     /// SANTA ψ finalization: trace estimates → (ψ[6][60], heat-taylor[3][60],
@@ -176,31 +126,11 @@ impl Runtime {
         nv: &[f64],
     ) -> Result<Vec<(Vec<f64>, Vec<f64>, Vec<f64>)>> {
         assert_eq!(traces.len(), nv.len());
-        let b = self.manifest.shapes.santa_b;
-        let mut out = Vec::with_capacity(traces.len());
-        for chunk_start in (0..traces.len()).step_by(b) {
-            let chunk = &traces[chunk_start..(chunk_start + b).min(traces.len())];
-            let nvc = &nv[chunk_start..chunk_start + chunk.len()];
-            let mut tbuf = vec![0.0f32; b * 5];
-            let mut nbuf = vec![0.0f32; b];
-            for (i, row) in chunk.iter().enumerate() {
-                for (j, &v) in row.iter().enumerate() {
-                    tbuf[i * 5 + j] = v as f32;
-                }
-                nbuf[i] = nvc[i] as f32;
-            }
-            let outs = self.exec(
-                "santa_psi",
-                &[(tbuf, vec![b as i64, 5]), (nbuf, vec![b as i64])],
-            )?;
-            for i in 0..chunk.len() {
-                let psi = outs[0][i * 360..(i + 1) * 360].iter().map(|&x| x as f64).collect();
-                let ht = outs[1][i * 180..(i + 1) * 180].iter().map(|&x| x as f64).collect();
-                let wt = outs[2][i * 120..(i + 1) * 120].iter().map(|&x| x as f64).collect();
-                out.push((psi, ht, wt));
-            }
+        match &self.backend {
+            Backend::Native => Ok(native::santa_psi(traces, nv)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.santa_psi(&self.manifest, traces, nv),
         }
-        Ok(out)
     }
 
     /// Tiled pairwise distances between two descriptor sets.
@@ -210,87 +140,298 @@ impl Runtime {
         x: &[Vec<f64>],
         y: &[Vec<f64>],
     ) -> Result<(Vec<f64>, Vec<f64>)> {
-        let m_tile = self.manifest.shapes.dist_m;
-        let n_tile = self.manifest.shapes.dist_n;
-        let d_pad = self.manifest.shapes.dist_d;
-        let dim = x.first().or(y.first()).map(|v| v.len()).unwrap_or(0);
-        if dim > d_pad {
-            return Err(anyhow!("descriptor dim {dim} exceeds artifact padding {d_pad}"));
+        match &self.backend {
+            Backend::Native => Ok(native::pairwise_dist(x, y)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.pairwise_dist(&self.manifest, x, y),
         }
-        let (m, n) = (x.len(), y.len());
-        let mut can = vec![0.0f64; m * n];
-        let mut euc = vec![0.0f64; m * n];
-        let pack = |rows: &[Vec<f64>], tile: usize| -> Vec<f32> {
-            let mut buf = vec![0.0f32; tile * d_pad];
-            for (i, r) in rows.iter().enumerate() {
-                for (j, &v) in r.iter().enumerate() {
-                    buf[i * d_pad + j] = v as f32;
-                }
-            }
-            buf
-        };
-        for is in (0..m).step_by(m_tile) {
-            let xe = (is + m_tile).min(m);
-            let xbuf = pack(&x[is..xe], m_tile);
-            for js in (0..n).step_by(n_tile) {
-                let ye = (js + n_tile).min(n);
-                let ybuf = pack(&y[js..ye], n_tile);
-                let outs = self.exec(
-                    "pairwise_dist",
-                    &[
-                        (xbuf.clone(), vec![m_tile as i64, d_pad as i64]),
-                        (ybuf, vec![n_tile as i64, d_pad as i64]),
-                    ],
-                )?;
-                for i in is..xe {
-                    for j in js..ye {
-                        let src = (i - is) * n_tile + (j - js);
-                        can[i * n + j] = outs[0][src] as f64;
-                        euc[i * n + j] = outs[1][src] as f64;
-                    }
-                }
-            }
-        }
-        Ok((can, euc))
     }
 
-    /// Exact Laplacian power traces of a dense normalized Laplacian
-    /// (order ≤ `trace_n`): returns `[|V|, tr L, tr L², tr L³, tr L⁴]`.
+    /// Laplacian power traces of a dense normalized Laplacian:
+    /// returns `[|V|, tr L, tr L², tr L³, tr L⁴]`.  (The PJRT path requires
+    /// order ≤ the artifact padding `trace_n`.)
     pub fn trace_powers(&self, lap: &[f64], n: usize) -> Result<[f64; 5]> {
-        let pad = self.manifest.shapes.trace_n;
-        if n > pad {
-            return Err(anyhow!("order {n} exceeds artifact padding {pad}"));
-        }
         assert_eq!(lap.len(), n * n);
-        let mut buf = vec![0.0f32; pad * pad];
-        for i in 0..n {
-            for j in 0..n {
-                buf[i * pad + j] = lap[i * n + j] as f32;
-            }
+        match &self.backend {
+            Backend::Native => Ok(native::trace_powers(lap, n)),
+            #[cfg(feature = "pjrt")]
+            Backend::Pjrt(p) => p.trace_powers(&self.manifest, lap, n),
         }
-        let outs = self.exec(
-            "trace_powers",
-            &[(buf, vec![pad as i64, pad as i64]), (vec![n as f32], vec![1])],
-        )?;
-        let t = &outs[0];
-        Ok([t[0] as f64, t[1] as f64, t[2] as f64, t[3] as f64, t[4] as f64])
     }
 }
 
-/// Test/harness helper: load the runtime or skip with a notice when the
-/// artifacts have not been built (`make artifacts`).
+/// Test/harness helper: the runtime the current build can execute.  Always
+/// `Some` — the native backend needs no artifacts — except that, with the
+/// `pjrt` feature on, artifacts that exist but fail to load are a hard
+/// error (the name survives from when a missing-artifact build had to skip
+/// runtime-backed tests).
 pub fn runtime_or_skip() -> Option<Runtime> {
-    let dir = Runtime::default_dir();
-    if !dir.join("manifest.json").exists() {
-        eprintln!(
-            "[skip] artifacts not found at {} — run `make artifacts`",
-            dir.display()
-        );
-        return None;
-    }
-    match Runtime::load(&dir) {
-        Ok(r) => Some(r),
+    match Runtime::load_default() {
+        Ok(rt) => Some(rt),
         Err(e) => panic!("artifacts present but failed to load: {e:#}"),
+    }
+}
+
+#[cfg(feature = "pjrt")]
+mod pjrt {
+    //! The PJRT/HLO loader-executor.  Compiles only with `--features pjrt`,
+    //! which additionally requires the `xla` crate (see the commented-out
+    //! dependency in `Cargo.toml` and DESIGN.md §2).
+
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use super::Manifest;
+    use crate::{anyhow, Result};
+
+    /// Compiled-artifact registry over a PJRT CPU client.
+    pub(super) struct PjrtBackend {
+        client: xla::PjRtClient,
+        exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    }
+
+    impl PjrtBackend {
+        /// Compile every artifact the manifest lists.
+        pub fn load(dir: &Path, manifest: &Manifest) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu: {e}"))?;
+            let mut exes = HashMap::new();
+            for (name, art) in &manifest.artifacts {
+                let path = dir.join(&art.file);
+                let proto = xla::HloModuleProto::from_text_file(&path)
+                    .map_err(|e| anyhow!("parse {}: {e}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .map_err(|e| anyhow!("compile {name}: {e}"))?;
+                exes.insert(name.clone(), exe);
+            }
+            Ok(PjrtBackend { client, exes })
+        }
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        /// Execute an artifact on f32 tensors; returns the flat f32 outputs.
+        fn exec(&self, name: &str, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<Vec<f32>>> {
+            let exe = self
+                .exes
+                .get(name)
+                .ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+            let lits: Vec<xla::Literal> = inputs
+                .iter()
+                .map(|(data, dims)| {
+                    xla::Literal::vec1(data)
+                        .reshape(dims)
+                        .map_err(|e| anyhow!("reshape {dims:?}: {e}"))
+                })
+                .collect::<Result<_>>()?;
+            let result = exe
+                .execute::<xla::Literal>(&lits)
+                .map_err(|e| anyhow!("execute {name}: {e}"))?;
+            let lit = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch {name}: {e}"))?;
+            let tuple = lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e}"))?;
+            tuple
+                .into_iter()
+                .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec {name}: {e}")))
+                .collect()
+        }
+
+        // --------------------------------------------------------------
+        // batched wrappers (pad → execute → strip)
+        // --------------------------------------------------------------
+
+        pub fn gabe_finalize(
+            &self,
+            manifest: &Manifest,
+            counts: &[[f64; 17]],
+            nv: &[f64],
+        ) -> Result<Vec<Vec<f64>>> {
+            let b = manifest.shapes.gabe_b;
+            let mut out = Vec::with_capacity(counts.len());
+            for chunk_start in (0..counts.len()).step_by(b) {
+                let chunk = &counts[chunk_start..(chunk_start + b).min(counts.len())];
+                let nvc = &nv[chunk_start..chunk_start + chunk.len()];
+                let mut cbuf = vec![0.0f32; b * 17];
+                let mut nbuf = vec![0.0f32; b];
+                for (i, row) in chunk.iter().enumerate() {
+                    for (j, &v) in row.iter().enumerate() {
+                        cbuf[i * 17 + j] = v as f32;
+                    }
+                    nbuf[i] = nvc[i] as f32;
+                }
+                let outs = self.exec(
+                    "gabe_finalize",
+                    &[(cbuf, vec![b as i64, 17]), (nbuf, vec![b as i64])],
+                )?;
+                for i in 0..chunk.len() {
+                    out.push(
+                        outs[0][i * 17..(i + 1) * 17].iter().map(|&x| x as f64).collect(),
+                    );
+                }
+            }
+            Ok(out)
+        }
+
+        pub fn maeve_moments(
+            &self,
+            manifest: &Manifest,
+            graphs: &[Vec<[f64; 5]>],
+        ) -> Result<Vec<Vec<f64>>> {
+            let b = manifest.shapes.maeve_b;
+            let nv_pad = manifest.shapes.maeve_nv;
+            for g in graphs {
+                if g.len() > nv_pad {
+                    return Err(anyhow!(
+                        "graph order {} exceeds artifact padding {nv_pad}; use the \
+                         native backend (linalg::moments)",
+                        g.len()
+                    ));
+                }
+            }
+            let mut out = Vec::with_capacity(graphs.len());
+            for chunk_start in (0..graphs.len()).step_by(b) {
+                let chunk = &graphs[chunk_start..(chunk_start + b).min(graphs.len())];
+                let mut feats = vec![0.0f32; b * nv_pad * 5];
+                let mut mask = vec![0.0f32; b * nv_pad];
+                for (i, g) in chunk.iter().enumerate() {
+                    for (v, row) in g.iter().enumerate() {
+                        for (f, &x) in row.iter().enumerate() {
+                            feats[(i * nv_pad + v) * 5 + f] = x as f32;
+                        }
+                        mask[i * nv_pad + v] = 1.0;
+                    }
+                }
+                let outs = self.exec(
+                    "maeve_moments",
+                    &[
+                        (feats, vec![b as i64, nv_pad as i64, 5]),
+                        (mask, vec![b as i64, nv_pad as i64]),
+                    ],
+                )?;
+                for i in 0..chunk.len() {
+                    out.push(
+                        outs[0][i * 20..(i + 1) * 20].iter().map(|&x| x as f64).collect(),
+                    );
+                }
+            }
+            Ok(out)
+        }
+
+        #[allow(clippy::type_complexity)]
+        pub fn santa_psi(
+            &self,
+            manifest: &Manifest,
+            traces: &[[f64; 5]],
+            nv: &[f64],
+        ) -> Result<Vec<(Vec<f64>, Vec<f64>, Vec<f64>)>> {
+            let b = manifest.shapes.santa_b;
+            let mut out = Vec::with_capacity(traces.len());
+            for chunk_start in (0..traces.len()).step_by(b) {
+                let chunk = &traces[chunk_start..(chunk_start + b).min(traces.len())];
+                let nvc = &nv[chunk_start..chunk_start + chunk.len()];
+                let mut tbuf = vec![0.0f32; b * 5];
+                let mut nbuf = vec![0.0f32; b];
+                for (i, row) in chunk.iter().enumerate() {
+                    for (j, &v) in row.iter().enumerate() {
+                        tbuf[i * 5 + j] = v as f32;
+                    }
+                    nbuf[i] = nvc[i] as f32;
+                }
+                let outs = self.exec(
+                    "santa_psi",
+                    &[(tbuf, vec![b as i64, 5]), (nbuf, vec![b as i64])],
+                )?;
+                for i in 0..chunk.len() {
+                    let psi =
+                        outs[0][i * 360..(i + 1) * 360].iter().map(|&x| x as f64).collect();
+                    let ht =
+                        outs[1][i * 180..(i + 1) * 180].iter().map(|&x| x as f64).collect();
+                    let wt =
+                        outs[2][i * 120..(i + 1) * 120].iter().map(|&x| x as f64).collect();
+                    out.push((psi, ht, wt));
+                }
+            }
+            Ok(out)
+        }
+
+        pub fn pairwise_dist(
+            &self,
+            manifest: &Manifest,
+            x: &[Vec<f64>],
+            y: &[Vec<f64>],
+        ) -> Result<(Vec<f64>, Vec<f64>)> {
+            let m_tile = manifest.shapes.dist_m;
+            let n_tile = manifest.shapes.dist_n;
+            let d_pad = manifest.shapes.dist_d;
+            let dim = x.first().or(y.first()).map(|v| v.len()).unwrap_or(0);
+            if dim > d_pad {
+                return Err(anyhow!(
+                    "descriptor dim {dim} exceeds artifact padding {d_pad}"
+                ));
+            }
+            let (m, n) = (x.len(), y.len());
+            let mut can = vec![0.0f64; m * n];
+            let mut euc = vec![0.0f64; m * n];
+            let pack = |rows: &[Vec<f64>], tile: usize| -> Vec<f32> {
+                let mut buf = vec![0.0f32; tile * d_pad];
+                for (i, r) in rows.iter().enumerate() {
+                    for (j, &v) in r.iter().enumerate() {
+                        buf[i * d_pad + j] = v as f32;
+                    }
+                }
+                buf
+            };
+            for is in (0..m).step_by(m_tile) {
+                let xe = (is + m_tile).min(m);
+                let xbuf = pack(&x[is..xe], m_tile);
+                for js in (0..n).step_by(n_tile) {
+                    let ye = (js + n_tile).min(n);
+                    let ybuf = pack(&y[js..ye], n_tile);
+                    let outs = self.exec(
+                        "pairwise_dist",
+                        &[
+                            (xbuf.clone(), vec![m_tile as i64, d_pad as i64]),
+                            (ybuf, vec![n_tile as i64, d_pad as i64]),
+                        ],
+                    )?;
+                    for i in is..xe {
+                        for j in js..ye {
+                            let src = (i - is) * n_tile + (j - js);
+                            can[i * n + j] = outs[0][src] as f64;
+                            euc[i * n + j] = outs[1][src] as f64;
+                        }
+                    }
+                }
+            }
+            Ok((can, euc))
+        }
+
+        pub fn trace_powers(
+            &self,
+            manifest: &Manifest,
+            lap: &[f64],
+            n: usize,
+        ) -> Result<[f64; 5]> {
+            let pad = manifest.shapes.trace_n;
+            if n > pad {
+                return Err(anyhow!("order {n} exceeds artifact padding {pad}"));
+            }
+            let mut buf = vec![0.0f32; pad * pad];
+            for i in 0..n {
+                for j in 0..n {
+                    buf[i * pad + j] = lap[i * n + j] as f32;
+                }
+            }
+            let outs = self.exec(
+                "trace_powers",
+                &[(buf, vec![pad as i64, pad as i64]), (vec![n as f32], vec![1])],
+            )?;
+            let t = &outs[0];
+            Ok([t[0] as f64, t[1] as f64, t[2] as f64, t[3] as f64, t[4] as f64])
+        }
     }
 }
 
@@ -320,6 +461,16 @@ mod tests {
         for (a, b) in rt.manifest.graphlet_names.iter().zip(crate::count::NAMES) {
             assert_eq!(a, b);
         }
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn default_runtime_is_native_without_pjrt() {
+        let rt = runtime_or_skip().expect("native runtime is always available");
+        assert!(rt.is_native());
+        assert_eq!(rt.platform(), "native-cpu");
+        let rt2 = Runtime::load_default().unwrap();
+        assert!(rt2.is_native());
     }
 
     #[test]

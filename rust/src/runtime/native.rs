@@ -1,0 +1,364 @@
+//! The native L2 backend: pure-rust implementations of the five runtime
+//! kernels, serving the exact [`super::Runtime`] call surface on machines
+//! without any XLA/PJRT toolchain.  This is what `Runtime::load_default()`
+//! resolves to in a default build, so the whole pipeline — finalization,
+//! distances, traces — runs out of the box and `runtime_or_skip` never
+//! actually skips.
+//!
+//! Semantics mirror the AOT kernels under `python/compile/kernels/` —
+//! GABE φ normalization, moment-major MAEVE layout, the five-term ψ Taylor
+//! grid with its 3/4/5-term partial sums, Canberra/Euclidean pairwise
+//! tiles, and Laplacian power traces folded out of a single blocked L·L
+//! product — but computed in f64 with no batch padding, so outputs agree
+//! with the in-crate reference implementations to machine precision (the
+//! unit tests below pin them at 1e-10).
+//!
+//! The manifest is synthesized in code rather than parsed from
+//! `artifacts/manifest.json` ("manifest-less"): [`SHAPES`] mirrors
+//! `python/compile/model.py`, and the contract tables (j-grid, overlap
+//! matrix and its inverse, graphlet names/orders) come from the same
+//! in-crate sources the python side mirrors — so the manifest cross-check
+//! tests pin both backends to one contract.
+
+use std::collections::BTreeMap;
+
+use crate::analyze::{canberra, euclidean};
+use crate::count::formulas::{binom2, binom3, binom4};
+use crate::count::overlap::{overlap_inverse, overlap_matrix, to_induced};
+use crate::count::{N_GRAPHLETS, NAMES, ORDERS};
+use crate::descriptors::psi::{j_grid, psi_from_traces, taylor_partial, N_J, N_VARIANTS};
+use crate::linalg::moments::maeve_layout;
+
+use super::manifest::{Manifest, Shapes};
+
+/// Batch shapes mirroring `python/compile/model.py` (the AOT contract).
+/// The native kernels are shape-agnostic; these exist so code sizing work
+/// off `manifest.shapes` (benches, tiling heuristics) behaves identically
+/// under either backend.
+pub const SHAPES: Shapes = Shapes {
+    gabe_b: 64,
+    maeve_b: 16,
+    maeve_nv: 6144,
+    santa_b: 64,
+    dist_m: 256,
+    dist_n: 256,
+    dist_d: 128,
+    trace_n: 512,
+};
+
+/// Synthesize the contract manifest for the native backend.
+pub fn native_manifest() -> Manifest {
+    let o = overlap_matrix();
+    let oinv = overlap_inverse();
+    Manifest {
+        format: "native".to_string(),
+        jax_version: "none".to_string(),
+        j_grid: j_grid().to_vec(),
+        graphlet_names: NAMES.iter().map(|s| s.to_string()).collect(),
+        graphlet_orders: ORDERS.to_vec(),
+        overlap_matrix: o.iter().map(|row| row.to_vec()).collect(),
+        overlap_inverse: oinv
+            .iter()
+            .map(|row| row.iter().map(|&x| x as f64).collect())
+            .collect(),
+        shapes: SHAPES,
+        artifacts: BTreeMap::new(),
+    }
+}
+
+/// `gabe_finalize` kernel: `φ = (O⁻¹ H) / C(|V|, order)` per row (the same
+/// finalization as `GabeEstimate::descriptor`).
+pub fn gabe_finalize(counts: &[[f64; N_GRAPHLETS]], nv: &[f64]) -> Vec<Vec<f64>> {
+    let oinv = overlap_inverse();
+    counts
+        .iter()
+        .zip(nv)
+        .map(|(h, &n)| {
+            let induced = to_induced(h, &oinv);
+            (0..N_GRAPHLETS)
+                .map(|i| {
+                    let norm = match ORDERS[i] {
+                        2 => binom2(n),
+                        3 => binom3(n),
+                        _ => binom4(n),
+                    }
+                    .max(1.0);
+                    induced[i] / norm
+                })
+                .collect()
+        })
+        .collect()
+}
+
+/// `maeve_moments` kernel: per-vertex 5-feature rows → 20-dim descriptor
+/// (moment-major population moments — [`maeve_layout`]).
+pub fn maeve_moments(graphs: &[Vec<[f64; 5]>]) -> Vec<Vec<f64>> {
+    graphs
+        .iter()
+        .map(|rows| {
+            let mut cols: [Vec<f64>; 5] = Default::default();
+            for c in cols.iter_mut() {
+                c.reserve(rows.len());
+            }
+            for row in rows {
+                for (f, &x) in row.iter().enumerate() {
+                    cols[f].push(x);
+                }
+            }
+            maeve_layout(&cols).to_vec()
+        })
+        .collect()
+}
+
+/// `santa_psi` kernel: trace estimates → (ψ[6×60] flattened variant-major,
+/// heat-taylor[3×60] for 3/4/5 terms, wave-taylor[2×60] for 3/5 terms) —
+/// the same output triple as the AOT artifact.
+#[allow(clippy::type_complexity)]
+pub fn santa_psi(traces: &[[f64; 5]], nv: &[f64]) -> Vec<(Vec<f64>, Vec<f64>, Vec<f64>)> {
+    traces
+        .iter()
+        .zip(nv)
+        .map(|(t, &n)| {
+            let psi = psi_from_traces(t, n);
+            let mut flat = Vec::with_capacity(N_VARIANTS * N_J);
+            for row in &psi {
+                flat.extend_from_slice(row);
+            }
+            let (h3, w3) = taylor_partial(t, 3);
+            let (h4, _) = taylor_partial(t, 4);
+            let (h5, w5) = taylor_partial(t, 5);
+            let mut heat = Vec::with_capacity(3 * N_J);
+            heat.extend_from_slice(&h3);
+            heat.extend_from_slice(&h4);
+            heat.extend_from_slice(&h5);
+            let mut wave = Vec::with_capacity(2 * N_J);
+            wave.extend_from_slice(&w3);
+            wave.extend_from_slice(&w5);
+            (flat, heat, wave)
+        })
+        .collect()
+}
+
+/// `pairwise_dist` kernel: (canberra, euclidean) distance matrices as
+/// row-major `x.len() × y.len()` buffers.
+pub fn pairwise_dist(x: &[Vec<f64>], y: &[Vec<f64>]) -> (Vec<f64>, Vec<f64>) {
+    let (m, n) = (x.len(), y.len());
+    let mut can = Vec::with_capacity(m * n);
+    let mut euc = Vec::with_capacity(m * n);
+    for xi in x {
+        for yj in y {
+            can.push(canberra(xi, yj));
+            euc.push(euclidean(xi, yj));
+        }
+    }
+    (can, euc)
+}
+
+/// `trace_powers` kernel: `[|V|, tr L, tr L², tr L³, tr L⁴]` of a dense
+/// *symmetric* matrix (the normalized Laplacian), from one cache-blocked
+/// L·L product: `tr L³ = Σ_ij (L²)_ij L_ij` and `tr L⁴ = ‖L²‖²_F` are both
+/// contractions of that product when L is symmetric.
+pub fn trace_powers(lap: &[f64], n: usize) -> [f64; 5] {
+    assert_eq!(lap.len(), n * n, "matrix must be n x n");
+    const BLOCK: usize = 64;
+    let mut l2 = vec![0.0f64; n * n];
+    for ib in (0..n).step_by(BLOCK) {
+        let ie = (ib + BLOCK).min(n);
+        for kb in (0..n).step_by(BLOCK) {
+            let ke = (kb + BLOCK).min(n);
+            for jb in (0..n).step_by(BLOCK) {
+                let je = (jb + BLOCK).min(n);
+                for i in ib..ie {
+                    for k in kb..ke {
+                        let a = lap[i * n + k];
+                        if a == 0.0 {
+                            continue; // Laplacians are sparse row-wise
+                        }
+                        for j in jb..je {
+                            l2[i * n + j] += a * lap[k * n + j];
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let tr1: f64 = (0..n).map(|i| lap[i * n + i]).sum();
+    let tr2: f64 = (0..n).map(|i| l2[i * n + i]).sum();
+    let tr3: f64 = l2.iter().zip(lap).map(|(a, b)| a * b).sum();
+    let tr4: f64 = l2.iter().map(|x| x * x).sum();
+    [n as f64, tr1, tr2, tr3, tr4]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::Csr;
+    use crate::linalg::moments::moments;
+    use crate::linalg::symmetric_eigenvalues;
+    use crate::util::rng::Pcg64;
+
+    const TOL: f64 = 1e-10;
+
+    #[test]
+    fn manifest_mirrors_contract_sources() {
+        let m = native_manifest();
+        assert_eq!(m.graphlet_names.len(), 17);
+        assert_eq!(m.j_grid.len(), N_J);
+        let jg = j_grid();
+        for (a, b) in m.j_grid.iter().zip(&jg) {
+            assert_eq!(a, b);
+        }
+        let o = overlap_matrix();
+        for i in 0..N_GRAPHLETS {
+            for j in 0..N_GRAPHLETS {
+                assert_eq!(m.overlap_matrix[i][j], o[i][j]);
+            }
+        }
+        // shapes mirror python/compile/model.py
+        assert_eq!(m.shapes.gabe_b, 64);
+        assert_eq!(m.shapes.maeve_nv, 6144);
+        assert_eq!(m.shapes.dist_d, 128);
+        assert_eq!(m.shapes.trace_n, 512);
+        assert!(m.artifacts.is_empty());
+    }
+
+    #[test]
+    fn gabe_matches_estimator_descriptor() {
+        let g = crate::gen::er_graph(25, 70, &mut Pcg64::seed_from_u64(81));
+        let est = crate::exact::gabe_exact(&g);
+        let got = gabe_finalize(&[est.counts], &[est.nv as f64]);
+        let want = est.descriptor();
+        for (a, b) in got[0].iter().zip(&want) {
+            assert!((a - b).abs() <= TOL, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn gabe_matches_overlap_reference_by_hand() {
+        // K3 non-induced counts: φ must be the normalized induced counts.
+        let mut h = [0.0; N_GRAPHLETS];
+        h[crate::count::idx::E3] = 1.0;
+        h[crate::count::idx::EDGE_P1] = 3.0;
+        h[crate::count::idx::WEDGE] = 3.0;
+        h[crate::count::idx::TRIANGLE] = 1.0;
+        h[crate::count::idx::E2] = 3.0;
+        h[crate::count::idx::EDGE] = 3.0;
+        let phi = gabe_finalize(&[h], &[3.0]);
+        // C(3,3) = 1 triangle, normalized by 1
+        assert!((phi[0][crate::count::idx::TRIANGLE] - 1.0).abs() <= TOL);
+        assert!(phi[0][crate::count::idx::WEDGE].abs() <= TOL);
+        // induced edges 3 / C(3,2)
+        assert!((phi[0][crate::count::idx::EDGE] - 1.0).abs() <= TOL);
+    }
+
+    #[test]
+    fn maeve_matches_moments_reference() {
+        let g = crate::gen::ba_graph(120, 3, &mut Pcg64::seed_from_u64(82));
+        let est = crate::exact::maeve_exact(&g);
+        let feats = est.features();
+        let rows: Vec<[f64; 5]> = (0..g.n)
+            .map(|v| [feats[0][v], feats[1][v], feats[2][v], feats[3][v], feats[4][v]])
+            .collect();
+        let got = maeve_moments(&[rows]);
+        let want = est.descriptor();
+        for (a, b) in got[0].iter().zip(&want) {
+            assert!((a - b).abs() <= TOL, "{a} vs {b}");
+        }
+        // spot-check the moment-major layout against linalg::moments
+        let deg_moments = moments(&feats[0]);
+        assert!((got[0][0] - deg_moments[0]).abs() <= TOL); // mean(degree)
+        assert!((got[0][5] - deg_moments[1]).abs() <= TOL); // std(degree)
+    }
+
+    #[test]
+    fn psi_matches_reference_grids() {
+        let traces = [50.0, 48.0, 70.0, 31.0, 120.0];
+        let nv = 50.0;
+        let got = santa_psi(&[traces], &[nv]);
+        let want = psi_from_traces(&traces, nv);
+        for v in 0..N_VARIANTS {
+            for k in 0..N_J {
+                assert!((got[0].0[v * N_J + k] - want[v][k]).abs() <= TOL);
+            }
+        }
+        for (ti, terms) in [3usize, 4, 5].iter().enumerate() {
+            let (h, _) = taylor_partial(&traces, *terms);
+            for k in 0..N_J {
+                assert!((got[0].1[ti * N_J + k] - h[k]).abs() <= TOL);
+            }
+        }
+        for (wi, terms) in [3usize, 5].iter().enumerate() {
+            let (_, w) = taylor_partial(&traces, *terms);
+            for k in 0..N_J {
+                assert!((got[0].2[wi * N_J + k] - w[k]).abs() <= TOL);
+            }
+        }
+    }
+
+    #[test]
+    fn pairwise_matches_distance_matrix() {
+        let mut rng = Pcg64::seed_from_u64(83);
+        let x: Vec<Vec<f64>> = (0..40)
+            .map(|_| (0..20).map(|_| rng.gen_range_f64(-3.0, 3.0)).collect())
+            .collect();
+        let y: Vec<Vec<f64>> = (0..17)
+            .map(|_| (0..20).map(|_| rng.gen_range_f64(-3.0, 3.0)).collect())
+            .collect();
+        let (can, euc) = pairwise_dist(&x, &y);
+        assert_eq!(can.len(), x.len() * y.len());
+        for (i, xi) in x.iter().enumerate() {
+            for (j, yj) in y.iter().enumerate() {
+                assert!((can[i * y.len() + j] - canberra(xi, yj)).abs() <= TOL);
+                assert!((euc[i * y.len() + j] - euclidean(xi, yj)).abs() <= TOL);
+            }
+        }
+    }
+
+    #[test]
+    fn traces_match_eigenvalue_power_sums() {
+        let g = crate::gen::er_graph(60, 150, &mut Pcg64::seed_from_u64(84));
+        let lap = Csr::from_graph(&g).normalized_laplacian();
+        let got = trace_powers(&lap, g.n);
+        let eigs = symmetric_eigenvalues(&lap, g.n);
+        assert_eq!(got[0], g.n as f64);
+        for k in 1..5 {
+            let want: f64 = eigs.iter().map(|l| l.powi(k as i32)).sum();
+            assert!(
+                (got[k] - want).abs() < 1e-8 * want.abs().max(1.0),
+                "tr(L^{k}): {} vs {want}",
+                got[k]
+            );
+        }
+    }
+
+    #[test]
+    fn blocked_traces_match_naive_on_nonaligned_order() {
+        // order deliberately not a multiple of the block size
+        let mut rng = Pcg64::seed_from_u64(85);
+        let n = 70;
+        let mut a = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                let v = rng.gen_range_f64(-1.0, 1.0);
+                a[i * n + j] = v;
+                a[j * n + i] = v;
+            }
+        }
+        let got = trace_powers(&a, n);
+        // naive dense reference
+        let mut l2 = vec![0.0f64; n * n];
+        for i in 0..n {
+            for k in 0..n {
+                for j in 0..n {
+                    l2[i * n + j] += a[i * n + k] * a[k * n + j];
+                }
+            }
+        }
+        let tr2: f64 = (0..n).map(|i| l2[i * n + i]).sum();
+        let tr3: f64 = l2.iter().zip(&a).map(|(x, y)| x * y).sum();
+        let tr4: f64 = l2.iter().map(|x| x * x).sum();
+        assert!((got[2] - tr2).abs() <= 1e-9 * tr2.abs().max(1.0));
+        assert!((got[3] - tr3).abs() <= 1e-9 * tr3.abs().max(1.0));
+        assert!((got[4] - tr4).abs() <= 1e-9 * tr4.abs().max(1.0));
+    }
+}

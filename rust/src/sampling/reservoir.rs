@@ -31,10 +31,22 @@ pub struct Reservoir {
     rng: Pcg64,
 }
 
+/// Pre-allocation cap: reservoirs reserve at most this many slots up
+/// front, and larger budgets grow in deterministic steps of this size as
+/// the stream actually fills them.  Massive budgets would otherwise either
+/// pin memory the stream never fills, or (worse) hit `Vec`'s doubling
+/// reallocations mid-stream at unpredictable points.
+const RESERVE_CHUNK: usize = 1 << 20;
+
 impl Reservoir {
     pub fn new(budget: usize, rng: Pcg64) -> Self {
         assert!(budget > 0, "budget must be positive");
-        Reservoir { budget, edges: Vec::with_capacity(budget.min(1 << 20)), t: 0, rng }
+        Reservoir {
+            budget,
+            edges: Vec::with_capacity(budget.min(RESERVE_CHUNK)),
+            t: 0,
+            rng,
+        }
     }
 
     /// Current time step (number of edges offered so far).
@@ -69,6 +81,13 @@ impl Reservoir {
     pub fn offer(&mut self, e: Edge) -> ReservoirAction {
         self.t += 1;
         if self.edges.len() < self.budget {
+            if self.edges.len() == self.edges.capacity() {
+                // deterministic growth: one RESERVE_CHUNK step at a time,
+                // never past the budget (replaces Vec's doubling, which
+                // overshoots and reallocates at arbitrary fill levels).
+                let step = (self.budget - self.edges.len()).min(RESERVE_CHUNK);
+                self.edges.reserve_exact(step);
+            }
             self.edges.push(e);
             return ReservoirAction::Stored;
         }
@@ -154,6 +173,29 @@ mod tests {
             let p = h as f64 / trials as f64;
             assert!((p - 0.2).abs() < 0.05, "edge {i}: p={p}");
         }
+    }
+
+    #[test]
+    fn large_budget_fills_without_reseeding_drift() {
+        // Regression: budgets beyond the 2^20 pre-allocation cap must fill
+        // to the full budget through the deterministic growth path, and the
+        // sample must stay identical across identical runs (reallocation
+        // must not perturb the RNG stream or the stored slots).
+        let budget = (1 << 20) + 3;
+        let total = budget as u32 + 512;
+        let run = || {
+            let mut r = Reservoir::new(budget, Pcg64::seed_from_u64(7));
+            for i in 0..total {
+                r.offer(Edge::new(i, i + 1));
+            }
+            r
+        };
+        let a = run();
+        assert_eq!(a.len(), budget);
+        assert_eq!(a.t(), total as usize);
+        let b = run();
+        assert_eq!(a.edges()[..64], b.edges()[..64]);
+        assert_eq!(a.edges()[budget - 64..], b.edges()[budget - 64..]);
     }
 
     #[test]

@@ -1,0 +1,139 @@
+//! Minimal error substrate (the offline registry has no `anyhow`; this
+//! mirrors the slice of its API the crate uses: [`crate::anyhow!`],
+//! [`crate::ensure!`], [`Context::with_context`] and the crate-wide
+//! [`crate::Result`] alias).
+//!
+//! [`Error`] is a string-backed error carrying a chain of context frames;
+//! like `anyhow::Error` it deliberately does **not** implement
+//! `std::error::Error`, which is what lets the blanket
+//! `From<E: std::error::Error>` conversion coexist with the reflexive
+//! `From<Error>` — so `?` works on `io::Result` and friends everywhere.
+
+use std::fmt;
+
+/// String-backed error with context frames (outermost first on display).
+pub struct Error {
+    msg: String,
+    context: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a plain message (what [`crate::anyhow!`] expands to).
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into(), context: Vec::new() }
+    }
+
+    /// Attach an outer context frame.
+    pub fn context(mut self, ctx: impl Into<String>) -> Self {
+        self.context.push(ctx.into());
+        self
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for c in self.context.iter().rev() {
+            write!(f, "{c}: ")?;
+        }
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Display::fmt(self, f)
+    }
+}
+
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error::msg(msg)
+    }
+}
+
+/// Formatted error constructor, `anyhow::anyhow!`-style.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::util::err::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Checked precondition: early-returns an [`Error`], `anyhow::ensure!`-style.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+/// Lazily attach context to a fallible result (`anyhow::Context` subset).
+pub trait Context<T> {
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f().to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_shows_context_outermost_first() {
+        let e = Error::msg("root").context("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner: root");
+        assert_eq!(format!("{e:#}"), "outer: inner: root");
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = anyhow!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+    }
+
+    #[test]
+    fn ensure_early_returns() {
+        fn check(x: i32) -> Result<i32, Error> {
+            ensure!(x > 0, "x must be positive, got {x}");
+            Ok(x)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(-1).unwrap_err().to_string(), "x must be positive, got -1");
+    }
+
+    #[test]
+    fn question_mark_converts_io_errors() {
+        fn read() -> Result<String, Error> {
+            Ok(std::fs::read_to_string("/nonexistent/err-test")?)
+        }
+        assert!(read().is_err());
+    }
+
+    #[test]
+    fn with_context_wraps_std_errors() {
+        let r: Result<i32, std::num::ParseIntError> = "not a number".parse::<i32>();
+        let e = r.with_context(|| "reading thing").unwrap_err();
+        assert!(e.to_string().starts_with("reading thing: "));
+        assert!(!e.to_string().ends_with(": "));
+    }
+}

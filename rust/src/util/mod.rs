@@ -1,11 +1,13 @@
 //! Self-contained substrates the offline build environment forces us to
-//! own: a PCG PRNG ([`rng`]), a JSON parser ([`json`]), a
-//! criterion-style micro-benchmark harness ([`bench`]) and temp-dir helpers
-//! ([`tmp`]).  (The image's cargo registry carries only the xla crate's
-//! build closure — no rand/serde_json/criterion/tokio — so these are
-//! implemented from scratch and tested like everything else.)
+//! own: an error/context type ([`err`]), a PCG PRNG ([`rng`]), a JSON
+//! parser ([`json`]), a criterion-style micro-benchmark harness ([`bench`])
+//! and temp-dir helpers ([`tmp`]).  (The image's cargo registry carries
+//! only the xla crate's build closure — no anyhow/rand/serde_json/
+//! criterion/tokio — so these are implemented from scratch and tested like
+//! everything else; the default build depends on nothing outside std.)
 
 pub mod bench;
+pub mod err;
 pub mod json;
 pub mod par;
 pub mod rng;

@@ -130,10 +130,11 @@ fn coordinator_invariant_to_chunking() {
     }
 }
 
-/// PJRT end-to-end: streamed estimates finalized by the artifacts, distance
-/// kernel vs rust metric, classification accuracy unchanged.
+/// L2-runtime end-to-end: streamed estimates finalized by the runtime
+/// (native backend on default builds, PJRT artifacts with `--features
+/// pjrt`), distance kernel vs rust metric, classification accuracy sane.
 #[test]
-fn pjrt_end_to_end_classification() {
+fn runtime_end_to_end_classification() {
     let Some(rt) = runtime_or_skip() else { return };
     let ds = make_dataset("OHSU", 0.4, 7);
     let raw: Vec<_> = ds
@@ -165,6 +166,31 @@ fn pjrt_end_to_end_classification() {
     let dm = DistanceMatrix::from_raw(descs.len(), euc);
     let cv = cross_validate(&dm, &ds.labels, 5, 2, 3);
     assert!(cv.accuracy > 40.0);
+}
+
+/// Without the `pjrt` feature the runtime must resolve to the native
+/// backend (never a skip), and its finalizers must agree with the in-crate
+/// estimator mirrors end-to-end.
+#[test]
+#[cfg(not(feature = "pjrt"))]
+fn native_runtime_always_available_and_exact() {
+    let rt = runtime_or_skip().expect("native runtime must always load");
+    assert!(rt.is_native());
+    let g = gen::er_graph(60, 150, &mut Pcg64::seed_from_u64(77));
+    let est = exact::gabe_exact(&g);
+    let phi = rt.gabe_finalize(&[est.counts], &[est.nv as f64]).unwrap();
+    for (a, b) in phi[0].iter().zip(&est.descriptor()) {
+        assert!((a - b).abs() <= 1e-10, "{a} vs {b}");
+    }
+    let sest = exact::santa_exact(&g);
+    let lap = Csr::from_graph(&g).normalized_laplacian();
+    let traces = rt.trace_powers(&lap, g.n).unwrap();
+    for k in 1..5 {
+        assert!(
+            (traces[k] - sest.traces[k]).abs() < 1e-6 * sest.traces[k].abs().max(1.0),
+            "tr(L^{k})"
+        );
+    }
 }
 
 /// MAEVE features derived from a streamed estimate satisfy Theorem 3's
