@@ -1,13 +1,20 @@
 //! Per-edge hot-path benchmark: the edge-centric subgraph enumeration that
 //! dominates every descriptor (paper Table 2 complexity).  Reports edges/s
 //! for each estimator across graph families and budgets.
+//!
+//! Streams are shuffled **once, outside the timer**, and rewound with
+//! `reset()` per iteration — earlier revisions cloned and re-shuffled the
+//! edge list inside the timed closure, inflating every edges/s figure.
+//!
+//! `-- --json <dir>` writes `BENCH_hot_path.json`; `-- --filter <substr>`
+//! limits the run (e.g. `--filter 'ba-hubs/b=0.1'`).
 
 use stream_descriptors::descriptors::santa::{SantaConfig, SantaEstimator};
 use stream_descriptors::descriptors::{gabe::GabeEstimator, maeve::MaeveEstimator};
 use stream_descriptors::gen;
-use stream_descriptors::graph::stream::VecStream;
+use stream_descriptors::graph::stream::{EdgeStream, VecStream};
 use stream_descriptors::graph::Graph;
-use stream_descriptors::util::bench::Bencher;
+use stream_descriptors::util::bench::{BenchArgs, Bencher};
 use stream_descriptors::util::rng::Pcg64;
 
 fn families() -> Vec<(&'static str, Graph)> {
@@ -21,35 +28,55 @@ fn families() -> Vec<(&'static str, Graph)> {
 }
 
 fn main() {
+    let args = BenchArgs::parse("hot_path");
+    let mut b = Bencher::new(1, 5);
     // `cargo bench -- --test` (the CI smoke check) verifies the bench
-    // compiles and launches, then exits without timing anything.
-    if std::env::args().any(|a| a == "--test") {
+    // compiles and launches — and exercises the JSON emitter — without
+    // timing anything.
+    if args.smoke {
         println!("hot_path: smoke mode, skipping timed runs");
+        args.emit("hot_path", &b).expect("bench json");
         return;
     }
-    let mut b = Bencher::new(1, 5);
     for (name, g) in families() {
         let m = g.m() as u64;
         for frac in [0.1, 0.5] {
             let budget = ((g.m() as f64 * frac) as usize).max(8);
-            b.bench(format!("gabe/{name}/b={frac}|E|"), Some(m), || {
+            let id = format!("gabe/{name}/b={frac}|E|");
+            if args.matches(&id) {
                 let mut s = VecStream::shuffled(g.edges.clone(), 7);
-                GabeEstimator::new(budget).with_seed(3).run(&mut s).counts[5]
-            });
-            b.bench(format!("maeve/{name}/b={frac}|E|"), Some(m), || {
+                b.bench(id, Some(m), || {
+                    s.reset();
+                    GabeEstimator::new(budget).with_seed(3).run(&mut s).counts[5]
+                });
+            }
+            let id = format!("maeve/{name}/b={frac}|E|");
+            if args.matches(&id) {
                 let mut s = VecStream::shuffled(g.edges.clone(), 7);
-                MaeveEstimator::new(budget).with_seed(3).run(&mut s).nv
-            });
-            b.bench(format!("santa/{name}/b={frac}|E|"), Some(2 * m), || {
+                b.bench(id, Some(m), || {
+                    s.reset();
+                    MaeveEstimator::new(budget).with_seed(3).run(&mut s).nv
+                });
+            }
+            let id = format!("santa/{name}/b={frac}|E|");
+            if args.matches(&id) {
                 let mut s = VecStream::shuffled(g.edges.clone(), 7);
-                SantaEstimator::new(budget).with_seed(3).run(&mut s).traces[4]
-            });
+                b.bench(id, Some(2 * m), || {
+                    s.reset();
+                    SantaEstimator::new(budget).with_seed(3).run(&mut s).traces[4]
+                });
+            }
             // ablation (DESIGN.md §4): closed-form wedge term vs sampling
-            b.bench(format!("santa-xw/{name}/b={frac}|E|"), Some(2 * m), || {
-                let cfg = SantaConfig::new(budget).with_seed(3).with_exact_wedges(true);
+            let id = format!("santa-xw/{name}/b={frac}|E|");
+            if args.matches(&id) {
                 let mut s = VecStream::shuffled(g.edges.clone(), 7);
-                SantaEstimator::from_config(cfg).run(&mut s).traces[4]
-            });
+                b.bench(id, Some(2 * m), || {
+                    let cfg = SantaConfig::new(budget).with_seed(3).with_exact_wedges(true);
+                    s.reset();
+                    SantaEstimator::from_config(cfg).run(&mut s).traces[4]
+                });
+            }
         }
     }
+    args.emit("hot_path", &b).expect("bench json");
 }

@@ -4,18 +4,22 @@
 use stream_descriptors::classify::{DistanceMatrix, Metric};
 use stream_descriptors::descriptors::psi::psi_from_traces;
 use stream_descriptors::runtime::Runtime;
-use stream_descriptors::util::bench::Bencher;
+use stream_descriptors::util::bench::{BenchArgs, Bencher};
 use stream_descriptors::util::rng::Pcg64;
 
 fn main() {
+    let args = BenchArgs::parse("kernels");
+    let mut b = Bencher::new(2, 7);
     // `cargo bench -- --test` (the CI smoke check) verifies the bench
     // compiles and launches, then exits without timing anything.
-    if std::env::args().any(|a| a == "--test") {
+    if args.smoke {
         println!("kernels: smoke mode, skipping timed runs");
+        args.emit("kernels", &b).expect("bench json");
         return;
     }
     let Ok(rt) = Runtime::load_default() else {
         eprintln!("artifacts not built — run `make artifacts` first");
+        args.emit("kernels", &b).expect("bench json");
         std::process::exit(0);
     };
     if rt.is_native() {
@@ -26,22 +30,26 @@ fn main() {
             "kernels: native backend active — enable `--features pjrt` and \
              `make artifacts` for the AOT-vs-rust comparison"
         );
+        args.emit("kernels", &b).expect("bench json");
         std::process::exit(0);
     }
     let mut rng = Pcg64::seed_from_u64(5);
-    let mut b = Bencher::new(2, 7);
 
     // pairwise distance: one full 256x256 tile at D=128
     let m = rt.manifest.shapes.dist_m;
     let x: Vec<Vec<f64>> = (0..m)
         .map(|_| (0..60).map(|_| rng.gen_range_f64(-2.0, 2.0)).collect())
         .collect();
-    b.bench("l1/pairwise_dist/256x256xD60", Some((m * m) as u64), || {
-        rt.pairwise_dist(&x, &x).unwrap().0[0]
-    });
-    b.bench("rust/pairwise_dist/256x256xD60", Some((m * m) as u64), || {
-        DistanceMatrix::compute(&x, Metric::Canberra).d[1]
-    });
+    if args.matches("l1/pairwise_dist/256x256xD60") {
+        b.bench("l1/pairwise_dist/256x256xD60", Some((m * m) as u64), || {
+            rt.pairwise_dist(&x, &x).unwrap().0[0]
+        });
+    }
+    if args.matches("rust/pairwise_dist/256x256xD60") {
+        b.bench("rust/pairwise_dist/256x256xD60", Some((m * m) as u64), || {
+            DistanceMatrix::compute(&x, Metric::Canberra).d[1]
+        });
+    }
 
     // santa psi finalization, one full batch
     let sb = rt.manifest.shapes.santa_b;
@@ -52,16 +60,20 @@ fn main() {
         })
         .collect();
     let nv: Vec<f64> = traces.iter().map(|t| t[0]).collect();
-    b.bench("l2/santa_psi/batch64", Some(sb as u64), || {
-        rt.santa_psi(&traces, &nv).unwrap()[0].0[0]
-    });
-    b.bench("rust/santa_psi/batch64", Some(sb as u64), || {
-        let mut acc = 0.0;
-        for (t, n) in traces.iter().zip(&nv) {
-            acc += psi_from_traces(t, *n)[0][0];
-        }
-        acc
-    });
+    if args.matches("l2/santa_psi/batch64") {
+        b.bench("l2/santa_psi/batch64", Some(sb as u64), || {
+            rt.santa_psi(&traces, &nv).unwrap()[0].0[0]
+        });
+    }
+    if args.matches("rust/santa_psi/batch64") {
+        b.bench("rust/santa_psi/batch64", Some(sb as u64), || {
+            let mut acc = 0.0;
+            for (t, n) in traces.iter().zip(&nv) {
+                acc += psi_from_traces(t, *n)[0][0];
+            }
+            acc
+        });
+    }
 
     // gabe finalize
     let gb = rt.manifest.shapes.gabe_b;
@@ -69,9 +81,11 @@ fn main() {
         .map(|_| std::array::from_fn(|_| rng.gen_range_f64(0.0, 1e6)))
         .collect();
     let gnv: Vec<f64> = (0..gb).map(|_| rng.gen_range_f64(10.0, 2000.0)).collect();
-    b.bench("l2/gabe_finalize/batch64", Some(gb as u64), || {
-        rt.gabe_finalize(&counts, &gnv).unwrap()[0][0]
-    });
+    if args.matches("l2/gabe_finalize/batch64") {
+        b.bench("l2/gabe_finalize/batch64", Some(gb as u64), || {
+            rt.gabe_finalize(&counts, &gnv).unwrap()[0][0]
+        });
+    }
 
     // trace powers (512x512 blocked matmul through the Pallas kernel)
     let n = 384;
@@ -83,7 +97,10 @@ fn main() {
             lap[(i + 1) * n + i] = -0.5;
         }
     }
-    b.bench("l2/trace_powers/512pad", Some((n * n) as u64), || {
-        rt.trace_powers(&lap, n).unwrap()[4]
-    });
+    if args.matches("l2/trace_powers/512pad") {
+        b.bench("l2/trace_powers/512pad", Some((n * n) as u64), || {
+            rt.trace_powers(&lap, n).unwrap()[4]
+        });
+    }
+    args.emit("kernels", &b).expect("bench json");
 }

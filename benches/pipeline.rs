@@ -1,23 +1,26 @@
 //! End-to-end pipeline benchmark (Tables 16/17 analog): coordinator fan-out
 //! over a massive synthetic network, absolute budget, all descriptors.
+//!
+//! Streams are shuffled once outside the timer and rewound per iteration.
+//! A bare numeric argument sets the graph scale (default 0.02); `--json`
+//! and `--filter` follow the shared bench contract.
 
 use stream_descriptors::coordinator::{run_pipeline, CoordinatorConfig, DescriptorKind};
 use stream_descriptors::gen::massive::{massive_graph, MassiveKind};
-use stream_descriptors::graph::stream::VecStream;
-use stream_descriptors::util::bench::Bencher;
+use stream_descriptors::graph::stream::{EdgeStream, VecStream};
+use stream_descriptors::util::bench::{BenchArgs, Bencher};
 
 fn main() {
+    let args = BenchArgs::parse("pipeline");
+    let mut b = Bencher::new(1, 3);
     // `cargo bench -- --test` (the CI smoke check) verifies the bench
     // compiles and launches, then exits without timing anything.
-    if std::env::args().any(|a| a == "--test") {
+    if args.smoke {
         println!("pipeline: smoke mode, skipping timed runs");
+        args.emit("pipeline", &b).expect("bench json");
         return;
     }
-    let scale: f64 = std::env::args()
-        .nth(1)
-        .and_then(|s| s.parse().ok())
-        .unwrap_or(0.02);
-    let mut b = Bencher::new(1, 3);
+    let scale: f64 = args.rest.first().and_then(|s| s.parse().ok()).unwrap_or(0.02);
     for kind in [MassiveKind::Cs, MassiveKind::Fl, MassiveKind::Fo] {
         let g = massive_graph(kind, scale, 7);
         let m = g.m() as u64;
@@ -28,6 +31,10 @@ fn main() {
             ("santa", DescriptorKind::Santa { exact_wedges: false }),
         ] {
             for workers in [1usize, 4] {
+                let id = format!("pipeline/{}/{dname}/w={workers}", kind.name());
+                if !args.matches(&id) {
+                    continue;
+                }
                 let cfg = CoordinatorConfig {
                     workers,
                     budget: (m as usize / 10).clamp(1_000, 100_000),
@@ -35,15 +42,13 @@ fn main() {
                     queue_depth: 8,
                     seed: 7,
                 };
-                b.bench(
-                    format!("pipeline/{}/{dname}/w={workers}", kind.name()),
-                    Some(m),
-                    || {
-                        let mut s = VecStream::shuffled(g.edges.clone(), 3);
-                        run_pipeline(&mut s, dk, &cfg).edges
-                    },
-                );
+                let mut s = VecStream::shuffled(g.edges.clone(), 3);
+                b.bench(id, Some(m), || {
+                    s.reset();
+                    run_pipeline(&mut s, dk, &cfg).expect("pipeline").edges
+                });
             }
         }
     }
+    args.emit("pipeline", &b).expect("bench json");
 }

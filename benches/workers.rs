@@ -1,25 +1,33 @@
 //! Coordinator scaling benchmark: fan-out throughput vs worker count and
 //! chunk size (backpressure ablation — DESIGN.md §4 design-choice bench).
+//!
+//! Streams are shuffled once outside the timer and rewound per iteration.
 
 use stream_descriptors::coordinator::{run_pipeline, CoordinatorConfig, DescriptorKind};
 use stream_descriptors::gen;
-use stream_descriptors::graph::stream::VecStream;
-use stream_descriptors::util::bench::Bencher;
+use stream_descriptors::graph::stream::{EdgeStream, VecStream};
+use stream_descriptors::util::bench::{BenchArgs, Bencher};
 use stream_descriptors::util::rng::Pcg64;
 
 fn main() {
+    let args = BenchArgs::parse("workers");
+    let mut b = Bencher::new(1, 3);
     // `cargo bench -- --test` (the CI smoke check) verifies the bench
     // compiles and launches, then exits without timing anything.
-    if std::env::args().any(|a| a == "--test") {
+    if args.smoke {
         println!("workers: smoke mode, skipping timed runs");
+        args.emit("workers", &b).expect("bench json");
         return;
     }
     let g = gen::ba_graph(200_000, 4, &mut Pcg64::seed_from_u64(9));
     let m = g.m() as u64;
     println!("# BA graph |V|={} |E|={}", g.n, g.m());
-    let mut b = Bencher::new(1, 3);
 
     for workers in [1usize, 2, 4, 8, 16] {
+        let id = format!("workers/gabe/w={workers}");
+        if !args.matches(&id) {
+            continue;
+        }
         let cfg = CoordinatorConfig {
             workers,
             budget: 50_000,
@@ -27,14 +35,19 @@ fn main() {
             queue_depth: 8,
             seed: 1,
         };
-        b.bench(format!("workers/gabe/w={workers}"), Some(m), || {
-            let mut s = VecStream::shuffled(g.edges.clone(), 2);
-            run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).edges
+        let mut s = VecStream::shuffled(g.edges.clone(), 2);
+        b.bench(id, Some(m), || {
+            s.reset();
+            run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).expect("pipeline").edges
         });
     }
 
     // chunk-size ablation at fixed W=4
     for chunk in [64usize, 1024, 8192, 65_536] {
+        let id = format!("chunks/gabe/c={chunk}");
+        if !args.matches(&id) {
+            continue;
+        }
         let cfg = CoordinatorConfig {
             workers: 4,
             budget: 50_000,
@@ -42,14 +55,19 @@ fn main() {
             queue_depth: 8,
             seed: 1,
         };
-        b.bench(format!("chunks/gabe/c={chunk}"), Some(m), || {
-            let mut s = VecStream::shuffled(g.edges.clone(), 2);
-            run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).edges
+        let mut s = VecStream::shuffled(g.edges.clone(), 2);
+        b.bench(id, Some(m), || {
+            s.reset();
+            run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).expect("pipeline").edges
         });
     }
 
     // queue-depth (backpressure) ablation
     for depth in [1usize, 4, 32] {
+        let id = format!("queue/gabe/d={depth}");
+        if !args.matches(&id) {
+            continue;
+        }
         let cfg = CoordinatorConfig {
             workers: 4,
             budget: 50_000,
@@ -57,9 +75,11 @@ fn main() {
             queue_depth: depth,
             seed: 1,
         };
-        b.bench(format!("queue/gabe/d={depth}"), Some(m), || {
-            let mut s = VecStream::shuffled(g.edges.clone(), 2);
-            run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).edges
+        let mut s = VecStream::shuffled(g.edges.clone(), 2);
+        b.bench(id, Some(m), || {
+            s.reset();
+            run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).expect("pipeline").edges
         });
     }
+    args.emit("workers", &b).expect("bench json");
 }

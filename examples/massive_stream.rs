@@ -43,7 +43,7 @@ fn main() {
     };
     println!("streaming GABE with {workers} workers, b={budget}…");
     let mut s = VecStream::shuffled(g.edges.clone(), 7);
-    let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg);
+    let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).expect("pipeline");
     println!(
         "processed {} edges in {:.2?} — {:.0} edges/s through {} workers",
         r.edges,

@@ -38,7 +38,7 @@ fn main() {
                     seed: 0x5eed ^ trial << 8 ^ (w as u64) << 32,
                 };
                 let mut s = VecStream::shuffled(g.edges.clone(), trial);
-                let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg);
+                let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).expect("pipeline");
                 let WorkerEstimate::Gabe(e) = r.averaged else { unreachable!() };
                 e.counts[idx::TRIANGLE]
             })

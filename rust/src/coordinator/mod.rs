@@ -8,8 +8,14 @@
 //! reservoir RNG seed, exactly like Tri-Fly's independently-sampling
 //! machines.
 //!
+//! Chunks are published once as `Arc<[Edge]>` and shared by every worker —
+//! the fan-out costs one allocation + copy per chunk instead of `W` deep
+//! clones, and the master's staging buffer is reused across chunks.
+//!
 //! Workers are OS threads (CPU-bound inner loop); the async binary drives
-//! the pipeline through `tokio::task::spawn_blocking`.
+//! the pipeline through `tokio::task::spawn_blocking`.  Configuration
+//! errors and worker panics surface as [`crate::Result`] errors instead of
+//! aborting the process.
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -52,6 +58,21 @@ impl Default for CoordinatorConfig {
             queue_depth: 8,
             seed: 0xc00d,
         }
+    }
+}
+
+impl CoordinatorConfig {
+    /// Check every knob before any thread is spawned.
+    pub fn validate(&self) -> crate::Result<()> {
+        crate::ensure!(
+            self.workers >= 1,
+            "coordinator needs at least one worker (got {})",
+            self.workers
+        );
+        crate::ensure!(self.budget >= 1, "per-worker budget must be ≥ 1 (got 0)");
+        crate::ensure!(self.chunk_size >= 1, "chunk_size must be ≥ 1 (got 0)");
+        crate::ensure!(self.queue_depth >= 1, "queue_depth must be ≥ 1 (got 0)");
+        Ok(())
     }
 }
 
@@ -159,16 +180,25 @@ fn average(per_worker: &[WorkerEstimate]) -> WorkerEstimate {
     }
 }
 
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    payload
+        .downcast_ref::<&str>()
+        .map(|s| s.to_string())
+        .or_else(|| payload.downcast_ref::<String>().cloned())
+        .unwrap_or_else(|| "opaque panic payload".into())
+}
+
 /// Run the fan-out pipeline over a stream.
 ///
 /// SANTA runs the master's exact degree pass first (pass 1), then fans out
-/// pass 2; GABE/MAEVE are single-pass.
+/// pass 2; GABE/MAEVE are single-pass.  Returns an error on invalid
+/// configuration or if any worker thread panics.
 pub fn run_pipeline(
     stream: &mut impl EdgeStream,
     kind: DescriptorKind,
     cfg: &CoordinatorConfig,
-) -> PipelineResult {
-    assert!(cfg.workers >= 1);
+) -> crate::Result<PipelineResult> {
+    cfg.validate().map_err(|e| e.context("coordinator config"))?;
     let start = Instant::now();
 
     // SANTA pass 1 (master-side, exact)
@@ -189,12 +219,12 @@ pub fn run_pipeline(
     };
 
     let mut edges = 0u64;
-    let per_worker: Vec<WorkerEstimate> = std::thread::scope(|scope| {
-        let mut senders: Vec<SyncSender<Vec<Edge>>> = Vec::with_capacity(cfg.workers);
+    let per_worker = std::thread::scope(|scope| {
+        let mut senders: Vec<SyncSender<Arc<[Edge]>>> = Vec::with_capacity(cfg.workers);
         let mut handles = Vec::with_capacity(cfg.workers);
         for wid in 0..cfg.workers {
-            let (tx, rx): (SyncSender<Vec<Edge>>, Receiver<Vec<Edge>>) =
-                sync_channel(cfg.queue_depth.max(1));
+            let (tx, rx): (SyncSender<Arc<[Edge]>>, Receiver<Arc<[Edge]>>) =
+                sync_channel(cfg.queue_depth);
             senders.push(tx);
             let seed = cfg.seed ^ (wid as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
             let mut state = match kind {
@@ -214,7 +244,7 @@ pub fn run_pipeline(
             };
             handles.push(scope.spawn(move || {
                 while let Ok(chunk) = rx.recv() {
-                    for e in chunk {
+                    for &e in chunk.iter() {
                         state.push(e);
                     }
                 }
@@ -222,33 +252,52 @@ pub fn run_pipeline(
             }));
         }
 
-        // master: chunk + broadcast with backpressure
-        let mut chunk: Vec<Edge> = Vec::with_capacity(cfg.chunk_size);
+        // master: stage into a reusable buffer, publish each chunk once as
+        // a shared Arc slice (send fails only after a worker died — stop
+        // streaming and let the joins below report the panic)
+        let mut staging: Vec<Edge> = Vec::with_capacity(cfg.chunk_size);
+        let broadcast =
+            |staging: &mut Vec<Edge>, senders: &[SyncSender<Arc<[Edge]>>]| -> bool {
+                let chunk: Arc<[Edge]> = Arc::from(staging.as_slice());
+                staging.clear();
+                senders.iter().all(|tx| tx.send(chunk.clone()).is_ok())
+            };
         while let Some(e) = stream.next_edge() {
             edges += 1;
-            chunk.push(e);
-            if chunk.len() >= cfg.chunk_size {
-                for tx in &senders {
-                    tx.send(chunk.clone()).expect("worker died");
-                }
-                chunk.clear();
+            staging.push(e);
+            if staging.len() >= cfg.chunk_size && !broadcast(&mut staging, &senders) {
+                break;
             }
         }
-        if !chunk.is_empty() {
-            for tx in &senders {
-                tx.send(chunk.clone()).expect("worker died");
-            }
+        if !staging.is_empty() {
+            broadcast(&mut staging, &senders);
         }
         drop(senders); // close queues -> workers finish
-        handles.into_iter().map(|h| h.join().expect("worker panicked")).collect()
-    });
 
-    PipelineResult {
+        // join every worker before leaving the scope (a scope exit with an
+        // unjoined panicked thread would re-panic on the master)
+        let mut out = Vec::with_capacity(handles.len());
+        let mut first_panic: Option<String> = None;
+        for h in handles {
+            match h.join() {
+                Ok(est) => out.push(est),
+                Err(p) => {
+                    first_panic.get_or_insert_with(|| panic_message(p));
+                }
+            }
+        }
+        match first_panic {
+            None => Ok(out),
+            Some(msg) => Err(crate::anyhow!("worker thread panicked: {msg}")),
+        }
+    })?;
+
+    Ok(PipelineResult {
         averaged: average(&per_worker),
         per_worker,
         edges,
         elapsed: start.elapsed(),
-    }
+    })
 }
 
 #[cfg(test)]
@@ -278,7 +327,7 @@ mod tests {
             seed: 5,
         };
         let mut s = VecStream::shuffled(g.edges.clone(), 1);
-        let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg);
+        let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).unwrap();
         assert_eq!(r.edges as usize, g.m());
         let want = subgraph_census(&g);
         assert!((triangle_of(&r.averaged) - want[idx::TRIANGLE]).abs() < 1e-6);
@@ -301,7 +350,7 @@ mod tests {
                     queue_depth: 4,
                     seed: trial * 31 + 1,
                 };
-                let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg);
+                let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).unwrap();
                 vals.push(triangle_of(&r.averaged));
             }
             let m = vals.iter().sum::<f64>() / vals.len() as f64;
@@ -323,7 +372,8 @@ mod tests {
             queue_depth: 2,
             seed: 9,
         };
-        let r = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg);
+        let r = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg)
+            .unwrap();
         let WorkerEstimate::Santa(avg) = &r.averaged else { panic!() };
         // exact budget: every worker identical and exact
         let exact = crate::exact::santa_exact(&g);
@@ -345,7 +395,7 @@ mod tests {
             queue_depth: 2,
             seed: 10,
         };
-        let r = run_pipeline(&mut s, DescriptorKind::Maeve, &cfg);
+        let r = run_pipeline(&mut s, DescriptorKind::Maeve, &cfg).unwrap();
         let WorkerEstimate::Maeve(avg) = &r.averaged else { panic!() };
         let exact = crate::exact::maeve_exact(&g);
         for v in 0..g.n {
@@ -365,7 +415,30 @@ mod tests {
             queue_depth: 1,
             seed: 11,
         };
-        let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg);
+        let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).unwrap();
         assert_eq!(r.edges as usize, g.m());
+    }
+
+    #[test]
+    fn invalid_configs_error_instead_of_panicking() {
+        let g = gen::er_graph(20, 40, &mut Pcg64::seed_from_u64(66));
+        for cfg in [
+            CoordinatorConfig { workers: 0, ..Default::default() },
+            CoordinatorConfig { budget: 0, ..Default::default() },
+            CoordinatorConfig { chunk_size: 0, ..Default::default() },
+            CoordinatorConfig { queue_depth: 0, ..Default::default() },
+        ] {
+            let mut s = VecStream::new(g.edges.clone());
+            let err = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg)
+                .expect_err("invalid config must be rejected");
+            assert!(err.to_string().starts_with("coordinator config:"), "{err}");
+        }
+    }
+
+    #[test]
+    fn zero_worker_validation_message_names_the_knob() {
+        let cfg = CoordinatorConfig { workers: 0, ..Default::default() };
+        let err = cfg.validate().unwrap_err();
+        assert!(err.to_string().contains("worker"), "{err}");
     }
 }

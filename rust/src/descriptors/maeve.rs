@@ -139,14 +139,14 @@ impl MaeveState {
             self.tri[wv as usize] += w.w3;
         }
         // 3-paths w-u-v (endpoints w, v) and u-v-x (endpoints u, x)
-        for &wv in self.sample.neighbors(u) {
+        for wv in self.sample.neighbors(u) {
             if wv == v {
                 continue;
             }
             self.path[wv as usize] += w.w2;
             self.path[v as usize] += w.w2;
         }
-        for &x in self.sample.neighbors(v) {
+        for x in self.sample.neighbors(v) {
             if x == u {
                 continue;
             }

@@ -188,12 +188,12 @@ impl SantaPass2 {
 
         if !self.cfg.exact_wedges {
             // wedges completed by e: centered at u (other edge (u,w))
-            for &wv in self.sample.neighbors(u) {
+            for wv in self.sample.neighbors(u) {
                 if wv != v {
                     self.tr4_wedge += w.w2 * 4.0 / (self.deg(wv) * du * du * dv);
                 }
             }
-            for &x in self.sample.neighbors(v) {
+            for x in self.sample.neighbors(v) {
                 if x != u {
                     self.tr4_wedge += w.w2 * 4.0 / (self.deg(x) * dv * dv * du);
                 }
@@ -211,21 +211,28 @@ impl SantaPass2 {
         self.common = common;
 
         // 4-cycles completed by e: u-v-x-w-u with w ∈ N'(u), x ∈ N'(v)∩N'(w)
-        for &wv in self.sample.neighbors(u) {
-            if wv == v {
+        // (slot-space merges over the arena's contiguous, slot-sorted lists)
+        let (su, sv) = (
+            self.sample.slot_of(u).expect("e in sample"),
+            self.sample.slot_of(v).expect("e in sample"),
+        );
+        let nv_slots = self.sample.neighbor_slots(sv);
+        for &ws in self.sample.neighbor_slots(su) {
+            if ws == sv {
                 continue;
             }
-            let (nw, nv_list) = (self.sample.neighbors(wv), self.sample.neighbors(v));
+            let dw = self.deg(self.sample.label_of(ws));
+            let nw = self.sample.neighbor_slots(ws);
             let (mut i, mut jj) = (0, 0);
-            while i < nw.len() && jj < nv_list.len() {
-                match nw[i].cmp(&nv_list[jj]) {
+            while i < nw.len() && jj < nv_slots.len() {
+                match nw[i].cmp(&nv_slots[jj]) {
                     std::cmp::Ordering::Less => i += 1,
                     std::cmp::Ordering::Greater => jj += 1,
                     std::cmp::Ordering::Equal => {
                         let x = nw[i];
-                        if x != u && x != wv {
-                            self.tr4_c4 +=
-                                w.w4 * 8.0 / (dudv * self.deg(wv) * self.deg(x));
+                        if x != su && x != ws {
+                            let dx = self.deg(self.sample.label_of(x));
+                            self.tr4_c4 += w.w4 * 8.0 / (dudv * dw * dx);
                         }
                         i += 1;
                         jj += 1;

@@ -66,7 +66,7 @@ fn run_network(ctx: &Ctx, kind: MassiveKind, budget: usize, workers: usize) -> R
     // ---- GABE ----
     let t0 = Instant::now();
     let mut s = VecStream::shuffled(g.edges.clone(), ctx.seed);
-    let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg);
+    let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).expect("pipeline");
     let gabe_time = t0.elapsed().as_secs_f64();
     let WorkerEstimate::Gabe(est) = &r.averaged else { unreachable!() };
     let gabe_dist = canberra(&est.descriptor(), &exact_gabe);
@@ -74,7 +74,7 @@ fn run_network(ctx: &Ctx, kind: MassiveKind, budget: usize, workers: usize) -> R
     // ---- MAEVE ----
     let t0 = Instant::now();
     let mut s = VecStream::shuffled(g.edges.clone(), ctx.seed ^ 1);
-    let r = run_pipeline(&mut s, DescriptorKind::Maeve, &cfg);
+    let r = run_pipeline(&mut s, DescriptorKind::Maeve, &cfg).expect("pipeline");
     let maeve_time = t0.elapsed().as_secs_f64();
     let WorkerEstimate::Maeve(est) = &r.averaged else { unreachable!() };
     let maeve_dist = canberra(&est.descriptor(), &exact_maeve);
@@ -82,7 +82,8 @@ fn run_network(ctx: &Ctx, kind: MassiveKind, budget: usize, workers: usize) -> R
     // ---- SANTA (all variants share one run, as in the paper) ----
     let t0 = Instant::now();
     let mut s = VecStream::shuffled(g.edges.clone(), ctx.seed ^ 2);
-    let r = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg);
+    let r = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg)
+        .expect("pipeline");
     let santa_time = t0.elapsed().as_secs_f64();
     let WorkerEstimate::Santa(est) = &r.averaged else { unreachable!() };
     let psi = psi_from_traces(&est.traces, est.nv as f64);

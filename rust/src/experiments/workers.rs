@@ -45,7 +45,7 @@ pub fn workers(ctx: &Ctx) -> Result<()> {
                 seed: seed0 ^ trial << 6 ^ (w as u64) << 40,
             };
             let mut s = VecStream::shuffled(g.edges.clone(), trial);
-            let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg);
+            let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).expect("pipeline");
             let WorkerEstimate::Gabe(e) = r.averaged else { unreachable!() };
             e.counts[idx::TRIANGLE]
         });

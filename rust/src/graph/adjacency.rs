@@ -1,19 +1,183 @@
-//! The budget-bounded sample graph `G'` (paper §4.1.2).
+//! The budget-bounded sample graph `G'` (paper §4.1.2), arena-backed.
 //!
-//! Holds the reservoir's edges as sorted adjacency vectors, giving
-//! `O(log b)` adjacency checks and linear-time sorted intersections — the
-//! exact data structure the paper's complexity analysis assumes ("the list
-//! of neighbors for each vertex is stored in a sorted, tree-like
-//! structure").  Vectors beat trees here: neighborhoods are tiny (≤ b
-//! entries overall) and insertion cost `O(d)` is dominated by the log-factor
-//! lookups during enumeration.
+//! Three ingredients keep the per-edge hot path cache-friendly and the
+//! memory proportional to the *sampled* graph (the paper's `O(b)` space
+//! claim), not to the largest vertex label in the stream:
+//!
+//! * **Vertex interning** — stream labels are mapped to dense *slots*
+//!   (`0..live`) through an open-addressing hash table (fibonacci hashing,
+//!   linear probing, backward-shift deletion).  A stream with labels up to
+//!   `10^8` but only `b = 1000` sampled edges touches `O(b)` memory.
+//! * **Arena-backed neighbor lists** — all adjacency entries live in one
+//!   contiguous `Vec<Slot>` pool, carved into power-of-two blocks managed
+//!   by per-size-class free lists.  Inserting or evicting an edge never
+//!   hits the allocator once the pool is warm, and enumeration walks
+//!   contiguous memory instead of chasing one heap `Vec` per vertex.
+//! * **Slot-space queries** — neighbor lists store slots (sorted by slot
+//!   id), so the enumeration kernels in [`crate::count::edge_centric`] can
+//!   use O(1) epoch-marked membership tests and dense scratch arrays sized
+//!   by `slot_bound()`, with `label_of` a single array read.
+//!
+//! Lists stay sorted (by slot), so the `O(log b)` adjacency checks and
+//! linear merges the paper's complexity analysis assumes still hold; the
+//! arena only removes the constant-factor allocator and pointer-chasing
+//! overhead.
 
 use super::VertexId;
 
-/// Sorted-adjacency dynamic graph over the sampled edges.
+/// Dense per-graph vertex handle (index into the intern table).  Slots are
+/// recycled when a vertex loses its last sampled edge, so they stay in
+/// `0..slot_bound()` — valid indices for mark/scratch arrays.
+pub type Slot = u32;
+
+const EMPTY: Slot = Slot::MAX;
+const CLASS_NONE: u8 = u8::MAX;
+
+/// Neighbor-block capacity of a size class: 4, 8, 16, …
+#[inline]
+const fn block_cap(class: u8) -> usize {
+    4usize << class
+}
+
+/// Open-addressing label → slot map: fibonacci hashing, linear probing,
+/// backward-shift deletion (no tombstones, so probe chains never rot under
+/// the reservoir's steady insert/evict churn).  Load factor ≤ 1/2.
+#[derive(Debug, Clone, Default)]
+struct LabelMap {
+    keys: Vec<VertexId>,
+    vals: Vec<Slot>, // EMPTY marks a vacant cell
+    len: usize,
+}
+
+impl LabelMap {
+    fn with_capacity(n: usize) -> Self {
+        let cap = (n.max(8) * 2).next_power_of_two();
+        LabelMap { keys: vec![0; cap], vals: vec![EMPTY; cap], len: 0 }
+    }
+
+    #[inline]
+    fn mask(&self) -> usize {
+        self.vals.len() - 1
+    }
+
+    #[inline]
+    fn home(&self, key: VertexId) -> usize {
+        let h = (key as u64 ^ 0x517c_c1b7_2722_0a95).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+        (h >> 32) as usize & self.mask()
+    }
+
+    fn get(&self, key: VertexId) -> Option<Slot> {
+        if self.len == 0 {
+            return None;
+        }
+        let mask = self.mask();
+        let mut i = self.home(key);
+        loop {
+            let v = self.vals[i];
+            if v == EMPTY {
+                return None;
+            }
+            if self.keys[i] == key {
+                return Some(v);
+            }
+            i = (i + 1) & mask;
+        }
+    }
+
+    /// Insert a key known to be absent.
+    fn insert(&mut self, key: VertexId, val: Slot) {
+        if self.vals.is_empty() || (self.len + 1) * 2 > self.vals.len() {
+            self.grow();
+        }
+        let mask = self.mask();
+        let mut i = self.home(key);
+        loop {
+            if self.vals[i] == EMPTY {
+                self.keys[i] = key;
+                self.vals[i] = val;
+                self.len += 1;
+                return;
+            }
+            debug_assert_ne!(self.keys[i], key, "duplicate interned label");
+            i = (i + 1) & mask;
+        }
+    }
+
+    fn remove(&mut self, key: VertexId) {
+        if self.len == 0 {
+            return;
+        }
+        let mask = self.mask();
+        let mut hole = self.home(key);
+        loop {
+            if self.vals[hole] == EMPTY {
+                return; // absent
+            }
+            if self.keys[hole] == key {
+                break;
+            }
+            hole = (hole + 1) & mask;
+        }
+        // Backward shift: an entry at j (home h) may fill the hole iff the
+        // hole lies on its probe path, i.e. dist(h→j) ≥ dist(hole→j).
+        let mut j = hole;
+        loop {
+            j = (j + 1) & mask;
+            if self.vals[j] == EMPTY {
+                break;
+            }
+            let h = self.home(self.keys[j]);
+            if (j.wrapping_sub(h) & mask) >= (j.wrapping_sub(hole) & mask) {
+                self.keys[hole] = self.keys[j];
+                self.vals[hole] = self.vals[j];
+                hole = j;
+            }
+        }
+        self.vals[hole] = EMPTY;
+        self.len -= 1;
+    }
+
+    fn grow(&mut self) {
+        let new_cap = (self.vals.len().max(8) * 2).next_power_of_two();
+        let old_keys = std::mem::replace(&mut self.keys, vec![0; new_cap]);
+        let old_vals = std::mem::replace(&mut self.vals, vec![EMPTY; new_cap]);
+        self.len = 0;
+        for (k, v) in old_keys.into_iter().zip(old_vals) {
+            if v != EMPTY {
+                self.insert(k, v);
+            }
+        }
+    }
+
+    fn clear(&mut self) {
+        self.vals.fill(EMPTY);
+        self.len = 0;
+    }
+
+    fn capacity(&self) -> usize {
+        self.vals.len()
+    }
+}
+
+/// Per-slot record: the interned label plus the vertex's neighbor block.
+#[derive(Debug, Clone, Copy)]
+struct VertexRec {
+    label: VertexId,
+    off: u32,
+    len: u32,
+    class: u8, // CLASS_NONE = no block held
+}
+
+/// Arena-backed dynamic graph over the sampled edges.
 #[derive(Debug, Clone, Default)]
 pub struct SampleGraph {
-    adj: Vec<Vec<VertexId>>,
+    recs: Vec<VertexRec>,
+    free_slots: Vec<Slot>,
+    map: LabelMap,
+    /// One contiguous pool of neighbor slots, carved into blocks.
+    pool: Vec<Slot>,
+    /// Freed block offsets, indexed by size class.
+    free_blocks: Vec<Vec<u32>>,
     m: usize,
 }
 
@@ -22,71 +186,16 @@ impl SampleGraph {
         Self::default()
     }
 
-    /// Pre-allocate for an expected order (vertex count grows on demand).
+    /// Pre-allocate for an expected number of *sampled* vertices.
     pub fn with_capacity(n: usize) -> Self {
-        SampleGraph { adj: Vec::with_capacity(n), m: 0 }
-    }
-
-    #[inline]
-    fn ensure(&mut self, v: VertexId) {
-        if self.adj.len() <= v as usize {
-            self.adj.resize(v as usize + 1, Vec::new());
+        SampleGraph {
+            recs: Vec::with_capacity(n),
+            free_slots: Vec::new(),
+            map: LabelMap::with_capacity(n),
+            pool: Vec::with_capacity(n.saturating_mul(4)),
+            free_blocks: Vec::new(),
+            m: 0,
         }
-    }
-
-    /// Insert an edge; returns false if it was already present.
-    pub fn insert(&mut self, u: VertexId, v: VertexId) -> bool {
-        debug_assert_ne!(u, v);
-        self.ensure(u.max(v));
-        let lu = &mut self.adj[u as usize];
-        match lu.binary_search(&v) {
-            Ok(_) => return false,
-            Err(pos) => lu.insert(pos, v),
-        }
-        let lv = &mut self.adj[v as usize];
-        let pos = lv.binary_search(&u).unwrap_err();
-        lv.insert(pos, u);
-        self.m += 1;
-        true
-    }
-
-    /// Remove an edge; returns false if it was absent.
-    pub fn remove(&mut self, u: VertexId, v: VertexId) -> bool {
-        if self.adj.len() <= u.max(v) as usize {
-            return false;
-        }
-        let lu = &mut self.adj[u as usize];
-        match lu.binary_search(&v) {
-            Ok(pos) => lu.remove(pos),
-            Err(_) => return false,
-        };
-        let lv = &mut self.adj[v as usize];
-        if let Ok(pos) = lv.binary_search(&u) {
-            lv.remove(pos);
-        }
-        self.m -= 1;
-        true
-    }
-
-    /// Sorted neighbors of `v` in the sample.
-    #[inline]
-    pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
-        self.adj
-            .get(v as usize)
-            .map(Vec::as_slice)
-            .unwrap_or(&[])
-    }
-
-    /// Sample degree of `v`.
-    #[inline]
-    pub fn degree(&self, v: VertexId) -> usize {
-        self.neighbors(v).len()
-    }
-
-    /// `O(log b)` adjacency check.
-    #[inline]
-    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
-        self.neighbors(u).binary_search(&v).is_ok()
     }
 
     /// Number of edges currently stored.
@@ -95,26 +204,150 @@ impl SampleGraph {
         self.m
     }
 
-    /// Sorted intersection of two neighbor lists into `out` (cleared first),
-    /// excluding `ex1`/`ex2` — the common-neighbor primitive of every
-    /// edge-centric counter.
-    pub fn common_neighbors_into(
-        &self,
-        u: VertexId,
-        v: VertexId,
-        out: &mut Vec<VertexId>,
-    ) {
+    /// Exclusive upper bound on live slot ids — sizes scratch/mark arrays.
+    #[inline]
+    pub fn slot_bound(&self) -> usize {
+        self.recs.len()
+    }
+
+    /// Currently interned (non-isolated) vertices.
+    #[inline]
+    pub fn live_vertices(&self) -> usize {
+        self.recs.len() - self.free_slots.len()
+    }
+
+    /// Arena footprint in neighbor entries (live blocks + free blocks).
+    #[inline]
+    pub fn arena_len(&self) -> usize {
+        self.pool.len()
+    }
+
+    /// Intern-table footprint in cells (capacity, not occupancy).
+    #[inline]
+    pub fn intern_capacity(&self) -> usize {
+        self.map.capacity()
+    }
+
+    /// Slot of a label, if the vertex has at least one sampled edge.
+    #[inline]
+    pub fn slot_of(&self, v: VertexId) -> Option<Slot> {
+        self.map.get(v)
+    }
+
+    /// Stream label of a live slot (one dense array read).
+    #[inline]
+    pub fn label_of(&self, s: Slot) -> VertexId {
+        self.recs[s as usize].label
+    }
+
+    /// Sample degree of a live slot.
+    #[inline]
+    pub fn degree_slot(&self, s: Slot) -> usize {
+        self.recs[s as usize].len as usize
+    }
+
+    /// Neighbor slots of `s`, sorted by slot id (contiguous arena block).
+    #[inline]
+    pub fn neighbor_slots(&self, s: Slot) -> &[Slot] {
+        let r = &self.recs[s as usize];
+        &self.pool[r.off as usize..(r.off + r.len) as usize]
+    }
+
+    /// Sample degree of `v` (0 for unknown labels).
+    #[inline]
+    pub fn degree(&self, v: VertexId) -> usize {
+        self.slot_of(v).map_or(0, |s| self.degree_slot(s))
+    }
+
+    /// Neighbors of `v` as stream labels (slot order, not label order).
+    pub fn neighbors(&self, v: VertexId) -> impl Iterator<Item = VertexId> + '_ {
+        let slots = match self.slot_of(v) {
+            Some(s) => self.neighbor_slots(s),
+            None => &[][..],
+        };
+        slots.iter().map(move |&s| self.label_of(s))
+    }
+
+    /// `O(log b)` adjacency check (probes the smaller endpoint's list).
+    pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
+        match (self.slot_of(u), self.slot_of(v)) {
+            (Some(su), Some(sv)) => {
+                let (from, key) = if self.degree_slot(su) <= self.degree_slot(sv) {
+                    (su, sv)
+                } else {
+                    (sv, su)
+                };
+                self.neighbor_slots(from).binary_search(&key).is_ok()
+            }
+            _ => false,
+        }
+    }
+
+    /// Insert an edge; returns false if it was already present.
+    ///
+    /// Panics on self-loops (simple graphs only) — interning `u` twice
+    /// would silently corrupt the label map, so the guard stays loud in
+    /// release builds.
+    pub fn insert(&mut self, u: VertexId, v: VertexId) -> bool {
+        assert_ne!(u, v, "self-loop ({u},{v}) in the sample graph");
+        let su0 = self.map.get(u);
+        let sv0 = self.map.get(v);
+        if let (Some(su), Some(sv)) = (su0, sv0) {
+            let (from, key) = if self.degree_slot(su) <= self.degree_slot(sv) {
+                (su, sv)
+            } else {
+                (sv, su)
+            };
+            if self.neighbor_slots(from).binary_search(&key).is_ok() {
+                return false;
+            }
+        }
+        let su = match su0 {
+            Some(s) => s,
+            None => self.intern_new(u),
+        };
+        let sv = match sv0 {
+            Some(s) => s,
+            None => self.intern_new(v),
+        };
+        self.push_neighbor(su, sv);
+        self.push_neighbor(sv, su);
+        self.m += 1;
+        true
+    }
+
+    /// Remove an edge; returns false if it was absent.  Vertices that drop
+    /// to degree 0 release their slot, block and intern entry.
+    pub fn remove(&mut self, u: VertexId, v: VertexId) -> bool {
+        let (Some(su), Some(sv)) = (self.map.get(u), self.map.get(v)) else {
+            return false;
+        };
+        if !self.pull_neighbor(su, sv) {
+            return false;
+        }
+        let both = self.pull_neighbor(sv, su);
+        debug_assert!(both, "asymmetric adjacency");
+        self.release_if_isolated(su);
+        self.release_if_isolated(sv);
+        self.m -= 1;
+        true
+    }
+
+    /// Merge of the two neighbor lists as labels (slot order), excluding
+    /// nothing — endpoints can never appear in their own lists.
+    pub fn common_neighbors_into(&self, u: VertexId, v: VertexId, out: &mut Vec<VertexId>) {
         out.clear();
-        let (a, b) = (self.neighbors(u), self.neighbors(v));
+        let (Some(su), Some(sv)) = (self.slot_of(u), self.slot_of(v)) else {
+            return;
+        };
+        let (a, b) = (self.neighbor_slots(su), self.neighbor_slots(sv));
         let (mut i, mut j) = (0, 0);
         while i < a.len() && j < b.len() {
             match a[i].cmp(&b[j]) {
                 std::cmp::Ordering::Less => i += 1,
                 std::cmp::Ordering::Greater => j += 1,
                 std::cmp::Ordering::Equal => {
-                    if a[i] != u && a[i] != v {
-                        out.push(a[i]);
-                    }
+                    out.push(self.label_of(a[i]));
                     i += 1;
                     j += 1;
                 }
@@ -122,18 +355,124 @@ impl SampleGraph {
         }
     }
 
-    /// Clear all edges but keep allocated capacity (worker reuse).
+    /// Clear all edges but keep every allocation (worker reuse).
     pub fn clear(&mut self) {
-        for l in &mut self.adj {
-            l.clear();
+        self.recs.clear();
+        self.free_slots.clear();
+        self.map.clear();
+        self.pool.clear();
+        for f in &mut self.free_blocks {
+            f.clear();
         }
         self.m = 0;
+    }
+
+    // ---- internals ----
+
+    /// Intern a label known to be absent from the map.
+    fn intern_new(&mut self, v: VertexId) -> Slot {
+        let rec = VertexRec { label: v, off: 0, len: 0, class: CLASS_NONE };
+        let s = match self.free_slots.pop() {
+            Some(s) => {
+                self.recs[s as usize] = rec;
+                s
+            }
+            None => {
+                self.recs.push(rec);
+                (self.recs.len() - 1) as Slot
+            }
+        };
+        self.map.insert(v, s);
+        s
+    }
+
+    fn alloc_block(&mut self, class: u8) -> u32 {
+        if let Some(off) = self.free_blocks.get_mut(class as usize).and_then(|f| f.pop()) {
+            return off;
+        }
+        let off = self.pool.len() as u32;
+        self.pool.resize(self.pool.len() + block_cap(class), EMPTY);
+        off
+    }
+
+    fn free_block(&mut self, off: u32, class: u8) {
+        let c = class as usize;
+        if self.free_blocks.len() <= c {
+            self.free_blocks.resize_with(c + 1, Vec::new);
+        }
+        self.free_blocks[c].push(off);
+    }
+
+    /// Insert `t` into `s`'s sorted block; caller guarantees absence.
+    fn push_neighbor(&mut self, s: Slot, t: Slot) {
+        let r = self.recs[s as usize];
+        if r.class == CLASS_NONE {
+            let off = self.alloc_block(0);
+            self.pool[off as usize] = t;
+            self.recs[s as usize] = VertexRec { off, len: 1, class: 0, ..r };
+            return;
+        }
+        let r = if r.len as usize == block_cap(r.class) {
+            // grow into the next size class; the old block is recycled
+            let new_off = self.alloc_block(r.class + 1);
+            self.pool.copy_within(r.off as usize..(r.off + r.len) as usize, new_off as usize);
+            self.free_block(r.off, r.class);
+            let grown = VertexRec { off: new_off, class: r.class + 1, ..r };
+            self.recs[s as usize] = grown;
+            grown
+        } else {
+            r
+        };
+        let base = r.off as usize;
+        let len = r.len as usize;
+        let pos = self.pool[base..base + len].partition_point(|&x| x < t);
+        self.pool.copy_within(base + pos..base + len, base + pos + 1);
+        self.pool[base + pos] = t;
+        self.recs[s as usize].len += 1;
+    }
+
+    /// Remove `t` from `s`'s block; false if absent.
+    fn pull_neighbor(&mut self, s: Slot, t: Slot) -> bool {
+        let r = self.recs[s as usize];
+        if r.class == CLASS_NONE {
+            return false;
+        }
+        let base = r.off as usize;
+        let len = r.len as usize;
+        match self.pool[base..base + len].binary_search(&t) {
+            Ok(pos) => {
+                self.pool.copy_within(base + pos + 1..base + len, base + pos);
+                self.recs[s as usize].len -= 1;
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn release_if_isolated(&mut self, s: Slot) {
+        let r = self.recs[s as usize];
+        if r.len == 0 {
+            if r.class != CLASS_NONE {
+                self.free_block(r.off, r.class);
+                self.recs[s as usize].class = CLASS_NONE;
+            }
+            self.map.remove(r.label);
+            self.free_slots.push(s);
+        }
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Pcg64;
+    use std::collections::BTreeSet;
+
+    fn sorted_neighbors(g: &SampleGraph, v: VertexId) -> Vec<VertexId> {
+        let mut n: Vec<VertexId> = g.neighbors(v).collect();
+        n.sort_unstable();
+        n
+    }
 
     #[test]
     fn insert_remove_roundtrip() {
@@ -149,12 +488,12 @@ mod tests {
     }
 
     #[test]
-    fn neighbors_stay_sorted() {
+    fn neighbors_complete_after_inserts() {
         let mut g = SampleGraph::new();
         for v in [5, 2, 9, 1] {
             g.insert(0, v);
         }
-        assert_eq!(g.neighbors(0), &[1, 2, 5, 9]);
+        assert_eq!(sorted_neighbors(&g, 0), vec![1, 2, 5, 9]);
         assert_eq!(g.degree(0), 4);
     }
 
@@ -167,15 +506,17 @@ mod tests {
         }
         let mut out = Vec::new();
         g.common_neighbors_into(0, 1, &mut out);
+        out.sort_unstable();
         assert_eq!(out, vec![2, 3]);
     }
 
     #[test]
     fn unknown_vertices_are_isolated() {
         let g = SampleGraph::new();
-        assert_eq!(g.neighbors(42), &[] as &[VertexId]);
+        assert_eq!(g.neighbors(42).count(), 0);
         assert_eq!(g.degree(42), 0);
         assert!(!g.has_edge(41, 42));
+        assert_eq!(g.slot_of(42), None);
     }
 
     #[test]
@@ -185,7 +526,185 @@ mod tests {
         g.insert(2, 3);
         g.clear();
         assert_eq!(g.m(), 0);
-        assert_eq!(g.neighbors(0), &[] as &[VertexId]);
+        assert_eq!(g.degree(0), 0);
         assert!(g.insert(0, 1));
+    }
+
+    #[test]
+    fn slots_are_dense_and_translate_back() {
+        let mut g = SampleGraph::new();
+        g.insert(1000, 2000);
+        g.insert(2000, 3000);
+        for v in [1000, 2000, 3000] {
+            let s = g.slot_of(v).unwrap();
+            assert!((s as usize) < g.slot_bound());
+            assert_eq!(g.label_of(s), v);
+            assert_eq!(g.degree_slot(s), g.degree(v));
+        }
+        assert_eq!(g.live_vertices(), 3);
+        // neighbor_slots round-trips through labels
+        let s = g.slot_of(2000).unwrap();
+        let mut via_slots: Vec<VertexId> =
+            g.neighbor_slots(s).iter().map(|&t| g.label_of(t)).collect();
+        via_slots.sort_unstable();
+        assert_eq!(via_slots, vec![1000, 3000]);
+    }
+
+    #[test]
+    fn slots_recycle_on_isolation() {
+        let mut g = SampleGraph::new();
+        g.insert(10, 11);
+        let bound = g.slot_bound();
+        g.remove(10, 11);
+        assert_eq!(g.live_vertices(), 0);
+        assert_eq!(g.slot_of(10), None);
+        // the next vertices reuse the freed slots: no growth
+        g.insert(20, 21);
+        assert_eq!(g.slot_bound(), bound);
+    }
+
+    #[test]
+    fn blocks_grow_and_recycle_across_size_classes() {
+        let mut g = SampleGraph::new();
+        // grow one vertex's list through several classes…
+        for v in 1..=40u32 {
+            g.insert(0, v);
+        }
+        assert_eq!(g.degree(0), 40);
+        let after_grow = g.arena_len();
+        // …then tear it down and grow another: the arena must not expand
+        for v in 1..=40u32 {
+            g.remove(0, v);
+        }
+        assert_eq!(g.live_vertices(), 0);
+        for v in 101..=140u32 {
+            g.insert(100, v);
+        }
+        assert_eq!(g.arena_len(), after_grow, "freed blocks must be reused");
+        assert_eq!(sorted_neighbors(&g, 100), (101..=140).collect::<Vec<_>>());
+    }
+
+    /// ISSUE 2 regression: peak memory tracks *sampled* vertices, not the
+    /// max stream label.  Labels go up to 10^8 with b = 1000 edges; the old
+    /// `Vec<Vec<_>>` layout would have allocated a 10^8-entry table.
+    #[test]
+    fn memory_tracks_sampled_vertices_not_label_space() {
+        let mut g = SampleGraph::new();
+        let mut rng = Pcg64::seed_from_u64(42);
+        let b = 1000usize;
+        let mut live: Vec<(u32, u32)> = Vec::new();
+        for _ in 0..20_000 {
+            let u = rng.gen_range_u32(0, 100_000_000);
+            let v = rng.gen_range_u32(0, 100_000_000);
+            if u == v {
+                continue;
+            }
+            if g.insert(u, v) {
+                live.push((u.min(v), u.max(v)));
+                if live.len() > b {
+                    // reservoir-style eviction of a random stored edge
+                    let k = rng.gen_range_usize(0, live.len());
+                    let (a, c) = live.swap_remove(k);
+                    assert!(g.remove(a, c));
+                }
+            }
+        }
+        assert_eq!(g.m(), live.len());
+        assert!(g.m() <= b + 1);
+        let bound = 2 * (b + 1);
+        assert!(g.slot_bound() <= bound, "slots {} > {bound}", g.slot_bound());
+        assert!(g.live_vertices() <= bound);
+        // arena + intern table stay O(b): a few entries per sampled vertex
+        assert!(g.arena_len() <= 16 * bound, "arena {}", g.arena_len());
+        assert!(g.intern_capacity() <= 8 * bound, "intern {}", g.intern_capacity());
+    }
+
+    /// Randomized differential test against a `BTreeSet<(u, v)>` model:
+    /// insert/remove/clear sequences must agree on membership, neighbors,
+    /// degrees and common neighbors at every step.
+    #[test]
+    fn differential_vs_set_model() {
+        let n = 48u32;
+        let mut g = SampleGraph::new();
+        let mut model: BTreeSet<(u32, u32)> = BTreeSet::new();
+        let mut rng = Pcg64::seed_from_u64(7);
+        let model_neighbors = |model: &BTreeSet<(u32, u32)>, q: u32| -> Vec<u32> {
+            let mut out: Vec<u32> = model
+                .iter()
+                .filter_map(|&(x, y)| {
+                    if x == q {
+                        Some(y)
+                    } else if y == q {
+                        Some(x)
+                    } else {
+                        None
+                    }
+                })
+                .collect();
+            out.sort_unstable();
+            out
+        };
+        for step in 0..12_000u32 {
+            let u = rng.gen_range_u32(0, n);
+            let v = rng.gen_range_u32(0, n);
+            if u == v {
+                continue;
+            }
+            let (a, c) = (u.min(v), u.max(v));
+            match rng.gen_range_usize(0, 100) {
+                0 => {
+                    g.clear();
+                    model.clear();
+                }
+                1..=55 => {
+                    assert_eq!(g.insert(a, c), model.insert((a, c)), "insert {a},{c} @{step}");
+                }
+                _ => {
+                    assert_eq!(g.remove(a, c), model.remove(&(a, c)), "remove {a},{c} @{step}");
+                }
+            }
+            assert_eq!(g.m(), model.len(), "@{step}");
+            assert_eq!(g.has_edge(a, c), model.contains(&(a, c)));
+            for q in [a, c, step % n] {
+                let want = model_neighbors(&model, q);
+                let mut got: Vec<u32> = g.neighbors(q).collect();
+                got.sort_unstable();
+                assert_eq!(got, want, "neighbors({q}) @{step}");
+                assert_eq!(g.degree(q), want.len());
+            }
+            let mut cn = Vec::new();
+            g.common_neighbors_into(a, c, &mut cn);
+            cn.sort_unstable();
+            let want_cn: Vec<u32> = (0..n)
+                .filter(|&w| {
+                    w != a
+                        && w != c
+                        && model.contains(&(a.min(w), a.max(w)))
+                        && model.contains(&(c.min(w), c.max(w)))
+                })
+                .collect();
+            assert_eq!(cn, want_cn, "common({a},{c}) @{step}");
+        }
+    }
+
+    /// The intern table survives heavy label churn (delete-heavy workloads
+    /// stress backward-shift deletion).
+    #[test]
+    fn label_map_churn() {
+        let mut g = SampleGraph::new();
+        for round in 0..200u32 {
+            let base = round * 1_000_003; // spread labels far apart
+            for i in 0..16 {
+                g.insert(base + i, base + i + 1);
+            }
+            for i in 0..16 {
+                assert!(g.has_edge(base + i, base + i + 1), "round {round} edge {i}");
+                assert!(g.remove(base + i, base + i + 1));
+            }
+            assert_eq!(g.m(), 0);
+            assert_eq!(g.live_vertices(), 0);
+        }
+        // all labels released: table cells recycled, bounded capacity
+        assert!(g.intern_capacity() <= 256, "intern {}", g.intern_capacity());
     }
 }

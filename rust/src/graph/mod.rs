@@ -6,8 +6,9 @@
 //! * [`Edge`] — a canonicalized undirected edge,
 //! * [`Graph`] — an in-memory edge list (generators, exact baselines),
 //! * [`csr::Csr`] — compressed sparse rows for exact algorithms,
-//! * [`adjacency::SampleGraph`] — the sorted-adjacency structure holding the
-//!   budget-bounded sample (`O(log b)` adjacency checks, paper §4.1.2),
+//! * [`adjacency::SampleGraph`] — the arena-backed, vertex-interning
+//!   structure holding the budget-bounded sample (`O(log b)` adjacency
+//!   checks, `O(b)` memory independent of the label space, paper §4.1.2),
 //! * [`stream`] — single- and two-pass edge stream abstractions.
 
 pub mod adjacency;

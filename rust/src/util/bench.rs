@@ -2,8 +2,13 @@
 //! `benches/*.rs` are `harness = false` binaries built on this).
 //!
 //! Reports min/median/mean over timed iterations after warmup, with a
-//! throughput column when the caller supplies an element count.
+//! throughput column when the caller supplies an element count.  Results
+//! can additionally be emitted as machine-readable `BENCH_<target>.json`
+//! (schema in DESIGN.md §5) so the perf trajectory is tracked PR-over-PR —
+//! CI uploads these as workflow artifacts.
 
+use std::io::Write;
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
 
 /// One benchmark result.
@@ -95,6 +100,126 @@ impl Bencher {
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
+
+    /// Write all results as JSON (schema 1, documented in DESIGN.md §5).
+    /// Parent directories are created as needed.
+    pub fn write_json(&self, target: &str, path: &Path) -> crate::Result<()> {
+        let mut out = String::new();
+        out.push_str("{\n  \"schema\": 1,\n");
+        out.push_str(&format!("  \"target\": \"{}\",\n", json_escape(target)));
+        out.push_str("  \"results\": [");
+        for (i, r) in self.results.iter().enumerate() {
+            if i > 0 {
+                out.push(',');
+            }
+            out.push_str("\n    {");
+            out.push_str(&format!("\"name\": \"{}\", ", json_escape(&r.name)));
+            out.push_str(&format!("\"iters\": {}, ", r.iters));
+            match r.elements {
+                Some(e) => out.push_str(&format!("\"elements\": {e}, ")),
+                None => out.push_str("\"elements\": null, "),
+            }
+            out.push_str(&format!("\"min_ns\": {}, ", r.min.as_nanos()));
+            out.push_str(&format!("\"median_ns\": {}, ", r.median.as_nanos()));
+            out.push_str(&format!("\"mean_ns\": {}, ", r.mean.as_nanos()));
+            match r.throughput() {
+                Some(t) if t.is_finite() => {
+                    out.push_str(&format!("\"throughput_per_s\": {t}"))
+                }
+                _ => out.push_str("\"throughput_per_s\": null"),
+            }
+            out.push('}');
+        }
+        if self.results.is_empty() {
+            out.push_str("]\n}\n");
+        } else {
+            out.push_str("\n  ]\n}\n");
+        }
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(out.as_bytes())?;
+        println!("bench json -> {}", path.display());
+        Ok(())
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// Shared CLI contract of the manual bench binaries:
+///
+/// * `--test` — CI smoke mode: compile + launch, no timed runs;
+/// * `--json <file.json | dir>` — emit `BENCH_<target>.json` (into the
+///   directory, unless an explicit `.json` file path is given);
+/// * `--filter <substring>` — run only matching bench ids.
+#[derive(Debug, Clone, Default)]
+pub struct BenchArgs {
+    pub smoke: bool,
+    pub json: Option<PathBuf>,
+    pub filter: Option<String>,
+    /// Positional (unconsumed) arguments, e.g. a bench-specific scale —
+    /// read these instead of re-parsing `std::env::args`, so flag/value
+    /// knowledge lives in one place.
+    pub rest: Vec<String>,
+}
+
+impl BenchArgs {
+    /// Parse `std::env::args` for the bench binary named `target`.
+    pub fn parse(target: &str) -> Self {
+        Self::from_iter(target, std::env::args().skip(1))
+    }
+
+    pub fn from_iter(target: &str, args: impl IntoIterator<Item = String>) -> Self {
+        let mut out = BenchArgs::default();
+        let mut it = args.into_iter();
+        while let Some(a) = it.next() {
+            match a.as_str() {
+                "--test" => out.smoke = true,
+                "--json" => {
+                    let p = PathBuf::from(it.next().unwrap_or_else(|| ".".into()));
+                    out.json = Some(if p.extension().is_some_and(|e| e == "json") {
+                        p
+                    } else {
+                        p.join(format!("BENCH_{target}.json"))
+                    });
+                }
+                "--filter" => out.filter = it.next(),
+                _ => out.rest.push(a),
+            }
+        }
+        out
+    }
+
+    /// Should this bench id run under the current `--filter`?
+    pub fn matches(&self, name: &str) -> bool {
+        match &self.filter {
+            Some(f) => name.contains(f),
+            None => true,
+        }
+    }
+
+    /// Emit `BENCH_<target>.json` when `--json` was given (also in smoke
+    /// mode, so CI exercises the emitter without paying for timed runs).
+    pub fn emit(&self, target: &str, b: &Bencher) -> crate::Result<()> {
+        if let Some(p) = &self.json {
+            b.write_json(target, p)?;
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -121,5 +246,72 @@ mod tests {
         assert_eq!(fmt_dur(Duration::from_secs(2)), "2.000 s");
         assert!(fmt_dur(Duration::from_micros(1500)).contains("ms"));
         assert!(fmt_dur(Duration::from_nanos(100)).contains("ns"));
+    }
+
+    #[test]
+    fn json_emitter_roundtrips_through_parser() {
+        use crate::util::json::Json;
+        let mut b = Bencher::new(0, 2);
+        b.bench("alpha/one", Some(500), || 1 + 1);
+        b.bench("beta \"two\"\nline", None, || 2 + 2);
+        let dir = crate::util::tmp::TempDir::new("benchjson").unwrap();
+        let path = dir.path().join("BENCH_test.json");
+        b.write_json("test", &path).unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_f64(), Some(1.0));
+        assert_eq!(v.get("target").unwrap().as_str(), Some("test"));
+        let rs = v.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].get("name").unwrap().as_str(), Some("alpha/one"));
+        assert_eq!(rs[0].get("elements").unwrap().as_f64(), Some(500.0));
+        assert_eq!(rs[0].get("iters").unwrap().as_f64(), Some(2.0));
+        assert!(rs[0].get("median_ns").unwrap().as_f64().is_some());
+        assert!(rs[0].get("throughput_per_s").unwrap().as_f64().unwrap() > 0.0);
+        // quotes + control chars escape cleanly; null throughput preserved
+        assert_eq!(rs[1].get("name").unwrap().as_str(), Some("beta \"two\"\nline"));
+        assert_eq!(rs[1].get("elements"), Some(&Json::Null));
+        assert_eq!(rs[1].get("throughput_per_s"), Some(&Json::Null));
+    }
+
+    #[test]
+    fn empty_results_still_valid_json() {
+        use crate::util::json::Json;
+        let b = Bencher::new(0, 1);
+        let dir = crate::util::tmp::TempDir::new("benchjson").unwrap();
+        // exercises the smoke-mode path: emit with nothing benched, into a
+        // directory that does not exist yet
+        let path = dir.path().join("sub").join("BENCH_smoke.json");
+        b.write_json("smoke", &path).unwrap();
+        let v = Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        assert!(v.get("results").unwrap().as_arr().unwrap().is_empty());
+    }
+
+    #[test]
+    fn bench_args_parse_and_filter() {
+        let a = BenchArgs::from_iter(
+            "hot_path",
+            ["--test", "--json", "out-dir", "--filter", "ba-hubs"].map(String::from),
+        );
+        assert!(a.smoke);
+        assert_eq!(a.json.as_deref(), Some(std::path::Path::new("out-dir/BENCH_hot_path.json")));
+        assert!(a.matches("gabe/ba-hubs/b=0.1|E|"));
+        assert!(!a.matches("gabe/er-sparse/b=0.1|E|"));
+
+        let b = BenchArgs::from_iter("hot_path", ["--json", "explicit.json"].map(String::from));
+        assert!(!b.smoke);
+        assert_eq!(b.json.as_deref(), Some(std::path::Path::new("explicit.json")));
+        assert!(b.matches("anything"));
+        assert!(b.rest.is_empty());
+
+        let c = BenchArgs::from_iter("hot_path", [] as [String; 0]);
+        assert!(c.json.is_none() && c.filter.is_none() && !c.smoke);
+
+        // positional args survive; flag values are never misread as positional
+        let d = BenchArgs::from_iter(
+            "pipeline",
+            ["--filter", "0.5", "0.08", "--json", "out"].map(String::from),
+        );
+        assert_eq!(d.filter.as_deref(), Some("0.5"));
+        assert_eq!(d.rest, vec!["0.08".to_string()]);
     }
 }

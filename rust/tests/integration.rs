@@ -94,7 +94,8 @@ fn pipeline_santa_close_to_spectrum() {
         seed: 13,
     };
     let mut s = VecStream::shuffled(g.edges.clone(), 2);
-    let r = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg);
+    let r = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg)
+        .expect("pipeline");
     let WorkerEstimate::Santa(est) = &r.averaged else { unreachable!() };
     let psi = psi_from_traces(&est.traces, est.nv as f64);
     let eigs = symmetric_eigenvalues(&Csr::from_graph(&g).normalized_laplacian(), g.n);
@@ -121,7 +122,7 @@ fn coordinator_invariant_to_chunking() {
             seed: 5,
         };
         let mut s = VecStream::shuffled(g.edges.clone(), 1);
-        let r = run_pipeline(&mut s, DescriptorKind::Maeve, &cfg);
+        let r = run_pipeline(&mut s, DescriptorKind::Maeve, &cfg).expect("pipeline");
         let WorkerEstimate::Maeve(est) = &r.averaged else { unreachable!() };
         for v in 0..g.n {
             assert!((est.triangles[v] - exact.triangles[v]).abs() < 1e-9);
