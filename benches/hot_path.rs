@@ -7,7 +7,11 @@
 //! edge list inside the timed closure, inflating every edges/s figure.
 //!
 //! `-- --json <dir>` writes `BENCH_hot_path.json`; `-- --filter <substr>`
-//! limits the run (e.g. `--filter 'ba-hubs/b=0.1'`).
+//! limits the run (e.g. `--filter 'ba-hubs/b=0.1'`); `-- --compare
+//! benches/baselines/hot_path.json --tolerance 0.10` exits non-zero when a
+//! median regresses past the tolerance (the CI `bench-gate` contract).
+
+use std::process::ExitCode;
 
 use stream_descriptors::descriptors::santa::{SantaConfig, SantaEstimator};
 use stream_descriptors::descriptors::{gabe::GabeEstimator, maeve::MaeveEstimator};
@@ -27,7 +31,7 @@ fn families() -> Vec<(&'static str, Graph)> {
     ]
 }
 
-fn main() {
+fn main() -> ExitCode {
     let args = BenchArgs::parse("hot_path");
     let mut b = Bencher::new(1, 5);
     // `cargo bench -- --test` (the CI smoke check) verifies the bench
@@ -35,8 +39,7 @@ fn main() {
     // timing anything.
     if args.smoke {
         println!("hot_path: smoke mode, skipping timed runs");
-        args.emit("hot_path", &b).expect("bench json");
-        return;
+        return args.finish("hot_path", &b);
     }
     for (name, g) in families() {
         let m = g.m() as u64;
@@ -78,5 +81,5 @@ fn main() {
             }
         }
     }
-    args.emit("hot_path", &b).expect("bench json");
+    args.finish("hot_path", &b)
 }

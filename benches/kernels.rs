@@ -1,26 +1,131 @@
-//! L2/L1 artifact benchmark: PJRT executable latency per batched call vs
-//! the pure-rust mirrors — quantifies what the AOT path costs/buys.
+//! Kernel micro-benchmarks, two families:
+//!
+//! * **intersect/** — the slot-list intersection kernels of
+//!   `count::simd`, per dispatch arm (scalar / sse42 / avx2, whichever the
+//!   CPU offers) plus the gallop arm and the dispatching API, across skew
+//!   ratios from balanced (4096v4096) to hub-vs-leaf (16v4096).  These run
+//!   on every machine and feed the per-arm table in DESIGN.md §6.
+//! * **l1/l2/rust/** — PJRT executable latency per batched call vs the
+//!   pure-rust mirrors — quantifies what the AOT path costs/buys.  Skipped
+//!   (with a note) when the PJRT artifacts are not built.
+
+use std::collections::BTreeSet;
+use std::process::ExitCode;
 
 use stream_descriptors::classify::{DistanceMatrix, Metric};
+use stream_descriptors::count::simd::{
+    available_arms, gallop_count, intersect_count_excl, intersect_count_excl_on, NO_SLOT, SetView,
+};
 use stream_descriptors::descriptors::psi::psi_from_traces;
+use stream_descriptors::graph::adjacency::{LIST_PAD, PaddedSlots, Slot};
 use stream_descriptors::runtime::Runtime;
 use stream_descriptors::util::bench::{BenchArgs, Bencher};
 use stream_descriptors::util::rng::Pcg64;
 
-fn main() {
+const EP: u32 = 1;
+
+/// One pre-built intersection instance: a small sorted set (list + marks)
+/// and a padded big side, as the arena would hand them to the kernels.
+struct Pair {
+    small: Vec<Slot>,
+    marks: Vec<u32>,
+    big: Vec<Slot>,
+    big_len: usize,
+}
+
+impl Pair {
+    fn set(&self) -> SetView<'_> {
+        SetView { list: &self.small, marks: &self.marks, ep: EP }
+    }
+
+    fn big(&self) -> PaddedSlots<'_> {
+        PaddedSlots::new(&self.big, self.big_len)
+    }
+}
+
+fn sorted_unique(rng: &mut Pcg64, n: usize, hi: u32) -> Vec<Slot> {
+    let mut s: BTreeSet<Slot> = BTreeSet::new();
+    while s.len() < n {
+        s.insert(rng.gen_range_u32(0, hi));
+    }
+    s.into_iter().collect()
+}
+
+fn pairs(rng: &mut Pcg64, count: usize, small_n: usize, big_n: usize) -> Vec<Pair> {
+    (0..count)
+        .map(|_| {
+            let hi = (4 * big_n) as u32;
+            let small = sorted_unique(rng, small_n, hi);
+            let big_list = sorted_unique(rng, big_n, hi);
+            let mut marks = vec![0u32; hi as usize];
+            for &x in &small {
+                marks[x as usize] = EP;
+            }
+            let mut big = big_list;
+            let big_len = big_n;
+            big.resize(big_len.next_multiple_of(LIST_PAD), 0);
+            Pair { small, marks, big, big_len }
+        })
+        .collect()
+}
+
+/// Intersection kernels across skew ratios, per arm + gallop + dispatch.
+fn bench_intersections(args: &BenchArgs, b: &mut Bencher, rng: &mut Pcg64) {
+    const BATCH: usize = 32;
+    for &(small_n, big_n) in &[(4096usize, 4096usize), (256, 4096), (16, 4096), (64, 64)] {
+        let ps = pairs(rng, BATCH, small_n, big_n);
+        let elements = (BATCH * (small_n + big_n)) as u64;
+        for arm in available_arms() {
+            let id = format!("intersect/{}/{small_n}v{big_n}", arm.name());
+            if args.matches(&id) {
+                b.bench(id, Some(elements), || {
+                    let mut acc = 0u64;
+                    for p in &ps {
+                        let (s, big) = (p.set(), p.big());
+                        acc += intersect_count_excl_on(arm, &s, &big, 0, NO_SLOT, NO_SLOT);
+                    }
+                    acc
+                });
+            }
+        }
+        let id = format!("intersect/gallop/{small_n}v{big_n}");
+        if args.matches(&id) {
+            b.bench(id, Some(elements), || {
+                let mut acc = 0u64;
+                for p in &ps {
+                    acc += gallop_count(&p.small, &p.big[..p.big_len], NO_SLOT, NO_SLOT);
+                }
+                acc
+            });
+        }
+        let id = format!("intersect/dispatch/{small_n}v{big_n}");
+        if args.matches(&id) {
+            b.bench(id, Some(elements), || {
+                let mut acc = 0u64;
+                for p in &ps {
+                    acc += intersect_count_excl(&p.set(), &p.big(), 0, NO_SLOT, NO_SLOT);
+                }
+                acc
+            });
+        }
+    }
+}
+
+fn main() -> ExitCode {
     let args = BenchArgs::parse("kernels");
     let mut b = Bencher::new(2, 7);
     // `cargo bench -- --test` (the CI smoke check) verifies the bench
     // compiles and launches, then exits without timing anything.
     if args.smoke {
         println!("kernels: smoke mode, skipping timed runs");
-        args.emit("kernels", &b).expect("bench json");
-        return;
+        return args.finish("kernels", &b);
     }
+    let mut rng = Pcg64::seed_from_u64(5);
+    bench_intersections(&args, &mut b, &mut rng);
+
     let Ok(rt) = Runtime::load_default() else {
         eprintln!("artifacts not built — run `make artifacts` first");
-        args.emit("kernels", &b).expect("bench json");
-        std::process::exit(0);
+        return args.finish("kernels", &b);
     };
     if rt.is_native() {
         // Timing the native backend against the rust mirrors would compare
@@ -30,10 +135,8 @@ fn main() {
             "kernels: native backend active — enable `--features pjrt` and \
              `make artifacts` for the AOT-vs-rust comparison"
         );
-        args.emit("kernels", &b).expect("bench json");
-        std::process::exit(0);
+        return args.finish("kernels", &b);
     }
-    let mut rng = Pcg64::seed_from_u64(5);
 
     // pairwise distance: one full 256x256 tile at D=128
     let m = rt.manifest.shapes.dist_m;
@@ -102,5 +205,5 @@ fn main() {
             rt.trace_powers(&lap, n).unwrap()[4]
         });
     }
-    args.emit("kernels", &b).expect("bench json");
+    args.finish("kernels", &b)
 }

@@ -5,20 +5,21 @@
 //! A bare numeric argument sets the graph scale (default 0.02); `--json`
 //! and `--filter` follow the shared bench contract.
 
+use std::process::ExitCode;
+
 use stream_descriptors::coordinator::{run_pipeline, CoordinatorConfig, DescriptorKind};
 use stream_descriptors::gen::massive::{massive_graph, MassiveKind};
 use stream_descriptors::graph::stream::{EdgeStream, VecStream};
 use stream_descriptors::util::bench::{BenchArgs, Bencher};
 
-fn main() {
+fn main() -> ExitCode {
     let args = BenchArgs::parse("pipeline");
     let mut b = Bencher::new(1, 3);
     // `cargo bench -- --test` (the CI smoke check) verifies the bench
     // compiles and launches, then exits without timing anything.
     if args.smoke {
         println!("pipeline: smoke mode, skipping timed runs");
-        args.emit("pipeline", &b).expect("bench json");
-        return;
+        return args.finish("pipeline", &b);
     }
     let scale: f64 = args.rest.first().and_then(|s| s.parse().ok()).unwrap_or(0.02);
     for kind in [MassiveKind::Cs, MassiveKind::Fl, MassiveKind::Fo] {
@@ -50,5 +51,5 @@ fn main() {
             }
         }
     }
-    args.emit("pipeline", &b).expect("bench json");
+    args.finish("pipeline", &b)
 }

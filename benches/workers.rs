@@ -3,21 +3,22 @@
 //!
 //! Streams are shuffled once outside the timer and rewound per iteration.
 
+use std::process::ExitCode;
+
 use stream_descriptors::coordinator::{run_pipeline, CoordinatorConfig, DescriptorKind};
 use stream_descriptors::gen;
 use stream_descriptors::graph::stream::{EdgeStream, VecStream};
 use stream_descriptors::util::bench::{BenchArgs, Bencher};
 use stream_descriptors::util::rng::Pcg64;
 
-fn main() {
+fn main() -> ExitCode {
     let args = BenchArgs::parse("workers");
     let mut b = Bencher::new(1, 3);
     // `cargo bench -- --test` (the CI smoke check) verifies the bench
     // compiles and launches, then exits without timing anything.
     if args.smoke {
         println!("workers: smoke mode, skipping timed runs");
-        args.emit("workers", &b).expect("bench json");
-        return;
+        return args.finish("workers", &b);
     }
     let g = gen::ba_graph(200_000, 4, &mut Pcg64::seed_from_u64(9));
     let m = g.m() as u64;
@@ -81,5 +82,5 @@ fn main() {
             run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).expect("pipeline").edges
         });
     }
-    args.emit("workers", &b).expect("bench json");
+    args.finish("workers", &b)
 }

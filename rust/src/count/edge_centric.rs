@@ -9,19 +9,17 @@
 //! neighborhoods are stamped into epoch-versioned mark arrays once per
 //! edge, turning every membership probe inside the triangle / C4 / diamond
 //! / K4 loops into one O(1) array read (the paper's `O(b log b)` bound
-//! holds — the log factor only survives in the galloping fallback below).
-//! Intersections against hub neighborhoods gallop: when one list is much
-//! longer, the short list is galloped through the long one in
-//! `O(short · log long)` instead of scanning the hub.
+//! holds — the log factor only survives in the galloping arm).  Every
+//! candidate-list intersection goes through one API,
+//! [`simd::intersect_count_excl`], whose dispatch table picks scan, gallop
+//! or the active SIMD arm per call (cost model in `count::simd`).
 //!
 //! The caller must have **already inserted** `e_t` into the sample graph;
 //! every counter here assumes `v ∈ N'(u)`.
 
+use crate::count::simd::{self, NO_SLOT, SetView};
 use crate::graph::adjacency::{SampleGraph, Slot};
 use crate::graph::VertexId;
-
-/// Sentinel for "no exclusion" in the counting helpers (never a live slot).
-const NO_SLOT: Slot = Slot::MAX;
 
 /// Raw (unweighted) instance counts of each connected pattern containing
 /// the arriving edge, split by the edge's role where the estimator needs it.
@@ -101,84 +99,19 @@ impl Scratch {
     }
 }
 
-/// Scan `list`, counting slots marked at `ep`, excluding `e1`/`e2`.
-#[inline]
-fn count_marked(list: &[Slot], marks: &[u32], ep: u32, e1: Slot, e2: Slot) -> u64 {
-    let mut c = 0u64;
-    for &x in list {
-        c += (marks[x as usize] == ep && x != e1 && x != e2) as u64;
-    }
-    c
-}
-
-/// First index in sorted `a[lo..]` holding a value ≥ `key`: doubling steps
-/// from `lo`, then a binary search inside the bracket.
-#[inline]
-fn gallop(a: &[Slot], key: Slot, mut lo: usize) -> usize {
-    let mut step = 1usize;
-    let mut hi = lo;
-    loop {
-        if hi >= a.len() {
-            hi = a.len();
-            break;
-        }
-        if a[hi] >= key {
-            break;
-        }
-        lo = hi + 1;
-        hi += step;
-        step <<= 1;
-    }
-    lo + a[lo..hi].partition_point(|&x| x < key)
-}
-
-/// `|small ∩ big|` by galloping `small` through `big` (both sorted by
-/// slot), excluding `e1`/`e2` — the hub-vs-leaf fallback.
-fn gallop_count(small: &[Slot], big: &[Slot], e1: Slot, e2: Slot) -> u64 {
-    let mut c = 0u64;
-    let mut lo = 0usize;
-    for &x in small {
-        lo = gallop(big, x, lo);
-        if lo >= big.len() {
-            break;
-        }
-        if big[lo] == x {
-            c += (x != e1 && x != e2) as u64;
-            lo += 1;
-        }
-    }
-    c
-}
-
-/// Scanning the candidate list costs `|list|`; galloping the short side
-/// through it costs `|short| · log |list|`.  Same cutover as the seed's
-/// adaptive merge.
-#[inline]
-fn prefer_gallop(list_len: usize, short_len: usize) -> bool {
-    list_len > 16 * short_len + 8
-}
-
 /// Triangles within `N'(center) \ {excl}`: unordered adjacent pairs of
 /// center-neighbors.  `nbrs`/`marks` describe the center's neighborhood.
 fn triangles_at(g: &SampleGraph, nbrs: &[Slot], marks: &[u32], ep: u32, excl: Slot) -> u64 {
+    let center = SetView { list: nbrs, marks, ep };
     let mut count = 0u64;
-    for (k, &ws) in nbrs.iter().enumerate() {
+    for &ws in nbrs {
         if ws == excl {
             continue;
         }
         // pairs {w, x} with x > w in slot order (counts each pair once);
         // x must neighbor both the center and w
-        let rest = &nbrs[k + 1..];
-        let nbw = g.neighbor_slots(ws);
-        count += if prefer_gallop(nbw.len(), rest.len()) {
-            gallop_count(rest, nbw, excl, NO_SLOT)
-        } else {
-            let mut c = 0u64;
-            for &x in nbw {
-                c += (x > ws && marks[x as usize] == ep && x != excl) as u64;
-            }
-            c
-        };
+        let nbw = g.neighbor_slots_padded(ws);
+        count += simd::intersect_count_excl(&center, &nbw, ws + 1, excl, NO_SLOT);
     }
     count
 }
@@ -252,17 +185,14 @@ pub fn enumerate_edge(
     hits.p4_end = p4_end;
 
     // --- 4-cycles: u-v-x-w-u with w ∈ A, x ∈ N'(w) ∩ B, x ∉ {u, w} ---
+    let set_v = SetView { list: nv, marks: &scratch.mv, ep };
     let mut c4 = 0u64;
     for &ws in nu {
         if ws == sv {
             continue;
         }
-        let nbw = g.neighbor_slots(ws);
-        c4 += if prefer_gallop(nbw.len(), nv.len()) {
-            gallop_count(nv, nbw, su, ws)
-        } else {
-            count_marked(nbw, &scratch.mv, ep, su, ws)
-        };
+        let nbw = g.neighbor_slots_padded(ws);
+        c4 += simd::intersect_count_excl(&set_v, &nbw, 0, su, ws);
     }
     hits.c4 = c4;
 
@@ -282,41 +212,27 @@ pub fn enumerate_edge(
     hits.dia_chord = nw * nw.saturating_sub(1) / 2;
 
     // --- diamond, e outer: hub pair (u, b) or (v, b) with b ∈ W ---
+    let set_u = SetView { list: nu, marks: &scratch.mu, ep };
     let mut dia_outer = 0u64;
     for &bs in &scratch.w {
-        let nbb = g.neighbor_slots(bs);
+        let nbb = g.neighbor_slots_padded(bs);
         // d ∈ N'(u) ∩ N'(b), d ≠ v   (d ∉ {u, b} automatic)
-        dia_outer += if prefer_gallop(nbb.len(), nu.len()) {
-            gallop_count(nu, nbb, sv, bs)
-        } else {
-            count_marked(nbb, &scratch.mu, ep, sv, bs)
-        };
+        dia_outer += simd::intersect_count_excl(&set_u, &nbb, 0, sv, bs);
         // symmetric with v as the e-side hub
-        dia_outer += if prefer_gallop(nbb.len(), nv.len()) {
-            gallop_count(nv, nbb, su, bs)
-        } else {
-            count_marked(nbb, &scratch.mv, ep, su, bs)
-        };
+        dia_outer += simd::intersect_count_excl(&set_v, &nbb, 0, su, bs);
     }
     hits.dia_outer = dia_outer;
 
-    // --- k4: adjacent pairs within W ---
+    // --- k4: adjacent pairs within W (w is sorted by slot, so the pairs
+    // {w, x} with x > w are exactly the suffix above each w) ---
     for &ws in &scratch.w {
         scratch.mw[ws as usize] = ep;
     }
+    let set_w = SetView { list: &scratch.w, marks: &scratch.mw, ep };
     let mut k4 = 0u64;
-    for (i, &ws) in scratch.w.iter().enumerate() {
-        let nbw = g.neighbor_slots(ws);
-        let rest = &scratch.w[i + 1..];
-        k4 += if prefer_gallop(nbw.len(), rest.len()) {
-            gallop_count(rest, nbw, NO_SLOT, NO_SLOT)
-        } else {
-            let mut c = 0u64;
-            for &x in nbw {
-                c += (x > ws && scratch.mw[x as usize] == ep) as u64;
-            }
-            c
-        };
+    for &ws in &scratch.w {
+        let nbw = g.neighbor_slots_padded(ws);
+        k4 += simd::intersect_count_excl(&set_w, &nbw, ws + 1, NO_SLOT, NO_SLOT);
     }
     hits.k4 = k4;
 }

@@ -2,6 +2,9 @@
 //!
 //! * [`edge_centric`] — per-arriving-edge enumeration of every connected
 //!   pattern instance completed by `e_t` in `sample ∪ {e_t}`,
+//! * [`simd`] — the vectorized slot-list intersection kernels behind the
+//!   enumeration inner loops (AVX2/SSE4.2 dispatch + scalar fallback, with
+//!   gallop retained for extreme skew),
 //! * [`overlap`] — the 17 graphs on ≤ 4 vertices, their overlap matrix `O`
 //!   and its exact integer inverse (Fig. 2),
 //! * [`formulas`] — Table 4's closed forms for stars and disconnected
@@ -12,6 +15,7 @@ pub mod brute;
 pub mod edge_centric;
 pub mod formulas;
 pub mod overlap;
+pub mod simd;
 
 /// Canonical indices of the 17 graphs on at most four vertices.  This
 /// ordering is the contract shared with `python/compile/graphlets.py` (the

@@ -1,0 +1,679 @@
+//! Vectorized slot-list intersection kernels behind one dispatch table.
+//!
+//! Every inner loop of the edge-centric enumeration (`P4`/`C4`/diamond/`K4`
+//! in [`crate::count::edge_centric`]) reduces to the same primitive: count
+//! the elements of one sorted neighbor block that belong to a second vertex
+//! set, above a slot lower bound and minus up to two excluded slots.  This
+//! module owns that primitive — [`intersect_count`] /
+//! [`intersect_count_excl`] — and picks, per call, among a three-way cost
+//! model:
+//!
+//! * **gallop** — extreme hub-vs-leaf skew (`|big| ≫ |set|`): gallop the
+//!   short sorted list through the long one in `O(short · log big)`;
+//! * **simd** — bulk intersections: the active [`KernelArm`], selected
+//!   **once** at first use via `is_x86_feature_detected!` (overridable with
+//!   the `STREAM_DESCRIPTORS_FORCE_KERNEL` env var for the CI matrix);
+//! * **scan** — tiny candidate lists, where vector setup costs more than
+//!   the 4-accumulator scalar-unrolled epoch-mark scan.
+//!
+//! The three arms use deliberately different formulations — gathered epoch
+//! marks for AVX2 (8 lanes), a broadcast-compare sorted merge for SSE4.2
+//! (4 lanes; SSE has no gather), and the unrolled mark scan as the portable
+//! fallback — so the randomized differential suite below pins all of them,
+//! plus gallop, to one `BTreeSet` model.
+//!
+//! Vector loads read the *big* side in full 8-lane blocks.  That is only
+//! memory-safe because the big side arrives as a
+//! [`PaddedSlots`](crate::graph::adjacency::PaddedSlots) view: the arena
+//! guarantees every neighbor block may be over-read up to the next
+//! [`LIST_PAD`](crate::graph::adjacency::LIST_PAD)-multiple (tail padding
+//! invariant, see `graph::adjacency`).  Over-read lanes hold arbitrary
+//! slot-like garbage, so every kernel masks the final block's invalid lanes
+//! out of the comparison result — the tests pad with adversarial values
+//! that would be counted if a kernel forgot the mask.
+
+use std::sync::OnceLock;
+
+use crate::graph::adjacency::{PaddedSlots, Slot};
+
+/// Sentinel for "no exclusion" (never a live slot).
+pub const NO_SLOT: Slot = Slot::MAX;
+
+/// Env var forcing one dispatch arm: `scalar`, `sse42` or `avx2`.
+pub const FORCE_KERNEL_ENV: &str = "STREAM_DESCRIPTORS_FORCE_KERNEL";
+
+/// Galloping pays off once the scanned list is this many times the short
+/// side (same cutover as the seed's adaptive merge).
+const GALLOP_FACTOR: usize = 16;
+const GALLOP_BIAS: usize = 8;
+
+/// Below this big-side length the scalar scan beats any vector setup.
+const SIMD_MIN: usize = 16;
+
+/// One vertex set in both of its hot-path representations: the sorted slot
+/// list (galloped / broadcast side) and the epoch-mark array over slot
+/// space (`marks[x] == ep  ⇔  x ∈ set`).  The mark array must cover every
+/// slot appearing in any `big` list it is intersected against.
+#[derive(Debug, Clone, Copy)]
+pub struct SetView<'a> {
+    pub list: &'a [Slot],
+    pub marks: &'a [u32],
+    pub ep: u32,
+}
+
+/// The three dispatch arms.  `Sse42`/`Avx2` exist only on `x86_64` and are
+/// used only when the CPU reports the feature (or the env override forces
+/// them, which panics on unsupported hardware rather than running scalar
+/// code under a SIMD label).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelArm {
+    Scalar,
+    Sse42,
+    Avx2,
+}
+
+impl KernelArm {
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelArm::Scalar => "scalar",
+            KernelArm::Sse42 => "sse42",
+            KernelArm::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse the `STREAM_DESCRIPTORS_FORCE_KERNEL` spelling.
+    pub fn parse(s: &str) -> Option<KernelArm> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelArm::Scalar),
+            "sse42" | "sse4.2" => Some(KernelArm::Sse42),
+            "avx2" => Some(KernelArm::Avx2),
+            _ => None,
+        }
+    }
+
+    /// Can this arm run on the current CPU?
+    pub fn supported(self) -> bool {
+        match self {
+            KernelArm::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelArm::Sse42 => is_x86_feature_detected!("sse4.2"),
+            #[cfg(target_arch = "x86_64")]
+            KernelArm::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => false,
+        }
+    }
+}
+
+/// Every arm the current CPU can execute (always includes `Scalar`).
+pub fn available_arms() -> Vec<KernelArm> {
+    [KernelArm::Scalar, KernelArm::Sse42, KernelArm::Avx2]
+        .into_iter()
+        .filter(|a| a.supported())
+        .collect()
+}
+
+/// The vectorized leg of one dispatch arm: `(set, big, min_slot, e1, e2)`.
+/// `set.list` arrives pre-trimmed to `>= min_slot`.
+type SimdFn = fn(&SetView, &PaddedSlots, Slot, Slot, Slot) -> u64;
+
+/// Is the arm's vector formulation the right call for these lengths?
+/// (The SSE4.2 merge walks both lists, so it loses to the scalar scan of
+/// `big` once the set side dominates.)
+type SimdFits = fn(set_len: usize, big_len: usize) -> bool;
+
+/// The dispatch table, filled once at first use.
+struct Dispatch {
+    arm: KernelArm,
+    simd: SimdFn,
+    fits: SimdFits,
+}
+
+fn fits_always(_set_len: usize, big_len: usize) -> bool {
+    big_len >= SIMD_MIN
+}
+
+fn fits_merge(set_len: usize, big_len: usize) -> bool {
+    // merge cost ≈ set + big/4 must beat the scalar scan's ≈ big
+    big_len >= SIMD_MIN && 4 * set_len < 3 * big_len
+}
+
+fn table_entry(arm: KernelArm) -> Dispatch {
+    match arm {
+        KernelArm::Scalar => Dispatch { arm, simd: scalar_marked, fits: fits_always },
+        #[cfg(target_arch = "x86_64")]
+        KernelArm::Sse42 => Dispatch { arm, simd: x86::pair_sse42_thunk, fits: fits_merge },
+        #[cfg(target_arch = "x86_64")]
+        KernelArm::Avx2 => Dispatch { arm, simd: x86::marked_avx2_thunk, fits: fits_always },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => unreachable!("non-x86_64 dispatch is always scalar"),
+    }
+}
+
+fn detect_arm() -> KernelArm {
+    // an empty value counts as unset (CI matrix legs export it blank)
+    let force = std::env::var(FORCE_KERNEL_ENV).unwrap_or_default();
+    if !force.is_empty() {
+        let v = force;
+        let arm = KernelArm::parse(&v).unwrap_or_else(|| {
+            panic!("{FORCE_KERNEL_ENV}={v}: expected scalar | sse42 | avx2")
+        });
+        assert!(arm.supported(), "{FORCE_KERNEL_ENV}={v}: arm not supported by this CPU");
+        return arm;
+    }
+    if KernelArm::Avx2.supported() {
+        KernelArm::Avx2
+    } else if KernelArm::Sse42.supported() {
+        KernelArm::Sse42
+    } else {
+        KernelArm::Scalar
+    }
+}
+
+fn dispatch() -> &'static Dispatch {
+    static TABLE: OnceLock<Dispatch> = OnceLock::new();
+    TABLE.get_or_init(|| table_entry(detect_arm()))
+}
+
+/// The arm the dispatch table resolved to (detection or env override).
+pub fn active_arm() -> KernelArm {
+    dispatch().arm
+}
+
+/// `|set ∩ big|` — no bound, no exclusions.
+#[inline]
+pub fn intersect_count(set: &SetView, big: &PaddedSlots) -> u64 {
+    intersect_count_excl(set, big, 0, NO_SLOT, NO_SLOT)
+}
+
+/// `|{x ∈ big : x ∈ set, x ≥ min_slot, x ∉ {e1, e2}}|`.
+///
+/// The single API behind the P4/C4/diamond/K4 loops: picks gallop, the
+/// active SIMD arm, or the scalar scan by the cost model above.  `set.list`
+/// and `big` must be sorted by slot; `set.marks` must cover every slot in
+/// `big` (debug-asserted).
+pub fn intersect_count_excl(
+    set: &SetView,
+    big: &PaddedSlots,
+    min_slot: Slot,
+    e1: Slot,
+    e2: Slot,
+) -> u64 {
+    let big_len = big.len();
+    if big_len == 0 || set.list.is_empty() {
+        return 0;
+    }
+    debug_assert!(
+        big.list().iter().all(|&x| (x as usize) < set.marks.len()),
+        "marks array does not cover the big side"
+    );
+    // Trim the set side to ≥ min_slot once: gallop and the merge arm then
+    // need no bound filter, and the cost model sees the true short length.
+    let start = if min_slot == 0 {
+        0
+    } else {
+        set.list.partition_point(|&x| x < min_slot)
+    };
+    let trimmed = SetView { list: &set.list[start..], ..*set };
+    if trimmed.list.is_empty() {
+        return 0;
+    }
+    let d = dispatch();
+    if big_len > GALLOP_FACTOR * trimmed.list.len() + GALLOP_BIAS {
+        gallop_count(trimmed.list, big.list(), e1, e2)
+    } else if (d.fits)(trimmed.list.len(), big_len) {
+        (d.simd)(&trimmed, big, min_slot, e1, e2)
+    } else {
+        scalar_marked(&trimmed, big, min_slot, e1, e2)
+    }
+}
+
+/// Run one specific arm's vector formulation, bypassing the cost model —
+/// for the differential tests and the per-arm micro-benches.  Panics if the
+/// CPU cannot execute `arm`.
+pub fn intersect_count_excl_on(
+    arm: KernelArm,
+    set: &SetView,
+    big: &PaddedSlots,
+    min_slot: Slot,
+    e1: Slot,
+    e2: Slot,
+) -> u64 {
+    assert!(arm.supported(), "kernel arm {} not supported here", arm.name());
+    let start = if min_slot == 0 {
+        0
+    } else {
+        set.list.partition_point(|&x| x < min_slot)
+    };
+    let trimmed = SetView { list: &set.list[start..], ..*set };
+    if big.is_empty() || trimmed.list.is_empty() {
+        return 0;
+    }
+    (table_entry(arm).simd)(&trimmed, big, min_slot, e1, e2)
+}
+
+// ---------------------------------------------------------------------
+// gallop arm
+// ---------------------------------------------------------------------
+
+/// First index in sorted `a[lo..]` holding a value ≥ `key`: doubling steps
+/// from `lo`, then a binary search inside the bracket.
+#[inline]
+fn gallop(a: &[Slot], key: Slot, mut lo: usize) -> usize {
+    let mut step = 1usize;
+    let mut hi = lo;
+    loop {
+        if hi >= a.len() {
+            hi = a.len();
+            break;
+        }
+        if a[hi] >= key {
+            break;
+        }
+        lo = hi + 1;
+        hi += step;
+        step <<= 1;
+    }
+    lo + a[lo..hi].partition_point(|&x| x < key)
+}
+
+/// `|small ∩ big|` by galloping `small` through `big` (both sorted by
+/// slot), excluding `e1`/`e2` — the hub-vs-leaf arm.
+pub fn gallop_count(small: &[Slot], big: &[Slot], e1: Slot, e2: Slot) -> u64 {
+    let mut c = 0u64;
+    let mut lo = 0usize;
+    for &x in small {
+        lo = gallop(big, x, lo);
+        if lo >= big.len() {
+            break;
+        }
+        if big[lo] == x {
+            c += (x != e1 && x != e2) as u64;
+            lo += 1;
+        }
+    }
+    c
+}
+
+// ---------------------------------------------------------------------
+// scalar arm (portable fallback): 4-accumulator unrolled mark scan
+// ---------------------------------------------------------------------
+
+#[inline]
+fn marked_ok(x: Slot, marks: &[u32], ep: u32, min_slot: Slot, e1: Slot, e2: Slot) -> u64 {
+    (marks[x as usize] == ep && x >= min_slot && x != e1 && x != e2) as u64
+}
+
+fn scalar_marked(set: &SetView, big: &PaddedSlots, min_slot: Slot, e1: Slot, e2: Slot) -> u64 {
+    let (marks, ep) = (set.marks, set.ep);
+    let list = big.list();
+    let mut acc = [0u64; 4];
+    let mut chunks = list.chunks_exact(4);
+    for ch in &mut chunks {
+        // four independent accumulators keep the probe loads in flight
+        acc[0] += marked_ok(ch[0], marks, ep, min_slot, e1, e2);
+        acc[1] += marked_ok(ch[1], marks, ep, min_slot, e1, e2);
+        acc[2] += marked_ok(ch[2], marks, ep, min_slot, e1, e2);
+        acc[3] += marked_ok(ch[3], marks, ep, min_slot, e1, e2);
+    }
+    let mut total = acc.iter().sum::<u64>();
+    for &x in chunks.remainder() {
+        total += marked_ok(x, marks, ep, min_slot, e1, e2);
+    }
+    total
+}
+
+// ---------------------------------------------------------------------
+// x86_64 vector arms
+// ---------------------------------------------------------------------
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use super::{PaddedSlots, SetView, Slot};
+
+    /// Lane-validity masks for the final partial vector: row `v` has the
+    /// low `v` lanes set (row 0 is unused — full blocks skip the load).
+    const TAIL: [[i32; 8]; 8] = {
+        let mut t = [[0i32; 8]; 8];
+        let mut v = 0;
+        while v < 8 {
+            let mut l = 0;
+            while l < v {
+                t[v][l] = -1;
+                l += 1;
+            }
+            v += 1;
+        }
+        t
+    };
+
+    /// Safe entry: detection (or the env override's `supported` assert)
+    /// guarantees AVX2 before this thunk lands in the dispatch table.
+    pub(super) fn marked_avx2_thunk(
+        set: &SetView,
+        big: &PaddedSlots,
+        min_slot: Slot,
+        e1: Slot,
+        e2: Slot,
+    ) -> u64 {
+        unsafe { marked_avx2(set, big, min_slot, e1, e2) }
+    }
+
+    pub(super) fn pair_sse42_thunk(
+        set: &SetView,
+        big: &PaddedSlots,
+        min_slot: Slot,
+        e1: Slot,
+        e2: Slot,
+    ) -> u64 {
+        unsafe { pair_sse42(set, big, min_slot, e1, e2) }
+    }
+
+    /// AVX2 arm: 8-lane gathered epoch-mark scan of `big`.
+    ///
+    /// Loads `big` in full 8-lane blocks (the padded-tail contract makes
+    /// the final over-read in-bounds), gathers `marks[x]` with the lane
+    /// mask — garbage lanes are never dereferenced — and counts lanes that
+    /// are marked, ≥ `min_slot` (unsigned, via sign-flip) and not excluded.
+    #[target_feature(enable = "avx2")]
+    unsafe fn marked_avx2(
+        set: &SetView,
+        big: &PaddedSlots,
+        min_slot: Slot,
+        e1: Slot,
+        e2: Slot,
+    ) -> u64 {
+        let len = big.len();
+        let data = big.padded();
+        debug_assert!(data.len() >= len.next_multiple_of(8));
+        let marks = set.marks;
+        let ep_v = _mm256_set1_epi32(set.ep as i32);
+        let e1_v = _mm256_set1_epi32(e1 as i32);
+        let e2_v = _mm256_set1_epi32(e2 as i32);
+        let bias = _mm256_set1_epi32(i32::MIN);
+        let lo_v = _mm256_set1_epi32((min_slot as i32) ^ i32::MIN);
+        let full = _mm256_set1_epi32(-1);
+        let mut count = 0u64;
+        let mut j = 0usize;
+        while j < len {
+            let vx = _mm256_loadu_si256(data.as_ptr().add(j) as *const __m256i);
+            let lane = if len - j >= 8 {
+                full
+            } else {
+                _mm256_loadu_si256(TAIL[len - j].as_ptr() as *const __m256i)
+            };
+            let vm = _mm256_mask_i32gather_epi32::<4>(
+                _mm256_setzero_si256(),
+                marks.as_ptr() as *const i32,
+                vx,
+                lane,
+            );
+            let mut ok = _mm256_and_si256(_mm256_cmpeq_epi32(vm, ep_v), lane);
+            ok = _mm256_andnot_si256(_mm256_cmpeq_epi32(vx, e1_v), ok);
+            ok = _mm256_andnot_si256(_mm256_cmpeq_epi32(vx, e2_v), ok);
+            // x ≥ min_slot (unsigned)  ⇔  ¬(min_slot >ₛ x) after sign-flip
+            let xb = _mm256_xor_si256(vx, bias);
+            ok = _mm256_andnot_si256(_mm256_cmpgt_epi32(lo_v, xb), ok);
+            count += _mm256_movemask_ps(_mm256_castsi256_ps(ok)).count_ones() as u64;
+            j += 8;
+        }
+        count
+    }
+
+    /// SSE4.2 arm: broadcast-compare sorted merge (SSE has no gather, so
+    /// this arm intersects the two sorted lists directly, 4 lanes at a
+    /// time).  `set.list` arrives pre-trimmed to ≥ `min_slot`, so only the
+    /// exclusions need checking on a match.
+    #[target_feature(enable = "sse4.2")]
+    unsafe fn pair_sse42(
+        set: &SetView,
+        big: &PaddedSlots,
+        _min_slot: Slot,
+        e1: Slot,
+        e2: Slot,
+    ) -> u64 {
+        let a = set.list;
+        let len = big.len();
+        let data = big.padded();
+        debug_assert!(data.len() >= len.next_multiple_of(4));
+        let mut count = 0u64;
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < len {
+            let x = a[i];
+            let va = _mm_set1_epi32(x as i32);
+            let vb = _mm_loadu_si128(data.as_ptr().add(j) as *const __m128i);
+            let valid = (len - j).min(4);
+            let hit = _mm_movemask_ps(_mm_castsi128_ps(_mm_cmpeq_epi32(vb, va))) as u32;
+            if hit & ((1u32 << valid) - 1) != 0 {
+                count += (x != e1 && x != e2) as u64;
+            }
+            // advance whichever side is behind; both on an exact match
+            let bmax = data[j + valid - 1];
+            if bmax <= x {
+                j += 4;
+            }
+            if bmax >= x {
+                i += 1;
+            }
+        }
+        count
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use std::collections::BTreeSet;
+
+    use super::*;
+    use crate::gen;
+    use crate::graph::adjacency::{LIST_PAD, SampleGraph};
+    use crate::util::rng::Pcg64;
+
+    const EP: u32 = 7;
+
+    /// Owns a big-side list padded with *adversarial* junk: values that are
+    /// in the set (and above any bound), so a kernel that forgets to mask
+    /// the tail lanes over-counts and fails loudly.
+    struct Padded {
+        data: Vec<Slot>,
+        len: usize,
+    }
+
+    impl Padded {
+        fn new(list: &[Slot], junk: Slot) -> Padded {
+            let mut data = list.to_vec();
+            while data.len() < list.len().next_multiple_of(LIST_PAD) {
+                data.push(junk);
+            }
+            Padded { data, len: list.len() }
+        }
+
+        fn view(&self) -> PaddedSlots<'_> {
+            PaddedSlots::new(&self.data, self.len)
+        }
+    }
+
+    /// Mark array covering `set` and everything in `big`.
+    fn marks_for(set: &[Slot], big: &[Slot]) -> Vec<u32> {
+        let bound = set.iter().chain(big).map(|&x| x as usize + 1).max().unwrap_or(1);
+        let mut marks = vec![0u32; bound];
+        for &x in set {
+            marks[x as usize] = EP;
+        }
+        marks
+    }
+
+    fn model(set: &[Slot], big: &[Slot], min_slot: Slot, e1: Slot, e2: Slot) -> u64 {
+        let s: BTreeSet<Slot> = set.iter().copied().collect();
+        big.iter()
+            .filter(|&&x| s.contains(&x) && x >= min_slot && x != e1 && x != e2)
+            .count() as u64
+    }
+
+    /// Every arm + gallop + the dispatching API against the model.
+    fn check_all(set_list: &[Slot], big_list: &[Slot], min_slot: Slot, e1: Slot, e2: Slot) {
+        let marks = marks_for(set_list, big_list);
+        let set = SetView { list: set_list, marks: &marks, ep: EP };
+        // junk that maximizes false-match odds: a counted value if any
+        let junk = *set_list
+            .iter()
+            .find(|&&x| big_list.contains(&x) && x >= min_slot && x != e1 && x != e2)
+            .or_else(|| set_list.first())
+            .unwrap_or(&0);
+        let big = Padded::new(big_list, junk);
+        let want = model(set_list, big_list, min_slot, e1, e2);
+        for arm in available_arms() {
+            let got = intersect_count_excl_on(arm, &set, &big.view(), min_slot, e1, e2);
+            assert_eq!(got, want, "{} arm: set={set_list:?} big={big_list:?}", arm.name());
+        }
+        let start = set_list.partition_point(|&x| x < min_slot);
+        assert_eq!(
+            gallop_count(&set_list[start..], big_list, e1, e2),
+            want,
+            "gallop: set={set_list:?} big={big_list:?}"
+        );
+        assert_eq!(
+            intersect_count_excl(&set, &big.view(), min_slot, e1, e2),
+            want,
+            "dispatch: set={set_list:?} big={big_list:?}"
+        );
+    }
+
+    fn sorted_unique(rng: &mut Pcg64, n: usize, hi: u32) -> Vec<Slot> {
+        let mut s: BTreeSet<Slot> = BTreeSet::new();
+        while s.len() < n {
+            s.insert(rng.gen_range_u32(0, hi));
+        }
+        s.into_iter().collect()
+    }
+
+    #[test]
+    fn adversarial_shapes() {
+        // empty / one-element / identical / disjoint / subset lists
+        check_all(&[], &[], 0, NO_SLOT, NO_SLOT);
+        check_all(&[3], &[], 0, NO_SLOT, NO_SLOT);
+        check_all(&[], &[3], 0, NO_SLOT, NO_SLOT);
+        check_all(&[5], &[5], 0, NO_SLOT, NO_SLOT);
+        check_all(&[5], &[5], 0, 5, NO_SLOT);
+        check_all(&[5], &[5], 6, NO_SLOT, NO_SLOT);
+        check_all(&[0], &[0], 0, NO_SLOT, NO_SLOT); // slot 0 with min_slot 0
+        check_all(&[1, 2, 3], &[4, 5, 6], 0, NO_SLOT, NO_SLOT);
+        let long: Vec<Slot> = (0..97).collect();
+        check_all(&long, &long, 0, NO_SLOT, NO_SLOT);
+        check_all(&long, &long, 50, 60, 70);
+        check_all(&[7, 50, 96], &long, 0, 50, NO_SLOT);
+        // exclusions sitting at block boundaries of the vector loop
+        check_all(&long, &long, 0, 7, 8);
+        check_all(&long, &long, 0, 95, 96);
+    }
+
+    /// Sweep list sizes across the arena size-class boundaries (4/8/16/…)
+    /// and skew ratios, with random bounds and exclusions.
+    #[test]
+    fn randomized_differential_vs_set_model() {
+        let mut rng = Pcg64::seed_from_u64(42);
+        for &(na, nb, hi) in &[
+            (1usize, 4usize, 16u32),
+            (3, 5, 16),
+            (4, 8, 64),
+            (7, 9, 64), // crosses the 4→8 and 8→16 class boundaries
+            (8, 16, 64),
+            (15, 17, 128),
+            (16, 33, 128),
+            (31, 64, 256),
+            (40, 200, 512), // gallop territory: big > 16·small
+            (3, 400, 1024),
+            (120, 130, 512),
+            (200, 40, 512), // set side longer than big
+        ] {
+            for _ in 0..40 {
+                let a = sorted_unique(&mut rng, na, hi);
+                let b = sorted_unique(&mut rng, nb, hi);
+                let pick = |rng: &mut Pcg64, list: &[Slot]| -> Slot {
+                    if list.is_empty() || rng.gen_range_usize(0, 3) == 0 {
+                        NO_SLOT
+                    } else {
+                        list[rng.gen_range_usize(0, list.len())]
+                    }
+                };
+                let e1 = pick(&mut rng, &b);
+                let e2 = pick(&mut rng, &a);
+                let min_slot = match rng.gen_range_usize(0, 3) {
+                    0 => 0,
+                    1 => rng.gen_range_u32(0, hi),
+                    _ => a.get(na / 2).copied().unwrap_or(0),
+                };
+                check_all(&a, &b, min_slot, e1, e2);
+            }
+        }
+    }
+
+    /// Real arena blocks: stream ER/BA/PLC edges through a `SampleGraph`
+    /// (with eviction churn so blocks recycle and start unaligned in the
+    /// pool), then intersect live neighbor lists through every arm.
+    #[test]
+    fn arms_agree_on_er_ba_plc_adjacency() {
+        let mut rng = Pcg64::seed_from_u64(9);
+        let graphs = [
+            gen::er_graph(120, 480, &mut rng),
+            gen::ba_graph(150, 4, &mut rng),
+            gen::powerlaw_cluster_graph(120, 5, 0.5, &mut rng),
+        ];
+        for full in &graphs {
+            let mut g = SampleGraph::new();
+            let mut live: Vec<(u32, u32)> = Vec::new();
+            for (t, e) in full.edges.iter().enumerate() {
+                if g.insert(e.u, e.v) {
+                    live.push((e.u, e.v));
+                }
+                // periodic eviction exercises block free-lists and reuse
+                if t % 7 == 3 && !live.is_empty() {
+                    let k = rng.gen_range_usize(0, live.len());
+                    let (a, b) = live.swap_remove(k);
+                    assert!(g.remove(a, b));
+                }
+                if t % 5 != 0 || live.is_empty() {
+                    continue;
+                }
+                let (u, v) = live[rng.gen_range_usize(0, live.len())];
+                let (su, sv) = (g.slot_of(u).unwrap(), g.slot_of(v).unwrap());
+                let nu = g.neighbor_slots(su).to_vec();
+                let nv_list = g.neighbor_slots(sv).to_vec();
+                let marks = marks_for(&nu, &nv_list);
+                let set = SetView { list: &nu, marks: &marks, ep: EP };
+                let big = g.neighbor_slots_padded(sv);
+                let want = model(&nu, &nv_list, 0, su, sv);
+                for arm in available_arms() {
+                    assert_eq!(
+                        intersect_count_excl_on(arm, &set, &big, 0, su, sv),
+                        want,
+                        "{} arm at t={t}",
+                        arm.name()
+                    );
+                }
+                assert_eq!(intersect_count(&set, &big), model(&nu, &nv_list, 0, NO_SLOT, NO_SLOT));
+            }
+        }
+    }
+
+    #[test]
+    fn force_env_spellings_parse() {
+        assert_eq!(KernelArm::parse("scalar"), Some(KernelArm::Scalar));
+        assert_eq!(KernelArm::parse("sse42"), Some(KernelArm::Sse42));
+        assert_eq!(KernelArm::parse("SSE4.2"), Some(KernelArm::Sse42));
+        assert_eq!(KernelArm::parse(" avx2 "), Some(KernelArm::Avx2));
+        assert_eq!(KernelArm::parse("avx512"), None);
+        assert_eq!(KernelArm::parse(""), None);
+    }
+
+    #[test]
+    fn active_arm_is_available() {
+        // whatever detection (or a CI env override) picked must be runnable
+        let arm = active_arm();
+        assert!(arm.supported());
+        assert!(available_arms().contains(&arm));
+        assert!(available_arms().contains(&KernelArm::Scalar));
+    }
+}

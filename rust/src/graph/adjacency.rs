@@ -22,6 +22,26 @@
 //! linear merges the paper's complexity analysis assumes still hold; the
 //! arena only removes the constant-factor allocator and pointer-chasing
 //! overhead.
+//!
+//! # Alignment and the padded-tail invariant (SIMD contract)
+//!
+//! The intersection kernels in [`crate::count::simd`] read neighbor blocks
+//! in full vector loads, so the arena guarantees two things:
+//!
+//! * **Block alignment** — every block offset is a multiple of 4 entries
+//!   (block capacities are powers of two ≥ 4, carved contiguously from
+//!   offset 0), i.e. blocks are 16-byte aligned relative to the pool base.
+//!   The kernels still use unaligned loads — a `Vec<u32>` allocation is
+//!   only 4-byte aligned in absolute terms — but blocks never straddle a
+//!   size-class boundary mid-entry.
+//! * **Padded tail** — the pool always extends [`LIST_PAD`] entries past
+//!   the last carved block, so reading any neighbor list rounded up to the
+//!   next `LIST_PAD`-multiple stays inside the pool allocation.
+//!   [`SampleGraph::neighbor_slots_padded`] hands kernels exactly that
+//!   rounded view as a [`PaddedSlots`].  Over-read entries hold arbitrary
+//!   slot-like values (a neighboring block's data or the `EMPTY`-filled
+//!   tail), **not** sentinels — kernels must mask invalid lanes out of
+//!   their comparisons rather than rely on the padding never matching.
 
 use super::VertexId;
 
@@ -32,6 +52,64 @@ pub type Slot = u32;
 
 const EMPTY: Slot = Slot::MAX;
 const CLASS_NONE: u8 = u8::MAX;
+
+/// Over-read quantum of the padded-tail invariant: any neighbor list may be
+/// read up to the next `LIST_PAD`-multiple of entries (one AVX2 vector of
+/// `u32` slots).  See the module docs for the full contract.
+pub const LIST_PAD: usize = 8;
+
+/// A neighbor list plus its guaranteed-readable over-read tail: the first
+/// [`len`](PaddedSlots::len) entries of [`padded`](PaddedSlots::padded) are
+/// the sorted list; the slice itself extends to the next
+/// [`LIST_PAD`]-multiple so vector kernels can load full blocks.  Entries
+/// past `len` are garbage — mask them, never trust them.
+#[derive(Debug, Clone, Copy)]
+pub struct PaddedSlots<'a> {
+    data: &'a [Slot],
+    len: usize,
+}
+
+impl<'a> PaddedSlots<'a> {
+    /// Wrap a padded slice; `data` must cover `len` rounded up to the next
+    /// [`LIST_PAD`]-multiple.
+    pub fn new(data: &'a [Slot], len: usize) -> Self {
+        assert!(
+            data.len() >= len.next_multiple_of(LIST_PAD),
+            "padded slice too short: {} < {}",
+            data.len(),
+            len.next_multiple_of(LIST_PAD)
+        );
+        PaddedSlots { data, len }
+    }
+
+    /// The empty list (no padding needed: kernels never load from it).
+    pub fn empty() -> PaddedSlots<'static> {
+        PaddedSlots { data: &[], len: 0 }
+    }
+
+    /// Logical list length.
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// The sorted neighbor list (exact length, no padding).
+    #[inline]
+    pub fn list(&self) -> &'a [Slot] {
+        &self.data[..self.len]
+    }
+
+    /// The full readable window (length a `LIST_PAD`-multiple ≥ `len`).
+    #[inline]
+    pub fn padded(&self) -> &'a [Slot] {
+        self.data
+    }
+}
 
 /// Neighbor-block capacity of a size class: 4, 8, 16, …
 #[inline]
@@ -174,8 +252,11 @@ pub struct SampleGraph {
     recs: Vec<VertexRec>,
     free_slots: Vec<Slot>,
     map: LabelMap,
-    /// One contiguous pool of neighbor slots, carved into blocks.
+    /// One contiguous pool of neighbor slots, carved into blocks.  Always
+    /// [`LIST_PAD`] entries longer than the carved region (module docs).
     pool: Vec<Slot>,
+    /// Total carved block size; blocks live in `pool[..carved]`.
+    carved: usize,
     /// Freed block offsets, indexed by size class.
     free_blocks: Vec<Vec<u32>>,
     m: usize,
@@ -192,7 +273,8 @@ impl SampleGraph {
             recs: Vec::with_capacity(n),
             free_slots: Vec::new(),
             map: LabelMap::with_capacity(n),
-            pool: Vec::with_capacity(n.saturating_mul(4)),
+            pool: Vec::with_capacity(n.saturating_mul(4) + LIST_PAD),
+            carved: 0,
             free_blocks: Vec::new(),
             m: 0,
         }
@@ -216,7 +298,8 @@ impl SampleGraph {
         self.recs.len() - self.free_slots.len()
     }
 
-    /// Arena footprint in neighbor entries (live blocks + free blocks).
+    /// Arena footprint in neighbor entries (live blocks + free blocks +
+    /// the [`LIST_PAD`] tail).
     #[inline]
     pub fn arena_len(&self) -> usize {
         self.pool.len()
@@ -251,6 +334,21 @@ impl SampleGraph {
     pub fn neighbor_slots(&self, s: Slot) -> &[Slot] {
         let r = &self.recs[s as usize];
         &self.pool[r.off as usize..(r.off + r.len) as usize]
+    }
+
+    /// Neighbor slots of `s` with the over-read tail the SIMD kernels need
+    /// ([`PaddedSlots`]; module docs describe the invariant that makes the
+    /// rounded-up window always in-pool).
+    #[inline]
+    pub fn neighbor_slots_padded(&self, s: Slot) -> PaddedSlots<'_> {
+        let r = &self.recs[s as usize];
+        if r.class == CLASS_NONE {
+            return PaddedSlots::empty();
+        }
+        let (off, len) = (r.off as usize, r.len as usize);
+        let end = off + len.next_multiple_of(LIST_PAD);
+        debug_assert!(end <= self.pool.len(), "padded-tail invariant violated");
+        PaddedSlots::new(&self.pool[off..end], len)
     }
 
     /// Sample degree of `v` (0 for unknown labels).
@@ -361,6 +459,7 @@ impl SampleGraph {
         self.free_slots.clear();
         self.map.clear();
         self.pool.clear();
+        self.carved = 0;
         for f in &mut self.free_blocks {
             f.clear();
         }
@@ -390,9 +489,13 @@ impl SampleGraph {
         if let Some(off) = self.free_blocks.get_mut(class as usize).and_then(|f| f.pop()) {
             return off;
         }
-        let off = self.pool.len() as u32;
-        self.pool.resize(self.pool.len() + block_cap(class), EMPTY);
-        off
+        let off = self.carved;
+        debug_assert_eq!(off % 4, 0, "blocks are 4-entry aligned");
+        self.carved += block_cap(class);
+        // padded-tail invariant: the pool always reaches LIST_PAD entries
+        // past the carved region so rounded-up reads stay in-allocation
+        self.pool.resize(self.carved + LIST_PAD, EMPTY);
+        off as u32
     }
 
     fn free_block(&mut self, off: u32, class: u8) {
@@ -684,6 +787,50 @@ mod tests {
                 })
                 .collect();
             assert_eq!(cn, want_cn, "common({a},{c}) @{step}");
+        }
+    }
+
+    /// SIMD contract (ISSUE 3): every live neighbor list, at every point of
+    /// a random insert/remove/clear churn, is readable through
+    /// `neighbor_slots_padded` out to the next `LIST_PAD`-multiple, agrees
+    /// with `neighbor_slots` on the logical prefix, and sits on a 4-entry
+    /// block boundary.
+    #[test]
+    fn padded_views_cover_every_live_list_under_churn() {
+        let mut g = SampleGraph::new();
+        let mut rng = Pcg64::seed_from_u64(11);
+        let n = 64u32;
+        for step in 0..8_000u32 {
+            let u = rng.gen_range_u32(0, n);
+            let v = rng.gen_range_u32(0, n);
+            if u == v {
+                continue;
+            }
+            match rng.gen_range_usize(0, 100) {
+                0 => g.clear(),
+                1..=60 => {
+                    g.insert(u, v);
+                }
+                _ => {
+                    g.remove(u, v);
+                }
+            }
+            for q in 0..n {
+                let Some(s) = g.slot_of(q) else {
+                    continue;
+                };
+                let exact = g.neighbor_slots(s);
+                let padded = g.neighbor_slots_padded(s);
+                assert_eq!(padded.list(), exact, "slot {s} @{step}");
+                assert_eq!(padded.len(), exact.len());
+                assert_eq!(
+                    padded.padded().len(),
+                    exact.len().next_multiple_of(LIST_PAD),
+                    "padded window must be a LIST_PAD multiple @{step}"
+                );
+                // reading the whole window must be in-bounds (touch it all)
+                std::hint::black_box(padded.padded().iter().map(|&x| x as u64).sum::<u64>());
+            }
         }
     }
 

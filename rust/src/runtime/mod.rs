@@ -23,6 +23,8 @@
 
 pub mod manifest;
 pub mod native;
+#[cfg(all(feature = "pjrt", not(feature = "xla-crate")))]
+mod xla_stub;
 
 use std::path::{Path, PathBuf};
 
@@ -174,13 +176,17 @@ pub fn runtime_or_skip() -> Option<Runtime> {
 
 #[cfg(feature = "pjrt")]
 mod pjrt {
-    //! The PJRT/HLO loader-executor.  Compiles only with `--features pjrt`,
-    //! which additionally requires the `xla` crate (see the commented-out
-    //! dependency in `Cargo.toml` and DESIGN.md §2).
+    //! The PJRT/HLO loader-executor.  Compiles with `--features pjrt`
+    //! against either the real `xla` crate (`xla-crate` feature + the
+    //! commented-out dependency in `Cargo.toml`) or the in-tree
+    //! compile-only stub ([`super::xla_stub`]), which keeps this module
+    //! type-checked on offline builders and in the CI feature matrix.
 
     use std::collections::HashMap;
     use std::path::Path;
 
+    #[cfg(not(feature = "xla-crate"))]
+    use super::xla_stub as xla;
     use super::Manifest;
     use crate::{anyhow, Result};
 

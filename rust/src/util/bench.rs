@@ -5,7 +5,11 @@
 //! throughput column when the caller supplies an element count.  Results
 //! can additionally be emitted as machine-readable `BENCH_<target>.json`
 //! (schema in DESIGN.md §5) so the perf trajectory is tracked PR-over-PR —
-//! CI uploads these as workflow artifacts.
+//! CI uploads these as workflow artifacts — and compared against a
+//! checked-in baseline (`--compare <baseline.json> --tolerance 0.10`): any
+//! median more than `tolerance` above its baseline entry fails the run,
+//! which is what makes the CI `bench-gate` job block merges (DESIGN.md §5
+//! documents the baseline update procedure).
 
 use std::io::Write;
 use std::path::{Path, PathBuf};
@@ -147,6 +151,85 @@ impl Bencher {
     }
 }
 
+/// One median that landed above its baseline entry by more than the
+/// tolerance.
+#[derive(Debug, Clone)]
+pub struct Regression {
+    pub name: String,
+    pub baseline_ns: f64,
+    pub current_ns: f64,
+}
+
+impl Regression {
+    /// Current / baseline median (≥ 1 for a regression).
+    pub fn ratio(&self) -> f64 {
+        self.current_ns / self.baseline_ns.max(1.0)
+    }
+}
+
+/// Outcome of comparing one run's medians against a schema-1 baseline.
+#[derive(Debug, Default)]
+pub struct CompareReport {
+    /// Results that had a baseline entry and were checked.
+    pub checked: usize,
+    /// Bench ids in this run with no baseline entry (reported, not gated).
+    pub unbaselined: Vec<String>,
+    pub regressions: Vec<Regression>,
+}
+
+impl CompareReport {
+    /// Gate verdict: every checked median within tolerance, and at least
+    /// one median actually checked (an empty comparison gates nothing and
+    /// must fail loudly rather than green-wash a broken filter).
+    pub fn ok(&self) -> bool {
+        self.checked > 0 && self.regressions.is_empty()
+    }
+}
+
+/// Compare run medians against a schema-1 `BENCH_<target>.json` baseline:
+/// a result regresses when `median_ns > baseline * (1 + tolerance)`.
+/// Baseline entries absent from `results` are ignored (a `--filter` run
+/// checks only what it ran); run results absent from the baseline are
+/// collected in `unbaselined`.
+pub fn compare_results(
+    results: &[BenchResult],
+    baseline_json: &str,
+    tolerance: f64,
+) -> crate::Result<CompareReport> {
+    use crate::util::json::Json;
+    let v = Json::parse(baseline_json).map_err(|e| crate::anyhow!("baseline: {e}"))?;
+    crate::ensure!(
+        v.get("schema").and_then(Json::as_f64) == Some(1.0),
+        "baseline: unsupported schema (want 1)"
+    );
+    let mut base = std::collections::BTreeMap::new();
+    for r in v.get("results").and_then(Json::as_arr).unwrap_or(&[]) {
+        let name = r.get("name").and_then(Json::as_str);
+        let med = r.get("median_ns").and_then(Json::as_f64);
+        if let (Some(name), Some(med)) = (name, med) {
+            base.insert(name.to_string(), med);
+        }
+    }
+    let mut rep = CompareReport::default();
+    for r in results {
+        match base.get(&r.name) {
+            Some(&baseline_ns) => {
+                rep.checked += 1;
+                let current_ns = r.median.as_nanos() as f64;
+                if current_ns > baseline_ns * (1.0 + tolerance) {
+                    rep.regressions.push(Regression {
+                        name: r.name.clone(),
+                        baseline_ns,
+                        current_ns,
+                    });
+                }
+            }
+            None => rep.unbaselined.push(r.name.clone()),
+        }
+    }
+    Ok(rep)
+}
+
 fn json_escape(s: &str) -> String {
     let mut out = String::with_capacity(s.len());
     for c in s.chars() {
@@ -165,12 +248,18 @@ fn json_escape(s: &str) -> String {
 /// * `--test` — CI smoke mode: compile + launch, no timed runs;
 /// * `--json <file.json | dir>` — emit `BENCH_<target>.json` (into the
 ///   directory, unless an explicit `.json` file path is given);
-/// * `--filter <substring>` — run only matching bench ids.
+/// * `--filter <substring>` — run only matching bench ids;
+/// * `--compare <baseline.json>` — after the run, fail (exit 1) if any
+///   median regressed more than the tolerance vs the baseline;
+/// * `--tolerance <frac>` — allowed median growth for `--compare`
+///   (default 0.10 = 10%).
 #[derive(Debug, Clone, Default)]
 pub struct BenchArgs {
     pub smoke: bool,
     pub json: Option<PathBuf>,
     pub filter: Option<String>,
+    pub compare: Option<PathBuf>,
+    pub tolerance: Option<f64>,
     /// Positional (unconsumed) arguments, e.g. a bench-specific scale —
     /// read these instead of re-parsing `std::env::args`, so flag/value
     /// knowledge lives in one place.
@@ -198,6 +287,16 @@ impl BenchArgs {
                     });
                 }
                 "--filter" => out.filter = it.next(),
+                "--compare" => {
+                    // a lost operand must not silently disarm the CI gate
+                    let p = it.next().expect("--compare needs a baseline path");
+                    out.compare = Some(PathBuf::from(p));
+                }
+                "--tolerance" => {
+                    let v = it.next().unwrap_or_default();
+                    let t = v.parse().unwrap_or_else(|_| panic!("--tolerance {v}: not a number"));
+                    out.tolerance = Some(t);
+                }
                 _ => out.rest.push(a),
             }
         }
@@ -219,6 +318,71 @@ impl BenchArgs {
             b.write_json(target, p)?;
         }
         Ok(())
+    }
+
+    /// End-of-run: emit JSON, then enforce `--compare` — the bench
+    /// binary's exit status.  Smoke mode never compares (there are no
+    /// timed medians to gate).
+    pub fn finish(&self, target: &str, b: &Bencher) -> std::process::ExitCode {
+        use std::process::ExitCode;
+        if let Err(e) = self.emit(target, b) {
+            eprintln!("{target}: bench json: {e:#}");
+            return ExitCode::FAILURE;
+        }
+        let Some(path) = &self.compare else {
+            return ExitCode::SUCCESS;
+        };
+        if self.smoke {
+            println!("{target}: smoke mode, skipping baseline comparison");
+            return ExitCode::SUCCESS;
+        }
+        let tol = self.tolerance.unwrap_or(0.10);
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                eprintln!("bench-compare: read {}: {e}", path.display());
+                return ExitCode::FAILURE;
+            }
+        };
+        let rep = match compare_results(b.results(), &text, tol) {
+            Ok(rep) => rep,
+            Err(e) => {
+                eprintln!("bench-compare: {e:#}");
+                return ExitCode::FAILURE;
+            }
+        };
+        for n in &rep.unbaselined {
+            println!("bench-compare: {n}: no baseline entry (not gated)");
+        }
+        for r in &rep.regressions {
+            eprintln!(
+                "bench-compare: REGRESSION {}: median {:.0} ns vs baseline {:.0} ns \
+                 ({:+.1}% > {:.0}% tolerance)",
+                r.name,
+                r.current_ns,
+                r.baseline_ns,
+                (r.ratio() - 1.0) * 100.0,
+                tol * 100.0
+            );
+        }
+        if rep.checked == 0 {
+            eprintln!(
+                "bench-compare: no run result matched {} — nothing was gated, failing",
+                path.display()
+            );
+            return ExitCode::FAILURE;
+        }
+        if rep.ok() {
+            println!(
+                "bench-compare: OK — {} medians within {:.0}% of {}",
+                rep.checked,
+                tol * 100.0,
+                path.display()
+            );
+            ExitCode::SUCCESS
+        } else {
+            ExitCode::FAILURE
+        }
     }
 }
 
@@ -286,6 +450,88 @@ mod tests {
         assert!(v.get("results").unwrap().as_arr().unwrap().is_empty());
     }
 
+    fn result(name: &str, median_ns: u64) -> BenchResult {
+        BenchResult {
+            name: name.to_string(),
+            iters: 5,
+            min: Duration::from_nanos(median_ns / 2),
+            median: Duration::from_nanos(median_ns),
+            mean: Duration::from_nanos(median_ns),
+            elements: Some(1000),
+        }
+    }
+
+    fn baseline(entries: &[(&str, u64)]) -> String {
+        let rows: Vec<String> = entries
+            .iter()
+            .map(|(n, m)| {
+                format!(
+                    "{{\"name\": \"{n}\", \"iters\": 5, \"elements\": 1000, \"min_ns\": {m}, \
+                     \"median_ns\": {m}, \"mean_ns\": {m}, \"throughput_per_s\": null}}"
+                )
+            })
+            .collect();
+        format!("{{\"schema\": 1, \"target\": \"t\", \"results\": [{}]}}", rows.join(", "))
+    }
+
+    /// The gate contract: ≤ tolerance passes, a synthetic >10% regression
+    /// (perturbed baseline) blocks, and unbaselined ids are not gated.
+    #[test]
+    fn compare_catches_synthetic_regression() {
+        let results = [result("gabe/ba-hubs/b=0.1|E|", 1_100), result("new/bench", 50)];
+        // 1100 vs 1000 = +10.0%, exactly at tolerance: passes
+        let rep = compare_results(&results, &baseline(&[("gabe/ba-hubs/b=0.1|E|", 1_000)]), 0.10)
+            .unwrap();
+        assert!(rep.ok(), "{rep:?}");
+        assert_eq!(rep.checked, 1);
+        assert_eq!(rep.unbaselined, vec!["new/bench".to_string()]);
+        // perturb the baseline down 20% → the same run is now a regression
+        let rep = compare_results(&results, &baseline(&[("gabe/ba-hubs/b=0.1|E|", 900)]), 0.10)
+            .unwrap();
+        assert!(!rep.ok());
+        assert_eq!(rep.regressions.len(), 1);
+        let r = &rep.regressions[0];
+        assert_eq!(r.name, "gabe/ba-hubs/b=0.1|E|");
+        assert!((r.ratio() - 1_100.0 / 900.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn compare_refuses_to_gate_nothing() {
+        // no overlap between run and baseline → ok() must be false even
+        // with zero regressions (a broken --filter must not green-wash)
+        let rep = compare_results(&[result("a", 10)], &baseline(&[("b", 10)]), 0.10).unwrap();
+        assert_eq!(rep.checked, 0);
+        assert!(rep.regressions.is_empty());
+        assert!(!rep.ok());
+        // and an entirely empty run is the same
+        let rep = compare_results(&[], &baseline(&[("b", 10)]), 0.10).unwrap();
+        assert!(!rep.ok());
+    }
+
+    #[test]
+    fn compare_rejects_wrong_schema() {
+        let bad = "{\"schema\": 2, \"target\": \"t\", \"results\": []}";
+        assert!(compare_results(&[result("a", 10)], bad, 0.10).is_err());
+        assert!(compare_results(&[result("a", 10)], "not json", 0.10).is_err());
+    }
+
+    /// The emitter's own output is a valid baseline: a run compared
+    /// against its own JSON has zero regressions at any tolerance ≥ 0.
+    #[test]
+    fn emitted_json_roundtrips_as_baseline() {
+        let mut b = Bencher::new(0, 3);
+        b.bench("self/one", Some(10), || std::hint::black_box(1 + 1));
+        b.bench("self/two", None, || std::hint::black_box(2 + 2));
+        let dir = crate::util::tmp::TempDir::new("benchcmp").unwrap();
+        let path = dir.path().join("BENCH_self.json");
+        b.write_json("self", &path).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        let rep = compare_results(b.results(), &text, 0.0).unwrap();
+        assert!(rep.ok(), "{rep:?}");
+        assert_eq!(rep.checked, 2);
+        assert!(rep.unbaselined.is_empty());
+    }
+
     #[test]
     fn bench_args_parse_and_filter() {
         let a = BenchArgs::from_iter(
@@ -313,5 +559,18 @@ mod tests {
         );
         assert_eq!(d.filter.as_deref(), Some("0.5"));
         assert_eq!(d.rest, vec!["0.08".to_string()]);
+
+        // the gate flags: --compare carries a path, --tolerance a fraction
+        let e = BenchArgs::from_iter(
+            "hot_path",
+            ["--compare", "benches/baselines/hot_path.json", "--tolerance", "0.10"]
+                .map(String::from),
+        );
+        assert_eq!(
+            e.compare.as_deref(),
+            Some(std::path::Path::new("benches/baselines/hot_path.json"))
+        );
+        assert_eq!(e.tolerance, Some(0.10));
+        assert!(c.compare.is_none() && c.tolerance.is_none());
     }
 }
