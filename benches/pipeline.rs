@@ -1,5 +1,14 @@
 //! End-to-end pipeline benchmark (Tables 16/17 analog): coordinator fan-out
-//! over a massive synthetic network, absolute budget, all descriptors.
+//! over a massive synthetic network, absolute budget, all descriptors —
+//! now swept across NUMA placement policies (ISSUE 4).
+//!
+//! Bench ids are `pipeline/{none,compact,scatter}/<net>/<desc>/w=<W>`.
+//! Every net × descriptor × worker-count cell runs unpinned (`none`); the
+//! `compact`/`scatter` arms run on the GABE w=4 cell, where the fan-out
+//! and reservoir locality dominate — comparing the three ids in
+//! `BENCH_pipeline.json` is the measured placement delta (DESIGN.md §7).
+//! On single-node machines all three collapse to the same layout and the
+//! deltas read ≈ 0, which is itself the correct measurement.
 //!
 //! Streams are shuffled once outside the timer and rewound per iteration.
 //! A bare numeric argument sets the graph scale (default 0.02); `--json`
@@ -7,7 +16,9 @@
 
 use std::process::ExitCode;
 
-use stream_descriptors::coordinator::{run_pipeline, CoordinatorConfig, DescriptorKind};
+use stream_descriptors::coordinator::{
+    run_pipeline, CoordinatorConfig, DescriptorKind, PlacementPolicy,
+};
 use stream_descriptors::gen::massive::{massive_graph, MassiveKind};
 use stream_descriptors::graph::stream::{EdgeStream, VecStream};
 use stream_descriptors::util::bench::{BenchArgs, Bencher};
@@ -32,22 +43,32 @@ fn main() -> ExitCode {
             ("santa", DescriptorKind::Santa { exact_wedges: false }),
         ] {
             for workers in [1usize, 4] {
-                let id = format!("pipeline/{}/{dname}/w={workers}", kind.name());
-                if !args.matches(&id) {
-                    continue;
-                }
-                let cfg = CoordinatorConfig {
-                    workers,
-                    budget: (m as usize / 10).clamp(1_000, 100_000),
-                    chunk_size: 8192,
-                    queue_depth: 8,
-                    seed: 7,
+                let placements: &[PlacementPolicy] = if dname == "gabe" && workers == 4 {
+                    &[PlacementPolicy::None, PlacementPolicy::Compact, PlacementPolicy::Scatter]
+                } else {
+                    &[PlacementPolicy::None]
                 };
-                let mut s = VecStream::shuffled(g.edges.clone(), 3);
-                b.bench(id, Some(m), || {
-                    s.reset();
-                    run_pipeline(&mut s, dk, &cfg).expect("pipeline").edges
-                });
+                for &placement in placements {
+                    let id =
+                        format!("pipeline/{placement}/{}/{dname}/w={workers}", kind.name());
+                    if !args.matches(&id) {
+                        continue;
+                    }
+                    let cfg = CoordinatorConfig {
+                        workers,
+                        budget: (m as usize / 10).clamp(1_000, 100_000),
+                        chunk_size: 8192,
+                        queue_depth: 8,
+                        seed: 7,
+                        placement,
+                        topology: None,
+                    };
+                    let mut s = VecStream::shuffled(g.edges.clone(), 3);
+                    b.bench(id, Some(m), || {
+                        s.reset();
+                        run_pipeline(&mut s, dk, &cfg).expect("pipeline").edges
+                    });
+                }
             }
         }
     }

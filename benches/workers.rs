@@ -35,6 +35,7 @@ fn main() -> ExitCode {
             chunk_size: 8192,
             queue_depth: 8,
             seed: 1,
+            ..Default::default()
         };
         let mut s = VecStream::shuffled(g.edges.clone(), 2);
         b.bench(id, Some(m), || {
@@ -55,6 +56,7 @@ fn main() -> ExitCode {
             chunk_size: chunk,
             queue_depth: 8,
             seed: 1,
+            ..Default::default()
         };
         let mut s = VecStream::shuffled(g.edges.clone(), 2);
         b.bench(id, Some(m), || {
@@ -75,6 +77,7 @@ fn main() -> ExitCode {
             chunk_size: 8192,
             queue_depth: depth,
             seed: 1,
+            ..Default::default()
         };
         let mut s = VecStream::shuffled(g.edges.clone(), 2);
         b.bench(id, Some(m), || {

@@ -40,6 +40,7 @@ fn main() {
         chunk_size: 8192,
         queue_depth: 8,
         seed: 7,
+        ..Default::default()
     };
     println!("streaming GABE with {workers} workers, b={budget}…");
     let mut s = VecStream::shuffled(g.edges.clone(), 7);

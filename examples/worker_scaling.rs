@@ -36,6 +36,7 @@ fn main() {
                     chunk_size: 4096,
                     queue_depth: 8,
                     seed: 0x5eed ^ trial << 8 ^ (w as u64) << 32,
+                    ..Default::default()
                 };
                 let mut s = VecStream::shuffled(g.edges.clone(), trial);
                 let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).expect("pipeline");

@@ -1,0 +1,154 @@
+//! Per-NUMA-node chunk fan-out (ISSUE 4 tentpole).
+//!
+//! The master stages edges into one reusable buffer and publishes each
+//! chunk as `Arc<[Edge]>` — but instead of a single global replica shared
+//! by all `W` workers (every socket then reads the master's node over the
+//! interconnect for the whole chunk lifetime), it allocates **one replica
+//! per NUMA node that hosts at least one worker**; workers on a node share
+//! their node's replica.  The copy count per chunk is therefore
+//! `nodes_used`, never `W`: still O(1) per socket, and cross-socket
+//! traffic happens once per chunk per node instead of once per read.
+//!
+//! [`FanoutStats`] counts chunks and replicas so tests can assert the
+//! replica-per-node contract on synthetic topologies without NUMA
+//! hardware.
+
+use std::sync::mpsc::SyncSender;
+use std::sync::Arc;
+
+use crate::graph::Edge;
+
+/// Replica/chunk counters for the whole run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FanoutStats {
+    /// Chunks broadcast (including the final partial chunk).
+    pub chunks: u64,
+    /// `Arc<[Edge]>` replicas allocated across all broadcasts — equals
+    /// `chunks * nodes_used`.
+    pub replicas: u64,
+}
+
+/// Groups each worker's bounded queue under its topology node and
+/// broadcasts staged chunks with one replica per active node.
+pub struct Fanout {
+    /// `(node index, sender)` per worker, in worker order.
+    channels: Vec<(usize, SyncSender<Arc<[Edge]>>)>,
+    /// Per-node replica slot, reused across broadcasts.
+    scratch: Vec<Option<Arc<[Edge]>>>,
+    stats: FanoutStats,
+}
+
+impl Fanout {
+    /// `n_nodes` is the topology's node count (an upper bound on the nodes
+    /// workers can land on).
+    pub fn new(n_nodes: usize) -> Self {
+        Fanout {
+            channels: Vec::new(),
+            scratch: vec![None; n_nodes.max(1)],
+            stats: FanoutStats::default(),
+        }
+    }
+
+    /// Register one worker's queue under its assigned node.
+    pub fn add_worker(&mut self, node: usize, tx: SyncSender<Arc<[Edge]>>) {
+        debug_assert!(node < self.scratch.len(), "node index out of topology range");
+        self.channels.push((node, tx));
+    }
+
+    /// Publish the staged chunk to every worker (one replica per node) and
+    /// clear the staging buffer.  Returns `false` when any send failed —
+    /// that worker's thread has died, so the master should stop streaming
+    /// and let the joins report the panic.
+    pub fn broadcast(&mut self, staging: &mut Vec<Edge>) -> bool {
+        self.stats.chunks += 1;
+        for slot in self.scratch.iter_mut() {
+            *slot = None;
+        }
+        let mut ok = true;
+        for (node, tx) in &self.channels {
+            let replica = match &self.scratch[*node] {
+                Some(r) => r.clone(),
+                None => {
+                    let r: Arc<[Edge]> = Arc::from(staging.as_slice());
+                    self.stats.replicas += 1;
+                    self.scratch[*node] = Some(r.clone());
+                    r
+                }
+            };
+            ok &= tx.send(replica).is_ok();
+        }
+        staging.clear();
+        ok
+    }
+
+    /// Consume the fan-out: drops every sender (closing the queues so
+    /// workers drain and finish) and returns the run's counters.
+    pub fn finish(self) -> FanoutStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    #[test]
+    fn one_replica_per_node_shared_by_its_workers() {
+        // 4 workers on 2 nodes (0,0,1,1): each broadcast must allocate
+        // exactly 2 replicas, and same-node workers must see the *same*
+        // allocation (Arc::ptr_eq), cross-node workers a different one.
+        let mut fan = Fanout::new(2);
+        let mut rxs = Vec::new();
+        for node in [0usize, 0, 1, 1] {
+            let (tx, rx) = sync_channel(4);
+            fan.add_worker(node, tx);
+            rxs.push(rx);
+        }
+        let mut staging = vec![Edge::new(0, 1), Edge::new(1, 2)];
+        assert!(fan.broadcast(&mut staging));
+        assert!(staging.is_empty());
+        let got: Vec<Arc<[Edge]>> = rxs.iter().map(|rx| rx.recv().unwrap()).collect();
+        assert!(Arc::ptr_eq(&got[0], &got[1]));
+        assert!(Arc::ptr_eq(&got[2], &got[3]));
+        assert!(!Arc::ptr_eq(&got[0], &got[2]));
+        assert_eq!(got[0].as_ref(), got[2].as_ref()); // same content
+        assert_eq!(got[0].len(), 2);
+
+        let mut staging = vec![Edge::new(2, 3)];
+        assert!(fan.broadcast(&mut staging));
+        let stats = fan.finish();
+        assert_eq!(stats, FanoutStats { chunks: 2, replicas: 4 });
+        // queues are closed after finish()
+        assert!(rxs[0].recv().is_ok());
+        assert!(rxs[0].recv().is_err());
+    }
+
+    #[test]
+    fn single_node_keeps_one_replica_total() {
+        let mut fan = Fanout::new(1);
+        let mut rxs = Vec::new();
+        for _ in 0..3 {
+            let (tx, rx) = sync_channel(1);
+            fan.add_worker(0, tx);
+            rxs.push(rx);
+        }
+        let mut staging = vec![Edge::new(0, 1)];
+        assert!(fan.broadcast(&mut staging));
+        let a = rxs[0].recv().unwrap();
+        let b = rxs[1].recv().unwrap();
+        let c = rxs[2].recv().unwrap();
+        assert!(Arc::ptr_eq(&a, &b) && Arc::ptr_eq(&b, &c));
+        assert_eq!(fan.finish(), FanoutStats { chunks: 1, replicas: 1 });
+    }
+
+    #[test]
+    fn dead_worker_fails_broadcast() {
+        let mut fan = Fanout::new(1);
+        let (tx, rx) = sync_channel(1);
+        fan.add_worker(0, tx);
+        drop(rx);
+        let mut staging = vec![Edge::new(0, 1)];
+        assert!(!fan.broadcast(&mut staging));
+    }
+}

@@ -8,14 +8,24 @@
 //! reservoir RNG seed, exactly like Tri-Fly's independently-sampling
 //! machines.
 //!
-//! Chunks are published once as `Arc<[Edge]>` and shared by every worker —
-//! the fan-out costs one allocation + copy per chunk instead of `W` deep
-//! clones, and the master's staging buffer is reused across chunks.
+//! **NUMA-aware placement** (ISSUE 4): a [`PlacementPolicy`] on the config
+//! maps workers onto the machine's [`Topology`] ([`placement`]), each
+//! worker thread pins itself with a dep-free `sched_setaffinity` binding
+//! and *then* builds its reservoir/sample-graph state, so first-touch
+//! places every worker's arena on its own node; the fan-out ([`fanout`])
+//! publishes one `Arc<[Edge]>` chunk replica per NUMA node instead of one
+//! global replica (copy count = nodes, not `W`).  Placement never changes
+//! estimator semantics — the differential suite below pins every policy to
+//! the unpinned path bit-for-bit.
 //!
 //! Workers are OS threads (CPU-bound inner loop); the async binary drives
 //! the pipeline through `tokio::task::spawn_blocking`.  Configuration
-//! errors and worker panics surface as [`crate::Result`] errors instead of
-//! aborting the process.
+//! errors, worker panics and stream I/O failures (truncated reads, failed
+//! SANTA pass-2 resets — see `EdgeStream::take_error`) surface as
+//! [`crate::Result`] errors instead of aborting or returning garbage.
+
+pub mod fanout;
+pub mod placement;
 
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
@@ -26,6 +36,10 @@ use crate::descriptors::maeve::{MaeveEstimate, MaeveState};
 use crate::descriptors::santa::{SantaConfig, SantaEstimate, SantaPass2};
 use crate::graph::stream::EdgeStream;
 use crate::graph::Edge;
+use crate::util::topology::Topology;
+
+use fanout::{Fanout, FanoutStats};
+pub use placement::PlacementPolicy;
 
 /// Which estimator the workers run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -47,6 +61,12 @@ pub struct CoordinatorConfig {
     /// Bounded queue depth per worker — the backpressure knob.
     pub queue_depth: usize,
     pub seed: u64,
+    /// NUMA placement policy (default [`PlacementPolicy::None`]: unpinned
+    /// workers, single-replica fan-out — the pre-ISSUE-4 behavior).
+    pub placement: PlacementPolicy,
+    /// Machine layout override for tests/CI; `None` discovers the real
+    /// layout at run time (`Topology::discover`).
+    pub topology: Option<Topology>,
 }
 
 impl Default for CoordinatorConfig {
@@ -57,6 +77,8 @@ impl Default for CoordinatorConfig {
             chunk_size: 4096,
             queue_depth: 8,
             seed: 0xc00d,
+            placement: PlacementPolicy::None,
+            topology: None,
         }
     }
 }
@@ -72,6 +94,13 @@ impl CoordinatorConfig {
         crate::ensure!(self.budget >= 1, "per-worker budget must be ≥ 1 (got 0)");
         crate::ensure!(self.chunk_size >= 1, "chunk_size must be ≥ 1 (got 0)");
         crate::ensure!(self.queue_depth >= 1, "queue_depth must be ≥ 1 (got 0)");
+        if let Some(t) = &self.topology {
+            crate::ensure!(!t.nodes.is_empty(), "injected topology has no nodes");
+            crate::ensure!(
+                t.nodes.iter().all(|n| !n.cpus.is_empty()),
+                "injected topology has a node with no CPUs"
+            );
+        }
         Ok(())
     }
 }
@@ -91,6 +120,29 @@ enum WorkerState {
 }
 
 impl WorkerState {
+    /// Built *inside* the worker thread, after pinning: the reservoir and
+    /// sample-graph arenas are first-touched on the worker's own node.
+    fn new(
+        kind: DescriptorKind,
+        budget: usize,
+        seed: u64,
+        degrees: &Option<Arc<Vec<u32>>>,
+    ) -> Self {
+        match kind {
+            DescriptorKind::Gabe => WorkerState::Gabe(GabeState::new(budget, seed)),
+            DescriptorKind::Maeve => WorkerState::Maeve(MaeveState::new(budget, seed)),
+            DescriptorKind::Santa { exact_wedges } => {
+                let scfg = SantaConfig::new(budget)
+                    .with_seed(seed)
+                    .with_exact_wedges(exact_wedges);
+                WorkerState::Santa(SantaPass2::new(
+                    scfg,
+                    degrees.clone().expect("santa needs pass-1 degrees"),
+                ))
+            }
+        }
+    }
+
     fn push(&mut self, e: Edge) {
         match self {
             WorkerState::Gabe(s) => s.push(e),
@@ -108,6 +160,27 @@ impl WorkerState {
     }
 }
 
+/// How the run was actually placed — the observable side of the placement
+/// policy (estimates themselves are placement-invariant by contract).
+#[derive(Debug, Clone, Copy)]
+pub struct PlacementReport {
+    pub policy: PlacementPolicy,
+    /// Nodes in the topology the plan ran against.
+    pub nodes: usize,
+    /// Distinct nodes that received ≥ 1 worker (= chunk replicas per
+    /// broadcast).
+    pub nodes_used: usize,
+    /// Workers whose `sched_setaffinity` call succeeded (0 off Linux, or
+    /// when the policy is `None`, or when a synthetic topology names CPUs
+    /// the machine does not have).
+    pub pinned_workers: usize,
+    /// Chunks broadcast over the run.
+    pub chunks: u64,
+    /// `Arc<[Edge]>` replicas allocated over the run; the per-node fan-out
+    /// contract is `chunk_replicas == chunks * nodes_used`.
+    pub chunk_replicas: u64,
+}
+
 /// Aggregated pipeline output.
 #[derive(Debug)]
 pub struct PipelineResult {
@@ -117,6 +190,8 @@ pub struct PipelineResult {
     pub per_worker: Vec<WorkerEstimate>,
     pub edges: u64,
     pub elapsed: Duration,
+    /// The placement the run actually achieved.
+    pub placement: PlacementReport,
 }
 
 impl PipelineResult {
@@ -192,7 +267,9 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 ///
 /// SANTA runs the master's exact degree pass first (pass 1), then fans out
 /// pass 2; GABE/MAEVE are single-pass.  Returns an error on invalid
-/// configuration or if any worker thread panics.
+/// configuration, if any worker thread panics, or if the stream reports an
+/// I/O failure (mid-stream truncation, failed pass-2 reset) — a truncated
+/// stream must never be silently averaged into an estimate.
 pub fn run_pipeline(
     stream: &mut impl EdgeStream,
     kind: DescriptorKind,
@@ -212,91 +289,113 @@ pub fn run_pipeline(
                 deg[e.u as usize] += 1;
                 deg[e.v as usize] += 1;
             }
+            if let Some(e) = stream.take_error() {
+                return Err(e.context("santa pass 1 truncated by stream error"));
+            }
             stream.reset();
+            if let Some(e) = stream.take_error() {
+                return Err(e.context("santa pass-2 reset failed"));
+            }
             Some(Arc::new(deg))
         }
         _ => None,
     };
 
+    // worker → node/CPU plan (discovery is skipped entirely for the
+    // default unpinned policy with no injected topology)
+    let topo = match (&cfg.topology, cfg.placement) {
+        (Some(t), _) => t.clone(),
+        (None, PlacementPolicy::None) => Topology::synthetic(1, 1),
+        (None, _) => Topology::discover(),
+    };
+    let slots = placement::plan(cfg.placement, &topo, cfg.workers);
+    let nodes_used = placement::nodes_used(&slots);
+
     let mut edges = 0u64;
-    let per_worker = std::thread::scope(|scope| {
-        let mut senders: Vec<SyncSender<Arc<[Edge]>>> = Vec::with_capacity(cfg.workers);
-        let mut handles = Vec::with_capacity(cfg.workers);
-        for wid in 0..cfg.workers {
-            let (tx, rx): (SyncSender<Arc<[Edge]>>, Receiver<Arc<[Edge]>>) =
-                sync_channel(cfg.queue_depth);
-            senders.push(tx);
-            let seed = cfg.seed ^ (wid as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
-            let mut state = match kind {
-                DescriptorKind::Gabe => WorkerState::Gabe(GabeState::new(cfg.budget, seed)),
-                DescriptorKind::Maeve => {
-                    WorkerState::Maeve(MaeveState::new(cfg.budget, seed))
+    let (per_worker, pinned_workers, fan_stats) = std::thread::scope(
+        |scope| -> crate::Result<(Vec<WorkerEstimate>, usize, FanoutStats)> {
+            let mut fan = Fanout::new(topo.nodes.len());
+            let mut handles = Vec::with_capacity(cfg.workers);
+            for (wid, slot) in slots.iter().enumerate() {
+                let (tx, rx): (SyncSender<Arc<[Edge]>>, Receiver<Arc<[Edge]>>) =
+                    sync_channel(cfg.queue_depth);
+                fan.add_worker(slot.node, tx);
+                let seed = cfg.seed ^ (wid as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
+                let budget = cfg.budget;
+                let degrees = degrees.clone();
+                let cpu = slot.cpu;
+                handles.push(scope.spawn(move || {
+                    // pin first, allocate second: first-touch places the
+                    // reservoir + arena pages on this worker's node
+                    let pinned = cpu.is_some_and(placement::pin_current_thread);
+                    let mut state = WorkerState::new(kind, budget, seed, &degrees);
+                    while let Ok(chunk) = rx.recv() {
+                        for &e in chunk.iter() {
+                            state.push(e);
+                        }
+                    }
+                    (pinned, state.finish())
+                }));
+            }
+
+            // master: stage into a reusable buffer, publish each chunk once
+            // per active node (send fails only after a worker died — stop
+            // streaming and let the joins below report the panic)
+            let mut staging: Vec<Edge> = Vec::with_capacity(cfg.chunk_size);
+            while let Some(e) = stream.next_edge() {
+                edges += 1;
+                staging.push(e);
+                if staging.len() >= cfg.chunk_size && !fan.broadcast(&mut staging) {
+                    break;
                 }
-                DescriptorKind::Santa { exact_wedges } => {
-                    let scfg = SantaConfig::new(cfg.budget)
-                        .with_seed(seed)
-                        .with_exact_wedges(exact_wedges);
-                    WorkerState::Santa(SantaPass2::new(
-                        scfg,
-                        degrees.clone().expect("santa needs pass-1 degrees"),
-                    ))
-                }
-            };
-            handles.push(scope.spawn(move || {
-                while let Ok(chunk) = rx.recv() {
-                    for &e in chunk.iter() {
-                        state.push(e);
+            }
+            if !staging.is_empty() {
+                fan.broadcast(&mut staging);
+            }
+            let stats = fan.finish(); // drops senders: queues close, workers drain
+
+            // join every worker before leaving the scope (a scope exit with
+            // an unjoined panicked thread would re-panic on the master)
+            let mut out = Vec::with_capacity(handles.len());
+            let mut pinned_count = 0usize;
+            let mut first_panic: Option<String> = None;
+            for h in handles {
+                match h.join() {
+                    Ok((pinned, est)) => {
+                        pinned_count += pinned as usize;
+                        out.push(est);
+                    }
+                    Err(p) => {
+                        first_panic.get_or_insert_with(|| panic_message(p));
                     }
                 }
-                state.finish()
-            }));
-        }
-
-        // master: stage into a reusable buffer, publish each chunk once as
-        // a shared Arc slice (send fails only after a worker died — stop
-        // streaming and let the joins below report the panic)
-        let mut staging: Vec<Edge> = Vec::with_capacity(cfg.chunk_size);
-        let broadcast =
-            |staging: &mut Vec<Edge>, senders: &[SyncSender<Arc<[Edge]>>]| -> bool {
-                let chunk: Arc<[Edge]> = Arc::from(staging.as_slice());
-                staging.clear();
-                senders.iter().all(|tx| tx.send(chunk.clone()).is_ok())
-            };
-        while let Some(e) = stream.next_edge() {
-            edges += 1;
-            staging.push(e);
-            if staging.len() >= cfg.chunk_size && !broadcast(&mut staging, &senders) {
-                break;
             }
-        }
-        if !staging.is_empty() {
-            broadcast(&mut staging, &senders);
-        }
-        drop(senders); // close queues -> workers finish
-
-        // join every worker before leaving the scope (a scope exit with an
-        // unjoined panicked thread would re-panic on the master)
-        let mut out = Vec::with_capacity(handles.len());
-        let mut first_panic: Option<String> = None;
-        for h in handles {
-            match h.join() {
-                Ok(est) => out.push(est),
-                Err(p) => {
-                    first_panic.get_or_insert_with(|| panic_message(p));
-                }
+            match first_panic {
+                None => Ok((out, pinned_count, stats)),
+                Some(msg) => Err(crate::anyhow!("worker thread panicked: {msg}")),
             }
-        }
-        match first_panic {
-            None => Ok(out),
-            Some(msg) => Err(crate::anyhow!("worker thread panicked: {msg}")),
-        }
-    })?;
+        },
+    )?;
+
+    // a stream error makes next_edge report end-of-stream; distinguish
+    // truncation from completion before averaging anything
+    if let Some(e) = stream.take_error() {
+        return Err(e.context("edge stream failed mid-pipeline"));
+    }
 
     Ok(PipelineResult {
         averaged: average(&per_worker),
         per_worker,
         edges,
         elapsed: start.elapsed(),
+        placement: PlacementReport {
+            policy: cfg.placement,
+            nodes: topo.nodes.len(),
+            nodes_used,
+            pinned_workers,
+            chunks: fan_stats.chunks,
+            chunk_replicas: fan_stats.replicas,
+        },
     })
 }
 
@@ -306,7 +405,7 @@ mod tests {
     use crate::count::brute::subgraph_census;
     use crate::count::idx;
     use crate::gen;
-    use crate::graph::stream::VecStream;
+    use crate::graph::stream::{write_edge_list, FileStream, VecStream};
     use crate::util::rng::Pcg64;
 
     fn triangle_of(est: &WorkerEstimate) -> f64 {
@@ -325,6 +424,7 @@ mod tests {
             chunk_size: 7,
             queue_depth: 2,
             seed: 5,
+            ..Default::default()
         };
         let mut s = VecStream::shuffled(g.edges.clone(), 1);
         let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).unwrap();
@@ -349,6 +449,7 @@ mod tests {
                     chunk_size: 64,
                     queue_depth: 4,
                     seed: trial * 31 + 1,
+                    ..Default::default()
                 };
                 let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).unwrap();
                 vals.push(triangle_of(&r.averaged));
@@ -371,6 +472,7 @@ mod tests {
             chunk_size: 13,
             queue_depth: 2,
             seed: 9,
+            ..Default::default()
         };
         let r = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg)
             .unwrap();
@@ -394,6 +496,7 @@ mod tests {
             chunk_size: 8,
             queue_depth: 2,
             seed: 10,
+            ..Default::default()
         };
         let r = run_pipeline(&mut s, DescriptorKind::Maeve, &cfg).unwrap();
         let WorkerEstimate::Maeve(avg) = &r.averaged else { panic!() };
@@ -414,6 +517,7 @@ mod tests {
             chunk_size: 1,
             queue_depth: 1,
             seed: 11,
+            ..Default::default()
         };
         let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).unwrap();
         assert_eq!(r.edges as usize, g.m());
@@ -422,11 +526,16 @@ mod tests {
     #[test]
     fn invalid_configs_error_instead_of_panicking() {
         let g = gen::er_graph(20, 40, &mut Pcg64::seed_from_u64(66));
+        let base = CoordinatorConfig::default;
         for cfg in [
-            CoordinatorConfig { workers: 0, ..Default::default() },
-            CoordinatorConfig { budget: 0, ..Default::default() },
-            CoordinatorConfig { chunk_size: 0, ..Default::default() },
-            CoordinatorConfig { queue_depth: 0, ..Default::default() },
+            CoordinatorConfig { workers: 0, ..base() },
+            CoordinatorConfig { budget: 0, ..base() },
+            CoordinatorConfig { chunk_size: 0, ..base() },
+            CoordinatorConfig { queue_depth: 0, ..base() },
+            CoordinatorConfig {
+                topology: Some(crate::util::topology::Topology { nodes: vec![] }),
+                ..base()
+            },
         ] {
             let mut s = VecStream::new(g.edges.clone());
             let err = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg)
@@ -440,5 +549,190 @@ mod tests {
         let cfg = CoordinatorConfig { workers: 0, ..Default::default() };
         let err = cfg.validate().unwrap_err();
         assert!(err.to_string().contains("worker"), "{err}");
+    }
+
+    // ---- ISSUE 4: placement differential + fan-out contract ----
+
+    fn estimates_bit_identical(a: &WorkerEstimate, b: &WorkerEstimate) -> bool {
+        match (a, b) {
+            (WorkerEstimate::Gabe(x), WorkerEstimate::Gabe(y)) => {
+                x.counts == y.counts && x.nv == y.nv && x.ne == y.ne
+            }
+            (WorkerEstimate::Maeve(x), WorkerEstimate::Maeve(y)) => {
+                x.triangles == y.triangles && x.paths == y.paths && x.nv == y.nv
+            }
+            (WorkerEstimate::Santa(x), WorkerEstimate::Santa(y)) => {
+                x.traces == y.traces && x.nv == y.nv
+            }
+            _ => false,
+        }
+    }
+
+    /// Placement may never change estimator semantics: every policy over
+    /// synthetic 1/2/4-node layouts must reproduce the unpinned path
+    /// bit-for-bit (same seeds → same reservoirs → same estimates), for a
+    /// budgeted run where the reservoir genuinely randomizes.
+    #[test]
+    fn placement_differential_bit_identical_estimates() {
+        use crate::util::topology::Topology;
+        let g = gen::powerlaw_cluster_graph(300, 3, 0.5, &mut Pcg64::seed_from_u64(71));
+        for kind in [DescriptorKind::Gabe, DescriptorKind::Santa { exact_wedges: false }] {
+            let base_cfg = CoordinatorConfig {
+                workers: 5,
+                budget: g.m() / 3,
+                chunk_size: 37,
+                queue_depth: 2,
+                seed: 17,
+                ..Default::default()
+            };
+            let mut s = VecStream::shuffled(g.edges.clone(), 6);
+            let baseline = run_pipeline(&mut s, kind, &base_cfg).unwrap();
+            let policies =
+                [PlacementPolicy::None, PlacementPolicy::Compact, PlacementPolicy::Scatter];
+            for policy in policies {
+                for nodes in [1usize, 2, 4] {
+                    let cfg = CoordinatorConfig {
+                        placement: policy,
+                        topology: Some(Topology::synthetic(nodes, 2)),
+                        ..base_cfg.clone()
+                    };
+                    let mut s = VecStream::shuffled(g.edges.clone(), 6);
+                    let r = run_pipeline(&mut s, kind, &cfg).unwrap();
+                    assert!(
+                        estimates_bit_identical(&r.averaged, &baseline.averaged),
+                        "{kind:?} {policy} over {nodes} nodes diverged from unpinned"
+                    );
+                    for (pw, bw) in r.per_worker.iter().zip(&baseline.per_worker) {
+                        assert!(estimates_bit_identical(pw, bw));
+                    }
+                }
+            }
+        }
+    }
+
+    /// The per-node fan-out contract: one chunk replica per node that
+    /// hosts a worker, asserted via the replica-count probe on a synthetic
+    /// 2-node topology (no NUMA hardware needed).
+    #[test]
+    fn fanout_allocates_one_replica_per_node() {
+        use crate::util::topology::Topology;
+        let g = gen::ba_graph(500, 2, &mut Pcg64::seed_from_u64(72));
+        let run = |placement, topology| {
+            let cfg = CoordinatorConfig {
+                workers: 4,
+                budget: 200,
+                chunk_size: 64,
+                queue_depth: 4,
+                seed: 3,
+                placement,
+                topology,
+            };
+            let mut s = VecStream::shuffled(g.edges.clone(), 1);
+            run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).unwrap().placement
+        };
+
+        let two = Some(Topology::synthetic(2, 2));
+        let rep = run(PlacementPolicy::Scatter, two.clone());
+        assert_eq!(rep.nodes, 2);
+        assert_eq!(rep.nodes_used, 2);
+        assert!(rep.chunks > 0);
+        assert_eq!(rep.chunk_replicas, rep.chunks * 2, "{rep:?}");
+
+        // compact with 4 workers on 2×2 CPUs also spans both nodes
+        let rep = run(PlacementPolicy::Compact, two.clone());
+        assert_eq!(rep.nodes_used, 2);
+        assert_eq!(rep.chunk_replicas, rep.chunks * 2);
+
+        // compact with room on node 0 stays single-replica
+        let rep = run(PlacementPolicy::Compact, Some(Topology::synthetic(2, 8)));
+        assert_eq!(rep.nodes_used, 1);
+        assert_eq!(rep.chunk_replicas, rep.chunks);
+
+        // the unpinned policy keeps the old single-replica fan-out
+        let rep = run(PlacementPolicy::None, two);
+        assert_eq!(rep.nodes_used, 1);
+        assert_eq!(rep.chunk_replicas, rep.chunks);
+        assert_eq!(rep.pinned_workers, 0);
+    }
+
+    /// Real-machine smoke: pinning on the discovered topology must succeed
+    /// for at least one worker on Linux (CPU 0 of the runner's cpuset) and
+    /// must never alter the estimate.
+    #[test]
+    fn scatter_on_discovered_topology_matches_unpinned() {
+        let g = gen::er_graph(150, 400, &mut Pcg64::seed_from_u64(73));
+        let mk = |placement| CoordinatorConfig {
+            workers: 3,
+            budget: g.m() / 2,
+            chunk_size: 32,
+            queue_depth: 2,
+            seed: 21,
+            placement,
+            topology: None,
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 9);
+        let a = run_pipeline(&mut s, DescriptorKind::Gabe, &mk(PlacementPolicy::None)).unwrap();
+        let mut s = VecStream::shuffled(g.edges.clone(), 9);
+        let b =
+            run_pipeline(&mut s, DescriptorKind::Gabe, &mk(PlacementPolicy::Scatter)).unwrap();
+        assert!(estimates_bit_identical(&a.averaged, &b.averaged));
+        // worker 0 pins to the first CPU of node 0 — usually CPU 0; only
+        // assert success when the process's cpuset actually allows it
+        // (restricted containers discover CPUs they may not run on)
+        let allowed = placement::allowed_cpus().unwrap_or_default();
+        if allowed.contains(&0) {
+            assert!(b.placement.pinned_workers >= 1, "{:?}", b.placement);
+        }
+    }
+
+    // ---- ISSUE 4 satellite: stream failures surface as errors ----
+
+    /// A SANTA run whose file vanishes after pass 1 must error on the
+    /// failed reset instead of averaging garbage from an empty pass 2.
+    #[test]
+    fn santa_over_deleted_file_errors_instead_of_garbage() {
+        let g = gen::er_graph(50, 120, &mut Pcg64::seed_from_u64(74));
+        let dir = crate::util::tmp::TempDir::new("coord-del").unwrap();
+        let path = dir.path().join("g.txt");
+        write_edge_list(&path, &g.edges).unwrap();
+        let mut s = FileStream::open(&path).unwrap();
+        // the unlinked file stays readable through the open fd, so pass 1
+        // completes; the reopen on reset is what fails
+        std::fs::remove_file(&path).unwrap();
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            budget: g.m(),
+            chunk_size: 16,
+            queue_depth: 2,
+            seed: 1,
+            ..Default::default()
+        };
+        let err = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg)
+            .expect_err("vanished file must fail the reset, not return nonsense");
+        assert!(err.to_string().contains("reset"), "{err}");
+    }
+
+    /// A single-pass run over a stream that dies mid-file must error, not
+    /// silently estimate from the prefix.
+    #[test]
+    fn midstream_io_error_fails_pipeline() {
+        use crate::graph::stream::ReaderStream;
+        let mut text = String::new();
+        for i in 0..50u32 {
+            text.push_str(&format!("{} {}\n", i, i + 1));
+        }
+        let reader = crate::graph::stream::FailAfter::new(text.into_bytes(), 100);
+        let mut s = ReaderStream::new(std::io::BufReader::new(reader));
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            budget: 100,
+            chunk_size: 4,
+            queue_depth: 2,
+            seed: 2,
+            ..Default::default()
+        };
+        let err = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg)
+            .expect_err("mid-stream IO error must fail the pipeline");
+        assert!(err.to_string().contains("mid-pipeline"), "{err}");
     }
 }

@@ -1,0 +1,282 @@
+//! Worker → CPU placement (ISSUE 4 tentpole).
+//!
+//! A [`PlacementPolicy`] maps the coordinator's `W` workers onto the
+//! machine's [`Topology`]; [`pin_current_thread`] then binds each worker
+//! thread to its assigned CPU with a dependency-free `sched_setaffinity`
+//! binding (Linux only; a no-op returning `false` elsewhere — the CI
+//! feature matrix compiles both arms).  Placement may change *where*
+//! memory and cycles land, never *what* the estimators compute: the
+//! differential suite in `coordinator::tests` pins every policy to the
+//! unpinned path bit-for-bit.
+//!
+//! Pinning is best-effort: a CPU that is offline, excluded by the
+//! process's cgroup cpuset, or simply fabricated by a synthetic test
+//! topology makes `sched_setaffinity` fail, and the worker keeps running
+//! unpinned.  [`crate::coordinator::PlacementReport::pinned_workers`]
+//! records how many workers actually landed on their CPU.
+
+use crate::util::topology::Topology;
+
+/// How workers are placed onto NUMA nodes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PlacementPolicy {
+    /// No pinning: workers are unpinned OS threads and the fan-out keeps a
+    /// single shared chunk replica (the pre-ISSUE-4 behavior).
+    #[default]
+    None,
+    /// Fill each node's CPU list before spilling to the next node —
+    /// minimizes the number of sockets touched (and chunk replicas) at low
+    /// worker counts.
+    Compact,
+    /// Round-robin workers across nodes — maximizes aggregate memory
+    /// bandwidth by spreading reservoirs over every socket.
+    Scatter,
+}
+
+impl std::fmt::Display for PlacementPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            PlacementPolicy::None => "none",
+            PlacementPolicy::Compact => "compact",
+            PlacementPolicy::Scatter => "scatter",
+        })
+    }
+}
+
+impl std::str::FromStr for PlacementPolicy {
+    type Err = String;
+
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s.to_ascii_lowercase().as_str() {
+            "none" => Ok(PlacementPolicy::None),
+            "compact" => Ok(PlacementPolicy::Compact),
+            "scatter" => Ok(PlacementPolicy::Scatter),
+            other => Err(format!("unknown placement policy '{other}' (none|compact|scatter)")),
+        }
+    }
+}
+
+/// One worker's assignment: the topology node it belongs to (index into
+/// `Topology::nodes`, used by the per-node fan-out) and the CPU to pin to
+/// (`None` = leave unpinned).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct WorkerSlot {
+    pub node: usize,
+    pub cpu: Option<usize>,
+}
+
+/// Assign `workers` workers to nodes/CPUs under `policy`.  When workers
+/// outnumber CPUs the assignment wraps around (CPUs are shared).
+pub fn plan(policy: PlacementPolicy, topo: &Topology, workers: usize) -> Vec<WorkerSlot> {
+    match policy {
+        PlacementPolicy::None => vec![WorkerSlot { node: 0, cpu: None }; workers],
+        PlacementPolicy::Compact => {
+            let flat: Vec<WorkerSlot> = topo
+                .nodes
+                .iter()
+                .enumerate()
+                .flat_map(|(ni, n)| {
+                    n.cpus.iter().map(move |&c| WorkerSlot { node: ni, cpu: Some(c) })
+                })
+                .collect();
+            if flat.is_empty() {
+                return plan(PlacementPolicy::None, topo, workers);
+            }
+            (0..workers).map(|w| flat[w % flat.len()]).collect()
+        }
+        PlacementPolicy::Scatter => {
+            // CPU-less nodes (possible on a hand-built Topology; sysfs
+            // discovery drops them) take no workers, same as Compact
+            let active: Vec<(usize, &[usize])> = topo
+                .nodes
+                .iter()
+                .enumerate()
+                .filter(|(_, n)| !n.cpus.is_empty())
+                .map(|(ni, n)| (ni, n.cpus.as_slice()))
+                .collect();
+            if active.is_empty() {
+                return plan(PlacementPolicy::None, topo, workers);
+            }
+            let mut cursors = vec![0usize; active.len()];
+            (0..workers)
+                .map(|w| {
+                    let ai = w % active.len();
+                    let (ni, cpus) = active[ai];
+                    let cpu = cpus[cursors[ai] % cpus.len()];
+                    cursors[ai] += 1;
+                    WorkerSlot { node: ni, cpu: Some(cpu) }
+                })
+                .collect()
+        }
+    }
+}
+
+/// Number of distinct nodes that received at least one worker — the
+/// fan-out allocates exactly this many chunk replicas per broadcast.
+pub fn nodes_used(slots: &[WorkerSlot]) -> usize {
+    let mut seen = std::collections::BTreeSet::new();
+    slots.iter().for_each(|s| {
+        seen.insert(s.node);
+    });
+    seen.len()
+}
+
+#[cfg(target_os = "linux")]
+mod sys {
+    // Dependency-free libc bindings (the offline registry has no `libc`
+    // crate; libc itself is always linked on Linux).  glibc's cpu_set_t is
+    // a fixed 1024-bit mask; the kernel accepts any size ≥ its own mask
+    // width, so passing the full 128 bytes is always valid.
+    const SET_BITS: usize = 1024;
+    const WORD_BITS: usize = usize::BITS as usize;
+    const WORDS: usize = SET_BITS / WORD_BITS;
+
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const usize) -> i32;
+        fn sched_getaffinity(pid: i32, cpusetsize: usize, mask: *mut usize) -> i32;
+    }
+
+    pub fn pin_current_thread(cpu: usize) -> bool {
+        if cpu >= SET_BITS {
+            return false;
+        }
+        let mut mask = [0usize; WORDS];
+        mask[cpu / WORD_BITS] |= 1usize << (cpu % WORD_BITS);
+        // pid 0 = the calling thread
+        unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
+    }
+
+    pub fn allowed_cpus() -> Option<Vec<usize>> {
+        let mut mask = [0usize; WORDS];
+        let rc = unsafe { sched_getaffinity(0, std::mem::size_of_val(&mask), mask.as_mut_ptr()) };
+        if rc != 0 {
+            return None;
+        }
+        let mut cpus = Vec::new();
+        for (w, &word) in mask.iter().enumerate() {
+            for b in 0..WORD_BITS {
+                if word & (1usize << b) != 0 {
+                    cpus.push(w * WORD_BITS + b);
+                }
+            }
+        }
+        Some(cpus)
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+mod sys {
+    pub fn pin_current_thread(_cpu: usize) -> bool {
+        false
+    }
+
+    pub fn allowed_cpus() -> Option<Vec<usize>> {
+        None
+    }
+}
+
+/// Pin the calling thread to one CPU.  Returns whether the kernel accepted
+/// the affinity mask; always `false` off Linux (no-op).
+pub fn pin_current_thread(cpu: usize) -> bool {
+    sys::pin_current_thread(cpu)
+}
+
+/// The CPUs the calling thread may run on (`None` off Linux or on error).
+/// Lets tests pick a pin target that the runner's cpuset actually allows.
+pub fn allowed_cpus() -> Option<Vec<usize>> {
+    sys::allowed_cpus()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn none_policy_is_unpinned_single_node() {
+        let topo = Topology::synthetic(4, 4);
+        let slots = plan(PlacementPolicy::None, &topo, 6);
+        assert_eq!(slots.len(), 6);
+        assert!(slots.iter().all(|s| s.node == 0 && s.cpu.is_none()));
+        assert_eq!(nodes_used(&slots), 1);
+    }
+
+    #[test]
+    fn compact_fills_nodes_in_order() {
+        let topo = Topology::synthetic(2, 4);
+        let slots = plan(PlacementPolicy::Compact, &topo, 6);
+        let nodes: Vec<usize> = slots.iter().map(|s| s.node).collect();
+        let cpus: Vec<usize> = slots.iter().map(|s| s.cpu.unwrap()).collect();
+        assert_eq!(nodes, vec![0, 0, 0, 0, 1, 1]);
+        assert_eq!(cpus, vec![0, 1, 2, 3, 4, 5]);
+        // 3 workers stay on one socket under compact
+        assert_eq!(nodes_used(&plan(PlacementPolicy::Compact, &topo, 3)), 1);
+        // wrap past the CPU count shares CPUs instead of failing
+        let wrapped = plan(PlacementPolicy::Compact, &topo, 10);
+        assert_eq!(wrapped[8], slots[0]);
+    }
+
+    #[test]
+    fn scatter_round_robins_nodes() {
+        let topo = Topology::synthetic(2, 4);
+        let slots = plan(PlacementPolicy::Scatter, &topo, 6);
+        let nodes: Vec<usize> = slots.iter().map(|s| s.node).collect();
+        let cpus: Vec<usize> = slots.iter().map(|s| s.cpu.unwrap()).collect();
+        assert_eq!(nodes, vec![0, 1, 0, 1, 0, 1]);
+        assert_eq!(cpus, vec![0, 4, 1, 5, 2, 6]);
+        // even 2 workers already span both sockets under scatter
+        assert_eq!(nodes_used(&plan(PlacementPolicy::Scatter, &topo, 2)), 2);
+        // 4-node layout: one worker per node before any repeats
+        let quad = plan(PlacementPolicy::Scatter, &Topology::synthetic(4, 2), 4);
+        assert_eq!(nodes_used(&quad), 4);
+    }
+
+    #[test]
+    fn cpu_less_nodes_take_no_workers() {
+        use crate::util::topology::NumaNode;
+        // hand-built topology with a memory-only node in the middle
+        let topo = Topology {
+            nodes: vec![
+                NumaNode { id: 0, cpus: vec![0, 1] },
+                NumaNode { id: 1, cpus: vec![] },
+                NumaNode { id: 2, cpus: vec![4, 5] },
+            ],
+        };
+        for policy in [PlacementPolicy::Compact, PlacementPolicy::Scatter] {
+            let slots = plan(policy, &topo, 4);
+            assert_eq!(slots.len(), 4);
+            assert!(slots.iter().all(|s| s.node != 1), "{policy}: {slots:?}");
+        }
+        // all nodes empty → graceful fallback to the unpinned plan
+        let empty = Topology { nodes: vec![NumaNode { id: 0, cpus: vec![] }] };
+        let slots = plan(PlacementPolicy::Scatter, &empty, 2);
+        assert!(slots.iter().all(|s| s.cpu.is_none()));
+    }
+
+    #[test]
+    fn policy_round_trips_strings() {
+        for p in [PlacementPolicy::None, PlacementPolicy::Compact, PlacementPolicy::Scatter] {
+            assert_eq!(p.to_string().parse::<PlacementPolicy>().unwrap(), p);
+        }
+        assert!("numa".parse::<PlacementPolicy>().is_err());
+        assert_eq!("COMPACT".parse::<PlacementPolicy>().unwrap(), PlacementPolicy::Compact);
+    }
+
+    #[test]
+    fn pinning_an_allowed_cpu_succeeds_on_linux() {
+        match allowed_cpus() {
+            Some(cpus) if !cpus.is_empty() => {
+                // pin to a CPU the runner's cpuset allows, then restore a
+                // wide mask by re-pinning each allowed CPU is unnecessary:
+                // this thread is a test thread that ends right after.
+                assert!(pin_current_thread(cpus[0]));
+            }
+            _ => {
+                // non-Linux (or opaque cgroup): the binding must be a
+                // graceful no-op, never a crash
+                let _ = pin_current_thread(0);
+            }
+        }
+        // out-of-range CPU ids are rejected without a syscall
+        assert!(!pin_current_thread(1 << 20));
+    }
+}

@@ -71,12 +71,28 @@ impl GabeEstimator {
 
     /// Consume a stream and produce count estimates (single pass, ≤ `b`
     /// stored edges, `O(b log b)` per edge — constraints C1–C3).
+    ///
+    /// # Panics
+    ///
+    /// Panics when the stream records an I/O failure (`EdgeStream::
+    /// take_error`) — estimates over a silently truncated prefix must
+    /// never be returned as if complete.  Use [`GabeEstimator::try_run`]
+    /// to handle stream failures as errors.
     pub fn run(&self, stream: &mut impl EdgeStream) -> GabeEstimate {
+        self.try_run(stream).expect("gabe: edge stream failed")
+    }
+
+    /// Like [`GabeEstimator::run`], surfacing stream I/O failures as
+    /// errors instead of panicking.
+    pub fn try_run(&self, stream: &mut impl EdgeStream) -> crate::Result<GabeEstimate> {
         let mut state = GabeState::new(self.budget, self.seed);
         while let Some(e) = stream.next_edge() {
             state.push(e);
         }
-        state.finish()
+        if let Some(e) = stream.take_error() {
+            return Err(e.context("gabe stream truncated"));
+        }
+        Ok(state.finish())
     }
 }
 
@@ -188,6 +204,23 @@ mod tests {
     use crate::count::idx;
     use crate::gen;
     use crate::graph::stream::VecStream;
+
+    /// ISSUE 4: the direct estimator path surfaces mid-stream I/O errors
+    /// instead of estimating from a silently truncated prefix.
+    #[test]
+    fn try_run_fails_on_midstream_error() {
+        use crate::graph::stream::{FailAfter, ReaderStream};
+        let mut text = String::new();
+        for i in 0..40u32 {
+            text.push_str(&format!("{} {}\n", i, i + 1));
+        }
+        let mut s =
+            ReaderStream::new(std::io::BufReader::new(FailAfter::new(text.into_bytes(), 80)));
+        let err = GabeEstimator::new(100)
+            .try_run(&mut s)
+            .expect_err("mid-file failure must not yield an estimate");
+        assert!(err.to_string().contains("truncated"), "{err}");
+    }
 
     /// With b ≥ |E| every weight is 1 and the estimate must be exact.
     #[test]

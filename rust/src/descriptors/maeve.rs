@@ -75,12 +75,28 @@ impl MaeveEstimator {
         self
     }
 
+    /// Single-pass estimate.
+    ///
+    /// # Panics
+    ///
+    /// Panics when the stream records an I/O failure (`EdgeStream::
+    /// take_error`); use [`MaeveEstimator::try_run`] to handle stream
+    /// failures as errors.
     pub fn run(&self, stream: &mut impl EdgeStream) -> MaeveEstimate {
+        self.try_run(stream).expect("maeve: edge stream failed")
+    }
+
+    /// Like [`MaeveEstimator::run`], surfacing stream I/O failures as
+    /// errors instead of panicking.
+    pub fn try_run(&self, stream: &mut impl EdgeStream) -> crate::Result<MaeveEstimate> {
         let mut state = MaeveState::new(self.budget, self.seed);
         while let Some(e) = stream.next_edge() {
             state.push(e);
         }
-        state.finish()
+        if let Some(e) = stream.take_error() {
+            return Err(e.context("maeve stream truncated"));
+        }
+        Ok(state.finish())
     }
 }
 

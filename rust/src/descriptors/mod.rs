@@ -58,7 +58,13 @@ pub fn stream_of(g: &Graph, seed: u64) -> VecStream {
     VecStream::shuffled(g.edges.clone(), seed)
 }
 
-/// Helper: resolve a budget against a stream.
+/// Helper: resolve a budget against a stream.  The resettable in-tree
+/// stream types report a real `len_hint` (`VecStream` trivially;
+/// `FileStream` counts edges at open — ISSUE 4), so `Budget::Fraction`
+/// resolves against the true `|E|`.  The `1 << 20` fallback only applies
+/// to hintless one-shot streams (`ReaderStream` et al.), where a fraction
+/// of `|E|` is not computable in one pass anyway — prefer `Budget::Edges`
+/// for those.
 pub fn resolve_budget(b: Budget, s: &impl EdgeStream) -> usize {
     b.resolve(s.len_hint().unwrap_or(1 << 20))
 }

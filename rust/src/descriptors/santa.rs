@@ -84,7 +84,20 @@ impl SantaEstimator {
     }
 
     /// Run both passes over the (resettable) stream.
+    ///
+    /// # Panics
+    ///
+    /// Panics when the stream records an I/O failure (`EdgeStream::
+    /// take_error`) in either pass or on the inter-pass reset — an empty
+    /// pass 2 over a vanished file must never yield garbage traces.  Use
+    /// [`SantaEstimator::try_run`] to handle stream failures as errors.
     pub fn run(&self, stream: &mut impl EdgeStream) -> SantaEstimate {
+        self.try_run(stream).expect("santa: edge stream failed")
+    }
+
+    /// Like [`SantaEstimator::run`], surfacing stream I/O failures as
+    /// errors instead of panicking.
+    pub fn try_run(&self, stream: &mut impl EdgeStream) -> crate::Result<SantaEstimate> {
         // ---- pass 1: exact degrees ----
         let mut degrees: Vec<u32> = Vec::new();
         let mut ne = 0u64;
@@ -96,16 +109,25 @@ impl SantaEstimator {
             degrees[e.u as usize] += 1;
             degrees[e.v as usize] += 1;
         }
+        if let Some(e) = stream.take_error() {
+            return Err(e.context("santa pass 1 truncated"));
+        }
         stream.reset();
+        if let Some(e) = stream.take_error() {
+            return Err(e.context("santa pass-2 reset failed"));
+        }
 
         // ---- pass 2: trace accumulation ----
         let mut state = SantaPass2::new(self.cfg.clone(), std::sync::Arc::new(degrees));
         while let Some(e) = stream.next_edge() {
             state.push(e);
         }
+        if let Some(e) = stream.take_error() {
+            return Err(e.context("santa pass 2 truncated"));
+        }
         let mut est = state.finish();
         est.ne = ne;
-        est
+        Ok(est)
     }
 }
 
@@ -321,6 +343,32 @@ mod tests {
     use crate::gen;
     use crate::graph::csr::Csr;
     use crate::graph::stream::VecStream;
+
+    /// ISSUE 4: the direct estimator path (not just the coordinator) must
+    /// surface stream failures — a file vanishing between passes errors
+    /// from `try_run` instead of yielding garbage traces from an empty
+    /// pass 2, and the one-shot `ReaderStream` errors on its reset.
+    #[test]
+    fn try_run_surfaces_stream_failures() {
+        use crate::graph::stream::{write_edge_list, FileStream, ReaderStream};
+        let g = gen::er_graph(30, 60, &mut crate::util::rng::Pcg64::seed_from_u64(8));
+        let dir = crate::util::tmp::TempDir::new("santa-del").unwrap();
+        let path = dir.path().join("g.txt");
+        write_edge_list(&path, &g.edges).unwrap();
+        let mut s = FileStream::open(&path).unwrap();
+        std::fs::remove_file(&path).unwrap();
+        let err = SantaEstimator::new(g.m())
+            .try_run(&mut s)
+            .expect_err("vanished file must fail the reset");
+        assert!(err.to_string().contains("reset"), "{err}");
+
+        let text = b"0 1\n1 2\n0 2\n".to_vec();
+        let mut s = ReaderStream::new(std::io::BufReader::new(std::io::Cursor::new(text)));
+        let err = SantaEstimator::new(10)
+            .try_run(&mut s)
+            .expect_err("one-shot reader cannot serve two passes");
+        assert!(err.to_string().contains("reset"), "{err}");
+    }
     use crate::linalg::symmetric_eigenvalues;
 
     /// Exact traces from the dense normalized Laplacian.

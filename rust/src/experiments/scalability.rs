@@ -5,7 +5,9 @@
 use std::time::Instant;
 
 use crate::analyze::{canberra, euclidean};
-use crate::coordinator::{run_pipeline, CoordinatorConfig, DescriptorKind, WorkerEstimate};
+use crate::coordinator::{
+    run_pipeline, CoordinatorConfig, DescriptorKind, PlacementPolicy, WorkerEstimate,
+};
 use crate::descriptors::psi::{psi_from_eigenvalues, psi_from_traces, N_J, VARIANT_NAMES};
 use crate::exact;
 use crate::gen::massive::{massive_graph, MassiveKind};
@@ -31,7 +33,13 @@ struct Row {
     santa_dist: [f64; 6],
 }
 
-fn run_network(ctx: &Ctx, kind: MassiveKind, budget: usize, workers: usize) -> Row {
+fn run_network(
+    ctx: &Ctx,
+    kind: MassiveKind,
+    budget: usize,
+    workers: usize,
+    placement: PlacementPolicy,
+) -> Row {
     let g = massive_graph(kind, ctx.massive_scale, ctx.seed);
     let (nv, ne) = (g.n, g.m());
     println!("  {} |V|={} |E|={} (paper: |V|={} |E|={})", kind.name(), nv, ne,
@@ -42,6 +50,8 @@ fn run_network(ctx: &Ctx, kind: MassiveKind, budget: usize, workers: usize) -> R
         chunk_size: 8192,
         queue_depth: 8,
         seed: ctx.seed ^ 0x5ca1e,
+        placement,
+        topology: None,
     };
 
     // exact ("real") embeddings — GABE/MAEVE by the unlimited-budget
@@ -68,6 +78,12 @@ fn run_network(ctx: &Ctx, kind: MassiveKind, budget: usize, workers: usize) -> R
     let mut s = VecStream::shuffled(g.edges.clone(), ctx.seed);
     let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).expect("pipeline");
     let gabe_time = t0.elapsed().as_secs_f64();
+    let p = &r.placement;
+    println!(
+        "    placement {} over {} node(s): {} used, {}/{} workers pinned, \
+         {} chunk replicas / {} chunks",
+        p.policy, p.nodes, p.nodes_used, p.pinned_workers, workers, p.chunk_replicas, p.chunks
+    );
     let WorkerEstimate::Gabe(est) = &r.averaged else { unreachable!() };
     let gabe_dist = canberra(&est.descriptor(), &exact_gabe);
 
@@ -107,10 +123,17 @@ fn run_network(ctx: &Ctx, kind: MassiveKind, budget: usize, workers: usize) -> R
 
 /// Tables 16 (b = 100k) and 17 (b = 500k). Budgets scale with
 /// `massive_scale` so the sample:graph ratio matches the paper's.
-pub fn table(ctx: &Ctx, b_paper: usize, workers: usize, only: Option<MassiveKind>) -> Result<()> {
+pub fn table(
+    ctx: &Ctx,
+    b_paper: usize,
+    workers: usize,
+    only: Option<MassiveKind>,
+    placement: PlacementPolicy,
+) -> Result<()> {
     let budget = ((b_paper as f64 * ctx.massive_scale).ceil() as usize).max(1000);
     println!(
-        "Table {}: massive networks at paper-b={} (scaled b={}), {} workers, scale {}",
+        "Table {}: massive networks at paper-b={} (scaled b={}), {} workers \
+         (placement {placement}), scale {}",
         if b_paper == 100_000 { "16" } else { "17" },
         b_paper,
         budget,
@@ -124,7 +147,7 @@ pub fn table(ctx: &Ctx, b_paper: usize, workers: usize, only: Option<MassiveKind
     let mut rows = Vec::new();
     let mut csv = Vec::new();
     for kind in kinds {
-        let r = run_network(ctx, kind, budget, workers);
+        let r = run_network(ctx, kind, budget, workers, placement);
         rows.push(vec![
             r.name.clone(),
             format!("{}", r.nv),
@@ -195,7 +218,7 @@ mod tests {
             out_dir: PathBuf::from(std::env::temp_dir().join("sd-scal-test")),
             threads: 1,
         };
-        let r = run_network(&ctx, MassiveKind::Fo, 2_000, 2);
+        let r = run_network(&ctx, MassiveKind::Fo, 2_000, 2, PlacementPolicy::Scatter);
         assert!(r.ne > 50);
         assert!(r.gabe_time >= 0.0 && r.gabe_dist.is_finite());
         assert!(r.santa_dist.iter().all(|d| d.is_finite()));

@@ -1,7 +1,9 @@
 //! §3.4 experiment: averaging W independent workers cuts the estimator
 //! variance ≈ 1/W (Tri-Fly's claim, which our coordinator inherits).
 
-use crate::coordinator::{run_pipeline, CoordinatorConfig, DescriptorKind, WorkerEstimate};
+use crate::coordinator::{
+    run_pipeline, CoordinatorConfig, DescriptorKind, PlacementPolicy, WorkerEstimate,
+};
 use crate::count::idx;
 use crate::exact;
 use crate::gen;
@@ -13,7 +15,10 @@ use crate::Result;
 use super::{print_table, Ctx};
 
 /// Variance of the averaged triangle estimate vs number of workers.
-pub fn workers(ctx: &Ctx) -> Result<()> {
+/// `placement` moves the workers around the machine but — by the
+/// differential contract — never the estimates, so the variance curve is
+/// placement-invariant.
+pub fn workers(ctx: &Ctx, placement: PlacementPolicy) -> Result<()> {
     let mut rng = Pcg64::seed_from_u64(ctx.seed ^ 0x3a4);
     let g = gen::powerlaw_cluster_graph(
         ((3000.0 * ctx.scale).ceil() as usize).clamp(300, 20_000),
@@ -43,6 +48,8 @@ pub fn workers(ctx: &Ctx) -> Result<()> {
                 chunk_size: 4096,
                 queue_depth: 8,
                 seed: seed0 ^ trial << 6 ^ (w as u64) << 40,
+                placement,
+                topology: None,
             };
             let mut s = VecStream::shuffled(g.edges.clone(), trial);
             let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).expect("pipeline");
@@ -90,7 +97,7 @@ mod tests {
             out_dir: tmp.path().to_path_buf(),
             threads: 0,
         };
-        workers(&ctx).unwrap();
+        workers(&ctx, PlacementPolicy::Compact).unwrap();
         assert!(tmp.path().join("workers_variance.csv").exists());
     }
 }

@@ -2,11 +2,20 @@
 //!
 //! All descriptors run in ≤ 2 passes (constraint **C1**); [`EdgeStream`]
 //! therefore supports `reset()` for the second pass (SANTA).  Streams carry
-//! an optional length hint so harnesses can report progress, but no
-//! algorithm *requires* knowing `|E|` in advance.
+//! an optional length hint so budget resolution and harness progress can
+//! use the true `|E|`, but no algorithm *requires* knowing `|E|` in
+//! advance.
+//!
+//! **Failure contract** (ISSUE 4): a stream that hits an I/O failure —
+//! a read error mid-file, a `reset()` that cannot reopen its source —
+//! reports end-of-stream from `next_edge` and records the cause, which
+//! callers retrieve with [`EdgeStream::take_error`].  The coordinator
+//! checks it after every pass, so a truncated stream fails the pipeline
+//! instead of silently producing estimates over a prefix (or garbage
+//! traces from an empty SANTA pass 2).
 
 use std::fs::File;
-use std::io::{BufRead, BufReader, Seek, Write};
+use std::io::{self, BufRead, BufReader, Write};
 use std::path::{Path, PathBuf};
 
 use super::Edge;
@@ -15,12 +24,22 @@ use crate::Result;
 
 /// A resettable stream of canonical edges.
 pub trait EdgeStream {
-    /// Next edge, or `None` at end of stream.
+    /// Next edge, or `None` at end of stream *or after a recorded error*
+    /// (check [`EdgeStream::take_error`] to tell the two apart).
     fn next_edge(&mut self) -> Option<Edge>;
-    /// Rewind to the beginning (for the second pass; constraint C1 allows 2).
+    /// Rewind to the beginning (for the second pass; constraint C1 allows
+    /// 2).  A failed rewind is recorded and surfaced via
+    /// [`EdgeStream::take_error`]; subsequent `next_edge` calls return
+    /// `None`.
     fn reset(&mut self);
     /// Total number of edges if known.
     fn len_hint(&self) -> Option<usize> {
+        None
+    }
+    /// Take the stream's recorded failure, if any.  Infallible streams
+    /// (the default) always return `None`; callers that must distinguish
+    /// truncation from completion check this after draining.
+    fn take_error(&mut self) -> Option<crate::util::err::Error> {
         None
     }
 }
@@ -68,57 +87,195 @@ impl EdgeStream for VecStream {
     }
 }
 
+/// Parse one `u v` edge-list line: whitespace-separated endpoints,
+/// canonicalized, self-loops dropped.  `None` for comments/garbage/loops —
+/// such lines are skipped, not fatal (§5.2 preprocessing is expected to
+/// have cleaned the list).
+fn parse_edge_line(line: &str) -> Option<Edge> {
+    let mut it = line.split_whitespace();
+    let (a, b) = (it.next()?, it.next()?);
+    let (a, b) = (a.parse().ok()?, b.parse().ok()?);
+    Edge::try_new(a, b)
+}
+
+/// Shared line-pump of the file-backed streams: next valid edge from the
+/// reader, recording (not swallowing) I/O errors into `error`.
+fn next_edge_from(
+    reader: &mut impl BufRead,
+    line: &mut String,
+    error: &mut Option<io::Error>,
+) -> Option<Edge> {
+    if error.is_some() {
+        return None;
+    }
+    loop {
+        line.clear();
+        match reader.read_line(line) {
+            Ok(0) => return None,
+            Ok(_) => {
+                if let Some(e) = parse_edge_line(line) {
+                    return Some(e);
+                }
+            }
+            Err(e) => {
+                *error = Some(e);
+                return None;
+            }
+        }
+    }
+}
+
 /// Stream over a whitespace-separated `u v` edge-list file.  Self-loops are
 /// dropped and edges canonicalized on the fly; duplicates are *not* removed
 /// (preprocessing is expected to have done that, §5.2 — see
 /// [`write_edge_list`] / [`preprocess_pairs`]).
+///
+/// `open()` makes one counting pass (through its own file handle, so the
+/// streaming reader starts untouched at offset 0) so `len_hint` reports
+/// the file's true edge count — `Budget::Fraction` budgets resolve against
+/// the real `|E|`, not a fabricated placeholder.  The extra sequential
+/// read is paid once, at open, never per pass, and warms the page cache
+/// for pass 1.  `FileStream` requires a re-openable regular file anyway
+/// (`reset()` reopens by path for SANTA's pass 2); for one-shot sources —
+/// pipes, sockets, stdin — use [`ReaderStream`], which skips counting.
 pub struct FileStream {
     path: PathBuf,
     reader: BufReader<File>,
-    len: Option<usize>,
+    len: usize,
+    error: Option<io::Error>,
     line: String,
 }
 
 impl FileStream {
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
+        // counting pass: same parse as next_edge, so the count is the
+        // number of edges the stream will actually yield
+        let mut counter = BufReader::new(File::open(&path)?);
+        let mut line = String::new();
+        let mut len = 0usize;
+        loop {
+            line.clear();
+            if counter.read_line(&mut line)? == 0 {
+                break;
+            }
+            if parse_edge_line(&line).is_some() {
+                len += 1;
+            }
+        }
         let reader = BufReader::new(File::open(&path)?);
-        Ok(FileStream { path, reader, len: None, line: String::new() })
+        Ok(FileStream { path, reader, len, error: None, line })
+    }
+
+    /// The recorded I/O failure, if any, without consuming it.
+    pub fn io_error(&self) -> Option<&io::Error> {
+        self.error.as_ref()
     }
 }
 
 impl EdgeStream for FileStream {
     fn next_edge(&mut self) -> Option<Edge> {
-        loop {
-            self.line.clear();
-            let n = self.reader.read_line(&mut self.line).ok()?;
-            if n == 0 {
-                return None;
-            }
-            let mut it = self.line.split_whitespace();
-            let (Some(a), Some(b)) = (it.next(), it.next()) else {
-                continue;
-            };
-            let (Ok(a), Ok(b)) = (a.parse(), b.parse()) else {
-                continue;
-            };
-            if let Some(e) = Edge::try_new(a, b) {
-                return Some(e);
-            }
-        }
+        next_edge_from(&mut self.reader, &mut self.line, &mut self.error)
     }
 
     fn reset(&mut self) {
-        if let Ok(f) = File::open(&self.path) {
-            self.reader = BufReader::new(f);
-        } else {
-            // Keep the exhausted reader; next_edge will return None.
-            let _ = self.reader.seek(std::io::SeekFrom::End(0));
+        match File::open(&self.path) {
+            Ok(f) => self.reader = BufReader::new(f),
+            Err(e) => {
+                // record the failure (never overwriting an earlier one);
+                // next_edge now reports end-of-stream until take_error
+                if self.error.is_none() {
+                    self.error =
+                        Some(io::Error::new(e.kind(), format!("reset failed to reopen: {e}")));
+                }
+            }
         }
     }
 
     fn len_hint(&self) -> Option<usize> {
-        self.len
+        Some(self.len)
+    }
+
+    fn take_error(&mut self) -> Option<crate::util::err::Error> {
+        self.error
+            .take()
+            .map(|e| crate::anyhow!("{}: {e}", self.path.display()))
+    }
+}
+
+/// Stream over any [`BufRead`] source — stdin, a socket, a decompressor,
+/// or a test double.  One-shot: `reset()` records an "unsupported" error
+/// (surfaced via [`EdgeStream::take_error`]) because a generic reader
+/// cannot rewind, so a two-pass descriptor over one fails loudly instead
+/// of silently seeing an empty second pass.
+pub struct ReaderStream<R> {
+    reader: R,
+    line: String,
+    error: Option<io::Error>,
+}
+
+impl<R: BufRead> ReaderStream<R> {
+    pub fn new(reader: R) -> Self {
+        ReaderStream { reader, line: String::new(), error: None }
+    }
+
+    /// The recorded I/O failure, if any, without consuming it.
+    pub fn io_error(&self) -> Option<&io::Error> {
+        self.error.as_ref()
+    }
+}
+
+impl<R: BufRead> EdgeStream for ReaderStream<R> {
+    fn next_edge(&mut self) -> Option<Edge> {
+        next_edge_from(&mut self.reader, &mut self.line, &mut self.error)
+    }
+
+    fn reset(&mut self) {
+        if self.error.is_none() {
+            self.error = Some(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "ReaderStream cannot rewind its reader (two-pass descriptors need \
+                 a FileStream or VecStream)",
+            ));
+        }
+    }
+
+    fn take_error(&mut self) -> Option<crate::util::err::Error> {
+        self.error.take().map(|e| crate::anyhow!("reader stream: {e}"))
+    }
+}
+
+/// Test double: serves `data` then fails every read with `ErrorKind::Other`
+/// after `fail_at` bytes.  Lives outside `#[cfg(test)] mod tests` so the
+/// coordinator's own failure tests can drive a pipeline with it.
+#[cfg(test)]
+pub struct FailAfter {
+    data: Vec<u8>,
+    fail_at: usize,
+    pos: usize,
+}
+
+#[cfg(test)]
+impl FailAfter {
+    pub fn new(data: Vec<u8>, fail_at: usize) -> Self {
+        FailAfter { data, fail_at, pos: 0 }
+    }
+}
+
+#[cfg(test)]
+impl io::Read for FailAfter {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        if self.pos >= self.fail_at {
+            return Err(io::Error::other("synthetic mid-file failure"));
+        }
+        let end = self.data.len().min(self.fail_at);
+        let n = buf.len().min(end - self.pos);
+        if n == 0 {
+            return Err(io::Error::other("synthetic mid-file failure"));
+        }
+        buf[..n].copy_from_slice(&self.data[self.pos..self.pos + n]);
+        self.pos += n;
+        Ok(n)
     }
 }
 
@@ -167,6 +324,7 @@ mod tests {
         assert_eq!(s.next_edge(), Some(edges[0]));
         assert_eq!(s.next_edge(), Some(edges[1]));
         assert_eq!(s.next_edge(), None);
+        assert!(s.take_error().is_none());
         s.reset();
         assert_eq!(s.next_edge(), Some(edges[0]));
         assert_eq!(s.len_hint(), Some(2));
@@ -192,13 +350,16 @@ mod tests {
         let edges = vec![Edge::new(0, 3), Edge::new(1, 2), Edge::new(2, 3)];
         write_edge_list(&path, &edges).unwrap();
         let mut s = FileStream::open(&path).unwrap();
+        assert_eq!(s.len_hint(), Some(3));
         let mut got = Vec::new();
         while let Some(e) = s.next_edge() {
             got.push(e);
         }
         assert_eq!(got, edges);
+        assert!(s.take_error().is_none());
         s.reset();
         assert_eq!(s.next_edge(), Some(edges[0]));
+        assert_eq!(s.len_hint(), Some(3), "len hint survives reset");
     }
 
     #[test]
@@ -207,9 +368,89 @@ mod tests {
         let path = dir.path().join("g.txt");
         std::fs::write(&path, "# comment\n1 1\n0 2\nbroken\n3 1\n").unwrap();
         let mut s = FileStream::open(&path).unwrap();
+        // the counting pass applies the same filter: 2 valid edges, not 5
+        assert_eq!(s.len_hint(), Some(2));
         assert_eq!(s.next_edge(), Some(Edge::new(0, 2)));
         assert_eq!(s.next_edge(), Some(Edge::new(1, 3)));
         assert_eq!(s.next_edge(), None);
+        assert!(s.take_error().is_none());
+    }
+
+    /// ISSUE 4 regression: `Budget::Fraction` over a written edge-list
+    /// file must resolve against the file's true `|E|`, not the old
+    /// fabricated `1 << 20` fallback.
+    #[test]
+    fn fraction_budget_resolves_against_true_file_length() {
+        use crate::descriptors::{resolve_budget, Budget};
+        let dir = crate::util::tmp::TempDir::new("stream").unwrap();
+        let path = dir.path().join("g.txt");
+        let edges: Vec<Edge> = (0..30).map(|i| Edge::new(i, i + 1)).collect();
+        write_edge_list(&path, &edges).unwrap();
+        let s = FileStream::open(&path).unwrap();
+        assert_eq!(resolve_budget(Budget::Fraction(0.1), &s), 3);
+        assert_eq!(resolve_budget(Budget::Fraction(0.5), &s), 15);
+        assert_eq!(resolve_budget(Budget::Exact, &s), 30);
+    }
+
+    /// ISSUE 4 regression: a reader that dies mid-file must surface the
+    /// error instead of silently truncating the stream to a prefix.
+    #[test]
+    fn midstream_io_error_is_recorded_not_swallowed() {
+        let mut text = String::new();
+        for i in 0..20u32 {
+            text.push_str(&format!("{} {}\n", i, i + 1));
+        }
+        // fail after 40 bytes: a handful of edges parse, then the error
+        let mut s = ReaderStream::new(BufReader::new(FailAfter::new(text.into_bytes(), 40)));
+        let mut got = 0;
+        while s.next_edge().is_some() {
+            got += 1;
+        }
+        assert!(got > 0 && got < 20, "got {got} edges");
+        assert!(s.io_error().is_some());
+        // after the error, the stream stays terminated
+        assert_eq!(s.next_edge(), None);
+        let err = s.take_error().expect("error must be surfaced");
+        assert!(err.to_string().contains("synthetic mid-file failure"), "{err}");
+        // taking it consumes it
+        assert!(s.take_error().is_none());
+    }
+
+    #[test]
+    fn reader_stream_reads_clean_input_and_rejects_reset() {
+        let text = b"0 1\n1 2\n".to_vec();
+        let mut s = ReaderStream::new(BufReader::new(io::Cursor::new(text)));
+        assert_eq!(s.next_edge(), Some(Edge::new(0, 1)));
+        assert_eq!(s.next_edge(), Some(Edge::new(1, 2)));
+        assert_eq!(s.next_edge(), None);
+        assert!(s.take_error().is_none());
+        s.reset();
+        let err = s.take_error().expect("reset on a one-shot reader must be observable");
+        assert!(err.to_string().contains("cannot rewind"), "{err}");
+    }
+
+    /// ISSUE 4 regression: a `reset()` that cannot reopen the file (e.g.
+    /// it vanished between SANTA passes) must be observable, and the
+    /// stream must read as terminated rather than empty-but-healthy.
+    #[test]
+    fn reset_failure_is_observable() {
+        let dir = crate::util::tmp::TempDir::new("stream").unwrap();
+        let path = dir.path().join("g.txt");
+        let edges = vec![Edge::new(0, 1), Edge::new(1, 2)];
+        write_edge_list(&path, &edges).unwrap();
+        let mut s = FileStream::open(&path).unwrap();
+        // pass 1 drains the open fd even after the unlink
+        std::fs::remove_file(&path).unwrap();
+        let mut got = 0;
+        while s.next_edge().is_some() {
+            got += 1;
+        }
+        assert_eq!(got, 2);
+        s.reset();
+        assert_eq!(s.next_edge(), None);
+        assert!(s.io_error().is_some());
+        let err = s.take_error().expect("failed reset must be surfaced");
+        assert!(err.to_string().contains("reset failed"), "{err}");
     }
 
     #[test]

@@ -15,6 +15,7 @@
 
 use std::process::ExitCode;
 
+use stream_descriptors::coordinator::PlacementPolicy;
 use stream_descriptors::experiments::{self, Ctx};
 use stream_descriptors::gen::massive::MassiveKind;
 
@@ -26,6 +27,7 @@ struct Args {
     seed: u64,
     workers: usize,
     threads: usize,
+    placement: PlacementPolicy,
     dataset: Option<String>,
     net: Option<MassiveKind>,
     out_dir: Option<String>,
@@ -55,6 +57,8 @@ OPTIONS:
   --massive-scale F  massive-network scale (default 0.02)
   --seed N           RNG seed (default 7)
   --workers N        coordinator workers for table16/17 (default 4)
+  --placement P      NUMA worker placement for table16/17/workers:
+                     none | compact | scatter (default none)
   --threads N        harness threads (default: all cores)
   --dataset NAME     restrict table14/15 to one dataset (e.g. OHSU)
   --net NAME         restrict table16/17 to one network (FO/US/CS/PT/FL/SF/U2)
@@ -71,6 +75,7 @@ fn parse_args() -> Result<Args, String> {
         seed: 7,
         workers: 4,
         threads: 0,
+        placement: PlacementPolicy::None,
         dataset: None,
         net: None,
         out_dir: None,
@@ -84,6 +89,7 @@ fn parse_args() -> Result<Args, String> {
             }
             "--seed" => a.seed = val()?.parse().map_err(|e| format!("{e}"))?,
             "--workers" => a.workers = val()?.parse().map_err(|e| format!("{e}"))?,
+            "--placement" => a.placement = val()?.parse()?,
             "--threads" => a.threads = val()?.parse().map_err(|e| format!("{e}"))?,
             "--dataset" => a.dataset = Some(val()?),
             "--net" => a.net = Some(val()?.parse()?),
@@ -151,9 +157,15 @@ fn main() -> ExitCode {
             "fig5" => experiments::approx::fig5(&ctx),
             "table14" => experiments::classification::table14(&ctx, args.dataset.as_deref()),
             "table15" => experiments::classification::table15(&ctx, args.dataset.as_deref()),
-            "table16" => experiments::scalability::table(&ctx, 100_000, args.workers, args.net),
-            "table17" => experiments::scalability::table(&ctx, 500_000, args.workers, args.net),
-            "workers" => experiments::workers::workers(&ctx),
+            "table16" => {
+                let (w, p) = (args.workers, args.placement);
+                experiments::scalability::table(&ctx, 100_000, w, args.net, p)
+            }
+            "table17" => {
+                let (w, p) = (args.workers, args.placement);
+                experiments::scalability::table(&ctx, 500_000, w, args.net, p)
+            }
+            "workers" => experiments::workers::workers(&ctx, args.placement),
             "unbiased" => experiments::approx::unbiased(&ctx),
             "ablation" => experiments::ablation::ablation(&ctx),
             "all" => {
@@ -161,12 +173,13 @@ fn main() -> ExitCode {
                 experiments::approx::fig5(&ctx)?;
                 experiments::approx::unbiased(&ctx)?;
                 experiments::ablation::ablation(&ctx)?;
-                experiments::workers::workers(&ctx)?;
+                experiments::workers::workers(&ctx, args.placement)?;
                 experiments::classification::table14(&ctx, args.dataset.as_deref())?;
                 experiments::classification::table15(&ctx, args.dataset.as_deref())?;
                 experiments::visualization::fig3(&ctx)?;
-                experiments::scalability::table(&ctx, 100_000, args.workers, args.net)?;
-                experiments::scalability::table(&ctx, 500_000, args.workers, args.net)
+                let (w, p) = (args.workers, args.placement);
+                experiments::scalability::table(&ctx, 100_000, w, args.net, p)?;
+                experiments::scalability::table(&ctx, 500_000, w, args.net, p)
             }
             other => {
                 eprintln!("unknown command {other}\n\n{USAGE}");

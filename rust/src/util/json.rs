@@ -1,6 +1,7 @@
 //! Minimal recursive-descent JSON parser — enough for
 //! `artifacts/manifest.json` (objects, arrays, strings, numbers, bools,
-//! null; no \u escapes beyond BMP passthrough).
+//! null; `\u` escapes including surrogate pairs for non-BMP scalars —
+//! lone surrogates are rejected, per RFC 8259 §7).
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -154,6 +155,22 @@ impl<'a> Parser<'a> {
             .ok_or_else(|| self.err("bad number"))
     }
 
+    /// Four hex digits of a `\u` escape; advances past them.  Exactly
+    /// ASCII hex — `from_str_radix` alone would admit a leading `+`.
+    fn hex4(&mut self) -> Result<u32, JsonError> {
+        if self.pos + 4 > self.b.len() {
+            return Err(self.err("bad \\u escape"));
+        }
+        let hex = &self.b[self.pos..self.pos + 4];
+        if !hex.iter().all(u8::is_ascii_hexdigit) {
+            return Err(self.err("bad \\u escape"));
+        }
+        let code = u32::from_str_radix(std::str::from_utf8(hex).unwrap(), 16)
+            .map_err(|_| self.err("bad \\u escape"))?;
+        self.pos += 4;
+        Ok(code)
+    }
+
     fn string(&mut self) -> Result<String, JsonError> {
         self.expect(b'"')?;
         let mut out = String::new();
@@ -177,16 +194,30 @@ impl<'a> Parser<'a> {
                         b'b' => out.push('\u{8}'),
                         b'f' => out.push('\u{c}'),
                         b'u' => {
-                            if self.pos + 4 > self.b.len() {
-                                return Err(self.err("bad \\u escape"));
-                            }
-                            let hex =
-                                std::str::from_utf8(&self.b[self.pos..self.pos + 4])
-                                    .map_err(|_| self.err("bad \\u escape"))?;
-                            let code = u32::from_str_radix(hex, 16)
-                                .map_err(|_| self.err("bad \\u escape"))?;
-                            out.push(char::from_u32(code).unwrap_or('\u{fffd}'));
-                            self.pos += 4;
+                            let hi = self.hex4()?;
+                            let code = if (0xD800..0xDC00).contains(&hi) {
+                                // high surrogate: a low surrogate escape
+                                // must follow; combined they encode one
+                                // non-BMP scalar (never two U+FFFDs)
+                                if self.peek() != Some(b'\\')
+                                    || self.b.get(self.pos + 1) != Some(&b'u')
+                                {
+                                    return Err(self.err("unpaired high surrogate"));
+                                }
+                                self.pos += 2;
+                                let lo = self.hex4()?;
+                                if !(0xDC00..0xE000).contains(&lo) {
+                                    return Err(self.err("unpaired high surrogate"));
+                                }
+                                0x10000 + ((hi - 0xD800) << 10) + (lo - 0xDC00)
+                            } else if (0xDC00..0xE000).contains(&hi) {
+                                return Err(self.err("unpaired low surrogate"));
+                            } else {
+                                hi
+                            };
+                            let ch = char::from_u32(code)
+                                .ok_or_else(|| self.err("bad \\u escape"))?;
+                            out.push(ch);
                         }
                         _ => return Err(self.err("unknown escape")),
                     }
@@ -286,8 +317,29 @@ mod tests {
 
     #[test]
     fn unicode_escapes() {
-        assert_eq!(Json::parse(r#""A""#).unwrap(), Json::Str("A".into()));
+        // raw UTF-8 passthrough and BMP escapes
         assert_eq!(Json::parse("\"héllo\"").unwrap(), Json::Str("héllo".into()));
+        assert_eq!(Json::parse(r#""\u0041""#).unwrap(), Json::Str("A".into()));
+        assert_eq!(Json::parse(r#""\u00e9""#).unwrap(), Json::Str("é".into()));
+        // surrogate pairs combine into one non-BMP scalar (ISSUE 4: the
+        // old parser decoded each half as a U+FFFD replacement char)
+        assert_eq!(
+            Json::parse(r#""\ud83d\ude00""#).unwrap(),
+            Json::Str("\u{1f600}".into())
+        );
+        assert_eq!(
+            Json::parse(r#""x\ud834\udd1ey""#).unwrap(),
+            Json::Str("x\u{1d11e}y".into())
+        );
+        // lone/mispaired surrogates are rejected, not replaced
+        assert!(Json::parse(r#""\ud800""#).is_err());
+        assert!(Json::parse(r#""\udc00""#).is_err());
+        assert!(Json::parse(r#""\ud800A""#).is_err());
+        assert!(Json::parse(r#""\ud800\u0041""#).is_err());
+        // exactly four ASCII hex digits (from_str_radix alone would let a
+        // leading '+' through)
+        assert!(Json::parse(r#""\u+041""#).is_err());
+        assert!(Json::parse(r#""\u00 1""#).is_err());
     }
 
     #[test]

@@ -1,10 +1,11 @@
 //! Self-contained substrates the offline build environment forces us to
 //! own: an error/context type ([`err`]), a PCG PRNG ([`rng`]), a JSON
-//! parser ([`json`]), a criterion-style micro-benchmark harness ([`bench`])
-//! and temp-dir helpers ([`tmp`]).  (The image's cargo registry carries
-//! only the xla crate's build closure — no anyhow/rand/serde_json/
-//! criterion/tokio — so these are implemented from scratch and tested like
-//! everything else; the default build depends on nothing outside std.)
+//! parser ([`json`]), a criterion-style micro-benchmark harness ([`bench`]),
+//! temp-dir helpers ([`tmp`]) and NUMA topology discovery ([`topology`]).
+//! (The image's cargo registry carries only the xla crate's build closure —
+//! no anyhow/rand/serde_json/criterion/tokio — so these are implemented
+//! from scratch and tested like everything else; the default build depends
+//! on nothing outside std.)
 
 pub mod bench;
 pub mod err;
@@ -12,3 +13,4 @@ pub mod json;
 pub mod par;
 pub mod rng;
 pub mod tmp;
+pub mod topology;

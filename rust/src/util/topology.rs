@@ -1,0 +1,243 @@
+//! Machine NUMA topology discovery (ISSUE 4 tentpole).
+//!
+//! The coordinator's placement policies (`coordinator::placement`) need to
+//! know which CPUs belong to which NUMA node.  On Linux that layout is
+//! published under `/sys/devices/system/node/node*/cpulist`; everywhere
+//! else (and on machines without that sysfs tree) we fall back to one
+//! synthetic node spanning `available_parallelism` CPUs, which degrades
+//! every placement policy to plain CPU pinning on a flat machine.
+//!
+//! The whole type is **injectable**: tests and CI runners (no NUMA
+//! hardware) build 1/2/4-socket layouts with [`Topology::synthetic`] or
+//! point [`Topology::from_sysfs`] at a fabricated directory tree, and the
+//! coordinator accepts an explicit topology on its config instead of
+//! discovering one.  Checked-in `cpulist` fixtures under
+//! `fixtures/cpulist/` pin the parser to real-world formats (ranges,
+//! comma lists, offline-CPU holes, stride suffixes).
+
+use std::path::Path;
+
+/// One NUMA node: its sysfs id and the OS CPU ids it owns.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct NumaNode {
+    /// The sysfs node number (`nodeN`); purely informational.
+    pub id: usize,
+    /// OS CPU ids on this node, in sysfs order.
+    pub cpus: Vec<usize>,
+}
+
+/// The machine layout the coordinator places workers onto.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Topology {
+    /// Nodes with at least one CPU, ordered by node id.  Memory-only
+    /// nodes (empty `cpulist`, e.g. CXL expanders) are dropped at
+    /// construction — nothing can be scheduled on them.
+    pub nodes: Vec<NumaNode>,
+}
+
+impl Topology {
+    /// Discover the real machine layout, falling back to one synthetic
+    /// node over `available_parallelism` CPUs when the sysfs tree is
+    /// absent (non-Linux, restricted containers).  The sysfs walk runs
+    /// once per process and is cached — callers on hot paths (the
+    /// coordinator runs once per pipeline, benches once per timed
+    /// iteration) pay a clone of a few small `Vec`s, not repeated
+    /// `read_dir` + file reads that would bias placement-vs-none timings.
+    pub fn discover() -> Topology {
+        static CACHE: std::sync::OnceLock<Topology> = std::sync::OnceLock::new();
+        CACHE
+            .get_or_init(|| {
+                #[cfg(target_os = "linux")]
+                if let Some(t) = Topology::from_sysfs(Path::new("/sys/devices/system/node")) {
+                    return t;
+                }
+                Topology::single_node()
+            })
+            .clone()
+    }
+
+    /// Parse a sysfs-style tree: `<root>/node<N>/cpulist` files, one per
+    /// node.  Returns `None` when no node with at least one CPU is found
+    /// (callers fall back to [`Topology::single_node`]).
+    pub fn from_sysfs(root: &Path) -> Option<Topology> {
+        let entries = std::fs::read_dir(root).ok()?;
+        let mut nodes = Vec::new();
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(id) = name
+                .to_str()
+                .and_then(|n| n.strip_prefix("node"))
+                .and_then(|n| n.parse::<usize>().ok())
+            else {
+                continue;
+            };
+            let Ok(text) = std::fs::read_to_string(entry.path().join("cpulist")) else {
+                continue;
+            };
+            let cpus = parse_cpulist(&text);
+            if !cpus.is_empty() {
+                nodes.push(NumaNode { id, cpus });
+            }
+        }
+        nodes.sort_by_key(|n| n.id);
+        if nodes.is_empty() {
+            None
+        } else {
+            Some(Topology { nodes })
+        }
+    }
+
+    /// One node spanning `available_parallelism` CPUs (ids `0..n`).
+    pub fn single_node() -> Topology {
+        let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        Topology::synthetic(1, n)
+    }
+
+    /// A fabricated layout for tests: `nodes` nodes of `cpus_per_node`
+    /// consecutive CPU ids each (node 0 owns `0..c`, node 1 `c..2c`, …).
+    pub fn synthetic(nodes: usize, cpus_per_node: usize) -> Topology {
+        let (nodes, cpus_per_node) = (nodes.max(1), cpus_per_node.max(1));
+        Topology {
+            nodes: (0..nodes)
+                .map(|id| NumaNode {
+                    id,
+                    cpus: (id * cpus_per_node..(id + 1) * cpus_per_node).collect(),
+                })
+                .collect(),
+        }
+    }
+
+    /// Total CPUs across all nodes.
+    pub fn n_cpus(&self) -> usize {
+        self.nodes.iter().map(|n| n.cpus.len()).sum()
+    }
+}
+
+/// Parse the kernel's `cpulist` format: comma-separated CPU ids and
+/// inclusive ranges, with an optional `:stride` suffix on ranges
+/// (`"0-3,8-11"`, `"0,2,4"`, `"0-7:2"`).  Offline CPUs simply do not
+/// appear, so holes are expected.  Malformed components are skipped —
+/// a partially readable list beats none when walking real sysfs.
+pub fn parse_cpulist(text: &str) -> Vec<usize> {
+    let mut cpus = Vec::new();
+    for part in text.trim().split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (range, stride) = match part.split_once(':') {
+            Some((r, s)) => match s.parse::<usize>() {
+                Ok(s) if s >= 1 => (r, s),
+                _ => continue,
+            },
+            None => (part, 1),
+        };
+        match range.split_once('-') {
+            Some((lo, hi)) => {
+                let (Ok(lo), Ok(hi)) = (lo.trim().parse::<usize>(), hi.trim().parse::<usize>())
+                else {
+                    continue;
+                };
+                if lo <= hi {
+                    cpus.extend((lo..=hi).step_by(stride));
+                }
+            }
+            None => {
+                if let Ok(c) = range.parse::<usize>() {
+                    cpus.push(c);
+                }
+            }
+        }
+    }
+    cpus
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_ranges_commas_and_singles() {
+        assert_eq!(parse_cpulist("0-3"), vec![0, 1, 2, 3]);
+        assert_eq!(parse_cpulist("0,2,4"), vec![0, 2, 4]);
+        assert_eq!(parse_cpulist("0-1,4-5\n"), vec![0, 1, 4, 5]);
+        assert_eq!(parse_cpulist("7"), vec![7]);
+        assert_eq!(parse_cpulist("0-6:2"), vec![0, 2, 4, 6]);
+        assert_eq!(parse_cpulist(""), Vec::<usize>::new());
+        assert_eq!(parse_cpulist("\n"), Vec::<usize>::new());
+        // malformed components are skipped, not fatal
+        assert_eq!(parse_cpulist("0-x,3,5-4,2-3:0"), vec![3]);
+    }
+
+    #[test]
+    fn checked_in_cpulist_fixtures() {
+        // dual-socket Xeon with SMT: two hyperthread ranges per socket
+        let dual = include_str!("fixtures/cpulist/dual_socket_smt.txt");
+        let cpus = parse_cpulist(dual);
+        assert_eq!(cpus.len(), 32);
+        assert_eq!(cpus[0], 0);
+        assert_eq!(*cpus.last().unwrap(), 47);
+        assert!(cpus.contains(&15) && cpus.contains(&32) && !cpus.contains(&16));
+
+        // comma-separated single CPUs (qemu-style)
+        let commas = include_str!("fixtures/cpulist/comma_singles.txt");
+        assert_eq!(parse_cpulist(commas), vec![0, 2, 4, 6]);
+
+        // offline CPUs leave holes in the ranges
+        let offline = include_str!("fixtures/cpulist/offline_holes.txt");
+        let cpus = parse_cpulist(offline);
+        assert_eq!(cpus, vec![0, 1, 2, 3, 6, 7]);
+    }
+
+    #[test]
+    fn from_sysfs_reads_fabricated_tree() {
+        let dir = crate::util::tmp::TempDir::new("topo").unwrap();
+        let root = dir.path();
+        for (name, cpulist) in [
+            ("node0", "0-3\n"),
+            ("node1", "4-7\n"),
+            ("node2", "\n"), // memory-only node: dropped
+        ] {
+            let d = root.join(name);
+            std::fs::create_dir_all(&d).unwrap();
+            std::fs::write(d.join("cpulist"), cpulist).unwrap();
+        }
+        // non-node entries are ignored
+        std::fs::create_dir_all(root.join("possible")).unwrap();
+        std::fs::write(root.join("online"), "0-1\n").unwrap();
+
+        let t = Topology::from_sysfs(root).unwrap();
+        assert_eq!(t.nodes.len(), 2);
+        assert_eq!(t.nodes[0].id, 0);
+        assert_eq!(t.nodes[0].cpus, vec![0, 1, 2, 3]);
+        assert_eq!(t.nodes[1].cpus, vec![4, 5, 6, 7]);
+        assert_eq!(t.n_cpus(), 8);
+    }
+
+    #[test]
+    fn from_sysfs_empty_tree_is_none() {
+        let dir = crate::util::tmp::TempDir::new("topo").unwrap();
+        assert!(Topology::from_sysfs(dir.path()).is_none());
+        assert!(Topology::from_sysfs(&dir.path().join("missing")).is_none());
+    }
+
+    #[test]
+    fn synthetic_layouts() {
+        let t = Topology::synthetic(4, 2);
+        assert_eq!(t.nodes.len(), 4);
+        assert_eq!(t.nodes[2].cpus, vec![4, 5]);
+        assert_eq!(t.n_cpus(), 8);
+        // degenerate inputs clamp to a usable layout
+        let t = Topology::synthetic(0, 0);
+        assert_eq!(t.nodes.len(), 1);
+        assert_eq!(t.n_cpus(), 1);
+    }
+
+    #[test]
+    fn discover_always_yields_a_usable_layout() {
+        let t = Topology::discover();
+        assert!(!t.nodes.is_empty());
+        assert!(t.n_cpus() >= 1);
+        assert!(t.nodes.iter().all(|n| !n.cpus.is_empty()));
+    }
+}

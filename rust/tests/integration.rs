@@ -4,7 +4,7 @@
 use stream_descriptors::analyze::canberra;
 use stream_descriptors::classify::{cross_validate, DistanceMatrix, Metric};
 use stream_descriptors::coordinator::{
-    run_pipeline, CoordinatorConfig, DescriptorKind, WorkerEstimate,
+    run_pipeline, CoordinatorConfig, DescriptorKind, PlacementPolicy, WorkerEstimate,
 };
 use stream_descriptors::count::idx;
 use stream_descriptors::descriptors::psi::{psi_from_eigenvalues, psi_from_traces};
@@ -92,6 +92,7 @@ fn pipeline_santa_close_to_spectrum() {
         chunk_size: 128,
         queue_depth: 4,
         seed: 13,
+        ..Default::default()
     };
     let mut s = VecStream::shuffled(g.edges.clone(), 2);
     let r = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg)
@@ -120,6 +121,7 @@ fn coordinator_invariant_to_chunking() {
             chunk_size: chunk,
             queue_depth: 2,
             seed: 5,
+            ..Default::default()
         };
         let mut s = VecStream::shuffled(g.edges.clone(), 1);
         let r = run_pipeline(&mut s, DescriptorKind::Maeve, &cfg).expect("pipeline");
@@ -129,6 +131,40 @@ fn coordinator_invariant_to_chunking() {
             assert!((est.paths[v] - exact.paths[v]).abs() < 1e-9);
         }
     }
+}
+
+/// NUMA placement end-to-end on the *discovered* machine topology (unit
+/// suites use synthetic layouts; this is the real-hardware leg): every
+/// policy must reproduce the unpinned estimate bit-for-bit, and the
+/// per-node fan-out must never allocate more replicas than
+/// `chunks × nodes`.
+#[test]
+fn placement_policies_bit_identical_on_real_topology() {
+    let g = gen::powerlaw_cluster_graph(400, 3, 0.4, &mut Pcg64::seed_from_u64(77));
+    let run = |placement| {
+        let cfg = CoordinatorConfig {
+            workers: 4,
+            budget: g.m() / 3,
+            chunk_size: 64,
+            queue_depth: 4,
+            seed: 11,
+            placement,
+            ..Default::default()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 5);
+        run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).expect("pipeline")
+    };
+    let base = run(PlacementPolicy::None);
+    let WorkerEstimate::Gabe(base_est) = &base.averaged else { unreachable!() };
+    for placement in [PlacementPolicy::Compact, PlacementPolicy::Scatter] {
+        let r = run(placement);
+        let WorkerEstimate::Gabe(est) = &r.averaged else { unreachable!() };
+        assert_eq!(est.counts, base_est.counts, "{placement} diverged from unpinned");
+        let p = &r.placement;
+        assert!(p.nodes_used >= 1 && p.nodes_used <= p.nodes);
+        assert_eq!(p.chunk_replicas, p.chunks * p.nodes_used as u64, "{p:?}");
+    }
+    assert_eq!(base.placement.chunk_replicas, base.placement.chunks);
 }
 
 /// L2-runtime end-to-end: streamed estimates finalized by the runtime
