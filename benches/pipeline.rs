@@ -1,6 +1,7 @@
 //! End-to-end pipeline benchmark (Tables 16/17 analog): coordinator fan-out
 //! over a massive synthetic network, absolute budget, all descriptors —
-//! now swept across NUMA placement policies (ISSUE 4).
+//! swept across NUMA placement policies (ISSUE 4) and window policies
+//! (ISSUE 5).
 //!
 //! Bench ids are `pipeline/{none,compact,scatter}/<net>/<desc>/w=<W>`.
 //! Every net × descriptor × worker-count cell runs unpinned (`none`); the
@@ -9,6 +10,12 @@
 //! `BENCH_pipeline.json` is the measured placement delta (DESIGN.md §7).
 //! On single-node machines all three collapse to the same layout and the
 //! deltas read ≈ 0, which is itself the correct measurement.
+//!
+//! The windowed arms reuse the same representative cell under
+//! `pipeline/window/{full,sliding,decay}/CS/gabe/w=4`: `full` repeats the
+//! unwindowed run through the window plumbing (its delta vs the plain id
+//! is the dispatch overhead, expected ≈ 0), `sliding`/`decay` measure the
+//! tombstone/heap cost of the ISSUE 5 lifetime model (DESIGN.md §8).
 //!
 //! Streams are shuffled once outside the timer and rewound per iteration.
 //! A bare numeric argument sets the graph scale (default 0.02); `--json`
@@ -21,6 +28,7 @@ use stream_descriptors::coordinator::{
 };
 use stream_descriptors::gen::massive::{massive_graph, MassiveKind};
 use stream_descriptors::graph::stream::{EdgeStream, VecStream};
+use stream_descriptors::sampling::{WindowConfig, WindowPolicy};
 use stream_descriptors::util::bench::{BenchArgs, Bencher};
 
 fn main() -> ExitCode {
@@ -62,12 +70,54 @@ fn main() -> ExitCode {
                         seed: 7,
                         placement,
                         topology: None,
+                        ..Default::default()
                     };
                     let mut s = VecStream::shuffled(g.edges.clone(), 3);
                     b.bench(id, Some(m), || {
                         s.reset();
                         run_pipeline(&mut s, dk, &cfg).expect("pipeline").edges
                     });
+                }
+
+                // windowed arms on the representative cell (ISSUE 5)
+                if dname == "gabe" && workers == 4 && kind == MassiveKind::Cs {
+                    let mu = g.m();
+                    let stride = (mu / 10).max(1);
+                    let arms = [
+                        ("full", WindowConfig::default()),
+                        (
+                            "sliding",
+                            WindowConfig::new(WindowPolicy::Sliding { w: (mu / 4).max(1) })
+                                .with_stride(stride),
+                        ),
+                        (
+                            "decay",
+                            WindowConfig::new(WindowPolicy::Decay {
+                                half_life: (mu as f64 / 8.0).max(1.0),
+                            })
+                            .with_stride(stride),
+                        ),
+                    ];
+                    for (wname, window) in arms {
+                        let id = format!("pipeline/window/{wname}/{}/{dname}/w=4", kind.name());
+                        if !args.matches(&id) {
+                            continue;
+                        }
+                        let cfg = CoordinatorConfig {
+                            workers,
+                            budget: (mu / 10).clamp(1_000, 100_000),
+                            chunk_size: 8192,
+                            queue_depth: 8,
+                            seed: 7,
+                            window,
+                            ..Default::default()
+                        };
+                        let mut s = VecStream::shuffled(g.edges.clone(), 3);
+                        b.bench(id, Some(m), || {
+                            s.reset();
+                            run_pipeline(&mut s, dk, &cfg).expect("pipeline").edges
+                        });
+                    }
                 }
             }
         }

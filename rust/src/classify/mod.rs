@@ -7,6 +7,12 @@
 //! `pairwise_dist` artifact; [`DistanceMatrix`] is the backend-agnostic
 //! consumer.
 
+// Rustdoc sweep status (ISSUE 5): the crate-level
+// `#![warn(missing_docs)]` is gated off here until this module gets
+// its own documentation pass; sampling/descriptors/coordinator/graph
+// are fully swept.
+#![allow(missing_docs)]
+
 use crate::util::rng::Pcg64;
 
 use crate::analyze::{canberra, euclidean};

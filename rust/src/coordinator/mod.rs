@@ -36,6 +36,7 @@ use crate::descriptors::maeve::{MaeveEstimate, MaeveState};
 use crate::descriptors::santa::{SantaConfig, SantaEstimate, SantaPass2};
 use crate::graph::stream::EdgeStream;
 use crate::graph::Edge;
+use crate::sampling::WindowConfig;
 use crate::util::topology::Topology;
 
 use fanout::{Fanout, FanoutStats};
@@ -44,9 +45,15 @@ pub use placement::PlacementPolicy;
 /// Which estimator the workers run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DescriptorKind {
+    /// GABE graphlet-count estimation (single pass).
     Gabe,
+    /// MAEVE per-vertex feature estimation (single pass).
     Maeve,
-    Santa { exact_wedges: bool },
+    /// SANTA trace estimation (two passes: master degrees, worker traces).
+    Santa {
+        /// Use the closed-form wedge term (ablation, DESIGN.md §4).
+        exact_wedges: bool,
+    },
 }
 
 /// Pipeline configuration.
@@ -60,6 +67,7 @@ pub struct CoordinatorConfig {
     pub chunk_size: usize,
     /// Bounded queue depth per worker — the backpressure knob.
     pub queue_depth: usize,
+    /// RNG seed; each worker derives its own reservoir seed from it.
     pub seed: u64,
     /// NUMA placement policy (default [`PlacementPolicy::None`]: unpinned
     /// workers, single-replica fan-out — the pre-ISSUE-4 behavior).
@@ -67,6 +75,12 @@ pub struct CoordinatorConfig {
     /// Machine layout override for tests/CI; `None` discovers the real
     /// layout at run time (`Topology::discover`).
     pub topology: Option<Topology>,
+    /// Window policy + snapshot cadence for every worker (ISSUE 5).  The
+    /// default full-history/no-snapshot config reproduces the pre-window
+    /// pipeline bit-for-bit.  All workers see every edge, so their
+    /// window clocks agree and snapshots land on the same arrival
+    /// indices — the *snapshot barriers* the master merges at.
+    pub window: WindowConfig,
 }
 
 impl Default for CoordinatorConfig {
@@ -79,6 +93,7 @@ impl Default for CoordinatorConfig {
             seed: 0xc00d,
             placement: PlacementPolicy::None,
             topology: None,
+            window: WindowConfig::default(),
         }
     }
 }
@@ -101,6 +116,7 @@ impl CoordinatorConfig {
                 "injected topology has a node with no CPUs"
             );
         }
+        self.window.validate()?;
         Ok(())
     }
 }
@@ -108,8 +124,11 @@ impl CoordinatorConfig {
 /// One worker's raw estimate.
 #[derive(Debug, Clone)]
 pub enum WorkerEstimate {
+    /// A GABE count estimate.
     Gabe(GabeEstimate),
+    /// A MAEVE per-vertex estimate.
     Maeve(MaeveEstimate),
+    /// A SANTA trace estimate.
     Santa(SantaEstimate),
 }
 
@@ -126,15 +145,21 @@ impl WorkerState {
         kind: DescriptorKind,
         budget: usize,
         seed: u64,
+        window: WindowConfig,
         degrees: &Option<Arc<Vec<u32>>>,
     ) -> Self {
         match kind {
-            DescriptorKind::Gabe => WorkerState::Gabe(GabeState::new(budget, seed)),
-            DescriptorKind::Maeve => WorkerState::Maeve(MaeveState::new(budget, seed)),
+            DescriptorKind::Gabe => {
+                WorkerState::Gabe(GabeState::with_window(budget, seed, window))
+            }
+            DescriptorKind::Maeve => {
+                WorkerState::Maeve(MaeveState::with_window(budget, seed, window))
+            }
             DescriptorKind::Santa { exact_wedges } => {
                 let scfg = SantaConfig::new(budget)
                     .with_seed(seed)
-                    .with_exact_wedges(exact_wedges);
+                    .with_exact_wedges(exact_wedges)
+                    .with_window(window);
                 WorkerState::Santa(SantaPass2::new(
                     scfg,
                     degrees.clone().expect("santa needs pass-1 degrees"),
@@ -151,12 +176,32 @@ impl WorkerState {
         }
     }
 
-    fn finish(self) -> WorkerEstimate {
-        match self {
+    /// Drain this worker's snapshot series, then finalize.  Snapshots are
+    /// `(t, estimate)` pairs at the shared barrier arrivals.
+    fn into_results(mut self) -> (Vec<(u64, WorkerEstimate)>, WorkerEstimate) {
+        let snaps = match &mut self {
+            WorkerState::Gabe(s) => s
+                .take_snapshots()
+                .into_iter()
+                .map(|sn| (sn.t, WorkerEstimate::Gabe(sn.estimate)))
+                .collect(),
+            WorkerState::Maeve(s) => s
+                .take_snapshots()
+                .into_iter()
+                .map(|sn| (sn.t, WorkerEstimate::Maeve(sn.estimate)))
+                .collect(),
+            WorkerState::Santa(s) => s
+                .take_snapshots()
+                .into_iter()
+                .map(|sn| (sn.t, WorkerEstimate::Santa(sn.estimate)))
+                .collect(),
+        };
+        let last = match self {
             WorkerState::Gabe(s) => WorkerEstimate::Gabe(s.finish()),
             WorkerState::Maeve(s) => WorkerEstimate::Maeve(s.finish()),
             WorkerState::Santa(s) => WorkerEstimate::Santa(s.finish()),
-        }
+        };
+        (snaps, last)
     }
 }
 
@@ -164,6 +209,7 @@ impl WorkerState {
 /// policy (estimates themselves are placement-invariant by contract).
 #[derive(Debug, Clone, Copy)]
 pub struct PlacementReport {
+    /// The policy the run was configured with.
     pub policy: PlacementPolicy,
     /// Nodes in the topology the plan ran against.
     pub nodes: usize,
@@ -181,6 +227,16 @@ pub struct PlacementReport {
     pub chunk_replicas: u64,
 }
 
+/// One merged snapshot barrier: the workers' estimates at arrival `t`,
+/// averaged exactly like the final estimate.
+#[derive(Debug)]
+pub struct SnapshotPoint {
+    /// Arrival index (1-based) of the barrier.
+    pub t: u64,
+    /// The averaged estimate over the window ending at `t`.
+    pub averaged: WorkerEstimate,
+}
+
 /// Aggregated pipeline output.
 #[derive(Debug)]
 pub struct PipelineResult {
@@ -188,7 +244,12 @@ pub struct PipelineResult {
     pub averaged: WorkerEstimate,
     /// Raw per-worker estimates (variance analysis, §3.4 experiment).
     pub per_worker: Vec<WorkerEstimate>,
+    /// The averaged descriptor time series (empty unless
+    /// [`CoordinatorConfig::window`] sets a snapshot stride).
+    pub snapshots: Vec<SnapshotPoint>,
+    /// Edges the master streamed through the fan-out.
     pub edges: u64,
+    /// Wall-clock time of the full run.
     pub elapsed: Duration,
     /// The placement the run actually achieved.
     pub placement: PlacementReport,
@@ -270,12 +331,44 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 /// configuration, if any worker thread panics, or if the stream reports an
 /// I/O failure (mid-stream truncation, failed pass-2 reset) — a truncated
 /// stream must never be silently averaged into an estimate.
+///
+/// ```
+/// use stream_descriptors::coordinator::{
+///     run_pipeline, CoordinatorConfig, DescriptorKind, WorkerEstimate,
+/// };
+/// use stream_descriptors::graph::stream::VecStream;
+/// use stream_descriptors::graph::Graph;
+///
+/// // A small clique: every pair of 6 vertices is an edge.
+/// let g = Graph::from_pairs((0u32..6).flat_map(|a| (a + 1..6).map(move |b| (a, b))));
+/// let mut stream = VecStream::shuffled(g.edges.clone(), 1);
+///
+/// let cfg = CoordinatorConfig {
+///     workers: 2,
+///     budget: g.m(), // ≥ |E| ⇒ every worker is exact
+///     chunk_size: 4,
+///     queue_depth: 2,
+///     ..Default::default()
+/// };
+/// let result = run_pipeline(&mut stream, DescriptorKind::Gabe, &cfg)?;
+/// assert_eq!(result.edges as usize, g.m());
+/// let WorkerEstimate::Gabe(est) = &result.averaged else { unreachable!() };
+/// // K6 holds C(6,3) = 20 triangles.
+/// assert!((est.counts[stream_descriptors::count::idx::TRIANGLE] - 20.0).abs() < 1e-9);
+/// # Ok::<(), stream_descriptors::util::err::Error>(())
+/// ```
 pub fn run_pipeline(
     stream: &mut impl EdgeStream,
     kind: DescriptorKind,
     cfg: &CoordinatorConfig,
 ) -> crate::Result<PipelineResult> {
     cfg.validate().map_err(|e| e.context("coordinator config"))?;
+    if let DescriptorKind::Santa { exact_wedges: true } = kind {
+        crate::ensure!(
+            !cfg.window.policy.is_windowed(),
+            "coordinator config: santa exact_wedges is incompatible with a windowed run"
+        );
+    }
     let start = Instant::now();
 
     // SANTA pass 1 (master-side, exact)
@@ -311,9 +404,14 @@ pub fn run_pipeline(
     let slots = placement::plan(cfg.placement, &topo, cfg.workers);
     let nodes_used = placement::nodes_used(&slots);
 
+    // one worker's return: (pinned?, snapshot series, final estimate)
+    type WorkerOut = (bool, Vec<(u64, WorkerEstimate)>, WorkerEstimate);
+    // the scope's aggregate: per-worker estimates, per-worker snapshot
+    // series, pinned-worker count, fan-out stats
+    type ScopeOut = (Vec<WorkerEstimate>, Vec<Vec<(u64, WorkerEstimate)>>, usize, FanoutStats);
     let mut edges = 0u64;
-    let (per_worker, pinned_workers, fan_stats) = std::thread::scope(
-        |scope| -> crate::Result<(Vec<WorkerEstimate>, usize, FanoutStats)> {
+    let (per_worker, worker_snaps, pinned_workers, fan_stats) = std::thread::scope(
+        |scope| -> crate::Result<ScopeOut> {
             let mut fan = Fanout::new(topo.nodes.len());
             let mut handles = Vec::with_capacity(cfg.workers);
             for (wid, slot) in slots.iter().enumerate() {
@@ -322,19 +420,21 @@ pub fn run_pipeline(
                 fan.add_worker(slot.node, tx);
                 let seed = cfg.seed ^ (wid as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
                 let budget = cfg.budget;
+                let window = cfg.window;
                 let degrees = degrees.clone();
                 let cpu = slot.cpu;
-                handles.push(scope.spawn(move || {
+                handles.push(scope.spawn(move || -> WorkerOut {
                     // pin first, allocate second: first-touch places the
                     // reservoir + arena pages on this worker's node
                     let pinned = cpu.is_some_and(placement::pin_current_thread);
-                    let mut state = WorkerState::new(kind, budget, seed, &degrees);
+                    let mut state = WorkerState::new(kind, budget, seed, window, &degrees);
                     while let Ok(chunk) = rx.recv() {
                         for &e in chunk.iter() {
                             state.push(e);
                         }
                     }
-                    (pinned, state.finish())
+                    let (snaps, last) = state.into_results();
+                    (pinned, snaps, last)
                 }));
             }
 
@@ -357,12 +457,14 @@ pub fn run_pipeline(
             // join every worker before leaving the scope (a scope exit with
             // an unjoined panicked thread would re-panic on the master)
             let mut out = Vec::with_capacity(handles.len());
+            let mut snaps_out = Vec::with_capacity(handles.len());
             let mut pinned_count = 0usize;
             let mut first_panic: Option<String> = None;
             for h in handles {
                 match h.join() {
-                    Ok((pinned, est)) => {
+                    Ok((pinned, snaps, est)) => {
                         pinned_count += pinned as usize;
+                        snaps_out.push(snaps);
                         out.push(est);
                     }
                     Err(p) => {
@@ -371,7 +473,7 @@ pub fn run_pipeline(
                 }
             }
             match first_panic {
-                None => Ok((out, pinned_count, stats)),
+                None => Ok((out, snaps_out, pinned_count, stats)),
                 Some(msg) => Err(crate::anyhow!("worker thread panicked: {msg}")),
             }
         },
@@ -383,9 +485,30 @@ pub fn run_pipeline(
         return Err(e.context("edge stream failed mid-pipeline"));
     }
 
+    // merge the snapshot barriers: every worker saw every edge, so the
+    // schedules must agree index-by-index; average each barrier exactly
+    // like the final estimate
+    let mut snapshots = Vec::new();
+    let mut iters: Vec<_> = worker_snaps.into_iter().map(|v| v.into_iter()).collect();
+    loop {
+        let points: Vec<(u64, WorkerEstimate)> =
+            iters.iter_mut().filter_map(|it| it.next()).collect();
+        if points.is_empty() {
+            break;
+        }
+        let t = points[0].0;
+        crate::ensure!(
+            points.len() == per_worker.len() && points.iter().all(|p| p.0 == t),
+            "snapshot barriers diverged across workers (t = {t})"
+        );
+        let ests: Vec<WorkerEstimate> = points.into_iter().map(|p| p.1).collect();
+        snapshots.push(SnapshotPoint { t, averaged: average(&ests) });
+    }
+
     Ok(PipelineResult {
         averaged: average(&per_worker),
         per_worker,
+        snapshots,
         edges,
         elapsed: start.elapsed(),
         placement: PlacementReport {
@@ -626,6 +749,7 @@ mod tests {
                 seed: 3,
                 placement,
                 topology,
+                ..Default::default()
             };
             let mut s = VecStream::shuffled(g.edges.clone(), 1);
             run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).unwrap().placement
@@ -669,6 +793,7 @@ mod tests {
             seed: 21,
             placement,
             topology: None,
+            ..Default::default()
         };
         let mut s = VecStream::shuffled(g.edges.clone(), 9);
         let a = run_pipeline(&mut s, DescriptorKind::Gabe, &mk(PlacementPolicy::None)).unwrap();
@@ -683,6 +808,86 @@ mod tests {
         if allowed.contains(&0) {
             assert!(b.placement.pinned_workers >= 1, "{:?}", b.placement);
         }
+    }
+
+    // ---- ISSUE 5: windowed pipeline + snapshot barriers ----
+
+    /// A windowed pipeline with the default (full-history, no-snapshot)
+    /// window config is bit-identical to the pre-window pipeline, and a
+    /// sliding run with `w ≥ |E|` matches it too.
+    #[test]
+    fn windowed_pipeline_none_and_huge_sliding_match_default() {
+        use crate::sampling::{WindowConfig, WindowPolicy};
+        let g = gen::powerlaw_cluster_graph(200, 3, 0.5, &mut Pcg64::seed_from_u64(81));
+        let base_cfg = CoordinatorConfig {
+            workers: 3,
+            budget: g.m() / 3,
+            chunk_size: 29,
+            queue_depth: 2,
+            seed: 23,
+            ..Default::default()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 8);
+        let base = run_pipeline(&mut s, DescriptorKind::Gabe, &base_cfg).unwrap();
+        assert!(base.snapshots.is_empty(), "no stride → no snapshots");
+        for policy in [WindowPolicy::None, WindowPolicy::Sliding { w: g.m() * 2 }] {
+            let cfg = CoordinatorConfig {
+                window: WindowConfig::new(policy),
+                ..base_cfg.clone()
+            };
+            let mut s = VecStream::shuffled(g.edges.clone(), 8);
+            let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).unwrap();
+            assert!(
+                estimates_bit_identical(&r.averaged, &base.averaged),
+                "{policy:?} diverged from the default pipeline"
+            );
+            for (pw, bw) in r.per_worker.iter().zip(&base.per_worker) {
+                assert!(estimates_bit_identical(pw, bw));
+            }
+        }
+    }
+
+    /// Snapshot barriers: every worker snapshots at the same arrivals,
+    /// the master merges them, and each barrier's average is well-formed.
+    #[test]
+    fn windowed_pipeline_merges_snapshot_barriers() {
+        use crate::sampling::{WindowConfig, WindowPolicy};
+        let g = gen::ba_graph(600, 2, &mut Pcg64::seed_from_u64(82));
+        let m = g.m();
+        let w = m / 4;
+        let cfg = CoordinatorConfig {
+            workers: 3,
+            budget: m / 6,
+            chunk_size: 64,
+            queue_depth: 2,
+            seed: 31,
+            window: WindowConfig::new(WindowPolicy::Sliding { w }).with_stride(m / 5),
+            ..Default::default()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 12);
+        let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).unwrap();
+        assert_eq!(r.snapshots.len(), m / (m / 5));
+        for (k, point) in r.snapshots.iter().enumerate() {
+            assert_eq!(point.t, (m / 5) as u64 * (k as u64 + 1));
+            let WorkerEstimate::Gabe(e) = &point.averaged else { panic!() };
+            assert!(e.counts.iter().all(|c| c.is_finite()));
+            assert_eq!(e.ne, point.t.min(w as u64));
+        }
+        // santa windowed pipeline also snapshots (pass 2)
+        let cfg = CoordinatorConfig {
+            window: WindowConfig::new(WindowPolicy::Sliding { w }).with_stride(m / 5),
+            ..cfg
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 12);
+        let r = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg)
+            .unwrap();
+        assert_eq!(r.snapshots.len(), m / (m / 5));
+
+        // exact-wedges × window is a config-level error
+        let mut s = VecStream::shuffled(g.edges.clone(), 12);
+        let err = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: true }, &cfg)
+            .expect_err("exact_wedges + window must be rejected");
+        assert!(err.to_string().contains("exact_wedges"), "{err}");
     }
 
     // ---- ISSUE 4 satellite: stream failures surface as errors ----

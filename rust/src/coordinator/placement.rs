@@ -61,7 +61,9 @@ impl std::str::FromStr for PlacementPolicy {
 /// (`None` = leave unpinned).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct WorkerSlot {
+    /// NUMA node the worker belongs to (index into the topology).
     pub node: usize,
+    /// CPU to pin to, when the policy pins (`None` = leave unpinned).
     pub cpu: Option<usize>,
 }
 

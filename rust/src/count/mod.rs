@@ -11,6 +11,12 @@
 //!   patterns from `|V|`, `|E|` and the degree sequence,
 //! * [`brute`] — brute-force induced-subgraph census for test oracles.
 
+// Rustdoc sweep status (ISSUE 5): the crate-level
+// `#![warn(missing_docs)]` is gated off here until this module gets
+// its own documentation pass; sampling/descriptors/coordinator/graph
+// are fully swept.
+#![allow(missing_docs)]
+
 pub mod brute;
 pub mod edge_centric;
 pub mod formulas;

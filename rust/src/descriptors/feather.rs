@@ -68,6 +68,7 @@ impl Feather {
             .collect()
     }
 
+    /// Pooled characteristic-function descriptor of `g`.
     pub fn descriptor(&self, g: &Graph) -> Vec<f64> {
         let csr = Csr::from_graph(g);
         let n = csr.n.max(1);

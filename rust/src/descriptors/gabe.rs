@@ -16,7 +16,18 @@ use crate::count::{N_GRAPHLETS, ORDERS};
 use crate::graph::adjacency::SampleGraph;
 use crate::graph::stream::EdgeStream;
 use crate::graph::Graph;
-use crate::sampling::{Reservoir, ReservoirAction, Weights};
+use crate::sampling::window::{EdgeRing, WindowAcc};
+use crate::sampling::{
+    ReservoirAction, Series, Snapshot, Weights, WindowConfig, WindowPolicy, WindowedReservoir,
+};
+
+// WindowAcc counter indices (one per reservoir-estimated pattern).
+const A_TRI: usize = 0;
+const A_PATH4: usize = 1;
+const A_C4: usize = 2;
+const A_PAW: usize = 3;
+const A_DIAMOND: usize = 4;
+const A_K4: usize = 5;
 
 /// Raw output of one GABE streaming run.
 #[derive(Debug, Clone)]
@@ -25,7 +36,8 @@ pub struct GabeEstimate {
     pub counts: [f64; N_GRAPHLETS],
     /// Order |V| inferred from the stream (max label + 1).
     pub nv: u64,
-    /// Size |E| (stream length).
+    /// `|E|` of the graph the estimate describes (window length under a
+    /// sliding window, all-time stream length otherwise).
     pub ne: u64,
     /// Exact degree sequence.
     pub degrees: Vec<u32>,
@@ -53,19 +65,49 @@ impl GabeEstimate {
 
 /// Streaming GABE estimator (Algorithm 1 instantiated for the six
 /// connected patterns).
+///
+/// ```
+/// use stream_descriptors::descriptors::gabe::GabeEstimator;
+/// use stream_descriptors::graph::stream::VecStream;
+/// use stream_descriptors::graph::Graph;
+///
+/// // A triangle hanging off a path: 4 vertices, 4 edges.
+/// let g = Graph::from_pairs([(0, 1), (1, 2), (0, 2), (2, 3)]);
+/// let mut stream = VecStream::shuffled(g.edges.clone(), 7);
+///
+/// // Budget ≥ |E| degenerates to the exact algorithm (all weights 1).
+/// let est = GabeEstimator::new(g.m()).run(&mut stream);
+/// assert_eq!(est.ne, 4);
+/// let tri = est.counts[stream_descriptors::count::idx::TRIANGLE];
+/// assert!((tri - 1.0).abs() < 1e-9);
+///
+/// // The 17-dim φ descriptor is finite and normalized.
+/// assert!(est.descriptor().iter().all(|x| x.is_finite()));
+/// ```
 #[derive(Debug, Clone)]
 pub struct GabeEstimator {
     budget: usize,
     seed: u64,
+    window: WindowConfig,
 }
 
 impl GabeEstimator {
+    /// Estimator with the given reservoir budget (paper's `b`).
     pub fn new(budget: usize) -> Self {
-        GabeEstimator { budget, seed: 0x9abe }
+        GabeEstimator { budget, seed: 0x9abe, window: WindowConfig::default() }
     }
 
+    /// Override the reservoir RNG seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Set the window policy and snapshot cadence (ISSUE 5).  The default
+    /// [`WindowPolicy::None`] reproduces the paper's full-history run
+    /// bit-for-bit.
+    pub fn with_window(mut self, window: WindowConfig) -> Self {
+        self.window = window;
         self
     }
 
@@ -85,14 +127,36 @@ impl GabeEstimator {
     /// Like [`GabeEstimator::run`], surfacing stream I/O failures as
     /// errors instead of panicking.
     pub fn try_run(&self, stream: &mut impl EdgeStream) -> crate::Result<GabeEstimate> {
-        let mut state = GabeState::new(self.budget, self.seed);
+        Ok(self.try_run_series(stream)?.last)
+    }
+
+    /// Run and return the full descriptor time series: one snapshot per
+    /// `stride` arrivals (see [`WindowConfig`]) plus the final estimate.
+    ///
+    /// # Panics
+    ///
+    /// Panics on stream I/O failure; use
+    /// [`try_run_series`](GabeEstimator::try_run_series) to handle it.
+    pub fn run_series(&self, stream: &mut impl EdgeStream) -> Series<GabeEstimate> {
+        self.try_run_series(stream).expect("gabe: edge stream failed")
+    }
+
+    /// Like [`run_series`](GabeEstimator::run_series), surfacing stream
+    /// I/O failures as errors instead of panicking.
+    pub fn try_run_series(
+        &self,
+        stream: &mut impl EdgeStream,
+    ) -> crate::Result<Series<GabeEstimate>> {
+        self.window.validate()?;
+        let mut state = GabeState::with_window(self.budget, self.seed, self.window);
         while let Some(e) = stream.next_edge() {
             state.push(e);
         }
         if let Some(e) = stream.take_error() {
             return Err(e.context("gabe stream truncated"));
         }
-        Ok(state.finish())
+        let snapshots = state.take_snapshots();
+        Ok(Series { snapshots, last: state.finish() })
     }
 }
 
@@ -101,55 +165,98 @@ impl GabeEstimator {
 #[derive(Debug)]
 pub struct GabeState {
     budget: usize,
-    reservoir: Reservoir,
+    reservoir: WindowedReservoir,
     sample: SampleGraph,
+    /// Exact degrees — windowed (last `w` edges) in sliding mode,
+    /// all-time otherwise.
     degrees: Vec<u32>,
+    /// Sliding mode's degree clock: the last `w` stream edges (`None`
+    /// for full-history and decay runs).
+    ring: Option<EdgeRing>,
     hits: EdgeHits,
     scratch: Scratch,
-    c: ConnectedCounts,
+    acc: WindowAcc<6>,
+    expired: Vec<crate::graph::Edge>,
+    window: WindowConfig,
+    snapshots: Vec<Snapshot<GabeEstimate>>,
     ne: u64,
 }
 
 impl GabeState {
+    /// Full-history state (the paper's setting).
     pub fn new(budget: usize, seed: u64) -> Self {
+        Self::with_window(budget, seed, WindowConfig::default())
+    }
+
+    /// State under a window policy + snapshot cadence (ISSUE 5).  The
+    /// policy must have been validated (see [`WindowConfig::validate`]).
+    pub fn with_window(budget: usize, seed: u64, window: WindowConfig) -> Self {
         let b = budget.max(1);
+        let ring = match window.policy {
+            WindowPolicy::Sliding { w } => Some(EdgeRing::new(w)),
+            _ => None,
+        };
         GabeState {
             budget: b,
-            reservoir: Reservoir::new(b, Pcg64::seed_from_u64(seed)),
+            reservoir: WindowedReservoir::new(window.policy, b, Pcg64::seed_from_u64(seed)),
             sample: SampleGraph::new(),
             degrees: Vec::new(),
+            ring,
             hits: EdgeHits::default(),
             scratch: Scratch::default(),
-            c: ConnectedCounts::default(),
+            acc: WindowAcc::new(window.policy),
+            expired: Vec::new(),
+            window,
+            snapshots: Vec::new(),
             ne: 0,
         }
     }
 
-    /// Process one arriving edge (Algorithm 1 body).
+    /// Process one arriving edge (Algorithm 1 body, windowed).
     pub fn push(&mut self, e: crate::graph::Edge) {
         self.ne += 1;
+        self.acc.tick();
+        // phase 1: advance the window clock; aged-out sampled edges leave
+        // the sample graph before any pattern is enumerated
+        let t_eff = self.reservoir.arrive(&mut self.expired);
+        for old in self.expired.drain(..) {
+            self.sample.remove(old.u, old.v);
+        }
+
         let (u, v) = (e.u, e.v);
         if self.degrees.len() <= v as usize {
             self.degrees.resize(v as usize + 1, 0);
         }
         self.degrees[u as usize] += 1;
         self.degrees[v as usize] += 1;
+        if let Some(ring) = &mut self.ring {
+            if let Some(old) = ring.push(e) {
+                self.degrees[old.u as usize] -= 1;
+                self.degrees[old.v as usize] -= 1;
+            }
+        }
 
-        let t = self.reservoir.t() + 1; // arrival index of e_t
         if !self.sample.insert(u, v) {
-            // duplicate stream edge (preprocessing should prevent this):
-            // count nothing, keep reservoir time consistent.
-            self.reservoir.offer(e);
+            // duplicate stream edge: count nothing.  Full-history mode
+            // still offers it (the paper path's behavior, kept
+            // bit-compatible); windowed reservoirs skip the offer — a
+            // second sampled copy of an edge already in the sample would
+            // desync eviction from the sample graph (churned/windowed
+            // streams legitimately re-emit edges).
+            if !self.window.policy.is_windowed() {
+                self.reservoir.offer(e);
+            }
+            self.maybe_snapshot();
             return;
         }
-        let w = Weights::at(t, self.budget);
+        let w = Weights::at(t_eff, self.budget);
         enumerate_edge(&self.sample, u, v, &mut self.hits, &mut self.scratch);
-        self.c.triangle += self.hits.triangles() as f64 * w.w3;
-        self.c.path4 += self.hits.path4() as f64 * w.w3;
-        self.c.cycle4 += self.hits.c4 as f64 * w.w4;
-        self.c.paw += self.hits.paw() as f64 * w.w4;
-        self.c.diamond += self.hits.diamond() as f64 * w.w5;
-        self.c.k4 += self.hits.k4 as f64 * w.w6;
+        self.acc.credit(A_TRI, self.hits.triangles() as f64 * w.w3);
+        self.acc.credit(A_PATH4, self.hits.path4() as f64 * w.w3);
+        self.acc.credit(A_C4, self.hits.c4 as f64 * w.w4);
+        self.acc.credit(A_PAW, self.hits.paw() as f64 * w.w4);
+        self.acc.credit(A_DIAMOND, self.hits.diamond() as f64 * w.w5);
+        self.acc.credit(A_K4, self.hits.k4 as f64 * w.w6);
 
         match self.reservoir.offer(e) {
             ReservoirAction::Stored => {}
@@ -160,19 +267,55 @@ impl GabeState {
                 self.sample.remove(u, v);
             }
         }
+        self.maybe_snapshot();
+    }
+
+    /// Build the estimate from the current counters, taking ownership of
+    /// `degrees` (the snapshot path clones; `finish` moves).
+    fn estimate_with(&self, degrees: Vec<u32>) -> GabeEstimate {
+        let nv = degrees.len() as u64;
+        let vals = self.acc.values();
+        let c = ConnectedCounts {
+            triangle: vals[A_TRI],
+            path4: vals[A_PATH4],
+            cycle4: vals[A_C4],
+            paw: vals[A_PAW],
+            diamond: vals[A_DIAMOND],
+            k4: vals[A_K4],
+        };
+        let ne = self.window.policy.described_len(self.ne);
+        let counts = assemble_counts(nv as f64, ne as f64, &degrees, &c);
+        GabeEstimate { counts, nv, ne, degrees }
+    }
+
+    /// The estimate as of the current arrival (snapshot path).
+    fn estimate_now(&self) -> GabeEstimate {
+        self.estimate_with(self.degrees.clone())
+    }
+
+    fn maybe_snapshot(&mut self) {
+        if self.window.snapshot_due(self.ne) {
+            let estimate = self.estimate_now();
+            self.snapshots.push(Snapshot { t: self.ne, estimate });
+        }
+    }
+
+    /// Drain the snapshots recorded so far (coordinator barrier merge).
+    pub fn take_snapshots(&mut self) -> Vec<Snapshot<GabeEstimate>> {
+        std::mem::take(&mut self.snapshots)
     }
 
     /// Finalize into count estimates.
-    pub fn finish(self) -> GabeEstimate {
-        let nv = self.degrees.len() as u64;
-        let counts = assemble_counts(nv as f64, self.ne as f64, &self.degrees, &self.c);
-        GabeEstimate { counts, nv, ne: self.ne, degrees: self.degrees }
+    pub fn finish(mut self) -> GabeEstimate {
+        let degrees = std::mem::take(&mut self.degrees);
+        self.estimate_with(degrees)
     }
 }
 
 /// [`GraphDescriptor`] adapter: shuffle → stream → finalize.
 #[derive(Debug, Clone)]
 pub struct Gabe {
+    /// Reservoir budget to resolve against each graph's `|E|`.
     pub budget: Budget,
 }
 
@@ -296,6 +439,135 @@ mod tests {
         // φ2 entries: induced edge share ≈ density ∈ (0,1)
         assert!(d[idx::EDGE] > 0.0 && d[idx::EDGE] < 1.0);
         assert!((d[idx::E2] + d[idx::EDGE] - 1.0).abs() < 1e-9);
+    }
+
+    /// ISSUE 5 differential: `WindowPolicy::None` and `Sliding{w ≥ |E|}`
+    /// must both reproduce the full-history estimator bit-for-bit — same
+    /// RNG draws, same actions, same float operation order.
+    #[test]
+    fn window_none_and_huge_sliding_are_bit_identical_to_full_history() {
+        let mut rng = Pcg64::seed_from_u64(31);
+        let g = gen::powerlaw_cluster_graph(120, 3, 0.5, &mut rng);
+        let b = g.m() / 3; // budgeted: the reservoir genuinely randomizes
+        let mut s = VecStream::shuffled(g.edges.clone(), 2);
+        let base = GabeEstimator::new(b).with_seed(77).run(&mut s);
+        for policy in [
+            WindowPolicy::None,
+            WindowPolicy::Sliding { w: g.m() },
+            WindowPolicy::Sliding { w: g.m() * 10 },
+        ] {
+            let mut s = VecStream::shuffled(g.edges.clone(), 2);
+            let est = GabeEstimator::new(b)
+                .with_seed(77)
+                .with_window(WindowConfig::new(policy))
+                .run(&mut s);
+            assert_eq!(est.counts, base.counts, "{policy:?} diverged");
+            assert_eq!(est.degrees, base.degrees);
+            assert_eq!((est.nv, est.ne), (base.nv, base.ne));
+        }
+    }
+
+    /// ISSUE 5 eviction census: under a sliding window the sample graph
+    /// and reservoir never hold an edge older than `w`, and both stay in
+    /// lock-step.
+    #[test]
+    fn sliding_sample_never_holds_an_edge_older_than_w() {
+        use crate::sampling::WindowedReservoir;
+        let mut rng = Pcg64::seed_from_u64(32);
+        let g = gen::ba_graph(400, 3, &mut rng);
+        let w = 150usize;
+        let policy = WindowPolicy::Sliding { w };
+        let mut state = GabeState::with_window(60, 5, WindowConfig::new(policy));
+        let stream = VecStream::shuffled(g.edges.clone(), 4);
+        for (i, &e) in stream.edges().iter().enumerate() {
+            state.push(e);
+            let t = i + 1;
+            let WindowedReservoir::Sliding(r) = &state.reservoir else { panic!() };
+            assert_eq!(r.len(), state.sample.m(), "sample/reservoir out of lock-step");
+            for (edge, arrival) in r.entries() {
+                assert!(arrival + w > t, "edge from t={arrival} alive at t={t}");
+                assert!(state.sample.has_edge(edge.u, edge.v));
+            }
+        }
+        // windowed degrees cover exactly the last w edges
+        let tail = &stream.edges()[g.m() - w..];
+        let mut want = vec![0u32; state.degrees.len()];
+        for e in tail {
+            want[e.u as usize] += 1;
+            want[e.v as usize] += 1;
+        }
+        assert_eq!(state.degrees, want);
+        let est = state.finish();
+        assert_eq!(est.ne, w as u64);
+    }
+
+    /// ISSUE 5 regression (review finding): a stream that re-emits edges —
+    /// churned streams legitimately do — must keep the sliding reservoir
+    /// and the sample graph in lock-step.  Before the fix, a duplicate of
+    /// a sampled edge stored a second reservoir copy whose later
+    /// expiry/eviction removed the edge from the sample while the other
+    /// copy stayed sampled.
+    #[test]
+    fn sliding_survives_duplicate_stream_edges() {
+        use crate::sampling::WindowedReservoir;
+        let mut rng = Pcg64::seed_from_u64(35);
+        let g = gen::powerlaw_cluster_graph(80, 3, 0.5, &mut rng);
+        // the same edge set twice = every edge re-arrives once
+        let stream = gen::churned_stream(&[&g, &g], 2);
+        let w = g.m() / 2;
+        let policy = WindowConfig::new(WindowPolicy::Sliding { w });
+        let mut state = GabeState::with_window(g.m() / 4, 11, policy);
+        for (i, &e) in stream.iter().enumerate() {
+            state.push(e);
+            let WindowedReservoir::Sliding(r) = &state.reservoir else { panic!() };
+            assert_eq!(r.len(), state.sample.m(), "desync after edge {i}");
+            for (edge, arrival) in r.entries() {
+                assert!(arrival + w > i + 1);
+                assert!(state.sample.has_edge(edge.u, edge.v));
+            }
+        }
+        let est = state.finish();
+        assert!(est.counts.iter().all(|c| c.is_finite()));
+    }
+
+    /// Snapshots form a time series at the configured stride, and under a
+    /// sliding window each one describes the window, not the prefix.
+    #[test]
+    fn snapshot_series_has_stride_cadence() {
+        let mut rng = Pcg64::seed_from_u64(33);
+        let g = gen::er_graph(80, 400, &mut rng);
+        let window = WindowConfig::new(WindowPolicy::Sliding { w: 100 }).with_stride(50);
+        let mut s = VecStream::shuffled(g.edges.clone(), 1);
+        let series = GabeEstimator::new(64).with_window(window).run_series(&mut s);
+        assert_eq!(series.snapshots.len(), g.m() / 50);
+        for (k, snap) in series.snapshots.iter().enumerate() {
+            assert_eq!(snap.t, 50 * (k as u64 + 1));
+            assert_eq!(snap.estimate.ne, snap.t.min(100));
+            assert!(snap.estimate.counts.iter().all(|c| c.is_finite()));
+        }
+        assert_eq!(series.last.ne, 100);
+    }
+
+    /// Decay mode runs, stays finite, and its connected-pattern counts
+    /// track the decayed credit mass rather than the all-time totals.
+    #[test]
+    fn decay_mode_estimates_are_finite_and_bounded() {
+        let mut rng = Pcg64::seed_from_u64(34);
+        let g = gen::powerlaw_cluster_graph(150, 4, 0.5, &mut rng);
+        let mut s = VecStream::shuffled(g.edges.clone(), 9);
+        let full = GabeEstimator::new(g.m()).with_seed(3).run(&mut s);
+        let mut s = VecStream::shuffled(g.edges.clone(), 9);
+        let window = WindowConfig::new(WindowPolicy::Decay { half_life: g.m() as f64 / 8.0 });
+        let decayed = GabeEstimator::new(g.m()).with_seed(3).with_window(window).run(&mut s);
+        assert!(decayed.counts.iter().all(|c| c.is_finite()));
+        // decayed credit mass is strictly below the all-time total
+        assert!(
+            decayed.counts[idx::TRIANGLE] < full.counts[idx::TRIANGLE],
+            "{} !< {}",
+            decayed.counts[idx::TRIANGLE],
+            full.counts[idx::TRIANGLE]
+        );
+        assert!(decayed.counts[idx::TRIANGLE] > 0.0);
     }
 
     #[test]

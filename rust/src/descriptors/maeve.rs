@@ -13,12 +13,18 @@ use crate::graph::adjacency::SampleGraph;
 use crate::graph::stream::EdgeStream;
 use crate::graph::Graph;
 use crate::linalg::moments::maeve_layout;
-use crate::sampling::{Reservoir, ReservoirAction, Weights};
+use crate::sampling::window::{EdgeRing, VertexCreditLog};
+use crate::sampling::{
+    ReservoirAction, Series, Snapshot, Weights, WindowConfig, WindowPolicy, WindowedReservoir,
+};
 
 /// Raw output of a MAEVE streaming run.
 #[derive(Debug, Clone)]
 pub struct MaeveEstimate {
+    /// Order `|V|` inferred from the stream (max label + 1).
     pub nv: u64,
+    /// `|E|` of the graph the estimate describes (window length under a
+    /// sliding window, all-time stream length otherwise).
     pub ne: u64,
     /// Exact degrees.
     pub degrees: Vec<u32>,
@@ -63,15 +69,26 @@ impl MaeveEstimate {
 pub struct MaeveEstimator {
     budget: usize,
     seed: u64,
+    window: WindowConfig,
 }
 
 impl MaeveEstimator {
+    /// Estimator with the given reservoir budget (paper's `b`).
     pub fn new(budget: usize) -> Self {
-        MaeveEstimator { budget, seed: 0x3a3e }
+        MaeveEstimator { budget, seed: 0x3a3e, window: WindowConfig::default() }
     }
 
+    /// Override the reservoir RNG seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
+        self
+    }
+
+    /// Set the window policy and snapshot cadence (ISSUE 5).  The default
+    /// [`WindowPolicy::None`] reproduces the paper's full-history run
+    /// bit-for-bit.
+    pub fn with_window(mut self, window: WindowConfig) -> Self {
+        self.window = window;
         self
     }
 
@@ -89,14 +106,71 @@ impl MaeveEstimator {
     /// Like [`MaeveEstimator::run`], surfacing stream I/O failures as
     /// errors instead of panicking.
     pub fn try_run(&self, stream: &mut impl EdgeStream) -> crate::Result<MaeveEstimate> {
-        let mut state = MaeveState::new(self.budget, self.seed);
+        Ok(self.try_run_series(stream)?.last)
+    }
+
+    /// Run and return the full descriptor time series (one snapshot per
+    /// `stride` arrivals plus the final estimate).
+    ///
+    /// # Panics
+    ///
+    /// Panics on stream I/O failure; use
+    /// [`try_run_series`](MaeveEstimator::try_run_series) to handle it.
+    pub fn run_series(&self, stream: &mut impl EdgeStream) -> Series<MaeveEstimate> {
+        self.try_run_series(stream).expect("maeve: edge stream failed")
+    }
+
+    /// Like [`run_series`](MaeveEstimator::run_series), surfacing stream
+    /// I/O failures as errors instead of panicking.
+    pub fn try_run_series(
+        &self,
+        stream: &mut impl EdgeStream,
+    ) -> crate::Result<Series<MaeveEstimate>> {
+        self.window.validate()?;
+        let mut state = MaeveState::with_window(self.budget, self.seed, self.window);
         while let Some(e) = stream.next_edge() {
             state.push(e);
         }
         if let Some(e) = stream.take_error() {
             return Err(e.context("maeve stream truncated"));
         }
-        Ok(state.finish())
+        let snapshots = state.take_snapshots();
+        Ok(Series { snapshots, last: state.finish() })
+    }
+}
+
+/// Apply one per-vertex credit, routing it through the active lifetime
+/// model: straight `+=` for full history (bit-identical to the pre-window
+/// path), lazily-decayed accumulation under [`WindowPolicy::Decay`]
+/// (`rho < 1`), and logged into the expiry buckets under
+/// [`WindowPolicy::Sliding`].  A free function (not a method) so the push
+/// loops can hold disjoint borrows of the sample graph alongside it.
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn credit_vertex(
+    tri: &mut [f64],
+    path: &mut [f64],
+    log: &mut Option<VertexCreditLog>,
+    rho: f64,
+    last: &mut [u64],
+    t: u64,
+    v: usize,
+    dtri: f64,
+    dpath: f64,
+) {
+    if rho < 1.0 {
+        let dt = t - last[v];
+        if dt > 0 {
+            let f = rho.powi(dt.min(i32::MAX as u64) as i32);
+            tri[v] *= f;
+            path[v] *= f;
+            last[v] = t;
+        }
+    }
+    tri[v] += dtri;
+    path[v] += dpath;
+    if let Some(log) = log {
+        log.credit(v as u32, dtri, dpath);
     }
 }
 
@@ -104,70 +178,141 @@ impl MaeveEstimator {
 #[derive(Debug)]
 pub struct MaeveState {
     budget: usize,
-    reservoir: Reservoir,
+    reservoir: WindowedReservoir,
     sample: SampleGraph,
+    /// Exact degrees — windowed in sliding mode, all-time otherwise.
     degrees: Vec<u32>,
+    /// Sliding mode's degree clock (last `w` stream edges).
+    ring: Option<EdgeRing>,
     tri: Vec<f64>,
     path: Vec<f64>,
     common: Vec<u32>,
+    /// Sliding mode: per-vertex credit expiry buckets.
+    credit_log: Option<VertexCreditLog>,
+    expired_credits: Vec<(u32, f64, f64)>,
+    /// Decay mode: per-arrival retention `2^(-1/h)` (1.0 otherwise) and
+    /// the per-vertex last-settled arrival for lazy decay.
+    rho: f64,
+    decay_last: Vec<u64>,
+    expired: Vec<crate::graph::Edge>,
+    window: WindowConfig,
+    snapshots: Vec<Snapshot<MaeveEstimate>>,
     ne: u64,
 }
 
 impl MaeveState {
+    /// Full-history state (the paper's setting).
     pub fn new(budget: usize, seed: u64) -> Self {
+        Self::with_window(budget, seed, WindowConfig::default())
+    }
+
+    /// State under a window policy + snapshot cadence (ISSUE 5).
+    pub fn with_window(budget: usize, seed: u64, window: WindowConfig) -> Self {
         let b = budget.max(1);
+        let (ring, credit_log) = match window.policy {
+            WindowPolicy::Sliding { w } => {
+                (Some(EdgeRing::new(w)), Some(VertexCreditLog::new(w)))
+            }
+            _ => (None, None),
+        };
         MaeveState {
             budget: b,
-            reservoir: Reservoir::new(b, Pcg64::seed_from_u64(seed)),
+            reservoir: WindowedReservoir::new(window.policy, b, Pcg64::seed_from_u64(seed)),
             sample: SampleGraph::new(),
             degrees: Vec::new(),
+            ring,
             tri: Vec::new(),
             path: Vec::new(),
             common: Vec::new(),
+            credit_log,
+            expired_credits: Vec::new(),
+            rho: window.policy.decay_factor(),
+            decay_last: Vec::new(),
+            expired: Vec::new(),
+            window,
+            snapshots: Vec::new(),
             ne: 0,
         }
     }
 
+    /// Process one arriving edge.
     pub fn push(&mut self, e: crate::graph::Edge) {
         self.ne += 1;
+        // sliding: retire per-vertex credits that fell out of the window
+        if let Some(log) = &mut self.credit_log {
+            self.expired_credits.clear();
+            log.tick(&mut self.expired_credits);
+            for &(v, dtri, dpath) in &self.expired_credits {
+                self.tri[v as usize] -= dtri;
+                self.path[v as usize] -= dpath;
+            }
+        }
+        // phase 1: window clock + sample eviction
+        let t_eff = self.reservoir.arrive(&mut self.expired);
+        for old in self.expired.drain(..) {
+            self.sample.remove(old.u, old.v);
+        }
+
         let (u, v) = (e.u, e.v);
         let need = v as usize + 1;
         if self.degrees.len() < need {
             self.degrees.resize(need, 0);
             self.tri.resize(need, 0.0);
             self.path.resize(need, 0.0);
+            if self.rho < 1.0 {
+                self.decay_last.resize(need, self.ne);
+            }
         }
         self.degrees[u as usize] += 1;
         self.degrees[v as usize] += 1;
+        if let Some(ring) = &mut self.ring {
+            if let Some(old) = ring.push(e) {
+                self.degrees[old.u as usize] -= 1;
+                self.degrees[old.v as usize] -= 1;
+            }
+        }
 
-        let t = self.reservoir.t() + 1;
         if !self.sample.insert(u, v) {
-            self.reservoir.offer(e);
+            // duplicate stream edge: full-history mode offers it (paper
+            // path, bit-compatible); windowed reservoirs skip it so the
+            // sample and reservoir stay in lock-step (see gabe.rs).
+            if !self.window.policy.is_windowed() {
+                self.reservoir.offer(e);
+            }
+            self.maybe_snapshot();
             return;
         }
-        let w = Weights::at(t, self.budget);
+        let w = Weights::at(t_eff, self.budget);
+        let (tri, path, log, last, rho, t) = (
+            &mut self.tri,
+            &mut self.path,
+            &mut self.credit_log,
+            &mut self.decay_last,
+            self.rho,
+            self.ne,
+        );
 
         // triangles {u, v, w}: credit all three corners
         self.sample.common_neighbors_into(u, v, &mut self.common);
         for &wv in &self.common {
-            self.tri[u as usize] += w.w3;
-            self.tri[v as usize] += w.w3;
-            self.tri[wv as usize] += w.w3;
+            credit_vertex(tri, path, log, rho, last, t, u as usize, w.w3, 0.0);
+            credit_vertex(tri, path, log, rho, last, t, v as usize, w.w3, 0.0);
+            credit_vertex(tri, path, log, rho, last, t, wv as usize, w.w3, 0.0);
         }
         // 3-paths w-u-v (endpoints w, v) and u-v-x (endpoints u, x)
         for wv in self.sample.neighbors(u) {
             if wv == v {
                 continue;
             }
-            self.path[wv as usize] += w.w2;
-            self.path[v as usize] += w.w2;
+            credit_vertex(tri, path, log, rho, last, t, wv as usize, 0.0, w.w2);
+            credit_vertex(tri, path, log, rho, last, t, v as usize, 0.0, w.w2);
         }
         for x in self.sample.neighbors(v) {
             if x == u {
                 continue;
             }
-            self.path[x as usize] += w.w2;
-            self.path[u as usize] += w.w2;
+            credit_vertex(tri, path, log, rho, last, t, x as usize, 0.0, w.w2);
+            credit_vertex(tri, path, log, rho, last, t, u as usize, 0.0, w.w2);
         }
 
         match self.reservoir.offer(e) {
@@ -179,12 +324,64 @@ impl MaeveState {
                 self.sample.remove(u, v);
             }
         }
+        self.maybe_snapshot();
     }
 
-    pub fn finish(self) -> MaeveEstimate {
+    /// Settle all lazy decay up to the current arrival (decay mode only).
+    fn settle_decay(tri: &mut [f64], path: &mut [f64], last: &mut [u64], rho: f64, t: u64) {
+        if rho >= 1.0 {
+            return;
+        }
+        for v in 0..tri.len() {
+            let dt = t - last[v];
+            if dt > 0 {
+                let f = rho.powi(dt.min(i32::MAX as u64) as i32);
+                tri[v] *= f;
+                path[v] *= f;
+                last[v] = t;
+            }
+        }
+    }
+
+    /// The estimate as of the current arrival (snapshot path: clones).
+    fn estimate_now(&self) -> MaeveEstimate {
+        let mut tri = self.tri.clone();
+        let mut path = self.path.clone();
+        let mut last = self.decay_last.clone();
+        Self::settle_decay(&mut tri, &mut path, &mut last, self.rho, self.ne);
         MaeveEstimate {
             nv: self.degrees.len() as u64,
-            ne: self.ne,
+            ne: self.window.policy.described_len(self.ne),
+            degrees: self.degrees.clone(),
+            triangles: tri,
+            paths: path,
+        }
+    }
+
+    fn maybe_snapshot(&mut self) {
+        if self.window.snapshot_due(self.ne) {
+            let estimate = self.estimate_now();
+            self.snapshots.push(Snapshot { t: self.ne, estimate });
+        }
+    }
+
+    /// Drain the snapshots recorded so far (coordinator barrier merge).
+    pub fn take_snapshots(&mut self) -> Vec<Snapshot<MaeveEstimate>> {
+        std::mem::take(&mut self.snapshots)
+    }
+
+    /// Finalize into per-vertex estimates.
+    pub fn finish(mut self) -> MaeveEstimate {
+        Self::settle_decay(
+            &mut self.tri,
+            &mut self.path,
+            &mut self.decay_last,
+            self.rho,
+            self.ne,
+        );
+        MaeveEstimate {
+            nv: self.degrees.len() as u64,
+            ne: self.window.policy.described_len(self.ne),
             degrees: self.degrees,
             triangles: self.tri,
             paths: self.path,
@@ -195,6 +392,7 @@ impl MaeveState {
 /// [`GraphDescriptor`] adapter.
 #[derive(Debug, Clone)]
 pub struct Maeve {
+    /// Reservoir budget to resolve against each graph's `|E|`.
     pub budget: Budget,
 }
 
@@ -309,6 +507,64 @@ mod tests {
             (total_mean - total_true).abs() / total_true < 0.06,
             "{total_mean} vs {total_true}"
         );
+    }
+
+    /// ISSUE 5 differential: `WindowPolicy::None` and `Sliding{w ≥ |E|}`
+    /// reproduce the full-history MAEVE run bit-for-bit.
+    #[test]
+    fn window_none_and_huge_sliding_are_bit_identical_to_full_history() {
+        let mut rng = Pcg64::seed_from_u64(41);
+        let g = gen::powerlaw_cluster_graph(80, 3, 0.5, &mut rng);
+        let b = g.m() / 3;
+        let mut s = VecStream::shuffled(g.edges.clone(), 5);
+        let base = MaeveEstimator::new(b).with_seed(13).run(&mut s);
+        for policy in [WindowPolicy::None, WindowPolicy::Sliding { w: g.m() + 1 }] {
+            let mut s = VecStream::shuffled(g.edges.clone(), 5);
+            let est = MaeveEstimator::new(b)
+                .with_seed(13)
+                .with_window(WindowConfig::new(policy))
+                .run(&mut s);
+            assert_eq!(est.triangles, base.triangles, "{policy:?} diverged");
+            assert_eq!(est.paths, base.paths);
+            assert_eq!(est.degrees, base.degrees);
+            assert_eq!((est.nv, est.ne), (base.nv, base.ne));
+        }
+    }
+
+    /// Windowed MAEVE: degrees track the last `w` edges exactly, and the
+    /// per-vertex credits shed their expired mass (total triangle credit
+    /// over a drifting stream stays bounded instead of growing).
+    #[test]
+    fn sliding_maeve_windows_degrees_and_credits() {
+        let mut rng = Pcg64::seed_from_u64(42);
+        let g = gen::powerlaw_cluster_graph(60, 4, 0.6, &mut rng);
+        let w = g.m() / 4;
+        let window = WindowConfig::new(WindowPolicy::Sliding { w }).with_stride(w / 2);
+        let mut s = VecStream::shuffled(g.edges.clone(), 3);
+        // exact-within-window regime: budget covers the whole window
+        let series = MaeveEstimator::new(g.m()).with_window(window).run_series(&mut s);
+        let stream = VecStream::shuffled(g.edges.clone(), 3);
+        let tail = &stream.edges()[g.m() - w..];
+        let mut want = vec![0u32; series.last.degrees.len()];
+        for e in tail {
+            want[e.u as usize] += 1;
+            want[e.v as usize] += 1;
+        }
+        assert_eq!(series.last.degrees, want);
+        assert_eq!(series.last.ne, w as u64);
+        // full-history credit keeps growing; windowed credit is bounded by
+        // the window's own (smaller) triangle mass
+        let mut s = VecStream::shuffled(g.edges.clone(), 3);
+        let full = MaeveEstimator::new(g.m()).run(&mut s);
+        let windowed_total: f64 = series.last.triangles.iter().sum();
+        let full_total: f64 = full.triangles.iter().sum();
+        assert!(
+            windowed_total < full_total,
+            "windowed {windowed_total} !< full {full_total}"
+        );
+        for snap in &series.snapshots {
+            assert!(snap.estimate.triangles.iter().all(|x| x.is_finite()));
+        }
     }
 
     #[test]

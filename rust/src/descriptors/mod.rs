@@ -48,8 +48,12 @@ impl Budget {
 /// streaming its shuffled edges (our estimators).  `seed` drives both the
 /// stream shuffle and the reservoir.
 pub trait GraphDescriptor: Send + Sync {
+    /// Display name, including the budget setting (e.g. `GABE@0.25`).
     fn name(&self) -> String;
+    /// Descriptor dimensionality.
     fn dim(&self) -> usize;
+    /// Compute the descriptor of `g`; `seed` drives the stream shuffle
+    /// and the reservoir.
     fn compute(&self, g: &Graph, seed: u64) -> Vec<f64>;
 }
 

@@ -58,6 +58,7 @@ impl NetLsd {
 /// [`GraphDescriptor`] adapter for one variant.
 #[derive(Debug, Clone)]
 pub struct NetLsdDescriptor {
+    /// The configured NetLSD engine.
     pub engine: NetLsd,
     /// 0..6 = HN, HE, HC, WN, WE, WC.
     pub variant: usize,

@@ -25,6 +25,7 @@ use crate::linalg::moments::moments;
 #[derive(Debug, Clone, Default)]
 pub struct NetSimile;
 
+/// 7 features × 5 aggregators.
 pub const NETSIMILE_DIM: usize = 35;
 
 fn median(xs: &mut [f64]) -> f64 {

@@ -20,12 +20,27 @@ use super::{Budget, GraphDescriptor};
 use crate::graph::adjacency::SampleGraph;
 use crate::graph::stream::EdgeStream;
 use crate::graph::{Graph, VertexId};
-use crate::sampling::{Reservoir, ReservoirAction, Weights};
+use crate::sampling::window::WindowAcc;
+use crate::sampling::{
+    ReservoirAction, Series, Snapshot, Weights, WindowConfig, WindowedReservoir,
+};
+
+// WindowAcc trace-term indices (Tables 9–11 rows the reservoir estimates).
+const A_TR2_EDGE: usize = 0;
+const A_TR3_EDGE: usize = 1;
+const A_TR4_EDGE: usize = 2;
+const A_TR3_TRI: usize = 3;
+const A_TR4_WEDGE: usize = 4;
+const A_TR4_TRI: usize = 5;
+const A_TR4_C4: usize = 6;
 
 /// Raw output of a SANTA streaming run.
 #[derive(Debug, Clone)]
 pub struct SantaEstimate {
+    /// Order `|V|` (from the pass-1 degree profile).
     pub nv: u64,
+    /// `|E|` of the graph the estimate describes (window length under a
+    /// sliding window, all-time stream length otherwise).
     pub ne: u64,
     /// Estimates of `[tr L⁰, tr L¹, tr L², tr L³, tr L⁴]`.
     pub traces: [f64; 5],
@@ -41,25 +56,58 @@ impl SantaEstimate {
 /// Configuration for the SANTA estimator.
 #[derive(Debug, Clone)]
 pub struct SantaConfig {
+    /// Reservoir budget (paper's `b`).
     pub budget: usize,
+    /// Reservoir RNG seed.
     pub seed: u64,
     /// Use the exact closed-form wedge term instead of sampling (ablation).
+    /// Incompatible with a windowed run: the closed form needs all-time
+    /// per-vertex accumulators that have no windowed counterpart.
     pub exact_wedges: bool,
+    /// Window policy + snapshot cadence (ISSUE 5).  Windows apply to the
+    /// pass-2 trace terms; the pass-1 degree profile stays full-stream
+    /// (DESIGN.md §8).
+    pub window: WindowConfig,
 }
 
 impl SantaConfig {
+    /// Config with the given budget and all defaults.
     pub fn new(budget: usize) -> Self {
-        SantaConfig { budget, seed: 0x5a27a, exact_wedges: false }
+        SantaConfig {
+            budget,
+            seed: 0x5a27a,
+            exact_wedges: false,
+            window: WindowConfig::default(),
+        }
     }
 
+    /// Override the reservoir RNG seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Toggle the exact-wedge ablation.
     pub fn with_exact_wedges(mut self, on: bool) -> Self {
         self.exact_wedges = on;
         self
+    }
+
+    /// Set the window policy and snapshot cadence.
+    pub fn with_window(mut self, window: WindowConfig) -> Self {
+        self.window = window;
+        self
+    }
+
+    /// Check knob compatibility before building any state.
+    pub fn validate(&self) -> crate::Result<()> {
+        self.window.validate()?;
+        crate::ensure!(
+            !(self.exact_wedges && self.window.policy.is_windowed()),
+            "santa: exact_wedges is incompatible with a windowed run \
+             (the closed-form wedge term is inherently all-time)"
+        );
+        Ok(())
     }
 }
 
@@ -70,14 +118,17 @@ pub struct SantaEstimator {
 }
 
 impl SantaEstimator {
+    /// Estimator with the given reservoir budget and default config.
     pub fn new(budget: usize) -> Self {
         SantaEstimator { cfg: SantaConfig::new(budget) }
     }
 
+    /// Estimator over an explicit [`SantaConfig`].
     pub fn from_config(cfg: SantaConfig) -> Self {
         SantaEstimator { cfg }
     }
 
+    /// Override the reservoir RNG seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
         self.cfg.seed = seed;
         self
@@ -98,6 +149,27 @@ impl SantaEstimator {
     /// Like [`SantaEstimator::run`], surfacing stream I/O failures as
     /// errors instead of panicking.
     pub fn try_run(&self, stream: &mut impl EdgeStream) -> crate::Result<SantaEstimate> {
+        Ok(self.try_run_series(stream)?.last)
+    }
+
+    /// Run both passes and return the pass-2 descriptor time series (one
+    /// snapshot per `stride` arrivals plus the final estimate).
+    ///
+    /// # Panics
+    ///
+    /// Panics on stream I/O failure; use
+    /// [`try_run_series`](SantaEstimator::try_run_series) to handle it.
+    pub fn run_series(&self, stream: &mut impl EdgeStream) -> Series<SantaEstimate> {
+        self.try_run_series(stream).expect("santa: edge stream failed")
+    }
+
+    /// Like [`run_series`](SantaEstimator::run_series), surfacing stream
+    /// I/O failures as errors instead of panicking.
+    pub fn try_run_series(
+        &self,
+        stream: &mut impl EdgeStream,
+    ) -> crate::Result<Series<SantaEstimate>> {
+        self.cfg.validate()?;
         // ---- pass 1: exact degrees ----
         let mut degrees: Vec<u32> = Vec::new();
         let mut ne = 0u64;
@@ -125,35 +197,47 @@ impl SantaEstimator {
         if let Some(e) = stream.take_error() {
             return Err(e.context("santa pass 2 truncated"));
         }
-        let mut est = state.finish();
-        est.ne = ne;
-        Ok(est)
+        debug_assert_eq!(state.ne, ne, "passes disagree on |E|");
+        let snapshots = state.take_snapshots();
+        Ok(Series { snapshots, last: state.finish() })
     }
 }
 
 /// Pass-2 incremental state.  Degrees come from pass 1 (the coordinator's
 /// master computes them once and shares them with every worker).
+///
+/// Under a window policy the trace *terms* are windowed (sliding expiry
+/// or exponential decay, see [`WindowAcc`]) while the pass-1 degree
+/// profile — and with it `tr L⁰`/`tr L¹` — stays full-stream: the window
+/// describes recent walk mass over the stationary degree landscape
+/// (DESIGN.md §8).
 #[derive(Debug)]
 pub struct SantaPass2 {
     cfg: SantaConfig,
     degrees: std::sync::Arc<Vec<u32>>,
-    reservoir: Reservoir,
+    reservoir: WindowedReservoir,
     sample: SampleGraph,
     common: Vec<u32>,
-    tr2_edge: f64,
-    tr3_edge: f64,
-    tr4_edge: f64,
-    tr3_tri: f64,
-    tr4_wedge: f64,
-    tr4_tri: f64,
-    tr4_c4: f64,
+    acc: WindowAcc<7>,
     inv: Vec<f64>,
     inv2: Vec<f64>,
+    expired: Vec<crate::graph::Edge>,
+    snapshots: Vec<Snapshot<SantaEstimate>>,
     ne: u64,
 }
 
 impl SantaPass2 {
+    /// Build pass-2 state over pass-1 degrees.
+    ///
+    /// # Panics
+    ///
+    /// Panics when `cfg` combines `exact_wedges` with a windowed policy —
+    /// call [`SantaConfig::validate`] first to get an error instead.
     pub fn new(cfg: SantaConfig, degrees: std::sync::Arc<Vec<u32>>) -> Self {
+        assert!(
+            !(cfg.exact_wedges && cfg.window.policy.is_windowed()),
+            "santa: exact_wedges is incompatible with a windowed run"
+        );
         let b = cfg.budget.max(1);
         let (inv, inv2) = if cfg.exact_wedges {
             (vec![0.0f64; degrees.len()], vec![0.0f64; degrees.len()])
@@ -161,21 +245,18 @@ impl SantaPass2 {
             (Vec::new(), Vec::new())
         };
         let seed = cfg.seed;
+        let policy = cfg.window.policy;
         SantaPass2 {
             cfg,
             degrees,
-            reservoir: Reservoir::new(b, Pcg64::seed_from_u64(seed)),
+            reservoir: WindowedReservoir::new(policy, b, Pcg64::seed_from_u64(seed)),
             sample: SampleGraph::new(),
             common: Vec::new(),
-            tr2_edge: 0.0,
-            tr3_edge: 0.0,
-            tr4_edge: 0.0,
-            tr3_tri: 0.0,
-            tr4_wedge: 0.0,
-            tr4_tri: 0.0,
-            tr4_c4: 0.0,
+            acc: WindowAcc::new(policy),
             inv,
             inv2,
+            expired: Vec::new(),
+            snapshots: Vec::new(),
             ne: 0,
         }
     }
@@ -185,15 +266,23 @@ impl SantaPass2 {
         self.degrees[v as usize] as f64
     }
 
+    /// Process one pass-2 edge.
     pub fn push(&mut self, e: crate::graph::Edge) {
         self.ne += 1;
+        self.acc.tick();
+        // phase 1: window clock + sample eviction before any enumeration
+        let t_eff = self.reservoir.arrive(&mut self.expired);
+        for old in self.expired.drain(..) {
+            self.sample.remove(old.u, old.v);
+        }
+
         let (u, v) = (e.u, e.v);
         let (du, dv) = (self.deg(u), self.deg(v));
         let dudv = du * dv;
         // exact edge terms (Tables 9–11, edge rows)
-        self.tr2_edge += 2.0 / dudv;
-        self.tr3_edge += 6.0 / dudv;
-        self.tr4_edge += 12.0 / dudv + 2.0 / (dudv * dudv);
+        self.acc.credit(A_TR2_EDGE, 2.0 / dudv);
+        self.acc.credit(A_TR3_EDGE, 6.0 / dudv);
+        self.acc.credit(A_TR4_EDGE, 12.0 / dudv + 2.0 / (dudv * dudv));
         if self.cfg.exact_wedges {
             self.inv[u as usize] += 1.0 / dv;
             self.inv[v as usize] += 1.0 / du;
@@ -201,23 +290,28 @@ impl SantaPass2 {
             self.inv2[v as usize] += 1.0 / (du * du);
         }
 
-        let t = self.reservoir.t() + 1;
         if !self.sample.insert(u, v) {
-            self.reservoir.offer(e);
+            // duplicate stream edge: full-history mode offers it (paper
+            // path, bit-compatible); windowed reservoirs skip it so the
+            // sample and reservoir stay in lock-step (see gabe.rs).
+            if !self.cfg.window.policy.is_windowed() {
+                self.reservoir.offer(e);
+            }
+            self.maybe_snapshot();
             return;
         }
-        let w = Weights::at(t, self.cfg.budget.max(1));
+        let w = Weights::at(t_eff, self.cfg.budget.max(1));
 
         if !self.cfg.exact_wedges {
             // wedges completed by e: centered at u (other edge (u,w))
             for wv in self.sample.neighbors(u) {
                 if wv != v {
-                    self.tr4_wedge += w.w2 * 4.0 / (self.deg(wv) * du * du * dv);
+                    self.acc.credit(A_TR4_WEDGE, w.w2 * 4.0 / (self.deg(wv) * du * du * dv));
                 }
             }
             for x in self.sample.neighbors(v) {
                 if x != u {
-                    self.tr4_wedge += w.w2 * 4.0 / (self.deg(x) * dv * dv * du);
+                    self.acc.credit(A_TR4_WEDGE, w.w2 * 4.0 / (self.deg(x) * dv * dv * du));
                 }
             }
         }
@@ -227,8 +321,8 @@ impl SantaPass2 {
         self.sample.common_neighbors_into(u, v, &mut common);
         for &wv in &common {
             let dw = self.deg(wv);
-            self.tr3_tri -= w.w3 * 6.0 / (dudv * dw);
-            self.tr4_tri -= w.w3 * 24.0 / (dudv * dw);
+            self.acc.credit(A_TR3_TRI, -(w.w3 * 6.0 / (dudv * dw)));
+            self.acc.credit(A_TR4_TRI, -(w.w3 * 24.0 / (dudv * dw)));
         }
         self.common = common;
 
@@ -254,7 +348,7 @@ impl SantaPass2 {
                         let x = nw[i];
                         if x != su && x != ws {
                             let dx = self.deg(self.sample.label_of(x));
-                            self.tr4_c4 += w.w4 * 8.0 / (dudv * dw * dx);
+                            self.acc.credit(A_TR4_C4, w.w4 * 8.0 / (dudv * dw * dx));
                         }
                         i += 1;
                         jj += 1;
@@ -272,41 +366,71 @@ impl SantaPass2 {
                 self.sample.remove(u, v);
             }
         }
+        self.maybe_snapshot();
     }
 
-    pub fn finish(mut self) -> SantaEstimate {
+    /// The trace estimates as of the current arrival.
+    fn traces_now(&self) -> [f64; 5] {
+        let vals = self.acc.values();
+        let mut tr4_wedge = vals[A_TR4_WEDGE];
         if self.cfg.exact_wedges {
             for y in 0..self.degrees.len() {
                 let dy = self.degrees[y] as f64;
                 if dy > 0.0 {
-                    self.tr4_wedge +=
-                        2.0 * (self.inv[y] * self.inv[y] - self.inv2[y]) / (dy * dy);
+                    tr4_wedge += 2.0 * (self.inv[y] * self.inv[y] - self.inv2[y]) / (dy * dy);
                 }
             }
         }
-        let nv = self.degrees.len() as u64;
+        let nv = self.degrees.len() as f64;
         let non_isolated = self.degrees.iter().filter(|&&d| d > 0).count() as f64;
-        let traces = [
-            nv as f64,
+        [
+            nv,
             non_isolated,
-            non_isolated + self.tr2_edge,
-            non_isolated + self.tr3_edge + self.tr3_tri,
-            non_isolated + self.tr4_edge + self.tr4_wedge + self.tr4_tri + self.tr4_c4,
-        ];
-        SantaEstimate { nv, ne: self.ne, traces }
+            non_isolated + vals[A_TR2_EDGE],
+            non_isolated + vals[A_TR3_EDGE] + vals[A_TR3_TRI],
+            non_isolated + vals[A_TR4_EDGE] + tr4_wedge + vals[A_TR4_TRI] + vals[A_TR4_C4],
+        ]
+    }
+
+    fn maybe_snapshot(&mut self) {
+        if self.cfg.window.snapshot_due(self.ne) {
+            let estimate = SantaEstimate {
+                nv: self.degrees.len() as u64,
+                ne: self.cfg.window.policy.described_len(self.ne),
+                traces: self.traces_now(),
+            };
+            self.snapshots.push(Snapshot { t: self.ne, estimate });
+        }
+    }
+
+    /// Drain the snapshots recorded so far (coordinator barrier merge).
+    pub fn take_snapshots(&mut self) -> Vec<Snapshot<SantaEstimate>> {
+        std::mem::take(&mut self.snapshots)
+    }
+
+    /// Finalize into trace estimates.
+    pub fn finish(self) -> SantaEstimate {
+        SantaEstimate {
+            nv: self.degrees.len() as u64,
+            ne: self.cfg.window.policy.described_len(self.ne),
+            traces: self.traces_now(),
+        }
     }
 }
 
 /// [`GraphDescriptor`] adapter for one SANTA variant (flattened 60-dim).
 #[derive(Debug, Clone)]
 pub struct Santa {
+    /// Reservoir budget to resolve against each graph's `|E|`.
     pub budget: Budget,
     /// Variant index 0..6 = HN, HE, HC, WN, WE, WC.
     pub variant: usize,
+    /// Use the closed-form wedge term (ablation, DESIGN.md §4).
     pub exact_wedges: bool,
 }
 
 impl Santa {
+    /// The paper's headline HC variant.
     pub fn hc(budget: Budget) -> Self {
         Santa { budget, variant: 2, exact_wedges: false }
     }
@@ -447,6 +571,60 @@ mod tests {
                 est.traces[k]
             );
         }
+    }
+
+    /// ISSUE 5 differential: `WindowPolicy::None` and `Sliding{w ≥ |E|}`
+    /// reproduce the full-history SANTA run bit-for-bit, and the
+    /// exact-wedges × window incompatibility is a config error.
+    #[test]
+    fn window_none_and_huge_sliding_are_bit_identical_to_full_history() {
+        use crate::sampling::{WindowConfig, WindowPolicy};
+        let mut rng = Pcg64::seed_from_u64(51);
+        let g = gen::powerlaw_cluster_graph(70, 3, 0.5, &mut rng);
+        let b = g.m() / 3;
+        let mut s = VecStream::shuffled(g.edges.clone(), 4);
+        let base = SantaEstimator::new(b).with_seed(19).run(&mut s);
+        for policy in [WindowPolicy::None, WindowPolicy::Sliding { w: 10 * g.m() }] {
+            let mut s = VecStream::shuffled(g.edges.clone(), 4);
+            let cfg = SantaConfig::new(b).with_seed(19).with_window(WindowConfig::new(policy));
+            let est = SantaEstimator::from_config(cfg).run(&mut s);
+            assert_eq!(est.traces, base.traces, "{policy:?} diverged");
+            assert_eq!((est.nv, est.ne), (base.nv, base.ne));
+        }
+
+        let bad = SantaConfig::new(b)
+            .with_exact_wedges(true)
+            .with_window(WindowConfig::new(WindowPolicy::Sliding { w: 5 }));
+        assert!(bad.validate().is_err());
+        let mut s = VecStream::shuffled(g.edges.clone(), 4);
+        let err = SantaEstimator::from_config(bad)
+            .try_run(&mut s)
+            .expect_err("exact_wedges + window must be rejected");
+        assert!(err.to_string().contains("exact_wedges"), "{err}");
+    }
+
+    /// Windowed SANTA emits a snapshot series whose trace estimates stay
+    /// finite and whose `tr L⁰`/`tr L¹` stay pinned to the full-stream
+    /// degree profile (the documented §8 semantics).
+    #[test]
+    fn sliding_santa_snapshots_are_finite_with_fullstream_degree_terms() {
+        use crate::sampling::{WindowConfig, WindowPolicy};
+        let mut rng = Pcg64::seed_from_u64(52);
+        let g = gen::powerlaw_cluster_graph(80, 3, 0.5, &mut rng);
+        let w = g.m() / 4;
+        let cfg = SantaConfig::new(g.m())
+            .with_window(WindowConfig::new(WindowPolicy::Sliding { w }).with_stride(w));
+        let mut s = VecStream::shuffled(g.edges.clone(), 2);
+        let series = SantaEstimator::from_config(cfg).run_series(&mut s);
+        assert!(!series.snapshots.is_empty());
+        let nv = series.last.nv as f64;
+        let non_isolated = series.last.traces[1];
+        for snap in &series.snapshots {
+            assert_eq!(snap.estimate.traces[0], nv);
+            assert_eq!(snap.estimate.traces[1], non_isolated);
+            assert!(snap.estimate.traces.iter().all(|x| x.is_finite()));
+        }
+        assert_eq!(series.last.ne, w as u64);
     }
 
     #[test]

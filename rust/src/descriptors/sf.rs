@@ -23,6 +23,7 @@ pub struct Sf {
 }
 
 impl Sf {
+    /// SF with the `k` smallest eigenvalues.
     pub fn new(k: usize) -> Self {
         Sf { k: k.max(1), dense_cutoff: 1024 }
     }
@@ -33,6 +34,7 @@ impl Sf {
         Self::new((avg_order.round() as usize).clamp(4, 128))
     }
 
+    /// The k smallest normalized-Laplacian eigenvalues of `g`, ascending.
     pub fn descriptor(&self, g: &Graph, seed: u64) -> Vec<f64> {
         let csr = Csr::from_graph(g);
         let eigs = if g.n <= self.dense_cutoff {

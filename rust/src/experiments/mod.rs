@@ -5,9 +5,16 @@
 //! Every experiment prints the paper-shaped rows to stdout and writes a CSV
 //! under `results/`.  All runs are deterministic given `--seed`.
 
+// Rustdoc sweep status (ISSUE 5): the crate-level
+// `#![warn(missing_docs)]` is gated off here until this module gets
+// its own documentation pass; sampling/descriptors/coordinator/graph
+// are fully swept.
+#![allow(missing_docs)]
+
 pub mod ablation;
 pub mod approx;
 pub mod classification;
+pub mod drift;
 pub mod scalability;
 pub mod visualization;
 pub mod workers;

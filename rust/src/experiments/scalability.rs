@@ -52,6 +52,7 @@ fn run_network(
         seed: ctx.seed ^ 0x5ca1e,
         placement,
         topology: None,
+        ..Default::default()
     };
 
     // exact ("real") embeddings — GABE/MAEVE by the unlimited-budget

@@ -50,6 +50,7 @@ pub fn workers(ctx: &Ctx, placement: PlacementPolicy) -> Result<()> {
                 seed: seed0 ^ trial << 6 ^ (w as u64) << 40,
                 placement,
                 topology: None,
+                ..Default::default()
             };
             let mut s = VecStream::shuffled(g.edges.clone(), trial);
             let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).expect("pipeline");

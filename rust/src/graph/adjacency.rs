@@ -93,6 +93,7 @@ impl<'a> PaddedSlots<'a> {
         self.len
     }
 
+    /// `true` when the list is empty.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.len == 0
@@ -263,6 +264,7 @@ pub struct SampleGraph {
 }
 
 impl SampleGraph {
+    /// Empty sample graph (arena and intern table grow on demand).
     pub fn new() -> Self {
         Self::default()
     }

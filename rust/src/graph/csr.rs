@@ -10,16 +10,19 @@ use super::{Edge, Graph, VertexId};
 /// `O(log d)` adjacency checks and linear-time sorted intersections.
 #[derive(Debug, Clone)]
 pub struct Csr {
+    /// Order `|V|`.
     pub n: usize,
     offsets: Vec<usize>,
     nbrs: Vec<VertexId>,
 }
 
 impl Csr {
+    /// Build from a [`Graph`]'s edge list.
     pub fn from_graph(g: &Graph) -> Self {
         Self::from_edges(g.n, &g.edges)
     }
 
+    /// Build from canonical edges over vertices `0..n`.
     pub fn from_edges(n: usize, edges: &[Edge]) -> Self {
         let mut deg = vec![0usize; n];
         for e in edges {
@@ -45,16 +48,19 @@ impl Csr {
     }
 
     #[inline]
+    /// Sorted neighbor list of `v`.
     pub fn neighbors(&self, v: VertexId) -> &[VertexId] {
         &self.nbrs[self.offsets[v as usize]..self.offsets[v as usize + 1]]
     }
 
     #[inline]
+    /// Degree of `v`.
     pub fn degree(&self, v: VertexId) -> usize {
         self.offsets[v as usize + 1] - self.offsets[v as usize]
     }
 
     #[inline]
+    /// Binary-search adjacency test.
     pub fn has_edge(&self, u: VertexId, v: VertexId) -> bool {
         self.neighbors(u).binary_search(&v).is_ok()
     }

@@ -21,7 +21,9 @@ pub type VertexId = u32;
 /// An undirected, canonicalized edge: `u < v` always holds.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Edge {
+    /// Smaller endpoint.
     pub u: VertexId,
+    /// Larger endpoint.
     pub v: VertexId,
 }
 
@@ -54,7 +56,9 @@ impl Edge {
 /// `n` is the order |V| (vertices are `0..n`, isolated vertices allowed).
 #[derive(Debug, Clone, Default)]
 pub struct Graph {
+    /// Order `|V|` (vertices are `0..n`; isolated vertices allowed).
     pub n: usize,
+    /// Canonical, sorted, deduplicated edge list.
     pub edges: Vec<Edge>,
 }
 

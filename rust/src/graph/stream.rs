@@ -13,6 +13,13 @@
 //! checks it after every pass, so a truncated stream fails the pipeline
 //! instead of silently producing estimates over a prefix (or garbage
 //! traces from an empty SANTA pass 2).
+//!
+//! **The stream is the clock** (ISSUE 5): windowed sampling
+//! ([`crate::sampling::window`]) measures time in *arrival indices* — the
+//! 1-based position of each edge yielded by `next_edge`.  Streams carry no
+//! timestamps; a "window of the last `w` edges" means the last `w` yields,
+//! so any `EdgeStream` works windowed with no API change, and runs stay
+//! deterministic given the seed.
 
 use std::fs::File;
 use std::io::{self, BufRead, BufReader, Write};
@@ -52,6 +59,7 @@ pub struct VecStream {
 }
 
 impl VecStream {
+    /// Stream the edges in the given order.
     pub fn new(edges: Vec<Edge>) -> Self {
         VecStream { edges, pos: 0 }
     }
@@ -63,6 +71,7 @@ impl VecStream {
         VecStream { edges, pos: 0 }
     }
 
+    /// The backing edge order (what the stream will yield).
     pub fn edges(&self) -> &[Edge] {
         &self.edges
     }
@@ -138,6 +147,28 @@ fn next_edge_from(
 /// for pass 1.  `FileStream` requires a re-openable regular file anyway
 /// (`reset()` reopens by path for SANTA's pass 2); for one-shot sources —
 /// pipes, sockets, stdin — use [`ReaderStream`], which skips counting.
+///
+/// ```
+/// use stream_descriptors::graph::stream::{write_edge_list, EdgeStream, FileStream};
+/// use stream_descriptors::graph::Edge;
+///
+/// let path = std::env::temp_dir().join("stream_descriptors_doc_filestream.txt");
+/// write_edge_list(&path, &[Edge::new(0, 1), Edge::new(1, 2)])?;
+///
+/// let mut stream = FileStream::open(&path)?;
+/// assert_eq!(stream.len_hint(), Some(2)); // counted at open, same parse
+/// let mut edges = Vec::new();
+/// while let Some(e) = stream.next_edge() {
+///     edges.push(e);
+/// }
+/// assert_eq!(edges, vec![Edge::new(0, 1), Edge::new(1, 2)]);
+/// assert!(stream.take_error().is_none()); // completion, not truncation
+///
+/// stream.reset(); // second pass (SANTA) re-opens by path
+/// assert_eq!(stream.next_edge(), Some(Edge::new(0, 1)));
+/// std::fs::remove_file(&path)?;
+/// # Ok::<(), stream_descriptors::util::err::Error>(())
+/// ```
 pub struct FileStream {
     path: PathBuf,
     reader: BufReader<File>,
@@ -147,6 +178,7 @@ pub struct FileStream {
 }
 
 impl FileStream {
+    /// Open an edge-list file, counting its valid edges for `len_hint`.
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
         // counting pass: same parse as next_edge, so the count is the
@@ -215,6 +247,7 @@ pub struct ReaderStream<R> {
 }
 
 impl<R: BufRead> ReaderStream<R> {
+    /// Wrap a buffered reader.
     pub fn new(reader: R) -> Self {
         ReaderStream { reader, line: String::new(), error: None }
     }
@@ -257,6 +290,7 @@ pub struct FailAfter {
 
 #[cfg(test)]
 impl FailAfter {
+    /// Serve `data` but fail every read from byte `fail_at` on.
     pub fn new(data: Vec<u8>, fail_at: usize) -> Self {
         FailAfter { data, fail_at, pos: 0 }
     }

@@ -23,7 +23,21 @@
 //!   graphs (tiled pairwise distances, masked moments, ψ_j evaluation,
 //!   blocked Laplacian powers), lowered with `interpret=True`.
 //!
-//! See `DESIGN.md` for the full system inventory and experiment index.
+//! Beyond the paper's finite single pass, the crate serves the live-
+//! traffic scenario through [`sampling::window`]: one
+//! [`WindowPolicy`](sampling::WindowPolicy) knob switches every estimator
+//! and the coordinator between full-history, sliding-window and
+//! exponential-decay semantics, with per-stride descriptor snapshots
+//! merged at coordinator barriers.
+//!
+//! Start with `README.md` for the five-minute tour; `DESIGN.md` has the
+//! full system inventory and experiment index.
+
+// ISSUE 5 documentation contract: every public item in the swept modules
+// (sampling, descriptors, coordinator, graph) is documented; modules not
+// yet swept carry an explicit module-level allow.  The CI `docs` job
+// builds rustdoc with `-D warnings`, so regressions fail the build.
+#![warn(missing_docs)]
 
 pub mod analyze;
 pub mod classify;

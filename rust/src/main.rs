@@ -10,14 +10,22 @@
 //! repro table15                   # benchmarks vs proposed, all datasets
 //! repro table16 --workers 8       # massive-network scalability, b=100k
 //! repro workers                   # §3.4 variance-vs-W experiment
+//! repro drift --window 5000       # windowed descriptors on a churned stream
 //! repro all                       # everything (long)
 //! ```
+//!
+//! The usage text is generated from one flag/command table (`FLAGS`,
+//! `COMMANDS`) that also drives the parser, so help can never drift
+//! from the accepted flags again (ISSUE 5 satellite; the old hand-rolled
+//! text had already lost `--placement`-era flags once).  A snapshot test
+//! pins the rendered text.
 
 use std::process::ExitCode;
 
 use stream_descriptors::coordinator::PlacementPolicy;
 use stream_descriptors::experiments::{self, Ctx};
 use stream_descriptors::gen::massive::MassiveKind;
+use stream_descriptors::sampling::{WindowConfig, WindowPolicy};
 
 #[derive(Debug)]
 struct Args {
@@ -28,46 +36,74 @@ struct Args {
     workers: usize,
     threads: usize,
     placement: PlacementPolicy,
+    window: WindowConfig,
     dataset: Option<String>,
     net: Option<MassiveKind>,
     out_dir: Option<String>,
 }
 
-const USAGE: &str = "\
-repro — streaming graph descriptors (GABE/MAEVE/SANTA) experiment harness
+/// The single source of truth for subcommands: `(name, help)`.
+const COMMANDS: &[(&str, &str)] = &[
+    ("quickstart", "tiny end-to-end smoke run"),
+    ("fig3", "t-SNE scatter CSVs on the DD-like dataset"),
+    ("fig4", "SANTA Taylor-terms vs relative error"),
+    ("fig5", "approximation error vs budget"),
+    ("table14", "SANTA variants vs NetLSD (same j) accuracy"),
+    ("table15", "proposed vs NetLSD/FEATHER/SF accuracy"),
+    ("table16", "massive networks, paper-b = 100k"),
+    ("table17", "massive networks, paper-b = 500k"),
+    ("workers", "§3.4 variance vs number of workers"),
+    ("drift", "windowed descriptors over a churned two-regime stream"),
+    ("unbiased", "Theorem 1/2 empirical check"),
+    ("ablation", "design-choice ablations (MAEVE vs NetSimile; SANTA wedge term)"),
+    ("all", "run everything"),
+];
 
-USAGE: repro <COMMAND> [OPTIONS]
+/// One accepted flag: `(name, metavar, help)`.  The parser looks flags up
+/// here and the usage text is rendered from here — one table, no drift.
+const FLAGS: &[(&str, &str, &str)] = &[
+    ("--scale", "F", "dataset scale factor (default 0.25; 1.0 = paper sizes)"),
+    ("--massive-scale", "F", "massive-network scale (default 0.02)"),
+    ("--seed", "N", "RNG seed (default 7)"),
+    ("--workers", "N", "coordinator workers for table16/17/drift (default 4)"),
+    ("--placement", "P", "NUMA placement: none | compact | scatter (default none)"),
+    ("--window", "W", "sliding window over the last W edges (drift)"),
+    ("--decay", "H", "exponential-decay half-life in edges (instead of --window)"),
+    ("--stride", "N", "snapshot stride for windowed runs (default |E|/10)"),
+    ("--threads", "N", "harness threads (default: all cores)"),
+    ("--dataset", "NAME", "restrict table14/15 to one dataset (e.g. OHSU)"),
+    ("--net", "NAME", "restrict table16/17 to one network (FO/US/CS/PT/FL/SF/U2)"),
+    ("--results", "DIR", "output directory (default results/)"),
+];
 
-COMMANDS:
-  quickstart     tiny end-to-end smoke run
-  fig3           t-SNE scatter CSVs on the DD-like dataset
-  fig4           SANTA Taylor-terms vs relative error
-  fig5           approximation error vs budget
-  table14        SANTA variants vs NetLSD (same j) accuracy
-  table15        proposed vs NetLSD/FEATHER/SF accuracy
-  table16        massive networks, paper-b = 100k
-  table17        massive networks, paper-b = 500k
-  workers        §3.4 variance vs number of workers
-  unbiased       Theorem 1/2 empirical check
-  ablation       design-choice ablations (MAEVE vs NetSimile; SANTA wedge term)
-  all            run everything
+/// Render the usage text from the command and flag tables.
+fn usage() -> String {
+    let mut s = String::from(
+        "repro — streaming graph descriptors (GABE/MAEVE/SANTA) experiment harness\n\
+         \n\
+         USAGE: repro <COMMAND> [OPTIONS]\n\
+         \n\
+         COMMANDS:\n",
+    );
+    for (name, help) in COMMANDS {
+        s.push_str(&format!("  {name:<12} {help}\n"));
+    }
+    s.push_str("\nOPTIONS:\n");
+    for (name, metavar, help) in FLAGS {
+        let head = format!("{name} {metavar}");
+        s.push_str(&format!("  {head:<18} {help}\n"));
+    }
+    s
+}
 
-OPTIONS:
-  --scale F          dataset scale factor (default 0.25; 1.0 = paper sizes)
-  --massive-scale F  massive-network scale (default 0.02)
-  --seed N           RNG seed (default 7)
-  --workers N        coordinator workers for table16/17 (default 4)
-  --placement P      NUMA worker placement for table16/17/workers:
-                     none | compact | scatter (default none)
-  --threads N        harness threads (default: all cores)
-  --dataset NAME     restrict table14/15 to one dataset (e.g. OHSU)
-  --net NAME         restrict table16/17 to one network (FO/US/CS/PT/FL/SF/U2)
-  --results DIR      output directory (default results/)
-";
-
-fn parse_args() -> Result<Args, String> {
-    let mut it = std::env::args().skip(1);
-    let cmd = it.next().ok_or_else(|| USAGE.to_string())?;
+/// Parse an argument list (everything after the binary name).  Every
+/// accepted flag comes from [`FLAGS`]; an unknown flag or a missing value
+/// is an `Err` carrying a message (plus the usage text where helpful).
+fn parse_from(mut it: impl Iterator<Item = String>) -> Result<Args, String> {
+    let cmd = it.next().ok_or_else(usage)?;
+    if cmd == "-h" || cmd == "--help" {
+        return Err(usage());
+    }
     let mut a = Args {
         cmd,
         scale: 0.25,
@@ -76,29 +112,55 @@ fn parse_args() -> Result<Args, String> {
         workers: 4,
         threads: 0,
         placement: PlacementPolicy::None,
+        window: WindowConfig::default(),
         dataset: None,
         net: None,
         out_dir: None,
     };
+    let mut decay: Option<f64> = None;
+    let mut sliding: Option<usize> = None;
     while let Some(flag) = it.next() {
-        let mut val = || it.next().ok_or(format!("{flag} needs a value"));
+        if flag == "-h" || flag == "--help" {
+            return Err(usage());
+        }
+        if !FLAGS.iter().any(|(name, _, _)| *name == flag) {
+            return Err(format!("unknown flag {flag}\n\n{}", usage()));
+        }
+        let val = it.next().ok_or(format!("{flag} needs a value"))?;
+        let num = |e: std::num::ParseFloatError| format!("{flag}: {e}");
+        let int = |e: std::num::ParseIntError| format!("{flag}: {e}");
         match flag.as_str() {
-            "--scale" => a.scale = val()?.parse().map_err(|e| format!("{e}"))?,
-            "--massive-scale" => {
-                a.massive_scale = val()?.parse().map_err(|e| format!("{e}"))?
-            }
-            "--seed" => a.seed = val()?.parse().map_err(|e| format!("{e}"))?,
-            "--workers" => a.workers = val()?.parse().map_err(|e| format!("{e}"))?,
-            "--placement" => a.placement = val()?.parse()?,
-            "--threads" => a.threads = val()?.parse().map_err(|e| format!("{e}"))?,
-            "--dataset" => a.dataset = Some(val()?),
-            "--net" => a.net = Some(val()?.parse()?),
-            "--results" => a.out_dir = Some(val()?),
-            "-h" | "--help" => return Err(USAGE.to_string()),
-            other => return Err(format!("unknown flag {other}\n\n{USAGE}")),
+            "--scale" => a.scale = val.parse().map_err(num)?,
+            "--massive-scale" => a.massive_scale = val.parse().map_err(num)?,
+            "--seed" => a.seed = val.parse().map_err(int)?,
+            "--workers" => a.workers = val.parse().map_err(int)?,
+            "--placement" => a.placement = val.parse()?,
+            "--window" => sliding = Some(val.parse().map_err(int)?),
+            "--decay" => decay = Some(val.parse().map_err(num)?),
+            "--stride" => a.window.stride = val.parse().map_err(int)?,
+            "--threads" => a.threads = val.parse().map_err(int)?,
+            "--dataset" => a.dataset = Some(val),
+            "--net" => a.net = Some(val.parse()?),
+            "--results" => a.out_dir = Some(val),
+            // every FLAGS entry must have an arm above; the lookup at the
+            // top guarantees nothing else reaches here
+            other => unreachable!("flag {other} is in FLAGS but has no parser arm"),
         }
     }
+    a.window.policy = match (sliding, decay) {
+        (Some(_), Some(_)) => {
+            return Err("--window and --decay are mutually exclusive".into())
+        }
+        (Some(w), None) => WindowPolicy::Sliding { w },
+        (None, Some(half_life)) => WindowPolicy::Decay { half_life },
+        (None, None) => WindowPolicy::None,
+    };
+    a.window.validate().map_err(|e| e.to_string())?;
     Ok(a)
+}
+
+fn parse_args() -> Result<Args, String> {
+    parse_from(std::env::args().skip(1))
 }
 
 fn quickstart(ctx: &Ctx) -> stream_descriptors::Result<()> {
@@ -166,6 +228,7 @@ fn main() -> ExitCode {
                 experiments::scalability::table(&ctx, 500_000, w, args.net, p)
             }
             "workers" => experiments::workers::workers(&ctx, args.placement),
+            "drift" => experiments::drift::drift(&ctx, args.window, args.workers),
             "unbiased" => experiments::approx::unbiased(&ctx),
             "ablation" => experiments::ablation::ablation(&ctx),
             "all" => {
@@ -174,6 +237,7 @@ fn main() -> ExitCode {
                 experiments::approx::unbiased(&ctx)?;
                 experiments::ablation::ablation(&ctx)?;
                 experiments::workers::workers(&ctx, args.placement)?;
+                experiments::drift::drift(&ctx, args.window, args.workers)?;
                 experiments::classification::table14(&ctx, args.dataset.as_deref())?;
                 experiments::classification::table15(&ctx, args.dataset.as_deref())?;
                 experiments::visualization::fig3(&ctx)?;
@@ -182,7 +246,7 @@ fn main() -> ExitCode {
                 experiments::scalability::table(&ctx, 500_000, w, args.net, p)
             }
             other => {
-                eprintln!("unknown command {other}\n\n{USAGE}");
+                eprintln!("unknown command {other}\n\n{}", usage());
                 std::process::exit(2);
             }
         }
@@ -193,5 +257,118 @@ fn main() -> ExitCode {
             eprintln!("error: {e:#}");
             ExitCode::FAILURE
         }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Result<Args, String> {
+        parse_from(args.iter().map(|s| s.to_string()))
+    }
+
+    /// Every flag in the table is accepted by the parser (the bug this
+    /// table fixes was help and parser drifting apart — this direction
+    /// catches a table entry the parser forgot).
+    #[test]
+    fn every_table_flag_parses() {
+        for (name, _, _) in FLAGS {
+            let sample = match *name {
+                "--placement" => "compact",
+                "--net" => "CS",
+                "--dataset" => "OHSU",
+                "--results" => "out",
+                "--scale" | "--massive-scale" | "--decay" => "0.5",
+                _ => "3",
+            };
+            let got = parse(&["quickstart", name, sample]);
+            assert!(got.is_ok(), "{name} rejected: {:?}", got.err());
+        }
+    }
+
+    #[test]
+    fn unknown_flags_are_rejected_with_usage() {
+        let err = parse(&["quickstart", "--bogus", "1"]).unwrap_err();
+        assert!(err.contains("unknown flag --bogus"));
+        assert!(err.contains("OPTIONS:"), "usage text must follow the error");
+    }
+
+    #[test]
+    fn window_flags_assemble_the_policy() {
+        let a = parse(&["drift", "--window", "500", "--stride", "100"]).unwrap();
+        assert_eq!(a.window.policy, WindowPolicy::Sliding { w: 500 });
+        assert_eq!(a.window.stride, 100);
+        let a = parse(&["drift", "--decay", "250.5"]).unwrap();
+        assert_eq!(a.window.policy, WindowPolicy::Decay { half_life: 250.5 });
+        let err = parse(&["drift", "--window", "5", "--decay", "2"]).unwrap_err();
+        assert!(err.contains("mutually exclusive"));
+        let err = parse(&["drift", "--window", "0"]).unwrap_err();
+        assert!(err.contains("≥ 1"), "{err}");
+    }
+
+    #[test]
+    fn help_requests_return_usage() {
+        for args in [&["--help"][..], &["-h"][..], &["drift", "--help"][..]] {
+            let err = parse(args).unwrap_err();
+            assert_eq!(err, usage());
+        }
+    }
+
+    /// Usage text contains every command and every flag head exactly as
+    /// the tables spell them.
+    #[test]
+    fn usage_covers_both_tables() {
+        let text = usage();
+        for (name, help) in COMMANDS {
+            assert!(text.contains(name), "missing command {name}");
+            assert!(text.contains(help), "missing help for {name}");
+        }
+        for (name, metavar, help) in FLAGS {
+            assert!(text.contains(&format!("{name} {metavar}")), "missing flag {name}");
+            assert!(text.contains(help), "missing help for {name}");
+        }
+    }
+
+    /// Snapshot of the rendered usage text.  If this fails because you
+    /// changed the tables on purpose, update the golden string — the test
+    /// exists so help changes are always deliberate and reviewed.
+    #[test]
+    fn usage_snapshot() {
+        let expected = "\
+repro — streaming graph descriptors (GABE/MAEVE/SANTA) experiment harness
+
+USAGE: repro <COMMAND> [OPTIONS]
+
+COMMANDS:
+  quickstart   tiny end-to-end smoke run
+  fig3         t-SNE scatter CSVs on the DD-like dataset
+  fig4         SANTA Taylor-terms vs relative error
+  fig5         approximation error vs budget
+  table14      SANTA variants vs NetLSD (same j) accuracy
+  table15      proposed vs NetLSD/FEATHER/SF accuracy
+  table16      massive networks, paper-b = 100k
+  table17      massive networks, paper-b = 500k
+  workers      §3.4 variance vs number of workers
+  drift        windowed descriptors over a churned two-regime stream
+  unbiased     Theorem 1/2 empirical check
+  ablation     design-choice ablations (MAEVE vs NetSimile; SANTA wedge term)
+  all          run everything
+
+OPTIONS:
+  --scale F          dataset scale factor (default 0.25; 1.0 = paper sizes)
+  --massive-scale F  massive-network scale (default 0.02)
+  --seed N           RNG seed (default 7)
+  --workers N        coordinator workers for table16/17/drift (default 4)
+  --placement P      NUMA placement: none | compact | scatter (default none)
+  --window W         sliding window over the last W edges (drift)
+  --decay H          exponential-decay half-life in edges (instead of --window)
+  --stride N         snapshot stride for windowed runs (default |E|/10)
+  --threads N        harness threads (default: all cores)
+  --dataset NAME     restrict table14/15 to one dataset (e.g. OHSU)
+  --net NAME         restrict table16/17 to one network (FO/US/CS/PT/FL/SF/U2)
+  --results DIR      output directory (default results/)
+";
+        assert_eq!(usage(), expected);
     }
 }

@@ -21,6 +21,12 @@
 //! [`crate::descriptors::psi`]), pinning the backend↔reference contract —
 //! and, when the artifacts are built, the rust↔python contract too.
 
+// Rustdoc sweep status (ISSUE 5): the crate-level
+// `#![warn(missing_docs)]` is gated off here until this module gets
+// its own documentation pass; sampling/descriptors/coordinator/graph
+// are fully swept.
+#![allow(missing_docs)]
+
 pub mod manifest;
 pub mod native;
 #[cfg(all(feature = "pjrt", not(feature = "xla-crate")))]

@@ -13,8 +13,10 @@
 //! unbiased).
 
 pub mod reservoir;
+pub mod window;
 
 pub use reservoir::{Reservoir, ReservoirAction};
+pub use window::{Series, Snapshot, WindowConfig, WindowPolicy, WindowedReservoir};
 
 /// Detection probability `p_t^F` for a pattern with `f_edges` edges at the
 /// arrival of the `t`-th edge (1-based) under budget `b`.
@@ -56,6 +58,7 @@ pub struct Weights {
 }
 
 impl Weights {
+    /// Weights at arrival `t` (1-based) under budget `b`.
     #[inline]
     pub fn at(t: usize, b: usize) -> Self {
         Weights {

@@ -39,6 +39,7 @@ pub struct Reservoir {
 const RESERVE_CHUNK: usize = 1 << 20;
 
 impl Reservoir {
+    /// Empty reservoir of `budget` slots driven by `rng`.
     pub fn new(budget: usize, rng: Pcg64) -> Self {
         assert!(budget > 0, "budget must be positive");
         Reservoir {
@@ -55,6 +56,7 @@ impl Reservoir {
         self.t
     }
 
+    /// The slot budget `b`.
     #[inline]
     pub fn budget(&self) -> usize {
         self.budget
@@ -66,11 +68,13 @@ impl Reservoir {
         &self.edges
     }
 
+    /// Number of edges currently stored.
     #[inline]
     pub fn len(&self) -> usize {
         self.edges.len()
     }
 
+    /// `true` when no edge is stored.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.edges.is_empty()

@@ -1,0 +1,1149 @@
+//! Windowed sampling: descriptors of the *recent* graph (ISSUE 5).
+//!
+//! The paper treats the stream as one finite pass, so every estimate
+//! describes the all-time graph.  Serving live traffic needs the opposite:
+//! descriptors of the last `W` edges (Ahmed et al.'s sequence-based
+//! streaming-window setting) or of an exponentially-decayed recency profile
+//! (EdgeSketch-style bounded summaries over unbounded streams).  This
+//! module supplies that lifetime model as one knob, [`WindowPolicy`],
+//! threaded through the estimators and the coordinator:
+//!
+//! * [`WindowPolicy::None`] — the paper's full-history semantics.  The
+//!   code path delegates to the untouched [`Reservoir`] and is **bit-for-
+//!   bit identical** to the pre-window pipeline (same RNG draws, same
+//!   actions, same float operation order) — the differential suite pins
+//!   this.
+//! * [`WindowPolicy::Sliding`] — a uniform reservoir over the last `w`
+//!   arrivals.  Sampled edges that age out of the window are *tombstoned*:
+//!   their reservoir slot is vacated (and the caller told to drop them
+//!   from its sample graph) the moment the clock passes `arrival + w`.
+//!   With `w ≥ |E|` nothing ever expires and the behavior collapses to
+//!   full-history, again bit-for-bit.
+//! * [`WindowPolicy::Decay`] — exponential time decay: priority sampling
+//!   (Efraimidis–Spirakis keys under decayed weights) keeps edges with
+//!   probability proportional to `2^(-age/half_life)`.  No tombstones —
+//!   old edges leave by losing replacement contests, never by fiat.
+//!
+//! The *clock* is the monotone arrival index of the edge stream (the same
+//! `t` the reservoir already counts); no wall-clock timestamps are
+//! involved, so runs stay deterministic given the seed.
+//!
+//! ## The two-phase `arrive` / `offer` contract
+//!
+//! Algorithm 1 enumerates the patterns completed by `e_t` against the
+//! sample *as of `t-1`*, then updates the reservoir.  A window adds a
+//! third step that must come first: edges that fell out of the window at
+//! `t` may not participate in the enumeration.  Callers therefore drive
+//! the reservoir in two phases per arriving edge:
+//!
+//! ```text
+//! let t_eff = reservoir.arrive(&mut expired);  // 1. advance clock, expire
+//! for old in expired.drain(..) { sample.remove(old); }
+//! /* 2. enumerate with Weights::at(t_eff, b) */
+//! match reservoir.offer(e) { ... }             // 3. reservoir update
+//! ```
+//!
+//! `arrive` returns the *effective population size* the arriving edge is
+//! sampled from — `t` for full history, `min(t, w)` for a sliding window,
+//! `min(t, n_eff)` under decay (`n_eff` = the expected total decayed
+//! weight, `Σ 2^(-a/h) = 1/(1-2^(-1/h)) ≈ h/ln 2`).  Feeding it to
+//! [`Weights::at`](crate::sampling::Weights::at) makes the detection
+//! probabilities the window analog of §3.3.
+//!
+//! Counter lifetimes (the other half of the lifetime-model change) live in
+//! [`WindowAcc`] / [`VertexCreditLog`] / [`EdgeRing`]; the design note is
+//! DESIGN.md §8.
+
+use std::collections::VecDeque;
+
+use crate::graph::Edge;
+use crate::util::rng::Pcg64;
+
+use super::reservoir::{Reservoir, ReservoirAction};
+
+/// Which slice of the stream the sample — and every descriptor built on
+/// it — describes.
+///
+/// The policy rides on the estimator configs
+/// ([`GabeEstimator::with_window`](crate::descriptors::gabe::GabeEstimator::with_window)
+/// and friends) and on
+/// [`CoordinatorConfig::window`](crate::coordinator::CoordinatorConfig::window);
+/// `None` is always the default and always reproduces the pre-window
+/// pipeline exactly.
+///
+/// ```
+/// use stream_descriptors::descriptors::gabe::GabeEstimator;
+/// use stream_descriptors::graph::stream::VecStream;
+/// use stream_descriptors::graph::Edge;
+/// use stream_descriptors::sampling::window::{WindowConfig, WindowPolicy};
+///
+/// // A long path: 0-1, 1-2, ..., 99-100.
+/// let edges: Vec<Edge> = (0..100).map(|i| Edge::new(i, i + 1)).collect();
+///
+/// // Descriptors of the last 20 edges, re-emitted every 25 arrivals.
+/// let window = WindowConfig::new(WindowPolicy::Sliding { w: 20 }).with_stride(25);
+/// let series = GabeEstimator::new(64)
+///     .with_window(window)
+///     .run_series(&mut VecStream::new(edges));
+///
+/// assert_eq!(series.snapshots.len(), 4); // t = 25, 50, 75, 100
+/// // Each snapshot describes a 20-edge window, not the 100-edge prefix.
+/// assert!(series.snapshots.iter().all(|s| s.estimate.ne == 20));
+/// ```
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum WindowPolicy {
+    /// Full history — the paper's setting and the default.
+    None,
+    /// Sequence-based sliding window: the sample describes the last `w`
+    /// stream edges, with tombstoned eviction when sampled edges age out.
+    Sliding {
+        /// Window length in edges (must be ≥ 1).
+        w: usize,
+    },
+    /// Exponential time decay: an edge aged `a` arrivals keeps weight
+    /// `2^(-a / half_life)` in the sampling distribution.
+    Decay {
+        /// Half-life in edges (must be positive and finite).
+        half_life: f64,
+    },
+}
+
+impl WindowPolicy {
+    /// Check the knob before building any state on it.
+    pub fn validate(&self) -> crate::Result<()> {
+        match *self {
+            WindowPolicy::None => Ok(()),
+            WindowPolicy::Sliding { w } => {
+                crate::ensure!(w >= 1, "sliding window length must be ≥ 1 (got 0)");
+                Ok(())
+            }
+            WindowPolicy::Decay { half_life } => {
+                crate::ensure!(
+                    half_life.is_finite() && half_life > 0.0,
+                    "decay half-life must be positive and finite (got {half_life})"
+                );
+                Ok(())
+            }
+        }
+    }
+
+    /// Effective population size at arrival index `t` (1-based): how many
+    /// stream edges the window logically covers.  `t` for full history,
+    /// `min(t, w)` for a sliding window, `min(t, n_eff)` under decay.
+    pub fn effective_len(&self, t: usize) -> usize {
+        match *self {
+            WindowPolicy::None => t,
+            WindowPolicy::Sliding { w } => t.min(w),
+            WindowPolicy::Decay { half_life } => t.min(decay_effective_len(half_life)),
+        }
+    }
+
+    /// `|E|` of the graph a windowed estimate describes at arrival `t`:
+    /// the window length under a sliding window, the all-time count
+    /// otherwise (decay keeps the all-time degrees and `|E|` so its
+    /// closed forms stay consistent — DESIGN.md §8).
+    pub fn described_len(&self, t: u64) -> u64 {
+        match *self {
+            WindowPolicy::Sliding { w } => t.min(w as u64),
+            _ => t,
+        }
+    }
+
+    /// Per-arrival multiplicative decay of accumulated credit: `2^(-1/h)`
+    /// for [`WindowPolicy::Decay`], `1.0` otherwise.
+    pub fn decay_factor(&self) -> f64 {
+        match *self {
+            WindowPolicy::Decay { half_life } => (-std::f64::consts::LN_2 / half_life).exp(),
+            _ => 1.0,
+        }
+    }
+
+    /// `true` unless the policy is [`WindowPolicy::None`].
+    pub fn is_windowed(&self) -> bool {
+        !matches!(self, WindowPolicy::None)
+    }
+}
+
+impl std::fmt::Display for WindowPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WindowPolicy::None => write!(f, "full"),
+            WindowPolicy::Sliding { w } => write!(f, "sliding(w={w})"),
+            WindowPolicy::Decay { half_life } => write!(f, "decay(h={half_life})"),
+        }
+    }
+}
+
+/// Expected total decayed weight of an infinite stream under half-life
+/// `h`: `Σ_{a≥0} 2^(-a/h) = 1 / (1 - 2^(-1/h))`, the natural "effective
+/// window length" of the decay mode.
+fn decay_effective_len(half_life: f64) -> usize {
+    let r = (-std::f64::consts::LN_2 / half_life).exp();
+    if r >= 1.0 {
+        usize::MAX
+    } else {
+        (1.0 / (1.0 - r)).ceil().max(1.0) as usize
+    }
+}
+
+/// Window policy plus the snapshot cadence — the one struct the estimator
+/// and coordinator configs carry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowConfig {
+    /// The lifetime model of the sample.
+    pub policy: WindowPolicy,
+    /// Emit a descriptor snapshot every `stride` arrivals (`0` = no
+    /// snapshots; only the final estimate is produced).  Snapshots turn
+    /// one run into a descriptor *time series* — the drift workload and
+    /// the `repro drift` subcommand consume them.
+    pub stride: usize,
+}
+
+impl Default for WindowConfig {
+    fn default() -> Self {
+        WindowConfig { policy: WindowPolicy::None, stride: 0 }
+    }
+}
+
+impl WindowConfig {
+    /// A config with the given policy and no snapshots.
+    pub fn new(policy: WindowPolicy) -> Self {
+        WindowConfig { policy, stride: 0 }
+    }
+
+    /// Set the snapshot cadence (arrivals between snapshots; 0 disables).
+    pub fn with_stride(mut self, stride: usize) -> Self {
+        self.stride = stride;
+        self
+    }
+
+    /// Validate the policy (the stride needs no constraint: 0 is "off").
+    pub fn validate(&self) -> crate::Result<()> {
+        self.policy.validate()
+    }
+
+    /// Should a snapshot be emitted after arrival `t`?
+    #[inline]
+    pub fn snapshot_due(&self, t: u64) -> bool {
+        self.stride > 0 && t % self.stride as u64 == 0
+    }
+}
+
+/// One point of a descriptor time series: the estimate as of arrival `t`.
+#[derive(Debug, Clone)]
+pub struct Snapshot<E> {
+    /// Arrival index (1-based) the snapshot was taken at.
+    pub t: u64,
+    /// The estimate over the window ending at `t`.
+    pub estimate: E,
+}
+
+/// A windowed run's output: the per-stride snapshots plus the final
+/// estimate (which is *not* duplicated into `snapshots`).
+#[derive(Debug, Clone)]
+pub struct Series<E> {
+    /// Snapshots at `t = stride, 2·stride, …` (empty when `stride == 0`).
+    pub snapshots: Vec<Snapshot<E>>,
+    /// The estimate at end of stream.
+    pub last: E,
+}
+
+// ---------------------------------------------------------------------------
+// Windowed reservoirs
+// ---------------------------------------------------------------------------
+
+const VACANT: usize = usize::MAX;
+
+/// A stored edge plus its arrival index (the sliding window's tombstone
+/// bookkeeping; `arrival == VACANT` marks a vacated slot).
+#[derive(Debug, Clone, Copy)]
+struct SlidingEntry {
+    edge: Edge,
+    arrival: usize,
+}
+
+/// Uniform reservoir over the last `w` arrivals with tombstoned eviction.
+///
+/// Slots are vacated lazily through an arrival-ordered queue: each stored
+/// or replacing edge enqueues `(arrival, slot)`; when the clock passes
+/// `arrival + w` the queue head is popped and, if the slot still holds
+/// that arrival (it may have been replaced since — a stale queue entry),
+/// the slot is tombstoned and the edge reported to the caller for removal
+/// from its sample graph.  Acceptance uses probability
+/// `b / min(t, w)` — Vitter's rule over the window population — so with
+/// `w ≥` the stream length the RNG draw sequence, the actions and the
+/// sample are bit-for-bit those of the plain [`Reservoir`].
+#[derive(Debug, Clone)]
+pub struct SlidingReservoir {
+    w: usize,
+    budget: usize,
+    t: usize,
+    live: usize,
+    slots: Vec<SlidingEntry>,
+    free: Vec<u32>,
+    ages: VecDeque<(usize, u32)>,
+    rng: Pcg64,
+}
+
+impl SlidingReservoir {
+    /// New sliding reservoir of `budget` slots over a `w`-edge window.
+    pub fn new(w: usize, budget: usize, rng: Pcg64) -> Self {
+        assert!(budget > 0, "budget must be positive");
+        assert!(w > 0, "window must be positive");
+        SlidingReservoir {
+            w,
+            budget,
+            t: 0,
+            live: 0,
+            slots: Vec::new(),
+            free: Vec::new(),
+            ages: VecDeque::new(),
+            rng,
+        }
+    }
+
+    /// Advance the clock to the next arrival and tombstone aged-out
+    /// edges into `expired`.  Returns `min(t, w)`.
+    pub fn arrive(&mut self, expired: &mut Vec<Edge>) -> usize {
+        self.t += 1;
+        while let Some(&(arrival, slot)) = self.ages.front() {
+            if arrival + self.w > self.t {
+                break; // still inside the window [t-w+1, t]
+            }
+            self.ages.pop_front();
+            let entry = &mut self.slots[slot as usize];
+            if entry.arrival == arrival {
+                expired.push(entry.edge);
+                entry.arrival = VACANT;
+                self.free.push(slot);
+                self.live -= 1;
+            }
+            // else: stale queue entry — the slot was replaced since
+        }
+        self.t.min(self.w)
+    }
+
+    /// Offer the arrival announced by the preceding
+    /// [`arrive`](SlidingReservoir::arrive) call.
+    pub fn offer(&mut self, e: Edge) -> ReservoirAction {
+        if self.live < self.budget {
+            // vacancies are always refilled before the slot vector grows,
+            // so `live == budget` implies zero holes (uniform slot choice
+            // below never needs to skip tombstones)
+            let slot = match self.free.pop() {
+                Some(s) => {
+                    self.slots[s as usize] = SlidingEntry { edge: e, arrival: self.t };
+                    s
+                }
+                None => {
+                    self.slots.push(SlidingEntry { edge: e, arrival: self.t });
+                    (self.slots.len() - 1) as u32
+                }
+            };
+            self.live += 1;
+            self.ages.push_back((self.t, slot));
+            return ReservoirAction::Stored;
+        }
+        let win = self.t.min(self.w);
+        if self.rng.gen_range_usize(0, win) < self.budget {
+            let k = self.rng.gen_range_usize(0, self.budget);
+            let old = std::mem::replace(
+                &mut self.slots[k],
+                SlidingEntry { edge: e, arrival: self.t },
+            );
+            self.ages.push_back((self.t, k as u32));
+            ReservoirAction::Replaced(old.edge)
+        } else {
+            ReservoirAction::Discarded
+        }
+    }
+
+    /// Arrivals announced so far.
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Edges currently stored (window-live only).
+    pub fn len(&self) -> usize {
+        self.live
+    }
+
+    /// `true` when no edge is stored.
+    pub fn is_empty(&self) -> bool {
+        self.live == 0
+    }
+
+    /// Iterate the stored edges with their arrival indices (test probes
+    /// and the eviction census).
+    pub fn entries(&self) -> impl Iterator<Item = (Edge, usize)> + '_ {
+        self.slots
+            .iter()
+            .filter(|s| s.arrival != VACANT)
+            .map(|s| (s.edge, s.arrival))
+    }
+}
+
+/// One Efraimidis–Spirakis entry: the edge, its arrival, and `ln u` for a
+/// uniform `u` drawn at arrival (the key is `u^(1/weight)` with weight
+/// `2^(-age/half_life)`, compared lazily in relative-age space so nothing
+/// ever under- or overflows globally).
+#[derive(Debug, Clone, Copy)]
+struct DecayEntry {
+    edge: Edge,
+    arrival: usize,
+    ln_u: f64,
+}
+
+/// Priority sample under exponential time decay (A-ES with decayed
+/// weights).
+///
+/// Keeps the `budget` edges with the largest keys `u^(1/w_i)`,
+/// `w_i = 2^(-(t - t_i)/half_life)`.  The *ordering* of two keys is
+/// time-invariant, so keys are never stored in absolute form; the min-heap
+/// compares pairs via
+/// `ln u_a  <  ln u_b · exp((t_a - t_b) · ln2 / h)`,
+/// which is monotone-safe even when the exponential saturates to `0` or
+/// `∞` (old edges lose, new edges win — exactly the decay semantics).
+#[derive(Debug, Clone)]
+pub struct DecayReservoir {
+    lambda: f64,
+    n_eff: usize,
+    budget: usize,
+    t: usize,
+    heap: Vec<DecayEntry>,
+    rng: Pcg64,
+}
+
+impl DecayReservoir {
+    /// New decay reservoir with the given half-life (in edges).
+    pub fn new(half_life: f64, budget: usize, rng: Pcg64) -> Self {
+        assert!(budget > 0, "budget must be positive");
+        assert!(
+            half_life.is_finite() && half_life > 0.0,
+            "half-life must be positive and finite"
+        );
+        DecayReservoir {
+            lambda: std::f64::consts::LN_2 / half_life,
+            n_eff: decay_effective_len(half_life),
+            budget,
+            t: 0,
+            heap: Vec::with_capacity(budget.min(1 << 20)),
+            rng,
+        }
+    }
+
+    /// `rank(a) < rank(b)`: `a` is closer to eviction than `b`.
+    #[inline]
+    fn rank_lt(&self, a: &DecayEntry, b: &DecayEntry) -> bool {
+        let scale = ((a.arrival as f64 - b.arrival as f64) * self.lambda).exp();
+        a.ln_u < b.ln_u * scale
+    }
+
+    /// Advance the clock (no expiry in decay mode — edges leave by losing
+    /// replacement contests).  Returns `min(t, n_eff)`.
+    pub fn arrive(&mut self) -> usize {
+        self.t += 1;
+        self.t.min(self.n_eff)
+    }
+
+    /// Offer the arrival announced by the preceding
+    /// [`arrive`](DecayReservoir::arrive) call.
+    pub fn offer(&mut self, e: Edge) -> ReservoirAction {
+        let u = self.rng.gen_f64().max(f64::MIN_POSITIVE);
+        let entry = DecayEntry { edge: e, arrival: self.t, ln_u: u.ln() };
+        if self.heap.len() < self.budget {
+            self.heap.push(entry);
+            self.sift_up(self.heap.len() - 1);
+            return ReservoirAction::Stored;
+        }
+        if self.rank_lt(&entry, &self.heap[0]) {
+            return ReservoirAction::Discarded;
+        }
+        let old = std::mem::replace(&mut self.heap[0], entry);
+        self.sift_down(0);
+        ReservoirAction::Replaced(old.edge)
+    }
+
+    fn sift_up(&mut self, mut i: usize) {
+        while i > 0 {
+            let parent = (i - 1) / 2;
+            if self.rank_lt(&self.heap[i], &self.heap[parent]) {
+                self.heap.swap(i, parent);
+                i = parent;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn sift_down(&mut self, mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut least = i;
+            if l < self.heap.len() && self.rank_lt(&self.heap[l], &self.heap[least]) {
+                least = l;
+            }
+            if r < self.heap.len() && self.rank_lt(&self.heap[r], &self.heap[least]) {
+                least = r;
+            }
+            if least == i {
+                break;
+            }
+            self.heap.swap(i, least);
+            i = least;
+        }
+    }
+
+    /// Arrivals announced so far.
+    pub fn t(&self) -> usize {
+        self.t
+    }
+
+    /// Edges currently stored.
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    /// `true` when no edge is stored.
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Iterate the stored edges with their arrival indices.
+    pub fn entries(&self) -> impl Iterator<Item = (Edge, usize)> + '_ {
+        self.heap.iter().map(|s| (s.edge, s.arrival))
+    }
+}
+
+/// The policy-dispatched reservoir every estimator holds.
+///
+/// [`WindowPolicy::None`] wraps the plain [`Reservoir`] *unchanged* — the
+/// full-history arm consumes the identical RNG sequence and returns the
+/// identical actions as the pre-window code, which is what makes the
+/// `None`-differential suite a bit-for-bit assertion rather than a
+/// tolerance check.
+#[derive(Debug, Clone)]
+pub enum WindowedReservoir {
+    /// Full history: the untouched paper reservoir.
+    Full(Reservoir),
+    /// Sliding window with tombstoned eviction.
+    Sliding(SlidingReservoir),
+    /// Exponential-decay priority sample.
+    Decay(DecayReservoir),
+}
+
+impl WindowedReservoir {
+    /// Build the reservoir the policy calls for.  `policy` must have been
+    /// validated (invalid knobs panic here, as [`Reservoir::new`] does on
+    /// a zero budget).
+    pub fn new(policy: WindowPolicy, budget: usize, rng: Pcg64) -> Self {
+        match policy {
+            WindowPolicy::None => WindowedReservoir::Full(Reservoir::new(budget, rng)),
+            WindowPolicy::Sliding { w } => {
+                WindowedReservoir::Sliding(SlidingReservoir::new(w, budget, rng))
+            }
+            WindowPolicy::Decay { half_life } => {
+                WindowedReservoir::Decay(DecayReservoir::new(half_life, budget, rng))
+            }
+        }
+    }
+
+    /// Phase 1 of the per-edge contract: advance the clock, tombstone
+    /// aged-out sampled edges into `expired` (sliding only), and return
+    /// the effective population size the arriving edge is sampled from —
+    /// the `t` to feed [`Weights::at`](crate::sampling::Weights::at).
+    ///
+    /// Must be called exactly once per arriving edge, before
+    /// [`WindowedReservoir::offer`].
+    pub fn arrive(&mut self, expired: &mut Vec<Edge>) -> usize {
+        match self {
+            // the plain reservoir advances its own clock inside offer();
+            // report the arriving edge's 1-based index without touching it
+            WindowedReservoir::Full(r) => r.t() + 1,
+            WindowedReservoir::Sliding(r) => r.arrive(expired),
+            WindowedReservoir::Decay(r) => r.arrive(),
+        }
+    }
+
+    /// Phase 2: the reservoir update for the arrival announced by
+    /// [`WindowedReservoir::arrive`].  Same action semantics as
+    /// [`Reservoir::offer`].
+    pub fn offer(&mut self, e: Edge) -> ReservoirAction {
+        match self {
+            WindowedReservoir::Full(r) => r.offer(e),
+            WindowedReservoir::Sliding(r) => r.offer(e),
+            WindowedReservoir::Decay(r) => r.offer(e),
+        }
+    }
+
+    /// Arrivals seen so far (after `arrive`+`offer` both ran for an edge,
+    /// all three arms agree).
+    pub fn t(&self) -> usize {
+        match self {
+            WindowedReservoir::Full(r) => r.t(),
+            WindowedReservoir::Sliding(r) => r.t(),
+            WindowedReservoir::Decay(r) => r.t(),
+        }
+    }
+
+    /// Edges currently stored.
+    pub fn len(&self) -> usize {
+        match self {
+            WindowedReservoir::Full(r) => r.len(),
+            WindowedReservoir::Sliding(r) => r.len(),
+            WindowedReservoir::Decay(r) => r.len(),
+        }
+    }
+
+    /// `true` when no edge is stored.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Windowed accumulators (the counter side of the lifetime model)
+// ---------------------------------------------------------------------------
+
+/// How many sealed delta-buckets a sliding accumulator keeps: the counter
+/// window expires in quanta of `max(1, w / BUCKETS)` arrivals, bounding
+/// the bookkeeping at ~65 buckets regardless of `w`.  (Sample eviction is
+/// exact; only the *counter* trailing edge is quantized — DESIGN.md §8.)
+const BUCKETS: usize = 64;
+
+/// Sliding-window accumulator for `K` scalar counters, built as
+/// *cumulative minus expired*: every credit goes into a sequential
+/// all-time total (the identical `+=` order as the full-history path) and
+/// into the current delta-bucket; when a bucket ages past the window its
+/// sum moves to the `expired` side, and the windowed value is
+/// `total - expired`.  While nothing has expired the value *is* the
+/// sequential total — bit-for-bit — which is how `Sliding{w ≥ |E|}`
+/// reproduces full-history estimates exactly despite float non-
+/// associativity.
+#[derive(Debug, Clone)]
+pub struct SlidingScalars<const K: usize> {
+    w: usize,
+    bucket_len: usize,
+    total: [f64; K],
+    expired: [f64; K],
+    buckets: VecDeque<[f64; K]>,
+    cur: [f64; K],
+    cur_count: usize,
+}
+
+impl<const K: usize> SlidingScalars<K> {
+    /// New accumulator over a `w`-arrival window.
+    pub fn new(w: usize) -> Self {
+        SlidingScalars {
+            w,
+            bucket_len: (w / BUCKETS).max(1),
+            total: [0.0; K],
+            expired: [0.0; K],
+            buckets: VecDeque::new(),
+            cur: [0.0; K],
+            cur_count: 0,
+        }
+    }
+
+    /// Advance the clock by one arrival: seal the current bucket when
+    /// full, expire buckets that fell wholly outside the window.
+    pub fn tick(&mut self) {
+        self.cur_count += 1;
+        if self.cur_count == self.bucket_len {
+            self.buckets.push_back(self.cur);
+            self.cur = [0.0; K];
+            self.cur_count = 0;
+        }
+        // covered = arrivals the retained buckets + cur span; drop the
+        // oldest sealed bucket while doing so still leaves ≥ w covered
+        let mut covered = self.buckets.len() * self.bucket_len + self.cur_count;
+        while covered >= self.w + self.bucket_len {
+            let Some(old) = self.buckets.pop_front() else { break };
+            for (e, v) in self.expired.iter_mut().zip(&old) {
+                *e += v;
+            }
+            covered -= self.bucket_len;
+        }
+    }
+
+    /// Credit counter `i` (adds to the total and the current bucket).
+    #[inline]
+    pub fn credit(&mut self, i: usize, v: f64) {
+        self.total[i] += v;
+        self.cur[i] += v;
+    }
+
+    /// The windowed counter values.
+    pub fn values(&self) -> [f64; K] {
+        let mut out = self.total;
+        for (o, e) in out.iter_mut().zip(&self.expired) {
+            *o -= e;
+        }
+        out
+    }
+}
+
+/// Policy-dispatched accumulator for `K` scalar counters.
+///
+/// * `Plain` — straight `+=`, the full-history path (bit-identical to the
+///   pre-window field accumulators).
+/// * `Sliding` — [`SlidingScalars`].
+/// * `Decay` — multiply-accumulate: every counter shrinks by
+///   `2^(-1/half_life)` per arrival, so at any instant counter `i` holds
+///   `Σ_j δ_j · 2^(-(t - t_j)/h)`.
+#[derive(Debug, Clone)]
+pub enum WindowAcc<const K: usize> {
+    /// Full-history sequential accumulation.
+    Plain([f64; K]),
+    /// Sliding cumulative-minus-expired accumulation (boxed: the bucket
+    /// bookkeeping dwarfs the other variants).
+    Sliding(Box<SlidingScalars<K>>),
+    /// Exponentially-decayed accumulation.
+    Decay {
+        /// The decayed counter values.
+        vals: [f64; K],
+        /// Per-arrival retention factor `2^(-1/half_life)`.
+        rho: f64,
+    },
+}
+
+impl<const K: usize> WindowAcc<K> {
+    /// Build the accumulator the policy calls for.
+    pub fn new(policy: WindowPolicy) -> Self {
+        match policy {
+            WindowPolicy::None => WindowAcc::Plain([0.0; K]),
+            WindowPolicy::Sliding { w } => {
+                WindowAcc::Sliding(Box::new(SlidingScalars::new(w)))
+            }
+            WindowPolicy::Decay { .. } => {
+                WindowAcc::Decay { vals: [0.0; K], rho: policy.decay_factor() }
+            }
+        }
+    }
+
+    /// Advance the clock by one arrival.  Call once per pushed edge,
+    /// before any [`WindowAcc::credit`] for that edge.
+    #[inline]
+    pub fn tick(&mut self) {
+        match self {
+            WindowAcc::Plain(_) => {}
+            WindowAcc::Sliding(s) => s.tick(),
+            WindowAcc::Decay { vals, rho } => {
+                for v in vals.iter_mut() {
+                    *v *= *rho;
+                }
+            }
+        }
+    }
+
+    /// Credit counter `i` with `v`.
+    #[inline]
+    pub fn credit(&mut self, i: usize, v: f64) {
+        match self {
+            WindowAcc::Plain(vals) => vals[i] += v,
+            WindowAcc::Sliding(s) => s.credit(i, v),
+            WindowAcc::Decay { vals, .. } => vals[i] += v,
+        }
+    }
+
+    /// The (windowed) counter values.
+    pub fn values(&self) -> [f64; K] {
+        match self {
+            WindowAcc::Plain(vals) => *vals,
+            WindowAcc::Sliding(s) => s.values(),
+            WindowAcc::Decay { vals, .. } => *vals,
+        }
+    }
+}
+
+/// Ring of the last `w` stream edges — the exact clock for *windowed
+/// degrees*.  Degrees are over all stream edges (not just sampled ones),
+/// so expiring a degree contribution requires remembering every edge for
+/// `w` arrivals: `O(w)` memory on the estimator that owns it, by design
+/// (the *sample* stays `O(b)`; see DESIGN.md §8 for the trade-off).
+#[derive(Debug, Clone)]
+pub struct EdgeRing {
+    buf: VecDeque<Edge>,
+    w: usize,
+}
+
+impl EdgeRing {
+    /// Ring over the last `w` edges.
+    pub fn new(w: usize) -> Self {
+        EdgeRing { buf: VecDeque::new(), w }
+    }
+
+    /// Push the arriving edge; returns the edge that just left the
+    /// window, if any.
+    pub fn push(&mut self, e: Edge) -> Option<Edge> {
+        self.buf.push_back(e);
+        if self.buf.len() > self.w {
+            self.buf.pop_front()
+        } else {
+            None
+        }
+    }
+
+    /// Edges currently inside the window.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    /// `true` when the window is empty.
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+/// Sliding-window expiry for *per-vertex* credits (MAEVE's triangle and
+/// path arrays): each arrival's `(vertex, Δtri, Δpath)` credits are logged
+/// into delta-buckets; when a bucket ages out its credits are handed back
+/// for subtraction.  Memory is proportional to the credits issued inside
+/// the window — the information content of a windowed per-vertex estimate.
+#[derive(Debug, Clone, Default)]
+pub struct VertexCreditLog {
+    w: usize,
+    bucket_len: usize,
+    buckets: VecDeque<Vec<(u32, f64, f64)>>,
+    cur: Vec<(u32, f64, f64)>,
+    cur_count: usize,
+}
+
+impl VertexCreditLog {
+    /// New log over a `w`-arrival window.
+    pub fn new(w: usize) -> Self {
+        VertexCreditLog {
+            w,
+            bucket_len: (w / BUCKETS).max(1),
+            buckets: VecDeque::new(),
+            cur: Vec::new(),
+            cur_count: 0,
+        }
+    }
+
+    /// Advance the clock by one arrival; expired buckets are appended to
+    /// `out` for the caller to subtract.
+    pub fn tick(&mut self, out: &mut Vec<(u32, f64, f64)>) {
+        self.cur_count += 1;
+        if self.cur_count == self.bucket_len {
+            self.buckets.push_back(std::mem::take(&mut self.cur));
+            self.cur_count = 0;
+        }
+        let mut covered = self.buckets.len() * self.bucket_len + self.cur_count;
+        while covered >= self.w + self.bucket_len {
+            let Some(old) = self.buckets.pop_front() else { break };
+            out.extend_from_slice(&old);
+            covered -= self.bucket_len;
+        }
+    }
+
+    /// Log one credit issued this arrival.
+    #[inline]
+    pub fn credit(&mut self, v: u32, dtri: f64, dpath: f64) {
+        self.cur.push((v, dtri, dpath));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn edges(n: u32) -> Vec<Edge> {
+        (0..n).map(|i| Edge::new(i, i + 1)).collect()
+    }
+
+    /// The load-bearing differential: a sliding reservoir whose window
+    /// covers the whole stream consumes the same RNG draws and returns
+    /// the same action sequence as the plain reservoir, bit-for-bit.
+    #[test]
+    fn sliding_with_huge_window_equals_plain_reservoir() {
+        for (b, n) in [(5usize, 500u32), (16, 1000), (64, 64)] {
+            let mut plain = Reservoir::new(b, Pcg64::seed_from_u64(42));
+            let mut slide = SlidingReservoir::new(10_000, b, Pcg64::seed_from_u64(42));
+            let mut expired = Vec::new();
+            for e in edges(n) {
+                let t_eff = slide.arrive(&mut expired);
+                assert!(expired.is_empty(), "w ≥ |E| must never expire");
+                assert_eq!(t_eff, slide.t());
+                assert_eq!(plain.offer(e), slide.offer(e));
+            }
+            let mut a: Vec<Edge> = plain.edges().to_vec();
+            let mut b_: Vec<Edge> = slide.entries().map(|(e, _)| e).collect();
+            a.sort_unstable();
+            b_.sort_unstable();
+            assert_eq!(a, b_);
+        }
+    }
+
+    /// Eviction census: after every arrival, no stored edge is older than
+    /// the window.
+    #[test]
+    fn sliding_never_holds_an_edge_older_than_w() {
+        let (w, b) = (37usize, 12usize);
+        let mut r = SlidingReservoir::new(w, b, Pcg64::seed_from_u64(9));
+        let mut expired = Vec::new();
+        for (i, e) in edges(2000).into_iter().enumerate() {
+            let t = i + 1;
+            expired.clear();
+            r.arrive(&mut expired);
+            r.offer(e);
+            assert!(r.len() <= b);
+            for (_, arrival) in r.entries() {
+                assert!(arrival + w > t, "edge from t={arrival} alive at t={t} (w={w})");
+            }
+        }
+        // the sample tracks the window: it can never exceed the window
+        assert!(r.len() <= w.min(b));
+    }
+
+    /// Every expired edge is reported exactly once, and every stored edge
+    /// is eventually either replaced or expired.
+    #[test]
+    fn sliding_expiry_is_exhaustive_and_unique() {
+        let (w, b) = (50usize, 20usize);
+        let mut r = SlidingReservoir::new(w, b, Pcg64::seed_from_u64(3));
+        let mut seen_expired = std::collections::BTreeSet::new();
+        let mut replaced = std::collections::BTreeSet::new();
+        let mut stored = std::collections::BTreeSet::new();
+        let mut expired = Vec::new();
+        let all = edges(800);
+        for e in &all {
+            expired.clear();
+            r.arrive(&mut expired);
+            for old in &expired {
+                assert!(seen_expired.insert(*old), "double expiry of {old:?}");
+                assert!(!replaced.contains(old), "expired after replaced: {old:?}");
+            }
+            match r.offer(*e) {
+                ReservoirAction::Stored => {
+                    stored.insert(*e);
+                }
+                ReservoirAction::Replaced(old) => {
+                    stored.insert(*e);
+                    assert!(replaced.insert(old));
+                }
+                ReservoirAction::Discarded => {}
+            }
+        }
+        let live: std::collections::BTreeSet<Edge> = r.entries().map(|(e, _)| e).collect();
+        // conservation: everything stored is now live, replaced or expired
+        for e in &stored {
+            let places = live.contains(e) as u32
+                + replaced.contains(e) as u32
+                + seen_expired.contains(e) as u32;
+            assert_eq!(places, 1, "{e:?} in {places} places");
+        }
+    }
+
+    /// With budget ≥ window, the sliding reservoir keeps the entire
+    /// window (it *is* the recent graph).
+    #[test]
+    fn sliding_with_budget_over_window_keeps_everything() {
+        let w = 25usize;
+        let mut r = SlidingReservoir::new(w, 100, Pcg64::seed_from_u64(5));
+        let mut expired = Vec::new();
+        let all = edges(300);
+        for (i, e) in all.iter().enumerate() {
+            expired.clear();
+            r.arrive(&mut expired);
+            assert_eq!(r.offer(*e), ReservoirAction::Stored);
+            let t = i + 1;
+            assert_eq!(r.len(), t.min(w));
+        }
+        let mut live: Vec<Edge> = r.entries().map(|(e, _)| e).collect();
+        live.sort_unstable();
+        assert_eq!(live, all[300 - 25..].to_vec());
+    }
+
+    /// The decay reservoir keeps at most `budget` edges and skews hard
+    /// toward recency: over many trials, a recent edge must be present
+    /// far more often than one several half-lives old.
+    #[test]
+    fn decay_prefers_recent_edges() {
+        let n = 400u32;
+        let (mut old_hits, mut new_hits) = (0u32, 0u32);
+        let trials = 200;
+        for seed in 0..trials {
+            let mut r = DecayReservoir::new(40.0, 20, Pcg64::seed_from_u64(seed));
+            for e in edges(n) {
+                r.arrive();
+                r.offer(e);
+            }
+            assert!(r.len() <= 20);
+            for (e, _) in r.entries() {
+                if e.u < 40 {
+                    old_hits += 1; // ~9 half-lives old
+                }
+                if e.u >= n - 40 {
+                    new_hits += 1; // the last half-life
+                }
+            }
+        }
+        assert!(
+            new_hits > 10 * old_hits.max(1),
+            "decay sample not recency-skewed: old={old_hits} new={new_hits}"
+        );
+    }
+
+    /// Decay ordering is antisymmetric and total even across huge age
+    /// gaps (the exp() saturation cases).
+    #[test]
+    fn decay_rank_is_consistent_at_extreme_ages() {
+        let r = DecayReservoir::new(10.0, 4, Pcg64::seed_from_u64(1));
+        let mk = |arrival, ln_u| DecayEntry { edge: Edge::new(0, 1), arrival, ln_u };
+        // a new edge always outranks one thousands of half-lives old
+        let old = mk(1, -0.01);
+        let new = mk(1_000_000, -5.0);
+        assert!(r.rank_lt(&old, &new));
+        assert!(!r.rank_lt(&new, &old));
+        // same arrival: larger ln_u wins
+        let a = mk(50, -2.0);
+        let b = mk(50, -1.0);
+        assert!(r.rank_lt(&a, &b));
+        assert!(!r.rank_lt(&b, &a));
+    }
+
+    #[test]
+    fn windowed_reservoir_full_arm_is_bit_identical() {
+        let b = 8;
+        let mut plain = Reservoir::new(b, Pcg64::seed_from_u64(7));
+        let mut wrapped = WindowedReservoir::new(WindowPolicy::None, b, Pcg64::seed_from_u64(7));
+        let mut expired = Vec::new();
+        for (i, e) in edges(600).into_iter().enumerate() {
+            let t_eff = wrapped.arrive(&mut expired);
+            assert_eq!(t_eff, i + 1, "full-history effective t is the arrival index");
+            assert!(expired.is_empty());
+            assert_eq!(plain.offer(e), wrapped.offer(e));
+        }
+        assert_eq!(plain.t(), wrapped.t());
+    }
+
+    #[test]
+    fn effective_len_per_policy() {
+        assert_eq!(WindowPolicy::None.effective_len(123), 123);
+        assert_eq!(WindowPolicy::Sliding { w: 50 }.effective_len(123), 50);
+        assert_eq!(WindowPolicy::Sliding { w: 50 }.effective_len(10), 10);
+        // n_eff ≈ h/ln2 + 0.5 ≈ 14.9 for h = 10
+        let d = WindowPolicy::Decay { half_life: 10.0 };
+        let n_eff = d.effective_len(usize::MAX - 1);
+        assert!((14..=16).contains(&n_eff), "n_eff = {n_eff}");
+        assert_eq!(d.effective_len(3), 3);
+    }
+
+    #[test]
+    fn policy_validation_catches_bad_knobs() {
+        assert!(WindowPolicy::None.validate().is_ok());
+        assert!(WindowPolicy::Sliding { w: 1 }.validate().is_ok());
+        assert!(WindowPolicy::Sliding { w: 0 }.validate().is_err());
+        assert!(WindowPolicy::Decay { half_life: 1.5 }.validate().is_ok());
+        assert!(WindowPolicy::Decay { half_life: 0.0 }.validate().is_err());
+        assert!(WindowPolicy::Decay { half_life: f64::NAN }.validate().is_err());
+        assert!(WindowPolicy::Decay { half_life: f64::INFINITY }.validate().is_err());
+    }
+
+    /// SlidingScalars: the windowed value equals a brute-force sum over
+    /// the retained quantized window, and never loses in-window credit.
+    #[test]
+    fn sliding_scalars_match_brute_force_quantized_window() {
+        let w = 40usize;
+        let mut acc = SlidingScalars::<2>::new(w);
+        let bucket = (w / BUCKETS).max(1);
+        let mut history: Vec<[f64; 2]> = Vec::new();
+        for t in 1..=500usize {
+            acc.tick();
+            let d = [t as f64, (t as f64).sqrt()];
+            acc.credit(0, d[0]);
+            acc.credit(1, d[1]);
+            history.push(d);
+            // retained arrivals: everything not yet expired.  Expiry drops
+            // whole buckets once coverage exceeds w + bucket_len, so the
+            // retained span is within [w, w + 2*bucket) arrivals.
+            let got = acc.values();
+            let lo = t.saturating_sub(w + 2 * bucket);
+            let min_keep: f64 = history[t.saturating_sub(w.min(t))..].iter().map(|d| d[0]).sum();
+            let max_keep: f64 = history[lo..].iter().map(|d| d[0]).sum();
+            assert!(
+                got[0] >= min_keep - 1e-9 && got[0] <= max_keep + 1e-9,
+                "t={t}: {} not in [{min_keep}, {max_keep}]",
+                got[0]
+            );
+        }
+    }
+
+    /// With no expiry, the sliding accumulator's value IS the sequential
+    /// total — bitwise.
+    #[test]
+    fn sliding_scalars_bitwise_total_before_expiry() {
+        let mut acc = SlidingScalars::<1>::new(usize::MAX / 2);
+        let mut plain = 0.0f64;
+        for t in 1..=1000 {
+            acc.tick();
+            let v = 0.1 * t as f64;
+            acc.credit(0, v);
+            plain += v;
+        }
+        assert_eq!(acc.values()[0], plain);
+    }
+
+    #[test]
+    fn decay_acc_is_geometric() {
+        let policy = WindowPolicy::Decay { half_life: 1.0 }; // rho = 0.5
+        let mut acc = WindowAcc::<1>::new(policy);
+        for _ in 0..4 {
+            acc.tick();
+            acc.credit(0, 1.0);
+        }
+        // 1 + 0.5 + 0.25 + 0.125
+        assert!((acc.values()[0] - 1.875).abs() < 1e-12);
+    }
+
+    #[test]
+    fn edge_ring_reports_the_leaving_edge() {
+        let mut ring = EdgeRing::new(3);
+        let es = edges(6);
+        assert_eq!(ring.push(es[0]), None);
+        assert_eq!(ring.push(es[1]), None);
+        assert_eq!(ring.push(es[2]), None);
+        assert_eq!(ring.push(es[3]), Some(es[0]));
+        assert_eq!(ring.push(es[4]), Some(es[1]));
+        assert_eq!(ring.len(), 3);
+    }
+
+    #[test]
+    fn vertex_credit_log_returns_expired_credits() {
+        let w = 10usize;
+        let mut log = VertexCreditLog::new(w);
+        let mut out = Vec::new();
+        let mut expired_total = 0.0;
+        for t in 1..=200u32 {
+            out.clear();
+            log.tick(&mut out);
+            for &(_, d, _) in &out {
+                expired_total += d;
+            }
+            log.credit(t, 1.0, 2.0);
+        }
+        // issued 200 credits of 1.0; the retained window holds at most
+        // w + 2*bucket_len of them
+        let bucket = (w / BUCKETS).max(1);
+        let retained = 200.0 - expired_total;
+        assert!(retained >= w as f64 && retained <= (w + 2 * bucket) as f64, "{retained}");
+    }
+
+    #[test]
+    fn snapshot_due_cadence() {
+        let c = WindowConfig::new(WindowPolicy::None).with_stride(10);
+        assert!(!c.snapshot_due(5));
+        assert!(c.snapshot_due(10));
+        assert!(c.snapshot_due(20));
+        let off = WindowConfig::default();
+        assert!(!off.snapshot_due(10));
+    }
+
+    #[test]
+    fn display_labels() {
+        assert_eq!(WindowPolicy::None.to_string(), "full");
+        assert_eq!(WindowPolicy::Sliding { w: 9 }.to_string(), "sliding(w=9)");
+        assert_eq!(WindowPolicy::Decay { half_life: 2.0 }.to_string(), "decay(h=2)");
+    }
+}

@@ -7,6 +7,12 @@
 //! from scratch and tested like everything else; the default build depends
 //! on nothing outside std.)
 
+// Rustdoc sweep status (ISSUE 5): the crate-level
+// `#![warn(missing_docs)]` is gated off here until this module gets
+// its own documentation pass; sampling/descriptors/coordinator/graph
+// are fully swept.
+#![allow(missing_docs)]
+
 pub mod bench;
 pub mod err;
 pub mod json;
