@@ -1,0 +1,90 @@
+//! Ingest benchmark family (ISSUE 6): wire-speed file decoding, text vs
+//! binary, through the full `FileStream` path (open + batch drain).
+//!
+//! Bench ids are `ingest/{text,binary}/<size>` over two stream fixtures
+//! written once per run from `gen::massive`:
+//!
+//! * `cs-200k` — the CS (CiteSeer-like) stand-in at scale 1.25, ≈ 200k
+//!   edges: cheap enough for the CI bench-smoke timed run;
+//! * `pt-3m` — the PT (patent-citation) stand-in at scale 2.0, ≈ 3M
+//!   edges: the multi-million-edge fixture behind the DESIGN.md §9
+//!   binary-≥2×-text throughput claim.
+//!
+//! The timed closure is open-to-drain: it includes `FileStream::open`, so
+//! the text arm pays its SIMD counting pre-pass and the binary arm shows
+//! the header-carried `|E|` paying it off — that asymmetry is the point of
+//! the format, not noise to exclude.  Throughput is edges/s (`elements` =
+//! fixture edge count).
+//!
+//! `STREAM_DESCRIPTORS_FORCE_INGEST={scalar,sse42,avx2}` pins the text
+//! parser arm, which is how the CI feature matrix runs the family per
+//! kernel.  `--json`, `--filter`, `--compare`, `--tolerance` follow the
+//! shared bench contract; the CI bench-gate compares this family against
+//! `benches/baselines/ingest.json` at 10% tolerance.
+
+use std::path::Path;
+use std::process::ExitCode;
+
+use stream_descriptors::gen::massive::{write_stream_fixture, MassiveKind};
+use stream_descriptors::graph::ingest;
+use stream_descriptors::graph::stream::{EdgeStream, FileStream};
+use stream_descriptors::util::bench::{BenchArgs, Bencher};
+use stream_descriptors::util::tmp::TempDir;
+
+/// Open-to-drain: the whole per-run ingest cost, returned edge count
+/// black-boxed by the bencher.
+fn drain(path: &Path) -> u64 {
+    let mut s = FileStream::open(path).expect("ingest bench: open");
+    let mut buf = Vec::with_capacity(8192);
+    let mut n = 0u64;
+    loop {
+        buf.clear();
+        let got = s.next_batch(&mut buf, 8192);
+        if got == 0 {
+            break;
+        }
+        n += got as u64;
+        std::hint::black_box(buf.as_slice());
+    }
+    if let Some(e) = s.take_error() {
+        panic!("ingest bench: stream error: {e}");
+    }
+    n
+}
+
+fn main() -> ExitCode {
+    let args = BenchArgs::parse("ingest");
+    let mut b = Bencher::new(1, 5);
+    // `cargo bench -- --test` (the CI smoke check) verifies the bench
+    // compiles and launches, then exits without timing anything.
+    if args.smoke {
+        println!("ingest: smoke mode, skipping timed runs");
+        return args.finish("ingest", &b);
+    }
+    println!("# ingest text parser arm: {}", ingest::active_arm().name());
+    let dir = TempDir::new("ingest-bench").expect("temp dir");
+    let sizes: &[(&str, MassiveKind, f64)] =
+        &[("cs-200k", MassiveKind::Cs, 1.25), ("pt-3m", MassiveKind::Pt, 2.0)];
+    for &(size, kind, scale) in sizes {
+        // skip fixture generation entirely when --filter excludes the size
+        if !args.matches(&format!("ingest/text/{size}"))
+            && !args.matches(&format!("ingest/binary/{size}"))
+        {
+            continue;
+        }
+        let fx = write_stream_fixture(kind, scale, 7, dir.path()).expect("fixture");
+        println!("# {size}: |E|={} ({} / {})", fx.edges, fx.text.display(), fx.binary.display());
+        for (encoding, path) in [("text", &fx.text), ("binary", &fx.binary)] {
+            let id = format!("ingest/{encoding}/{size}");
+            if !args.matches(&id) {
+                continue;
+            }
+            b.bench(id, Some(fx.edges as u64), || {
+                let n = drain(path);
+                assert_eq!(n as usize, fx.edges, "short read");
+                n
+            });
+        }
+    }
+    args.finish("ingest", &b)
+}

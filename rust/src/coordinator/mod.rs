@@ -375,12 +375,19 @@ pub fn run_pipeline(
     let degrees: Option<Arc<Vec<u32>>> = match kind {
         DescriptorKind::Santa { .. } => {
             let mut deg: Vec<u32> = Vec::new();
-            while let Some(e) = stream.next_edge() {
-                if deg.len() <= e.v as usize {
-                    deg.resize(e.v as usize + 1, 0);
+            let mut buf: Vec<Edge> = Vec::with_capacity(cfg.chunk_size);
+            loop {
+                buf.clear();
+                if stream.next_batch(&mut buf, cfg.chunk_size) == 0 {
+                    break;
                 }
-                deg[e.u as usize] += 1;
-                deg[e.v as usize] += 1;
+                for e in &buf {
+                    if deg.len() <= e.v as usize {
+                        deg.resize(e.v as usize + 1, 0);
+                    }
+                    deg[e.u as usize] += 1;
+                    deg[e.v as usize] += 1;
+                }
             }
             if let Some(e) = stream.take_error() {
                 return Err(e.context("santa pass 1 truncated by stream error"));
@@ -438,14 +445,19 @@ pub fn run_pipeline(
                 }));
             }
 
-            // master: stage into a reusable buffer, publish each chunk once
-            // per active node (send fails only after a worker died — stop
-            // streaming and let the joins below report the panic)
+            // master: batch-decode straight into the reusable staging
+            // buffer (ISSUE 6 — no per-edge hop for batch-native streams),
+            // publish each chunk once per active node (send fails only
+            // after a worker died — stop streaming and let the joins below
+            // report the panic)
             let mut staging: Vec<Edge> = Vec::with_capacity(cfg.chunk_size);
-            while let Some(e) = stream.next_edge() {
-                edges += 1;
-                staging.push(e);
+            loop {
+                let got = stream.next_batch(&mut staging, cfg.chunk_size - staging.len());
+                edges += got as u64;
                 if staging.len() >= cfg.chunk_size && !fan.broadcast(&mut staging) {
+                    break;
+                }
+                if got == 0 {
                     break;
                 }
             }
@@ -888,6 +900,47 @@ mod tests {
         let err = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: true }, &cfg)
             .expect_err("exact_wedges + window must be rejected");
         assert!(err.to_string().contains("exact_wedges"), "{err}");
+    }
+
+    // ---- ISSUE 6: binary ingest is pipeline-equivalent to text ----
+
+    /// The full fan-out pipeline over a binary `.sdg` input is bit-identical
+    /// to the same pipeline over the text form of the same stream — for a
+    /// budgeted run where the reservoir genuinely randomizes, and for the
+    /// two-pass SANTA path (binary reset, header-served `len_hint`).
+    #[test]
+    fn pipeline_over_binary_matches_text_bit_for_bit() {
+        let dir = crate::util::tmp::TempDir::new("coord-bin").unwrap();
+        let fx = crate::gen::massive::write_stream_fixture(
+            crate::gen::massive::MassiveKind::Cs,
+            0.01,
+            5,
+            dir.path(),
+        )
+        .unwrap();
+        let cfg = CoordinatorConfig {
+            workers: 3,
+            budget: fx.edges / 3,
+            chunk_size: 61,
+            queue_depth: 2,
+            seed: 19,
+            ..Default::default()
+        };
+        for kind in [DescriptorKind::Gabe, DescriptorKind::Santa { exact_wedges: false }] {
+            let mut text = FileStream::open(&fx.text).unwrap();
+            let mut bin = FileStream::open(&fx.binary).unwrap();
+            let a = run_pipeline(&mut text, kind, &cfg).unwrap();
+            let b = run_pipeline(&mut bin, kind, &cfg).unwrap();
+            assert_eq!(a.edges, b.edges);
+            assert_eq!(a.edges as usize, fx.edges);
+            assert!(
+                estimates_bit_identical(&a.averaged, &b.averaged),
+                "{kind:?}: binary pipeline diverged from text"
+            );
+            for (pw, bw) in a.per_worker.iter().zip(&b.per_worker) {
+                assert!(estimates_bit_identical(pw, bw));
+            }
+        }
     }
 
     // ---- ISSUE 4 satellite: stream failures surface as errors ----

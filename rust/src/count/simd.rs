@@ -61,57 +61,12 @@ pub struct SetView<'a> {
     pub ep: u32,
 }
 
-/// The three dispatch arms.  `Sse42`/`Avx2` exist only on `x86_64` and are
-/// used only when the CPU reports the feature (or the env override forces
-/// them, which panics on unsupported hardware rather than running scalar
-/// code under a SIMD label).
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
-pub enum KernelArm {
-    Scalar,
-    Sse42,
-    Avx2,
-}
-
-impl KernelArm {
-    pub fn name(self) -> &'static str {
-        match self {
-            KernelArm::Scalar => "scalar",
-            KernelArm::Sse42 => "sse42",
-            KernelArm::Avx2 => "avx2",
-        }
-    }
-
-    /// Parse the `STREAM_DESCRIPTORS_FORCE_KERNEL` spelling.
-    pub fn parse(s: &str) -> Option<KernelArm> {
-        match s.trim().to_ascii_lowercase().as_str() {
-            "scalar" => Some(KernelArm::Scalar),
-            "sse42" | "sse4.2" => Some(KernelArm::Sse42),
-            "avx2" => Some(KernelArm::Avx2),
-            _ => None,
-        }
-    }
-
-    /// Can this arm run on the current CPU?
-    pub fn supported(self) -> bool {
-        match self {
-            KernelArm::Scalar => true,
-            #[cfg(target_arch = "x86_64")]
-            KernelArm::Sse42 => is_x86_feature_detected!("sse4.2"),
-            #[cfg(target_arch = "x86_64")]
-            KernelArm::Avx2 => is_x86_feature_detected!("avx2"),
-            #[cfg(not(target_arch = "x86_64"))]
-            _ => false,
-        }
-    }
-}
-
-/// Every arm the current CPU can execute (always includes `Scalar`).
-pub fn available_arms() -> Vec<KernelArm> {
-    [KernelArm::Scalar, KernelArm::Sse42, KernelArm::Avx2]
-        .into_iter()
-        .filter(|a| a.supported())
-        .collect()
-}
+// The arm enum and its detection/override logic moved to the shared
+// substrate in ISSUE 6 (the ingest parser dispatches over the same three
+// arms); re-exported here so the established `count::simd::KernelArm` /
+// `available_arms` paths — used by benches and the differential tests —
+// keep working unchanged.
+pub use crate::util::simd::{available_arms, KernelArm};
 
 /// The vectorized leg of one dispatch arm: `(set, big, min_slot, e1, e2)`.
 /// `set.list` arrives pre-trimmed to `>= min_slot`.
@@ -151,23 +106,8 @@ fn table_entry(arm: KernelArm) -> Dispatch {
 }
 
 fn detect_arm() -> KernelArm {
-    // an empty value counts as unset (CI matrix legs export it blank)
-    let force = std::env::var(FORCE_KERNEL_ENV).unwrap_or_default();
-    if !force.is_empty() {
-        let v = force;
-        let arm = KernelArm::parse(&v).unwrap_or_else(|| {
-            panic!("{FORCE_KERNEL_ENV}={v}: expected scalar | sse42 | avx2")
-        });
-        assert!(arm.supported(), "{FORCE_KERNEL_ENV}={v}: arm not supported by this CPU");
-        return arm;
-    }
-    if KernelArm::Avx2.supported() {
-        KernelArm::Avx2
-    } else if KernelArm::Sse42.supported() {
-        KernelArm::Sse42
-    } else {
-        KernelArm::Scalar
-    }
+    crate::util::simd::forced_arm(FORCE_KERNEL_ENV)
+        .unwrap_or_else(crate::util::simd::detect_best)
 }
 
 fn dispatch() -> &'static Dispatch {

@@ -334,7 +334,8 @@ impl GraphDescriptor for Gabe {
 
     fn compute(&self, g: &Graph, seed: u64) -> Vec<f64> {
         let mut stream = super::stream_of(g, seed);
-        let b = super::resolve_budget(self.budget, &stream);
+        let b = super::resolve_budget(self.budget, &stream)
+            .expect("VecStream always has a len hint");
         let est = GabeEstimator::new(b).with_seed(seed ^ 0x6a6e).run(&mut stream);
         est.descriptor().to_vec()
     }

@@ -411,7 +411,8 @@ impl GraphDescriptor for Maeve {
 
     fn compute(&self, g: &Graph, seed: u64) -> Vec<f64> {
         let mut stream = super::stream_of(g, seed);
-        let b = super::resolve_budget(self.budget, &stream);
+        let b = super::resolve_budget(self.budget, &stream)
+            .expect("VecStream always has a len hint");
         let est = MaeveEstimator::new(b).with_seed(seed ^ 0x3ae0).run(&mut stream);
         est.descriptor().to_vec()
     }

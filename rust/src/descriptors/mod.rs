@@ -64,13 +64,29 @@ pub fn stream_of(g: &Graph, seed: u64) -> VecStream {
 
 /// Helper: resolve a budget against a stream.  The resettable in-tree
 /// stream types report a real `len_hint` (`VecStream` trivially;
-/// `FileStream` counts edges at open — ISSUE 4), so `Budget::Fraction`
-/// resolves against the true `|E|`.  The `1 << 20` fallback only applies
-/// to hintless one-shot streams (`ReaderStream` et al.), where a fraction
-/// of `|E|` is not computable in one pass anyway — prefer `Budget::Edges`
-/// for those.
-pub fn resolve_budget(b: Budget, s: &impl EdgeStream) -> usize {
-    b.resolve(s.len_hint().unwrap_or(1 << 20))
+/// `FileStream` from its open-time count or binary header), so
+/// `Budget::Fraction` resolves against the true `|E|`.
+///
+/// Relative budgets (`Fraction`, `Exact`) over a *hintless* stream
+/// (`ReaderStream` et al.) are an error: a fraction of an unknown `|E|` is
+/// not computable in one pass, and the old `1 << 20` fallback silently
+/// turned "¼ of the stream" into "up to a million edges" — wrong in both
+/// directions (ISSUE 6 bugfix).  Use `Budget::Edges` for one-shot sources,
+/// or convert the input to the binary format (`repro convert`), whose
+/// header carries `|E|`.
+pub fn resolve_budget(b: Budget, s: &impl EdgeStream) -> crate::Result<usize> {
+    match (s.len_hint(), b) {
+        (Some(m), _) => Ok(b.resolve(m)),
+        (None, Budget::Edges(n)) => Ok(n.max(1)),
+        (None, Budget::Fraction(f)) => Err(crate::anyhow!(
+            "Budget::Fraction({f}) needs a stream length hint, but this stream \
+             reports none; use Budget::Edges or a FileStream/binary input"
+        )),
+        (None, Budget::Exact) => Err(crate::anyhow!(
+            "Budget::Exact needs a stream length hint, but this stream reports \
+             none; use Budget::Edges or a FileStream/binary input"
+        )),
+    }
 }
 
 #[cfg(test)]
@@ -84,5 +100,22 @@ mod tests {
         assert_eq!(Budget::Fraction(0.5).resolve(101), 51);
         assert_eq!(Budget::Exact.resolve(100), 100);
         assert_eq!(Budget::Edges(0).resolve(100), 1);
+    }
+
+    /// ISSUE 6 regression: a relative budget over a hintless stream errors
+    /// instead of resolving against the old fabricated `1 << 20` length.
+    #[test]
+    fn relative_budget_over_hintless_stream_errors() {
+        use crate::graph::stream::ReaderStream;
+        let mk = || ReaderStream::new(std::io::BufReader::new(std::io::Cursor::new(b"0 1\n")));
+        let err = resolve_budget(Budget::Fraction(0.25), &mk()).unwrap_err();
+        assert!(err.to_string().contains("length hint"), "{err}");
+        let err = resolve_budget(Budget::Exact, &mk()).unwrap_err();
+        assert!(err.to_string().contains("length hint"), "{err}");
+        // absolute budgets never need the hint
+        assert_eq!(resolve_budget(Budget::Edges(7), &mk()).unwrap(), 7);
+        // and a hinted stream resolves as before
+        let v = VecStream::new((0..40).map(|i| crate::graph::Edge::new(i, i + 1)).collect());
+        assert_eq!(resolve_budget(Budget::Fraction(0.25), &v).unwrap(), 10);
     }
 }

@@ -452,7 +452,8 @@ impl GraphDescriptor for Santa {
 
     fn compute(&self, g: &Graph, seed: u64) -> Vec<f64> {
         let mut stream = super::stream_of(g, seed);
-        let b = super::resolve_budget(self.budget, &stream);
+        let b = super::resolve_budget(self.budget, &stream)
+            .expect("VecStream always has a len hint");
         let cfg = SantaConfig::new(b)
             .with_seed(seed ^ 0x5a27a)
             .with_exact_wedges(self.exact_wedges);

@@ -5,9 +5,13 @@
 //! harness finishes on one machine — the *shape* of Tables 16/17 is what we
 //! reproduce).
 
+use std::path::{Path, PathBuf};
+
 use crate::util::rng::Pcg64;
 
 use super::{ba_graph, community_graph, powerlaw_cluster_graph, road_graph};
+use crate::graph::ingest::write_binary_edge_list;
+use crate::graph::stream::write_edge_list;
 use crate::graph::Graph;
 
 /// The seven network types of Table 13.
@@ -102,6 +106,39 @@ pub fn massive_graph(kind: MassiveKind, scale: f64, seed: u64) -> Graph {
     }
 }
 
+/// Paths of one on-disk stream fixture: the same shuffled edge order in
+/// both encodings.
+#[derive(Debug, Clone)]
+pub struct StreamFixture {
+    /// Text edge list (`u v` lines).
+    pub text: PathBuf,
+    /// Binary edge list (`.sdg`, ISSUE 6 format).
+    pub binary: PathBuf,
+    /// Edges in each file.
+    pub edges: usize,
+}
+
+/// Write one massive-network stand-in to `dir` as a *stream fixture*: the
+/// paper-shuffled edge order (§5.2) serialized as both a text edge list
+/// and its binary `.sdg` twin, so ingest benches and differential tests
+/// can read the identical stream through either decoder.
+pub fn write_stream_fixture(
+    kind: MassiveKind,
+    scale: f64,
+    seed: u64,
+    dir: impl AsRef<Path>,
+) -> crate::Result<StreamFixture> {
+    let g = massive_graph(kind, scale, seed);
+    let stream = crate::graph::stream::VecStream::shuffled(g.edges, seed);
+    let edges = stream.edges();
+    let base = format!("{}-s{scale}", kind.name().to_ascii_lowercase());
+    let text = dir.as_ref().join(format!("{base}.txt"));
+    let binary = dir.as_ref().join(format!("{base}.sdg"));
+    write_edge_list(&text, edges)?;
+    write_binary_edge_list(&binary, g.n as u64, edges)?;
+    Ok(StreamFixture { text, binary, edges: edges.len() })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,6 +157,24 @@ mod tests {
         let social = massive_graph(MassiveKind::Fl, 0.05, 2);
         assert!(road.avg_degree() < 5.0);
         assert!(social.avg_degree() > 8.0);
+    }
+
+    /// ISSUE 6: both encodings of a fixture replay the identical stream.
+    #[test]
+    fn stream_fixture_encodings_agree() {
+        use crate::graph::stream::{EdgeStream, FileStream};
+        let dir = crate::util::tmp::TempDir::new("fixture").unwrap();
+        let fx = write_stream_fixture(MassiveKind::Cs, 0.01, 3, dir.path()).unwrap();
+        assert!(fx.edges > 50);
+        let drain = |p: &std::path::Path| {
+            let mut s = FileStream::open(p).unwrap();
+            assert_eq!(s.len_hint(), Some(fx.edges), "{}", p.display());
+            let mut v = Vec::new();
+            while s.next_batch(&mut v, 1024) > 0 {}
+            assert!(s.take_error().is_none());
+            v
+        };
+        assert_eq!(drain(&fx.text), drain(&fx.binary));
     }
 
     #[test]

@@ -1,0 +1,497 @@
+//! The zero-copy text decoder: SIMD newline scanning + SWAR digit parse.
+//!
+//! [`TextIngest`] decodes whitespace-separated `u v` edge lists straight
+//! from a [`ByteSource`] window into `Edge` batches — no per-line `String`,
+//! no `BufRead`.  Line boundaries are found by the active [`KernelArm`]'s
+//! newline kernel (32-lane AVX2 / 16-lane SSE4.2 compare-and-movemask, or
+//! an 8-byte SWAR scan as the portable fallback), selected once at first
+//! use through the shared [`crate::util::simd`] substrate and overridable
+//! with [`FORCE_INGEST_ENV`] for the CI feature matrix.  Digit runs are
+//! then converted by an 8-digit SWAR multiply-reduce kernel shared by all
+//! arms.
+//!
+//! **Parity contract**: for every input, the decoded edge sequence — and
+//! any recorded `io::Error` — must match the old `BufRead` path
+//! (`ReaderStream` pumping [`parse_edge_line`]) bit for bit; the
+//! differential suite in [`super`] pins this on generated graphs and
+//! adversarial bytes.  Two consequences shape the fast path:
+//!
+//! * `str::parse::<u32>` accepts a leading `+`, and `split_whitespace`
+//!   splits on *Unicode* whitespace, so any line containing a `+` token
+//!   start or a non-ASCII byte falls back to the exact old parser (and a
+//!   non-UTF-8 line records the same `InvalidData` error `read_line`
+//!   produced);
+//! * everything else — comments, garbage tokens, overlong numbers,
+//!   self-loops — is *skipped*, never fatal, exactly like the old path.
+
+use std::io;
+use std::path::Path;
+use std::sync::OnceLock;
+
+use super::source::ByteSource;
+use crate::graph::stream::parse_edge_line;
+use crate::graph::Edge;
+use crate::util::simd::KernelArm;
+
+/// Env var forcing one ingest parser arm: `scalar`, `sse42` or `avx2`.
+/// Distinct from `STREAM_DESCRIPTORS_FORCE_KERNEL` so the CI matrix can
+/// pin the ingest and intersection arms independently.
+pub const FORCE_INGEST_ENV: &str = "STREAM_DESCRIPTORS_FORCE_INGEST";
+
+/// Index of the first `\n` in `data`, if any.
+type FindNl = fn(&[u8]) -> Option<usize>;
+
+struct Dispatch {
+    arm: KernelArm,
+    find_nl: FindNl,
+}
+
+fn table_entry(arm: KernelArm) -> Dispatch {
+    match arm {
+        KernelArm::Scalar => Dispatch { arm, find_nl: find_nl_scalar },
+        #[cfg(target_arch = "x86_64")]
+        KernelArm::Sse42 => Dispatch { arm, find_nl: x86::find_nl_sse42_thunk },
+        #[cfg(target_arch = "x86_64")]
+        KernelArm::Avx2 => Dispatch { arm, find_nl: x86::find_nl_avx2_thunk },
+        #[cfg(not(target_arch = "x86_64"))]
+        _ => unreachable!("non-x86_64 dispatch is always scalar"),
+    }
+}
+
+fn dispatch() -> &'static Dispatch {
+    static TABLE: OnceLock<Dispatch> = OnceLock::new();
+    TABLE.get_or_init(|| {
+        let arm = crate::util::simd::forced_arm(FORCE_INGEST_ENV)
+            .unwrap_or_else(crate::util::simd::detect_best);
+        table_entry(arm)
+    })
+}
+
+/// The arm the ingest dispatch table resolved to (detection or the
+/// [`FORCE_INGEST_ENV`] override).
+pub fn active_arm() -> KernelArm {
+    dispatch().arm
+}
+
+/// Run one specific arm's newline kernel (differential tests).  Panics if
+/// the CPU cannot execute `arm`.
+#[cfg(test)]
+pub(crate) fn find_newline_on(arm: KernelArm, data: &[u8]) -> Option<usize> {
+    assert!(arm.supported(), "ingest arm {} not supported here", arm.name());
+    (table_entry(arm).find_nl)(data)
+}
+
+// ---------------------------------------------------------------------
+// newline kernels
+// ---------------------------------------------------------------------
+
+/// Portable fallback: 8 bytes per step via the SWAR zero-byte trick.
+fn find_nl_scalar(data: &[u8]) -> Option<usize> {
+    const LO: u64 = 0x0101_0101_0101_0101;
+    const HI: u64 = 0x8080_8080_8080_8080;
+    let nl = LO * b'\n' as u64;
+    let n = data.len();
+    let mut i = 0;
+    while i + 8 <= n {
+        let w = u64::from_le_bytes(data[i..i + 8].try_into().unwrap());
+        let x = w ^ nl;
+        // lowest set bit marks the first zero byte of x, i.e. the first \n
+        let hit = x.wrapping_sub(LO) & !x & HI;
+        if hit != 0 {
+            return Some(i + (hit.trailing_zeros() / 8) as usize);
+        }
+        i += 8;
+    }
+    data[i..].iter().position(|&b| b == b'\n').map(|k| i + k)
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use std::arch::x86_64::*;
+
+    use super::find_nl_scalar;
+
+    /// Safe entries: detection (or the env override's `supported` assert)
+    /// guarantees the feature before a thunk lands in the dispatch table.
+    pub(super) fn find_nl_sse42_thunk(data: &[u8]) -> Option<usize> {
+        unsafe { find_nl_sse42(data) }
+    }
+
+    pub(super) fn find_nl_avx2_thunk(data: &[u8]) -> Option<usize> {
+        unsafe { find_nl_avx2(data) }
+    }
+
+    /// 16 bytes per step: compare against a broadcast `\n`, movemask,
+    /// trailing_zeros for the first hit.  The sub-16 tail reuses the SWAR
+    /// scan (only the last window of a file ever takes it).
+    #[target_feature(enable = "sse4.2")]
+    unsafe fn find_nl_sse42(data: &[u8]) -> Option<usize> {
+        let n = data.len();
+        let needle = _mm_set1_epi8(b'\n' as i8);
+        let mut i = 0;
+        while i + 16 <= n {
+            let v = _mm_loadu_si128(data.as_ptr().add(i) as *const __m128i);
+            let m = _mm_movemask_epi8(_mm_cmpeq_epi8(v, needle)) as u32;
+            if m != 0 {
+                return Some(i + m.trailing_zeros() as usize);
+            }
+            i += 16;
+        }
+        find_nl_scalar(&data[i..]).map(|k| i + k)
+    }
+
+    /// 32 bytes per step, same shape as the SSE4.2 kernel.
+    #[target_feature(enable = "avx2")]
+    unsafe fn find_nl_avx2(data: &[u8]) -> Option<usize> {
+        let n = data.len();
+        let needle = _mm256_set1_epi8(b'\n' as i8);
+        let mut i = 0;
+        while i + 32 <= n {
+            let v = _mm256_loadu_si256(data.as_ptr().add(i) as *const __m256i);
+            let m = _mm256_movemask_epi8(_mm256_cmpeq_epi8(v, needle)) as u32;
+            if m != 0 {
+                return Some(i + m.trailing_zeros() as usize);
+            }
+            i += 32;
+        }
+        find_nl_scalar(&data[i..]).map(|k| i + k)
+    }
+}
+
+// ---------------------------------------------------------------------
+// SWAR digit parse
+// ---------------------------------------------------------------------
+
+/// Parse exactly 8 ASCII digits held in `chunk` (first digit in the low
+/// byte — the natural little-endian load of the text): three
+/// multiply-reduce steps collapse 8 digits to one u32.
+#[inline]
+fn parse8(chunk: u64) -> u32 {
+    let mut v = chunk & 0x0F0F_0F0F_0F0F_0F0F;
+    v = v.wrapping_mul(2561) >> 8; // pairs:   d0*10 + d1
+    v = (v & 0x00FF_00FF_00FF_00FF).wrapping_mul(6_553_601) >> 16; // quads
+    ((v & 0x0000_FFFF_0000_FFFF).wrapping_mul(42_949_672_960_001) >> 32) as u32
+}
+
+/// Scan the ASCII-digit run starting at `i`: returns the parsed value (or
+/// `None` when it cannot fit a `u32` — the line is then skipped, exactly
+/// as `str::parse::<u32>` would fail) and the index one past the run.
+fn digit_run(line: &[u8], i: usize) -> (Option<u32>, usize) {
+    let mut j = i;
+    while j < line.len() && line[j].is_ascii_digit() {
+        j += 1;
+    }
+    let run = &line[i..j];
+    let val = match run.len() {
+        0 => None,
+        1..=8 => {
+            let mut buf = *b"00000000";
+            buf[8 - run.len()..].copy_from_slice(run);
+            Some(parse8(u64::from_le_bytes(buf)))
+        }
+        9 | 10 => {
+            let (head, tail) = run.split_at(run.len() - 8);
+            let mut hi = 0u64;
+            for &b in head {
+                hi = hi * 10 + (b - b'0') as u64;
+            }
+            let mut buf = [0u8; 8];
+            buf.copy_from_slice(tail);
+            let v = hi * 100_000_000 + parse8(u64::from_le_bytes(buf)) as u64;
+            u32::try_from(v).ok()
+        }
+        // > 10 digits can never fit a u32 (and labels near u64::MAX in the
+        // adversarial inputs land here): same skip as the old parse failure
+        _ => None,
+    };
+    (val, j)
+}
+
+// ---------------------------------------------------------------------
+// line decode
+// ---------------------------------------------------------------------
+
+/// ASCII whitespace as `char::is_whitespace` sees it, minus `\n` (line
+/// terminator, never inside a line): space, tab, CR, vertical tab, form
+/// feed.  CR makes CRLF files parse identically to LF files.
+#[inline]
+fn is_ws(b: u8) -> bool {
+    matches!(b, b' ' | b'\t' | b'\r' | 0x0B | 0x0C)
+}
+
+/// Any byte ≥ 0x80?  Such a line may hold Unicode whitespace (a valid
+/// separator under `split_whitespace`) or invalid UTF-8 (an error under
+/// `read_line`) — both take the exact fallback path.
+#[inline]
+fn has_non_ascii(line: &[u8]) -> bool {
+    const HI: u64 = 0x8080_8080_8080_8080;
+    let mut chunks = line.chunks_exact(8);
+    for ch in &mut chunks {
+        if u64::from_le_bytes(ch.try_into().unwrap()) & HI != 0 {
+            return true;
+        }
+    }
+    chunks.remainder().iter().any(|&b| b >= 0x80)
+}
+
+enum LineParse {
+    Parsed(Edge),
+    Skip,
+    Fallback,
+}
+
+/// The all-ASCII fast path; see the module docs for the parity contract.
+fn fast_line(line: &[u8]) -> LineParse {
+    if has_non_ascii(line) {
+        return LineParse::Fallback;
+    }
+    let n = line.len();
+    let mut i = 0;
+    while i < n && is_ws(line[i]) {
+        i += 1;
+    }
+    if i == n {
+        return LineParse::Skip; // blank line
+    }
+    if !line[i].is_ascii_digit() {
+        // `+5` parses as 5 under str::parse::<u32> — exact path decides
+        return if line[i] == b'+' { LineParse::Fallback } else { LineParse::Skip };
+    }
+    let (va, i2) = digit_run(line, i);
+    if i2 == n {
+        return LineParse::Skip; // single token
+    }
+    if !is_ws(line[i2]) {
+        return LineParse::Skip; // token carries trailing garbage ("12x")
+    }
+    let mut j = i2;
+    while j < n && is_ws(line[j]) {
+        j += 1;
+    }
+    if j == n {
+        return LineParse::Skip; // single token, trailing whitespace
+    }
+    if line[j] == b'+' {
+        return LineParse::Fallback;
+    }
+    if !line[j].is_ascii_digit() {
+        return LineParse::Skip;
+    }
+    let (vb, j2) = digit_run(line, j);
+    if j2 < n && !is_ws(line[j2]) {
+        return LineParse::Skip;
+    }
+    // anything after the second token's terminator is ignored, exactly
+    // like split_whitespace taking only the first two tokens
+    match (va, vb) {
+        (Some(a), Some(b)) => match Edge::try_new(a, b) {
+            Some(e) => LineParse::Parsed(e),
+            None => LineParse::Skip, // self-loop
+        },
+        _ => LineParse::Skip, // a token overflowed u32
+    }
+}
+
+/// Decode complete lines from `win` into `out`, up to `max` edges.
+/// Returns `(bytes_consumed, edges_appended)`.  With `eof` set the final
+/// unterminated line is decoded too (`read_line` parity).  A non-UTF-8
+/// fallback line records the same `InvalidData` error the old reader
+/// produced and terminates decoding.
+fn decode_lines(
+    win: &[u8],
+    eof: bool,
+    out: &mut Vec<Edge>,
+    max: usize,
+    err: &mut Option<io::Error>,
+) -> (usize, usize) {
+    let d = dispatch();
+    let mut pos = 0;
+    let mut n = 0;
+    while n < max {
+        let rest = &win[pos..];
+        if rest.is_empty() {
+            break;
+        }
+        let (line, adv) = match (d.find_nl)(rest) {
+            Some(k) => (&rest[..k], k + 1),
+            None if eof => (rest, rest.len()),
+            None => break, // partial line: caller refills the window
+        };
+        pos += adv;
+        match fast_line(line) {
+            LineParse::Parsed(e) => {
+                out.push(e);
+                n += 1;
+            }
+            LineParse::Skip => {}
+            LineParse::Fallback => match std::str::from_utf8(line) {
+                Ok(s) => {
+                    if let Some(e) = parse_edge_line(s) {
+                        out.push(e);
+                        n += 1;
+                    }
+                }
+                Err(_) => {
+                    *err = Some(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        "stream did not contain valid UTF-8",
+                    ));
+                    return (pos, n);
+                }
+            },
+        }
+    }
+    (pos, n)
+}
+
+// ---------------------------------------------------------------------
+// TextIngest
+// ---------------------------------------------------------------------
+
+/// Batch decoder over a text edge list; the text arm of
+/// [`super::Ingest`].
+pub struct TextIngest {
+    src: ByteSource,
+    err: Option<io::Error>,
+    done: bool,
+}
+
+impl TextIngest {
+    /// Open a text edge list (mapped or chunked, auto-selected).
+    pub fn open(path: impl AsRef<Path>) -> io::Result<TextIngest> {
+        Ok(TextIngest::from_source(ByteSource::open(path)?))
+    }
+
+    /// Decode from an already-open source (tests pin specific arms).
+    pub(crate) fn from_source(src: ByteSource) -> TextIngest {
+        TextIngest { src, err: None, done: false }
+    }
+
+    /// Append up to `max` edges to `out`; returns how many were appended.
+    /// `0` means end of input *or* a recorded error — check
+    /// [`TextIngest::io_error`] to tell them apart.
+    pub fn next_batch(&mut self, out: &mut Vec<Edge>, max: usize) -> usize {
+        let mut n = 0;
+        while n < max && self.err.is_none() && !self.done {
+            let eof = self.src.is_eof();
+            let (consumed, got) = decode_lines(self.src.window(), eof, out, max - n, &mut self.err);
+            self.src.consume(consumed);
+            n += got;
+            if self.err.is_some() || n >= max {
+                break;
+            }
+            if eof {
+                // decoding at eof consumes every remaining byte
+                self.done = true;
+            } else if let Err(e) = self.src.fill() {
+                self.err = Some(e);
+            }
+        }
+        n
+    }
+
+    /// The recorded I/O failure, if any, without consuming it.
+    pub fn io_error(&self) -> Option<&io::Error> {
+        self.err.as_ref()
+    }
+
+    /// Take the recorded I/O failure (the stream stays terminated).
+    pub fn take_io_error(&mut self) -> Option<io::Error> {
+        self.err.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::simd::available_arms;
+
+    #[test]
+    fn newline_kernels_agree_with_naive_scan() {
+        let mut data = vec![b'a'; 100];
+        // hits at block boundaries of both vector widths and the SWAR step
+        for &hit in &[0usize, 7, 8, 15, 16, 17, 31, 32, 33, 63, 64, 99] {
+            let mut d = data.clone();
+            d[hit] = b'\n';
+            for arm in available_arms() {
+                assert_eq!(find_newline_on(arm, &d), Some(hit), "{} hit={hit}", arm.name());
+            }
+        }
+        for arm in available_arms() {
+            assert_eq!(find_newline_on(arm, &data), None, "{} no-hit", arm.name());
+            assert_eq!(find_newline_on(arm, b""), None, "{} empty", arm.name());
+        }
+        // first of several
+        data[40] = b'\n';
+        data[41] = b'\n';
+        data[90] = b'\n';
+        for arm in available_arms() {
+            assert_eq!(find_newline_on(arm, &data), Some(40), "{} first-of-3", arm.name());
+        }
+    }
+
+    #[test]
+    fn swar_parse_matches_str_parse() {
+        let cases: &[&str] = &[
+            "0",
+            "7",
+            "42",
+            "999",
+            "10000",
+            "123456",
+            "9999999",
+            "12345678",
+            "123456789",
+            "1234567890",
+            "4294967295", // u32::MAX
+        ];
+        for s in cases {
+            let (got, end) = digit_run(s.as_bytes(), 0);
+            assert_eq!(end, s.len());
+            assert_eq!(got, Some(s.parse::<u32>().unwrap()), "{s}");
+        }
+        for s in ["4294967296", "99999999999", "18446744073709551615", "18446744073709551616"] {
+            let (got, end) = digit_run(s.as_bytes(), 0);
+            assert_eq!(end, s.len());
+            assert_eq!(got, None, "{s} must overflow like str::parse");
+        }
+    }
+
+    #[test]
+    fn fast_line_matches_old_parser_on_ascii() {
+        let lines: &[&str] = &[
+            "0 1",
+            "1 0",
+            "  3\t9  ",
+            "7 7",
+            "# comment",
+            "",
+            "   ",
+            "12x 9",
+            "12 9x",
+            "3 4 5 6",
+            "4294967295 1",
+            "4294967296 1",
+            "5",
+            "5 ",
+            "-3 4",
+            "3 -4",
+            "0\t\t9",
+            "1 2\r",
+        ];
+        for l in lines {
+            let want = parse_edge_line(l);
+            let got = match fast_line(l.as_bytes()) {
+                LineParse::Parsed(e) => Some(e),
+                LineParse::Skip => None,
+                LineParse::Fallback => panic!("pure-ASCII line {l:?} must not fall back"),
+            };
+            assert_eq!(got, want, "line {l:?}");
+        }
+        // '+' and non-ASCII must route to the exact fallback
+        assert!(matches!(fast_line(b"+5 7"), LineParse::Fallback));
+        assert!(matches!(fast_line(b"5 +7"), LineParse::Fallback));
+        assert!(matches!(fast_line("3\u{a0}4".as_bytes()), LineParse::Fallback));
+        assert!(matches!(fast_line(b"\xff\xfe"), LineParse::Fallback));
+    }
+}

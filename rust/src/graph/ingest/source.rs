@@ -1,0 +1,345 @@
+//! Byte-level input sources: the file as `&[u8]` windows.
+//!
+//! [`ByteSource`] exposes an edge-list file to the decoders as a window of
+//! raw bytes with two implementations behind one API:
+//!
+//! * **mapped** (Linux, 64-bit): one `mmap(PROT_READ, MAP_PRIVATE)` of the
+//!   whole file, advised `MADV_SEQUENTIAL`.  The window *is* the remaining
+//!   file — no copies, no read syscalls; the decoders parse the page cache
+//!   in place.  The libc calls are bound directly (the crate builds
+//!   against nothing outside std — same idiom as
+//!   `coordinator::placement`'s `sched_setaffinity` binding).
+//! * **chunked** (everything else, tiny files, and sources the kernel
+//!   refuses to map): a plain `pread`-style loop into a reused ~1 MiB
+//!   buffer; the unconsumed tail (a partial line) is compacted to the
+//!   front before each refill, so decoders never see a line split across
+//!   windows.
+//!
+//! Known mapped-arm hazard, inherited from mmap itself: if another process
+//! truncates the file while it is mapped, touching pages past the new end
+//! raises `SIGBUS` instead of an `io::Error`.  The chunked arm turns the
+//! same race into a short read.  See DESIGN.md §9.
+
+use std::fs::File;
+use std::io::{self, Read};
+use std::path::Path;
+
+/// Files at or above this size get the mmap arm (when the platform has
+/// one); below it the chunked reader wins — a mapping costs two syscalls
+/// plus fault-in, and tiny inputs fit a single `read`.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+const MMAP_MIN: u64 = 64 * 1024;
+
+/// Initial chunked-read buffer size (grows if one line outruns it).
+const CHUNK: usize = 1 << 20;
+
+/// A read-only window over a file's bytes; see the module docs for the
+/// two arms behind it.
+pub struct ByteSource {
+    file_len: u64,
+    imp: Imp,
+}
+
+enum Imp {
+    #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+    Mapped {
+        map: Mmap,
+        pos: usize,
+    },
+    Chunked(Chunked),
+}
+
+impl ByteSource {
+    /// Open `path`, picking the mapped arm for large files on platforms
+    /// that have it and falling back to the chunked reader otherwise.
+    pub fn open(path: impl AsRef<Path>) -> io::Result<ByteSource> {
+        let file = File::open(path)?;
+        let file_len = file.metadata()?.len();
+        #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+        if file_len >= MMAP_MIN {
+            // mapping can fail for reasons open() does not (e.g. a
+            // pseudo-file); the chunked arm handles whatever read() can
+            if let Ok(map) = Mmap::map(&file, file_len as usize) {
+                return Ok(ByteSource { file_len, imp: Imp::Mapped { map, pos: 0 } });
+            }
+        }
+        Ok(ByteSource { file_len, imp: Imp::Chunked(Chunked::new(file, CHUNK)) })
+    }
+
+    /// Force the mapped arm regardless of size (differential tests pin
+    /// both arms).  Empty files cannot be mapped and get the chunked arm.
+    #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+    pub(crate) fn open_mapped(path: impl AsRef<Path>) -> io::Result<ByteSource> {
+        let file = File::open(path)?;
+        let file_len = file.metadata()?.len();
+        if file_len == 0 {
+            return Ok(ByteSource { file_len, imp: Imp::Chunked(Chunked::new(file, CHUNK)) });
+        }
+        let map = Mmap::map(&file, file_len as usize)?;
+        Ok(ByteSource { file_len, imp: Imp::Mapped { map, pos: 0 } })
+    }
+
+    /// Force the chunked arm with a given initial buffer capacity — tests
+    /// drive tiny capacities so lines straddle refill boundaries.
+    pub(crate) fn open_chunked(path: impl AsRef<Path>, cap: usize) -> io::Result<ByteSource> {
+        let file = File::open(path)?;
+        let file_len = file.metadata()?.len();
+        Ok(ByteSource { file_len, imp: Imp::Chunked(Chunked::new(file, cap.max(1))) })
+    }
+
+    /// The unconsumed bytes currently visible.  For a mapped source this
+    /// is the entire remaining file; for a chunked source it is the
+    /// buffered tail, which [`ByteSource::fill`] extends.
+    pub fn window(&self) -> &[u8] {
+        match &self.imp {
+            #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+            Imp::Mapped { map, pos } => &map.as_slice()[*pos..],
+            Imp::Chunked(c) => &c.buf[c.start..c.end],
+        }
+    }
+
+    /// True when no bytes exist beyond the current window (the window is
+    /// the whole remaining input, so an unterminated final line is final).
+    pub fn is_eof(&self) -> bool {
+        match &self.imp {
+            #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+            Imp::Mapped { .. } => true,
+            Imp::Chunked(c) => c.eof,
+        }
+    }
+
+    /// Drop the first `n` window bytes (the decoder consumed them).
+    pub fn consume(&mut self, n: usize) {
+        match &mut self.imp {
+            #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+            Imp::Mapped { map, pos } => *pos = pos.saturating_add(n).min(map.len()),
+            Imp::Chunked(c) => c.start = c.start.saturating_add(n).min(c.end),
+        }
+    }
+
+    /// Extend the window with more file bytes.  `Ok(false)` means end of
+    /// input (after which [`ByteSource::is_eof`] reports true); each call
+    /// otherwise grows the window by at least one byte, enlarging the
+    /// buffer when a single line outruns it.  A mapped source is always
+    /// fully visible, so this is a no-op `Ok(false)`.
+    pub fn fill(&mut self) -> io::Result<bool> {
+        match &mut self.imp {
+            #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+            Imp::Mapped { .. } => Ok(false),
+            Imp::Chunked(c) => c.fill(),
+        }
+    }
+
+    /// Total length of the underlying file, from its open-time metadata
+    /// (the binary header validation compares against this).
+    pub fn file_len(&self) -> u64 {
+        self.file_len
+    }
+}
+
+/// The pread-style fallback arm: a reused buffer holding one window.
+struct Chunked {
+    file: File,
+    buf: Vec<u8>,
+    start: usize,
+    end: usize,
+    eof: bool,
+}
+
+impl Chunked {
+    fn new(file: File, cap: usize) -> Chunked {
+        Chunked { file, buf: vec![0; cap], start: 0, end: 0, eof: false }
+    }
+
+    fn fill(&mut self) -> io::Result<bool> {
+        if self.eof {
+            return Ok(false);
+        }
+        // compact the unconsumed tail (a partial line) to the front
+        if self.start > 0 {
+            self.buf.copy_within(self.start..self.end, 0);
+            self.end -= self.start;
+            self.start = 0;
+        }
+        if self.end == self.buf.len() {
+            // one line outruns the buffer: grow instead of deadlocking
+            let grown = self.buf.len().saturating_mul(2).max(64);
+            self.buf.resize(grown, 0);
+        }
+        loop {
+            match self.file.read(&mut self.buf[self.end..]) {
+                Ok(0) => {
+                    self.eof = true;
+                    return Ok(false);
+                }
+                Ok(n) => {
+                    self.end += n;
+                    return Ok(true);
+                }
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) => return Err(e),
+            }
+        }
+    }
+}
+
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+mod sys {
+    use std::os::raw::{c_int, c_void};
+
+    pub const PROT_READ: c_int = 0x1;
+    pub const MAP_PRIVATE: c_int = 0x02;
+    pub const MADV_SEQUENTIAL: c_int = 2;
+    pub const MAP_FAILED: *mut c_void = usize::MAX as *mut c_void;
+
+    extern "C" {
+        pub fn mmap(
+            addr: *mut c_void,
+            length: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        pub fn munmap(addr: *mut c_void, length: usize) -> c_int;
+        pub fn madvise(addr: *mut c_void, length: usize, advice: c_int) -> c_int;
+    }
+}
+
+/// An owned read-only mapping of a whole file.
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+struct Mmap {
+    ptr: *const u8,
+    len: usize,
+}
+
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+impl Mmap {
+    /// Map `len` bytes of `file` read-only.  `len` must be non-zero
+    /// (mapping zero bytes is EINVAL; callers special-case empty files).
+    fn map(file: &File, len: usize) -> io::Result<Mmap> {
+        use std::os::unix::io::AsRawFd;
+        debug_assert!(len > 0);
+        // SAFETY: a fresh PROT_READ | MAP_PRIVATE mapping request over fds
+        // and lengths we own; the result is checked against MAP_FAILED
+        // before anything dereferences it.
+        let ptr = unsafe {
+            sys::mmap(
+                std::ptr::null_mut(),
+                len,
+                sys::PROT_READ,
+                sys::MAP_PRIVATE,
+                file.as_raw_fd(),
+                0,
+            )
+        };
+        if ptr == sys::MAP_FAILED {
+            return Err(io::Error::last_os_error());
+        }
+        // SAFETY: `ptr` is a live mapping of exactly `len` bytes.  The
+        // advice is purely a readahead hint; failure is harmless.
+        unsafe { sys::madvise(ptr, len, sys::MADV_SEQUENTIAL) };
+        Ok(Mmap { ptr: ptr as *const u8, len })
+    }
+
+    fn as_slice(&self) -> &[u8] {
+        // SAFETY: the mapping covers `len` readable bytes and lives until
+        // Drop unmaps it; `&self` ties the slice to that lifetime.
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+}
+
+// SAFETY: the mapping is read-only and private — nothing mutates it
+// through this handle — so moving or sharing it across threads is sound.
+// (Concurrent truncation of the backing file can SIGBUS any reader; that
+// hazard is thread-independent and documented in the module docs.)
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+unsafe impl Send for Mmap {}
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+unsafe impl Sync for Mmap {}
+
+#[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+impl Drop for Mmap {
+    fn drop(&mut self) {
+        // SAFETY: exactly the pointer/length pair mmap returned.
+        unsafe { sys::munmap(self.ptr as *mut _, self.len) };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::tmp::TempDir;
+
+    fn write(dir: &TempDir, name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let p = dir.path().join(name);
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    fn drain(mut src: ByteSource) -> Vec<u8> {
+        let mut out = Vec::new();
+        loop {
+            out.extend_from_slice(src.window());
+            let n = src.window().len();
+            src.consume(n);
+            match src.fill() {
+                Ok(true) => continue,
+                Ok(false) => break,
+                Err(e) => panic!("fill failed: {e}"),
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn chunked_windows_reassemble_the_file() {
+        let dir = TempDir::new("bytesource").unwrap();
+        let data: Vec<u8> = (0..=255u8).cycle().take(10_000).collect();
+        let p = write(&dir, "d.bin", &data);
+        for cap in [1, 7, 64, 4096] {
+            let got = drain(ByteSource::open_chunked(&p, cap).unwrap());
+            assert_eq!(got, data, "cap={cap}");
+        }
+    }
+
+    #[test]
+    fn auto_open_small_file_reads_fully() {
+        let dir = TempDir::new("bytesource").unwrap();
+        let p = write(&dir, "small.txt", b"0 1\n2 3\n");
+        let src = ByteSource::open(&p).unwrap();
+        assert_eq!(src.file_len(), 8);
+        assert_eq!(drain(src), b"0 1\n2 3\n");
+    }
+
+    #[test]
+    fn empty_file_is_immediately_eof() {
+        let dir = TempDir::new("bytesource").unwrap();
+        let p = write(&dir, "empty", b"");
+        let mut src = ByteSource::open(&p).unwrap();
+        assert_eq!(src.window(), b"");
+        assert!(!src.fill().unwrap());
+        assert!(src.is_eof());
+        assert_eq!(src.window(), b"");
+    }
+
+    #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+    #[test]
+    fn mapped_window_is_whole_file_and_consume_advances() {
+        let dir = TempDir::new("bytesource").unwrap();
+        let data = b"0 1\n1 2\n2 3\n".to_vec();
+        let p = write(&dir, "m.txt", &data);
+        let mut src = ByteSource::open_mapped(&p).unwrap();
+        assert!(src.is_eof(), "mapped source exposes everything at once");
+        assert_eq!(src.window(), &data[..]);
+        src.consume(4);
+        assert_eq!(src.window(), &data[4..]);
+        assert!(!src.fill().unwrap());
+        src.consume(usize::MAX - 8); // clamped, no overflow past the end
+        assert_eq!(src.window(), b"");
+    }
+}

@@ -9,10 +9,14 @@
 //! * [`adjacency::SampleGraph`] — the arena-backed, vertex-interning
 //!   structure holding the budget-bounded sample (`O(log b)` adjacency
 //!   checks, `O(b)` memory independent of the label space, paper §4.1.2),
-//! * [`stream`] — single- and two-pass edge stream abstractions.
+//! * [`stream`] — single- and two-pass edge stream abstractions,
+//! * [`ingest`] — the zero-copy file decoders behind [`stream::FileStream`]:
+//!   mmap/chunked byte sources, the SIMD text parser and the versioned
+//!   binary edge-list format (ISSUE 6).
 
 pub mod adjacency;
 pub mod csr;
+pub mod ingest;
 pub mod stream;
 
 /// Vertex identifier; the paper labels vertices `0..|V_G|-1`.

@@ -22,9 +22,10 @@
 //! deterministic given the seed.
 
 use std::fs::File;
-use std::io::{self, BufRead, BufReader, Write};
+use std::io::{self, BufRead, Write};
 use std::path::{Path, PathBuf};
 
+use super::ingest::{self, Ingest};
 use super::Edge;
 use crate::util::rng::Pcg64;
 use crate::Result;
@@ -34,12 +35,38 @@ pub trait EdgeStream {
     /// Next edge, or `None` at end of stream *or after a recorded error*
     /// (check [`EdgeStream::take_error`] to tell the two apart).
     fn next_edge(&mut self) -> Option<Edge>;
+    /// Append up to `max` edges to `out`, returning how many were
+    /// appended (`0` ⇔ the stream is exhausted or errored).  Equivalent
+    /// to calling [`EdgeStream::next_edge`] up to `max` times — the
+    /// default does exactly that — but batch-native streams
+    /// ([`FileStream`]) override it to decode whole blocks straight into
+    /// the caller's buffer; the coordinator stages fan-out chunks through
+    /// this.
+    fn next_batch(&mut self, out: &mut Vec<Edge>, max: usize) -> usize {
+        let mut n = 0;
+        while n < max {
+            match self.next_edge() {
+                Some(e) => {
+                    out.push(e);
+                    n += 1;
+                }
+                None => break,
+            }
+        }
+        n
+    }
     /// Rewind to the beginning (for the second pass; constraint C1 allows
     /// 2).  A failed rewind is recorded and surfaced via
     /// [`EdgeStream::take_error`]; subsequent `next_edge` calls return
     /// `None`.
     fn reset(&mut self);
-    /// Total number of edges if known.
+    /// Total number of edges, if known: `Some(|E|)` from in-tree
+    /// resettable streams (`VecStream` trivially, [`FileStream`] from its
+    /// open-time count or binary header), `None` from one-shot hintless
+    /// sources ([`ReaderStream`]).  Relative budgets
+    /// ([`Budget::Fraction`](crate::descriptors::Budget)) *require* a
+    /// hint — [`crate::descriptors::resolve_budget`] errors on `None`
+    /// rather than fabricating a stream length (ISSUE 6).
     fn len_hint(&self) -> Option<usize> {
         None
     }
@@ -99,16 +126,21 @@ impl EdgeStream for VecStream {
 /// Parse one `u v` edge-list line: whitespace-separated endpoints,
 /// canonicalized, self-loops dropped.  `None` for comments/garbage/loops —
 /// such lines are skipped, not fatal (§5.2 preprocessing is expected to
-/// have cleaned the list).
-fn parse_edge_line(line: &str) -> Option<Edge> {
+/// have cleaned the list).  The zero-copy ingest parser
+/// ([`crate::graph::ingest`]) defers to this exact function on lines its
+/// fast path cannot prove equivalent (`+`-signed tokens, non-ASCII bytes),
+/// so the two paths can never disagree.
+pub(crate) fn parse_edge_line(line: &str) -> Option<Edge> {
     let mut it = line.split_whitespace();
     let (a, b) = (it.next()?, it.next()?);
     let (a, b) = (a.parse().ok()?, b.parse().ok()?);
     Edge::try_new(a, b)
 }
 
-/// Shared line-pump of the file-backed streams: next valid edge from the
-/// reader, recording (not swallowing) I/O errors into `error`.
+/// Line-pump of [`ReaderStream`]: next valid edge from the reader,
+/// recording (not swallowing) I/O errors into `error`.  This *is* the old
+/// `FileStream` read path, kept as the reference the ingest differential
+/// tests compare against.
 fn next_edge_from(
     reader: &mut impl BufRead,
     line: &mut String,
@@ -134,17 +166,22 @@ fn next_edge_from(
     }
 }
 
-/// Stream over a whitespace-separated `u v` edge-list file.  Self-loops are
-/// dropped and edges canonicalized on the fly; duplicates are *not* removed
-/// (preprocessing is expected to have done that, §5.2 — see
-/// [`write_edge_list`] / [`preprocess_pairs`]).
+/// Stream over an edge-list file — text (whitespace-separated `u v`
+/// lines) or the binary format of [`crate::graph::ingest::binary`],
+/// auto-detected by magic.  Self-loops are dropped and edges
+/// canonicalized on the fly; duplicates are *not* removed (preprocessing
+/// is expected to have done that, §5.2 — see [`write_edge_list`] /
+/// [`preprocess_pairs`]).
 ///
-/// `open()` makes one counting pass (through its own file handle, so the
-/// streaming reader starts untouched at offset 0) so `len_hint` reports
-/// the file's true edge count — `Budget::Fraction` budgets resolve against
-/// the real `|E|`, not a fabricated placeholder.  The extra sequential
-/// read is paid once, at open, never per pass, and warms the page cache
-/// for pass 1.  `FileStream` requires a re-openable regular file anyway
+/// Decoding goes through the zero-copy ingest layer
+/// ([`crate::graph::ingest`], ISSUE 6): the file is mmap'd (or chunk-read)
+/// and parsed in SIMD batches, which `next_batch` hands to callers
+/// without a per-edge hop.  For text files `open()` still makes one
+/// counting pass — through the same SIMD decoder, so it is cheap and
+/// *exactly* matches what the stream will yield — to give `len_hint` the
+/// true edge count; binary files carry `|E|` in their header, so opening
+/// them costs no pre-pass at all and `Budget::Fraction` resolves from 24
+/// header bytes.  `FileStream` requires a re-openable regular file anyway
 /// (`reset()` reopens by path for SANTA's pass 2); for one-shot sources —
 /// pipes, sockets, stdin — use [`ReaderStream`], which skips counting.
 ///
@@ -171,48 +208,95 @@ fn next_edge_from(
 /// ```
 pub struct FileStream {
     path: PathBuf,
-    reader: BufReader<File>,
+    ingest: Ingest,
     len: usize,
+    batch: Vec<Edge>,
+    cursor: usize,
     error: Option<io::Error>,
-    line: String,
 }
 
 impl FileStream {
-    /// Open an edge-list file, counting its valid edges for `len_hint`.
+    /// Open an edge-list file.  Text files get one SIMD counting pass for
+    /// `len_hint` (same decoder as streaming, so the count is exactly what
+    /// the stream yields); binary files read `|E|` from their header.
     pub fn open(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref().to_path_buf();
-        // counting pass: same parse as next_edge, so the count is the
-        // number of edges the stream will actually yield
-        let mut counter = BufReader::new(File::open(&path)?);
-        let mut line = String::new();
-        let mut len = 0usize;
-        loop {
-            line.clear();
-            if counter.read_line(&mut line)? == 0 {
-                break;
+        let ingest = Ingest::open(&path).map_err(|e| crate::anyhow!("{}: {e}", path.display()))?;
+        let len = match &ingest {
+            Ingest::Binary(b) => b.len() as usize,
+            Ingest::Text(_) => {
+                ingest::scan_text(&path)
+                    .map_err(|e| crate::anyhow!("{}: {e}", path.display()))?
+                    .edges
             }
-            if parse_edge_line(&line).is_some() {
-                len += 1;
-            }
-        }
-        let reader = BufReader::new(File::open(&path)?);
-        Ok(FileStream { path, reader, len, error: None, line })
+        };
+        Ok(FileStream {
+            path,
+            ingest,
+            len,
+            batch: Vec::with_capacity(ingest::BATCH),
+            cursor: 0,
+            error: None,
+        })
     }
 
-    /// The recorded I/O failure, if any, without consuming it.
+    /// The recorded I/O failure, if any, without consuming it: a failed
+    /// reset, or a decode/read error recorded by the ingest layer.
     pub fn io_error(&self) -> Option<&io::Error> {
-        self.error.as_ref()
+        self.error.as_ref().or_else(|| self.ingest.io_error())
+    }
+
+    /// Refill the internal batch; false ⇔ exhausted or errored.
+    fn refill(&mut self) -> bool {
+        self.batch.clear();
+        self.cursor = 0;
+        self.ingest.next_batch(&mut self.batch, ingest::BATCH) > 0
     }
 }
 
 impl EdgeStream for FileStream {
     fn next_edge(&mut self) -> Option<Edge> {
-        next_edge_from(&mut self.reader, &mut self.line, &mut self.error)
+        if self.error.is_some() {
+            return None;
+        }
+        if self.cursor == self.batch.len() && !self.refill() {
+            return None;
+        }
+        let e = self.batch[self.cursor];
+        self.cursor += 1;
+        Some(e)
+    }
+
+    fn next_batch(&mut self, out: &mut Vec<Edge>, max: usize) -> usize {
+        if self.error.is_some() {
+            return 0;
+        }
+        // drain any partially-consumed internal batch first, then decode
+        // the rest straight into the caller's buffer — no per-edge hop
+        let mut n = 0;
+        while n < max && self.cursor < self.batch.len() {
+            out.push(self.batch[self.cursor]);
+            self.cursor += 1;
+            n += 1;
+        }
+        if n < max {
+            n += self.ingest.next_batch(out, max - n);
+        }
+        n
     }
 
     fn reset(&mut self) {
-        match File::open(&self.path) {
-            Ok(f) => self.reader = BufReader::new(f),
+        self.batch.clear();
+        self.cursor = 0;
+        // a failure recorded by the previous pass survives reset (never
+        // silently cleared) — the old reader behaved the same way
+        if let Some(e) = self.ingest.take_io_error() {
+            if self.error.is_none() {
+                self.error = Some(e);
+            }
+        }
+        match Ingest::open(&self.path) {
+            Ok(i) => self.ingest = i,
             Err(e) => {
                 // record the failure (never overwriting an earlier one);
                 // next_edge now reports end-of-stream until take_error
@@ -231,6 +315,7 @@ impl EdgeStream for FileStream {
     fn take_error(&mut self) -> Option<crate::util::err::Error> {
         self.error
             .take()
+            .or_else(|| self.ingest.take_io_error())
             .map(|e| crate::anyhow!("{}: {e}", self.path.display()))
     }
 }
@@ -349,6 +434,8 @@ pub fn preprocess_pairs(
 
 #[cfg(test)]
 mod tests {
+    use std::io::BufReader;
+
     use super::*;
 
     #[test]
@@ -410,6 +497,66 @@ mod tests {
         assert!(s.take_error().is_none());
     }
 
+    /// ISSUE 6: `FileStream` auto-detects the binary format and yields
+    /// exactly what the text form of the same graph yields — including
+    /// across a reset — with `len_hint` served by the header, no pre-pass.
+    #[test]
+    fn file_stream_reads_binary_identically_to_text() {
+        let dir = crate::util::tmp::TempDir::new("stream").unwrap();
+        let edges: Vec<Edge> = (0..100).map(|i| Edge::new(i, i + 7)).collect();
+        let txt = dir.path().join("g.txt");
+        let bin = dir.path().join("g.sdg");
+        write_edge_list(&txt, &edges).unwrap();
+        super::super::ingest::write_binary_edge_list(&bin, 107, &edges).unwrap();
+        for path in [&txt, &bin] {
+            let mut s = FileStream::open(path).unwrap();
+            assert_eq!(s.len_hint(), Some(100), "{}", path.display());
+            let mut got = Vec::new();
+            while let Some(e) = s.next_edge() {
+                got.push(e);
+            }
+            assert_eq!(got, edges, "{}", path.display());
+            assert!(s.take_error().is_none());
+            s.reset();
+            assert_eq!(s.next_edge(), Some(edges[0]), "{}", path.display());
+            assert_eq!(s.len_hint(), Some(100));
+        }
+    }
+
+    /// ISSUE 6: the `next_batch` default (loop over `next_edge`) and the
+    /// `FileStream` block-decode override agree, including odd `max`
+    /// values that straddle the internal batch boundary.
+    #[test]
+    fn next_batch_matches_next_edge_everywhere() {
+        let dir = crate::util::tmp::TempDir::new("stream").unwrap();
+        let edges: Vec<Edge> = (0..50).map(|i| Edge::new(i, i + 1)).collect();
+        let path = dir.path().join("g.txt");
+        write_edge_list(&path, &edges).unwrap();
+
+        // default impl on VecStream
+        let mut v = VecStream::new(edges.clone());
+        let mut out = Vec::new();
+        assert_eq!(v.next_batch(&mut out, 30), 30);
+        assert_eq!(v.next_batch(&mut out, 30), 20, "short final batch");
+        assert_eq!(v.next_batch(&mut out, 30), 0, "exhausted");
+        assert_eq!(out, edges);
+
+        // FileStream override, interleaved with single next_edge calls so
+        // the internal-batch drain path is exercised too
+        let mut s = FileStream::open(&path).unwrap();
+        let mut got = Vec::new();
+        got.push(s.next_edge().unwrap());
+        loop {
+            let before = got.len();
+            if s.next_batch(&mut got, 7) == 0 {
+                assert_eq!(got.len(), before);
+                break;
+            }
+        }
+        assert_eq!(got, edges);
+        assert!(s.take_error().is_none());
+    }
+
     /// ISSUE 4 regression: `Budget::Fraction` over a written edge-list
     /// file must resolve against the file's true `|E|`, not the old
     /// fabricated `1 << 20` fallback.
@@ -421,9 +568,9 @@ mod tests {
         let edges: Vec<Edge> = (0..30).map(|i| Edge::new(i, i + 1)).collect();
         write_edge_list(&path, &edges).unwrap();
         let s = FileStream::open(&path).unwrap();
-        assert_eq!(resolve_budget(Budget::Fraction(0.1), &s), 3);
-        assert_eq!(resolve_budget(Budget::Fraction(0.5), &s), 15);
-        assert_eq!(resolve_budget(Budget::Exact, &s), 30);
+        assert_eq!(resolve_budget(Budget::Fraction(0.1), &s).unwrap(), 3);
+        assert_eq!(resolve_budget(Budget::Fraction(0.5), &s).unwrap(), 15);
+        assert_eq!(resolve_budget(Budget::Exact, &s).unwrap(), 30);
     }
 
     /// ISSUE 4 regression: a reader that dies mid-file must surface the

@@ -40,6 +40,8 @@ struct Args {
     dataset: Option<String>,
     net: Option<MassiveKind>,
     out_dir: Option<String>,
+    input: Option<String>,
+    output: Option<String>,
 }
 
 /// The single source of truth for subcommands: `(name, help)`.
@@ -56,6 +58,7 @@ const COMMANDS: &[(&str, &str)] = &[
     ("drift", "windowed descriptors over a churned two-regime stream"),
     ("unbiased", "Theorem 1/2 empirical check"),
     ("ablation", "design-choice ablations (MAEVE vs NetSimile; SANTA wedge term)"),
+    ("convert", "convert a text edge list to the binary .sdg format"),
     ("all", "run everything"),
 ];
 
@@ -74,6 +77,8 @@ const FLAGS: &[(&str, &str, &str)] = &[
     ("--dataset", "NAME", "restrict table14/15 to one dataset (e.g. OHSU)"),
     ("--net", "NAME", "restrict table16/17 to one network (FO/US/CS/PT/FL/SF/U2)"),
     ("--results", "DIR", "output directory (default results/)"),
+    ("--input", "FILE", "text edge list to read (convert)"),
+    ("--output", "FILE", "binary edge list to write (convert)"),
 ];
 
 /// Render the usage text from the command and flag tables.
@@ -116,6 +121,8 @@ fn parse_from(mut it: impl Iterator<Item = String>) -> Result<Args, String> {
         dataset: None,
         net: None,
         out_dir: None,
+        input: None,
+        output: None,
     };
     let mut decay: Option<f64> = None;
     let mut sliding: Option<usize> = None;
@@ -142,6 +149,8 @@ fn parse_from(mut it: impl Iterator<Item = String>) -> Result<Args, String> {
             "--dataset" => a.dataset = Some(val),
             "--net" => a.net = Some(val.parse()?),
             "--results" => a.out_dir = Some(val),
+            "--input" => a.input = Some(val),
+            "--output" => a.output = Some(val),
             // every FLAGS entry must have an arm above; the lookup at the
             // top guarantees nothing else reaches here
             other => unreachable!("flag {other} is in FLAGS but has no parser arm"),
@@ -197,6 +206,29 @@ fn quickstart(ctx: &Ctx) -> stream_descriptors::Result<()> {
     Ok(())
 }
 
+/// `repro convert`: text edge list → binary `.sdg` (ISSUE 6).  The binary
+/// header carries `|V|`/`|E|`, so later runs over the output skip the
+/// edge-counting pre-pass entirely.
+fn convert(args: &Args) -> stream_descriptors::Result<()> {
+    use stream_descriptors::graph::ingest::convert_text_to_binary;
+    let input = args
+        .input
+        .as_deref()
+        .ok_or_else(|| stream_descriptors::anyhow!("convert needs --input FILE"))?;
+    let output = args
+        .output
+        .as_deref()
+        .ok_or_else(|| stream_descriptors::anyhow!("convert needs --output FILE"))?;
+    let stats = convert_text_to_binary(input, output)?;
+    println!(
+        "convert: {input} -> {output}  |V|={} |E|={} ({} bytes, header-carried counts)",
+        stats.n_vertices,
+        stats.n_edges,
+        stream_descriptors::graph::ingest::HEADER_LEN as u64 + 8 * stats.n_edges,
+    );
+    Ok(())
+}
+
 fn main() -> ExitCode {
     let args = match parse_args() {
         Ok(a) => a,
@@ -231,6 +263,7 @@ fn main() -> ExitCode {
             "drift" => experiments::drift::drift(&ctx, args.window, args.workers),
             "unbiased" => experiments::approx::unbiased(&ctx),
             "ablation" => experiments::ablation::ablation(&ctx),
+            "convert" => convert(&args),
             "all" => {
                 experiments::approx::fig4(&ctx)?;
                 experiments::approx::fig5(&ctx)?;
@@ -279,6 +312,8 @@ mod tests {
                 "--net" => "CS",
                 "--dataset" => "OHSU",
                 "--results" => "out",
+                "--input" => "g.txt",
+                "--output" => "g.sdg",
                 "--scale" | "--massive-scale" | "--decay" => "0.5",
                 _ => "3",
             };
@@ -353,6 +388,7 @@ COMMANDS:
   drift        windowed descriptors over a churned two-regime stream
   unbiased     Theorem 1/2 empirical check
   ablation     design-choice ablations (MAEVE vs NetSimile; SANTA wedge term)
+  convert      convert a text edge list to the binary .sdg format
   all          run everything
 
 OPTIONS:
@@ -368,6 +404,8 @@ OPTIONS:
   --dataset NAME     restrict table14/15 to one dataset (e.g. OHSU)
   --net NAME         restrict table16/17 to one network (FO/US/CS/PT/FL/SF/U2)
   --results DIR      output directory (default results/)
+  --input FILE       text edge list to read (convert)
+  --output FILE      binary edge list to write (convert)
 ";
         assert_eq!(usage(), expected);
     }

@@ -1,7 +1,8 @@
 //! Self-contained substrates the offline build environment forces us to
 //! own: an error/context type ([`err`]), a PCG PRNG ([`rng`]), a JSON
 //! parser ([`json`]), a criterion-style micro-benchmark harness ([`bench`]),
-//! temp-dir helpers ([`tmp`]) and NUMA topology discovery ([`topology`]).
+//! temp-dir helpers ([`tmp`]), NUMA topology discovery ([`topology`])
+//! and the shared SIMD dispatch-arm substrate ([`simd`]).
 //! (The image's cargo registry carries only the xla crate's build closure —
 //! no anyhow/rand/serde_json/criterion/tokio — so these are implemented
 //! from scratch and tested like everything else; the default build depends
@@ -18,5 +19,6 @@ pub mod err;
 pub mod json;
 pub mod par;
 pub mod rng;
+pub mod simd;
 pub mod tmp;
 pub mod topology;

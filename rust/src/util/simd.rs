@@ -1,0 +1,131 @@
+//! Shared SIMD dispatch-arm substrate (ISSUE 6).
+//!
+//! Two subsystems vectorize their hot loops behind a
+//! fill-once-at-first-use dispatch table: the slot-list intersection
+//! kernels ([`crate::count::simd`], ISSUE 3) and the zero-copy ingest
+//! parser ([`crate::graph::ingest`], ISSUE 6).  Both pick among the same
+//! three arms — portable scalar, SSE4.2 and AVX2 — with the same
+//! selection contract:
+//!
+//! * detection via `is_x86_feature_detected!`, best arm wins;
+//! * an env-var override pins one arm for the CI feature matrix
+//!   (`STREAM_DESCRIPTORS_FORCE_KERNEL` for the intersection kernels,
+//!   `STREAM_DESCRIPTORS_FORCE_INGEST` for the ingest parser — separate
+//!   vars, so the matrix can cross them);
+//! * an empty value counts as unset (CI legs export the var blank);
+//! * forcing an arm the CPU cannot run panics loudly instead of running
+//!   scalar code under a SIMD label.
+//!
+//! This module owns the arm enum and that selection logic once; each
+//! subsystem keeps its own dispatch *table* (the function pointers differ)
+//! and consults [`forced_arm`]/[`detect_best`] to fill it.
+
+/// The three dispatch arms.  `Sse42`/`Avx2` exist only on `x86_64` and are
+/// used only when the CPU reports the feature (or an env override forces
+/// them, which panics on unsupported hardware rather than running scalar
+/// code under a SIMD label).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelArm {
+    /// Portable fallback (unrolled scalar / SWAR formulations).
+    Scalar,
+    /// 4-lane SSE4.2 formulations (x86_64 only).
+    Sse42,
+    /// 8-lane AVX2 formulations (x86_64 only).
+    Avx2,
+}
+
+impl KernelArm {
+    /// Stable lowercase spelling (bench ids, CI matrix leg names).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelArm::Scalar => "scalar",
+            KernelArm::Sse42 => "sse42",
+            KernelArm::Avx2 => "avx2",
+        }
+    }
+
+    /// Parse the env-override spelling (`scalar` | `sse42` | `sse4.2` |
+    /// `avx2`, case-insensitive).
+    pub fn parse(s: &str) -> Option<KernelArm> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "scalar" => Some(KernelArm::Scalar),
+            "sse42" | "sse4.2" => Some(KernelArm::Sse42),
+            "avx2" => Some(KernelArm::Avx2),
+            _ => None,
+        }
+    }
+
+    /// Can this arm run on the current CPU?
+    pub fn supported(self) -> bool {
+        match self {
+            KernelArm::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            KernelArm::Sse42 => is_x86_feature_detected!("sse4.2"),
+            #[cfg(target_arch = "x86_64")]
+            KernelArm::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(not(target_arch = "x86_64"))]
+            _ => false,
+        }
+    }
+}
+
+/// Every arm the current CPU can execute (always includes `Scalar`).
+pub fn available_arms() -> Vec<KernelArm> {
+    [KernelArm::Scalar, KernelArm::Sse42, KernelArm::Avx2]
+        .into_iter()
+        .filter(|a| a.supported())
+        .collect()
+}
+
+/// The arm forced through `env_var`, if set.  An empty value counts as
+/// unset (CI matrix legs export the var blank).  Panics on an unknown
+/// spelling or an arm the CPU cannot execute — a forced leg must never
+/// silently test a different code path than its label claims.
+pub fn forced_arm(env_var: &str) -> Option<KernelArm> {
+    let v = std::env::var(env_var).unwrap_or_default();
+    if v.is_empty() {
+        return None;
+    }
+    let arm = KernelArm::parse(&v)
+        .unwrap_or_else(|| panic!("{env_var}={v}: expected scalar | sse42 | avx2"));
+    assert!(arm.supported(), "{env_var}={v}: arm not supported by this CPU");
+    Some(arm)
+}
+
+/// The best arm the CPU offers (AVX2 > SSE4.2 > scalar).
+pub fn detect_best() -> KernelArm {
+    if KernelArm::Avx2.supported() {
+        KernelArm::Avx2
+    } else if KernelArm::Sse42.supported() {
+        KernelArm::Sse42
+    } else {
+        KernelArm::Scalar
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spellings_parse() {
+        assert_eq!(KernelArm::parse("scalar"), Some(KernelArm::Scalar));
+        assert_eq!(KernelArm::parse("sse42"), Some(KernelArm::Sse42));
+        assert_eq!(KernelArm::parse("SSE4.2"), Some(KernelArm::Sse42));
+        assert_eq!(KernelArm::parse(" avx2 "), Some(KernelArm::Avx2));
+        assert_eq!(KernelArm::parse("avx512"), None);
+        assert_eq!(KernelArm::parse(""), None);
+    }
+
+    #[test]
+    fn detection_is_runnable_and_scalar_always_there() {
+        assert!(detect_best().supported());
+        assert!(available_arms().contains(&KernelArm::Scalar));
+        assert!(available_arms().contains(&detect_best()));
+    }
+
+    #[test]
+    fn unset_env_is_no_override() {
+        assert_eq!(forced_arm("STREAM_DESCRIPTORS_TEST_UNSET_VAR"), None);
+    }
+}

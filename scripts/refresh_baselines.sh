@@ -1,0 +1,34 @@
+#!/usr/bin/env sh
+# Refresh the checked-in bench-gate baselines from a CI artifact.
+#
+# Usage: scripts/refresh_baselines.sh <artifact-dir>
+#
+# <artifact-dir> is an unpacked `bench-gate-json` artifact from a healthy
+# run on main (DESIGN.md §5).  The script copies every family that has a
+# checked-in baseline, so the two gates never drift apart — refresh both
+# or neither.  Review the diff and commit it: the diff *is* the perf
+# trajectory change.
+set -eu
+
+if [ $# -ne 1 ] || [ ! -d "$1" ]; then
+    echo "usage: $0 <dir-with-BENCH_*.json>" >&2
+    exit 2
+fi
+src=$1
+dst=$(dirname "$0")/../benches/baselines
+
+# refuse before touching anything: a partial refresh is exactly the
+# baseline skew this script exists to prevent
+for base in "$dst"/*.json; do
+    family=$(basename "$base" .json)
+    if [ ! -f "$src/BENCH_$family.json" ]; then
+        echo "error: $src/BENCH_$family.json missing (partial refresh refused)" >&2
+        exit 1
+    fi
+done
+
+for base in "$dst"/*.json; do
+    family=$(basename "$base" .json)
+    cp "$src/BENCH_$family.json" "$base"
+    echo "refreshed $base"
+done
