@@ -1,0 +1,963 @@
+//! Checkpoint/restore for estimator state (ISSUE 7).
+//!
+//! A checkpoint is a versioned binary `.sdc` document — same house style
+//! as the `.sdg` edge format ([`crate::graph::ingest::binary`]): magic,
+//! version, flags, then a little-endian body, with a trailing FNV-1a
+//! checksum so a torn write is *detected*, never decoded.  The body holds
+//! a config echo (descriptor kind, budget, seed, window, worker count),
+//! the stream cursor, SANTA's shared pass-1 degree table when present,
+//! and one serialized estimator state per worker.
+//!
+//! **The contract is bit-for-bit resume**: restoring at edge index `k`
+//! and replaying the rest of the stream produces output identical to an
+//! uninterrupted run — same reservoir actions, same float summation
+//! order, same snapshot series.  Every stateful type therefore
+//! serializes its containers *verbatim* (slot vectors, free lists, age
+//! queues, heap order, intern-table cells, raw RNG registers) through
+//! the [`Enc`]/[`Dec`] codec below; nothing is rebuilt or re-derived on
+//! load, because rebuild order would change downstream summation order.
+//!
+//! Failure philosophy matches the ingest layer: bad magic, future
+//! versions, unknown flags, checksum mismatches, truncation, trailing
+//! bytes, inconsistent counts and non-canonical edges are all loud
+//! errors naming the malformation.  Length prefixes are validated
+//! against the bytes actually remaining ([`Dec::seq_len`]) *before* any
+//! allocation, so a corrupt length cannot balloon memory.
+//!
+//! [`run_direct`]/[`resume_direct`] drive the single-process path the
+//! `repro describe` command uses; the coordinator writes and resumes the
+//! same documents with `workers ≥ 1` (see [`crate::coordinator`]).
+
+use std::fs::File;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use crate::coordinator::{santa_pass1, DescriptorKind, WorkerEstimate, WorkerState};
+use crate::graph::stream::EdgeStream;
+use crate::graph::Edge;
+use crate::sampling::WindowConfig;
+
+/// `.sdc` magic: non-ASCII lead byte (like PNG / `.sdg`) so no text tool
+/// mistakes a checkpoint for an edge list.
+pub const MAGIC: [u8; 4] = [0x89, b'S', b'D', b'C'];
+
+/// Current format version; readers reject anything else by name.
+pub const VERSION: u16 = 1;
+
+/// Batch size for the direct runner's stream drain (not semantically
+/// load-bearing: batching never changes push order).
+const DIRECT_CHUNK: usize = 4096;
+
+// ---------------------------------------------------------------------------
+// Codec
+// ---------------------------------------------------------------------------
+
+/// Little-endian byte encoder the per-type `save` methods write into.
+#[derive(Debug, Default)]
+pub(crate) struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    /// Fresh empty encoder.
+    pub(crate) fn new() -> Enc {
+        Enc { buf: Vec::new() }
+    }
+
+    /// Append one byte.
+    pub(crate) fn u8(&mut self, x: u8) {
+        self.buf.push(x);
+    }
+
+    /// Append a `u16`, little-endian.
+    pub(crate) fn u16(&mut self, x: u16) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    /// Append a `u32`, little-endian.
+    pub(crate) fn u32(&mut self, x: u32) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    /// Append a `u64`, little-endian.
+    pub(crate) fn u64(&mut self, x: u64) {
+        self.buf.extend_from_slice(&x.to_le_bytes());
+    }
+
+    /// Append a `usize` as a `u64` (the format is 64-bit on every host).
+    pub(crate) fn usize(&mut self, x: usize) {
+        self.u64(x as u64);
+    }
+
+    /// Append an `f64` by its raw bit pattern (bit-exact round trip).
+    pub(crate) fn f64(&mut self, x: f64) {
+        self.u64(x.to_bits());
+    }
+
+    /// Append a canonical edge as two `u32`s.
+    pub(crate) fn edge(&mut self, e: Edge) {
+        self.u32(e.u);
+        self.u32(e.v);
+    }
+
+    /// Append raw bytes verbatim (nested state blobs; the *caller* writes
+    /// the length prefix).
+    pub(crate) fn raw(&mut self, bytes: &[u8]) {
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// The encoded bytes.
+    pub(crate) fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+}
+
+/// Bounds-checked little-endian decoder; every read is fallible and a
+/// short buffer is an error, never a panic.
+#[derive(Debug)]
+pub(crate) struct Dec<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Dec<'a> {
+    /// Decode from a byte slice.
+    pub(crate) fn new(buf: &'a [u8]) -> Dec<'a> {
+        Dec { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take<const N: usize>(&mut self) -> crate::Result<[u8; N]> {
+        let rem = self.remaining();
+        crate::ensure!(rem >= N, "checkpoint truncated: needed {N} bytes, {rem} left");
+        let mut a = [0u8; N];
+        a.copy_from_slice(&self.buf[self.pos..self.pos + N]);
+        self.pos += N;
+        Ok(a)
+    }
+
+    /// Read one byte.
+    pub(crate) fn u8(&mut self) -> crate::Result<u8> {
+        Ok(self.take::<1>()?[0])
+    }
+
+    /// Read a little-endian `u16`.
+    pub(crate) fn u16(&mut self) -> crate::Result<u16> {
+        Ok(u16::from_le_bytes(self.take::<2>()?))
+    }
+
+    /// Read a little-endian `u32`.
+    pub(crate) fn u32(&mut self) -> crate::Result<u32> {
+        Ok(u32::from_le_bytes(self.take::<4>()?))
+    }
+
+    /// Read a little-endian `u64`.
+    pub(crate) fn u64(&mut self) -> crate::Result<u64> {
+        Ok(u64::from_le_bytes(self.take::<8>()?))
+    }
+
+    /// Read a `usize` (stored as `u64`); overflow on a 32-bit host is an
+    /// error, not a wrap.
+    pub(crate) fn usize(&mut self) -> crate::Result<usize> {
+        let x = self.u64()?;
+        usize::try_from(x).map_err(|_| crate::anyhow!("checkpoint value {x} overflows usize"))
+    }
+
+    /// Read an `f64` from its raw bit pattern.
+    pub(crate) fn f64(&mut self) -> crate::Result<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Read a canonical edge; `u ≥ v` is corruption, rejected by name.
+    pub(crate) fn edge(&mut self) -> crate::Result<Edge> {
+        let u = self.u32()?;
+        let v = self.u32()?;
+        crate::ensure!(u < v, "checkpoint edge ({u}, {v}) is not canonical");
+        Ok(Edge { u, v })
+    }
+
+    /// Read a sequence length and validate it against the bytes actually
+    /// left, assuming each element takes at least `elem_size` bytes —
+    /// the pre-allocation guard that keeps a corrupt length prefix from
+    /// ballooning memory before the decode fails.
+    pub(crate) fn seq_len(&mut self, elem_size: usize) -> crate::Result<usize> {
+        let len = self.usize()?;
+        let rem = self.remaining();
+        let need = len
+            .checked_mul(elem_size.max(1))
+            .ok_or_else(|| crate::anyhow!("checkpoint sequence length {len} overflows"))?;
+        crate::ensure!(
+            need <= rem,
+            "checkpoint sequence claims {len} × {elem_size} B but only {rem} bytes remain"
+        );
+        Ok(len)
+    }
+
+    /// Read `len` raw bytes (a nested state blob).
+    pub(crate) fn bytes(&mut self, len: usize) -> crate::Result<&'a [u8]> {
+        let rem = self.remaining();
+        crate::ensure!(rem >= len, "checkpoint truncated: needed {len} bytes, {rem} left");
+        let s = &self.buf[self.pos..self.pos + len];
+        self.pos += len;
+        Ok(s)
+    }
+
+    /// Assert full consumption — trailing bytes mean the reader and
+    /// writer disagree about the format, which must be loud.
+    pub(crate) fn finish(&self) -> crate::Result<()> {
+        let rem = self.remaining();
+        crate::ensure!(rem == 0, "checkpoint has {rem} trailing bytes");
+        Ok(())
+    }
+}
+
+/// FNV-1a 64-bit — dependency-free corruption check (same role as a CRC;
+/// not cryptographic, and does not need to be).
+fn fnv1a64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+// ---------------------------------------------------------------------------
+// The .sdc document
+// ---------------------------------------------------------------------------
+
+/// One worker's serialized estimator state inside a checkpoint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StateBlob {
+    /// The worker's arrival clock when the state was captured (must equal
+    /// the document cursor — every worker sees every edge).
+    pub arrivals: u64,
+    /// The [`Enc`]-serialized `WorkerState` bytes.
+    pub bytes: Vec<u8>,
+}
+
+/// A parsed checkpoint: config echo, stream cursor, SANTA's shared degree
+/// table, and one state blob per worker (`workers == 0` ⇔ a direct,
+/// single-process run with exactly one blob).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CheckpointDoc {
+    /// Which estimator the run computes.
+    pub kind: DescriptorKind,
+    /// Reservoir budget (per worker).
+    pub budget: usize,
+    /// Base RNG seed of the run.
+    pub seed: u64,
+    /// Window policy + snapshot cadence of the run.
+    pub window: WindowConfig,
+    /// Pipeline worker count; `0` marks a direct run.
+    pub workers: u32,
+    /// Edges consumed from the stream when the checkpoint was taken;
+    /// resume replays exactly this many edges before pushing new ones.
+    pub cursor: u64,
+    /// SANTA's exact pass-1 degree table (stored once, shared by every
+    /// worker state); `None` for GABE/MAEVE.
+    pub degrees: Option<Arc<Vec<u32>>>,
+    /// One serialized estimator state per worker.
+    pub states: Vec<StateBlob>,
+}
+
+impl CheckpointDoc {
+    /// Encode the full document: header, body, trailing checksum.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Enc::new();
+        out.raw(&MAGIC);
+        out.u16(VERSION);
+        out.u16(0); // flags: none defined in version 1
+        let (kind_tag, exact) = match self.kind {
+            DescriptorKind::Gabe => (0u8, 0u8),
+            DescriptorKind::Maeve => (1, 0),
+            DescriptorKind::Santa { exact_wedges } => (2, exact_wedges as u8),
+        };
+        out.u8(kind_tag);
+        out.u8(exact);
+        out.usize(self.budget);
+        out.u64(self.seed);
+        self.window.save(&mut out);
+        out.u32(self.workers);
+        out.u64(self.cursor);
+        match &self.degrees {
+            None => out.u8(0),
+            Some(deg) => {
+                out.u8(1);
+                out.usize(deg.len());
+                for &d in deg.iter() {
+                    out.u32(d);
+                }
+            }
+        }
+        out.usize(self.states.len());
+        for s in &self.states {
+            out.u64(s.arrivals);
+            out.usize(s.bytes.len());
+            out.raw(&s.bytes);
+        }
+        let mut bytes = out.into_bytes();
+        let sum = fnv1a64(&bytes);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        bytes
+    }
+
+    /// Decode and validate a document: magic, version, flags, checksum,
+    /// every count and tag, full consumption.
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<CheckpointDoc> {
+        crate::ensure!(
+            bytes.len() >= MAGIC.len() + 4 + 8,
+            "checkpoint file too short ({} bytes)",
+            bytes.len()
+        );
+        crate::ensure!(bytes[..4] == MAGIC, "not a checkpoint file (bad magic)");
+        let (payload, sum) = bytes.split_at(bytes.len() - 8);
+        let mut want = [0u8; 8];
+        want.copy_from_slice(sum);
+        crate::ensure!(
+            fnv1a64(payload) == u64::from_le_bytes(want),
+            "checkpoint checksum mismatch (corrupt or torn file)"
+        );
+        let mut d = Dec::new(&payload[4..]);
+        let version = d.u16()?;
+        crate::ensure!(
+            version == VERSION,
+            "checkpoint version {version} is not supported (this build reads {VERSION})"
+        );
+        let flags = d.u16()?;
+        crate::ensure!(flags == 0, "checkpoint flags {flags:#06x} are not supported");
+        let kind_tag = d.u8()?;
+        let exact = d.u8()?;
+        crate::ensure!(exact <= 1, "checkpoint exact-wedges flag {exact} is not a boolean");
+        let kind = match kind_tag {
+            0 | 1 => {
+                crate::ensure!(
+                    exact == 0,
+                    "non-santa checkpoint carries an exact-wedges flag"
+                );
+                if kind_tag == 0 {
+                    DescriptorKind::Gabe
+                } else {
+                    DescriptorKind::Maeve
+                }
+            }
+            2 => DescriptorKind::Santa { exact_wedges: exact == 1 },
+            t => return Err(crate::anyhow!("checkpoint descriptor tag {t} is unknown")),
+        };
+        let budget = d.usize()?;
+        crate::ensure!(budget >= 1, "checkpoint budget must be ≥ 1 (got 0)");
+        let seed = d.u64()?;
+        let window = WindowConfig::load(&mut d)?;
+        let workers = d.u32()?;
+        let cursor = d.u64()?;
+        let degrees = match d.u8()? {
+            0 => None,
+            1 => {
+                let n = d.seq_len(4)?;
+                let mut deg = Vec::with_capacity(n);
+                for _ in 0..n {
+                    deg.push(d.u32()?);
+                }
+                Some(Arc::new(deg))
+            }
+            t => return Err(crate::anyhow!("checkpoint degree-table tag {t} is unknown")),
+        };
+        let is_santa = matches!(kind, DescriptorKind::Santa { .. });
+        crate::ensure!(
+            is_santa == degrees.is_some(),
+            "checkpoint degree table is {} but the descriptor is {kind:?}",
+            if degrees.is_some() { "present" } else { "missing" }
+        );
+        let n_states = d.seq_len(16)?;
+        let expected = if workers == 0 { 1 } else { workers as usize };
+        crate::ensure!(
+            n_states == expected,
+            "checkpoint holds {n_states} worker states for a {workers}-worker run"
+        );
+        let mut states = Vec::with_capacity(n_states);
+        for _ in 0..n_states {
+            let arrivals = d.u64()?;
+            crate::ensure!(
+                arrivals == cursor,
+                "worker state saved at arrival {arrivals} but the checkpoint cursor is {cursor}"
+            );
+            let blen = d.seq_len(1)?;
+            let blob = d.bytes(blen)?.to_vec();
+            states.push(StateBlob { arrivals, bytes: blob });
+        }
+        d.finish()?;
+        Ok(CheckpointDoc { kind, budget, seed, window, workers, cursor, degrees, states })
+    }
+
+    /// Write the document atomically: encode, write + fsync a sibling
+    /// temp file, rename into place.  A crash mid-write leaves either the
+    /// previous checkpoint or a `.tmp` the reader never touches — never a
+    /// half-written `.sdc`.
+    pub fn write_to(&self, path: &Path) -> crate::Result<()> {
+        let bytes = self.to_bytes();
+        let mut tmp_name = path.as_os_str().to_owned();
+        tmp_name.push(".tmp");
+        let tmp = PathBuf::from(tmp_name);
+        let write = |p: &Path| -> std::io::Result<()> {
+            let mut f = File::create(p)?;
+            f.write_all(&bytes)?;
+            f.sync_all()
+        };
+        write(&tmp).map_err(|e| crate::anyhow!("{}: {e}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .map_err(|e| crate::anyhow!("renaming {} into place: {e}", tmp.display()))?;
+        Ok(())
+    }
+
+    /// Read and validate a document from disk.
+    pub fn read_from(path: &Path) -> crate::Result<CheckpointDoc> {
+        let bytes =
+            std::fs::read(path).map_err(|e| crate::anyhow!("{}: {e}", path.display()))?;
+        CheckpointDoc::from_bytes(&bytes)
+            .map_err(|e| e.context(path.display().to_string()))
+    }
+
+    /// Reject a resume whose run configuration differs from the config
+    /// echo — a checkpoint only continues the *same* run (same kind,
+    /// budget, seed, window and worker count), anything else would
+    /// silently break the bit-for-bit contract.
+    pub fn ensure_matches(
+        &self,
+        kind: DescriptorKind,
+        budget: usize,
+        seed: u64,
+        window: &WindowConfig,
+        workers: u32,
+    ) -> crate::Result<()> {
+        crate::ensure!(
+            self.kind == kind,
+            "checkpoint was written by a {:?} run, resume requested {kind:?}",
+            self.kind
+        );
+        crate::ensure!(
+            self.budget == budget,
+            "checkpoint budget is {}, resume requested {budget}",
+            self.budget
+        );
+        crate::ensure!(
+            self.seed == seed,
+            "checkpoint seed is {:#x}, resume requested {seed:#x}",
+            self.seed
+        );
+        crate::ensure!(
+            self.window == *window,
+            "checkpoint window is {:?}, resume requested {window:?}",
+            self.window
+        );
+        crate::ensure!(
+            self.workers == workers,
+            "checkpoint was written by a {}-worker run, resume requested {workers}",
+            self.workers
+        );
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Direct (single-process) runner
+// ---------------------------------------------------------------------------
+
+/// Configuration of a direct run ([`run_direct`]): one estimator pushed
+/// by the calling thread, no fan-out.
+#[derive(Debug, Clone)]
+pub struct DirectConfig {
+    /// Which estimator to run.
+    pub kind: DescriptorKind,
+    /// Reservoir budget.
+    pub budget: usize,
+    /// RNG seed (a direct run matches pipeline worker 0's seed).
+    pub seed: u64,
+    /// Window policy + snapshot cadence.
+    pub window: WindowConfig,
+    /// Write a checkpoint every this many arrivals (`0` = off).
+    pub checkpoint_every: u64,
+    /// Where checkpoints go (each write atomically replaces the file);
+    /// required when `checkpoint_every > 0`.
+    pub checkpoint_path: Option<PathBuf>,
+}
+
+impl Default for DirectConfig {
+    fn default() -> Self {
+        DirectConfig {
+            kind: DescriptorKind::Gabe,
+            budget: 100_000,
+            seed: 0xc00d,
+            window: WindowConfig::default(),
+            checkpoint_every: 0,
+            checkpoint_path: None,
+        }
+    }
+}
+
+impl DirectConfig {
+    /// Check every knob before touching the stream.
+    pub fn validate(&self) -> crate::Result<()> {
+        crate::ensure!(self.budget >= 1, "budget must be ≥ 1 (got 0)");
+        self.window.validate()?;
+        if let DescriptorKind::Santa { exact_wedges: true } = self.kind {
+            crate::ensure!(
+                !self.window.policy.is_windowed(),
+                "santa exact_wedges is incompatible with a windowed run"
+            );
+        }
+        if self.checkpoint_every > 0 {
+            crate::ensure!(
+                self.checkpoint_path.is_some(),
+                "checkpoint cadence is set but no checkpoint path is given"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// A direct run's output.
+#[derive(Debug)]
+pub struct DirectOutcome {
+    /// The final estimate.
+    pub estimate: WorkerEstimate,
+    /// The snapshot series (empty unless the window config sets a
+    /// stride); includes snapshots taken before a resume point.
+    pub snapshots: Vec<(u64, WorkerEstimate)>,
+    /// Total arrivals the run covers (replayed prefix included).
+    pub edges: u64,
+    /// Checkpoints written by this process.
+    pub checkpoints_written: u64,
+    /// `Some(cursor)` when the run was resumed from a checkpoint.
+    pub resumed_at: Option<u64>,
+}
+
+/// Run one estimator over the stream on the calling thread, optionally
+/// writing periodic checkpoints.  SANTA runs its exact degree pass first
+/// and then resets the stream (two passes, constraint C1).
+pub fn run_direct(
+    stream: &mut impl EdgeStream,
+    cfg: &DirectConfig,
+) -> crate::Result<DirectOutcome> {
+    cfg.validate().map_err(|e| e.context("direct config"))?;
+    let degrees = match cfg.kind {
+        DescriptorKind::Santa { .. } => Some(santa_pass1(stream, DIRECT_CHUNK)?),
+        _ => None,
+    };
+    let state = WorkerState::new(cfg.kind, cfg.budget, cfg.seed, cfg.window, &degrees);
+    drive(stream, state, degrees, cfg, 0, None)
+}
+
+/// Resume a direct run from a checkpoint: validate the config echo,
+/// restore the estimator state, replay the stream to the cursor, then
+/// continue exactly where the checkpointed process stopped.  The result
+/// is bit-for-bit the uninterrupted run's.  SANTA resumes skip pass 1 —
+/// the degree table is stored in the document.
+pub fn resume_direct(
+    stream: &mut impl EdgeStream,
+    path: &Path,
+    cfg: &DirectConfig,
+) -> crate::Result<DirectOutcome> {
+    cfg.validate().map_err(|e| e.context("direct config"))?;
+    let doc = CheckpointDoc::read_from(path)?;
+    crate::ensure!(
+        doc.workers == 0,
+        "checkpoint was written by a {}-worker pipeline run; resume it through the \
+         pipeline with matching --workers, not a direct run",
+        doc.workers
+    );
+    doc.ensure_matches(cfg.kind, cfg.budget, cfg.seed, &cfg.window, 0)
+        .map_err(|e| e.context(path.display().to_string()))?;
+    let blob = &doc.states[0];
+    let mut d = Dec::new(&blob.bytes);
+    let state = WorkerState::load(cfg.kind, &mut d, &doc.degrees)?;
+    d.finish()?;
+    skip_edges(stream, doc.cursor)?;
+    let cursor = doc.cursor;
+    drive(stream, state, doc.degrees, cfg, cursor, Some(cursor))
+}
+
+/// Replay (discard) the first `n` edges of a fresh stream; a stream that
+/// ends or errors early cannot be the checkpointed one.
+pub(crate) fn skip_edges(stream: &mut impl EdgeStream, n: u64) -> crate::Result<()> {
+    let mut scratch: Vec<Edge> = Vec::with_capacity(DIRECT_CHUNK);
+    let mut left = n;
+    while left > 0 {
+        scratch.clear();
+        let want = left.min(DIRECT_CHUNK as u64) as usize;
+        let got = stream.next_batch(&mut scratch, want);
+        if got == 0 {
+            if let Some(e) = stream.take_error() {
+                return Err(e.context("replaying the stream to the checkpoint cursor"));
+            }
+            return Err(crate::anyhow!(
+                "stream ended after {} edges but the checkpoint cursor is {n}",
+                n - left
+            ));
+        }
+        left -= got as u64;
+    }
+    Ok(())
+}
+
+fn drive(
+    stream: &mut impl EdgeStream,
+    mut state: WorkerState,
+    degrees: Option<Arc<Vec<u32>>>,
+    cfg: &DirectConfig,
+    start: u64,
+    resumed_at: Option<u64>,
+) -> crate::Result<DirectOutcome> {
+    let mut staging: Vec<Edge> = Vec::with_capacity(DIRECT_CHUNK);
+    let mut t = start;
+    let mut written = 0u64;
+    loop {
+        staging.clear();
+        if stream.next_batch(&mut staging, DIRECT_CHUNK) == 0 {
+            break;
+        }
+        for &e in &staging {
+            state.push(e);
+            t += 1;
+            if cfg.checkpoint_every > 0 && t % cfg.checkpoint_every == 0 {
+                write_direct_checkpoint(cfg, &state, &degrees, t)?;
+                written += 1;
+            }
+        }
+    }
+    if let Some(e) = stream.take_error() {
+        return Err(e.context("edge stream failed mid-run"));
+    }
+    let (snapshots, estimate) = state.into_results();
+    Ok(DirectOutcome { estimate, snapshots, edges: t, checkpoints_written: written, resumed_at })
+}
+
+fn write_direct_checkpoint(
+    cfg: &DirectConfig,
+    state: &WorkerState,
+    degrees: &Option<Arc<Vec<u32>>>,
+    t: u64,
+) -> crate::Result<()> {
+    let path = cfg
+        .checkpoint_path
+        .as_deref()
+        .ok_or_else(|| crate::anyhow!("checkpoint cadence is set but no path is given"))?;
+    let mut enc = Enc::new();
+    state.save(&mut enc);
+    let doc = CheckpointDoc {
+        kind: cfg.kind,
+        budget: cfg.budget,
+        seed: cfg.seed,
+        window: cfg.window,
+        workers: 0,
+        cursor: t,
+        degrees: degrees.clone(),
+        states: vec![StateBlob { arrivals: t, bytes: enc.into_bytes() }],
+    };
+    doc.write_to(path)
+        .map_err(|e| e.context(format!("writing checkpoint at arrival {t}")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gen;
+    use crate::graph::stream::VecStream;
+    use crate::sampling::{WindowConfig, WindowPolicy};
+    use crate::util::rng::Pcg64;
+    use crate::util::tmp::TempDir;
+
+    fn estimates_bit_identical(a: &WorkerEstimate, b: &WorkerEstimate) -> bool {
+        match (a, b) {
+            (WorkerEstimate::Gabe(x), WorkerEstimate::Gabe(y)) => {
+                x.counts.map(f64::to_bits) == y.counts.map(f64::to_bits)
+                    && x.nv == y.nv
+                    && x.ne == y.ne
+                    && x.degrees == y.degrees
+            }
+            (WorkerEstimate::Maeve(x), WorkerEstimate::Maeve(y)) => {
+                let bits = |v: &[f64]| v.iter().map(|f| f.to_bits()).collect::<Vec<_>>();
+                bits(&x.triangles) == bits(&y.triangles)
+                    && bits(&x.paths) == bits(&y.paths)
+                    && x.degrees == y.degrees
+                    && x.nv == y.nv
+                    && x.ne == y.ne
+            }
+            (WorkerEstimate::Santa(x), WorkerEstimate::Santa(y)) => {
+                x.traces.map(f64::to_bits) == y.traces.map(f64::to_bits)
+                    && x.nv == y.nv
+                    && x.ne == y.ne
+            }
+            _ => false,
+        }
+    }
+
+    fn outcomes_bit_identical(a: &DirectOutcome, b: &DirectOutcome) -> bool {
+        a.edges == b.edges
+            && estimates_bit_identical(&a.estimate, &b.estimate)
+            && a.snapshots.len() == b.snapshots.len()
+            && a.snapshots.iter().zip(&b.snapshots).all(|((ta, ea), (tb, eb))| {
+                ta == tb && estimates_bit_identical(ea, eb)
+            })
+    }
+
+    #[test]
+    fn codec_roundtrips_every_primitive() {
+        let mut enc = Enc::new();
+        enc.u8(0);
+        enc.u8(255);
+        enc.u16(0xbeef);
+        enc.u32(u32::MAX);
+        enc.u64(u64::MAX);
+        enc.usize(usize::MAX);
+        enc.f64(-0.0);
+        enc.f64(f64::NAN);
+        enc.f64(std::f64::consts::PI);
+        enc.edge(Edge::new(7, 3));
+        let bytes = enc.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.u8().unwrap(), 0);
+        assert_eq!(d.u8().unwrap(), 255);
+        assert_eq!(d.u16().unwrap(), 0xbeef);
+        assert_eq!(d.u32().unwrap(), u32::MAX);
+        assert_eq!(d.u64().unwrap(), u64::MAX);
+        assert_eq!(d.usize().unwrap(), usize::MAX);
+        assert_eq!(d.f64().unwrap().to_bits(), (-0.0f64).to_bits());
+        assert_eq!(d.f64().unwrap().to_bits(), f64::NAN.to_bits());
+        assert_eq!(d.f64().unwrap(), std::f64::consts::PI);
+        assert_eq!(d.edge().unwrap(), Edge::new(3, 7));
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn decoder_rejects_truncation_trailing_and_bad_edges() {
+        let mut d = Dec::new(&[1, 2, 3]);
+        let err = d.u64().unwrap_err();
+        assert!(err.to_string().contains("truncated"), "{err}");
+        // trailing bytes are loud
+        let mut d = Dec::new(&[1, 2, 3]);
+        d.u8().unwrap();
+        let err = d.finish().unwrap_err();
+        assert!(err.to_string().contains("trailing"), "{err}");
+        // a non-canonical edge is corruption, not a panic
+        let mut enc = Enc::new();
+        enc.u32(9);
+        enc.u32(9);
+        let bytes = enc.into_bytes();
+        let err = Dec::new(&bytes).edge().unwrap_err();
+        assert!(err.to_string().contains("not canonical"), "{err}");
+    }
+
+    #[test]
+    fn seq_len_guards_preallocation() {
+        // a length prefix claiming 2^60 elements must fail *before* any
+        // allocation happens
+        let mut enc = Enc::new();
+        enc.usize(1 << 60);
+        let bytes = enc.into_bytes();
+        let err = Dec::new(&bytes).seq_len(8).unwrap_err();
+        assert!(err.to_string().contains("remain"), "{err}");
+        // exact fit is accepted
+        let mut enc = Enc::new();
+        enc.usize(2);
+        enc.u64(1);
+        enc.u64(2);
+        let bytes = enc.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.seq_len(8).unwrap(), 2);
+    }
+
+    fn sample_doc() -> CheckpointDoc {
+        CheckpointDoc {
+            kind: DescriptorKind::Santa { exact_wedges: false },
+            budget: 512,
+            seed: 0xfeed,
+            window: WindowConfig::new(WindowPolicy::Sliding { w: 100 }).with_stride(25),
+            workers: 2,
+            cursor: 1234,
+            degrees: Some(Arc::new(vec![3, 1, 4, 1, 5])),
+            states: vec![
+                StateBlob { arrivals: 1234, bytes: vec![1, 2, 3] },
+                StateBlob { arrivals: 1234, bytes: vec![9, 8] },
+            ],
+        }
+    }
+
+    #[test]
+    fn document_roundtrip_preserves_everything() {
+        let doc = sample_doc();
+        let restored = CheckpointDoc::from_bytes(&doc.to_bytes()).unwrap();
+        assert_eq!(restored, doc);
+        // and through a file, atomically
+        let dir = TempDir::new("sdc").unwrap();
+        let path = dir.path().join("run.sdc");
+        doc.write_to(&path).unwrap();
+        assert_eq!(CheckpointDoc::read_from(&path).unwrap(), doc);
+        assert!(!path.with_extension("sdc.tmp").exists(), "temp file renamed away");
+    }
+
+    #[test]
+    fn corrupt_documents_fail_loudly() {
+        let good = sample_doc().to_bytes();
+        // bad magic
+        let mut bad = good.clone();
+        bad[0] = 0x88;
+        let err = CheckpointDoc::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        // future version (checksum refreshed so the version check fires)
+        let mut bad = good.clone();
+        bad[4] = 2;
+        let sum = fnv1a64(&bad[..bad.len() - 8]).to_le_bytes();
+        let n = bad.len();
+        bad[n - 8..].copy_from_slice(&sum);
+        let err = CheckpointDoc::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("version 2"), "{err}");
+        // nonzero flags
+        let mut bad = good.clone();
+        bad[6] = 1;
+        let sum = fnv1a64(&bad[..bad.len() - 8]).to_le_bytes();
+        let n = bad.len();
+        bad[n - 8..].copy_from_slice(&sum);
+        let err = CheckpointDoc::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("flags"), "{err}");
+        // any single flipped body bit is a checksum mismatch
+        let mut bad = good.clone();
+        bad[20] ^= 0x40;
+        let err = CheckpointDoc::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // truncation at every prefix is an error, never a panic
+        for cut in 0..good.len() {
+            assert!(CheckpointDoc::from_bytes(&good[..cut]).is_err(), "cut={cut}");
+        }
+        // trailing garbage after the checksum
+        let mut bad = good.clone();
+        bad.push(0);
+        assert!(CheckpointDoc::from_bytes(&bad).is_err());
+    }
+
+    /// The tentpole differential, direct form: for every descriptor and
+    /// window policy, resuming from a mid-stream checkpoint reproduces
+    /// the uninterrupted run bit-for-bit (estimate, snapshots, edges).
+    #[test]
+    fn direct_resume_is_bit_identical_for_every_descriptor() {
+        let g = gen::powerlaw_cluster_graph(200, 3, 0.5, &mut Pcg64::seed_from_u64(91));
+        let m = g.m();
+        let dir = TempDir::new("resume").unwrap();
+        let kinds = [
+            DescriptorKind::Gabe,
+            DescriptorKind::Maeve,
+            DescriptorKind::Santa { exact_wedges: false },
+        ];
+        let windows = [
+            WindowConfig::default(),
+            WindowConfig::new(WindowPolicy::Sliding { w: m / 2 }).with_stride(m / 5),
+            WindowConfig::new(WindowPolicy::Decay { half_life: 64.0 }),
+        ];
+        for kind in kinds {
+            for window in windows {
+                let cfg = DirectConfig {
+                    kind,
+                    budget: m / 3,
+                    seed: 29,
+                    window,
+                    ..Default::default()
+                };
+                let mut s = VecStream::shuffled(g.edges.clone(), 7);
+                let base = run_direct(&mut s, &cfg).unwrap();
+                assert_eq!(base.edges as usize, m);
+
+                // checkpoint every K edges (K chosen to not divide |E|,
+                // so the last checkpoint is mid-stream), then resume from
+                // the final written checkpoint on a fresh stream
+                let path = dir.path().join(format!("{kind:?}-{window:?}.sdc"));
+                let ck = DirectConfig {
+                    checkpoint_every: (m as u64 / 4) | 1,
+                    checkpoint_path: Some(path.clone()),
+                    ..cfg.clone()
+                };
+                let mut s = VecStream::shuffled(g.edges.clone(), 7);
+                let run = run_direct(&mut s, &ck).unwrap();
+                assert!(run.checkpoints_written >= 3, "{kind:?} {window:?}");
+                assert!(
+                    outcomes_bit_identical(&run, &base),
+                    "{kind:?} {window:?}: checkpointing perturbed the run"
+                );
+
+                let mut s = VecStream::shuffled(g.edges.clone(), 7);
+                let resumed = resume_direct(&mut s, &path, &cfg).unwrap();
+                let at = resumed.resumed_at.unwrap();
+                assert!(at > 0 && at < m as u64, "resume point {at} not mid-stream");
+                assert!(
+                    outcomes_bit_identical(&resumed, &base),
+                    "{kind:?} {window:?}: resume diverged from the uninterrupted run"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn resume_rejects_mismatched_config_and_short_streams() {
+        let g = gen::er_graph(60, 150, &mut Pcg64::seed_from_u64(92));
+        let dir = TempDir::new("resume-mismatch").unwrap();
+        let path = dir.path().join("run.sdc");
+        let cfg = DirectConfig {
+            kind: DescriptorKind::Gabe,
+            budget: 40,
+            seed: 5,
+            checkpoint_every: 50,
+            checkpoint_path: Some(path.clone()),
+            ..Default::default()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 3);
+        run_direct(&mut s, &cfg).unwrap();
+
+        let resume_with = |cfg: &DirectConfig| {
+            let mut s = VecStream::shuffled(g.edges.clone(), 3);
+            resume_direct(&mut s, &path, cfg)
+        };
+        let base = DirectConfig { checkpoint_every: 0, checkpoint_path: None, ..cfg.clone() };
+        for (mutant, named) in [
+            (DirectConfig { seed: 6, ..base.clone() }, "seed"),
+            (DirectConfig { budget: 41, ..base.clone() }, "budget"),
+            (DirectConfig { kind: DescriptorKind::Maeve, ..base.clone() }, "Maeve"),
+            (
+                DirectConfig {
+                    window: WindowConfig::new(WindowPolicy::Sliding { w: 9 }),
+                    ..base.clone()
+                },
+                "window",
+            ),
+        ] {
+            let err = resume_with(&mutant).unwrap_err();
+            assert!(err.to_string().contains(named), "{named}: {err}");
+        }
+        // matching config works…
+        resume_with(&base).unwrap();
+        // …but a stream shorter than the cursor cannot be the same run
+        let mut short = VecStream::new(g.edges[..10].to_vec());
+        let err = resume_direct(&mut short, &path, &base).unwrap_err();
+        assert!(err.to_string().contains("cursor"), "{err}");
+        // a pipeline checkpoint refuses the direct path
+        let doc = CheckpointDoc {
+            workers: 2,
+            degrees: None,
+            kind: DescriptorKind::Gabe,
+            budget: 40,
+            seed: 5,
+            window: WindowConfig::default(),
+            cursor: 1,
+            states: vec![
+                StateBlob { arrivals: 1, bytes: vec![0] },
+                StateBlob { arrivals: 1, bytes: vec![0] },
+            ],
+        };
+        let ppath = dir.path().join("pipeline.sdc");
+        doc.write_to(&ppath).unwrap();
+        let mut s = VecStream::shuffled(g.edges.clone(), 3);
+        let err = resume_direct(&mut s, &ppath, &base).unwrap_err();
+        assert!(err.to_string().contains("pipeline"), "{err}");
+    }
+}

@@ -7,12 +7,6 @@
 //! `pairwise_dist` artifact; [`DistanceMatrix`] is the backend-agnostic
 //! consumer.
 
-// Rustdoc sweep status (ISSUE 5): the crate-level
-// `#![warn(missing_docs)]` is gated off here until this module gets
-// its own documentation pass; sampling/descriptors/coordinator/graph
-// are fully swept.
-#![allow(missing_docs)]
-
 use crate::util::rng::Pcg64;
 
 use crate::analyze::{canberra, euclidean};
@@ -20,14 +14,18 @@ use crate::analyze::{canberra, euclidean};
 /// Distance used to compare descriptor vectors.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Metric {
+    /// Canberra distance — Σ |aᵢ−bᵢ| / (|aᵢ|+|bᵢ|) (GABE/MAEVE, §5.1).
     Canberra,
+    /// Euclidean (ℓ₂) distance (spectral descriptors, §5.1).
     Euclidean,
 }
 
 /// Dense symmetric distance matrix.
 #[derive(Debug, Clone)]
 pub struct DistanceMatrix {
+    /// Number of items (the matrix is `n × n`).
     pub n: usize,
+    /// Row-major distances; `d[i*n + j]` is the distance between `i`/`j`.
     pub d: Vec<f64>,
 }
 
@@ -55,6 +53,7 @@ impl DistanceMatrix {
         DistanceMatrix { n, d }
     }
 
+    /// Distance between items `i` and `j`.
     #[inline]
     pub fn get(&self, i: usize, j: usize) -> f64 {
         self.d[i * self.n + j]
@@ -82,7 +81,9 @@ pub struct CvResult {
     pub accuracy: f64,
     /// Std dev of fold accuracies.
     pub std: f64,
+    /// Folds per repeat (after clamping to the item count).
     pub folds: usize,
+    /// Independent shuffled repeats.
     pub repeats: usize,
 }
 

@@ -20,23 +20,45 @@
 //!
 //! Workers are OS threads (CPU-bound inner loop); the async binary drives
 //! the pipeline through `tokio::task::spawn_blocking`.  Configuration
-//! errors, worker panics and stream I/O failures (truncated reads, failed
-//! SANTA pass-2 resets — see `EdgeStream::take_error`) surface as
-//! [`crate::Result`] errors instead of aborting or returning garbage.
+//! errors and stream I/O failures (truncated reads, failed SANTA pass-2
+//! resets — see `EdgeStream::take_error`) surface as [`crate::Result`]
+//! errors instead of aborting or returning garbage.
+//!
+//! **Fault tolerance** (ISSUE 7, DESIGN.md §10): each worker runs its
+//! push loop under `catch_unwind` supervision.  A panicking worker is
+//! restored from its last in-memory checkpoint and replays the chunks
+//! received since — bit-for-bit, because the checkpoint captures the full
+//! sampler state including RNG registers.  A worker that keeps panicking
+//! past [`CoordinatorConfig::max_restarts`] drains its queue (the master
+//! never blocks on a dead worker) and is declared *lost*; the master then
+//! merges the survivors with arrival-count-weighted averaging instead of
+//! aborting, and flags the run in [`PipelineResult::health`].  With
+//! [`CoordinatorConfig::checkpoint_every`] set, workers also ship their
+//! state blobs to the master, which writes an atomic `.sdc` document
+//! ([`crate::checkpoint`]) at each complete barrier;
+//! [`CoordinatorConfig::resume`] restores such a document and continues
+//! the run bit-for-bit.  Failures are injectable deterministically via
+//! [`CoordinatorConfig::fault`] or the `STREAM_DESCRIPTORS_FAULT_PLAN`
+//! environment variable ([`crate::util::fault`]).
 
 pub mod fanout;
 pub mod placement;
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::collections::BTreeMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::path::PathBuf;
+use std::sync::mpsc::{channel, sync_channel, Receiver, SyncSender};
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
+use crate::checkpoint::{skip_edges, CheckpointDoc, Dec, Enc, StateBlob};
 use crate::descriptors::gabe::{GabeEstimate, GabeState};
 use crate::descriptors::maeve::{MaeveEstimate, MaeveState};
 use crate::descriptors::santa::{SantaConfig, SantaEstimate, SantaPass2};
 use crate::graph::stream::EdgeStream;
 use crate::graph::Edge;
 use crate::sampling::WindowConfig;
+use crate::util::fault::{ArmedFaults, FaultPlan, WorkerFault, STALL_YIELDS};
 use crate::util::topology::Topology;
 
 use fanout::{Fanout, FanoutStats};
@@ -81,6 +103,30 @@ pub struct CoordinatorConfig {
     /// window clocks agree and snapshots land on the same arrival
     /// indices — the *snapshot barriers* the master merges at.
     pub window: WindowConfig,
+    /// How many times a panicking worker is restored from its in-memory
+    /// checkpoint before it is declared permanently lost (ISSUE 7).  `0`
+    /// means the first panic is a loss.
+    pub max_restarts: u32,
+    /// Injected fault schedule for tests/chaos runs; `None` falls back to
+    /// the `STREAM_DESCRIPTORS_FAULT_PLAN` environment variable (the
+    /// explicitly injected plan — even an empty one — always wins).
+    pub fault: Option<FaultPlan>,
+    /// Write a `.sdc` checkpoint roughly every this many arrivals
+    /// (rounded up to the next chunk boundary so every worker checkpoints
+    /// at the same barrier); `0` disables file checkpoints.
+    pub checkpoint_every: u64,
+    /// Where pipeline checkpoints go (each write atomically replaces the
+    /// file); required when `checkpoint_every > 0`.
+    pub checkpoint_path: Option<PathBuf>,
+    /// Resume from this checkpoint: restore every worker's state, replay
+    /// the stream to the cursor, then continue bit-for-bit.  The config
+    /// echo must match this config (same kind, budget, seed, window,
+    /// workers) or the run is rejected loudly.
+    pub resume: Option<PathBuf>,
+    /// Stop consuming the stream after this many total arrivals (`0` =
+    /// run to end of stream).  Test/ops knob: combined with
+    /// `checkpoint_every` it simulates an interrupted run to resume.
+    pub stop_after: u64,
 }
 
 impl Default for CoordinatorConfig {
@@ -94,6 +140,12 @@ impl Default for CoordinatorConfig {
             placement: PlacementPolicy::None,
             topology: None,
             window: WindowConfig::default(),
+            max_restarts: 2,
+            fault: None,
+            checkpoint_every: 0,
+            checkpoint_path: None,
+            resume: None,
+            stop_after: 0,
         }
     }
 }
@@ -116,6 +168,12 @@ impl CoordinatorConfig {
                 "injected topology has a node with no CPUs"
             );
         }
+        if self.checkpoint_every > 0 {
+            crate::ensure!(
+                self.checkpoint_path.is_some(),
+                "checkpoint cadence is set but no checkpoint path is given"
+            );
+        }
         self.window.validate()?;
         Ok(())
     }
@@ -132,7 +190,7 @@ pub enum WorkerEstimate {
     Santa(SantaEstimate),
 }
 
-enum WorkerState {
+pub(crate) enum WorkerState {
     Gabe(GabeState),
     Maeve(MaeveState),
     Santa(SantaPass2),
@@ -141,7 +199,7 @@ enum WorkerState {
 impl WorkerState {
     /// Built *inside* the worker thread, after pinning: the reservoir and
     /// sample-graph arenas are first-touched on the worker's own node.
-    fn new(
+    pub(crate) fn new(
         kind: DescriptorKind,
         budget: usize,
         seed: u64,
@@ -168,7 +226,7 @@ impl WorkerState {
         }
     }
 
-    fn push(&mut self, e: Edge) {
+    pub(crate) fn push(&mut self, e: Edge) {
         match self {
             WorkerState::Gabe(s) => s.push(e),
             WorkerState::Maeve(s) => s.push(e),
@@ -176,9 +234,59 @@ impl WorkerState {
         }
     }
 
+    /// Serialize the full estimator state (ISSUE 7): a descriptor tag
+    /// followed by the state's own checkpoint bytes.  SANTA's shared
+    /// degree table is *excluded* — the `.sdc` document stores it once.
+    pub(crate) fn save(&self, out: &mut Enc) {
+        match self {
+            WorkerState::Gabe(s) => {
+                out.u8(0);
+                s.save(out);
+            }
+            WorkerState::Maeve(s) => {
+                out.u8(1);
+                s.save(out);
+            }
+            WorkerState::Santa(s) => {
+                out.u8(2);
+                s.save(out);
+            }
+        }
+    }
+
+    /// Rebuild from [`WorkerState::save`] bytes.  `degrees` supplies the
+    /// document-level SANTA degree table; the blob's descriptor tag must
+    /// match `kind` (a mismatch is corruption, rejected by name).
+    pub(crate) fn load(
+        kind: DescriptorKind,
+        d: &mut Dec<'_>,
+        degrees: &Option<Arc<Vec<u32>>>,
+    ) -> crate::Result<WorkerState> {
+        let tag = d.u8()?;
+        let expect = match kind {
+            DescriptorKind::Gabe => 0,
+            DescriptorKind::Maeve => 1,
+            DescriptorKind::Santa { .. } => 2,
+        };
+        crate::ensure!(
+            tag == expect,
+            "checkpoint state blob has descriptor tag {tag}, the run expects {expect}"
+        );
+        match kind {
+            DescriptorKind::Gabe => Ok(WorkerState::Gabe(GabeState::load(d)?)),
+            DescriptorKind::Maeve => Ok(WorkerState::Maeve(MaeveState::load(d)?)),
+            DescriptorKind::Santa { .. } => {
+                let deg = degrees
+                    .clone()
+                    .ok_or_else(|| crate::anyhow!("santa checkpoint is missing its degree table"))?;
+                Ok(WorkerState::Santa(SantaPass2::load(d, deg)?))
+            }
+        }
+    }
+
     /// Drain this worker's snapshot series, then finalize.  Snapshots are
     /// `(t, estimate)` pairs at the shared barrier arrivals.
-    fn into_results(mut self) -> (Vec<(u64, WorkerEstimate)>, WorkerEstimate) {
+    pub(crate) fn into_results(mut self) -> (Vec<(u64, WorkerEstimate)>, WorkerEstimate) {
         let snaps = match &mut self {
             WorkerState::Gabe(s) => s
                 .take_snapshots()
@@ -237,22 +345,51 @@ pub struct SnapshotPoint {
     pub averaged: WorkerEstimate,
 }
 
+/// What the supervisor observed over a run (ISSUE 7): restarts, losses,
+/// degradation, injected faults, retried reads, checkpoints written.  A
+/// clean run is all-zeros with `degraded == false`.
+#[derive(Debug, Clone, Default)]
+pub struct HealthReport {
+    /// Worker panics absorbed by the supervisor (each one triggered a
+    /// restore-and-replay attempt).
+    pub restarts: u64,
+    /// Workers declared permanently lost (restart budget exhausted), by
+    /// worker index.
+    pub lost_workers: Vec<usize>,
+    /// `true` when ≥ 1 worker was lost: the averaged estimate is the
+    /// arrival-weighted merge of the survivors, not the full ensemble.
+    pub degraded: bool,
+    /// Transient stream read errors absorbed by the retry loop
+    /// ([`crate::graph::ingest`]).
+    pub io_retries: u64,
+    /// Worker faults the armed plan actually triggered this run.
+    pub faults_injected: u64,
+    /// `.sdc` checkpoint documents the master wrote.
+    pub checkpoints_written: u64,
+}
+
 /// Aggregated pipeline output.
 #[derive(Debug)]
 pub struct PipelineResult {
-    /// The master's averaged estimate.
+    /// The master's averaged estimate (arrival-weighted over survivors
+    /// when [`HealthReport::degraded`]).
     pub averaged: WorkerEstimate,
-    /// Raw per-worker estimates (variance analysis, §3.4 experiment).
+    /// Raw estimates of the workers that completed (lost workers
+    /// contribute nothing), in worker order.
     pub per_worker: Vec<WorkerEstimate>,
     /// The averaged descriptor time series (empty unless
     /// [`CoordinatorConfig::window`] sets a snapshot stride).
     pub snapshots: Vec<SnapshotPoint>,
-    /// Edges the master streamed through the fan-out.
+    /// Edges the master streamed through the fan-out (on a resumed run
+    /// this includes the replayed prefix).
     pub edges: u64,
     /// Wall-clock time of the full run.
     pub elapsed: Duration,
     /// The placement the run actually achieved.
     pub placement: PlacementReport,
+    /// What the supervisor observed (restarts, losses, faults,
+    /// checkpoints).
+    pub health: HealthReport,
 }
 
 impl PipelineResult {
@@ -316,12 +453,202 @@ fn average(per_worker: &[WorkerEstimate]) -> WorkerEstimate {
     }
 }
 
+/// Arrival-count-weighted merge for degraded runs: worker `i`
+/// contributes with weight `arrivals_i / Σ arrivals` (survivors of a full
+/// run all carry equal weight, so this is the survivors' mean — but the
+/// weighting stays correct should a future path merge partial states).
+/// The non-degraded path keeps [`average`] untouched: its division order
+/// is bit-for-bit load-bearing for the differential suites.
+fn weighted_average(per_worker: &[WorkerEstimate], arrivals: &[u64]) -> WorkerEstimate {
+    let total: u64 = arrivals.iter().sum();
+    let weight = |i: usize| arrivals[i] as f64 / total as f64;
+    match &per_worker[0] {
+        WorkerEstimate::Gabe(first) => {
+            let mut counts = [0.0f64; crate::count::N_GRAPHLETS];
+            for (i, est) in per_worker.iter().enumerate() {
+                let WorkerEstimate::Gabe(e) = est else { unreachable!() };
+                for (c, v) in counts.iter_mut().zip(&e.counts) {
+                    *c += v * weight(i);
+                }
+            }
+            WorkerEstimate::Gabe(GabeEstimate {
+                counts,
+                nv: first.nv,
+                ne: first.ne,
+                degrees: first.degrees.clone(),
+            })
+        }
+        WorkerEstimate::Maeve(first) => {
+            let n = first.degrees.len();
+            let mut tri = vec![0.0f64; n];
+            let mut path = vec![0.0f64; n];
+            for (i, est) in per_worker.iter().enumerate() {
+                let WorkerEstimate::Maeve(e) = est else { unreachable!() };
+                let w = weight(i);
+                for k in 0..n {
+                    tri[k] += e.triangles[k] * w;
+                    path[k] += e.paths[k] * w;
+                }
+            }
+            WorkerEstimate::Maeve(MaeveEstimate {
+                nv: first.nv,
+                ne: first.ne,
+                degrees: first.degrees.clone(),
+                triangles: tri,
+                paths: path,
+            })
+        }
+        WorkerEstimate::Santa(first) => {
+            let mut traces = [0.0f64; 5];
+            for (i, est) in per_worker.iter().enumerate() {
+                let WorkerEstimate::Santa(e) = est else { unreachable!() };
+                for (t, v) in traces.iter_mut().zip(&e.traces) {
+                    *t += v * weight(i);
+                }
+            }
+            WorkerEstimate::Santa(SantaEstimate {
+                nv: first.nv,
+                ne: first.ne,
+                traces,
+            })
+        }
+    }
+}
+
+/// How one supervised worker thread ended: `Done` carries the estimate
+/// (plus how many edges it integrated — the weight of its vote in a
+/// degraded merge), `Lost` means the restart budget ran out and the
+/// worker drained its queue and bowed out.
+enum WorkerExit {
+    Done {
+        pinned: bool,
+        restarts: u32,
+        arrivals: u64,
+        snaps: Vec<(u64, WorkerEstimate)>,
+        last: WorkerEstimate,
+    },
+    Lost {
+        pinned: bool,
+        restarts: u32,
+        msg: String,
+    },
+}
+
 fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
     payload
         .downcast_ref::<&str>()
         .map(|s| s.to_string())
         .or_else(|| payload.downcast_ref::<String>().cloned())
         .unwrap_or_else(|| "opaque panic payload".into())
+}
+
+/// Consume any fault due for `worker` at arrival `t`: `panic` events
+/// unwind into the supervisor's `catch_unwind`, `stall` events spin a
+/// bounded yield loop (a hiccup, never a hang).
+fn trigger_fault(armed: &ArmedFaults, worker: usize, t: u64) {
+    match armed.worker_fault(worker, t) {
+        Some(WorkerFault::Panic) => {
+            panic!("injected worker fault (worker {worker}, arrival {t})")
+        }
+        Some(WorkerFault::Stall) => {
+            for _ in 0..STALL_YIELDS {
+                std::thread::yield_now();
+            }
+        }
+        None => {}
+    }
+}
+
+/// SANTA's master-side exact degree pass (pass 1), shared with the
+/// direct runner ([`crate::checkpoint::run_direct`]).  Drains the
+/// stream, then resets it for pass 2; both a truncated pass and a failed
+/// reset are loud errors.
+pub(crate) fn santa_pass1(
+    stream: &mut impl EdgeStream,
+    chunk_size: usize,
+) -> crate::Result<Arc<Vec<u32>>> {
+    let mut deg: Vec<u32> = Vec::new();
+    let mut buf: Vec<Edge> = Vec::with_capacity(chunk_size);
+    loop {
+        buf.clear();
+        if stream.next_batch(&mut buf, chunk_size) == 0 {
+            break;
+        }
+        for e in &buf {
+            if deg.len() <= e.v as usize {
+                deg.resize(e.v as usize + 1, 0);
+            }
+            deg[e.u as usize] += 1;
+            deg[e.v as usize] += 1;
+        }
+    }
+    if let Some(e) = stream.take_error() {
+        return Err(e.context("santa pass 1 truncated by stream error"));
+    }
+    stream.reset();
+    if let Some(e) = stream.take_error() {
+        return Err(e.context("santa pass-2 reset failed"));
+    }
+    Ok(Arc::new(deg))
+}
+
+/// Master-side collector of the workers' checkpoint blobs: a barrier at
+/// arrival `t` is complete once all `W` workers have shipped their state
+/// for `t`, at which point one atomic `.sdc` document is written.
+/// Barriers left incomplete by a lost worker are dropped — a checkpoint
+/// either holds every worker's state or is not written at all.
+struct CkptCollector<'a> {
+    cfg: &'a CoordinatorConfig,
+    kind: DescriptorKind,
+    degrees: Option<Arc<Vec<u32>>>,
+    pending: BTreeMap<u64, Vec<Option<Vec<u8>>>>,
+    written: u64,
+    last_written: u64,
+}
+
+impl CkptCollector<'_> {
+    fn offer(&mut self, wid: usize, t: u64, blob: Vec<u8>) -> crate::Result<()> {
+        if t <= self.last_written {
+            return Ok(());
+        }
+        let workers = self.cfg.workers;
+        let slot = self.pending.entry(t).or_insert_with(|| vec![None; workers]);
+        if slot[wid].is_some() {
+            return Ok(()); // duplicate ship (defensive; restarts never re-ship)
+        }
+        slot[wid] = Some(blob);
+        if !slot.iter().all(Option::is_some) {
+            return Ok(());
+        }
+        let blobs = self.pending.remove(&t).unwrap_or_default();
+        let states = blobs
+            .into_iter()
+            .flatten()
+            .map(|bytes| StateBlob { arrivals: t, bytes })
+            .collect();
+        let path = self
+            .cfg
+            .checkpoint_path
+            .as_deref()
+            .ok_or_else(|| crate::anyhow!("checkpoint barrier hit without a path"))?;
+        let doc = CheckpointDoc {
+            kind: self.kind,
+            budget: self.cfg.budget,
+            seed: self.cfg.seed,
+            window: self.cfg.window,
+            workers: self.cfg.workers as u32,
+            cursor: t,
+            degrees: self.degrees.clone(),
+            states,
+        };
+        doc.write_to(path)
+            .map_err(|e| e.context(format!("pipeline checkpoint at arrival {t}")))?;
+        self.written += 1;
+        self.last_written = t;
+        // barriers a lost worker will never complete
+        self.pending.retain(|&k, _| k > t);
+        Ok(())
+    }
 }
 
 /// Run the fan-out pipeline over a stream.
@@ -371,35 +698,51 @@ pub fn run_pipeline(
     }
     let start = Instant::now();
 
-    // SANTA pass 1 (master-side, exact)
-    let degrees: Option<Arc<Vec<u32>>> = match kind {
-        DescriptorKind::Santa { .. } => {
-            let mut deg: Vec<u32> = Vec::new();
-            let mut buf: Vec<Edge> = Vec::with_capacity(cfg.chunk_size);
-            loop {
-                buf.clear();
-                if stream.next_batch(&mut buf, cfg.chunk_size) == 0 {
-                    break;
-                }
-                for e in &buf {
-                    if deg.len() <= e.v as usize {
-                        deg.resize(e.v as usize + 1, 0);
-                    }
-                    deg[e.u as usize] += 1;
-                    deg[e.v as usize] += 1;
-                }
+    // fault schedule: an injected plan wins, else the environment (how
+    // the chaos CI job pins a plan under the whole suite)
+    let plan = match &cfg.fault {
+        Some(p) => p.clone(),
+        None => FaultPlan::from_env()
+            .map_err(|e| e.context("coordinator fault plan"))?
+            .unwrap_or_default(),
+    };
+    let armed = Arc::new(plan.arm());
+
+    // resume: read + fully validate the checkpoint (config echo and
+    // every state blob) before touching the stream
+    let resume_doc = match &cfg.resume {
+        Some(path) => {
+            let doc = CheckpointDoc::read_from(path)?;
+            doc.ensure_matches(kind, cfg.budget, cfg.seed, &cfg.window, cfg.workers as u32)
+                .map_err(|e| e.context(format!("resuming {}", path.display())))?;
+            for (wid, blob) in doc.states.iter().enumerate() {
+                (|| -> crate::Result<()> {
+                    let mut d = Dec::new(&blob.bytes);
+                    let state = WorkerState::load(kind, &mut d, &doc.degrees)?;
+                    d.finish()?;
+                    drop(state);
+                    Ok(())
+                })()
+                .map_err(|e| e.context(format!("resume state for worker {wid}")))?;
             }
-            if let Some(e) = stream.take_error() {
-                return Err(e.context("santa pass 1 truncated by stream error"));
-            }
-            stream.reset();
-            if let Some(e) = stream.take_error() {
-                return Err(e.context("santa pass-2 reset failed"));
-            }
-            Some(Arc::new(deg))
+            Some(doc)
         }
+        None => None,
+    };
+    let cursor = resume_doc.as_ref().map_or(0, |d| d.cursor);
+
+    // SANTA pass 1 (master-side, exact); a resume reuses the stored table
+    // instead of re-reading the stream
+    let degrees: Option<Arc<Vec<u32>>> = match (&resume_doc, kind) {
+        (Some(doc), DescriptorKind::Santa { .. }) => doc.degrees.clone(),
+        (None, DescriptorKind::Santa { .. }) => Some(santa_pass1(stream, cfg.chunk_size)?),
         _ => None,
     };
+
+    // replay the fresh stream to the checkpoint cursor
+    if cursor > 0 {
+        skip_edges(stream, cursor)?;
+    }
 
     // worker → node/CPU plan (discovery is skipped entirely for the
     // default unpinned policy with no injected topology)
@@ -411,15 +754,24 @@ pub fn run_pipeline(
     let slots = placement::plan(cfg.placement, &topo, cfg.workers);
     let nodes_used = placement::nodes_used(&slots);
 
-    // one worker's return: (pinned?, snapshot series, final estimate)
-    type WorkerOut = (bool, Vec<(u64, WorkerEstimate)>, WorkerEstimate);
-    // the scope's aggregate: per-worker estimates, per-worker snapshot
-    // series, pinned-worker count, fan-out stats
-    type ScopeOut = (Vec<WorkerEstimate>, Vec<Vec<(u64, WorkerEstimate)>>, usize, FanoutStats);
-    let mut edges = 0u64;
-    let (per_worker, worker_snaps, pinned_workers, fan_stats) = std::thread::scope(
+    // the scope's aggregate: per-worker exits (wid order), fan-out stats,
+    // checkpoints written to disk
+    type ScopeOut = (Vec<WorkerExit>, FanoutStats, u64);
+    let file_ckpt = cfg.checkpoint_every > 0;
+    // in-memory restart cadence: align with the file cadence so both land
+    // on the same chunk barriers; without file checkpoints pick a bounded
+    // replay depth instead
+    let ckpt_stride = if file_ckpt {
+        cfg.checkpoint_every
+    } else {
+        (cfg.chunk_size as u64).saturating_mul(16).max(1)
+    };
+    let max_restarts = cfg.max_restarts;
+    let mut edges = cursor;
+    let (exits, fan_stats, ckpt_written) = std::thread::scope(
         |scope| -> crate::Result<ScopeOut> {
             let mut fan = Fanout::new(topo.nodes.len());
+            let (ckpt_tx, ckpt_rx) = channel::<(usize, u64, Vec<u8>)>();
             let mut handles = Vec::with_capacity(cfg.workers);
             for (wid, slot) in slots.iter().enumerate() {
                 let (tx, rx): (SyncSender<Arc<[Edge]>>, Receiver<Arc<[Edge]>>) =
@@ -430,32 +782,131 @@ pub fn run_pipeline(
                 let window = cfg.window;
                 let degrees = degrees.clone();
                 let cpu = slot.cpu;
-                handles.push(scope.spawn(move || -> WorkerOut {
+                let armed = Arc::clone(&armed);
+                let ckpt_tx = ckpt_tx.clone();
+                let resume_blob = resume_doc.as_ref().map(|d| d.states[wid].bytes.clone());
+                handles.push(scope.spawn(move || -> WorkerExit {
                     // pin first, allocate second: first-touch places the
                     // reservoir + arena pages on this worker's node
                     let pinned = cpu.is_some_and(placement::pin_current_thread);
-                    let mut state = WorkerState::new(kind, budget, seed, window, &degrees);
-                    while let Ok(chunk) = rx.recv() {
-                        for &e in chunk.iter() {
-                            state.push(e);
+                    let mut state = match &resume_blob {
+                        None => WorkerState::new(kind, budget, seed, window, &degrees),
+                        Some(blob) => {
+                            let mut d = Dec::new(blob);
+                            WorkerState::load(kind, &mut d, &degrees)
+                                .expect("resume blob was validated by the master")
+                        }
+                    };
+                    // supervision state: the newest in-memory checkpoint
+                    // (taken at arrival `ckpt_t`) plus every chunk applied
+                    // since it — enough to rebuild `state` bit-for-bit
+                    // after a panic mid-chunk
+                    let mut t = cursor;
+                    let mut ckpt_t = t;
+                    let mut ckpt_blob = {
+                        let mut enc = Enc::new();
+                        state.save(&mut enc);
+                        enc.into_bytes()
+                    };
+                    let mut replay: Vec<Arc<[Edge]>> = Vec::new();
+                    let mut restarts = 0u32;
+                    let mut poisoned = false;
+                    'chunks: while let Ok(chunk) = rx.recv() {
+                        loop {
+                            let attempt = catch_unwind(AssertUnwindSafe(|| {
+                                if poisoned {
+                                    // restart: rewind to the checkpoint and
+                                    // replay the suffix (fault triggers fire
+                                    // again; one-shot events already consumed
+                                    // stay consumed, so the replay is clean)
+                                    let mut d = Dec::new(&ckpt_blob);
+                                    state = WorkerState::load(kind, &mut d, &degrees)
+                                        .expect("in-memory checkpoint is self-written");
+                                    let mut tt = ckpt_t;
+                                    for ch in &replay {
+                                        for &e in ch.iter() {
+                                            tt += 1;
+                                            trigger_fault(&armed, wid, tt);
+                                            state.push(e);
+                                        }
+                                    }
+                                }
+                                let mut tt = t;
+                                for &e in chunk.iter() {
+                                    tt += 1;
+                                    trigger_fault(&armed, wid, tt);
+                                    state.push(e);
+                                }
+                            }));
+                            match attempt {
+                                Ok(()) => {
+                                    poisoned = false;
+                                    t += chunk.len() as u64;
+                                    replay.push(chunk);
+                                    if t - ckpt_t >= ckpt_stride {
+                                        let mut enc = Enc::new();
+                                        state.save(&mut enc);
+                                        ckpt_blob = enc.into_bytes();
+                                        ckpt_t = t;
+                                        replay.clear();
+                                        if file_ckpt {
+                                            let _ = ckpt_tx.send((wid, t, ckpt_blob.clone()));
+                                        }
+                                    }
+                                    continue 'chunks;
+                                }
+                                Err(payload) => {
+                                    restarts += 1;
+                                    poisoned = true;
+                                    if restarts > max_restarts {
+                                        // permanent loss: drain the queue so
+                                        // the master never blocks on a dead
+                                        // worker, then report out
+                                        let msg = panic_message(payload);
+                                        while rx.recv().is_ok() {}
+                                        return WorkerExit::Lost { pinned, restarts, msg };
+                                    }
+                                }
+                            }
                         }
                     }
                     let (snaps, last) = state.into_results();
-                    (pinned, snaps, last)
+                    WorkerExit::Done { pinned, restarts, arrivals: t, snaps, last }
                 }));
             }
+            drop(ckpt_tx); // workers hold the only senders now
+
+            let mut collector = CkptCollector {
+                cfg,
+                kind,
+                degrees: degrees.clone(),
+                pending: BTreeMap::new(),
+                written: 0,
+                last_written: cursor,
+            };
+            let mut ckpt_err: Option<crate::util::err::Error> = None;
 
             // master: batch-decode straight into the reusable staging
             // buffer (ISSUE 6 — no per-edge hop for batch-native streams),
             // publish each chunk once per active node (send fails only
             // after a worker died — stop streaming and let the joins below
-            // report the panic)
+            // report the loss); drain checkpoint blobs between broadcasts
             let mut staging: Vec<Edge> = Vec::with_capacity(cfg.chunk_size);
             loop {
-                let got = stream.next_batch(&mut staging, cfg.chunk_size - staging.len());
+                let mut want = cfg.chunk_size - staging.len();
+                if cfg.stop_after > 0 {
+                    let left = cfg.stop_after.saturating_sub(edges);
+                    want = want.min(usize::try_from(left).unwrap_or(usize::MAX));
+                }
+                let got = if want == 0 { 0 } else { stream.next_batch(&mut staging, want) };
                 edges += got as u64;
                 if staging.len() >= cfg.chunk_size && !fan.broadcast(&mut staging) {
                     break;
+                }
+                for (wid, t, blob) in ckpt_rx.try_iter() {
+                    if let Err(e) = collector.offer(wid, t, blob) {
+                        ckpt_err.get_or_insert(e);
+                    }
                 }
                 if got == 0 {
                     break;
@@ -466,28 +917,34 @@ pub fn run_pipeline(
             }
             let stats = fan.finish(); // drops senders: queues close, workers drain
 
+            // the workers still hold checkpoint senders; iterate to closure
+            for (wid, t, blob) in ckpt_rx.iter() {
+                if let Err(e) = collector.offer(wid, t, blob) {
+                    ckpt_err.get_or_insert(e);
+                }
+            }
+
             // join every worker before leaving the scope (a scope exit with
             // an unjoined panicked thread would re-panic on the master)
-            let mut out = Vec::with_capacity(handles.len());
-            let mut snaps_out = Vec::with_capacity(handles.len());
-            let mut pinned_count = 0usize;
+            let mut exits = Vec::with_capacity(handles.len());
             let mut first_panic: Option<String> = None;
             for h in handles {
                 match h.join() {
-                    Ok((pinned, snaps, est)) => {
-                        pinned_count += pinned as usize;
-                        snaps_out.push(snaps);
-                        out.push(est);
-                    }
+                    Ok(exit) => exits.push(exit),
                     Err(p) => {
                         first_panic.get_or_insert_with(|| panic_message(p));
                     }
                 }
             }
-            match first_panic {
-                None => Ok((out, snaps_out, pinned_count, stats)),
-                Some(msg) => Err(crate::anyhow!("worker thread panicked: {msg}")),
+            if let Some(msg) = first_panic {
+                // escaped catch_unwind: a bug in the supervisor itself, not
+                // a supervised worker fault — fail loudly
+                return Err(crate::anyhow!("worker supervisor panicked: {msg}"));
             }
+            if let Some(e) = ckpt_err {
+                return Err(e);
+            }
+            Ok((exits, stats, collector.written))
         },
     )?;
 
@@ -497,9 +954,42 @@ pub fn run_pipeline(
         return Err(e.context("edge stream failed mid-pipeline"));
     }
 
-    // merge the snapshot barriers: every worker saw every edge, so the
-    // schedules must agree index-by-index; average each barrier exactly
-    // like the final estimate
+    // triage the exits: survivors contribute estimates, lost workers
+    // contribute only to the health report
+    let mut per_worker = Vec::new();
+    let mut worker_snaps = Vec::new();
+    let mut arrivals = Vec::new();
+    let mut pinned_workers = 0usize;
+    let mut restarts_total = 0u64;
+    let mut lost_workers = Vec::new();
+    let mut last_loss = String::new();
+    for (wid, exit) in exits.into_iter().enumerate() {
+        match exit {
+            WorkerExit::Done { pinned, restarts, arrivals: a, snaps, last } => {
+                pinned_workers += pinned as usize;
+                restarts_total += u64::from(restarts);
+                arrivals.push(a);
+                worker_snaps.push(snaps);
+                per_worker.push(last);
+            }
+            WorkerExit::Lost { pinned, restarts, msg } => {
+                pinned_workers += pinned as usize;
+                restarts_total += u64::from(restarts);
+                lost_workers.push(wid);
+                last_loss = msg;
+            }
+        }
+    }
+    crate::ensure!(
+        !per_worker.is_empty(),
+        "all {} workers were lost (last panic: {last_loss})",
+        cfg.workers
+    );
+    let degraded = !lost_workers.is_empty();
+
+    // merge the snapshot barriers over the survivors: each saw every edge,
+    // so their schedules must agree index-by-index; average each barrier
+    // exactly like the final estimate
     let mut snapshots = Vec::new();
     let mut iters: Vec<_> = worker_snaps.into_iter().map(|v| v.into_iter()).collect();
     loop {
@@ -517,8 +1007,14 @@ pub fn run_pipeline(
         snapshots.push(SnapshotPoint { t, averaged: average(&ests) });
     }
 
+    // a clean run keeps the historical unweighted mean (bit-identical with
+    // pre-fault-tolerance pipelines); a degraded run weights each survivor
+    // by its arrival count
+    let averaged =
+        if degraded { weighted_average(&per_worker, &arrivals) } else { average(&per_worker) };
+
     Ok(PipelineResult {
-        averaged: average(&per_worker),
+        averaged,
         per_worker,
         snapshots,
         edges,
@@ -530,6 +1026,14 @@ pub fn run_pipeline(
             pinned_workers,
             chunks: fan_stats.chunks,
             chunk_replicas: fan_stats.replicas,
+        },
+        health: HealthReport {
+            restarts: restarts_total,
+            lost_workers,
+            degraded,
+            io_retries: stream.io_retries(),
+            faults_injected: armed.observed(),
+            checkpoints_written: ckpt_written,
         },
     })
 }
@@ -992,5 +1496,209 @@ mod tests {
         let err = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg)
             .expect_err("mid-stream IO error must fail the pipeline");
         assert!(err.to_string().contains("mid-pipeline"), "{err}");
+    }
+
+    fn assert_bit_identical(a: &WorkerEstimate, b: &WorkerEstimate) {
+        match (a, b) {
+            (WorkerEstimate::Gabe(x), WorkerEstimate::Gabe(y)) => {
+                for (p, q) in x.counts.iter().zip(&y.counts) {
+                    assert_eq!(p.to_bits(), q.to_bits());
+                }
+            }
+            (WorkerEstimate::Maeve(x), WorkerEstimate::Maeve(y)) => {
+                let xs = x.triangles.iter().chain(&x.paths);
+                let ys = y.triangles.iter().chain(&y.paths);
+                for (p, q) in xs.zip(ys) {
+                    assert_eq!(p.to_bits(), q.to_bits());
+                }
+            }
+            (WorkerEstimate::Santa(x), WorkerEstimate::Santa(y)) => {
+                for (p, q) in x.traces.iter().zip(&y.traces) {
+                    assert_eq!(p.to_bits(), q.to_bits());
+                }
+            }
+            _ => panic!("descriptor kinds differ"),
+        }
+    }
+
+    /// ISSUE 7: a one-shot injected panic is absorbed by the supervisor —
+    /// restore from the in-memory checkpoint, replay — and the run's
+    /// result is bit-for-bit what the fault-free run produces (the
+    /// checkpoint carries the RNG registers, so the replay makes the same
+    /// sampling decisions).
+    #[test]
+    fn absorbed_panic_keeps_results_bit_identical() {
+        let g = gen::powerlaw_cluster_graph(180, 3, 0.5, &mut Pcg64::seed_from_u64(75));
+        let at = g.m() as u64 / 2;
+        let base = CoordinatorConfig {
+            workers: 2,
+            budget: g.m() / 3,
+            chunk_size: 64,
+            queue_depth: 2,
+            seed: 11,
+            fault: Some(FaultPlan::none()),
+            ..Default::default()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 3);
+        let clean = run_pipeline(&mut s, DescriptorKind::Gabe, &base).unwrap();
+        assert_eq!(clean.health.restarts, 0);
+        assert!(!clean.health.degraded);
+
+        let faulty_cfg = CoordinatorConfig {
+            fault: Some(FaultPlan::parse(&format!("panic@1:{at}")).unwrap()),
+            ..base.clone()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 3);
+        let faulty = run_pipeline(&mut s, DescriptorKind::Gabe, &faulty_cfg).unwrap();
+        assert_eq!(faulty.health.restarts, 1);
+        assert_eq!(faulty.health.faults_injected, 1);
+        assert!(!faulty.health.degraded);
+        assert!(faulty.health.lost_workers.is_empty());
+        assert_bit_identical(&clean.averaged, &faulty.averaged);
+        for (a, b) in clean.per_worker.iter().zip(&faulty.per_worker) {
+            assert_bit_identical(a, b);
+        }
+    }
+
+    /// ISSUE 7: stalls are hiccups, not hangs — they never perturb the
+    /// estimate.
+    #[test]
+    fn stall_faults_do_not_change_results() {
+        let g = gen::er_graph(80, 220, &mut Pcg64::seed_from_u64(79));
+        let base = CoordinatorConfig {
+            workers: 2,
+            budget: g.m() / 2,
+            chunk_size: 32,
+            queue_depth: 2,
+            seed: 14,
+            fault: Some(FaultPlan::none()),
+            ..Default::default()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 8);
+        let clean = run_pipeline(&mut s, DescriptorKind::Gabe, &base).unwrap();
+        let stalled_cfg = CoordinatorConfig {
+            fault: Some(FaultPlan::parse("stall@0:25; stall@1:75").unwrap()),
+            ..base.clone()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 8);
+        let stalled = run_pipeline(&mut s, DescriptorKind::Gabe, &stalled_cfg).unwrap();
+        assert_eq!(stalled.health.faults_injected, 2);
+        assert_eq!(stalled.health.restarts, 0);
+        assert_bit_identical(&clean.averaged, &stalled.averaged);
+    }
+
+    /// ISSUE 7: a `lose` fault re-fires on every replay, exhausting the
+    /// restart budget; the pipeline completes on the survivors, flags the
+    /// run degraded, and (with exact budgets) the weighted merge still
+    /// lands on the census.
+    #[test]
+    fn lost_worker_degrades_instead_of_aborting() {
+        let g = gen::powerlaw_cluster_graph(150, 3, 0.5, &mut Pcg64::seed_from_u64(76));
+        let cfg = CoordinatorConfig {
+            workers: 3,
+            budget: g.m(),
+            chunk_size: 32,
+            queue_depth: 2,
+            seed: 12,
+            max_restarts: 1,
+            fault: Some(FaultPlan::parse("lose@1:40").unwrap()),
+            ..Default::default()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 5);
+        let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).unwrap();
+        assert!(r.health.degraded);
+        assert_eq!(r.health.lost_workers, vec![1]);
+        assert_eq!(r.per_worker.len(), 2, "survivors only");
+        assert_eq!(r.health.restarts, 2, "one retry, then the loss");
+        let want = subgraph_census(&g);
+        assert!((triangle_of(&r.averaged) - want[idx::TRIANGLE]).abs() < 1e-6);
+    }
+
+    /// ISSUE 7: losing *every* worker cannot be papered over.
+    #[test]
+    fn all_workers_lost_is_a_loud_error() {
+        let g = gen::er_graph(40, 100, &mut Pcg64::seed_from_u64(78));
+        let cfg = CoordinatorConfig {
+            workers: 2,
+            budget: 50,
+            chunk_size: 16,
+            queue_depth: 2,
+            seed: 13,
+            max_restarts: 0,
+            fault: Some(FaultPlan::parse("lose@0:10; lose@1:20").unwrap()),
+            ..Default::default()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 6);
+        let err = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg)
+            .expect_err("no survivors must fail the run");
+        assert!(err.to_string().contains("all 2 workers were lost"), "{err}");
+    }
+
+    /// The degraded merge with equal weights is the survivors' mean (up to
+    /// float rounding — the weighted path multiplies where [`average`]
+    /// divides, which is why degraded results are tolerance-checked, not
+    /// bit-checked).
+    #[test]
+    fn equal_weight_merge_matches_plain_average_closely() {
+        use crate::descriptors::santa::SantaEstimate;
+        let mk = |t: f64| {
+            WorkerEstimate::Santa(SantaEstimate {
+                nv: 10,
+                ne: 20,
+                traces: [t, 2.0 * t, 0.5, -t, 3.0],
+            })
+        };
+        let ests = vec![mk(1.0), mk(4.0), mk(7.0)];
+        let (WorkerEstimate::Santa(w), WorkerEstimate::Santa(a)) =
+            (weighted_average(&ests, &[5, 5, 5]), average(&ests))
+        else {
+            unreachable!()
+        };
+        for (x, y) in w.traces.iter().zip(&a.traces) {
+            assert!((x - y).abs() <= 1e-12 * y.abs().max(1.0), "{x} vs {y}");
+        }
+    }
+
+    /// ISSUE 7: pipeline checkpoints land on complete barriers and a
+    /// resumed run finishes bit-for-bit where the uninterrupted run does.
+    #[test]
+    fn pipeline_checkpoint_resume_is_bit_identical() {
+        let g = gen::powerlaw_cluster_graph(160, 3, 0.5, &mut Pcg64::seed_from_u64(80));
+        let m = g.m() as u64;
+        let dir = crate::util::tmp::TempDir::new("coord-ckpt").unwrap();
+        let ckpt = dir.path().join("run.sdc");
+        let base = CoordinatorConfig {
+            workers: 2,
+            budget: g.m() / 3,
+            chunk_size: 16,
+            queue_depth: 2,
+            seed: 21,
+            fault: Some(FaultPlan::none()),
+            ..Default::default()
+        };
+
+        let mut s = VecStream::shuffled(g.edges.clone(), 9);
+        let full = run_pipeline(&mut s, DescriptorKind::Gabe, &base).unwrap();
+
+        // interrupted run: checkpoint every ~quarter, stop ~two thirds in
+        let interrupted_cfg = CoordinatorConfig {
+            checkpoint_every: m / 4,
+            checkpoint_path: Some(ckpt.clone()),
+            stop_after: 2 * m / 3,
+            ..base.clone()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 9);
+        let partial = run_pipeline(&mut s, DescriptorKind::Gabe, &interrupted_cfg).unwrap();
+        assert!(partial.health.checkpoints_written >= 1, "{:?}", partial.health);
+
+        // resume from the file and run to the end of the stream
+        let resume_cfg = CoordinatorConfig { resume: Some(ckpt), ..base.clone() };
+        let mut s = VecStream::shuffled(g.edges.clone(), 9);
+        let resumed = run_pipeline(&mut s, DescriptorKind::Gabe, &resume_cfg).unwrap();
+        assert_eq!(resumed.edges, m, "replayed prefix counts toward the total");
+        assert_bit_identical(&full.averaged, &resumed.averaged);
+        for (a, b) in full.per_worker.iter().zip(&resumed.per_worker) {
+            assert_bit_identical(a, b);
+        }
     }
 }

@@ -6,6 +6,7 @@
 //! disconnected patterns from Table 4's closed forms.  The final descriptor
 //! concatenates the normalized induced counts φ₂‖φ₃‖φ₄ (17 dimensions).
 
+use crate::checkpoint::{Dec, Enc};
 use crate::util::rng::Pcg64;
 
 use super::{Budget, GraphDescriptor};
@@ -60,6 +61,33 @@ impl GabeEstimate {
             out[i] = induced[i] / norm;
         }
         out
+    }
+
+    pub(crate) fn save(&self, out: &mut Enc) {
+        for c in &self.counts {
+            out.f64(*c);
+        }
+        out.u64(self.nv);
+        out.u64(self.ne);
+        out.usize(self.degrees.len());
+        for d in &self.degrees {
+            out.u32(*d);
+        }
+    }
+
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<GabeEstimate> {
+        let mut counts = [0.0; N_GRAPHLETS];
+        for c in counts.iter_mut() {
+            *c = d.f64()?;
+        }
+        let nv = d.u64()?;
+        let ne = d.u64()?;
+        let n = d.seq_len(4)?;
+        let mut degrees = Vec::with_capacity(n);
+        for _ in 0..n {
+            degrees.push(d.u32()?);
+        }
+        Ok(GabeEstimate { counts, nv, ne, degrees })
     }
 }
 
@@ -309,6 +337,78 @@ impl GabeState {
     pub fn finish(mut self) -> GabeEstimate {
         let degrees = std::mem::take(&mut self.degrees);
         self.estimate_with(degrees)
+    }
+
+    /// Serialize the complete estimator state (ISSUE 7).  Scratch buffers
+    /// (`hits`, `scratch`, `expired`) are empty between arrivals and
+    /// restore as defaults; everything else — sampler, sample graph,
+    /// windowed counters, degree clock, recorded snapshots — is captured
+    /// so a resumed run is bit-for-bit the uninterrupted one.
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.usize(self.budget);
+        self.window.save(out);
+        self.reservoir.save(out);
+        self.sample.save(out);
+        out.usize(self.degrees.len());
+        for deg in &self.degrees {
+            out.u32(*deg);
+        }
+        match &self.ring {
+            None => out.u8(0),
+            Some(r) => {
+                out.u8(1);
+                r.save(out);
+            }
+        }
+        self.acc.save(out);
+        out.usize(self.snapshots.len());
+        for s in &self.snapshots {
+            out.u64(s.t);
+            s.estimate.save(out);
+        }
+        out.u64(self.ne);
+    }
+
+    /// Rebuild from [`GabeState::save`] bytes.
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<GabeState> {
+        let budget = d.usize()?;
+        crate::ensure!(budget > 0, "gabe checkpoint: zero budget");
+        let window = WindowConfig::load(d)?;
+        let reservoir = WindowedReservoir::load(d)?;
+        let sample = SampleGraph::load(d)?;
+        let n = d.seq_len(4)?;
+        let mut degrees = Vec::with_capacity(n);
+        for _ in 0..n {
+            degrees.push(d.u32()?);
+        }
+        let ring = match d.u8()? {
+            0 => None,
+            1 => Some(EdgeRing::load(d)?),
+            tag => return Err(crate::anyhow!("gabe checkpoint: unknown ring tag {tag}")),
+        };
+        let acc = WindowAcc::load(d)?;
+        let n_snaps = d.seq_len(8)?;
+        let mut snapshots = Vec::with_capacity(n_snaps);
+        for _ in 0..n_snaps {
+            let t = d.u64()?;
+            let estimate = GabeEstimate::load(d)?;
+            snapshots.push(Snapshot { t, estimate });
+        }
+        let ne = d.u64()?;
+        Ok(GabeState {
+            budget,
+            reservoir,
+            sample,
+            degrees,
+            ring,
+            hits: EdgeHits::default(),
+            scratch: Scratch::default(),
+            acc,
+            expired: Vec::new(),
+            window,
+            snapshots,
+            ne,
+        })
     }
 }
 

@@ -6,6 +6,7 @@
 //! features, and four moments (mean, std, skew, excess kurtosis) aggregate
 //! each feature over the vertices — a 20-dim descriptor.
 
+use crate::checkpoint::{Dec, Enc};
 use crate::util::rng::Pcg64;
 
 use super::{Budget, GraphDescriptor};
@@ -61,6 +62,40 @@ impl MaeveEstimate {
     /// 20-dim descriptor (moment-major; rust mirror of the L2 kernel).
     pub fn descriptor(&self) -> [f64; 20] {
         maeve_layout(&self.features())
+    }
+
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.u64(self.nv);
+        out.u64(self.ne);
+        out.usize(self.degrees.len());
+        for d in &self.degrees {
+            out.u32(*d);
+        }
+        for t in &self.triangles {
+            out.f64(*t);
+        }
+        for p in &self.paths {
+            out.f64(*p);
+        }
+    }
+
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<MaeveEstimate> {
+        let nv = d.u64()?;
+        let ne = d.u64()?;
+        let n = d.seq_len(20)?;
+        let mut degrees = Vec::with_capacity(n);
+        for _ in 0..n {
+            degrees.push(d.u32()?);
+        }
+        let mut triangles = Vec::with_capacity(n);
+        for _ in 0..n {
+            triangles.push(d.f64()?);
+        }
+        let mut paths = Vec::with_capacity(n);
+        for _ in 0..n {
+            paths.push(d.f64()?);
+        }
+        Ok(MaeveEstimate { nv, ne, degrees, triangles, paths })
     }
 }
 
@@ -386,6 +421,117 @@ impl MaeveState {
             triangles: self.tri,
             paths: self.path,
         }
+    }
+
+    /// Serialize the complete estimator state (ISSUE 7).  Scratch buffers
+    /// (`common`, `expired_credits`, `expired`) are empty between arrivals
+    /// and restore as defaults; lazy decay is *not* settled — the
+    /// per-vertex `decay_last` clocks are captured raw so resumed runs
+    /// keep the original multiply schedule bit-for-bit.
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.usize(self.budget);
+        self.window.save(out);
+        self.reservoir.save(out);
+        self.sample.save(out);
+        out.usize(self.degrees.len());
+        for deg in &self.degrees {
+            out.u32(*deg);
+        }
+        for t in &self.tri {
+            out.f64(*t);
+        }
+        for p in &self.path {
+            out.f64(*p);
+        }
+        match &self.ring {
+            None => out.u8(0),
+            Some(r) => {
+                out.u8(1);
+                r.save(out);
+            }
+        }
+        match &self.credit_log {
+            None => out.u8(0),
+            Some(log) => {
+                out.u8(1);
+                log.save(out);
+            }
+        }
+        out.f64(self.rho);
+        out.usize(self.decay_last.len());
+        for l in &self.decay_last {
+            out.u64(*l);
+        }
+        out.usize(self.snapshots.len());
+        for s in &self.snapshots {
+            out.u64(s.t);
+            s.estimate.save(out);
+        }
+        out.u64(self.ne);
+    }
+
+    /// Rebuild from [`MaeveState::save`] bytes.
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<MaeveState> {
+        let budget = d.usize()?;
+        crate::ensure!(budget > 0, "maeve checkpoint: zero budget");
+        let window = WindowConfig::load(d)?;
+        let reservoir = WindowedReservoir::load(d)?;
+        let sample = SampleGraph::load(d)?;
+        let n = d.seq_len(20)?;
+        let mut degrees = Vec::with_capacity(n);
+        for _ in 0..n {
+            degrees.push(d.u32()?);
+        }
+        let mut tri = Vec::with_capacity(n);
+        for _ in 0..n {
+            tri.push(d.f64()?);
+        }
+        let mut path = Vec::with_capacity(n);
+        for _ in 0..n {
+            path.push(d.f64()?);
+        }
+        let ring = match d.u8()? {
+            0 => None,
+            1 => Some(EdgeRing::load(d)?),
+            tag => return Err(crate::anyhow!("maeve checkpoint: unknown ring tag {tag}")),
+        };
+        let credit_log = match d.u8()? {
+            0 => None,
+            1 => Some(VertexCreditLog::load(d)?),
+            tag => return Err(crate::anyhow!("maeve checkpoint: unknown log tag {tag}")),
+        };
+        let rho = d.f64()?;
+        let n_last = d.seq_len(8)?;
+        let mut decay_last = Vec::with_capacity(n_last);
+        for _ in 0..n_last {
+            decay_last.push(d.u64()?);
+        }
+        let n_snaps = d.seq_len(8)?;
+        let mut snapshots = Vec::with_capacity(n_snaps);
+        for _ in 0..n_snaps {
+            let t = d.u64()?;
+            let estimate = MaeveEstimate::load(d)?;
+            snapshots.push(Snapshot { t, estimate });
+        }
+        let ne = d.u64()?;
+        Ok(MaeveState {
+            budget,
+            reservoir,
+            sample,
+            degrees,
+            ring,
+            tri,
+            path,
+            common: Vec::new(),
+            credit_log,
+            expired_credits: Vec::new(),
+            rho,
+            decay_last,
+            expired: Vec::new(),
+            window,
+            snapshots,
+            ne,
+        })
     }
 }
 

@@ -32,7 +32,7 @@ fn median(xs: &mut [f64]) -> f64 {
     if xs.is_empty() {
         return 0.0;
     }
-    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs.sort_by(|a, b| a.partial_cmp(b).expect("NaN feature"));
     let n = xs.len();
     if n % 2 == 1 {
         xs[n / 2]

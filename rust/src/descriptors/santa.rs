@@ -13,6 +13,7 @@
 //! term with a closed form over `Σ_{w∈N(y)} 1/d_w` accumulators, which is
 //! exact in one pass with `O(|V|)` extra floats.
 
+use crate::checkpoint::{Dec, Enc};
 use crate::util::rng::Pcg64;
 
 use super::psi::{psi_from_traces, N_J, N_VARIANTS};
@@ -50,6 +51,24 @@ impl SantaEstimate {
     /// Finalize to the 6×60 ψ descriptor (rust mirror of the L2 artifact).
     pub fn descriptor(&self) -> [[f64; N_J]; N_VARIANTS] {
         psi_from_traces(&self.traces, self.nv as f64)
+    }
+
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.u64(self.nv);
+        out.u64(self.ne);
+        for t in &self.traces {
+            out.f64(*t);
+        }
+    }
+
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<SantaEstimate> {
+        let nv = d.u64()?;
+        let ne = d.u64()?;
+        let mut traces = [0.0; 5];
+        for t in traces.iter_mut() {
+            *t = d.f64()?;
+        }
+        Ok(SantaEstimate { nv, ne, traces })
     }
 }
 
@@ -108,6 +127,27 @@ impl SantaConfig {
              (the closed-form wedge term is inherently all-time)"
         );
         Ok(())
+    }
+
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.usize(self.budget);
+        out.u64(self.seed);
+        out.u8(self.exact_wedges as u8);
+        self.window.save(out);
+    }
+
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<SantaConfig> {
+        let budget = d.usize()?;
+        let seed = d.u64()?;
+        let exact_wedges = match d.u8()? {
+            0 => false,
+            1 => true,
+            tag => return Err(crate::anyhow!("santa checkpoint: bad wedge flag {tag}")),
+        };
+        let window = WindowConfig::load(d)?;
+        let cfg = SantaConfig { budget, seed, exact_wedges, window };
+        cfg.validate()?;
+        Ok(cfg)
     }
 }
 
@@ -415,6 +455,78 @@ impl SantaPass2 {
             ne: self.cfg.window.policy.described_len(self.ne),
             traces: self.traces_now(),
         }
+    }
+
+    /// Serialize the complete pass-2 state (ISSUE 7) — everything except
+    /// the pass-1 degree profile, which is shared by every worker and
+    /// stored once at the checkpoint-document level.  Scratch buffers
+    /// (`common`, `expired`) are empty between arrivals.
+    pub(crate) fn save(&self, out: &mut Enc) {
+        self.cfg.save(out);
+        self.reservoir.save(out);
+        self.sample.save(out);
+        self.acc.save(out);
+        out.usize(self.inv.len());
+        for x in &self.inv {
+            out.f64(*x);
+        }
+        for x in &self.inv2 {
+            out.f64(*x);
+        }
+        out.usize(self.snapshots.len());
+        for s in &self.snapshots {
+            out.u64(s.t);
+            s.estimate.save(out);
+        }
+        out.u64(self.ne);
+    }
+
+    /// Rebuild from [`SantaPass2::save`] bytes; `degrees` is the shared
+    /// pass-1 profile the document carries.
+    pub(crate) fn load(
+        d: &mut Dec<'_>,
+        degrees: std::sync::Arc<Vec<u32>>,
+    ) -> crate::Result<SantaPass2> {
+        let cfg = SantaConfig::load(d)?;
+        crate::ensure!(cfg.budget > 0, "santa checkpoint: zero budget");
+        let reservoir = WindowedReservoir::load(d)?;
+        let sample = SampleGraph::load(d)?;
+        let acc = WindowAcc::load(d)?;
+        let n = d.seq_len(16)?;
+        crate::ensure!(
+            !cfg.exact_wedges || n == degrees.len(),
+            "santa checkpoint: wedge accumulators cover {n} vertices, degrees {}",
+            degrees.len()
+        );
+        let mut inv = Vec::with_capacity(n);
+        for _ in 0..n {
+            inv.push(d.f64()?);
+        }
+        let mut inv2 = Vec::with_capacity(n);
+        for _ in 0..n {
+            inv2.push(d.f64()?);
+        }
+        let n_snaps = d.seq_len(8)?;
+        let mut snapshots = Vec::with_capacity(n_snaps);
+        for _ in 0..n_snaps {
+            let t = d.u64()?;
+            let estimate = SantaEstimate::load(d)?;
+            snapshots.push(Snapshot { t, estimate });
+        }
+        let ne = d.u64()?;
+        Ok(SantaPass2 {
+            cfg,
+            degrees,
+            reservoir,
+            sample,
+            common: Vec::new(),
+            acc,
+            inv,
+            inv2,
+            expired: Vec::new(),
+            snapshots,
+            ne,
+        })
     }
 }
 

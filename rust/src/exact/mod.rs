@@ -6,12 +6,6 @@
 //! and the ground truth the approximation-error experiments (§6.1) compare
 //! against.
 
-// Rustdoc sweep status (ISSUE 5): the crate-level
-// `#![warn(missing_docs)]` is gated off here until this module gets
-// its own documentation pass; sampling/descriptors/coordinator/graph
-// are fully swept.
-#![allow(missing_docs)]
-
 use crate::descriptors::gabe::{GabeEstimate, GabeEstimator};
 use crate::descriptors::maeve::{MaeveEstimate, MaeveEstimator};
 use crate::descriptors::santa::{SantaEstimate, SantaEstimator};

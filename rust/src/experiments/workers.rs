@@ -63,7 +63,7 @@ pub fn workers(ctx: &Ctx, placement: PlacementPolicy) -> Result<()> {
         if w == 1 {
             var1 = Some(var);
         }
-        let ratio = var / var1.unwrap();
+        let ratio = var / var1.expect("w=1 row runs first");
         rows.push(vec![
             w.to_string(),
             format!("{mean:.1}"),

@@ -44,6 +44,7 @@
 //!   their comparisons rather than rely on the padding never matching.
 
 use super::VertexId;
+use crate::checkpoint::{Dec, Enc};
 
 /// Dense per-graph vertex handle (index into the intern table).  Slots are
 /// recycled when a vertex loses its last sampled edge, so they stay in
@@ -468,6 +469,101 @@ impl SampleGraph {
         self.m = 0;
     }
 
+    /// Serialize the complete arena state (ISSUE 7).  Slot numbering,
+    /// block offsets, free-list order and the intern table's exact cell
+    /// layout are all preserved verbatim: future interning choices and
+    /// neighbor enumeration order — and therefore every downstream float
+    /// sum — depend on them, so the graph is never "rebuilt" from edges.
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.usize(self.recs.len());
+        for r in &self.recs {
+            out.u32(r.label);
+            out.u32(r.off);
+            out.u32(r.len);
+            out.u8(r.class);
+        }
+        out.usize(self.free_slots.len());
+        for s in &self.free_slots {
+            out.u32(*s);
+        }
+        out.usize(self.map.keys.len());
+        for k in &self.map.keys {
+            out.u32(*k);
+        }
+        for v in &self.map.vals {
+            out.u32(*v);
+        }
+        out.usize(self.map.len);
+        out.usize(self.pool.len());
+        for p in &self.pool {
+            out.u32(*p);
+        }
+        out.usize(self.carved);
+        out.usize(self.free_blocks.len());
+        for f in &self.free_blocks {
+            out.usize(f.len());
+            for off in f {
+                out.u32(*off);
+            }
+        }
+        out.usize(self.m);
+    }
+
+    /// Rebuild from [`SampleGraph::save`] bytes.
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<SampleGraph> {
+        let n_recs = d.seq_len(13)?;
+        let mut recs = Vec::with_capacity(n_recs);
+        for _ in 0..n_recs {
+            let label = d.u32()?;
+            let off = d.u32()?;
+            let len = d.u32()?;
+            let class = d.u8()?;
+            recs.push(VertexRec { label, off, len, class });
+        }
+        let n_free = d.seq_len(4)?;
+        let mut free_slots = Vec::with_capacity(n_free);
+        for _ in 0..n_free {
+            free_slots.push(d.u32()?);
+        }
+        let cap = d.seq_len(8)?;
+        crate::ensure!(
+            cap == 0 || cap.is_power_of_two(),
+            "graph checkpoint: intern capacity {cap} is not a power of two"
+        );
+        let mut keys = Vec::with_capacity(cap);
+        for _ in 0..cap {
+            keys.push(d.u32()?);
+        }
+        let mut vals = Vec::with_capacity(cap);
+        for _ in 0..cap {
+            vals.push(d.u32()?);
+        }
+        let map_len = d.usize()?;
+        let n_pool = d.seq_len(4)?;
+        let mut pool = Vec::with_capacity(n_pool);
+        for _ in 0..n_pool {
+            pool.push(d.u32()?);
+        }
+        let carved = d.usize()?;
+        crate::ensure!(
+            carved + LIST_PAD <= pool.len() || (carved == 0 && pool.is_empty()),
+            "graph checkpoint: carved region {carved} overruns the pool"
+        );
+        let n_classes = d.seq_len(8)?;
+        let mut free_blocks = Vec::with_capacity(n_classes);
+        for _ in 0..n_classes {
+            let n = d.seq_len(4)?;
+            let mut f = Vec::with_capacity(n);
+            for _ in 0..n {
+                f.push(d.u32()?);
+            }
+            free_blocks.push(f);
+        }
+        let m = d.usize()?;
+        let map = LabelMap { keys, vals, len: map_len };
+        Ok(SampleGraph { recs, free_slots, map, pool, carved, free_blocks, m })
+    }
+
     // ---- internals ----
 
     /// Intern a label known to be absent from the map.
@@ -833,6 +929,65 @@ mod tests {
                 // reading the whole window must be in-bounds (touch it all)
                 std::hint::black_box(padded.padded().iter().map(|&x| x as u64).sum::<u64>());
             }
+        }
+    }
+
+    /// Checkpoint round-trip (ISSUE 7): after a random churn, the restored
+    /// graph answers every query like the original — and keeps assigning
+    /// the *same slots* to future labels, which is what makes a resumed
+    /// estimator's enumeration order (and float sums) bit-identical.
+    #[test]
+    fn checkpoint_roundtrip_preserves_slots_and_future_interning() {
+        let n = 40u32;
+        let mut g = SampleGraph::new();
+        let mut rng = Pcg64::seed_from_u64(13);
+        for _ in 0..3_000 {
+            let u = rng.gen_range_u32(0, n);
+            let v = rng.gen_range_u32(0, n);
+            if u == v {
+                continue;
+            }
+            if rng.gen_range_usize(0, 3) == 0 {
+                g.remove(u.min(v), u.max(v));
+            } else {
+                g.insert(u.min(v), u.max(v));
+            }
+        }
+        let mut enc = Enc::new();
+        g.save(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut dec = Dec::new(&bytes);
+        let mut h = SampleGraph::load(&mut dec).unwrap();
+        dec.finish().unwrap();
+        assert_eq!(g.m(), h.m());
+        assert_eq!(g.slot_bound(), h.slot_bound());
+        for q in 0..n {
+            assert_eq!(g.slot_of(q), h.slot_of(q), "slot_of({q})");
+            if let Some(s) = g.slot_of(q) {
+                assert_eq!(g.neighbor_slots(s), h.neighbor_slots(s));
+            }
+        }
+        // future interning must take the identical free-slot/growth path
+        for _ in 0..2_000 {
+            let u = rng.gen_range_u32(0, 2 * n);
+            let v = rng.gen_range_u32(0, 2 * n);
+            if u == v {
+                continue;
+            }
+            let (a, c) = (u.min(v), u.max(v));
+            if rng.gen_range_usize(0, 3) == 0 {
+                assert_eq!(g.remove(a, c), h.remove(a, c));
+            } else {
+                assert_eq!(g.insert(a, c), h.insert(a, c));
+            }
+            assert_eq!(g.slot_of(a), h.slot_of(a));
+            assert_eq!(g.slot_of(c), h.slot_of(c));
+        }
+        // truncated checkpoints fail loudly, never panic
+        for cut in [0usize, 5, bytes.len() / 2, bytes.len() - 1] {
+            let mut dec = Dec::new(&bytes[..cut]);
+            let res = SampleGraph::load(&mut dec);
+            assert!(res.is_err() || dec.finish().is_err(), "cut={cut} decoded");
         }
     }
 

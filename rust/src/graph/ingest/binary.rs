@@ -77,18 +77,18 @@ impl BinaryHeader {
         if head[..4] != MAGIC {
             return Err(bad("bad magic: not a stream_descriptors binary edge list".into()));
         }
-        let version = u16::from_le_bytes(head[4..6].try_into().unwrap());
+        let version = u16::from_le_bytes(head[4..6].try_into().expect("2-byte slice"));
         if version != VERSION {
             return Err(bad(format!(
                 "unsupported binary edge list version {version} (this build reads {VERSION})"
             )));
         }
-        let flags = u16::from_le_bytes(head[6..8].try_into().unwrap());
+        let flags = u16::from_le_bytes(head[6..8].try_into().expect("2-byte slice"));
         if flags != 0 {
             return Err(bad(format!("unsupported binary edge list flags {flags:#06x}")));
         }
-        let n_vertices = u64::from_le_bytes(head[8..16].try_into().unwrap());
-        let n_edges = u64::from_le_bytes(head[16..24].try_into().unwrap());
+        let n_vertices = u64::from_le_bytes(head[8..16].try_into().expect("8-byte slice"));
+        let n_edges = u64::from_le_bytes(head[16..24].try_into().expect("8-byte slice"));
         Ok(BinaryHeader { n_vertices, n_edges })
     }
 }
@@ -180,8 +180,8 @@ impl BinaryIngest {
             let take = (win.len() / 8).min(left);
             let mut used = 0usize;
             for rec in win[..take * 8].chunks_exact(8) {
-                let u = u32::from_le_bytes(rec[..4].try_into().unwrap());
-                let v = u32::from_le_bytes(rec[4..].try_into().unwrap());
+                let u = u32::from_le_bytes(rec[..4].try_into().expect("4-byte slice"));
+                let v = u32::from_le_bytes(rec[4..].try_into().expect("4-byte slice"));
                 if u >= v {
                     self.err = Some(io::Error::new(
                         io::ErrorKind::InvalidData,
@@ -211,6 +211,11 @@ impl BinaryIngest {
     /// Take the recorded I/O failure (the stream stays terminated).
     pub fn take_io_error(&mut self) -> Option<io::Error> {
         self.err.take()
+    }
+
+    /// Transient read errors the source's bounded retry loop absorbed.
+    pub fn io_retries(&self) -> u64 {
+        self.src.io_retries()
     }
 }
 

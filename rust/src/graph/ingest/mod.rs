@@ -86,6 +86,15 @@ impl Ingest {
             Ingest::Binary(b) => b.take_io_error(),
         }
     }
+
+    /// Transient read errors the source's bounded retry loop absorbed
+    /// (ISSUE 7 — feeds `HealthReport::io_retries`).
+    pub fn io_retries(&self) -> u64 {
+        match self {
+            Ingest::Text(t) => t.io_retries(),
+            Ingest::Binary(b) => b.io_retries(),
+        }
+    }
 }
 
 /// Does the file at `path` start with the binary magic?

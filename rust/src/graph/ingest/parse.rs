@@ -399,6 +399,11 @@ impl TextIngest {
     pub fn take_io_error(&mut self) -> Option<io::Error> {
         self.err.take()
     }
+
+    /// Transient read errors the source's bounded retry loop absorbed.
+    pub fn io_retries(&self) -> u64 {
+        self.src.io_retries()
+    }
 }
 
 #[cfg(test)]

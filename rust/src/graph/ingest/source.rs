@@ -24,6 +24,8 @@ use std::fs::File;
 use std::io::{self, Read};
 use std::path::Path;
 
+use crate::util::fault::ReadFaults;
+
 /// Files at or above this size get the mmap arm (when the platform has
 /// one); below it the chunked reader wins — a mapping costs two syscalls
 /// plus fault-in, and tiny inputs fit a single `read`.
@@ -32,6 +34,29 @@ const MMAP_MIN: u64 = 64 * 1024;
 
 /// Initial chunked-read buffer size (grows if one line outruns it).
 const CHUNK: usize = 1 << 20;
+
+/// Transient-error retry budget per [`ByteSource::fill`] call (ISSUE 7).
+/// EINTR/EAGAIN-class failures retry up to this many times with a
+/// deterministic spin backoff; past it the error surfaces loudly.  The
+/// old behaviour retried EINTR forever, which turned a wedged descriptor
+/// into a silent hang.
+const MAX_TRANSIENT_RETRIES: u32 = 8;
+
+/// Is this error the transient (retry-worthy) class?  `InvalidData` and
+/// friends — the corrupt/truncated contract of PR 4/6 — are *not*
+/// retried; they stay loud.
+fn is_transient(e: &io::Error) -> bool {
+    matches!(e.kind(), io::ErrorKind::Interrupted | io::ErrorKind::WouldBlock)
+}
+
+/// Deterministic backoff: a bounded, escalating spin.  No sleeps — the
+/// fault-injection suite must replay bit-for-bit with no timing
+/// dependence (ISSUE 7: "no sleeps, no flakes").
+fn backoff(attempt: u32) {
+    for _ in 0..(1u32 << attempt.min(10)) {
+        std::hint::spin_loop();
+    }
+}
 
 /// A read-only window over a file's bytes; see the module docs for the
 /// two arms behind it.
@@ -63,7 +88,8 @@ impl ByteSource {
                 return Ok(ByteSource { file_len, imp: Imp::Mapped { map, pos: 0 } });
             }
         }
-        Ok(ByteSource { file_len, imp: Imp::Chunked(Chunked::new(file, CHUNK)) })
+        let faults = ReadFaults::from_env()?;
+        Ok(ByteSource { file_len, imp: Imp::Chunked(Chunked::new(file, CHUNK, faults)) })
     }
 
     /// Force the mapped arm regardless of size (differential tests pin
@@ -73,7 +99,11 @@ impl ByteSource {
         let file = File::open(path)?;
         let file_len = file.metadata()?.len();
         if file_len == 0 {
-            return Ok(ByteSource { file_len, imp: Imp::Chunked(Chunked::new(file, CHUNK)) });
+            let faults = ReadFaults::from_env()?;
+            return Ok(ByteSource {
+                file_len,
+                imp: Imp::Chunked(Chunked::new(file, CHUNK, faults)),
+            });
         }
         let map = Mmap::map(&file, file_len as usize)?;
         Ok(ByteSource { file_len, imp: Imp::Mapped { map, pos: 0 } })
@@ -82,9 +112,20 @@ impl ByteSource {
     /// Force the chunked arm with a given initial buffer capacity — tests
     /// drive tiny capacities so lines straddle refill boundaries.
     pub(crate) fn open_chunked(path: impl AsRef<Path>, cap: usize) -> io::Result<ByteSource> {
+        let faults = ReadFaults::from_env()?;
+        ByteSource::open_chunked_with_faults(path, cap, faults)
+    }
+
+    /// Chunked arm with an explicit read-fault schedule (test constructor;
+    /// an injected schedule overrides the environment plan).
+    pub(crate) fn open_chunked_with_faults(
+        path: impl AsRef<Path>,
+        cap: usize,
+        faults: ReadFaults,
+    ) -> io::Result<ByteSource> {
         let file = File::open(path)?;
         let file_len = file.metadata()?.len();
-        Ok(ByteSource { file_len, imp: Imp::Chunked(Chunked::new(file, cap.max(1))) })
+        Ok(ByteSource { file_len, imp: Imp::Chunked(Chunked::new(file, cap.max(1), faults)) })
     }
 
     /// The unconsumed bytes currently visible.  For a mapped source this
@@ -135,6 +176,17 @@ impl ByteSource {
     pub fn file_len(&self) -> u64 {
         self.file_len
     }
+
+    /// Transient read errors absorbed by the bounded retry loop so far
+    /// (real EINTR/EAGAIN plus injected faults; always 0 for the mapped
+    /// arm, which performs no read calls).
+    pub fn io_retries(&self) -> u64 {
+        match &self.imp {
+            #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
+            Imp::Mapped { .. } => 0,
+            Imp::Chunked(c) => c.retries,
+        }
+    }
 }
 
 /// The pread-style fallback arm: a reused buffer holding one window.
@@ -144,11 +196,15 @@ struct Chunked {
     start: usize,
     end: usize,
     eof: bool,
+    /// Injected transient-failure schedule (empty outside fault tests).
+    faults: ReadFaults,
+    /// Transient errors absorbed by the retry loop.
+    retries: u64,
 }
 
 impl Chunked {
-    fn new(file: File, cap: usize) -> Chunked {
-        Chunked { file, buf: vec![0; cap], start: 0, end: 0, eof: false }
+    fn new(file: File, cap: usize, faults: ReadFaults) -> Chunked {
+        Chunked { file, buf: vec![0; cap], start: 0, end: 0, eof: false, faults, retries: 0 }
     }
 
     fn fill(&mut self) -> io::Result<bool> {
@@ -166,8 +222,15 @@ impl Chunked {
             let grown = self.buf.len().saturating_mul(2).max(64);
             self.buf.resize(grown, 0);
         }
+        let mut attempts = 0u32;
         loop {
-            match self.file.read(&mut self.buf[self.end..]) {
+            // each loop turn is one "read call" on the fault clock, so an
+            // injected failure takes exactly the path a real EINTR takes
+            let r = match self.faults.check() {
+                Some(e) => Err(e),
+                None => self.file.read(&mut self.buf[self.end..]),
+            };
+            match r {
                 Ok(0) => {
                     self.eof = true;
                     return Ok(false);
@@ -176,7 +239,22 @@ impl Chunked {
                     self.end += n;
                     return Ok(true);
                 }
-                Err(e) if e.kind() == io::ErrorKind::Interrupted => continue,
+                Err(e) if is_transient(&e) => {
+                    attempts += 1;
+                    if attempts > MAX_TRANSIENT_RETRIES {
+                        // a "transient" error that never clears is a real
+                        // failure: surface it loudly (PR 4/6 contract)
+                        return Err(io::Error::new(
+                            e.kind(),
+                            format!(
+                                "transient read error persisted after \
+                                 {MAX_TRANSIENT_RETRIES} retries: {e}"
+                            ),
+                        ));
+                    }
+                    self.retries += 1;
+                    backoff(attempts);
+                }
                 Err(e) => return Err(e),
             }
         }
@@ -294,6 +372,57 @@ mod tests {
             }
         }
         out
+    }
+
+    #[test]
+    fn injected_transient_faults_are_absorbed_and_counted() {
+        use crate::util::fault::FaultPlan;
+        let dir = TempDir::new("bytesource").unwrap();
+        let data: Vec<u8> = (0..=255u8).cycle().take(5_000).collect();
+        let p = write(&dir, "f.bin", &data);
+        // cap 7 forces many fill calls; faults at read calls 1, 3 and 40
+        let faults = FaultPlan::parse("read_error@1;read_error@3;read_error@40")
+            .unwrap()
+            .read_faults();
+        let src = ByteSource::open_chunked_with_faults(&p, 7, faults).unwrap();
+        let mut src = src;
+        let mut out = Vec::new();
+        loop {
+            out.extend_from_slice(src.window());
+            let n = src.window().len();
+            src.consume(n);
+            match src.fill() {
+                Ok(true) => continue,
+                Ok(false) => break,
+                Err(e) => panic!("retry should have absorbed the fault: {e}"),
+            }
+        }
+        assert_eq!(out, data, "recovery must be byte-exact");
+        assert_eq!(src.io_retries(), 3);
+        // a clean source over the same file reports zero retries
+        let clean =
+            ByteSource::open_chunked_with_faults(&p, 7, crate::util::fault::ReadFaults::none())
+                .unwrap();
+        assert_eq!(drain(clean), data);
+    }
+
+    #[test]
+    fn persistent_transient_error_surfaces_after_bounded_retries() {
+        use crate::util::fault::FaultPlan;
+        let dir = TempDir::new("bytesource").unwrap();
+        let p = write(&dir, "g.bin", b"0 1\n");
+        // schedule a fault on every read call the retry budget allows:
+        // calls 1..=MAX+1 all fail, so fill() must give up loudly
+        let plan: String = (1..=(MAX_TRANSIENT_RETRIES + 1) as u64)
+            .map(|i| format!("read_error@{i}"))
+            .collect::<Vec<_>>()
+            .join(";");
+        let faults = FaultPlan::parse(&plan).unwrap().read_faults();
+        let mut src = ByteSource::open_chunked_with_faults(&p, 64, faults).unwrap();
+        let err = src.fill().unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::Interrupted);
+        assert!(err.to_string().contains("persisted"), "{err}");
+        assert_eq!(src.io_retries(), MAX_TRANSIENT_RETRIES as u64);
     }
 
     #[test]

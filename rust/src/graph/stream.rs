@@ -76,6 +76,13 @@ pub trait EdgeStream {
     fn take_error(&mut self) -> Option<crate::util::err::Error> {
         None
     }
+    /// Transient read errors absorbed by the retry loop so far (ISSUE 7),
+    /// across every pass/reset of this stream.  `0` for in-memory streams;
+    /// [`FileStream`] reports the ingest layer's count.  Feeds
+    /// [`HealthReport::io_retries`](crate::coordinator::HealthReport).
+    fn io_retries(&self) -> u64 {
+        0
+    }
 }
 
 /// In-memory stream over a `Vec<Edge>`.
@@ -213,6 +220,9 @@ pub struct FileStream {
     batch: Vec<Edge>,
     cursor: usize,
     error: Option<io::Error>,
+    /// Retries accumulated by ingests retired by `reset()` — each reset
+    /// replaces `ingest`, which would otherwise forget its count.
+    prior_retries: u64,
 }
 
 impl FileStream {
@@ -237,6 +247,7 @@ impl FileStream {
             batch: Vec::with_capacity(ingest::BATCH),
             cursor: 0,
             error: None,
+            prior_retries: 0,
         })
     }
 
@@ -288,6 +299,7 @@ impl EdgeStream for FileStream {
     fn reset(&mut self) {
         self.batch.clear();
         self.cursor = 0;
+        self.prior_retries += self.ingest.io_retries();
         // a failure recorded by the previous pass survives reset (never
         // silently cleared) — the old reader behaved the same way
         if let Some(e) = self.ingest.take_io_error() {
@@ -317,6 +329,10 @@ impl EdgeStream for FileStream {
             .take()
             .or_else(|| self.ingest.take_io_error())
             .map(|e| crate::anyhow!("{}: {e}", self.path.display()))
+    }
+
+    fn io_retries(&self) -> u64 {
+        self.prior_retries + self.ingest.io_retries()
     }
 }
 

@@ -34,12 +34,20 @@
 //! full system inventory and experiment index.
 
 // ISSUE 5 documentation contract: every public item in the swept modules
-// (sampling, descriptors, coordinator, graph) is documented; modules not
-// yet swept carry an explicit module-level allow.  The CI `docs` job
-// builds rustdoc with `-D warnings`, so regressions fail the build.
+// (sampling, descriptors, coordinator, graph, checkpoint, exact,
+// classify) is documented; modules not yet swept carry an explicit
+// module-level allow.  The CI `docs` job builds rustdoc with
+// `-D warnings`, so regressions fail the build.
 #![warn(missing_docs)]
+// ISSUE 7 panic-hygiene contract: non-test library code never calls
+// `unwrap()` on a fallible path — recoverable failures thread
+// `crate::Result`, provably-infallible unwraps are `expect`ed with the
+// invariant spelled out.  Tests are exempt (a failed unwrap *is* the
+// assertion there).
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
 
 pub mod analyze;
+pub mod checkpoint;
 pub mod classify;
 pub mod coordinator;
 pub mod count;

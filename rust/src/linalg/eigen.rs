@@ -14,7 +14,7 @@ pub fn symmetric_eigenvalues(a: &[f64], n: usize) -> Vec<f64> {
     let mut m = a.to_vec();
     let (mut d, mut e) = tridiagonalize(&mut m, n);
     ql_implicit(&mut d, &mut e);
-    d.sort_by(|x, y| x.partial_cmp(y).unwrap());
+    d.sort_by(|x, y| x.partial_cmp(y).expect("NaN eigenvalue"));
     d
 }
 

@@ -97,14 +97,14 @@ pub fn lanczos_extreme_eigenvalues(
 pub fn interpolate_spectrum(low: &[f64], high: &[f64], n: usize) -> Vec<f64> {
     if low.len() + high.len() >= n {
         let mut all: Vec<f64> = low.iter().chain(high.iter()).copied().collect();
-        all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        all.sort_by(|a, b| a.partial_cmp(b).expect("NaN in spectrum"));
         all.truncate(n);
         return all;
     }
     let mut out = Vec::with_capacity(n);
     out.extend_from_slice(low);
     let mid = n - low.len() - high.len();
-    let (a, b) = (*low.last().unwrap(), high[0]);
+    let (a, b) = (*low.last().expect("low end non-empty here"), high[0]);
     for i in 1..=mid {
         out.push(a + (b - a) * i as f64 / (mid + 1) as f64);
     }

@@ -20,6 +20,10 @@
 //! text had already lost `--placement`-era flags once).  A snapshot test
 //! pins the rendered text.
 
+// same panic-hygiene gate as the library (ISSUE 7): the binary's
+// non-test code threads errors instead of unwrapping.
+#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+
 use std::process::ExitCode;
 
 use stream_descriptors::coordinator::PlacementPolicy;
@@ -42,6 +46,11 @@ struct Args {
     out_dir: Option<String>,
     input: Option<String>,
     output: Option<String>,
+    descriptor: String,
+    budget: usize,
+    checkpoint: Option<String>,
+    checkpoint_every: u64,
+    resume: Option<String>,
 }
 
 /// The single source of truth for subcommands: `(name, help)`.
@@ -58,6 +67,7 @@ const COMMANDS: &[(&str, &str)] = &[
     ("drift", "windowed descriptors over a churned two-regime stream"),
     ("unbiased", "Theorem 1/2 empirical check"),
     ("ablation", "design-choice ablations (MAEVE vs NetSimile; SANTA wedge term)"),
+    ("describe", "one descriptor over an edge list, checkpoint/resume-able"),
     ("convert", "convert a text edge list to the binary .sdg format"),
     ("all", "run everything"),
 ];
@@ -77,8 +87,13 @@ const FLAGS: &[(&str, &str, &str)] = &[
     ("--dataset", "NAME", "restrict table14/15 to one dataset (e.g. OHSU)"),
     ("--net", "NAME", "restrict table16/17 to one network (FO/US/CS/PT/FL/SF/U2)"),
     ("--results", "DIR", "output directory (default results/)"),
-    ("--input", "FILE", "text edge list to read (convert)"),
+    ("--input", "FILE", "edge list to read (convert, describe)"),
     ("--output", "FILE", "binary edge list to write (convert)"),
+    ("--descriptor", "D", "descriptor for describe: gabe | maeve | santa (default gabe)"),
+    ("--budget", "N", "reservoir budget for describe (default 100000)"),
+    ("--checkpoint", "FILE", "write .sdc checkpoints here during describe"),
+    ("--checkpoint-every", "N", "checkpoint cadence in arrivals (describe; 0 = off)"),
+    ("--resume", "FILE", "resume describe from a .sdc checkpoint"),
 ];
 
 /// Render the usage text from the command and flag tables.
@@ -109,6 +124,12 @@ fn parse_from(mut it: impl Iterator<Item = String>) -> Result<Args, String> {
     if cmd == "-h" || cmd == "--help" {
         return Err(usage());
     }
+    // validate the command here so `main` has exactly one failure path
+    // (ISSUE 7 satellite: the old in-`run` fallback called
+    // `process::exit(2)` mid-closure, skipping destructors)
+    if !COMMANDS.iter().any(|(name, _)| *name == cmd) {
+        return Err(format!("unknown command {cmd}\n\n{}", usage()));
+    }
     let mut a = Args {
         cmd,
         scale: 0.25,
@@ -123,6 +144,11 @@ fn parse_from(mut it: impl Iterator<Item = String>) -> Result<Args, String> {
         out_dir: None,
         input: None,
         output: None,
+        descriptor: "gabe".into(),
+        budget: 100_000,
+        checkpoint: None,
+        checkpoint_every: 0,
+        resume: None,
     };
     let mut decay: Option<f64> = None;
     let mut sliding: Option<usize> = None;
@@ -151,6 +177,11 @@ fn parse_from(mut it: impl Iterator<Item = String>) -> Result<Args, String> {
             "--results" => a.out_dir = Some(val),
             "--input" => a.input = Some(val),
             "--output" => a.output = Some(val),
+            "--descriptor" => a.descriptor = val,
+            "--budget" => a.budget = val.parse().map_err(int)?,
+            "--checkpoint" => a.checkpoint = Some(val),
+            "--checkpoint-every" => a.checkpoint_every = val.parse().map_err(int)?,
+            "--resume" => a.resume = Some(val),
             // every FLAGS entry must have an arm above; the lookup at the
             // top guarantees nothing else reaches here
             other => unreachable!("flag {other} is in FLAGS but has no parser arm"),
@@ -229,6 +260,117 @@ fn convert(args: &Args) -> stream_descriptors::Result<()> {
     Ok(())
 }
 
+/// Print one estimate compactly (shared by the direct and pipeline arms
+/// of `describe`).
+fn print_estimate(est: &stream_descriptors::coordinator::WorkerEstimate) {
+    use stream_descriptors::coordinator::WorkerEstimate;
+    match est {
+        WorkerEstimate::Gabe(e) => {
+            println!("  gabe |V|={} |E|={}", e.nv, e.ne);
+            for (i, name) in stream_descriptors::count::NAMES.iter().enumerate() {
+                if stream_descriptors::count::SIZES[i] >= 3 {
+                    println!("    {name:<10} {:>16.1}", e.counts[i]);
+                }
+            }
+        }
+        WorkerEstimate::Maeve(e) => {
+            let tri: f64 = e.triangles.iter().sum();
+            let paths: f64 = e.paths.iter().sum();
+            println!(
+                "  maeve |V|={} |E|={}  Σ triangles={tri:.1}  Σ 2-paths={paths:.1}",
+                e.nv, e.ne
+            );
+        }
+        WorkerEstimate::Santa(e) => {
+            println!("  santa |V|={} |E|={}  traces={:?}", e.nv, e.ne, e.traces);
+        }
+    }
+}
+
+/// `repro describe`: one descriptor over one edge-list file, with
+/// checkpoint/resume (ISSUE 7).  `--workers 1` drives the sequential
+/// runner ([`stream_descriptors::checkpoint`]); more workers drive the
+/// fault-tolerant pipeline, whose health report is printed after the
+/// estimate.
+fn describe(args: &Args) -> stream_descriptors::Result<()> {
+    use stream_descriptors::checkpoint::{resume_direct, run_direct, DirectConfig};
+    use stream_descriptors::coordinator::{run_pipeline, CoordinatorConfig, DescriptorKind};
+    use stream_descriptors::graph::stream::FileStream;
+
+    let input = args
+        .input
+        .as_deref()
+        .ok_or_else(|| stream_descriptors::anyhow!("describe needs --input FILE"))?;
+    let kind = match args.descriptor.as_str() {
+        "gabe" => DescriptorKind::Gabe,
+        "maeve" => DescriptorKind::Maeve,
+        "santa" => DescriptorKind::Santa { exact_wedges: false },
+        other => {
+            return Err(stream_descriptors::anyhow!(
+                "--descriptor {other} is not one of gabe, maeve, santa"
+            ))
+        }
+    };
+    let mut stream = FileStream::open(input)?;
+    if args.workers <= 1 {
+        let cfg = DirectConfig {
+            kind,
+            budget: args.budget,
+            seed: args.seed,
+            window: args.window,
+            checkpoint_every: args.checkpoint_every,
+            checkpoint_path: args.checkpoint.clone().map(Into::into),
+        };
+        let out = match &args.resume {
+            None => run_direct(&mut stream, &cfg)?,
+            Some(path) => resume_direct(&mut stream, std::path::Path::new(path), &cfg)?,
+        };
+        match out.resumed_at {
+            Some(at) => println!(
+                "describe {input}: {} edges (resumed at {at}), {} checkpoints written",
+                out.edges, out.checkpoints_written
+            ),
+            None => println!(
+                "describe {input}: {} edges, {} checkpoints written",
+                out.edges, out.checkpoints_written
+            ),
+        }
+        print_estimate(&out.estimate);
+    } else {
+        let cfg = CoordinatorConfig {
+            workers: args.workers,
+            budget: args.budget,
+            seed: args.seed,
+            window: args.window,
+            placement: args.placement,
+            checkpoint_every: args.checkpoint_every,
+            checkpoint_path: args.checkpoint.clone().map(Into::into),
+            resume: args.resume.clone().map(Into::into),
+            ..Default::default()
+        };
+        let r = run_pipeline(&mut stream, kind, &cfg)?;
+        println!(
+            "describe {input}: {} edges over {} workers ({:.0} edges/s)",
+            r.edges,
+            args.workers,
+            r.throughput()
+        );
+        print_estimate(&r.averaged);
+        let h = &r.health;
+        println!(
+            "  health: restarts={} lost={:?} degraded={} io_retries={} \
+             faults_injected={} checkpoints_written={}",
+            h.restarts,
+            h.lost_workers,
+            h.degraded,
+            h.io_retries,
+            h.faults_injected,
+            h.checkpoints_written
+        );
+    }
+    Ok(())
+}
+
 fn main() -> ExitCode {
     let args = match parse_args() {
         Ok(a) => a,
@@ -263,6 +405,7 @@ fn main() -> ExitCode {
             "drift" => experiments::drift::drift(&ctx, args.window, args.workers),
             "unbiased" => experiments::approx::unbiased(&ctx),
             "ablation" => experiments::ablation::ablation(&ctx),
+            "describe" => describe(&args),
             "convert" => convert(&args),
             "all" => {
                 experiments::approx::fig4(&ctx)?;
@@ -278,10 +421,9 @@ fn main() -> ExitCode {
                 experiments::scalability::table(&ctx, 100_000, w, args.net, p)?;
                 experiments::scalability::table(&ctx, 500_000, w, args.net, p)
             }
-            other => {
-                eprintln!("unknown command {other}\n\n{}", usage());
-                std::process::exit(2);
-            }
+            // the parser validated the command against COMMANDS, so every
+            // entry has an arm above
+            other => unreachable!("command {other} is in COMMANDS but has no arm"),
         }
     };
     match run() {
@@ -327,6 +469,41 @@ mod tests {
         let err = parse(&["quickstart", "--bogus", "1"]).unwrap_err();
         assert!(err.contains("unknown flag --bogus"));
         assert!(err.contains("OPTIONS:"), "usage text must follow the error");
+    }
+
+    /// ISSUE 7 satellite: unknown commands are a parse error (printed +
+    /// exit 2 through the single failure path in `main`), not a
+    /// mid-closure `process::exit`.
+    #[test]
+    fn unknown_command_is_rejected_with_usage() {
+        let err = parse(&["frobnicate"]).unwrap_err();
+        assert!(err.contains("unknown command frobnicate"), "{err}");
+        assert!(err.contains("USAGE:"), "usage text must follow the error");
+    }
+
+    #[test]
+    fn describe_flags_assemble_the_checkpoint_config() {
+        let a = parse(&[
+            "describe",
+            "--input",
+            "g.txt",
+            "--descriptor",
+            "santa",
+            "--budget",
+            "500",
+            "--checkpoint",
+            "c.sdc",
+            "--checkpoint-every",
+            "1000",
+        ])
+        .unwrap();
+        assert_eq!(a.descriptor, "santa");
+        assert_eq!(a.budget, 500);
+        assert_eq!(a.checkpoint.as_deref(), Some("c.sdc"));
+        assert_eq!(a.checkpoint_every, 1000);
+        assert!(a.resume.is_none());
+        let a = parse(&["describe", "--resume", "c.sdc"]).unwrap();
+        assert_eq!(a.resume.as_deref(), Some("c.sdc"));
     }
 
     #[test]
@@ -388,6 +565,7 @@ COMMANDS:
   drift        windowed descriptors over a churned two-regime stream
   unbiased     Theorem 1/2 empirical check
   ablation     design-choice ablations (MAEVE vs NetSimile; SANTA wedge term)
+  describe     one descriptor over an edge list, checkpoint/resume-able
   convert      convert a text edge list to the binary .sdg format
   all          run everything
 
@@ -404,8 +582,13 @@ OPTIONS:
   --dataset NAME     restrict table14/15 to one dataset (e.g. OHSU)
   --net NAME         restrict table16/17 to one network (FO/US/CS/PT/FL/SF/U2)
   --results DIR      output directory (default results/)
-  --input FILE       text edge list to read (convert)
+  --input FILE       edge list to read (convert, describe)
   --output FILE      binary edge list to write (convert)
+  --descriptor D     descriptor for describe: gabe | maeve | santa (default gabe)
+  --budget N         reservoir budget for describe (default 100000)
+  --checkpoint FILE  write .sdc checkpoints here during describe
+  --checkpoint-every N checkpoint cadence in arrivals (describe; 0 = off)
+  --resume FILE      resume describe from a .sdc checkpoint
 ";
         assert_eq!(usage(), expected);
     }

@@ -8,6 +8,7 @@
 //! sample graph and the reservoir in lock-step.
 
 
+use crate::checkpoint::{Dec, Enc};
 use crate::graph::Edge;
 use crate::util::rng::Pcg64;
 
@@ -109,6 +110,37 @@ impl Reservoir {
     pub fn clear(&mut self) {
         self.edges.clear();
         self.t = 0;
+    }
+
+    /// Serialize the full sampler state (ISSUE 7): budget, arrival clock,
+    /// raw RNG registers and the stored edges, in slot order.
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.usize(self.budget);
+        out.usize(self.t);
+        let (state, inc) = self.rng.state_parts();
+        out.u64(state);
+        out.u64(inc);
+        out.usize(self.edges.len());
+        for e in &self.edges {
+            out.edge(*e);
+        }
+    }
+
+    /// Rebuild from [`Reservoir::save`] bytes.  The restored sampler's
+    /// future decisions are bit-for-bit those of the captured one.
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<Reservoir> {
+        let budget = d.usize()?;
+        crate::ensure!(budget > 0, "reservoir checkpoint: zero budget");
+        let t = d.usize()?;
+        let state = d.u64()?;
+        let inc = d.u64()?;
+        let n = d.seq_len(8)?;
+        crate::ensure!(n <= budget, "reservoir checkpoint: {n} edges exceed budget {budget}");
+        let mut edges = Vec::with_capacity(budget.min(RESERVE_CHUNK).max(n));
+        for _ in 0..n {
+            edges.push(d.edge()?);
+        }
+        Ok(Reservoir { budget, edges, t, rng: Pcg64::from_state_parts(state, inc) })
     }
 }
 

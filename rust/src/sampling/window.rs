@@ -56,6 +56,7 @@
 
 use std::collections::VecDeque;
 
+use crate::checkpoint::{Dec, Enc};
 use crate::graph::Edge;
 use crate::util::rng::Pcg64;
 
@@ -227,6 +228,41 @@ impl WindowConfig {
     pub fn snapshot_due(&self, t: u64) -> bool {
         self.stride > 0 && t % self.stride as u64 == 0
     }
+
+    /// Serialize: a policy tag plus its knob, then the stride.
+    pub(crate) fn save(&self, out: &mut Enc) {
+        match self.policy {
+            WindowPolicy::None => {
+                out.u8(0);
+                out.u64(0);
+            }
+            WindowPolicy::Sliding { w } => {
+                out.u8(1);
+                out.usize(w);
+            }
+            WindowPolicy::Decay { half_life } => {
+                out.u8(2);
+                out.f64(half_life);
+            }
+        }
+        out.usize(self.stride);
+    }
+
+    /// Rebuild from [`WindowConfig::save`] bytes.
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<WindowConfig> {
+        let policy = match d.u8()? {
+            0 => {
+                d.u64()?;
+                WindowPolicy::None
+            }
+            1 => WindowPolicy::Sliding { w: d.usize()? },
+            2 => WindowPolicy::Decay { half_life: d.f64()? },
+            tag => return Err(crate::anyhow!("window checkpoint: unknown policy tag {tag}")),
+        };
+        policy.validate()?;
+        let stride = d.usize()?;
+        Ok(WindowConfig { policy, stride })
+    }
 }
 
 /// One point of a descriptor time series: the estimate as of arrival `t`.
@@ -381,6 +417,70 @@ impl SlidingReservoir {
             .filter(|s| s.arrival != VACANT)
             .map(|s| (s.edge, s.arrival))
     }
+
+    /// Serialize the full sampler state (ISSUE 7): the slot vector, free
+    /// list and age queue verbatim (slot numbering and queue order are
+    /// load-bearing for bit-for-bit resume), plus the raw RNG registers.
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.usize(self.w);
+        out.usize(self.budget);
+        out.usize(self.t);
+        out.usize(self.live);
+        let (state, inc) = self.rng.state_parts();
+        out.u64(state);
+        out.u64(inc);
+        out.usize(self.slots.len());
+        for s in &self.slots {
+            out.edge(s.edge);
+            out.usize(s.arrival);
+        }
+        out.usize(self.free.len());
+        for f in &self.free {
+            out.u32(*f);
+        }
+        out.usize(self.ages.len());
+        for &(arrival, slot) in &self.ages {
+            out.usize(arrival);
+            out.u32(slot);
+        }
+    }
+
+    /// Rebuild from [`SlidingReservoir::save`] bytes.
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<SlidingReservoir> {
+        let w = d.usize()?;
+        crate::ensure!(w > 0, "sliding checkpoint: zero window");
+        let budget = d.usize()?;
+        crate::ensure!(budget > 0, "sliding checkpoint: zero budget");
+        let t = d.usize()?;
+        let live = d.usize()?;
+        let state = d.u64()?;
+        let inc = d.u64()?;
+        let n_slots = d.seq_len(16)?;
+        let mut slots = Vec::with_capacity(n_slots);
+        for _ in 0..n_slots {
+            let edge = d.edge()?;
+            let arrival = d.usize()?;
+            slots.push(SlidingEntry { edge, arrival });
+        }
+        let n_free = d.seq_len(4)?;
+        let mut free = Vec::with_capacity(n_free);
+        for _ in 0..n_free {
+            free.push(d.u32()?);
+        }
+        let n_ages = d.seq_len(12)?;
+        let mut ages = VecDeque::with_capacity(n_ages);
+        for _ in 0..n_ages {
+            let arrival = d.usize()?;
+            let slot = d.u32()?;
+            ages.push_back((arrival, slot));
+        }
+        crate::ensure!(
+            live <= budget && live <= slots.len(),
+            "sliding checkpoint: inconsistent live count {live}"
+        );
+        let rng = Pcg64::from_state_parts(state, inc);
+        Ok(SlidingReservoir { w, budget, t, live, slots, free, ages, rng })
+    }
 }
 
 /// One Efraimidis–Spirakis entry: the edge, its arrival, and `ln u` for a
@@ -513,6 +613,47 @@ impl DecayReservoir {
     pub fn entries(&self) -> impl Iterator<Item = (Edge, usize)> + '_ {
         self.heap.iter().map(|s| (s.edge, s.arrival))
     }
+
+    /// Serialize the full sampler state (ISSUE 7): the heap vector
+    /// verbatim (heap shape drives future sift paths, so element order is
+    /// load-bearing), the decayed-weight constants and the RNG registers.
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.f64(self.lambda);
+        out.usize(self.n_eff);
+        out.usize(self.budget);
+        out.usize(self.t);
+        let (state, inc) = self.rng.state_parts();
+        out.u64(state);
+        out.u64(inc);
+        out.usize(self.heap.len());
+        for e in &self.heap {
+            out.edge(e.edge);
+            out.usize(e.arrival);
+            out.f64(e.ln_u);
+        }
+    }
+
+    /// Rebuild from [`DecayReservoir::save`] bytes.
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<DecayReservoir> {
+        let lambda = d.f64()?;
+        let n_eff = d.usize()?;
+        let budget = d.usize()?;
+        crate::ensure!(budget > 0, "decay checkpoint: zero budget");
+        let t = d.usize()?;
+        let state = d.u64()?;
+        let inc = d.u64()?;
+        let n = d.seq_len(24)?;
+        crate::ensure!(n <= budget, "decay checkpoint: {n} entries exceed budget {budget}");
+        let mut heap = Vec::with_capacity(budget.min(1 << 20).max(n));
+        for _ in 0..n {
+            let edge = d.edge()?;
+            let arrival = d.usize()?;
+            let ln_u = d.f64()?;
+            heap.push(DecayEntry { edge, arrival, ln_u });
+        }
+        let rng = Pcg64::from_state_parts(state, inc);
+        Ok(DecayReservoir { lambda, n_eff, budget, t, heap, rng })
+    }
 }
 
 /// The policy-dispatched reservoir every estimator holds.
@@ -599,6 +740,34 @@ impl WindowedReservoir {
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
+
+    /// Serialize: a variant tag, then the arm's own state.
+    pub(crate) fn save(&self, out: &mut Enc) {
+        match self {
+            WindowedReservoir::Full(r) => {
+                out.u8(0);
+                r.save(out);
+            }
+            WindowedReservoir::Sliding(r) => {
+                out.u8(1);
+                r.save(out);
+            }
+            WindowedReservoir::Decay(r) => {
+                out.u8(2);
+                r.save(out);
+            }
+        }
+    }
+
+    /// Rebuild from [`WindowedReservoir::save`] bytes.
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<WindowedReservoir> {
+        match d.u8()? {
+            0 => Ok(WindowedReservoir::Full(Reservoir::load(d)?)),
+            1 => Ok(WindowedReservoir::Sliding(SlidingReservoir::load(d)?)),
+            2 => Ok(WindowedReservoir::Decay(DecayReservoir::load(d)?)),
+            tag => Err(crate::anyhow!("reservoir checkpoint: unknown variant tag {tag}")),
+        }
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -681,6 +850,59 @@ impl<const K: usize> SlidingScalars<K> {
         }
         out
     }
+
+    /// Serialize: totals, expired side, sealed buckets (in queue order)
+    /// and the open bucket, all floats bit-exact.
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.usize(self.w);
+        out.usize(self.bucket_len);
+        for v in &self.total {
+            out.f64(*v);
+        }
+        for v in &self.expired {
+            out.f64(*v);
+        }
+        out.usize(self.buckets.len());
+        for b in &self.buckets {
+            for v in b {
+                out.f64(*v);
+            }
+        }
+        for v in &self.cur {
+            out.f64(*v);
+        }
+        out.usize(self.cur_count);
+    }
+
+    /// Rebuild from [`SlidingScalars::save`] bytes.
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<SlidingScalars<K>> {
+        let w = d.usize()?;
+        let bucket_len = d.usize()?;
+        crate::ensure!(bucket_len > 0, "scalar-window checkpoint: zero bucket length");
+        let mut total = [0.0; K];
+        for v in total.iter_mut() {
+            *v = d.f64()?;
+        }
+        let mut expired = [0.0; K];
+        for v in expired.iter_mut() {
+            *v = d.f64()?;
+        }
+        let n = d.seq_len(8 * K.max(1))?;
+        let mut buckets = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            let mut b = [0.0; K];
+            for v in b.iter_mut() {
+                *v = d.f64()?;
+            }
+            buckets.push_back(b);
+        }
+        let mut cur = [0.0; K];
+        for v in cur.iter_mut() {
+            *v = d.f64()?;
+        }
+        let cur_count = d.usize()?;
+        Ok(SlidingScalars { w, bucket_len, total, expired, buckets, cur, cur_count })
+    }
 }
 
 /// Policy-dispatched accumulator for `K` scalar counters.
@@ -754,6 +976,52 @@ impl<const K: usize> WindowAcc<K> {
             WindowAcc::Decay { vals, .. } => *vals,
         }
     }
+
+    /// Serialize: a variant tag, then the arm's own state.
+    pub(crate) fn save(&self, out: &mut Enc) {
+        match self {
+            WindowAcc::Plain(vals) => {
+                out.u8(0);
+                for v in vals {
+                    out.f64(*v);
+                }
+            }
+            WindowAcc::Sliding(s) => {
+                out.u8(1);
+                s.save(out);
+            }
+            WindowAcc::Decay { vals, rho } => {
+                out.u8(2);
+                for v in vals {
+                    out.f64(*v);
+                }
+                out.f64(*rho);
+            }
+        }
+    }
+
+    /// Rebuild from [`WindowAcc::save`] bytes.
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<WindowAcc<K>> {
+        match d.u8()? {
+            0 => {
+                let mut vals = [0.0; K];
+                for v in vals.iter_mut() {
+                    *v = d.f64()?;
+                }
+                Ok(WindowAcc::Plain(vals))
+            }
+            1 => Ok(WindowAcc::Sliding(Box::new(SlidingScalars::load(d)?))),
+            2 => {
+                let mut vals = [0.0; K];
+                for v in vals.iter_mut() {
+                    *v = d.f64()?;
+                }
+                let rho = d.f64()?;
+                Ok(WindowAcc::Decay { vals, rho })
+            }
+            tag => Err(crate::anyhow!("accumulator checkpoint: unknown variant tag {tag}")),
+        }
+    }
 }
 
 /// Ring of the last `w` stream edges — the exact clock for *windowed
@@ -792,6 +1060,27 @@ impl EdgeRing {
     /// `true` when the window is empty.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
+    }
+
+    /// Serialize: window length plus the buffered edges in ring order.
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.usize(self.w);
+        out.usize(self.buf.len());
+        for e in &self.buf {
+            out.edge(*e);
+        }
+    }
+
+    /// Rebuild from [`EdgeRing::save`] bytes.
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<EdgeRing> {
+        let w = d.usize()?;
+        let n = d.seq_len(8)?;
+        crate::ensure!(n <= w, "edge-ring checkpoint: {n} edges exceed window {w}");
+        let mut buf = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            buf.push_back(d.edge()?);
+        }
+        Ok(EdgeRing { buf, w })
     }
 }
 
@@ -841,6 +1130,59 @@ impl VertexCreditLog {
     #[inline]
     pub fn credit(&mut self, v: u32, dtri: f64, dpath: f64) {
         self.cur.push((v, dtri, dpath));
+    }
+
+    /// Serialize: sealed buckets (in queue order) then the open bucket;
+    /// credit order within a bucket is preserved (subtraction order feeds
+    /// float sums downstream).
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.usize(self.w);
+        out.usize(self.bucket_len);
+        out.usize(self.buckets.len());
+        for b in &self.buckets {
+            out.usize(b.len());
+            for &(v, dtri, dpath) in b {
+                out.u32(v);
+                out.f64(dtri);
+                out.f64(dpath);
+            }
+        }
+        out.usize(self.cur.len());
+        for &(v, dtri, dpath) in &self.cur {
+            out.u32(v);
+            out.f64(dtri);
+            out.f64(dpath);
+        }
+        out.usize(self.cur_count);
+    }
+
+    /// Rebuild from [`VertexCreditLog::save`] bytes.
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<VertexCreditLog> {
+        let w = d.usize()?;
+        let bucket_len = d.usize()?;
+        let n = d.seq_len(8)?;
+        let mut buckets = VecDeque::with_capacity(n);
+        for _ in 0..n {
+            let len = d.seq_len(20)?;
+            let mut b = Vec::with_capacity(len);
+            for _ in 0..len {
+                let v = d.u32()?;
+                let dtri = d.f64()?;
+                let dpath = d.f64()?;
+                b.push((v, dtri, dpath));
+            }
+            buckets.push_back(b);
+        }
+        let len = d.seq_len(20)?;
+        let mut cur = Vec::with_capacity(len);
+        for _ in 0..len {
+            let v = d.u32()?;
+            let dtri = d.f64()?;
+            let dpath = d.f64()?;
+            cur.push((v, dtri, dpath));
+        }
+        let cur_count = d.usize()?;
+        Ok(VertexCreditLog { w, bucket_len, buckets, cur, cur_count })
     }
 }
 
@@ -1138,6 +1480,133 @@ mod tests {
         assert!(c.snapshot_due(20));
         let off = WindowConfig::default();
         assert!(!off.snapshot_due(10));
+    }
+
+    /// Checkpoint round-trip: a restored sliding reservoir replays the
+    /// remainder of the stream bit-for-bit (same expiries, same actions).
+    #[test]
+    fn sliding_checkpoint_roundtrip_is_bit_exact() {
+        let (w, b) = (60usize, 16usize);
+        let mut live = SlidingReservoir::new(w, b, Pcg64::seed_from_u64(11));
+        let mut expired = Vec::new();
+        let all = edges(1000);
+        for e in &all[..400] {
+            expired.clear();
+            live.arrive(&mut expired);
+            live.offer(*e);
+        }
+        let mut enc = Enc::new();
+        live.save(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut dec = Dec::new(&bytes);
+        let mut restored = SlidingReservoir::load(&mut dec).unwrap();
+        dec.finish().unwrap();
+        let (mut ex_a, mut ex_b) = (Vec::new(), Vec::new());
+        for e in &all[400..] {
+            ex_a.clear();
+            ex_b.clear();
+            assert_eq!(live.arrive(&mut ex_a), restored.arrive(&mut ex_b));
+            assert_eq!(ex_a, ex_b);
+            assert_eq!(live.offer(*e), restored.offer(*e));
+        }
+        let a: Vec<(Edge, usize)> = live.entries().collect();
+        let b_: Vec<(Edge, usize)> = restored.entries().collect();
+        assert_eq!(a, b_);
+    }
+
+    /// Same for the decay reservoir: the restored heap (element order
+    /// included) continues the exact action sequence of the original.
+    #[test]
+    fn decay_checkpoint_roundtrip_is_bit_exact() {
+        let mut live = DecayReservoir::new(35.0, 12, Pcg64::seed_from_u64(21));
+        let all = edges(900);
+        for e in &all[..300] {
+            live.arrive();
+            live.offer(*e);
+        }
+        let mut enc = Enc::new();
+        live.save(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut dec = Dec::new(&bytes);
+        let mut restored = DecayReservoir::load(&mut dec).unwrap();
+        dec.finish().unwrap();
+        for e in &all[300..] {
+            assert_eq!(live.arrive(), restored.arrive());
+            assert_eq!(live.offer(*e), restored.offer(*e));
+        }
+        let a: Vec<(Edge, usize)> = live.entries().collect();
+        let b_: Vec<(Edge, usize)> = restored.entries().collect();
+        assert_eq!(a, b_);
+    }
+
+    /// Accumulators and the credit log round-trip mid-expiry and keep
+    /// producing bitwise-identical values afterwards.
+    #[test]
+    fn accumulator_checkpoints_roundtrip_bitwise() {
+        let mut acc = WindowAcc::<3>::new(WindowPolicy::Sliding { w: 50 });
+        let mut log = VertexCreditLog::new(30);
+        let mut ring = EdgeRing::new(40);
+        let mut sink = Vec::new();
+        for t in 1..=220u32 {
+            acc.tick();
+            acc.credit(0, t as f64);
+            acc.credit(2, 1.0 / t as f64);
+            sink.clear();
+            log.tick(&mut sink);
+            log.credit(t, t as f64, 0.5);
+            ring.push(Edge::new(t, t + 1));
+        }
+        let mut enc = Enc::new();
+        acc.save(&mut enc);
+        log.save(&mut enc);
+        ring.save(&mut enc);
+        let bytes = enc.into_bytes();
+        let mut dec = Dec::new(&bytes);
+        let mut acc2 = WindowAcc::<3>::load(&mut dec).unwrap();
+        let mut log2 = VertexCreditLog::load(&mut dec).unwrap();
+        let mut ring2 = EdgeRing::load(&mut dec).unwrap();
+        dec.finish().unwrap();
+        let (mut out_a, mut out_b) = (Vec::new(), Vec::new());
+        for t in 221..=500u32 {
+            acc.tick();
+            acc2.tick();
+            acc.credit(1, (t as f64).sqrt());
+            acc2.credit(1, (t as f64).sqrt());
+            let (va, vb) = (acc.values(), acc2.values());
+            assert_eq!(va.map(f64::to_bits), vb.map(f64::to_bits), "t={t}");
+            out_a.clear();
+            out_b.clear();
+            log.tick(&mut out_a);
+            log2.tick(&mut out_b);
+            assert_eq!(out_a, out_b);
+            assert_eq!(ring.push(Edge::new(t, t + 1)), ring2.push(Edge::new(t, t + 1)));
+        }
+    }
+
+    /// A truncated or tag-corrupted window checkpoint fails loudly.
+    #[test]
+    fn corrupt_window_checkpoints_fail_loudly() {
+        let rng = Pcg64::seed_from_u64(2);
+        let mut r = WindowedReservoir::new(WindowPolicy::Sliding { w: 9 }, 4, rng);
+        let mut expired = Vec::new();
+        for e in edges(40) {
+            r.arrive(&mut expired);
+            r.offer(e);
+        }
+        let mut enc = Enc::new();
+        r.save(&mut enc);
+        let bytes = enc.into_bytes();
+        // truncation at every prefix length must error, never panic
+        for cut in 0..bytes.len() {
+            let mut dec = Dec::new(&bytes[..cut]);
+            let res = WindowedReservoir::load(&mut dec);
+            assert!(res.is_err() || dec.finish().is_err(), "cut={cut} decoded");
+        }
+        // an unknown variant tag is rejected by name
+        let mut bad = bytes.clone();
+        bad[0] = 9;
+        let err = WindowedReservoir::load(&mut Dec::new(&bad)).unwrap_err();
+        assert!(err.to_string().contains("unknown variant tag"), "{err}");
     }
 
     #[test]

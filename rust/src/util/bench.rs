@@ -98,7 +98,7 @@ impl Bencher {
                 .unwrap_or_default()
         );
         self.results.push(r);
-        self.results.last().unwrap()
+        self.results.last().expect("result pushed above")
     }
 
     pub fn results(&self) -> &[BenchResult] {

@@ -1,0 +1,380 @@
+//! Deterministic fault injection (ISSUE 7).
+//!
+//! A [`FaultPlan`] is a fixed schedule of failures — transient read
+//! errors, worker panics, permanent worker losses and bounded stalls —
+//! keyed to *deterministic* clocks: the per-source read-call counter and
+//! the per-worker arrival (edge-index) clock.  Nothing is keyed to wall
+//! time, so a plan replays identically on any machine and no recovery
+//! test ever needs a sleep.
+//!
+//! Plans come from two places, with the explicit one winning:
+//!
+//! * **Injected** — tests and callers pass a plan directly (e.g.
+//!   `CoordinatorConfig::fault`, [`crate::graph::ingest::ByteSource`]'s
+//!   test constructor).
+//! * **Environment** — the [`FAULT_PLAN_ENV`]
+//!   (`STREAM_DESCRIPTORS_FAULT_PLAN`) variable, which is how the chaos
+//!   CI job runs the whole suite under a pinned plan.  A malformed plan
+//!   is a loud error at the consumption site, never a silently clean run.
+//!
+//! Plan syntax: semicolon-separated events.
+//!
+//! ```text
+//! read_error@N     the N-th read call of each byte source (1-based) fails
+//!                  with a transient (EINTR-class) error, once per source
+//! panic@W:T        worker W panics once when its arrival clock reaches T
+//! lose@W:T         worker W panics at EVERY life once its clock reaches T
+//!                  (defeats restart-from-checkpoint → permanent loss)
+//! stall@W:T        worker W spins a bounded yield loop at arrival T
+//! ```
+//!
+//! `read_error` events are scheduled per source so the injection point is
+//! independent of how many files a process happens to open before the
+//! stream under test.  Worker events are one-shot per armed plan
+//! ([`FaultPlan::arm`]) — after a supervised restart the worker replays
+//! past T without re-firing — except `lose`, which by design re-fires on
+//! every restart until the restart budget is exhausted.
+
+use std::io;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+
+/// Environment variable holding the process-wide fault plan.
+pub const FAULT_PLAN_ENV: &str = "STREAM_DESCRIPTORS_FAULT_PLAN";
+
+/// Number of `yield_now` rounds a `stall` event spins for (bounded by
+/// construction — a stall is a hiccup, not a hang).
+pub const STALL_YIELDS: u32 = 64;
+
+/// One scheduled failure.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultEvent {
+    /// The `nth_read`-th read call (1-based, counted per byte source)
+    /// fails with a transient error.
+    ReadError {
+        /// Which read call fails (1-based).
+        nth_read: u64,
+    },
+    /// `worker` panics once when its arrival clock reaches `at_arrival`.
+    WorkerPanic {
+        /// Worker index (0-based).
+        worker: usize,
+        /// Arrival clock value (1-based edge index) that triggers it.
+        at_arrival: u64,
+    },
+    /// `worker` panics on every life once its clock reaches `at_arrival`,
+    /// exhausting the restart budget — a permanent loss.
+    WorkerLoss {
+        /// Worker index (0-based).
+        worker: usize,
+        /// Arrival clock value (1-based edge index) that triggers it.
+        at_arrival: u64,
+    },
+    /// `worker` spins [`STALL_YIELDS`] `yield_now` rounds at `at_arrival`.
+    WorkerStall {
+        /// Worker index (0-based).
+        worker: usize,
+        /// Arrival clock value (1-based edge index) that triggers it.
+        at_arrival: u64,
+    },
+}
+
+/// A parsed, immutable fault schedule.  Arm it ([`FaultPlan::arm`] /
+/// [`FaultPlan::read_faults`]) to get the consumable runtime forms.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    events: Vec<FaultEvent>,
+}
+
+fn parse_u64(s: &str, what: &str, part: &str) -> crate::Result<u64> {
+    s.trim()
+        .parse::<u64>()
+        .map_err(|_| crate::anyhow!("fault event `{part}`: {what} `{s}` is not an integer"))
+}
+
+impl FaultPlan {
+    /// The empty plan (injecting it explicitly overrides the environment).
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    /// Build a plan from explicit events (test constructors).
+    pub fn new(events: Vec<FaultEvent>) -> FaultPlan {
+        FaultPlan { events }
+    }
+
+    /// Parse the plan syntax (see the module docs).  Empty and
+    /// whitespace-only strings parse to the empty plan; anything
+    /// malformed is a loud error naming the offending event.
+    pub fn parse(s: &str) -> crate::Result<FaultPlan> {
+        let mut events = Vec::new();
+        for part in s.split(';') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (kind, spec) = part
+                .split_once('@')
+                .ok_or_else(|| crate::anyhow!("fault event `{part}` is missing `@`"))?;
+            let event = match kind.trim() {
+                "read_error" => {
+                    let nth_read = parse_u64(spec, "read index", part)?;
+                    crate::ensure!(nth_read >= 1, "fault event `{part}`: read index is 1-based");
+                    FaultEvent::ReadError { nth_read }
+                }
+                worker_kind @ ("panic" | "lose" | "stall") => {
+                    let (w, t) = spec.split_once(':').ok_or_else(|| {
+                        crate::anyhow!("fault event `{part}` needs `{worker_kind}@worker:arrival`")
+                    })?;
+                    let worker = parse_u64(w, "worker index", part)? as usize;
+                    let at_arrival = parse_u64(t, "arrival clock", part)?;
+                    crate::ensure!(
+                        at_arrival >= 1,
+                        "fault event `{part}`: the arrival clock is 1-based"
+                    );
+                    match worker_kind {
+                        "panic" => FaultEvent::WorkerPanic { worker, at_arrival },
+                        "lose" => FaultEvent::WorkerLoss { worker, at_arrival },
+                        _ => FaultEvent::WorkerStall { worker, at_arrival },
+                    }
+                }
+                other => {
+                    return Err(crate::anyhow!(
+                        "unknown fault kind `{other}` in `{part}` \
+                         (expected read_error, panic, lose or stall)"
+                    ))
+                }
+            };
+            events.push(event);
+        }
+        Ok(FaultPlan { events })
+    }
+
+    /// Parse [`FAULT_PLAN_ENV`]; `Ok(None)` when unset or empty.
+    pub fn from_env() -> crate::Result<Option<FaultPlan>> {
+        match std::env::var(FAULT_PLAN_ENV) {
+            Ok(s) if !s.trim().is_empty() => {
+                let plan = FaultPlan::parse(&s)
+                    .map_err(|e| crate::anyhow!("{FAULT_PLAN_ENV}: {e}"))?;
+                Ok(Some(plan))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// True when no events are scheduled.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    /// The scheduled events, in plan order.
+    pub fn events(&self) -> &[FaultEvent] {
+        &self.events
+    }
+
+    /// Arm the worker-fault events for one run: one-shot flags plus an
+    /// observation counter shared across the run's workers.
+    pub fn arm(&self) -> ArmedFaults {
+        ArmedFaults {
+            events: self.events.clone(),
+            fired: self.events.iter().map(|_| AtomicBool::new(false)).collect(),
+            observed: AtomicU64::new(0),
+        }
+    }
+
+    /// The per-source read-error schedule (sorted read indices).
+    pub fn read_faults(&self) -> ReadFaults {
+        let mut schedule: Vec<u64> = self
+            .events
+            .iter()
+            .filter_map(|e| match e {
+                FaultEvent::ReadError { nth_read } => Some(*nth_read),
+                _ => None,
+            })
+            .collect();
+        schedule.sort_unstable();
+        schedule.dedup();
+        ReadFaults { schedule, next: 0, reads: 0, injected: 0 }
+    }
+}
+
+/// What a worker must do when a fault is due at its current arrival.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WorkerFault {
+    /// Panic (the supervisor catches and restarts or declares a loss).
+    Panic,
+    /// Spin [`STALL_YIELDS`] bounded `yield_now` rounds, then continue.
+    Stall,
+}
+
+/// A run's armed worker faults: thread-safe one-shot consumption.
+#[derive(Debug, Default)]
+pub struct ArmedFaults {
+    events: Vec<FaultEvent>,
+    fired: Vec<AtomicBool>,
+    observed: AtomicU64,
+}
+
+impl ArmedFaults {
+    /// Consume the fault (if any) due for `worker` at arrival clock `t`.
+    ///
+    /// `panic`/`stall` events fire exactly once per armed plan; `lose`
+    /// events fire on every call at their trigger arrival, which is what
+    /// defeats restart-from-checkpoint and forces a permanent loss.
+    pub fn worker_fault(&self, worker: usize, t: u64) -> Option<WorkerFault> {
+        for (i, ev) in self.events.iter().enumerate() {
+            let (kind, w, at, once) = match *ev {
+                FaultEvent::WorkerPanic { worker, at_arrival } => {
+                    (WorkerFault::Panic, worker, at_arrival, true)
+                }
+                FaultEvent::WorkerLoss { worker, at_arrival } => {
+                    (WorkerFault::Panic, worker, at_arrival, false)
+                }
+                FaultEvent::WorkerStall { worker, at_arrival } => {
+                    (WorkerFault::Stall, worker, at_arrival, true)
+                }
+                FaultEvent::ReadError { .. } => continue,
+            };
+            if w != worker || at != t {
+                continue;
+            }
+            if once && self.fired[i].swap(true, Ordering::Relaxed) {
+                continue; // already consumed (e.g. replay after a restart)
+            }
+            self.observed.fetch_add(1, Ordering::Relaxed);
+            return Some(kind);
+        }
+        None
+    }
+
+    /// Total worker faults triggered so far under this armed plan.
+    pub fn observed(&self) -> u64 {
+        self.observed.load(Ordering::Relaxed)
+    }
+}
+
+/// A byte source's read-error schedule: counts read calls and injects
+/// transient failures at the scheduled indices (once each).
+#[derive(Debug, Clone, Default)]
+pub struct ReadFaults {
+    schedule: Vec<u64>, // sorted, deduped 1-based read indices
+    next: usize,
+    reads: u64,
+    injected: u64,
+}
+
+impl ReadFaults {
+    /// A schedule with no injected failures.
+    pub fn none() -> ReadFaults {
+        ReadFaults::default()
+    }
+
+    /// The process environment's schedule ([`FAULT_PLAN_ENV`]); a
+    /// malformed plan is a loud `InvalidInput` error, never ignored.
+    pub fn from_env() -> io::Result<ReadFaults> {
+        match FaultPlan::from_env() {
+            Ok(Some(plan)) => Ok(plan.read_faults()),
+            Ok(None) => Ok(ReadFaults::none()),
+            Err(e) => Err(io::Error::new(io::ErrorKind::InvalidInput, e.to_string())),
+        }
+    }
+
+    /// Count one read call; `Some(transient error)` when this call is
+    /// scheduled to fail.  The caller's retry loop is expected to absorb
+    /// it exactly like a real EINTR.
+    pub fn check(&mut self) -> Option<io::Error> {
+        self.reads += 1;
+        if self.next < self.schedule.len() && self.schedule[self.next] == self.reads {
+            self.next += 1;
+            self.injected += 1;
+            return Some(io::Error::new(
+                io::ErrorKind::Interrupted,
+                format!("injected transient read fault (read call {})", self.reads),
+            ));
+        }
+        None
+    }
+
+    /// Faults injected so far.
+    pub fn injected(&self) -> u64 {
+        self.injected
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_every_event_kind() {
+        let plan =
+            FaultPlan::parse(" read_error@3 ; panic@0:500 ; lose@2:41; stall@1:7 ;").unwrap();
+        assert_eq!(
+            plan.events(),
+            &[
+                FaultEvent::ReadError { nth_read: 3 },
+                FaultEvent::WorkerPanic { worker: 0, at_arrival: 500 },
+                FaultEvent::WorkerLoss { worker: 2, at_arrival: 41 },
+                FaultEvent::WorkerStall { worker: 1, at_arrival: 7 },
+            ]
+        );
+        assert!(FaultPlan::parse("").unwrap().is_empty());
+        assert!(FaultPlan::parse("  ;  ").unwrap().is_empty());
+    }
+
+    #[test]
+    fn malformed_plans_fail_loudly() {
+        for bad in [
+            "read_error",       // no @
+            "read_error@x",     // non-integer
+            "read_error@0",     // 1-based
+            "panic@3",          // missing arrival
+            "panic@a:b",        // non-integer pair
+            "stall@0:0",        // 1-based arrival
+            "explode@1:2",      // unknown kind
+        ] {
+            let err = FaultPlan::parse(bad).unwrap_err();
+            assert!(!err.to_string().is_empty(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn panic_fires_once_lose_refires() {
+        let plan = FaultPlan::parse("panic@1:10;lose@1:20").unwrap();
+        let armed = plan.arm();
+        assert_eq!(armed.worker_fault(0, 10), None, "other worker untouched");
+        assert_eq!(armed.worker_fault(1, 9), None);
+        assert_eq!(armed.worker_fault(1, 10), Some(WorkerFault::Panic));
+        assert_eq!(armed.worker_fault(1, 10), None, "panic is one-shot");
+        // lose re-fires on every replay across its trigger arrival
+        assert_eq!(armed.worker_fault(1, 20), Some(WorkerFault::Panic));
+        assert_eq!(armed.worker_fault(1, 20), Some(WorkerFault::Panic));
+        assert_eq!(armed.observed(), 3);
+    }
+
+    #[test]
+    fn stall_consumes_once() {
+        let armed = FaultPlan::parse("stall@0:5").unwrap().arm();
+        assert_eq!(armed.worker_fault(0, 5), Some(WorkerFault::Stall));
+        assert_eq!(armed.worker_fault(0, 5), None);
+        assert_eq!(armed.observed(), 1);
+    }
+
+    #[test]
+    fn read_schedule_injects_at_exact_read_calls() {
+        let plan = FaultPlan::parse("read_error@2;read_error@4;panic@0:9").unwrap();
+        let mut reads = plan.read_faults();
+        let mut hits = Vec::new();
+        for call in 1..=6u64 {
+            if let Some(e) = reads.check() {
+                assert_eq!(e.kind(), io::ErrorKind::Interrupted);
+                hits.push(call);
+            }
+        }
+        assert_eq!(hits, vec![2, 4]);
+        assert_eq!(reads.injected(), 2);
+        // a second armed schedule replays identically (per-source arming)
+        let mut again = plan.read_faults();
+        let n = (1..=6).filter(|_| again.check().is_some()).count();
+        assert_eq!(n, 2);
+    }
+}

@@ -165,7 +165,7 @@ impl<'a> Parser<'a> {
         if !hex.iter().all(u8::is_ascii_hexdigit) {
             return Err(self.err("bad \\u escape"));
         }
-        let code = u32::from_str_radix(std::str::from_utf8(hex).unwrap(), 16)
+        let code = u32::from_str_radix(std::str::from_utf8(hex).expect("hex digits are ASCII"), 16)
             .map_err(|_| self.err("bad \\u escape"))?;
         self.pos += 4;
         Ok(code)
@@ -226,7 +226,7 @@ impl<'a> Parser<'a> {
                     // copy one UTF-8 scalar
                     let s = std::str::from_utf8(&self.b[self.pos..])
                         .map_err(|_| self.err("invalid utf-8"))?;
-                    let ch = s.chars().next().unwrap();
+                    let ch = s.chars().next().expect("validated non-empty UTF-8");
                     out.push(ch);
                     self.pos += ch.len_utf8();
                 }

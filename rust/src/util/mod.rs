@@ -1,8 +1,9 @@
 //! Self-contained substrates the offline build environment forces us to
 //! own: an error/context type ([`err`]), a PCG PRNG ([`rng`]), a JSON
 //! parser ([`json`]), a criterion-style micro-benchmark harness ([`bench`]),
-//! temp-dir helpers ([`tmp`]), NUMA topology discovery ([`topology`])
-//! and the shared SIMD dispatch-arm substrate ([`simd`]).
+//! temp-dir helpers ([`tmp`]), NUMA topology discovery ([`topology`]),
+//! the shared SIMD dispatch-arm substrate ([`simd`]) and the deterministic
+//! fault-injection plan ([`fault`]).
 //! (The image's cargo registry carries only the xla crate's build closure —
 //! no anyhow/rand/serde_json/criterion/tokio — so these are implemented
 //! from scratch and tested like everything else; the default build depends
@@ -16,6 +17,7 @@
 
 pub mod bench;
 pub mod err;
+pub mod fault;
 pub mod json;
 pub mod par;
 pub mod rng;

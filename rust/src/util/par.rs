@@ -32,7 +32,7 @@ where
                     break;
                 }
                 let r = f(i, &items[i]);
-                **slots[i].lock().unwrap() = Some(r);
+                **slots[i].lock().expect("worker slot mutex poisoned") = Some(r);
             });
         }
     });

@@ -1,0 +1,272 @@
+//! ISSUE 7 differential proof, run as a blocking CI job (`chaos`):
+//!
+//! 1. a run resumed from a checkpoint at edge index `k` is **bit-for-bit
+//!    identical** to the uninterrupted run — for all three descriptors,
+//!    through both the direct runner and the pipeline;
+//! 2. killing `K` of `W` workers still completes, flags
+//!    `health.degraded`, and the arrival-weighted merge of the survivors
+//!    stays within the documented tolerance (exact budgets ⇒ float
+//!    rounding only, ≤ 1e-9 relative — see DESIGN.md §10).
+//!
+//! Every pipeline test injects an explicit [`FaultPlan`] (possibly the
+//! empty one): an injected plan always overrides
+//! `STREAM_DESCRIPTORS_FAULT_PLAN`, so this suite stays deterministic
+//! under the chaos job's environment plans.  No sleeps, no flakes: fault
+//! triggers are arrival-clock comparisons, nothing times anything.
+
+use stream_descriptors::checkpoint::{resume_direct, run_direct, DirectConfig};
+use stream_descriptors::coordinator::{
+    run_pipeline, CoordinatorConfig, DescriptorKind, WorkerEstimate,
+};
+use stream_descriptors::gen;
+use stream_descriptors::graph::stream::VecStream;
+use stream_descriptors::graph::Graph;
+use stream_descriptors::sampling::{WindowConfig, WindowPolicy};
+use stream_descriptors::util::fault::FaultPlan;
+use stream_descriptors::util::rng::Pcg64;
+use stream_descriptors::util::tmp::TempDir;
+
+const KINDS: [DescriptorKind; 3] = [
+    DescriptorKind::Gabe,
+    DescriptorKind::Maeve,
+    DescriptorKind::Santa { exact_wedges: false },
+];
+
+fn test_graph() -> Graph {
+    gen::powerlaw_cluster_graph(180, 3, 0.5, &mut Pcg64::seed_from_u64(41))
+}
+
+fn assert_bit_identical(a: &WorkerEstimate, b: &WorkerEstimate, what: &str) {
+    match (a, b) {
+        (WorkerEstimate::Gabe(x), WorkerEstimate::Gabe(y)) => {
+            for (p, q) in x.counts.iter().zip(&y.counts) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{what}: {p} vs {q}");
+            }
+        }
+        (WorkerEstimate::Maeve(x), WorkerEstimate::Maeve(y)) => {
+            let xs = x.triangles.iter().chain(&x.paths);
+            let ys = y.triangles.iter().chain(&y.paths);
+            for (p, q) in xs.zip(ys) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{what}: {p} vs {q}");
+            }
+        }
+        (WorkerEstimate::Santa(x), WorkerEstimate::Santa(y)) => {
+            for (p, q) in x.traces.iter().zip(&y.traces) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{what}: {p} vs {q}");
+            }
+        }
+        _ => panic!("{what}: descriptor kinds differ"),
+    }
+}
+
+fn assert_close(a: &WorkerEstimate, b: &WorkerEstimate, rel: f64, what: &str) {
+    let pairs: (Vec<f64>, Vec<f64>) = match (a, b) {
+        (WorkerEstimate::Gabe(x), WorkerEstimate::Gabe(y)) => {
+            (x.counts.to_vec(), y.counts.to_vec())
+        }
+        (WorkerEstimate::Maeve(x), WorkerEstimate::Maeve(y)) => (
+            x.triangles.iter().chain(&x.paths).copied().collect(),
+            y.triangles.iter().chain(&y.paths).copied().collect(),
+        ),
+        (WorkerEstimate::Santa(x), WorkerEstimate::Santa(y)) => {
+            (x.traces.to_vec(), y.traces.to_vec())
+        }
+        _ => panic!("{what}: descriptor kinds differ"),
+    };
+    for (p, q) in pairs.0.iter().zip(&pairs.1) {
+        assert!((p - q).abs() <= rel * q.abs().max(1.0), "{what}: {p} vs {q}");
+    }
+}
+
+/// Differential proof 1a, pipeline: interrupt at ~2/3 of the stream with
+/// checkpoints on, resume from the file, and land bit-for-bit on the
+/// uninterrupted run — all three descriptors, sliding window included.
+#[test]
+fn pipeline_resume_is_bit_identical_for_every_descriptor() {
+    let g = test_graph();
+    let m = g.m() as u64;
+    for kind in KINDS {
+        let dir = TempDir::new("ft-pipe").unwrap();
+        let ckpt = dir.path().join("run.sdc");
+        let base = CoordinatorConfig {
+            workers: 2,
+            budget: g.m() / 3,
+            chunk_size: 16,
+            queue_depth: 2,
+            seed: 29,
+            window: WindowConfig {
+                policy: WindowPolicy::Sliding { w: g.m() / 2 },
+                stride: 0,
+            },
+            fault: Some(FaultPlan::none()),
+            ..Default::default()
+        };
+
+        let mut s = VecStream::shuffled(g.edges.clone(), 7);
+        let full = run_pipeline(&mut s, kind, &base).unwrap();
+
+        let interrupted = CoordinatorConfig {
+            checkpoint_every: m / 4,
+            checkpoint_path: Some(ckpt.clone()),
+            stop_after: 2 * m / 3,
+            ..base.clone()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 7);
+        let partial = run_pipeline(&mut s, kind, &interrupted).unwrap();
+        assert!(partial.health.checkpoints_written >= 1, "{kind:?}: {:?}", partial.health);
+
+        let resumed_cfg = CoordinatorConfig { resume: Some(ckpt), ..base.clone() };
+        let mut s = VecStream::shuffled(g.edges.clone(), 7);
+        let resumed = run_pipeline(&mut s, kind, &resumed_cfg).unwrap();
+        assert_eq!(resumed.edges, m, "{kind:?}");
+        assert_bit_identical(&full.averaged, &resumed.averaged, "averaged");
+        for (i, (a, b)) in full.per_worker.iter().zip(&resumed.per_worker).enumerate() {
+            assert_bit_identical(a, b, &format!("{kind:?} worker {i}"));
+        }
+    }
+}
+
+/// Differential proof 1b, direct runner: same contract without a
+/// coordinator in the loop (the checkpoint carries the single sequential
+/// estimator + stream cursor).
+#[test]
+fn direct_resume_is_bit_identical_for_every_descriptor() {
+    let g = test_graph();
+    let m = g.m() as u64;
+    for kind in KINDS {
+        let dir = TempDir::new("ft-direct").unwrap();
+        let ckpt = dir.path().join("run.sdc");
+        let plain = DirectConfig {
+            kind,
+            budget: g.m() / 3,
+            seed: 29,
+            ..Default::default()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 7);
+        let full = run_direct(&mut s, &plain).unwrap();
+
+        let ckpting = DirectConfig {
+            checkpoint_every: (m / 3).max(1),
+            checkpoint_path: Some(ckpt.clone()),
+            ..plain.clone()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 7);
+        let with_ckpts = run_direct(&mut s, &ckpting).unwrap();
+        assert!(with_ckpts.checkpoints_written >= 1, "{kind:?}");
+        assert_bit_identical(&full.estimate, &with_ckpts.estimate, "checkpointing perturbed");
+
+        let mut s = VecStream::shuffled(g.edges.clone(), 7);
+        let resumed = resume_direct(&mut s, &ckpt, &plain).unwrap();
+        let at = resumed.resumed_at.expect("must resume mid-stream");
+        assert!(at > 0 && at < m, "{kind:?}: resumed at {at} of {m}");
+        assert_bit_identical(&full.estimate, &resumed.estimate, "resume diverged");
+    }
+}
+
+/// Differential proof 2: kill 1 of 3 workers (a `lose` fault re-fires on
+/// every restart, exhausting the budget).  The run completes, is flagged
+/// degraded, and — with exact budgets, where every worker's estimate is
+/// the census — the survivors' weighted merge matches the clean run's
+/// average to float rounding.
+#[test]
+fn degraded_run_completes_within_documented_tolerance() {
+    let g = test_graph();
+    for kind in KINDS {
+        let base = CoordinatorConfig {
+            workers: 3,
+            budget: g.m(),
+            chunk_size: 32,
+            queue_depth: 2,
+            seed: 31,
+            max_restarts: 1,
+            fault: Some(FaultPlan::none()),
+            ..Default::default()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 11);
+        let clean = run_pipeline(&mut s, kind, &base).unwrap();
+        assert!(!clean.health.degraded);
+
+        let lossy = CoordinatorConfig {
+            fault: Some(FaultPlan::parse("lose@1:401").unwrap()),
+            ..base.clone()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 11);
+        let degraded = run_pipeline(&mut s, kind, &lossy).unwrap();
+        assert!(degraded.health.degraded, "{kind:?}");
+        assert_eq!(degraded.health.lost_workers, vec![1], "{kind:?}");
+        assert_eq!(degraded.per_worker.len(), 2, "{kind:?}: survivors only");
+        assert!(degraded.health.faults_injected >= 2, "{kind:?}: lose re-fires on replay");
+        assert_close(&degraded.averaged, &clean.averaged, 1e-9, &format!("{kind:?}"));
+    }
+}
+
+/// A one-shot panic is absorbed: restore + replay reproduces the
+/// fault-free run bit-for-bit, and the health report says exactly one
+/// restart happened.
+#[test]
+fn absorbed_panic_reproduces_the_clean_run() {
+    let g = test_graph();
+    let at = g.m() as u64 / 2;
+    let base = CoordinatorConfig {
+        workers: 2,
+        budget: g.m() / 4,
+        chunk_size: 64,
+        queue_depth: 2,
+        seed: 37,
+        fault: Some(FaultPlan::none()),
+        ..Default::default()
+    };
+    let mut s = VecStream::shuffled(g.edges.clone(), 13);
+    let clean = run_pipeline(&mut s, DescriptorKind::Gabe, &base).unwrap();
+
+    let plan = FaultPlan::parse(&format!("panic@0:{at}; stall@1:{at}")).unwrap();
+    let faulty_cfg = CoordinatorConfig { fault: Some(plan), ..base.clone() };
+    let mut s = VecStream::shuffled(g.edges.clone(), 13);
+    let faulty = run_pipeline(&mut s, DescriptorKind::Gabe, &faulty_cfg).unwrap();
+    assert_eq!(faulty.health.restarts, 1);
+    assert_eq!(faulty.health.faults_injected, 2);
+    assert!(!faulty.health.degraded);
+    assert_bit_identical(&clean.averaged, &faulty.averaged, "absorbed panic");
+}
+
+/// Corrupt checkpoints are rejected loudly on resume, never half-loaded:
+/// flip one byte in the body and the pipeline refuses the document by
+/// checksum before any worker starts.
+#[test]
+fn pipeline_rejects_a_corrupt_checkpoint() {
+    let g = test_graph();
+    let m = g.m() as u64;
+    let dir = TempDir::new("ft-corrupt").unwrap();
+    let ckpt = dir.path().join("run.sdc");
+    let cfg = CoordinatorConfig {
+        workers: 2,
+        budget: g.m() / 3,
+        chunk_size: 16,
+        queue_depth: 2,
+        seed: 43,
+        checkpoint_every: m / 3,
+        checkpoint_path: Some(ckpt.clone()),
+        stop_after: 2 * m / 3,
+        fault: Some(FaultPlan::none()),
+        ..Default::default()
+    };
+    let mut s = VecStream::shuffled(g.edges.clone(), 17);
+    run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).unwrap();
+
+    let mut bytes = std::fs::read(&ckpt).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&ckpt, &bytes).unwrap();
+
+    let resume_cfg = CoordinatorConfig {
+        checkpoint_every: 0,
+        checkpoint_path: None,
+        stop_after: 0,
+        resume: Some(ckpt),
+        ..cfg.clone()
+    };
+    let mut s = VecStream::shuffled(g.edges.clone(), 17);
+    let err = run_pipeline(&mut s, DescriptorKind::Gabe, &resume_cfg)
+        .expect_err("corrupt checkpoint must be rejected");
+    assert!(err.to_string().contains("checksum"), "{err}");
+}
