@@ -1,0 +1,77 @@
+//! Backend head-to-head bench (ISSUE 8): per-edge throughput of the
+//! reservoir estimators vs their sketch-backed counterparts, same
+//! streams, same seeds.  The sketch path replaces reservoir
+//! bookkeeping + subgraph enumeration with O(1) bucket updates, so
+//! this is the wall-clock side of the accuracy-vs-memory trade that
+//! `repro sketch` measures.
+//!
+//! Ids are `<backend>/<net>/<desc>` (e.g. `sketch/plc/gabe`);
+//! `-- --json <dir>` writes `BENCH_sketch.json` for the CI perf
+//! trajectory, `-- --filter reservoir/` limits the run.
+
+use std::process::ExitCode;
+
+use stream_descriptors::descriptors::santa::SantaEstimator;
+use stream_descriptors::descriptors::{gabe::GabeEstimator, maeve::MaeveEstimator};
+use stream_descriptors::gen;
+use stream_descriptors::graph::stream::{EdgeStream, VecStream};
+use stream_descriptors::graph::Graph;
+use stream_descriptors::sampling::{Backend, EstimatorConfig};
+use stream_descriptors::util::bench::{BenchArgs, Bencher};
+use stream_descriptors::util::rng::Pcg64;
+
+fn families() -> Vec<(&'static str, Graph)> {
+    let mut rng = Pcg64::seed_from_u64(2);
+    vec![
+        ("er", gen::er_graph(20_000, 60_000, &mut rng)),
+        ("plc", gen::powerlaw_cluster_graph(20_000, 4, 0.5, &mut rng)),
+    ]
+}
+
+fn main() -> ExitCode {
+    let args = BenchArgs::parse("sketch");
+    let mut b = Bencher::new(1, 5);
+    if args.smoke {
+        println!("sketch: smoke mode, skipping timed runs");
+        return args.finish("sketch", &b);
+    }
+    for (name, g) in families() {
+        let m = g.m() as u64;
+        let budget = g.m() / 5;
+        let backends = [
+            ("reservoir", Backend::Reservoir),
+            ("sketch", Backend::sketch_default()),
+        ];
+        for (bname, backend) in backends {
+            let cfg = EstimatorConfig::new(budget).with_seed(3).with_backend(backend);
+            let id = format!("{bname}/{name}/gabe");
+            if args.matches(&id) {
+                let mut s = VecStream::shuffled(g.edges.clone(), 7);
+                let cfg = cfg.clone();
+                b.bench(id, Some(m), || {
+                    s.reset();
+                    GabeEstimator::from_config(cfg.clone()).run(&mut s).ne
+                });
+            }
+            let id = format!("{bname}/{name}/maeve");
+            if args.matches(&id) {
+                let mut s = VecStream::shuffled(g.edges.clone(), 7);
+                let cfg = cfg.clone();
+                b.bench(id, Some(m), || {
+                    s.reset();
+                    MaeveEstimator::from_config(cfg.clone()).run(&mut s).nv
+                });
+            }
+            let id = format!("{bname}/{name}/santa");
+            if args.matches(&id) {
+                let mut s = VecStream::shuffled(g.edges.clone(), 7);
+                let cfg = cfg.clone();
+                b.bench(id, Some(2 * m), || {
+                    s.reset();
+                    SantaEstimator::from_config(cfg.clone()).run(&mut s).traces[4]
+                });
+            }
+        }
+    }
+    args.finish("sketch", &b)
+}

@@ -1,11 +1,5 @@
 //! Analysis utilities: distance/error metrics (§5.1) and t-SNE (§5.4).
 
-// Rustdoc sweep status (ISSUE 5): the crate-level
-// `#![warn(missing_docs)]` is gated off here until this module gets
-// its own documentation pass; sampling/descriptors/coordinator/graph
-// are fully swept.
-#![allow(missing_docs)]
-
 pub mod tsne;
 
 /// Canberra distance Σ |x−y| / (|x|+|y|), 0/0 → 0 (GABE/MAEVE error metric).

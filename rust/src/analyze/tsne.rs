@@ -9,9 +9,15 @@ use crate::util::rng::Pcg64;
 /// t-SNE configuration.
 #[derive(Debug, Clone)]
 pub struct TsneConfig {
+    /// Target perplexity of the conditional distributions (clamped to
+    /// `(n − 1) / 3` for tiny inputs).
     pub perplexity: f64,
+    /// Gradient-descent iterations (the first 100 run with early
+    /// exaggeration ×4).
     pub iterations: usize,
+    /// Gradient step size.
     pub learning_rate: f64,
+    /// Seed for the initial layout.
     pub seed: u64,
 }
 

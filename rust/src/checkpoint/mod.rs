@@ -36,14 +36,16 @@ use std::sync::Arc;
 use crate::coordinator::{santa_pass1, DescriptorKind, WorkerEstimate, WorkerState};
 use crate::graph::stream::EdgeStream;
 use crate::graph::Edge;
-use crate::sampling::WindowConfig;
+use crate::sampling::{Backend, EstimatorConfig, WindowConfig};
 
 /// `.sdc` magic: non-ASCII lead byte (like PNG / `.sdg`) so no text tool
 /// mistakes a checkpoint for an edge list.
 pub const MAGIC: [u8; 4] = [0x89, b'S', b'D', b'C'];
 
 /// Current format version; readers reject anything else by name.
-pub const VERSION: u16 = 1;
+/// Version 2 added the estimation-backend echo and sketch state (ISSUE
+/// 8); version 1 documents predate it and are rejected by name.
+pub const VERSION: u16 = 2;
 
 /// Batch size for the direct runner's stream drain (not semantically
 /// load-bearing: batching never changes push order).
@@ -253,6 +255,9 @@ pub struct CheckpointDoc {
     pub seed: u64,
     /// Window policy + snapshot cadence of the run.
     pub window: WindowConfig,
+    /// Estimation backend of the run (ISSUE 8); the state blobs carry
+    /// matching reservoir or sketch bytes.
+    pub backend: Backend,
     /// Pipeline worker count; `0` marks a direct run.
     pub workers: u32,
     /// Edges consumed from the stream when the checkpoint was taken;
@@ -282,6 +287,7 @@ impl CheckpointDoc {
         out.usize(self.budget);
         out.u64(self.seed);
         self.window.save(&mut out);
+        self.backend.save(&mut out);
         out.u32(self.workers);
         out.u64(self.cursor);
         match &self.degrees {
@@ -325,6 +331,11 @@ impl CheckpointDoc {
         let mut d = Dec::new(&payload[4..]);
         let version = d.u16()?;
         crate::ensure!(
+            version != 1,
+            "checkpoint version 1 predates the estimation-backend echo (ISSUE 8); \
+             re-create the checkpoint with this build"
+        );
+        crate::ensure!(
             version == VERSION,
             "checkpoint version {version} is not supported (this build reads {VERSION})"
         );
@@ -352,6 +363,7 @@ impl CheckpointDoc {
         crate::ensure!(budget >= 1, "checkpoint budget must be ≥ 1 (got 0)");
         let seed = d.u64()?;
         let window = WindowConfig::load(&mut d)?;
+        let backend = Backend::load(&mut d)?;
         let workers = d.u32()?;
         let cursor = d.u64()?;
         let degrees = match d.u8()? {
@@ -390,7 +402,7 @@ impl CheckpointDoc {
             states.push(StateBlob { arrivals, bytes: blob });
         }
         d.finish()?;
-        Ok(CheckpointDoc { kind, budget, seed, window, workers, cursor, degrees, states })
+        Ok(CheckpointDoc { kind, budget, seed, window, backend, workers, cursor, degrees, states })
     }
 
     /// Write the document atomically: encode, write + fsync a sibling
@@ -431,6 +443,7 @@ impl CheckpointDoc {
         budget: usize,
         seed: u64,
         window: &WindowConfig,
+        backend: Backend,
         workers: u32,
     ) -> crate::Result<()> {
         crate::ensure!(
@@ -452,6 +465,11 @@ impl CheckpointDoc {
             self.window == *window,
             "checkpoint window is {:?}, resume requested {window:?}",
             self.window
+        );
+        crate::ensure!(
+            self.backend == backend,
+            "checkpoint backend is {}, resume requested {backend}",
+            self.backend
         );
         crate::ensure!(
             self.workers == workers,
@@ -478,6 +496,10 @@ pub struct DirectConfig {
     pub seed: u64,
     /// Window policy + snapshot cadence.
     pub window: WindowConfig,
+    /// Estimation backend (ISSUE 8).  Unlike the pipeline, a direct
+    /// sketch run supports both snapshot strides and checkpoint/resume:
+    /// there is a single state and a single arrival clock.
+    pub backend: Backend,
     /// Write a checkpoint every this many arrivals (`0` = off).
     pub checkpoint_every: u64,
     /// Where checkpoints go (each write atomically replaces the file);
@@ -492,6 +514,7 @@ impl Default for DirectConfig {
             budget: 100_000,
             seed: 0xc00d,
             window: WindowConfig::default(),
+            backend: Backend::Reservoir,
             checkpoint_every: 0,
             checkpoint_path: None,
         }
@@ -502,11 +525,15 @@ impl DirectConfig {
     /// Check every knob before touching the stream.
     pub fn validate(&self) -> crate::Result<()> {
         crate::ensure!(self.budget >= 1, "budget must be ≥ 1 (got 0)");
-        self.window.validate()?;
+        self.estimator_config().validate()?;
         if let DescriptorKind::Santa { exact_wedges: true } = self.kind {
             crate::ensure!(
                 !self.window.policy.is_windowed(),
                 "santa exact_wedges is incompatible with a windowed run"
+            );
+            crate::ensure!(
+                !self.backend.is_sketch(),
+                "santa exact_wedges is incompatible with the sketch backend"
             );
         }
         if self.checkpoint_every > 0 {
@@ -516,6 +543,14 @@ impl DirectConfig {
             );
         }
         Ok(())
+    }
+
+    /// The shared estimator config this direct run drives (ISSUE 8).
+    pub(crate) fn estimator_config(&self) -> EstimatorConfig {
+        EstimatorConfig::new(self.budget)
+            .with_seed(self.seed)
+            .with_window(self.window)
+            .with_backend(self.backend)
     }
 }
 
@@ -547,7 +582,7 @@ pub fn run_direct(
         DescriptorKind::Santa { .. } => Some(santa_pass1(stream, DIRECT_CHUNK)?),
         _ => None,
     };
-    let state = WorkerState::new(cfg.kind, cfg.budget, cfg.seed, cfg.window, &degrees);
+    let state = WorkerState::new(cfg.kind, &cfg.estimator_config(), &degrees);
     drive(stream, state, degrees, cfg, 0, None)
 }
 
@@ -569,7 +604,7 @@ pub fn resume_direct(
          pipeline with matching --workers, not a direct run",
         doc.workers
     );
-    doc.ensure_matches(cfg.kind, cfg.budget, cfg.seed, &cfg.window, 0)
+    doc.ensure_matches(cfg.kind, cfg.budget, cfg.seed, &cfg.window, cfg.backend, 0)
         .map_err(|e| e.context(path.display().to_string()))?;
     let blob = &doc.states[0];
     let mut d = Dec::new(&blob.bytes);
@@ -652,6 +687,7 @@ fn write_direct_checkpoint(
         budget: cfg.budget,
         seed: cfg.seed,
         window: cfg.window,
+        backend: cfg.backend,
         workers: 0,
         cursor: t,
         degrees: degrees.clone(),
@@ -776,6 +812,7 @@ mod tests {
             budget: 512,
             seed: 0xfeed,
             window: WindowConfig::new(WindowPolicy::Sliding { w: 100 }).with_stride(25),
+            backend: Backend::Sketch { width: 16, depth: 2 },
             workers: 2,
             cursor: 1234,
             degrees: Some(Arc::new(vec![3, 1, 4, 1, 5])),
@@ -809,12 +846,20 @@ mod tests {
         assert!(err.to_string().contains("magic"), "{err}");
         // future version (checksum refreshed so the version check fires)
         let mut bad = good.clone();
-        bad[4] = 2;
+        bad[4] = 3;
         let sum = fnv1a64(&bad[..bad.len() - 8]).to_le_bytes();
         let n = bad.len();
         bad[n - 8..].copy_from_slice(&sum);
         let err = CheckpointDoc::from_bytes(&bad).unwrap_err();
-        assert!(err.to_string().contains("version 2"), "{err}");
+        assert!(err.to_string().contains("version 3"), "{err}");
+        // version 1 predates the backend echo and is rejected by name
+        let mut bad = good.clone();
+        bad[4] = 1;
+        let sum = fnv1a64(&bad[..bad.len() - 8]).to_le_bytes();
+        let n = bad.len();
+        bad[n - 8..].copy_from_slice(&sum);
+        let err = CheckpointDoc::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("backend echo"), "{err}");
         // nonzero flags
         let mut bad = good.clone();
         bad[6] = 1;
@@ -930,6 +975,13 @@ mod tests {
                 },
                 "window",
             ),
+            (
+                DirectConfig {
+                    backend: Backend::Sketch { width: 16, depth: 2 },
+                    ..base.clone()
+                },
+                "backend",
+            ),
         ] {
             let err = resume_with(&mutant).unwrap_err();
             assert!(err.to_string().contains(named), "{named}: {err}");
@@ -948,6 +1000,7 @@ mod tests {
             budget: 40,
             seed: 5,
             window: WindowConfig::default(),
+            backend: Backend::Reservoir,
             cursor: 1,
             states: vec![
                 StateBlob { arrivals: 1, bytes: vec![0] },

@@ -57,7 +57,7 @@ use crate::descriptors::maeve::{MaeveEstimate, MaeveState};
 use crate::descriptors::santa::{SantaConfig, SantaEstimate, SantaPass2};
 use crate::graph::stream::EdgeStream;
 use crate::graph::Edge;
-use crate::sampling::WindowConfig;
+use crate::sampling::{Backend, EstimatorConfig, WindowConfig};
 use crate::util::fault::{ArmedFaults, FaultPlan, WorkerFault, STALL_YIELDS};
 use crate::util::topology::Topology;
 
@@ -127,6 +127,14 @@ pub struct CoordinatorConfig {
     /// run to end of stream).  Test/ops knob: combined with
     /// `checkpoint_every` it simulates an interrupted run to resume.
     pub stop_after: u64,
+    /// Estimation backend every worker runs on (ISSUE 8).  With
+    /// [`Backend::Sketch`] the master *shards* the stream round-robin
+    /// instead of broadcasting it — each edge reaches exactly one worker
+    /// — and merges the workers' bucket matrices entrywise at the end,
+    /// which is bit-identical to a single-state run over the whole
+    /// stream.  All sketch workers share the base [`Self::seed`] so
+    /// their hash parameters (and hence their matrices) are mergeable.
+    pub backend: Backend,
 }
 
 impl Default for CoordinatorConfig {
@@ -146,6 +154,7 @@ impl Default for CoordinatorConfig {
             checkpoint_path: None,
             resume: None,
             stop_after: 0,
+            backend: Backend::Reservoir,
         }
     }
 }
@@ -175,7 +184,29 @@ impl CoordinatorConfig {
             );
         }
         self.window.validate()?;
+        if self.backend.is_sketch() {
+            self.estimator_config(self.seed).validate()?;
+            crate::ensure!(
+                self.window.stride == 0,
+                "the sketch pipeline shards the stream, so workers disagree on \
+                 arrival clocks — snapshot barriers (window stride) are unavailable"
+            );
+            crate::ensure!(
+                self.checkpoint_every == 0 && self.resume.is_none(),
+                "the sketch pipeline shards the stream, so workers have no common \
+                 barrier to checkpoint at — use a direct run for checkpoint/resume"
+            );
+        }
         Ok(())
+    }
+
+    /// The shared per-worker estimator config (ISSUE 8) for a worker
+    /// running with `seed`.
+    pub(crate) fn estimator_config(&self, seed: u64) -> EstimatorConfig {
+        EstimatorConfig::new(self.budget)
+            .with_seed(seed)
+            .with_window(self.window)
+            .with_backend(self.backend)
     }
 }
 
@@ -201,28 +232,31 @@ impl WorkerState {
     /// sample-graph arenas are first-touched on the worker's own node.
     pub(crate) fn new(
         kind: DescriptorKind,
-        budget: usize,
-        seed: u64,
-        window: WindowConfig,
+        est: &EstimatorConfig,
         degrees: &Option<Arc<Vec<u32>>>,
     ) -> Self {
         match kind {
-            DescriptorKind::Gabe => {
-                WorkerState::Gabe(GabeState::with_window(budget, seed, window))
-            }
-            DescriptorKind::Maeve => {
-                WorkerState::Maeve(MaeveState::with_window(budget, seed, window))
-            }
+            DescriptorKind::Gabe => WorkerState::Gabe(GabeState::from_config(est)),
+            DescriptorKind::Maeve => WorkerState::Maeve(MaeveState::from_config(est)),
             DescriptorKind::Santa { exact_wedges } => {
-                let scfg = SantaConfig::new(budget)
-                    .with_seed(seed)
-                    .with_exact_wedges(exact_wedges)
-                    .with_window(window);
+                let scfg = SantaConfig::from(est.clone()).with_exact_wedges(exact_wedges);
                 WorkerState::Santa(SantaPass2::new(
                     scfg,
                     degrees.clone().expect("santa needs pass-1 degrees"),
                 ))
             }
+        }
+    }
+
+    /// Fold another worker's state into this one (sketch backend only —
+    /// reservoir states are not mergeable and error by name).  Exact:
+    /// bucket matrices and degree tallies add entrywise in integers.
+    pub(crate) fn merge_from(&mut self, other: &WorkerState) -> crate::Result<()> {
+        match (self, other) {
+            (WorkerState::Gabe(a), WorkerState::Gabe(b)) => a.merge_from(b),
+            (WorkerState::Maeve(a), WorkerState::Maeve(b)) => a.merge_from(b),
+            (WorkerState::Santa(a), WorkerState::Santa(b)) => a.merge_from(b),
+            _ => Err(crate::anyhow!("worker merge: descriptor kinds differ")),
         }
     }
 
@@ -515,6 +549,29 @@ fn weighted_average(per_worker: &[WorkerEstimate], arrivals: &[u64]) -> WorkerEs
     }
 }
 
+/// Decode the survivors' shipped sketch states and fold them into one
+/// estimate (ISSUE 8).  Entrywise bucket addition commutes, so on a
+/// clean run the merged state — and hence the estimate — is bit-for-bit
+/// what a direct single-state run over the same stream produces.
+fn merge_sketch_states(
+    kind: DescriptorKind,
+    blobs: &[Vec<u8>],
+    degrees: &Option<Arc<Vec<u32>>>,
+) -> crate::Result<WorkerEstimate> {
+    let mut merged: Option<WorkerState> = None;
+    for bytes in blobs {
+        let mut d = Dec::new(bytes);
+        let state = WorkerState::load(kind, &mut d, degrees)?;
+        d.finish()?;
+        match &mut merged {
+            None => merged = Some(state),
+            Some(m) => m.merge_from(&state)?,
+        }
+    }
+    let merged = merged.ok_or_else(|| crate::anyhow!("no worker states to merge"))?;
+    Ok(merged.into_results().1)
+}
+
 /// How one supervised worker thread ended: `Done` carries the estimate
 /// (plus how many edges it integrated — the weight of its vote in a
 /// degraded merge), `Lost` means the restart budget ran out and the
@@ -526,6 +583,9 @@ enum WorkerExit {
         arrivals: u64,
         snaps: Vec<(u64, WorkerEstimate)>,
         last: WorkerEstimate,
+        /// Serialized full state, shipped only in sketch mode — the
+        /// master decodes and merges these instead of averaging `last`.
+        state: Option<Vec<u8>>,
     },
     Lost {
         pinned: bool,
@@ -636,6 +696,7 @@ impl CkptCollector<'_> {
             budget: self.cfg.budget,
             seed: self.cfg.seed,
             window: self.cfg.window,
+            backend: self.cfg.backend,
             workers: self.cfg.workers as u32,
             cursor: t,
             degrees: self.degrees.clone(),
@@ -695,7 +756,12 @@ pub fn run_pipeline(
             !cfg.window.policy.is_windowed(),
             "coordinator config: santa exact_wedges is incompatible with a windowed run"
         );
+        crate::ensure!(
+            !cfg.backend.is_sketch(),
+            "coordinator config: santa exact_wedges is incompatible with the sketch backend"
+        );
     }
+    let sketch_mode = cfg.backend.is_sketch();
     let start = Instant::now();
 
     // fault schedule: an injected plan wins, else the environment (how
@@ -713,7 +779,7 @@ pub fn run_pipeline(
     let resume_doc = match &cfg.resume {
         Some(path) => {
             let doc = CheckpointDoc::read_from(path)?;
-            doc.ensure_matches(kind, cfg.budget, cfg.seed, &cfg.window, cfg.workers as u32)
+            doc.ensure_matches(kind, cfg.budget, cfg.seed, &cfg.window, cfg.backend, cfg.workers as u32)
                 .map_err(|e| e.context(format!("resuming {}", path.display())))?;
             for (wid, blob) in doc.states.iter().enumerate() {
                 (|| -> crate::Result<()> {
@@ -771,15 +837,27 @@ pub fn run_pipeline(
     let (exits, fan_stats, ckpt_written) = std::thread::scope(
         |scope| -> crate::Result<ScopeOut> {
             let mut fan = Fanout::new(topo.nodes.len());
+            // sketch mode: chunks go to one worker each (round-robin
+            // shards) over these senders instead of through the fan-out
+            let mut shard_txs: Vec<SyncSender<Arc<[Edge]>>> = Vec::new();
             let (ckpt_tx, ckpt_rx) = channel::<(usize, u64, Vec<u8>)>();
             let mut handles = Vec::with_capacity(cfg.workers);
             for (wid, slot) in slots.iter().enumerate() {
                 let (tx, rx): (SyncSender<Arc<[Edge]>>, Receiver<Arc<[Edge]>>) =
                     sync_channel(cfg.queue_depth);
-                fan.add_worker(slot.node, tx);
-                let seed = cfg.seed ^ (wid as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15);
-                let budget = cfg.budget;
-                let window = cfg.window;
+                if sketch_mode {
+                    shard_txs.push(tx);
+                } else {
+                    fan.add_worker(slot.node, tx);
+                }
+                // sketch workers keep the BASE seed: merging requires
+                // identical hash parameters across all shards
+                let seed = if sketch_mode {
+                    cfg.seed
+                } else {
+                    cfg.seed ^ (wid as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                };
+                let est = cfg.estimator_config(seed);
                 let degrees = degrees.clone();
                 let cpu = slot.cpu;
                 let armed = Arc::clone(&armed);
@@ -790,7 +868,7 @@ pub fn run_pipeline(
                     // reservoir + arena pages on this worker's node
                     let pinned = cpu.is_some_and(placement::pin_current_thread);
                     let mut state = match &resume_blob {
-                        None => WorkerState::new(kind, budget, seed, window, &degrees),
+                        None => WorkerState::new(kind, &est, &degrees),
                         Some(blob) => {
                             let mut d = Dec::new(blob);
                             WorkerState::load(kind, &mut d, &degrees)
@@ -870,8 +948,15 @@ pub fn run_pipeline(
                             }
                         }
                     }
+                    let shipped = if sketch_mode {
+                        let mut enc = Enc::new();
+                        state.save(&mut enc);
+                        Some(enc.into_bytes())
+                    } else {
+                        None
+                    };
                     let (snaps, last) = state.into_results();
-                    WorkerExit::Done { pinned, restarts, arrivals: t, snaps, last }
+                    WorkerExit::Done { pinned, restarts, arrivals: t, snaps, last, state: shipped }
                 }));
             }
             drop(ckpt_tx); // workers hold the only senders now
@@ -892,6 +977,21 @@ pub fn run_pipeline(
             // after a worker died — stop streaming and let the joins below
             // report the loss); drain checkpoint blobs between broadcasts
             let mut staging: Vec<Edge> = Vec::with_capacity(cfg.chunk_size);
+            let mut shard_next = 0usize;
+            let mut shard_chunks = 0u64;
+            // shard mode: ship the staged chunk to exactly one worker,
+            // round-robin (one replica — each edge reaches one state)
+            let shard = |staging: &mut Vec<Edge>,
+                         next: &mut usize,
+                         chunks: &mut u64,
+                         txs: &[SyncSender<Arc<[Edge]>>]| {
+                let chunk: Arc<[Edge]> = Arc::from(staging.as_slice());
+                staging.clear();
+                *chunks += 1;
+                let tx = &txs[*next % txs.len()];
+                *next += 1;
+                tx.send(chunk).is_ok()
+            };
             loop {
                 let mut want = cfg.chunk_size - staging.len();
                 if cfg.stop_after > 0 {
@@ -900,8 +1000,15 @@ pub fn run_pipeline(
                 }
                 let got = if want == 0 { 0 } else { stream.next_batch(&mut staging, want) };
                 edges += got as u64;
-                if staging.len() >= cfg.chunk_size && !fan.broadcast(&mut staging) {
-                    break;
+                if staging.len() >= cfg.chunk_size {
+                    let sent = if sketch_mode {
+                        shard(&mut staging, &mut shard_next, &mut shard_chunks, &shard_txs)
+                    } else {
+                        fan.broadcast(&mut staging)
+                    };
+                    if !sent {
+                        break;
+                    }
                 }
                 for (wid, t, blob) in ckpt_rx.try_iter() {
                     if let Err(e) = collector.offer(wid, t, blob) {
@@ -913,9 +1020,17 @@ pub fn run_pipeline(
                 }
             }
             if !staging.is_empty() {
-                fan.broadcast(&mut staging);
+                if sketch_mode {
+                    shard(&mut staging, &mut shard_next, &mut shard_chunks, &shard_txs);
+                } else {
+                    fan.broadcast(&mut staging);
+                }
             }
-            let stats = fan.finish(); // drops senders: queues close, workers drain
+            drop(shard_txs); // shard queues close; workers drain and exit
+            let mut stats = fan.finish(); // drops senders: queues close, workers drain
+            if sketch_mode {
+                stats = FanoutStats { chunks: shard_chunks, replicas: shard_chunks };
+            }
 
             // the workers still hold checkpoint senders; iterate to closure
             for (wid, t, blob) in ckpt_rx.iter() {
@@ -959,18 +1074,20 @@ pub fn run_pipeline(
     let mut per_worker = Vec::new();
     let mut worker_snaps = Vec::new();
     let mut arrivals = Vec::new();
+    let mut sketch_blobs: Vec<Vec<u8>> = Vec::new();
     let mut pinned_workers = 0usize;
     let mut restarts_total = 0u64;
     let mut lost_workers = Vec::new();
     let mut last_loss = String::new();
     for (wid, exit) in exits.into_iter().enumerate() {
         match exit {
-            WorkerExit::Done { pinned, restarts, arrivals: a, snaps, last } => {
+            WorkerExit::Done { pinned, restarts, arrivals: a, snaps, last, state } => {
                 pinned_workers += pinned as usize;
                 restarts_total += u64::from(restarts);
                 arrivals.push(a);
                 worker_snaps.push(snaps);
                 per_worker.push(last);
+                sketch_blobs.extend(state);
             }
             WorkerExit::Lost { pinned, restarts, msg } => {
                 pinned_workers += pinned as usize;
@@ -1007,11 +1124,19 @@ pub fn run_pipeline(
         snapshots.push(SnapshotPoint { t, averaged: average(&ests) });
     }
 
-    // a clean run keeps the historical unweighted mean (bit-identical with
-    // pre-fault-tolerance pipelines); a degraded run weights each survivor
-    // by its arrival count
-    let averaged =
-        if degraded { weighted_average(&per_worker, &arrivals) } else { average(&per_worker) };
+    // sketch mode merges the survivors' shipped states exactly (the
+    // shards partition the stream — averaging shard estimates would be
+    // wrong); otherwise a clean run keeps the historical unweighted mean
+    // (bit-identical with pre-fault-tolerance pipelines) and a degraded
+    // run weights each survivor by its arrival count
+    let averaged = if sketch_mode {
+        merge_sketch_states(kind, &sketch_blobs, &degrees)
+            .map_err(|e| e.context("merging sketch worker states"))?
+    } else if degraded {
+        weighted_average(&per_worker, &arrivals)
+    } else {
+        average(&per_worker)
+    };
 
     Ok(PipelineResult {
         averaged,

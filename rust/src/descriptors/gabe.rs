@@ -19,7 +19,8 @@ use crate::graph::stream::EdgeStream;
 use crate::graph::Graph;
 use crate::sampling::window::{EdgeRing, WindowAcc};
 use crate::sampling::{
-    ReservoirAction, Series, Snapshot, Weights, WindowConfig, WindowPolicy, WindowedReservoir,
+    Backend, EstimatorConfig, GraphSketch, ReservoirAction, Series, Snapshot, Weights,
+    WindowConfig, WindowPolicy, WindowedReservoir,
 };
 
 // WindowAcc counter indices (one per reservoir-estimated pattern).
@@ -114,46 +115,68 @@ impl GabeEstimate {
 /// ```
 #[derive(Debug, Clone)]
 pub struct GabeEstimator {
-    budget: usize,
-    seed: u64,
-    window: WindowConfig,
+    cfg: EstimatorConfig,
 }
 
 impl GabeEstimator {
-    /// Estimator with the given reservoir budget (paper's `b`).
+    /// Estimator with the given reservoir budget (paper's `b`), GABE's
+    /// historical default seed and the reservoir backend — shorthand for
+    /// [`GabeEstimator::from_config`], which is the primary constructor.
     pub fn new(budget: usize) -> Self {
-        GabeEstimator { budget, seed: 0x9abe, window: WindowConfig::default() }
+        GabeEstimator::from_config(EstimatorConfig::new(budget).with_seed(0x9abe))
     }
 
-    /// Override the reservoir RNG seed.
+    /// Estimator from the shared [`EstimatorConfig`] (ISSUE 8) — budget,
+    /// seed, window and [`Backend`] in one place.
+    pub fn from_config(cfg: EstimatorConfig) -> Self {
+        GabeEstimator { cfg }
+    }
+
+    /// The estimator's configuration.
+    pub fn config(&self) -> &EstimatorConfig {
+        &self.cfg
+    }
+
+    /// Override the reservoir RNG / sketch hash seed.
+    ///
+    /// Note: delegating shim over [`EstimatorConfig::with_seed`]; prefer
+    /// building an [`EstimatorConfig`] and [`GabeEstimator::from_config`].
     pub fn with_seed(mut self, seed: u64) -> Self {
-        self.seed = seed;
+        self.cfg = self.cfg.with_seed(seed);
         self
     }
 
     /// Set the window policy and snapshot cadence (ISSUE 5).  The default
     /// [`WindowPolicy::None`] reproduces the paper's full-history run
     /// bit-for-bit.
+    ///
+    /// Note: delegating shim over [`EstimatorConfig::with_window`]; prefer
+    /// building an [`EstimatorConfig`] and [`GabeEstimator::from_config`].
     pub fn with_window(mut self, window: WindowConfig) -> Self {
-        self.window = window;
+        self.cfg = self.cfg.with_window(window);
+        self
+    }
+
+    /// Select the estimation backend (reservoir or sketch).
+    ///
+    /// Note: delegating shim over [`EstimatorConfig::with_backend`]; prefer
+    /// building an [`EstimatorConfig`] and [`GabeEstimator::from_config`].
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.cfg = self.cfg.with_backend(backend);
         self
     }
 
     /// Consume a stream and produce count estimates (single pass, ≤ `b`
     /// stored edges, `O(b log b)` per edge — constraints C1–C3).
     ///
-    /// # Panics
-    ///
-    /// Panics when the stream records an I/O failure (`EdgeStream::
-    /// take_error`) — estimates over a silently truncated prefix must
-    /// never be returned as if complete.  Use [`GabeEstimator::try_run`]
-    /// to handle stream failures as errors.
+    #[doc = include_str!("run_doc.md")]
     pub fn run(&self, stream: &mut impl EdgeStream) -> GabeEstimate {
         self.try_run(stream).expect("gabe: edge stream failed")
     }
 
-    /// Like [`GabeEstimator::run`], surfacing stream I/O failures as
-    /// errors instead of panicking.
+    /// **Primary entry point**: consume a stream and produce count
+    /// estimates, surfacing stream I/O failures as errors.
+    /// [`GabeEstimator::run`] is the panicking convenience wrapper.
     pub fn try_run(&self, stream: &mut impl EdgeStream) -> crate::Result<GabeEstimate> {
         Ok(self.try_run_series(stream)?.last)
     }
@@ -161,22 +184,20 @@ impl GabeEstimator {
     /// Run and return the full descriptor time series: one snapshot per
     /// `stride` arrivals (see [`WindowConfig`]) plus the final estimate.
     ///
-    /// # Panics
-    ///
-    /// Panics on stream I/O failure; use
-    /// [`try_run_series`](GabeEstimator::try_run_series) to handle it.
+    #[doc = include_str!("run_doc.md")]
     pub fn run_series(&self, stream: &mut impl EdgeStream) -> Series<GabeEstimate> {
         self.try_run_series(stream).expect("gabe: edge stream failed")
     }
 
-    /// Like [`run_series`](GabeEstimator::run_series), surfacing stream
-    /// I/O failures as errors instead of panicking.
+    /// **Primary entry point** for time series: like
+    /// [`run_series`](GabeEstimator::run_series), surfacing stream I/O
+    /// failures as errors instead of panicking.
     pub fn try_run_series(
         &self,
         stream: &mut impl EdgeStream,
     ) -> crate::Result<Series<GabeEstimate>> {
-        self.window.validate()?;
-        let mut state = GabeState::with_window(self.budget, self.seed, self.window);
+        self.cfg.validate()?;
+        let mut state = GabeState::from_config(&self.cfg);
         while let Some(e) = stream.next_edge() {
             state.push(e);
         }
@@ -208,6 +229,9 @@ pub struct GabeState {
     window: WindowConfig,
     snapshots: Vec<Snapshot<GabeEstimate>>,
     ne: u64,
+    /// `Some` iff running on [`Backend::Sketch`] (ISSUE 8): the bucket
+    /// matrices that replace the reservoir + sample graph.
+    sketch: Option<GraphSketch>,
 }
 
 impl GabeState {
@@ -219,29 +243,55 @@ impl GabeState {
     /// State under a window policy + snapshot cadence (ISSUE 5).  The
     /// policy must have been validated (see [`WindowConfig::validate`]).
     pub fn with_window(budget: usize, seed: u64, window: WindowConfig) -> Self {
-        let b = budget.max(1);
-        let ring = match window.policy {
+        Self::from_config(&EstimatorConfig::new(budget).with_seed(seed).with_window(window))
+    }
+
+    /// State from the shared [`EstimatorConfig`] (the primary
+    /// constructor).  The config must have been validated (see
+    /// [`EstimatorConfig::validate`]).
+    pub fn from_config(cfg: &EstimatorConfig) -> Self {
+        let b = cfg.budget.max(1);
+        let ring = match cfg.window.policy {
             WindowPolicy::Sliding { w } => Some(EdgeRing::new(w)),
             _ => None,
         };
+        let sketch = match cfg.backend {
+            Backend::Sketch { width, depth } => Some(GraphSketch::new(width, depth, cfg.seed)),
+            Backend::Reservoir => None,
+        };
         GabeState {
             budget: b,
-            reservoir: WindowedReservoir::new(window.policy, b, Pcg64::seed_from_u64(seed)),
+            reservoir: WindowedReservoir::new(cfg.window.policy, b, Pcg64::seed_from_u64(cfg.seed)),
             sample: SampleGraph::new(),
             degrees: Vec::new(),
             ring,
             hits: EdgeHits::default(),
             scratch: Scratch::default(),
-            acc: WindowAcc::new(window.policy),
+            acc: WindowAcc::new(cfg.window.policy),
             expired: Vec::new(),
-            window,
+            window: cfg.window,
             snapshots: Vec::new(),
             ne: 0,
+            sketch,
         }
     }
 
     /// Process one arriving edge (Algorithm 1 body, windowed).
     pub fn push(&mut self, e: crate::graph::Edge) {
+        if let Some(sk) = &mut self.sketch {
+            // sketch backend: O(1) bucket update, exact degrees, no
+            // reservoir bookkeeping (validation rejects windows here)
+            self.ne += 1;
+            let (u, v) = (e.u, e.v);
+            if self.degrees.len() <= v as usize {
+                self.degrees.resize(v as usize + 1, 0);
+            }
+            self.degrees[u as usize] += 1;
+            self.degrees[v as usize] += 1;
+            sk.update(u, v);
+            self.maybe_snapshot();
+            return;
+        }
         self.ne += 1;
         self.acc.tick();
         // phase 1: advance the window clock; aged-out sampled edges leave
@@ -302,14 +352,19 @@ impl GabeState {
     /// `degrees` (the snapshot path clones; `finish` moves).
     fn estimate_with(&self, degrees: Vec<u32>) -> GabeEstimate {
         let nv = degrees.len() as u64;
-        let vals = self.acc.values();
-        let c = ConnectedCounts {
-            triangle: vals[A_TRI],
-            path4: vals[A_PATH4],
-            cycle4: vals[A_C4],
-            paw: vals[A_PAW],
-            diamond: vals[A_DIAMOND],
-            k4: vals[A_K4],
+        let c = match &self.sketch {
+            Some(sk) => sk.connected_counts(),
+            None => {
+                let vals = self.acc.values();
+                ConnectedCounts {
+                    triangle: vals[A_TRI],
+                    path4: vals[A_PATH4],
+                    cycle4: vals[A_C4],
+                    paw: vals[A_PAW],
+                    diamond: vals[A_DIAMOND],
+                    k4: vals[A_K4],
+                }
+            }
         };
         let ne = self.window.policy.described_len(self.ne);
         let counts = assemble_counts(nv as f64, ne as f64, &degrees, &c);
@@ -367,6 +422,13 @@ impl GabeState {
             s.estimate.save(out);
         }
         out.u64(self.ne);
+        match &self.sketch {
+            None => out.u8(0),
+            Some(sk) => {
+                out.u8(1);
+                sk.save(out);
+            }
+        }
     }
 
     /// Rebuild from [`GabeState::save`] bytes.
@@ -395,6 +457,11 @@ impl GabeState {
             snapshots.push(Snapshot { t, estimate });
         }
         let ne = d.u64()?;
+        let sketch = match d.u8()? {
+            0 => None,
+            1 => Some(GraphSketch::load(d)?),
+            tag => return Err(crate::anyhow!("gabe checkpoint: unknown sketch tag {tag}")),
+        };
         Ok(GabeState {
             budget,
             reservoir,
@@ -408,7 +475,45 @@ impl GabeState {
             window,
             snapshots,
             ne,
+            sketch,
         })
+    }
+
+    /// Entrywise merge of a sketch-backend shard into this one
+    /// (coordinator shard mode): bucket matrices add exactly, degrees
+    /// and the edge clock sum.  Errors on reservoir states — tombstoned
+    /// reservoirs are not mergeable (ROADMAP, sharding item).
+    pub(crate) fn merge_from(&mut self, other: &GabeState) -> crate::Result<()> {
+        let Some(sk) = &mut self.sketch else {
+            return Err(crate::anyhow!("gabe merge: reservoir states are not mergeable"));
+        };
+        let Some(osk) = &other.sketch else {
+            return Err(crate::anyhow!("gabe merge: backend mismatch"));
+        };
+        sk.merge(osk)?;
+        if self.degrees.len() < other.degrees.len() {
+            self.degrees.resize(other.degrees.len(), 0);
+        }
+        for (i, d) in other.degrees.iter().enumerate() {
+            self.degrees[i] += d;
+        }
+        self.ne += other.ne;
+        Ok(())
+    }
+
+    /// Approximate resident bytes of the estimator state — the memory
+    /// axis of the `repro sketch` accuracy-vs-memory comparison.
+    pub fn resident_bytes(&self) -> usize {
+        let degrees = self.degrees.len() * 4;
+        match &self.sketch {
+            Some(sk) => sk.bytes() + degrees,
+            None => {
+                self.budget * 8
+                    + self.sample.arena_len() * 4
+                    + self.sample.intern_capacity() * 8
+                    + degrees
+            }
+        }
     }
 }
 

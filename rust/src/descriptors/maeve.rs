@@ -16,7 +16,8 @@ use crate::graph::Graph;
 use crate::linalg::moments::maeve_layout;
 use crate::sampling::window::{EdgeRing, VertexCreditLog};
 use crate::sampling::{
-    ReservoirAction, Series, Snapshot, Weights, WindowConfig, WindowPolicy, WindowedReservoir,
+    Backend, EstimatorConfig, GraphSketch, ReservoirAction, Series, Snapshot, Weights,
+    WindowConfig, WindowPolicy, WindowedReservoir,
 };
 
 /// Raw output of a MAEVE streaming run.
@@ -102,44 +103,67 @@ impl MaeveEstimate {
 /// Streaming MAEVE estimator.
 #[derive(Debug, Clone)]
 pub struct MaeveEstimator {
-    budget: usize,
-    seed: u64,
-    window: WindowConfig,
+    cfg: EstimatorConfig,
 }
 
 impl MaeveEstimator {
-    /// Estimator with the given reservoir budget (paper's `b`).
+    /// Estimator with the given reservoir budget (paper's `b`), MAEVE's
+    /// historical default seed and the reservoir backend — shorthand for
+    /// [`MaeveEstimator::from_config`], which is the primary constructor.
     pub fn new(budget: usize) -> Self {
-        MaeveEstimator { budget, seed: 0x3a3e, window: WindowConfig::default() }
+        MaeveEstimator::from_config(EstimatorConfig::new(budget).with_seed(0x3a3e))
     }
 
-    /// Override the reservoir RNG seed.
+    /// Estimator from the shared [`EstimatorConfig`] (ISSUE 8) — budget,
+    /// seed, window and [`Backend`] in one place.
+    pub fn from_config(cfg: EstimatorConfig) -> Self {
+        MaeveEstimator { cfg }
+    }
+
+    /// The estimator's configuration.
+    pub fn config(&self) -> &EstimatorConfig {
+        &self.cfg
+    }
+
+    /// Override the reservoir RNG / sketch hash seed.
+    ///
+    /// Note: delegating shim over [`EstimatorConfig::with_seed`]; prefer
+    /// building an [`EstimatorConfig`] and [`MaeveEstimator::from_config`].
     pub fn with_seed(mut self, seed: u64) -> Self {
-        self.seed = seed;
+        self.cfg = self.cfg.with_seed(seed);
         self
     }
 
     /// Set the window policy and snapshot cadence (ISSUE 5).  The default
     /// [`WindowPolicy::None`] reproduces the paper's full-history run
     /// bit-for-bit.
+    ///
+    /// Note: delegating shim over [`EstimatorConfig::with_window`]; prefer
+    /// building an [`EstimatorConfig`] and [`MaeveEstimator::from_config`].
     pub fn with_window(mut self, window: WindowConfig) -> Self {
-        self.window = window;
+        self.cfg = self.cfg.with_window(window);
+        self
+    }
+
+    /// Select the estimation backend (reservoir or sketch).
+    ///
+    /// Note: delegating shim over [`EstimatorConfig::with_backend`]; prefer
+    /// building an [`EstimatorConfig`] and [`MaeveEstimator::from_config`].
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.cfg = self.cfg.with_backend(backend);
         self
     }
 
     /// Single-pass estimate.
     ///
-    /// # Panics
-    ///
-    /// Panics when the stream records an I/O failure (`EdgeStream::
-    /// take_error`); use [`MaeveEstimator::try_run`] to handle stream
-    /// failures as errors.
+    #[doc = include_str!("run_doc.md")]
     pub fn run(&self, stream: &mut impl EdgeStream) -> MaeveEstimate {
         self.try_run(stream).expect("maeve: edge stream failed")
     }
 
-    /// Like [`MaeveEstimator::run`], surfacing stream I/O failures as
-    /// errors instead of panicking.
+    /// **Primary entry point**: single-pass estimate, surfacing stream
+    /// I/O failures as errors.  [`MaeveEstimator::run`] is the panicking
+    /// convenience wrapper.
     pub fn try_run(&self, stream: &mut impl EdgeStream) -> crate::Result<MaeveEstimate> {
         Ok(self.try_run_series(stream)?.last)
     }
@@ -147,22 +171,20 @@ impl MaeveEstimator {
     /// Run and return the full descriptor time series (one snapshot per
     /// `stride` arrivals plus the final estimate).
     ///
-    /// # Panics
-    ///
-    /// Panics on stream I/O failure; use
-    /// [`try_run_series`](MaeveEstimator::try_run_series) to handle it.
+    #[doc = include_str!("run_doc.md")]
     pub fn run_series(&self, stream: &mut impl EdgeStream) -> Series<MaeveEstimate> {
         self.try_run_series(stream).expect("maeve: edge stream failed")
     }
 
-    /// Like [`run_series`](MaeveEstimator::run_series), surfacing stream
-    /// I/O failures as errors instead of panicking.
+    /// **Primary entry point** for time series: like
+    /// [`run_series`](MaeveEstimator::run_series), surfacing stream I/O
+    /// failures as errors instead of panicking.
     pub fn try_run_series(
         &self,
         stream: &mut impl EdgeStream,
     ) -> crate::Result<Series<MaeveEstimate>> {
-        self.window.validate()?;
-        let mut state = MaeveState::with_window(self.budget, self.seed, self.window);
+        self.cfg.validate()?;
+        let mut state = MaeveState::from_config(&self.cfg);
         while let Some(e) = stream.next_edge() {
             state.push(e);
         }
@@ -233,6 +255,8 @@ pub struct MaeveState {
     window: WindowConfig,
     snapshots: Vec<Snapshot<MaeveEstimate>>,
     ne: u64,
+    /// `Some` iff running on [`Backend::Sketch`] (ISSUE 8).
+    sketch: Option<GraphSketch>,
 }
 
 impl MaeveState {
@@ -243,16 +267,27 @@ impl MaeveState {
 
     /// State under a window policy + snapshot cadence (ISSUE 5).
     pub fn with_window(budget: usize, seed: u64, window: WindowConfig) -> Self {
-        let b = budget.max(1);
-        let (ring, credit_log) = match window.policy {
+        Self::from_config(&EstimatorConfig::new(budget).with_seed(seed).with_window(window))
+    }
+
+    /// State from the shared [`EstimatorConfig`] (the primary
+    /// constructor).  The config must have been validated (see
+    /// [`EstimatorConfig::validate`]).
+    pub fn from_config(cfg: &EstimatorConfig) -> Self {
+        let b = cfg.budget.max(1);
+        let (ring, credit_log) = match cfg.window.policy {
             WindowPolicy::Sliding { w } => {
                 (Some(EdgeRing::new(w)), Some(VertexCreditLog::new(w)))
             }
             _ => (None, None),
         };
+        let sketch = match cfg.backend {
+            Backend::Sketch { width, depth } => Some(GraphSketch::new(width, depth, cfg.seed)),
+            Backend::Reservoir => None,
+        };
         MaeveState {
             budget: b,
-            reservoir: WindowedReservoir::new(window.policy, b, Pcg64::seed_from_u64(seed)),
+            reservoir: WindowedReservoir::new(cfg.window.policy, b, Pcg64::seed_from_u64(cfg.seed)),
             sample: SampleGraph::new(),
             degrees: Vec::new(),
             ring,
@@ -261,17 +296,32 @@ impl MaeveState {
             common: Vec::new(),
             credit_log,
             expired_credits: Vec::new(),
-            rho: window.policy.decay_factor(),
+            rho: cfg.window.policy.decay_factor(),
             decay_last: Vec::new(),
             expired: Vec::new(),
-            window,
+            window: cfg.window,
             snapshots: Vec::new(),
             ne: 0,
+            sketch,
         }
     }
 
     /// Process one arriving edge.
     pub fn push(&mut self, e: crate::graph::Edge) {
+        if let Some(sk) = &mut self.sketch {
+            // sketch backend: O(1) bucket update + exact degrees; the
+            // per-vertex credit machinery is read out at finalize time
+            self.ne += 1;
+            let (u, v) = (e.u, e.v);
+            if self.degrees.len() <= v as usize {
+                self.degrees.resize(v as usize + 1, 0);
+            }
+            self.degrees[u as usize] += 1;
+            self.degrees[v as usize] += 1;
+            sk.update(u, v);
+            self.maybe_snapshot();
+            return;
+        }
         self.ne += 1;
         // sliding: retire per-vertex credits that fell out of the window
         if let Some(log) = &mut self.credit_log {
@@ -380,10 +430,16 @@ impl MaeveState {
 
     /// The estimate as of the current arrival (snapshot path: clones).
     fn estimate_now(&self) -> MaeveEstimate {
-        let mut tri = self.tri.clone();
-        let mut path = self.path.clone();
-        let mut last = self.decay_last.clone();
-        Self::settle_decay(&mut tri, &mut path, &mut last, self.rho, self.ne);
+        let (tri, path) = match &self.sketch {
+            Some(sk) => sk.maeve_readout(&self.degrees),
+            None => {
+                let mut tri = self.tri.clone();
+                let mut path = self.path.clone();
+                let mut last = self.decay_last.clone();
+                Self::settle_decay(&mut tri, &mut path, &mut last, self.rho, self.ne);
+                (tri, path)
+            }
+        };
         MaeveEstimate {
             nv: self.degrees.len() as u64,
             ne: self.window.policy.described_len(self.ne),
@@ -407,6 +463,16 @@ impl MaeveState {
 
     /// Finalize into per-vertex estimates.
     pub fn finish(mut self) -> MaeveEstimate {
+        if let Some(sk) = &self.sketch {
+            let (tri, path) = sk.maeve_readout(&self.degrees);
+            return MaeveEstimate {
+                nv: self.degrees.len() as u64,
+                ne: self.window.policy.described_len(self.ne),
+                degrees: self.degrees,
+                triangles: tri,
+                paths: path,
+            };
+        }
         Self::settle_decay(
             &mut self.tri,
             &mut self.path,
@@ -468,6 +534,13 @@ impl MaeveState {
             s.estimate.save(out);
         }
         out.u64(self.ne);
+        match &self.sketch {
+            None => out.u8(0),
+            Some(sk) => {
+                out.u8(1);
+                sk.save(out);
+            }
+        }
     }
 
     /// Rebuild from [`MaeveState::save`] bytes.
@@ -514,6 +587,11 @@ impl MaeveState {
             snapshots.push(Snapshot { t, estimate });
         }
         let ne = d.u64()?;
+        let sketch = match d.u8()? {
+            0 => None,
+            1 => Some(GraphSketch::load(d)?),
+            tag => return Err(crate::anyhow!("maeve checkpoint: unknown sketch tag {tag}")),
+        };
         Ok(MaeveState {
             budget,
             reservoir,
@@ -531,7 +609,43 @@ impl MaeveState {
             window,
             snapshots,
             ne,
+            sketch,
         })
+    }
+
+    /// Entrywise merge of a sketch-backend shard into this one
+    /// (coordinator shard mode); see `GabeState::merge_from`.
+    pub(crate) fn merge_from(&mut self, other: &MaeveState) -> crate::Result<()> {
+        let Some(sk) = &mut self.sketch else {
+            return Err(crate::anyhow!("maeve merge: reservoir states are not mergeable"));
+        };
+        let Some(osk) = &other.sketch else {
+            return Err(crate::anyhow!("maeve merge: backend mismatch"));
+        };
+        sk.merge(osk)?;
+        if self.degrees.len() < other.degrees.len() {
+            self.degrees.resize(other.degrees.len(), 0);
+        }
+        for (i, d) in other.degrees.iter().enumerate() {
+            self.degrees[i] += d;
+        }
+        self.ne += other.ne;
+        Ok(())
+    }
+
+    /// Approximate resident bytes of the estimator state — the memory
+    /// axis of the `repro sketch` accuracy-vs-memory comparison.
+    pub fn resident_bytes(&self) -> usize {
+        let vertices = self.degrees.len() * 4 + self.tri.len() * 8 + self.path.len() * 8;
+        match &self.sketch {
+            Some(sk) => sk.bytes() + self.degrees.len() * 4,
+            None => {
+                self.budget * 8
+                    + self.sample.arena_len() * 4
+                    + self.sample.intern_capacity() * 8
+                    + vertices
+            }
+        }
     }
 }
 

@@ -23,7 +23,8 @@ use crate::graph::stream::EdgeStream;
 use crate::graph::{Graph, VertexId};
 use crate::sampling::window::WindowAcc;
 use crate::sampling::{
-    ReservoirAction, Series, Snapshot, Weights, WindowConfig, WindowedReservoir,
+    Backend, EstimatorConfig, GraphSketch, ReservoirAction, Series, Snapshot, Weights,
+    WindowConfig, WindowedReservoir,
 };
 
 // WindowAcc trace-term indices (Tables 9–11 rows the reservoir estimates).
@@ -72,37 +73,34 @@ impl SantaEstimate {
     }
 }
 
-/// Configuration for the SANTA estimator.
+/// Configuration for the SANTA estimator: the shared [`EstimatorConfig`]
+/// plus SANTA's own exact-wedge ablation knob.
 #[derive(Debug, Clone)]
 pub struct SantaConfig {
-    /// Reservoir budget (paper's `b`).
-    pub budget: usize,
-    /// Reservoir RNG seed.
-    pub seed: u64,
+    /// The shared estimator config (budget, seed, window, backend) —
+    /// ISSUE 8's unified surface.  Windows apply to the pass-2 trace
+    /// terms; the pass-1 degree profile stays full-stream (DESIGN.md §8).
+    pub est: EstimatorConfig,
     /// Use the exact closed-form wedge term instead of sampling (ablation).
-    /// Incompatible with a windowed run: the closed form needs all-time
-    /// per-vertex accumulators that have no windowed counterpart.
+    /// Incompatible with a windowed run (the closed form needs all-time
+    /// per-vertex accumulators) and with the sketch backend (the sketch
+    /// readout does not decompose into per-term walk weights).
     pub exact_wedges: bool,
-    /// Window policy + snapshot cadence (ISSUE 5).  Windows apply to the
-    /// pass-2 trace terms; the pass-1 degree profile stays full-stream
-    /// (DESIGN.md §8).
-    pub window: WindowConfig,
 }
 
 impl SantaConfig {
-    /// Config with the given budget and all defaults.
+    /// Config with the given budget, SANTA's historical default seed and
+    /// all other defaults.
     pub fn new(budget: usize) -> Self {
         SantaConfig {
-            budget,
-            seed: 0x5a27a,
+            est: EstimatorConfig::new(budget).with_seed(0x5a27a),
             exact_wedges: false,
-            window: WindowConfig::default(),
         }
     }
 
-    /// Override the reservoir RNG seed.
+    /// Override the reservoir RNG / sketch hash seed.
     pub fn with_seed(mut self, seed: u64) -> Self {
-        self.seed = seed;
+        self.est.seed = seed;
         self
     }
 
@@ -114,40 +112,56 @@ impl SantaConfig {
 
     /// Set the window policy and snapshot cadence.
     pub fn with_window(mut self, window: WindowConfig) -> Self {
-        self.window = window;
+        self.est.window = window;
+        self
+    }
+
+    /// Select the estimation backend (reservoir or sketch).
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.est.backend = backend;
         self
     }
 
     /// Check knob compatibility before building any state.
     pub fn validate(&self) -> crate::Result<()> {
-        self.window.validate()?;
+        self.est.validate()?;
         crate::ensure!(
-            !(self.exact_wedges && self.window.policy.is_windowed()),
+            !(self.exact_wedges && self.est.window.policy.is_windowed()),
             "santa: exact_wedges is incompatible with a windowed run \
              (the closed-form wedge term is inherently all-time)"
+        );
+        crate::ensure!(
+            !(self.exact_wedges && self.est.backend.is_sketch()),
+            "santa: exact_wedges is incompatible with the sketch backend \
+             (the sketch readout has no separable wedge term)"
         );
         Ok(())
     }
 
     pub(crate) fn save(&self, out: &mut Enc) {
-        out.usize(self.budget);
-        out.u64(self.seed);
+        self.est.save(out);
         out.u8(self.exact_wedges as u8);
-        self.window.save(out);
     }
 
     pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<SantaConfig> {
-        let budget = d.usize()?;
-        let seed = d.u64()?;
+        let est = EstimatorConfig::load(d)?;
         let exact_wedges = match d.u8()? {
             0 => false,
             1 => true,
             tag => return Err(crate::anyhow!("santa checkpoint: bad wedge flag {tag}")),
         };
-        let window = WindowConfig::load(d)?;
-        let cfg = SantaConfig { budget, seed, exact_wedges, window };
+        let cfg = SantaConfig { est, exact_wedges };
         cfg.validate()?;
         Ok(cfg)
+    }
+}
+
+impl From<EstimatorConfig> for SantaConfig {
+    /// Lift the shared config; the ablation knob defaults off — so
+    /// `SantaEstimator::from_config` accepts a plain [`EstimatorConfig`]
+    /// just like the other two estimators.
+    fn from(est: EstimatorConfig) -> Self {
+        SantaConfig { est, exact_wedges: false }
     }
 }
 
@@ -163,31 +177,57 @@ impl SantaEstimator {
         SantaEstimator { cfg: SantaConfig::new(budget) }
     }
 
-    /// Estimator over an explicit [`SantaConfig`].
-    pub fn from_config(cfg: SantaConfig) -> Self {
-        SantaEstimator { cfg }
+    /// Estimator over an explicit config — either a [`SantaConfig`] or a
+    /// plain shared [`EstimatorConfig`] (the ablation knob defaults off).
+    pub fn from_config(cfg: impl Into<SantaConfig>) -> Self {
+        SantaEstimator { cfg: cfg.into() }
     }
 
-    /// Override the reservoir RNG seed.
+    /// The config this estimator runs with.
+    pub fn config(&self) -> &SantaConfig {
+        &self.cfg
+    }
+
+    /// Override the reservoir RNG / sketch hash seed.
+    ///
+    /// Note: delegating shim over [`SantaConfig::with_seed`]; prefer
+    /// building a [`SantaConfig`] and [`SantaEstimator::from_config`].
     pub fn with_seed(mut self, seed: u64) -> Self {
-        self.cfg.seed = seed;
+        self.cfg.est.seed = seed;
+        self
+    }
+
+    /// Set the window policy and snapshot cadence.
+    ///
+    /// Note: delegating shim over [`SantaConfig::with_window`]; prefer
+    /// building a [`SantaConfig`] and [`SantaEstimator::from_config`].
+    pub fn with_window(mut self, window: WindowConfig) -> Self {
+        self.cfg.est.window = window;
+        self
+    }
+
+    /// Select the estimation backend (reservoir or sketch).
+    ///
+    /// Note: delegating shim over [`SantaConfig::with_backend`]; prefer
+    /// building a [`SantaConfig`] and [`SantaEstimator::from_config`].
+    pub fn with_backend(mut self, backend: Backend) -> Self {
+        self.cfg.est.backend = backend;
         self
     }
 
     /// Run both passes over the (resettable) stream.
     ///
-    /// # Panics
+    #[doc = include_str!("run_doc.md")]
     ///
-    /// Panics when the stream records an I/O failure (`EdgeStream::
-    /// take_error`) in either pass or on the inter-pass reset — an empty
-    /// pass 2 over a vanished file must never yield garbage traces.  Use
-    /// [`SantaEstimator::try_run`] to handle stream failures as errors.
+    /// Additionally panics on an I/O failure in either pass or on the
+    /// inter-pass reset — an empty pass 2 over a vanished file must never
+    /// yield garbage traces.  Use [`SantaEstimator::try_run`].
     pub fn run(&self, stream: &mut impl EdgeStream) -> SantaEstimate {
         self.try_run(stream).expect("santa: edge stream failed")
     }
 
-    /// Like [`SantaEstimator::run`], surfacing stream I/O failures as
-    /// errors instead of panicking.
+    /// **Primary entry point**: run both passes, surfacing stream I/O
+    /// failures as errors instead of panicking.
     pub fn try_run(&self, stream: &mut impl EdgeStream) -> crate::Result<SantaEstimate> {
         Ok(self.try_run_series(stream)?.last)
     }
@@ -195,16 +235,14 @@ impl SantaEstimator {
     /// Run both passes and return the pass-2 descriptor time series (one
     /// snapshot per `stride` arrivals plus the final estimate).
     ///
-    /// # Panics
-    ///
-    /// Panics on stream I/O failure; use
-    /// [`try_run_series`](SantaEstimator::try_run_series) to handle it.
+    #[doc = include_str!("run_doc.md")]
     pub fn run_series(&self, stream: &mut impl EdgeStream) -> Series<SantaEstimate> {
         self.try_run_series(stream).expect("santa: edge stream failed")
     }
 
-    /// Like [`run_series`](SantaEstimator::run_series), surfacing stream
-    /// I/O failures as errors instead of panicking.
+    /// **Primary entry point**: like
+    /// [`run_series`](SantaEstimator::run_series), surfacing stream I/O
+    /// failures as errors instead of panicking.
     pub fn try_run_series(
         &self,
         stream: &mut impl EdgeStream,
@@ -264,6 +302,10 @@ pub struct SantaPass2 {
     expired: Vec<crate::graph::Edge>,
     snapshots: Vec<Snapshot<SantaEstimate>>,
     ne: u64,
+    /// `Some` iff `cfg.est.backend` is [`Backend::Sketch`]: the bucket
+    /// matrices accumulate degree-normalized walk weight `1/√(dᵤdᵥ)` per
+    /// edge and are read out as traces (DESIGN.md §11).
+    sketch: Option<GraphSketch>,
 }
 
 impl SantaPass2 {
@@ -271,21 +313,30 @@ impl SantaPass2 {
     ///
     /// # Panics
     ///
-    /// Panics when `cfg` combines `exact_wedges` with a windowed policy —
-    /// call [`SantaConfig::validate`] first to get an error instead.
+    /// Panics when `cfg` combines `exact_wedges` with a windowed policy or
+    /// with the sketch backend — call [`SantaConfig::validate`] first to
+    /// get an error instead.
     pub fn new(cfg: SantaConfig, degrees: std::sync::Arc<Vec<u32>>) -> Self {
         assert!(
-            !(cfg.exact_wedges && cfg.window.policy.is_windowed()),
+            !(cfg.exact_wedges && cfg.est.window.policy.is_windowed()),
             "santa: exact_wedges is incompatible with a windowed run"
         );
-        let b = cfg.budget.max(1);
+        assert!(
+            !(cfg.exact_wedges && cfg.est.backend.is_sketch()),
+            "santa: exact_wedges is incompatible with the sketch backend"
+        );
+        let b = cfg.est.budget.max(1);
         let (inv, inv2) = if cfg.exact_wedges {
             (vec![0.0f64; degrees.len()], vec![0.0f64; degrees.len()])
         } else {
             (Vec::new(), Vec::new())
         };
-        let seed = cfg.seed;
-        let policy = cfg.window.policy;
+        let seed = cfg.est.seed;
+        let policy = cfg.est.window.policy;
+        let sketch = match cfg.est.backend {
+            Backend::Reservoir => None,
+            Backend::Sketch { width, depth } => Some(GraphSketch::new(width, depth, seed)),
+        };
         SantaPass2 {
             cfg,
             degrees,
@@ -298,6 +349,7 @@ impl SantaPass2 {
             expired: Vec::new(),
             snapshots: Vec::new(),
             ne: 0,
+            sketch,
         }
     }
 
@@ -308,6 +360,17 @@ impl SantaPass2 {
 
     /// Process one pass-2 edge.
     pub fn push(&mut self, e: crate::graph::Edge) {
+        if let Some(sk) = &mut self.sketch {
+            // Sketch backend: accumulate the normalized-adjacency entry
+            // 1/√(dᵤdᵥ) (exact, thanks to pass-1 degrees); traces are read
+            // out from the bucket matrices at estimate time.
+            self.ne += 1;
+            let (u, v) = (e.u, e.v);
+            let q = 1.0 / (self.deg(u) * self.deg(v)).sqrt();
+            sk.update_weighted(u, v, q);
+            self.maybe_snapshot();
+            return;
+        }
         self.ne += 1;
         self.acc.tick();
         // phase 1: window clock + sample eviction before any enumeration
@@ -334,13 +397,13 @@ impl SantaPass2 {
             // duplicate stream edge: full-history mode offers it (paper
             // path, bit-compatible); windowed reservoirs skip it so the
             // sample and reservoir stay in lock-step (see gabe.rs).
-            if !self.cfg.window.policy.is_windowed() {
+            if !self.cfg.est.window.policy.is_windowed() {
                 self.reservoir.offer(e);
             }
             self.maybe_snapshot();
             return;
         }
-        let w = Weights::at(t_eff, self.cfg.budget.max(1));
+        let w = Weights::at(t_eff, self.cfg.est.budget.max(1));
 
         if !self.cfg.exact_wedges {
             // wedges completed by e: centered at u (other edge (u,w))
@@ -411,6 +474,9 @@ impl SantaPass2 {
 
     /// The trace estimates as of the current arrival.
     fn traces_now(&self) -> [f64; 5] {
+        if let Some(sk) = &self.sketch {
+            return sk.santa_traces(self.degrees.len() as u64, &self.degrees);
+        }
         let vals = self.acc.values();
         let mut tr4_wedge = vals[A_TR4_WEDGE];
         if self.cfg.exact_wedges {
@@ -433,10 +499,10 @@ impl SantaPass2 {
     }
 
     fn maybe_snapshot(&mut self) {
-        if self.cfg.window.snapshot_due(self.ne) {
+        if self.cfg.est.window.snapshot_due(self.ne) {
             let estimate = SantaEstimate {
                 nv: self.degrees.len() as u64,
-                ne: self.cfg.window.policy.described_len(self.ne),
+                ne: self.cfg.est.window.policy.described_len(self.ne),
                 traces: self.traces_now(),
             };
             self.snapshots.push(Snapshot { t: self.ne, estimate });
@@ -452,8 +518,43 @@ impl SantaPass2 {
     pub fn finish(self) -> SantaEstimate {
         SantaEstimate {
             nv: self.degrees.len() as u64,
-            ne: self.cfg.window.policy.described_len(self.ne),
+            ne: self.cfg.est.window.policy.described_len(self.ne),
             traces: self.traces_now(),
+        }
+    }
+
+    /// Fold another worker's pass-2 state into this one (sketch backend
+    /// only).  Degrees are the shared pass-1 profile — identical in both
+    /// states — so only the sketch and the arrival count combine; entrywise
+    /// bucket addition makes the result bit-identical to a single-state
+    /// run over the concatenated shards.
+    pub(crate) fn merge_from(&mut self, other: &SantaPass2) -> crate::Result<()> {
+        match (&mut self.sketch, &other.sketch) {
+            (Some(a), Some(b)) => a.merge(b)?,
+            (None, None) => {
+                return Err(crate::anyhow!(
+                    "santa merge: reservoir states are not mergeable"
+                ))
+            }
+            _ => return Err(crate::anyhow!("santa merge: backend mismatch")),
+        }
+        self.ne += other.ne;
+        Ok(())
+    }
+
+    /// Approximate resident set of the estimation state in bytes (the
+    /// `repro sketch` accuracy-vs-memory axis).  Counts the backend
+    /// (sketch matrices or reservoir + sample graph) plus per-vertex
+    /// accumulators; excludes the shared pass-1 degree profile.
+    pub fn resident_bytes(&self) -> usize {
+        match &self.sketch {
+            Some(sk) => sk.bytes(),
+            None => {
+                self.cfg.est.budget * 8
+                    + self.sample.arena_len() * 4
+                    + self.sample.intern_capacity() * 8
+                    + (self.inv.len() + self.inv2.len()) * 8
+            }
         }
     }
 
@@ -479,6 +580,13 @@ impl SantaPass2 {
             s.estimate.save(out);
         }
         out.u64(self.ne);
+        match &self.sketch {
+            None => out.u8(0),
+            Some(sk) => {
+                out.u8(1);
+                sk.save(out);
+            }
+        }
     }
 
     /// Rebuild from [`SantaPass2::save`] bytes; `degrees` is the shared
@@ -488,7 +596,7 @@ impl SantaPass2 {
         degrees: std::sync::Arc<Vec<u32>>,
     ) -> crate::Result<SantaPass2> {
         let cfg = SantaConfig::load(d)?;
-        crate::ensure!(cfg.budget > 0, "santa checkpoint: zero budget");
+        crate::ensure!(cfg.est.budget > 0, "santa checkpoint: zero budget");
         let reservoir = WindowedReservoir::load(d)?;
         let sample = SampleGraph::load(d)?;
         let acc = WindowAcc::load(d)?;
@@ -514,6 +622,17 @@ impl SantaPass2 {
             snapshots.push(Snapshot { t, estimate });
         }
         let ne = d.u64()?;
+        let sketch = match d.u8()? {
+            0 => None,
+            1 => Some(GraphSketch::load(d)?),
+            tag => {
+                return Err(crate::anyhow!("santa checkpoint: unknown sketch tag {tag}"))
+            }
+        };
+        crate::ensure!(
+            sketch.is_some() == cfg.est.backend.is_sketch(),
+            "santa checkpoint: sketch state disagrees with the config backend"
+        );
         Ok(SantaPass2 {
             cfg,
             degrees,
@@ -526,6 +645,7 @@ impl SantaPass2 {
             expired: Vec::new(),
             snapshots,
             ne,
+            sketch,
         })
     }
 }

@@ -16,6 +16,7 @@ pub mod approx;
 pub mod classification;
 pub mod drift;
 pub mod scalability;
+pub mod sketch;
 pub mod visualization;
 pub mod workers;
 

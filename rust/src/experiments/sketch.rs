@@ -1,0 +1,201 @@
+//! `repro sketch`: the two estimation backends head-to-head (ISSUE 8).
+//!
+//! For each generated family the experiment streams every graph once
+//! per backend — [`Backend::Reservoir`] with the usual edge-sampling
+//! budget, [`Backend::Sketch`] with a fixed `width × depth` bucket
+//! geometry — and reports, per descriptor, the approximation error
+//! against the exact reference next to the resident bytes of the
+//! estimator state.  That is the trade the backend knob buys: the
+//! reservoir's memory grows with the budget (and its interned sample
+//! graph), the sketch's is fixed up front regardless of stream length.
+//!
+//! Error metrics match the rest of the harness: Canberra distance on
+//! the GABE/MAEVE count descriptors, mean relative error on the five
+//! SANTA traces.  DESIGN.md §11 discusses when to prefer which backend.
+
+use std::sync::Arc;
+
+use crate::analyze::{canberra, mean_relative_error};
+use crate::descriptors::gabe::GabeState;
+use crate::descriptors::maeve::MaeveState;
+use crate::descriptors::santa::{SantaConfig, SantaPass2};
+use crate::exact;
+use crate::gen;
+use crate::graph::{Edge, Graph};
+use crate::sampling::{Backend, EstimatorConfig};
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+use super::{print_table, Ctx};
+
+/// One (descriptor, backend) measurement on a single graph.
+struct Cell {
+    err: f64,
+    bytes: usize,
+}
+
+/// Exact references for one graph.
+struct Truth {
+    gabe: Vec<f64>,
+    maeve: Vec<f64>,
+    traces: [f64; 5],
+}
+
+fn truth(g: &Graph) -> Truth {
+    Truth {
+        gabe: exact::gabe_exact(g).descriptor().to_vec(),
+        maeve: exact::maeve_exact(g).descriptor().to_vec(),
+        traces: exact::santa_exact(g).traces,
+    }
+}
+
+fn degree_profile(g: &Graph) -> Vec<u32> {
+    let mut deg = vec![0u32; g.n];
+    for e in &g.edges {
+        deg[e.u as usize] += 1;
+        deg[e.v as usize] += 1;
+    }
+    deg
+}
+
+/// Drive all three estimator states over one shuffled pass and measure
+/// error + resident bytes.  States are pushed directly (not through the
+/// estimator facades) so the resident footprint can be read *after* the
+/// stream, when reservoir arenas have grown to their final size.
+fn measure(g: &Graph, t: &Truth, cfg: &EstimatorConfig, seed: u64) -> [Cell; 3] {
+    let mut edges: Vec<Edge> = g.edges.clone();
+    Pcg64::seed_from_u64(seed).shuffle(&mut edges);
+
+    let mut gabe = GabeState::from_config(cfg);
+    let mut maeve = MaeveState::from_config(cfg);
+    let degrees = Arc::new(degree_profile(g));
+    let mut santa = SantaPass2::new(SantaConfig::from(cfg.clone()), degrees);
+    for &e in &edges {
+        gabe.push(e);
+        maeve.push(e);
+        santa.push(e);
+    }
+    let (gb, mb, sb) = (gabe.resident_bytes(), maeve.resident_bytes(), santa.resident_bytes());
+
+    let ge = gabe.finish().descriptor();
+    let me = maeve.finish().descriptor();
+    let se = santa.finish().traces;
+    [
+        Cell { err: canberra(&ge, &t.gabe), bytes: gb },
+        Cell { err: canberra(&me, &t.maeve), bytes: mb },
+        Cell { err: mean_relative_error(&t.traces, &se), bytes: sb },
+    ]
+}
+
+/// The `repro sketch` entry point: accuracy vs memory for both
+/// backends on two generated families (powerlaw-cluster and
+/// Erdős–Rényi).  `width`/`depth` set the sketch geometry; `only`
+/// restricts the sweep to a single backend.
+pub fn head_to_head(
+    ctx: &Ctx,
+    width: usize,
+    depth: usize,
+    only: Option<Backend>,
+) -> Result<()> {
+    let n_graphs = ((8.0 * ctx.scale).ceil() as usize).clamp(2, 200);
+    let mut rng = Pcg64::seed_from_u64(ctx.seed ^ 0x5ce7c);
+    let families: [(&str, Vec<Graph>); 2] = [
+        (
+            "plc",
+            (0..n_graphs)
+                .map(|_| {
+                    let n = rng.gen_range_usize(150, 400);
+                    gen::powerlaw_cluster_graph(n, 3, 0.5, &mut rng)
+                })
+                .collect(),
+        ),
+        (
+            "er",
+            (0..n_graphs)
+                .map(|_| {
+                    let n = rng.gen_range_usize(150, 400);
+                    gen::er_graph(n, n * 3, &mut rng)
+                })
+                .collect(),
+        ),
+    ];
+    let backends = [
+        Backend::Reservoir,
+        Backend::Sketch { width, depth },
+    ];
+    let backends: Vec<Backend> = backends
+        .into_iter()
+        .filter(|b| only.map_or(true, |o| o.is_sketch() == b.is_sketch()))
+        .collect();
+    println!(
+        "repro sketch: {n_graphs} graphs/family, backends {}",
+        backends.iter().map(|b| b.to_string()).collect::<Vec<_>>().join(" vs ")
+    );
+
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for (family, graphs) in &families {
+        let truths: Vec<Truth> = graphs.iter().map(truth).collect();
+        for backend in &backends {
+            // mean (err, bytes) per descriptor over the family
+            let mut acc = [(0.0f64, 0.0f64); 3];
+            for (gi, g) in graphs.iter().enumerate() {
+                let budget = (g.m() / 4).max(4);
+                let cfg = EstimatorConfig::new(budget)
+                    .with_seed(ctx.seed ^ (gi as u64) << 4)
+                    .with_backend(*backend);
+                let cells = measure(g, &truths[gi], &cfg, ctx.seed ^ 0xab ^ gi as u64);
+                for (a, c) in acc.iter_mut().zip(&cells) {
+                    a.0 += c.err / graphs.len() as f64;
+                    a.1 += c.bytes as f64 / graphs.len() as f64;
+                }
+            }
+            for (desc, (err, bytes)) in ["gabe", "maeve", "santa"].iter().zip(&acc) {
+                rows.push(vec![
+                    family.to_string(),
+                    desc.to_string(),
+                    backend.to_string(),
+                    format!("{err:.4}"),
+                    format!("{:.1}", bytes / 1024.0),
+                ]);
+                csv.push(format!("{family},{desc},{backend},{err},{bytes}"));
+            }
+        }
+    }
+    print_table(
+        "repro sketch — approximation error vs resident memory",
+        &["family", "descriptor", "backend", "error", "resident KiB"],
+        &rows,
+    );
+    ctx.write_csv(
+        "sketch_backends.csv",
+        "family,descriptor,backend,error,resident_bytes",
+        &csv,
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measure_reports_smaller_sketch_footprint() {
+        let mut rng = Pcg64::seed_from_u64(7);
+        let g = gen::powerlaw_cluster_graph(200, 3, 0.5, &mut rng);
+        let t = truth(&g);
+        let budget = g.m() / 4;
+        let res = measure(&g, &t, &EstimatorConfig::new(budget), 3);
+        let sk = measure(
+            &g,
+            &t,
+            &EstimatorConfig::new(budget).with_backend(Backend::Sketch { width: 16, depth: 2 }),
+            3,
+        );
+        for (r, s) in res.iter().zip(&sk) {
+            assert!(r.bytes > 0 && s.bytes > 0);
+            assert!(s.bytes < r.bytes, "sketch {} !< reservoir {}", s.bytes, r.bytes);
+            assert!(r.err.is_finite() && s.err.is_finite());
+        }
+    }
+}

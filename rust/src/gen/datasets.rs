@@ -15,22 +15,30 @@ use crate::graph::Graph;
 /// A labelled classification dataset.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Table 12 dataset name (one of [`SPECS`]).
     pub name: String,
+    /// The graphs, class-interleaved (`graphs[i]` has `labels[i]`).
     pub graphs: Vec<Graph>,
+    /// Class label per graph, in `0..n_classes`.
     pub labels: Vec<usize>,
+    /// Number of distinct classes.
     pub n_classes: usize,
 }
 
 impl Dataset {
+    /// Number of graphs.
     pub fn len(&self) -> usize {
         self.graphs.len()
     }
+    /// True when the dataset holds no graphs.
     pub fn is_empty(&self) -> bool {
         self.graphs.is_empty()
     }
+    /// Largest graph order `|V|` (Table 12's "Max. Order" column).
     pub fn max_order(&self) -> usize {
         self.graphs.iter().map(|g| g.n).max().unwrap_or(0)
     }
+    /// Largest graph size `|E|` (Table 12's "Max. Size" column).
     pub fn max_size(&self) -> usize {
         self.graphs.iter().map(|g| g.m()).max().unwrap_or(0)
     }

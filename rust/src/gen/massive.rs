@@ -34,6 +34,7 @@ pub enum MassiveKind {
 }
 
 impl MassiveKind {
+    /// Every network, in Table 13 order.
     pub const ALL: [MassiveKind; 7] = [
         MassiveKind::Fo,
         MassiveKind::Us,
@@ -44,6 +45,7 @@ impl MassiveKind {
         MassiveKind::U2,
     ];
 
+    /// The paper's two-letter network tag (also the `--net` CLI spelling).
     pub fn name(&self) -> &'static str {
         match self {
             MassiveKind::Fo => "FO",

@@ -9,12 +9,6 @@
 //!
 //! All generators are deterministic given the seed (Pcg64).
 
-// Rustdoc sweep status (ISSUE 5): the crate-level
-// `#![warn(missing_docs)]` is gated off here until this module gets
-// its own documentation pass; sampling/descriptors/coordinator/graph
-// are fully swept.
-#![allow(missing_docs)]
-
 pub mod datasets;
 pub mod massive;
 

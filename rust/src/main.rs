@@ -29,7 +29,7 @@ use std::process::ExitCode;
 use stream_descriptors::coordinator::PlacementPolicy;
 use stream_descriptors::experiments::{self, Ctx};
 use stream_descriptors::gen::massive::MassiveKind;
-use stream_descriptors::sampling::{WindowConfig, WindowPolicy};
+use stream_descriptors::sampling::{Backend, WindowConfig, WindowPolicy};
 
 #[derive(Debug)]
 struct Args {
@@ -51,6 +51,9 @@ struct Args {
     checkpoint: Option<String>,
     checkpoint_every: u64,
     resume: Option<String>,
+    backend: Option<Backend>,
+    width: usize,
+    depth: usize,
 }
 
 /// The single source of truth for subcommands: `(name, help)`.
@@ -67,6 +70,7 @@ const COMMANDS: &[(&str, &str)] = &[
     ("drift", "windowed descriptors over a churned two-regime stream"),
     ("unbiased", "Theorem 1/2 empirical check"),
     ("ablation", "design-choice ablations (MAEVE vs NetSimile; SANTA wedge term)"),
+    ("sketch", "estimation backends head-to-head: error vs resident memory"),
     ("describe", "one descriptor over an edge list, checkpoint/resume-able"),
     ("convert", "convert a text edge list to the binary .sdg format"),
     ("all", "run everything"),
@@ -94,6 +98,9 @@ const FLAGS: &[(&str, &str, &str)] = &[
     ("--checkpoint", "FILE", "write .sdc checkpoints here during describe"),
     ("--checkpoint-every", "N", "checkpoint cadence in arrivals (describe; 0 = off)"),
     ("--resume", "FILE", "resume describe from a .sdc checkpoint"),
+    ("--backend", "B", "estimation backend: reservoir | sketch (describe; restricts sketch)"),
+    ("--width", "N", "sketch bucket-matrix width (default 64)"),
+    ("--depth", "N", "sketch depth: independent hash rows (default 3)"),
 ];
 
 /// Render the usage text from the command and flag tables.
@@ -149,9 +156,13 @@ fn parse_from(mut it: impl Iterator<Item = String>) -> Result<Args, String> {
         checkpoint: None,
         checkpoint_every: 0,
         resume: None,
+        backend: None,
+        width: Backend::DEFAULT_WIDTH,
+        depth: Backend::DEFAULT_DEPTH,
     };
     let mut decay: Option<f64> = None;
     let mut sliding: Option<usize> = None;
+    let mut backend_name: Option<String> = None;
     while let Some(flag) = it.next() {
         if flag == "-h" || flag == "--help" {
             return Err(usage());
@@ -182,6 +193,9 @@ fn parse_from(mut it: impl Iterator<Item = String>) -> Result<Args, String> {
             "--checkpoint" => a.checkpoint = Some(val),
             "--checkpoint-every" => a.checkpoint_every = val.parse().map_err(int)?,
             "--resume" => a.resume = Some(val),
+            "--backend" => backend_name = Some(val),
+            "--width" => a.width = val.parse().map_err(int)?,
+            "--depth" => a.depth = val.parse().map_err(int)?,
             // every FLAGS entry must have an arm above; the lookup at the
             // top guarantees nothing else reaches here
             other => unreachable!("flag {other} is in FLAGS but has no parser arm"),
@@ -196,6 +210,16 @@ fn parse_from(mut it: impl Iterator<Item = String>) -> Result<Args, String> {
         (None, None) => WindowPolicy::None,
     };
     a.window.validate().map_err(|e| e.to_string())?;
+    // resolved after the loop so `--width`/`--depth` apply regardless of
+    // where they appear relative to `--backend sketch`
+    a.backend = match backend_name.as_deref() {
+        None => None,
+        Some("reservoir") => Some(Backend::Reservoir),
+        Some("sketch") => Some(Backend::Sketch { width: a.width, depth: a.depth }),
+        Some(other) => {
+            return Err(format!("--backend {other} is not one of reservoir, sketch"))
+        }
+    };
     Ok(a)
 }
 
@@ -318,6 +342,7 @@ fn describe(args: &Args) -> stream_descriptors::Result<()> {
             budget: args.budget,
             seed: args.seed,
             window: args.window,
+            backend: args.backend.unwrap_or_default(),
             checkpoint_every: args.checkpoint_every,
             checkpoint_path: args.checkpoint.clone().map(Into::into),
         };
@@ -342,6 +367,7 @@ fn describe(args: &Args) -> stream_descriptors::Result<()> {
             budget: args.budget,
             seed: args.seed,
             window: args.window,
+            backend: args.backend.unwrap_or_default(),
             placement: args.placement,
             checkpoint_every: args.checkpoint_every,
             checkpoint_path: args.checkpoint.clone().map(Into::into),
@@ -405,6 +431,9 @@ fn main() -> ExitCode {
             "drift" => experiments::drift::drift(&ctx, args.window, args.workers),
             "unbiased" => experiments::approx::unbiased(&ctx),
             "ablation" => experiments::ablation::ablation(&ctx),
+            "sketch" => {
+                experiments::sketch::head_to_head(&ctx, args.width, args.depth, args.backend)
+            }
             "describe" => describe(&args),
             "convert" => convert(&args),
             "all" => {
@@ -412,6 +441,7 @@ fn main() -> ExitCode {
                 experiments::approx::fig5(&ctx)?;
                 experiments::approx::unbiased(&ctx)?;
                 experiments::ablation::ablation(&ctx)?;
+                experiments::sketch::head_to_head(&ctx, args.width, args.depth, args.backend)?;
                 experiments::workers::workers(&ctx, args.placement)?;
                 experiments::drift::drift(&ctx, args.window, args.workers)?;
                 experiments::classification::table14(&ctx, args.dataset.as_deref())?;
@@ -451,6 +481,7 @@ mod tests {
         for (name, _, _) in FLAGS {
             let sample = match *name {
                 "--placement" => "compact",
+                "--backend" => "sketch",
                 "--net" => "CS",
                 "--dataset" => "OHSU",
                 "--results" => "out",
@@ -469,6 +500,47 @@ mod tests {
         let err = parse(&["quickstart", "--bogus", "1"]).unwrap_err();
         assert!(err.contains("unknown flag --bogus"));
         assert!(err.contains("OPTIONS:"), "usage text must follow the error");
+    }
+
+    /// ISSUE 8 audit: the I/O-shaped subcommands reject unknown flags at
+    /// parse time — an `Err` with usage, never a silently ignored flag
+    /// that only surfaces after the run started touching files.
+    #[test]
+    fn convert_rejects_unknown_flags() {
+        let err = parse(&["convert", "--input", "g.txt", "--compress", "1"]).unwrap_err();
+        assert!(err.contains("unknown flag --compress"), "{err}");
+        assert!(err.contains("OPTIONS:"), "usage text must follow the error");
+    }
+
+    #[test]
+    fn describe_rejects_unknown_flags() {
+        let err = parse(&["describe", "--input", "g.txt", "--buget", "9"]).unwrap_err();
+        assert!(err.contains("unknown flag --buget"), "{err}");
+        assert!(err.contains("OPTIONS:"), "usage text must follow the error");
+    }
+
+    #[test]
+    fn sketch_rejects_unknown_flags() {
+        let err = parse(&["sketch", "--rows", "4"]).unwrap_err();
+        assert!(err.contains("unknown flag --rows"), "{err}");
+        assert!(err.contains("OPTIONS:"), "usage text must follow the error");
+    }
+
+    /// `--width`/`--depth` shape the sketch backend no matter where they
+    /// sit relative to `--backend sketch`; bad names fail at parse time.
+    #[test]
+    fn backend_flags_assemble_the_backend() {
+        let a = parse(&["sketch", "--width", "32", "--backend", "sketch", "--depth", "4"])
+            .unwrap();
+        assert_eq!(a.backend, Some(Backend::Sketch { width: 32, depth: 4 }));
+        let a = parse(&["describe", "--backend", "reservoir"]).unwrap();
+        assert_eq!(a.backend, Some(Backend::Reservoir));
+        let a = parse(&["sketch"]).unwrap();
+        assert_eq!(a.backend, None);
+        assert_eq!(a.width, Backend::DEFAULT_WIDTH);
+        assert_eq!(a.depth, Backend::DEFAULT_DEPTH);
+        let err = parse(&["describe", "--backend", "hyperloglog"]).unwrap_err();
+        assert!(err.contains("not one of reservoir, sketch"), "{err}");
     }
 
     /// ISSUE 7 satellite: unknown commands are a parse error (printed +
@@ -565,6 +637,7 @@ COMMANDS:
   drift        windowed descriptors over a churned two-regime stream
   unbiased     Theorem 1/2 empirical check
   ablation     design-choice ablations (MAEVE vs NetSimile; SANTA wedge term)
+  sketch       estimation backends head-to-head: error vs resident memory
   describe     one descriptor over an edge list, checkpoint/resume-able
   convert      convert a text edge list to the binary .sdg format
   all          run everything
@@ -589,6 +662,9 @@ OPTIONS:
   --checkpoint FILE  write .sdc checkpoints here during describe
   --checkpoint-every N checkpoint cadence in arrivals (describe; 0 = off)
   --resume FILE      resume describe from a .sdc checkpoint
+  --backend B        estimation backend: reservoir | sketch (describe; restricts sketch)
+  --width N          sketch bucket-matrix width (default 64)
+  --depth N          sketch depth: independent hash rows (default 3)
 ";
         assert_eq!(usage(), expected);
     }

@@ -11,11 +11,17 @@
 //! is the probability that the other `|E_F|-1` edges of the instance are
 //! still in the reservoir after `t-1` steps (Theorem 1: the estimates are
 //! unbiased).
+//!
+//! The reservoir is one of two estimation backends: [`sketch`] holds the
+//! hash-bucket-matrix alternative ([`Backend::Sketch`]) and the shared
+//! [`EstimatorConfig`] every estimator consumes (ISSUE 8).
 
 pub mod reservoir;
+pub mod sketch;
 pub mod window;
 
 pub use reservoir::{Reservoir, ReservoirAction};
+pub use sketch::{Backend, EstimatorConfig, GraphSketch};
 pub use window::{Series, Snapshot, WindowConfig, WindowPolicy, WindowedReservoir};
 
 /// Detection probability `p_t^F` for a pattern with `f_edges` edges at the

@@ -1,0 +1,868 @@
+//! Graph-stream sketches — the second estimation backend (ISSUE 8).
+//!
+//! The reservoir (paper §3.3) is one point in the accuracy-vs-memory
+//! design space: exact edges, probabilistic coverage.  This module holds
+//! the other point, in the style of TCM/GSS stream summarization
+//! (PAPERS.md, arXiv 1809.01246) and EdgeSketch (arXiv 2602.18957): a
+//! fixed-size *hash-bucket matrix* per hash row.  Every arriving edge
+//! `(u, v)` is folded through `depth` pairwise-independent hash
+//! functions into a `width × width` symmetric bucket matrix — an O(1)
+//! update with **no eviction bookkeeping** — and descriptors are read
+//! out at finalize time from closed forms on the compressed bucket
+//! graph, taking the count-min style minimum across rows.
+//!
+//! Two properties the reservoir cannot offer:
+//!
+//! * **Mergeability** — bucket matrices over disjoint streams add
+//!   entrywise, and because every cell is a fixed-point integer the
+//!   merge is *exact*: `merge(sketch(A), sketch(B))` is bit-for-bit
+//!   `sketch(A ++ B)`.  The coordinator exploits this by sharding the
+//!   stream round-robin across workers instead of broadcasting it (see
+//!   [`crate::coordinator`]).
+//! * **Deterministic updates** — no RNG on the hot path; the only
+//!   randomness is the per-row hash parameters drawn once from the
+//!   seed.
+//!
+//! The cost is collision bias: vertices that share a bucket alias their
+//! evidence, so readouts are approximations whose error shrinks with
+//! `width`.  Rule of thumb: prefer the sketch when the vertex set is
+//! large and memory is the binding constraint, the reservoir when
+//! per-instance unbiasedness (Theorem 1) matters.  See DESIGN.md §11.
+//!
+//! [`EstimatorConfig`] and [`Backend`] — the unified builder surface
+//! every estimator and the coordinator consume — live here too, next to
+//! the backend they select.
+
+use crate::checkpoint::{Dec, Enc};
+use crate::count::formulas::ConnectedCounts;
+use crate::sampling::WindowConfig;
+use crate::util::rng::Pcg64;
+
+/// Fixed-point unit: every bucket cell stores multiples of `2⁻³²` as a
+/// `u64`.  Integer cells are what makes [`GraphSketch::merge`] exact —
+/// f64 accumulation would not be bit-associative across shard orders.
+pub const FIXED_ONE: u64 = 1 << 32;
+
+// ---------------------------------------------------------------------------
+// Backend selection + the shared estimator config
+// ---------------------------------------------------------------------------
+
+/// Which estimation backend an estimator runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// The paper's reservoir sampler: ≤ `budget` exact edges, unbiased
+    /// per-instance weights, windowing support.  The default.
+    Reservoir,
+    /// TCM/GSS-style hash-bucket matrices: O(1) deterministic updates,
+    /// exact entrywise merge, memory `depth · width² · 8` bytes
+    /// independent of the stream.
+    Sketch {
+        /// Buckets per hash row (the matrix is `width × width`).
+        width: usize,
+        /// Independent hash rows (count-min style minimum at readout).
+        depth: usize,
+    },
+}
+
+impl Backend {
+    /// Default bucket-matrix width for [`Backend::sketch_default`].
+    pub const DEFAULT_WIDTH: usize = 64;
+    /// Default hash-row count for [`Backend::sketch_default`].
+    pub const DEFAULT_DEPTH: usize = 3;
+
+    /// The sketch backend at its default geometry
+    /// (`64 × 64 × 3` ≈ 96 KiB per estimator).
+    pub fn sketch_default() -> Backend {
+        Backend::Sketch { width: Self::DEFAULT_WIDTH, depth: Self::DEFAULT_DEPTH }
+    }
+
+    /// True for [`Backend::Sketch`].
+    pub fn is_sketch(&self) -> bool {
+        matches!(self, Backend::Sketch { .. })
+    }
+
+    pub(crate) fn save(&self, out: &mut Enc) {
+        match self {
+            Backend::Reservoir => out.u8(0),
+            Backend::Sketch { width, depth } => {
+                out.u8(1);
+                out.usize(*width);
+                out.usize(*depth);
+            }
+        }
+    }
+
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<Backend> {
+        match d.u8()? {
+            0 => Ok(Backend::Reservoir),
+            1 => {
+                let width = d.usize()?;
+                let depth = d.usize()?;
+                Ok(Backend::Sketch { width, depth })
+            }
+            tag => Err(crate::anyhow!("unknown backend tag {tag}")),
+        }
+    }
+}
+
+impl Default for Backend {
+    fn default() -> Self {
+        Backend::Reservoir
+    }
+}
+
+impl std::fmt::Display for Backend {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Backend::Reservoir => write!(f, "reservoir"),
+            Backend::Sketch { width, depth } => write!(f, "sketch(w={width},d={depth})"),
+        }
+    }
+}
+
+/// The one estimator configuration every descriptor shares (ISSUE 8) —
+/// replaces the triplicated `new`/`with_seed`/`with_window` builder
+/// copies that `GabeEstimator`, `MaeveEstimator` and `SantaEstimator`
+/// each carried.
+///
+/// ```
+/// use stream_descriptors::sampling::{Backend, EstimatorConfig};
+/// use stream_descriptors::descriptors::gabe::GabeEstimator;
+/// use stream_descriptors::graph::stream::VecStream;
+/// use stream_descriptors::graph::Graph;
+///
+/// let g = Graph::from_pairs([(0, 1), (1, 2), (0, 2), (2, 3)]);
+/// let cfg = EstimatorConfig::new(g.m()).with_seed(7).with_backend(Backend::sketch_default());
+/// let est = GabeEstimator::from_config(cfg).run(&mut VecStream::shuffled(g.edges.clone(), 1));
+/// assert_eq!(est.ne, 4);
+/// ```
+#[derive(Debug, Clone, PartialEq)]
+pub struct EstimatorConfig {
+    /// Reservoir budget `b` (max stored edges).  The sketch backend
+    /// ignores it — its memory is fixed by `width`/`depth`.
+    pub budget: usize,
+    /// Seed for the reservoir RNG / the sketch hash parameters.
+    pub seed: u64,
+    /// Window policy + snapshot cadence (ISSUE 5).
+    pub window: WindowConfig,
+    /// Which estimation backend to run on.
+    pub backend: Backend,
+}
+
+impl EstimatorConfig {
+    /// Seed used when none is given.  (The per-estimator `new` shims
+    /// keep their historical defaults — `0x9abe`, `0x3a3e`, `0x5a27a` —
+    /// so legacy constructions stay bit-for-bit.)
+    pub const DEFAULT_SEED: u64 = 0xe571;
+
+    /// Config with the given budget; reservoir backend, no window.
+    pub fn new(budget: usize) -> EstimatorConfig {
+        EstimatorConfig {
+            budget,
+            seed: Self::DEFAULT_SEED,
+            window: WindowConfig::default(),
+            backend: Backend::Reservoir,
+        }
+    }
+
+    /// Override the seed.
+    pub fn with_seed(mut self, seed: u64) -> EstimatorConfig {
+        self.seed = seed;
+        self
+    }
+
+    /// Set the window policy and snapshot cadence.
+    pub fn with_window(mut self, window: WindowConfig) -> EstimatorConfig {
+        self.window = window;
+        self
+    }
+
+    /// Select the estimation backend.
+    pub fn with_backend(mut self, backend: Backend) -> EstimatorConfig {
+        self.backend = backend;
+        self
+    }
+
+    /// Check internal consistency.  Beyond [`WindowConfig::validate`]:
+    /// a sketch needs `width ≥ 2` (the matrices are hollow — a 1-bucket
+    /// row drops every edge) and `depth ≥ 1`, and cannot run under a
+    /// `Sliding`/`Decay` window — bucket cells only ever grow, there is
+    /// no eviction path to forget old edges through.  Snapshot strides
+    /// (`WindowPolicy::None` + `with_stride`) are fine: prefix
+    /// descriptors read out of the sketch at any time.
+    pub fn validate(&self) -> crate::Result<()> {
+        self.window.validate()?;
+        if let Backend::Sketch { width, depth } = self.backend {
+            crate::ensure!(width >= 2, "sketch width must be ≥ 2, got {width}");
+            crate::ensure!(depth >= 1, "sketch depth must be ≥ 1, got {depth}");
+            crate::ensure!(
+                !self.window.policy.is_windowed(),
+                "the sketch backend cannot run windowed ({}): bucket cells only \
+                 accumulate — there is no eviction path; use Backend::Reservoir \
+                 for sliding/decay windows",
+                self.window.policy
+            );
+        }
+        Ok(())
+    }
+
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.usize(self.budget);
+        out.u64(self.seed);
+        self.window.save(out);
+        self.backend.save(out);
+    }
+
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<EstimatorConfig> {
+        let budget = d.usize()?;
+        let seed = d.u64()?;
+        let window = WindowConfig::load(d)?;
+        let backend = Backend::load(d)?;
+        Ok(EstimatorConfig { budget, seed, window, backend })
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The sketch proper
+// ---------------------------------------------------------------------------
+
+/// `depth` hash rows of `width × width` symmetric, hollow, fixed-point
+/// bucket matrices accumulating edge evidence.
+///
+/// Row `i` maps vertex `x` to bucket `h_i(x)` with a multiply-shift
+/// hash; `update(u, v)` adds [`FIXED_ONE`] at `[h_i(u)][h_i(v)]` (both
+/// triangles of the symmetric matrix) in every row.  Edges whose
+/// endpoints collide into one bucket are dropped for that row (the
+/// diagonal stays zero — self-loops would corrupt every closed form)
+/// and tallied in a `dropped` diagnostic counter.
+///
+/// Readout adapters ([`connected_counts`](GraphSketch::connected_counts),
+/// [`maeve_readout`](GraphSketch::maeve_readout),
+/// [`santa_traces`](GraphSketch::santa_traces)) evaluate each
+/// descriptor's closed form on the bucket graph per row and take the
+/// count-min style minimum across rows (collisions only add mass, so
+/// every row overestimates).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct GraphSketch {
+    width: usize,
+    depth: usize,
+    seed: u64,
+    /// Per-row multiply-shift parameters `(a, b)`: `a` odd multiplier,
+    /// `b` xor pre-mix.
+    params: Vec<(u64, u64)>,
+    /// `depth` contiguous `width × width` fixed-point matrices.
+    rows: Vec<u64>,
+    /// Same-bucket (row, edge) events dropped by the hollow diagonal.
+    dropped: u64,
+}
+
+impl GraphSketch {
+    /// Empty sketch.  `width`/`depth` per [`Backend::Sketch`]; the seed
+    /// fixes the hash parameters, so two sketches merge only when built
+    /// from the same `(width, depth, seed)`.
+    pub fn new(width: usize, depth: usize, seed: u64) -> GraphSketch {
+        let width = width.max(2);
+        let depth = depth.max(1);
+        let mut rng = Pcg64::seed_from_u64(seed ^ 0x5ce7c);
+        let params: Vec<(u64, u64)> =
+            (0..depth).map(|_| (rng.next_u64() | 1, rng.next_u64())).collect();
+        GraphSketch { width, depth, seed, params, rows: vec![0; depth * width * width], dropped: 0 }
+    }
+
+    /// Buckets per row.
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Hash rows.
+    pub fn depth(&self) -> usize {
+        self.depth
+    }
+
+    /// Same-bucket drop events (diagnostic; grows with collision rate).
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    /// Resident bytes of the bucket matrices + hash parameters.
+    pub fn bytes(&self) -> usize {
+        self.rows.len() * 8 + self.params.len() * 16 + std::mem::size_of::<GraphSketch>()
+    }
+
+    /// Row `i`'s bucket for vertex `x` (multiply-shift).
+    #[inline]
+    fn bucket(&self, row: usize, x: u32) -> usize {
+        let (a, b) = self.params[row];
+        (((x as u64 ^ b).wrapping_mul(a) >> 32) % self.width as u64) as usize
+    }
+
+    /// Record one unit-weight edge: O(depth) bucket increments.
+    #[inline]
+    pub fn update(&mut self, u: u32, v: u32) {
+        self.update_fixed(u, v, FIXED_ONE);
+    }
+
+    /// Record one edge with weight `q ∈ [0, 1]` (SANTA's normalized
+    /// adjacency mass `1/√(dᵤdᵥ)`), rounded to the fixed-point grid.
+    #[inline]
+    pub fn update_weighted(&mut self, u: u32, v: u32, q: f64) {
+        self.update_fixed(u, v, (q * FIXED_ONE as f64).round() as u64);
+    }
+
+    fn update_fixed(&mut self, u: u32, v: u32, q: u64) {
+        let w = self.width;
+        for i in 0..self.depth {
+            let a = self.bucket(i, u);
+            let b = self.bucket(i, v);
+            if a == b {
+                self.dropped += 1;
+                continue;
+            }
+            let base = i * w * w;
+            self.rows[base + a * w + b] = self.rows[base + a * w + b].wrapping_add(q);
+            self.rows[base + b * w + a] = self.rows[base + b * w + a].wrapping_add(q);
+        }
+    }
+
+    /// Entrywise merge: after `merge(sketch(A), sketch(B))` this sketch
+    /// is bit-for-bit `sketch(A ++ B)` — integer cells make the combine
+    /// exact and order-independent.  Errors when the geometries or hash
+    /// seeds differ (the bucket spaces would not align).
+    pub fn merge(&mut self, other: &GraphSketch) -> crate::Result<()> {
+        crate::ensure!(
+            self.width == other.width && self.depth == other.depth,
+            "sketch merge: geometry mismatch ({}×{}·{} vs {}×{}·{})",
+            self.width,
+            self.width,
+            self.depth,
+            other.width,
+            other.width,
+            other.depth
+        );
+        crate::ensure!(
+            self.seed == other.seed,
+            "sketch merge: hash seed mismatch ({:#x} vs {:#x})",
+            self.seed,
+            other.seed
+        );
+        for (c, o) in self.rows.iter_mut().zip(&other.rows) {
+            *c = c.wrapping_add(*o);
+        }
+        self.dropped += other.dropped;
+        Ok(())
+    }
+
+    pub(crate) fn save(&self, out: &mut Enc) {
+        out.usize(self.width);
+        out.usize(self.depth);
+        out.u64(self.seed);
+        for &(a, b) in &self.params {
+            out.u64(a);
+            out.u64(b);
+        }
+        for &c in &self.rows {
+            out.u64(c);
+        }
+        out.u64(self.dropped);
+    }
+
+    pub(crate) fn load(d: &mut Dec<'_>) -> crate::Result<GraphSketch> {
+        let width = d.usize()?;
+        let depth = d.usize()?;
+        crate::ensure!(width >= 2 && depth >= 1, "sketch checkpoint: bad geometry {width}×{depth}");
+        let cells = depth
+            .checked_mul(width)
+            .and_then(|x| x.checked_mul(width))
+            .ok_or_else(|| crate::anyhow!("sketch checkpoint: geometry overflows"))?;
+        let seed = d.u64()?;
+        let mut params = Vec::with_capacity(depth);
+        for _ in 0..depth {
+            let a = d.u64()?;
+            let b = d.u64()?;
+            params.push((a, b));
+        }
+        let mut rows = Vec::with_capacity(cells);
+        for _ in 0..cells {
+            rows.push(d.u64()?);
+        }
+        let dropped = d.u64()?;
+        Ok(GraphSketch { width, depth, seed, params, rows, dropped })
+    }
+
+    // -- readout adapters ---------------------------------------------------
+
+    /// Row `i` as an f64 matrix (cells ÷ 2³²) plus its row sums
+    /// (weighted bucket degrees).
+    fn row_matrix(&self, row: usize) -> (Vec<f64>, Vec<f64>) {
+        let w = self.width;
+        let base = row * w * w;
+        let a: Vec<f64> =
+            self.rows[base..base + w * w].iter().map(|&c| c as f64 / FIXED_ONE as f64).collect();
+        let mut s = vec![0.0; w];
+        for x in 0..w {
+            s[x] = a[x * w..(x + 1) * w].iter().sum();
+        }
+        (a, s)
+    }
+
+    /// GABE readout: weighted non-induced counts of the six connected
+    /// patterns on the bucket graph, minimum across rows per pattern.
+    /// With a collision-free hash (every vertex its own bucket) the
+    /// closed forms are the exact counts.
+    pub fn connected_counts(&self) -> ConnectedCounts {
+        let mut best = ConnectedCounts::default();
+        for row in 0..self.depth {
+            let c = self.row_connected_counts(row);
+            if row == 0 {
+                best = c;
+            } else {
+                best.triangle = best.triangle.min(c.triangle);
+                best.path4 = best.path4.min(c.path4);
+                best.cycle4 = best.cycle4.min(c.cycle4);
+                best.paw = best.paw.min(c.paw);
+                best.diamond = best.diamond.min(c.diamond);
+                best.k4 = best.k4.min(c.k4);
+            }
+        }
+        best
+    }
+
+    fn row_connected_counts(&self, row: usize) -> ConnectedCounts {
+        let w = self.width;
+        let (a, s) = self.row_matrix(row);
+        // triangles + paws share the ordered-triple loop
+        let mut tri = 0.0;
+        let mut paw = 0.0;
+        for x in 0..w {
+            for y in x + 1..w {
+                let axy = a[x * w + y];
+                if axy == 0.0 {
+                    continue;
+                }
+                for z in y + 1..w {
+                    let axz = a[x * w + z];
+                    let ayz = a[y * w + z];
+                    let t = axy * axz * ayz;
+                    if t == 0.0 {
+                        continue;
+                    }
+                    tri += t;
+                    // pendant edge off each triangle corner
+                    paw += t
+                        * ((s[x] - axy - axz) + (s[y] - axy - ayz) + (s[z] - axz - ayz));
+                }
+            }
+        }
+        // pairwise loop: codegree moments feed paths, 4-cycles, diamonds
+        let mut path4 = 0.0;
+        let mut c4 = 0.0;
+        let mut diamond = 0.0;
+        for x in 0..w {
+            for y in x + 1..w {
+                let mut q = 0.0; // Σ_z A[xz]·A[yz]   (weighted codegree)
+                let mut q2 = 0.0; // Σ_z (A[xz]·A[yz])²
+                for z in 0..w {
+                    let m = a[x * w + z] * a[y * w + z];
+                    q += m;
+                    q2 += m * m;
+                }
+                let axy = a[x * w + y];
+                if axy > 0.0 {
+                    path4 += axy * (s[x] - axy) * (s[y] - axy);
+                }
+                let pairs = (q * q - q2) / 2.0; // Σ_{z<z'} m_z·m_z'
+                c4 += pairs / 2.0; // each 4-cycle seen from both diagonals
+                diamond += axy * pairs; // chord edge picks each diamond once
+            }
+        }
+        // the path closed form counts each triangle 3× as a degenerate path
+        path4 -= 3.0 * tri;
+        // 4-cliques: base edge × common-neighbor pair × their chord; each
+        // K4 appears once per (edge, complementary pair) = 6 times
+        let mut k4 = 0.0;
+        let mut cs: Vec<usize> = Vec::with_capacity(w);
+        for x in 0..w {
+            for y in x + 1..w {
+                let axy = a[x * w + y];
+                if axy == 0.0 {
+                    continue;
+                }
+                cs.clear();
+                for z in 0..w {
+                    if a[x * w + z] > 0.0 && a[y * w + z] > 0.0 {
+                        cs.push(z);
+                    }
+                }
+                for (i, &zi) in cs.iter().enumerate() {
+                    let wi = a[x * w + zi] * a[y * w + zi];
+                    for &zj in &cs[i + 1..] {
+                        let chord = a[zi * w + zj];
+                        if chord > 0.0 {
+                            k4 += axy * wi * a[x * w + zj] * a[y * w + zj] * chord;
+                        }
+                    }
+                }
+            }
+        }
+        k4 /= 6.0;
+        ConnectedCounts {
+            triangle: tri,
+            path4: path4.max(0.0),
+            cycle4: c4,
+            paw: paw.max(0.0),
+            diamond,
+            k4,
+        }
+    }
+
+    /// MAEVE readout: per-vertex triangle and path-endpoint estimates.
+    /// Each row distributes its bucket's triangle / wedge-endpoint mass
+    /// over the vertices hashed there proportionally to exact degree
+    /// (`d_v / s_bucket`); the minimum across rows is kept.  With a
+    /// collision-free hash the share is 1 and the values exact.
+    pub fn maeve_readout(&self, degrees: &[u32]) -> (Vec<f64>, Vec<f64>) {
+        let n = degrees.len();
+        let w = self.width;
+        let mut tri = vec![f64::INFINITY; n];
+        let mut path = vec![f64::INFINITY; n];
+        for row in 0..self.depth {
+            let (a, s) = self.row_matrix(row);
+            // bucket triangle mass (vertex-incidence convention)
+            let mut btri = vec![0.0; w];
+            for x in 0..w {
+                for y in x + 1..w {
+                    let axy = a[x * w + y];
+                    if axy == 0.0 {
+                        continue;
+                    }
+                    for z in y + 1..w {
+                        let t = axy * a[x * w + z] * a[y * w + z];
+                        if t != 0.0 {
+                            btri[x] += t;
+                            btri[y] += t;
+                            btri[z] += t;
+                        }
+                    }
+                }
+            }
+            // bucket wedge-endpoint mass: Σ_y A[xy]·(s_y − A[xy])
+            let mut bpath = vec![0.0; w];
+            for x in 0..w {
+                for y in 0..w {
+                    let axy = a[x * w + y];
+                    if axy > 0.0 {
+                        bpath[x] += axy * (s[y] - axy);
+                    }
+                }
+            }
+            for (v, &d) in degrees.iter().enumerate() {
+                if d == 0 {
+                    continue;
+                }
+                let b = self.bucket(row, v as u32);
+                let share = if s[b] > 0.0 { d as f64 / s[b] } else { 0.0 };
+                tri[v] = tri[v].min(btri[b] * share);
+                path[v] = path[v].min(bpath[b] * share);
+            }
+        }
+        for v in 0..n {
+            if !tri[v].is_finite() {
+                tri[v] = 0.0;
+            }
+            if !path[v].is_finite() {
+                path[v] = 0.0;
+            }
+        }
+        (tri, path)
+    }
+
+    /// SANTA readout from a sketch fed `update_weighted(u, v, 1/√(dᵤdᵥ))`:
+    /// the normalized-Laplacian trace vector `[|V|, tr L, tr L², tr L³,
+    /// tr L⁴]` via Frobenius sums of the bucketed normalized adjacency
+    /// `N` — `tr Lᵏ = Σⱼ C(k,j)(−1)ʲ tr Nʲ` with `tr N = 0`,
+    /// `tr N² = Σ N²ₓᵧ`, `tr N³`, `tr N⁴ = Σ (N²)²ₓᵧ`.  One row (the
+    /// one with minimal `tr N²`, the basic collision indicator) supplies
+    /// all three moments so the traces stay internally consistent.
+    pub fn santa_traces(&self, nv: u64, degrees: &[u32]) -> [f64; 5] {
+        let ni = degrees.iter().filter(|&&d| d > 0).count() as f64;
+        let w = self.width;
+        let mut best: Option<(f64, f64, f64)> = None;
+        for row in 0..self.depth {
+            let (a, _) = self.row_matrix(row);
+            let mut f2 = 0.0;
+            for &c in &a {
+                f2 += c * c;
+            }
+            // B = N² ; tr N³ = Σ N[xy]·B[yx], tr N⁴ = Σ B²
+            let mut f3 = 0.0;
+            let mut f4 = 0.0;
+            for x in 0..w {
+                for y in 0..w {
+                    let mut b = 0.0;
+                    for z in 0..w {
+                        b += a[x * w + z] * a[z * w + y];
+                    }
+                    f3 += a[y * w + x] * b;
+                    f4 += b * b;
+                }
+            }
+            match best {
+                Some((bf2, _, _)) if bf2 <= f2 => {}
+                _ => best = Some((f2, f3, f4)),
+            }
+        }
+        let (f2, f3, f4) = best.unwrap_or((0.0, 0.0, 0.0));
+        [
+            nv as f64,
+            ni,
+            ni + f2,
+            ni + 3.0 * f2 - f3,
+            ni + 6.0 * f2 - 4.0 * f3 + f4,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::descriptors::gabe::GabeEstimator;
+    use crate::descriptors::maeve::MaeveEstimator;
+    use crate::descriptors::santa::SantaEstimator;
+    use crate::gen;
+    use crate::graph::stream::VecStream;
+    use crate::graph::Graph;
+
+    /// Find a seed whose hash maps `0..n` injectively in every row —
+    /// the collision-free regime where readouts must be exact.
+    fn collision_free_seed(width: usize, depth: usize, n: usize) -> u64 {
+        'seed: for seed in 0..10_000u64 {
+            let sk = GraphSketch::new(width, depth, seed);
+            for row in 0..depth {
+                let mut used = vec![false; width];
+                for x in 0..n {
+                    let b = sk.bucket(row, x as u32);
+                    if used[b] {
+                        continue 'seed;
+                    }
+                    used[b] = true;
+                }
+            }
+            return seed;
+        }
+        panic!("no collision-free seed for width {width}, n {n}");
+    }
+
+    fn feed(sk: &mut GraphSketch, g: &Graph) {
+        for e in &g.edges {
+            sk.update(e.u, e.v);
+        }
+    }
+
+    #[test]
+    fn update_is_symmetric_and_hollow() {
+        let mut sk = GraphSketch::new(8, 2, 3);
+        sk.update(1, 2);
+        sk.update(1, 2);
+        for row in 0..2 {
+            let (a, _) = sk.row_matrix(row);
+            for x in 0..8 {
+                assert_eq!(a[x * 8 + x], 0.0, "diagonal must stay zero");
+                for y in 0..8 {
+                    assert_eq!(a[x * 8 + y], a[y * 8 + x], "symmetry");
+                }
+            }
+            let total: f64 = a.iter().sum();
+            // 2 updates × 2 mirrored cells, unless the row collided
+            assert!(total == 4.0 || total == 0.0);
+        }
+    }
+
+    #[test]
+    fn same_bucket_edges_are_dropped_and_counted() {
+        let sk0 = GraphSketch::new(2, 1, 0);
+        // with width 2 some pair of 0..4 must collide; find one
+        let (mut u, mut v) = (0u32, 1u32);
+        'out: for x in 0..4u32 {
+            for y in x + 1..5 {
+                if sk0.bucket(0, x) == sk0.bucket(0, y) {
+                    u = x;
+                    v = y;
+                    break 'out;
+                }
+            }
+        }
+        let mut sk = GraphSketch::new(2, 1, 0);
+        sk.update(u, v);
+        assert_eq!(sk.dropped(), 1);
+        assert!(sk.rows.iter().all(|&c| c == 0));
+    }
+
+    /// The merge law, bit-for-bit: sketch(A) ⊕ sketch(B) == sketch(A++B).
+    #[test]
+    fn merge_equals_sketch_of_concatenation() {
+        let mut rng = Pcg64::seed_from_u64(11);
+        let g = gen::powerlaw_cluster_graph(200, 3, 0.5, &mut rng);
+        for (width, depth) in [(16, 1), (32, 3), (64, 4)] {
+            for cut in [0, 1, g.m() / 3, g.m() / 2, g.m()] {
+                let mut left = GraphSketch::new(width, depth, 9);
+                let mut right = GraphSketch::new(width, depth, 9);
+                let mut whole = GraphSketch::new(width, depth, 9);
+                for (i, e) in g.edges.iter().enumerate() {
+                    if i < cut {
+                        left.update(e.u, e.v);
+                    } else {
+                        right.update(e.u, e.v);
+                    }
+                    whole.update(e.u, e.v);
+                }
+                left.merge(&right).unwrap();
+                assert_eq!(left, whole, "w={width} d={depth} cut={cut}");
+            }
+        }
+    }
+
+    #[test]
+    fn merge_rejects_mismatched_geometry_and_seed() {
+        let mut a = GraphSketch::new(16, 2, 1);
+        assert!(a.merge(&GraphSketch::new(32, 2, 1)).is_err());
+        assert!(a.merge(&GraphSketch::new(16, 3, 1)).is_err());
+        assert!(a.merge(&GraphSketch::new(16, 2, 2)).is_err());
+        assert!(a.merge(&GraphSketch::new(16, 2, 1)).is_ok());
+    }
+
+    #[test]
+    fn save_load_round_trips_bit_for_bit() {
+        let mut rng = Pcg64::seed_from_u64(12);
+        let g = gen::er_graph(60, 150, &mut rng);
+        let mut sk = GraphSketch::new(16, 3, 77);
+        feed(&mut sk, &g);
+        let mut enc = Enc::new();
+        sk.save(&mut enc);
+        let bytes = enc.into_bytes();
+        let back = GraphSketch::load(&mut Dec::new(&bytes)).unwrap();
+        assert_eq!(sk, back);
+    }
+
+    /// Collision-free regime: the GABE readout's closed forms on the
+    /// bucket graph are the exact non-induced counts.
+    #[test]
+    fn collision_free_counts_match_exact_estimator() {
+        use crate::count::idx;
+        let mut rng = Pcg64::seed_from_u64(13);
+        let g = gen::er_graph(14, 34, &mut rng);
+        let seed = collision_free_seed(64, 2, g.n);
+        let mut sk = GraphSketch::new(64, 2, seed);
+        feed(&mut sk, &g);
+        let c = sk.connected_counts();
+        let mut s = VecStream::shuffled(g.edges.clone(), 5);
+        let exact = GabeEstimator::new(g.m() + 1).run(&mut s);
+        for (got, want) in [
+            (c.triangle, exact.counts[idx::TRIANGLE]),
+            (c.path4, exact.counts[idx::PATH4]),
+            (c.cycle4, exact.counts[idx::CYCLE4]),
+            (c.paw, exact.counts[idx::PAW]),
+            (c.diamond, exact.counts[idx::DIAMOND]),
+            (c.k4, exact.counts[idx::K4]),
+        ] {
+            assert!((got - want).abs() < 1e-6, "{got} vs {want}");
+        }
+    }
+
+    /// Collision-free regime: MAEVE's per-vertex triangle / path vectors
+    /// are exact.
+    #[test]
+    fn collision_free_maeve_readout_matches_exact_estimator() {
+        let mut rng = Pcg64::seed_from_u64(14);
+        let g = gen::powerlaw_cluster_graph(20, 3, 0.6, &mut rng);
+        let seed = collision_free_seed(96, 2, g.n);
+        let mut sk = GraphSketch::new(96, 2, seed);
+        feed(&mut sk, &g);
+        let degrees = g.degrees();
+        let (tri, path) = sk.maeve_readout(&degrees);
+        let mut s = VecStream::shuffled(g.edges.clone(), 6);
+        let exact = MaeveEstimator::new(g.m() + 1).run(&mut s);
+        for v in 0..g.n {
+            assert!((tri[v] - exact.triangles[v]).abs() < 1e-6, "tri[{v}]");
+            assert!((path[v] - exact.paths[v]).abs() < 1e-6, "path[{v}]");
+        }
+    }
+
+    /// Collision-free regime: the Frobenius-sum trace readout equals the
+    /// exact SANTA traces.
+    #[test]
+    fn collision_free_santa_traces_match_exact_estimator() {
+        let mut rng = Pcg64::seed_from_u64(15);
+        let g = gen::er_graph(18, 40, &mut rng);
+        let degrees = g.degrees();
+        let seed = collision_free_seed(64, 2, g.n);
+        let mut sk = GraphSketch::new(64, 2, seed);
+        for e in &g.edges {
+            let q = 1.0
+                / ((degrees[e.u as usize] as f64) * (degrees[e.v as usize] as f64)).sqrt();
+            sk.update_weighted(e.u, e.v, q);
+        }
+        let got = sk.santa_traces(g.n as u64, &degrees);
+        let mut s = VecStream::shuffled(g.edges.clone(), 7);
+        let exact = SantaEstimator::new(g.m() + 1).run(&mut s);
+        for k in 0..5 {
+            let rel = (got[k] - exact.traces[k]).abs() / exact.traces[k].abs().max(1.0);
+            assert!(rel < 1e-4, "trace {k}: {} vs {}", got[k], exact.traces[k]);
+        }
+    }
+
+    #[test]
+    fn config_validates_backend_and_window() {
+        use crate::sampling::WindowPolicy;
+        assert!(EstimatorConfig::new(10).validate().is_ok());
+        let sketchy = EstimatorConfig::new(10).with_backend(Backend::sketch_default());
+        assert!(sketchy.validate().is_ok());
+        let bad_w = EstimatorConfig::new(10).with_backend(Backend::Sketch { width: 1, depth: 3 });
+        assert!(bad_w.validate().is_err());
+        let bad_d = EstimatorConfig::new(10).with_backend(Backend::Sketch { width: 8, depth: 0 });
+        assert!(bad_d.validate().is_err());
+        let windowed = EstimatorConfig::new(10)
+            .with_backend(Backend::sketch_default())
+            .with_window(WindowConfig::new(WindowPolicy::Sliding { w: 5 }));
+        assert!(windowed.validate().is_err());
+        // snapshot strides without a window policy are allowed
+        let strided = EstimatorConfig::new(10)
+            .with_backend(Backend::sketch_default())
+            .with_window(WindowConfig::default().with_stride(100));
+        assert!(strided.validate().is_ok());
+    }
+
+    #[test]
+    fn config_save_load_round_trips() {
+        let cfg = EstimatorConfig::new(123)
+            .with_seed(0xfeed)
+            .with_backend(Backend::Sketch { width: 48, depth: 5 });
+        let mut enc = Enc::new();
+        cfg.save(&mut enc);
+        let bytes = enc.into_bytes();
+        let back = EstimatorConfig::load(&mut Dec::new(&bytes)).unwrap();
+        assert_eq!(cfg, back);
+    }
+
+    /// Collision bias shrinks as width grows (sanity on the tradeoff the
+    /// `repro sketch` experiment charts).
+    #[test]
+    fn wider_sketches_estimate_triangles_better() {
+        let mut rng = Pcg64::seed_from_u64(16);
+        let g = gen::powerlaw_cluster_graph(300, 4, 0.6, &mut rng);
+        let mut s = VecStream::shuffled(g.edges.clone(), 3);
+        let exact = GabeEstimator::new(g.m() + 1).run(&mut s);
+        use crate::count::idx;
+        let want = exact.counts[idx::TRIANGLE];
+        let mut errs = Vec::new();
+        for width in [8, 32, 128] {
+            let mut sk = GraphSketch::new(width, 3, 21);
+            feed(&mut sk, &g);
+            let got = sk.connected_counts().triangle;
+            errs.push((got - want).abs() / want.max(1.0));
+        }
+        assert!(
+            errs[2] < errs[0],
+            "width 128 should beat width 8: {errs:?}"
+        );
+    }
+}

@@ -1,0 +1,334 @@
+//! ISSUE 8 differential suite for the estimation-backend split:
+//!
+//! 1. **Reservoir pinning** — the pre-PR constructors (`new` /
+//!    `with_seed` / `with_window`) and the unified
+//!    [`EstimatorConfig`] path produce **bit-for-bit** identical
+//!    estimates on all three descriptors, and the pipeline is
+//!    bit-for-bit indifferent to spelling out `Backend::Reservoir`
+//!    (the default).  The config refactor must be pure plumbing.
+//! 2. **Merge law** — `merge(sketch(A), sketch(B))` equals
+//!    `sketch(A ++ B)` exactly: bucket cells are wrapping integer
+//!    sums, so the merge is associative and order-blind.  Checked
+//!    directly on [`GraphSketch`] and end-to-end through the
+//!    coordinator's sharded pipeline, whose worker-state merge must
+//!    land bit-for-bit on the single-state direct run.
+//! 3. **Validation** — the combinations DESIGN.md §11 rules out
+//!    (windows, snapshot strides, pipeline checkpoints, SANTA
+//!    `exact_wedges`) are rejected up front with telling errors.
+
+use stream_descriptors::checkpoint::{run_direct, DirectConfig};
+use stream_descriptors::coordinator::{
+    run_pipeline, CoordinatorConfig, DescriptorKind, WorkerEstimate,
+};
+use stream_descriptors::descriptors::gabe::GabeEstimator;
+use stream_descriptors::descriptors::maeve::MaeveEstimator;
+use stream_descriptors::descriptors::santa::{SantaConfig, SantaEstimator};
+use stream_descriptors::gen;
+use stream_descriptors::graph::stream::VecStream;
+use stream_descriptors::graph::{Edge, Graph};
+use stream_descriptors::sampling::{
+    Backend, EstimatorConfig, GraphSketch, WindowConfig, WindowPolicy,
+};
+use stream_descriptors::util::fault::FaultPlan;
+use stream_descriptors::util::rng::Pcg64;
+
+const KINDS: [DescriptorKind; 3] = [
+    DescriptorKind::Gabe,
+    DescriptorKind::Maeve,
+    DescriptorKind::Santa { exact_wedges: false },
+];
+
+fn test_graph() -> Graph {
+    gen::powerlaw_cluster_graph(180, 3, 0.5, &mut Pcg64::seed_from_u64(41))
+}
+
+fn assert_bit_identical(a: &WorkerEstimate, b: &WorkerEstimate, what: &str) {
+    match (a, b) {
+        (WorkerEstimate::Gabe(x), WorkerEstimate::Gabe(y)) => {
+            assert_eq!((x.nv, x.ne), (y.nv, y.ne), "{what}");
+            assert_eq!(x.degrees, y.degrees, "{what}");
+            for (p, q) in x.counts.iter().zip(&y.counts) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{what}: {p} vs {q}");
+            }
+        }
+        (WorkerEstimate::Maeve(x), WorkerEstimate::Maeve(y)) => {
+            assert_eq!((x.nv, x.ne), (y.nv, y.ne), "{what}");
+            let xs = x.triangles.iter().chain(&x.paths);
+            let ys = y.triangles.iter().chain(&y.paths);
+            for (p, q) in xs.zip(ys) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{what}: {p} vs {q}");
+            }
+        }
+        (WorkerEstimate::Santa(x), WorkerEstimate::Santa(y)) => {
+            assert_eq!((x.nv, x.ne), (y.nv, y.ne), "{what}");
+            for (p, q) in x.traces.iter().zip(&y.traces) {
+                assert_eq!(p.to_bits(), q.to_bits(), "{what}: {p} vs {q}");
+            }
+        }
+        _ => panic!("{what}: descriptor kinds differ"),
+    }
+}
+
+/// Differential 1a: every legacy builder chain is a pure delegate of the
+/// [`EstimatorConfig`] path — same bits out, descriptor by descriptor,
+/// full-history and windowed.
+#[test]
+fn legacy_builders_delegate_bit_for_bit() {
+    let g = test_graph();
+    let b = g.m() / 3;
+    let windows = [
+        WindowConfig::default(),
+        WindowConfig::new(WindowPolicy::Sliding { w: g.m() / 2 }).with_stride(g.m() / 5),
+    ];
+    for window in windows {
+        let cfg = EstimatorConfig::new(b).with_seed(9).with_window(window);
+        let mut s = VecStream::shuffled(g.edges.clone(), 7);
+        let old = GabeEstimator::new(b).with_seed(9).with_window(window).run(&mut s);
+        let mut s = VecStream::shuffled(g.edges.clone(), 7);
+        let new = GabeEstimator::from_config(cfg.clone()).run(&mut s);
+        assert_bit_identical(
+            &WorkerEstimate::Gabe(old),
+            &WorkerEstimate::Gabe(new),
+            "gabe builders",
+        );
+
+        let mut s = VecStream::shuffled(g.edges.clone(), 7);
+        let old = MaeveEstimator::new(b).with_seed(9).with_window(window).run(&mut s);
+        let mut s = VecStream::shuffled(g.edges.clone(), 7);
+        let new = MaeveEstimator::from_config(cfg.clone()).run(&mut s);
+        assert_bit_identical(
+            &WorkerEstimate::Maeve(old),
+            &WorkerEstimate::Maeve(new),
+            "maeve builders",
+        );
+
+        let mut s = VecStream::shuffled(g.edges.clone(), 7);
+        let old = SantaEstimator::new(b).with_seed(9).with_window(window).run(&mut s);
+        let mut s = VecStream::shuffled(g.edges.clone(), 7);
+        // the seed sits on the shared config, so `From<EstimatorConfig>`
+        // must carry it into SantaConfig unchanged
+        let new = SantaEstimator::from_config(cfg.clone()).run(&mut s);
+        assert_bit_identical(
+            &WorkerEstimate::Santa(old),
+            &WorkerEstimate::Santa(new),
+            "santa builders",
+        );
+    }
+}
+
+/// Differential 1b: a pipeline that spells out `Backend::Reservoir`
+/// is bit-for-bit the default pipeline — the backend knob cannot
+/// perturb the pre-PR path.
+#[test]
+fn reservoir_pipeline_is_indifferent_to_the_backend_field() {
+    let g = test_graph();
+    for kind in KINDS {
+        let base = CoordinatorConfig {
+            workers: 3,
+            budget: g.m() / 3,
+            chunk_size: 64,
+            queue_depth: 2,
+            seed: 23,
+            fault: Some(FaultPlan::none()),
+            ..Default::default()
+        };
+        let explicit = CoordinatorConfig { backend: Backend::Reservoir, ..base.clone() };
+        let mut s = VecStream::shuffled(g.edges.clone(), 5);
+        let a = run_pipeline(&mut s, kind, &base).unwrap();
+        let mut s = VecStream::shuffled(g.edges.clone(), 5);
+        let b = run_pipeline(&mut s, kind, &explicit).unwrap();
+        assert_bit_identical(&a.averaged, &b.averaged, "explicit reservoir backend");
+    }
+}
+
+/// The merge law, directly on the sketch: splitting a stream anywhere
+/// and merging the two halves' sketches reproduces the single-pass
+/// sketch exactly, through every readout channel.
+#[test]
+fn sketch_merge_matches_the_single_pass() {
+    let g = test_graph();
+    let mut edges: Vec<Edge> = g.edges.clone();
+    Pcg64::seed_from_u64(3).shuffle(&mut edges);
+    let mut degrees = vec![0u32; g.n];
+    for e in &edges {
+        degrees[e.u as usize] += 1;
+        degrees[e.v as usize] += 1;
+    }
+
+    for cut in [1, edges.len() / 3, edges.len() / 2, edges.len() - 1] {
+        let mut whole = GraphSketch::new(32, 3, 0xfab);
+        let mut left = GraphSketch::new(32, 3, 0xfab);
+        let mut right = GraphSketch::new(32, 3, 0xfab);
+        for (i, e) in edges.iter().enumerate() {
+            whole.update(e.u, e.v);
+            if i < cut { &mut left } else { &mut right }.update(e.u, e.v);
+        }
+        left.merge(&right).unwrap();
+
+        let (a, b) = (whole.connected_counts(), left.connected_counts());
+        for (p, q) in [
+            (a.triangle, b.triangle),
+            (a.path4, b.path4),
+            (a.cycle4, b.cycle4),
+            (a.paw, b.paw),
+            (a.diamond, b.diamond),
+            (a.k4, b.k4),
+        ] {
+            assert_eq!(p.to_bits(), q.to_bits(), "cut={cut}: counts {p} vs {q}");
+        }
+        let (wt, wp) = whole.maeve_readout(&degrees);
+        let (mt, mp) = left.maeve_readout(&degrees);
+        for (p, q) in wt.iter().chain(&wp).zip(mt.iter().chain(&mp)) {
+            assert_eq!(p.to_bits(), q.to_bits(), "cut={cut}: maeve {p} vs {q}");
+        }
+        let ws = whole.santa_traces(g.n as u64, &degrees);
+        let ms = left.santa_traces(g.n as u64, &degrees);
+        for (p, q) in ws.iter().zip(&ms) {
+            assert_eq!(p.to_bits(), q.to_bits(), "cut={cut}: traces {p} vs {q}");
+        }
+    }
+
+    // merging across geometries or hash seeds is refused
+    let err = GraphSketch::new(32, 3, 1).merge(&GraphSketch::new(16, 3, 1)).unwrap_err();
+    assert!(err.to_string().contains("geometry"), "{err}");
+    let err = GraphSketch::new(32, 3, 1).merge(&GraphSketch::new(32, 3, 2)).unwrap_err();
+    assert!(err.to_string().contains("seed"), "{err}");
+}
+
+/// The merge law, end-to-end: the sharded sketch pipeline (each chunk
+/// to exactly one worker, worker states merged at the barrier) lands
+/// bit-for-bit on the single-state direct run — for all three
+/// descriptors and any worker count.
+#[test]
+fn pipeline_sketch_run_matches_the_direct_run() {
+    let g = test_graph();
+    let backend = Backend::Sketch { width: 32, depth: 3 };
+    for kind in KINDS {
+        let direct_cfg = DirectConfig {
+            kind,
+            budget: g.m() / 3,
+            seed: 23,
+            backend,
+            ..Default::default()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 5);
+        let direct = run_direct(&mut s, &direct_cfg).unwrap();
+
+        for workers in [1, 3, 4] {
+            let cfg = CoordinatorConfig {
+                workers,
+                budget: g.m() / 3,
+                chunk_size: 32,
+                queue_depth: 2,
+                seed: 23,
+                backend,
+                fault: Some(FaultPlan::none()),
+                ..Default::default()
+            };
+            let mut s = VecStream::shuffled(g.edges.clone(), 5);
+            let r = run_pipeline(&mut s, kind, &cfg).unwrap();
+            assert_bit_identical(
+                &r.averaged,
+                &direct.estimate,
+                &format!("{kind:?} sharded across {workers} workers"),
+            );
+            assert_eq!(r.edges, g.m() as u64, "{kind:?} W={workers}");
+        }
+    }
+}
+
+/// The ruled-out combinations fail loudly at validation time.
+#[test]
+fn invalid_sketch_combinations_are_rejected() {
+    let sk = Backend::Sketch { width: 32, depth: 3 };
+    // geometry floors
+    let err = EstimatorConfig::new(8)
+        .with_backend(Backend::Sketch { width: 1, depth: 3 })
+        .validate()
+        .unwrap_err();
+    assert!(err.to_string().contains("width"), "{err}");
+    let err = EstimatorConfig::new(8)
+        .with_backend(Backend::Sketch { width: 32, depth: 0 })
+        .validate()
+        .unwrap_err();
+    assert!(err.to_string().contains("depth"), "{err}");
+    // no eviction path => no windows
+    let err = EstimatorConfig::new(8)
+        .with_window(WindowConfig::new(WindowPolicy::Sliding { w: 5 }))
+        .with_backend(sk)
+        .validate()
+        .unwrap_err();
+    assert!(err.to_string().contains("windowed"), "{err}");
+    // sharded pipeline: no snapshot strides, no checkpoints
+    let base = CoordinatorConfig { backend: sk, ..Default::default() };
+    let err = CoordinatorConfig {
+        window: WindowConfig::default().with_stride(10),
+        ..base.clone()
+    }
+    .validate()
+    .unwrap_err();
+    assert!(err.to_string().contains("stride"), "{err}");
+    let err = CoordinatorConfig {
+        checkpoint_every: 5,
+        checkpoint_path: Some("x.sdc".into()),
+        ..base.clone()
+    }
+    .validate()
+    .unwrap_err();
+    assert!(err.to_string().contains("checkpoint"), "{err}");
+    // SANTA's closed-form wedge term needs the reservoir's sample graph
+    let err = SantaConfig::from(EstimatorConfig::new(8).with_backend(sk))
+        .with_exact_wedges(true)
+        .validate()
+        .unwrap_err();
+    assert!(err.to_string().contains("exact_wedges"), "{err}");
+    // a direct run does support sketch checkpoints — single state,
+    // single clock — so only the exact_wedges combination is refused
+    let ok = DirectConfig {
+        kind: DescriptorKind::Santa { exact_wedges: false },
+        budget: 8,
+        backend: sk,
+        checkpoint_every: 10,
+        checkpoint_path: Some("x.sdc".into()),
+        ..Default::default()
+    };
+    ok.validate().unwrap();
+    let err = DirectConfig {
+        kind: DescriptorKind::Santa { exact_wedges: true },
+        ..ok.clone()
+    }
+    .validate()
+    .unwrap_err();
+    assert!(err.to_string().contains("exact_wedges"), "{err}");
+}
+
+/// Sanity on the estimates themselves: sketch-backed runs return
+/// finite, non-negative descriptors in the right ballpark of the
+/// exact references (tight accuracy is `repro sketch`'s job).
+#[test]
+fn sketch_estimates_are_finite_and_plausible() {
+    let g = test_graph();
+    let exact = stream_descriptors::exact::gabe_exact(&g);
+    let cfg = EstimatorConfig::new(g.m() / 3)
+        .with_seed(17)
+        .with_backend(Backend::Sketch { width: 256, depth: 4 });
+    let mut s = VecStream::shuffled(g.edges.clone(), 11);
+    let est = GabeEstimator::from_config(cfg.clone()).run(&mut s);
+    assert_eq!(est.ne, g.m() as u64);
+    assert_eq!(est.nv, g.n as u64);
+    for (i, c) in est.counts.iter().enumerate() {
+        assert!(c.is_finite(), "count {i} not finite");
+    }
+    // triangles: wide sketch on a small graph stays within a loose band
+    let ti = stream_descriptors::count::idx::TRIANGLE;
+    let (t, e) = (est.counts[ti], exact.counts[ti]);
+    assert!(t >= 0.0 && t <= 10.0 * e.max(1.0), "triangles {t} vs exact {e}");
+
+    let mut s = VecStream::shuffled(g.edges.clone(), 11);
+    let m = MaeveEstimator::from_config(cfg.clone()).run(&mut s);
+    assert!(m.descriptor().iter().all(|x| x.is_finite()));
+
+    let mut s = VecStream::shuffled(g.edges.clone(), 11);
+    let sa = SantaEstimator::from_config(cfg).run(&mut s);
+    assert!(sa.traces.iter().all(|x| x.is_finite()));
+}
