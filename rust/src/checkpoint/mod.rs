@@ -887,6 +887,7 @@ mod tests {
     /// window policy, resuming from a mid-stream checkpoint reproduces
     /// the uninterrupted run bit-for-bit (estimate, snapshots, edges).
     #[test]
+    #[cfg_attr(miri, ignore)] // 9 kind×window combos, 3 full runs each: too slow under miri
     fn direct_resume_is_bit_identical_for_every_descriptor() {
         let g = gen::powerlaw_cluster_graph(200, 3, 0.5, &mut Pcg64::seed_from_u64(91));
         let m = g.m();

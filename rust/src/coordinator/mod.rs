@@ -608,6 +608,8 @@ fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
 fn trigger_fault(armed: &ArmedFaults, worker: usize, t: u64) {
     match armed.worker_fault(worker, t) {
         Some(WorkerFault::Panic) => {
+            // repro-lint: allow(panic-hygiene): the panic IS the injected
+            // fault — the supervisor's catch_unwind is the consumer.
             panic!("injected worker fault (worker {worker}, arrival {t})")
         }
         Some(WorkerFault::Stall) => {

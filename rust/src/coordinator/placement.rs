@@ -144,12 +144,18 @@ mod sys {
         }
         let mut mask = [0usize; WORDS];
         mask[cpu / WORD_BITS] |= 1usize << (cpu % WORD_BITS);
-        // pid 0 = the calling thread
+        // SAFETY: plain FFI into glibc with pid 0 (= the calling thread)
+        // and a pointer/size pair describing the full stack-owned 1024-bit
+        // mask; the kernel only reads it, and any failure is reported
+        // through the return code, not UB.
         unsafe { sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr()) == 0 }
     }
 
     pub fn allowed_cpus() -> Option<Vec<usize>> {
         let mut mask = [0usize; WORDS];
+        // SAFETY: FFI into glibc with pid 0 and the full zero-initialized
+        // stack mask; the kernel writes at most `cpusetsize` bytes into it
+        // and the result is only read after the return code is checked.
         let rc = unsafe { sched_getaffinity(0, std::mem::size_of_val(&mask), mask.as_mut_ptr()) };
         if rc != 0 {
             return None;

@@ -47,18 +47,22 @@ pub struct EdgeHits {
 }
 
 impl EdgeHits {
+    /// Triangles through the arriving edge (`|W|`).
     #[inline]
     pub fn triangles(&self) -> u64 {
         self.tri.len() as u64
     }
+    /// Total path-4 instances (middle-edge plus end-edge roles).
     #[inline]
     pub fn path4(&self) -> u64 {
         self.p4_mid + self.p4_end
     }
+    /// Total paw instances (triangle-edge plus pendant-edge roles).
     #[inline]
     pub fn paw(&self) -> u64 {
         self.paw_tri + self.paw_pend
     }
+    /// Total diamond instances (chord plus outer-edge roles).
     #[inline]
     pub fn diamond(&self) -> u64 {
         self.dia_chord + self.dia_outer

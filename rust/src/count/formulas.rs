@@ -8,16 +8,19 @@
 
 use super::{idx, N_GRAPHLETS};
 
+/// `C(n, 2)` over the reals, clamped at zero.
 #[inline]
 pub fn binom2(n: f64) -> f64 {
     (n * (n - 1.0) / 2.0).max(0.0)
 }
 
+/// `C(n, 3)` over the reals, clamped at zero.
 #[inline]
 pub fn binom3(n: f64) -> f64 {
     (n * (n - 1.0) * (n - 2.0) / 6.0).max(0.0)
 }
 
+/// `C(n, 4)` over the reals, clamped at zero.
 #[inline]
 pub fn binom4(n: f64) -> f64 {
     (n * (n - 1.0) * (n - 2.0) * (n - 3.0) / 24.0).max(0.0)
@@ -36,11 +39,17 @@ pub fn claws_from_degrees(deg: &[u32]) -> f64 {
 /// Connected-pattern estimates the stream produces (non-induced counts).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct ConnectedCounts {
+    /// Triangle estimate.
     pub triangle: f64,
+    /// Path-on-4-vertices estimate.
     pub path4: f64,
+    /// 4-cycle estimate.
     pub cycle4: f64,
+    /// Paw (tailed-triangle) estimate.
     pub paw: f64,
+    /// Diamond estimate.
     pub diamond: f64,
+    /// 4-clique estimate.
     pub k4: f64,
 }
 

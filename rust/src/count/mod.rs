@@ -11,12 +11,6 @@
 //!   patterns from `|V|`, `|E|` and the degree sequence,
 //! * [`brute`] — brute-force induced-subgraph census for test oracles.
 
-// Rustdoc sweep status (ISSUE 5): the crate-level
-// `#![warn(missing_docs)]` is gated off here until this module gets
-// its own documentation pass; sampling/descriptors/coordinator/graph
-// are fully swept.
-#![allow(missing_docs)]
-
 pub mod brute;
 pub mod edge_centric;
 pub mod formulas;
@@ -27,22 +21,39 @@ pub mod simd;
 /// ordering is the contract shared with `python/compile/graphlets.py` (the
 /// AOT manifest embeds the same tables; `runtime` cross-checks them).
 pub mod idx {
-    pub const E2: usize = 0; // two isolated vertices
+    /// Two isolated vertices.
+    pub const E2: usize = 0;
+    /// A single edge.
     pub const EDGE: usize = 1;
+    /// Three isolated vertices.
     pub const E3: usize = 2;
-    pub const EDGE_P1: usize = 3; // edge + isolated vertex
-    pub const WEDGE: usize = 4; // path on 3 vertices
+    /// Edge plus an isolated vertex.
+    pub const EDGE_P1: usize = 3;
+    /// Path on 3 vertices.
+    pub const WEDGE: usize = 4;
+    /// Triangle.
     pub const TRIANGLE: usize = 5;
+    /// Four isolated vertices.
     pub const E4: usize = 6;
-    pub const EDGE_P2: usize = 7; // edge + two isolated vertices
-    pub const TWO_EDGES: usize = 8; // two disjoint edges
-    pub const WEDGE_P1: usize = 9; // wedge + isolated vertex
-    pub const TRIANGLE_P1: usize = 10; // triangle + isolated vertex
-    pub const CLAW: usize = 11; // star K_{1,3}
+    /// Edge plus two isolated vertices.
+    pub const EDGE_P2: usize = 7;
+    /// Two disjoint edges.
+    pub const TWO_EDGES: usize = 8;
+    /// Wedge plus an isolated vertex.
+    pub const WEDGE_P1: usize = 9;
+    /// Triangle plus an isolated vertex.
+    pub const TRIANGLE_P1: usize = 10;
+    /// Star `K_{1,3}`.
+    pub const CLAW: usize = 11;
+    /// Path on 4 vertices.
     pub const PATH4: usize = 12;
+    /// Cycle on 4 vertices.
     pub const CYCLE4: usize = 13;
-    pub const PAW: usize = 14; // tailed triangle
+    /// Tailed triangle.
+    pub const PAW: usize = 14;
+    /// `K_4` minus one edge.
     pub const DIAMOND: usize = 15;
+    /// Complete graph on 4 vertices.
     pub const K4: usize = 16;
 }
 

@@ -56,8 +56,11 @@ const SIMD_MIN: usize = 16;
 /// slot appearing in any `big` list it is intersected against.
 #[derive(Debug, Clone, Copy)]
 pub struct SetView<'a> {
+    /// Sorted slot list (the galloped / broadcast side).
     pub list: &'a [Slot],
+    /// Epoch-mark array over slot space (`marks[x] == ep ⇔ x ∈ set`).
     pub marks: &'a [u32],
+    /// Epoch the marks were stamped with.
     pub ep: u32,
 }
 
@@ -298,6 +301,11 @@ mod x86 {
         e1: Slot,
         e2: Slot,
     ) -> u64 {
+        // SAFETY: this thunk only enters the dispatch table after
+        // `is_x86_feature_detected!("avx2")` (or the env override's
+        // `supported()` assert) confirmed the CPU runs AVX2; the data
+        // contract (`PaddedSlots` over-read tail, `marks` covering `big`)
+        // is the kernel's documented precondition, upheld by the arena.
         unsafe { marked_avx2(set, big, min_slot, e1, e2) }
     }
 
@@ -308,6 +316,9 @@ mod x86 {
         e1: Slot,
         e2: Slot,
     ) -> u64 {
+        // SAFETY: same shape as the AVX2 thunk — SSE4.2 is detection- or
+        // assert-guaranteed before this lands in the dispatch table, and
+        // `big` carries the padded-tail over-read contract.
         unsafe { pair_sse42(set, big, min_slot, e1, e2) }
     }
 
@@ -317,6 +328,11 @@ mod x86 {
     /// the final over-read in-bounds), gathers `marks[x]` with the lane
     /// mask — garbage lanes are never dereferenced — and counts lanes that
     /// are marked, ≥ `min_slot` (unsigned, via sign-flip) and not excluded.
+    // SAFETY (caller contract): requires AVX2 (`#[target_feature]`), a
+    // `big` view whose backing pool extends to the next 8-multiple
+    // (`PaddedSlots` invariant, debug-asserted below) and `set.marks`
+    // covering every valid slot of `big` — the gather indexes `marks` by
+    // those slots, masked so padding lanes never touch memory.
     #[target_feature(enable = "avx2")]
     unsafe fn marked_avx2(
         set: &SetView,
@@ -366,6 +382,11 @@ mod x86 {
     /// this arm intersects the two sorted lists directly, 4 lanes at a
     /// time).  `set.list` arrives pre-trimmed to ≥ `min_slot`, so only the
     /// exclusions need checking on a match.
+    // SAFETY (caller contract): requires SSE4.2 (`#[target_feature]`) and
+    // a `big` view whose backing pool extends to the next 4-multiple
+    // (`PaddedSlots` invariant, debug-asserted below); the final partial
+    // load reads only that guaranteed padding, and match bits beyond
+    // `valid` are masked out of the count.
     #[target_feature(enable = "sse4.2")]
     unsafe fn pair_sse42(
         set: &SetView,

@@ -21,6 +21,8 @@ use crate::Result;
 
 use super::{print_table, Ctx};
 
+/// Run both ablations (MAEVE streaming restriction, SANTA wedge term) and
+/// write their CSVs under the context's output directory.
 pub fn ablation(ctx: &Ctx) -> Result<()> {
     // ---- 1. MAEVE (streamed) vs NetSimile (full graph) ----
     let mut rows = Vec::new();

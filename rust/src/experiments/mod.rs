@@ -5,12 +5,6 @@
 //! Every experiment prints the paper-shaped rows to stdout and writes a CSV
 //! under `results/`.  All runs are deterministic given `--seed`.
 
-// Rustdoc sweep status (ISSUE 5): the crate-level
-// `#![warn(missing_docs)]` is gated off here until this module gets
-// its own documentation pass; sampling/descriptors/coordinator/graph
-// are fully swept.
-#![allow(missing_docs)]
-
 pub mod ablation;
 pub mod approx;
 pub mod classification;
@@ -37,12 +31,18 @@ pub struct Ctx {
     pub scale: f64,
     /// Massive-network scale factor (1.0 ≈ paper sizes; default much lower).
     pub massive_scale: f64,
+    /// Base RNG seed; every experiment derives its streams from it.
     pub seed: u64,
+    /// Directory CSV outputs land in (`results/` by default).
     pub out_dir: PathBuf,
+    /// Worker-thread count for pipeline experiments (0 = auto).
     pub threads: usize,
 }
 
 impl Ctx {
+    /// Build a context, loading the L2 runtime (PJRT artifacts when
+    /// available, native fallback otherwise) and defaulting the output
+    /// directory to `results/`.
     pub fn new(scale: f64, massive_scale: f64, seed: u64) -> Self {
         let runtime = match Runtime::load_default() {
             Ok(r) => {

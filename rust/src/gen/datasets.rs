@@ -115,6 +115,8 @@ fn class_graph(name: &str, class: usize, rng: &mut Pcg64) -> Graph {
                 _ => powerlaw_cluster_graph(n.max(10), 2 + class / 4, 0.4, rng),
             }
         }
+        // repro-lint: allow(panic-hygiene): reachable only through a name
+        // absent from SPECS — a caller bug, aborted loudly by design.
         other => panic!("unknown dataset {other}"),
     }
 }
@@ -126,6 +128,8 @@ pub fn make_dataset(name: &str, scale: f64, seed: u64) -> Dataset {
         .iter()
         .find(|(n, _, _)| *n == name)
         .copied()
+        // repro-lint: allow(panic-hygiene): unknown dataset names are a
+        // caller bug (the CLI validates first), aborted loudly by design.
         .unwrap_or_else(|| panic!("unknown dataset {name}"));
     let count = ((total as f64 * scale).round() as usize).max(n_classes * 4);
     let mut rng = Pcg64::seed_from_u64(seed ^ 0x5eed_d474);

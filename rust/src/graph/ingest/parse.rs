@@ -93,7 +93,9 @@ fn find_nl_scalar(data: &[u8]) -> Option<usize> {
     let n = data.len();
     let mut i = 0;
     while i + 8 <= n {
-        let w = u64::from_le_bytes(data[i..i + 8].try_into().unwrap());
+        let w = u64::from_le_bytes(
+            data[i..i + 8].try_into().expect("i + 8 <= n makes this an 8-byte slice"),
+        );
         let x = w ^ nl;
         // lowest set bit marks the first zero byte of x, i.e. the first \n
         let hit = x.wrapping_sub(LO) & !x & HI;
@@ -114,16 +116,25 @@ mod x86 {
     /// Safe entries: detection (or the env override's `supported` assert)
     /// guarantees the feature before a thunk lands in the dispatch table.
     pub(super) fn find_nl_sse42_thunk(data: &[u8]) -> Option<usize> {
+        // SAFETY: SSE4.2 is detection- or assert-guaranteed before this
+        // thunk enters the dispatch table; the kernel reads only within
+        // `data` (its vector loop stops at the last full 16-byte block).
         unsafe { find_nl_sse42(data) }
     }
 
     pub(super) fn find_nl_avx2_thunk(data: &[u8]) -> Option<usize> {
+        // SAFETY: AVX2 is detection- or assert-guaranteed before this
+        // thunk enters the dispatch table; the kernel reads only within
+        // `data` (its vector loop stops at the last full 32-byte block).
         unsafe { find_nl_avx2(data) }
     }
 
     /// 16 bytes per step: compare against a broadcast `\n`, movemask,
     /// trailing_zeros for the first hit.  The sub-16 tail reuses the SWAR
     /// scan (only the last window of a file ever takes it).
+    // SAFETY (caller contract): requires SSE4.2 (`#[target_feature]`);
+    // otherwise safe for any `data` — every 16-byte load is bounds-checked
+    // by the `i + 16 <= n` loop condition, no over-read contract needed.
     #[target_feature(enable = "sse4.2")]
     unsafe fn find_nl_sse42(data: &[u8]) -> Option<usize> {
         let n = data.len();
@@ -141,6 +152,9 @@ mod x86 {
     }
 
     /// 32 bytes per step, same shape as the SSE4.2 kernel.
+    // SAFETY (caller contract): requires AVX2 (`#[target_feature]`);
+    // otherwise safe for any `data` — every 32-byte load is bounds-checked
+    // by the `i + 32 <= n` loop condition, no over-read contract needed.
     #[target_feature(enable = "avx2")]
     unsafe fn find_nl_avx2(data: &[u8]) -> Option<usize> {
         let n = data.len();
@@ -227,7 +241,9 @@ fn has_non_ascii(line: &[u8]) -> bool {
     const HI: u64 = 0x8080_8080_8080_8080;
     let mut chunks = line.chunks_exact(8);
     for ch in &mut chunks {
-        if u64::from_le_bytes(ch.try_into().unwrap()) & HI != 0 {
+        if u64::from_le_bytes(ch.try_into().expect("chunks_exact(8) yields 8-byte slices")) & HI
+            != 0
+        {
             return true;
         }
     }

@@ -332,11 +332,13 @@ impl Mmap {
 }
 
 // SAFETY: the mapping is read-only and private — nothing mutates it
-// through this handle — so moving or sharing it across threads is sound.
+// through this handle — so moving it to another thread is sound.
 // (Concurrent truncation of the backing file can SIGBUS any reader; that
 // hazard is thread-independent and documented in the module docs.)
 #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
 unsafe impl Send for Mmap {}
+// SAFETY: same argument as `Send` — `&Mmap` only hands out `&[u8]` views
+// of immutable PROT_READ pages, so concurrent shared access is sound.
 #[cfg(all(target_os = "linux", target_pointer_width = "64"))]
 unsafe impl Sync for Mmap {}
 

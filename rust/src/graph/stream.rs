@@ -439,7 +439,11 @@ pub fn preprocess_pairs(
     let mut labels: Vec<u32> = edges.iter().flat_map(|e| [e.u, e.v]).collect();
     labels.sort_unstable();
     labels.dedup();
-    let lookup = |x: u32| labels.binary_search(&x).unwrap() as u32;
+    let lookup = |x: u32| {
+        labels
+            .binary_search(&x)
+            .expect("every endpoint was collected into `labels` above") as u32
+    };
     let mut out: Vec<Edge> = edges
         .iter()
         .map(|e| Edge::new(lookup(e.u), lookup(e.v)))

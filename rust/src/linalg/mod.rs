@@ -6,12 +6,6 @@
 //! linear-algebra crate: [`eigen`] is a Householder + implicit-shift QL
 //! solver, [`lanczos`] a full-reorthogonalization Lanczos.
 
-// Rustdoc sweep status (ISSUE 5): the crate-level
-// `#![warn(missing_docs)]` is gated off here until this module gets
-// its own documentation pass; sampling/descriptors/coordinator/graph
-// are fully swept.
-#![allow(missing_docs)]
-
 pub mod eigen;
 pub mod lanczos;
 pub mod moments;

@@ -20,9 +20,10 @@
 //! text had already lost `--placement`-era flags once).  A snapshot test
 //! pins the rendered text.
 
-// same panic-hygiene gate as the library (ISSUE 7): the binary's
-// non-test code threads errors instead of unwrapping.
-#![cfg_attr(not(test), warn(clippy::unwrap_used))]
+// same panic-hygiene gate as the library (warn since ISSUE 7, deny since
+// ISSUE 9): the binary's non-test code threads errors instead of
+// unwrapping.
+#![cfg_attr(not(test), deny(clippy::unwrap_used))]
 
 use std::process::ExitCode;
 

@@ -13,37 +13,59 @@ use crate::{anyhow, ensure, Result};
 /// Per-artifact metadata.
 #[derive(Debug, Clone)]
 pub struct ArtifactMeta {
+    /// File name of the HLO text, relative to the artifact dir.
     pub file: String,
+    /// Shape of each program input (dims, row-major).
     pub inputs: Vec<Vec<usize>>,
+    /// Shape of each program output (dims, row-major).
     pub outputs: Vec<Vec<usize>>,
+    /// Hex SHA-256 of the artifact file, checked at load.
     pub sha256: String,
+    /// Artifact size in bytes, checked at load.
     pub bytes: usize,
 }
 
 /// The fixed batch shapes the python side compiled for.
 #[derive(Debug, Clone)]
 pub struct Shapes {
+    /// GABE finalize batch size (graphs per call).
     pub gabe_b: usize,
+    /// MAEVE moments batch size (graphs per call).
     pub maeve_b: usize,
+    /// MAEVE per-graph vertex capacity (rows per graph).
     pub maeve_nv: usize,
+    /// SANTA psi batch size (graphs per call).
     pub santa_b: usize,
+    /// Pairwise-distance rows (descriptors on the left side).
     pub dist_m: usize,
+    /// Pairwise-distance columns (descriptors on the right side).
     pub dist_n: usize,
+    /// Pairwise-distance descriptor dimensionality.
     pub dist_d: usize,
+    /// Trace-powers matrix order.
     pub trace_n: usize,
 }
 
 /// The whole manifest.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Artifact encoding; only `"hlo-text"` is accepted.
     pub format: String,
+    /// JAX version that emitted the artifacts (provenance only).
     pub jax_version: String,
+    /// The 60-point `j` grid SANTA evaluates ψ on.
     pub j_grid: Vec<f64>,
+    /// The 17 connected-graphlet names, in GABE order.
     pub graphlet_names: Vec<String>,
+    /// Vertex count of each graphlet, aligned with `graphlet_names`.
     pub graphlet_orders: Vec<usize>,
+    /// Integer overlap matrix O (GABE unbiasing, DESIGN §3).
     pub overlap_matrix: Vec<Vec<i64>>,
+    /// Precomputed O⁻¹ applied to raw counts.
     pub overlap_inverse: Vec<Vec<f64>>,
+    /// Fixed batch shapes every program was compiled for.
     pub shapes: Shapes,
+    /// Program name → metadata, for each compiled artifact.
     pub artifacts: BTreeMap<String, ArtifactMeta>,
 }
 
@@ -78,6 +100,8 @@ fn shape_list(v: &Json) -> Result<Vec<Vec<usize>>> {
 }
 
 impl Manifest {
+    /// Parse and validate `manifest.json` (format tag, 17 graphlets,
+    /// 60-point j grid).
     pub fn load(path: impl AsRef<Path>) -> Result<Self> {
         let path = path.as_ref();
         let text = std::fs::read_to_string(path)

@@ -21,12 +21,6 @@
 //! [`crate::descriptors::psi`]), pinning the backend↔reference contract —
 //! and, when the artifacts are built, the rust↔python contract too.
 
-// Rustdoc sweep status (ISSUE 5): the crate-level
-// `#![warn(missing_docs)]` is gated off here until this module gets
-// its own documentation pass; sampling/descriptors/coordinator/graph
-// are fully swept.
-#![allow(missing_docs)]
-
 pub mod manifest;
 pub mod native;
 #[cfg(all(feature = "pjrt", not(feature = "xla-crate")))]
@@ -38,9 +32,16 @@ pub use manifest::Manifest;
 
 use crate::Result;
 
+/// Environment variable overriding the artifact directory searched by
+/// [`Runtime::default_dir`].  Registered in [`crate::util::env::REGISTRY`]
+/// and documented in the README/DESIGN environment tables (ISSUE 9).
+pub const ARTIFACTS_ENV: &str = "STREAM_DESCRIPTORS_ARTIFACTS";
+
 /// Compiled-kernel registry: PJRT executables when the `pjrt` feature and
 /// artifacts are present, the in-crate native executor otherwise.
 pub struct Runtime {
+    /// The shape/contract manifest the backend was loaded against (the
+    /// native backend synthesizes one — [`native::native_manifest`]).
     pub manifest: Manifest,
     backend: Backend,
 }
@@ -74,9 +75,11 @@ impl Runtime {
     }
 
     /// Default artifact location (repo-relative), overridable via
-    /// `STREAM_DESCRIPTORS_ARTIFACTS`.
+    /// [`ARTIFACTS_ENV`].  The read resolves through the
+    /// [`crate::util::env`] registry (ISSUE 9 — this was the variable the
+    /// registry sweep caught undocumented).
     pub fn default_dir() -> PathBuf {
-        std::env::var_os("STREAM_DESCRIPTORS_ARTIFACTS")
+        crate::util::env::var_os(ARTIFACTS_ENV)
             .map(Into::into)
             .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
     }
@@ -176,6 +179,8 @@ impl Runtime {
 pub fn runtime_or_skip() -> Option<Runtime> {
     match Runtime::load_default() {
         Ok(rt) => Some(rt),
+        // repro-lint: allow(panic-hygiene): present-but-broken artifacts
+        // mean contract drift; the suite must fail, not skip.
         Err(e) => panic!("artifacts present but failed to load: {e:#}"),
     }
 }

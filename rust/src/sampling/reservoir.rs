@@ -192,6 +192,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // 200k offers: statistical, too slow under miri
     fn sampling_is_approximately_uniform() {
         // Each of 100 edges should appear in a b=20 reservoir with p = 0.2.
         let trials = 2000;
@@ -212,6 +213,7 @@ mod tests {
     }
 
     #[test]
+    #[cfg_attr(miri, ignore)] // ~2M offers: too slow under miri
     fn large_budget_fills_without_reseeding_drift() {
         // Regression: budgets beyond the 2^20 pre-allocation cap must fill
         // to the full budget through the deterministic growth path, and the

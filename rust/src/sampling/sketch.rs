@@ -699,6 +699,7 @@ mod tests {
 
     /// The merge law, bit-for-bit: sketch(A) ⊕ sketch(B) == sketch(A++B).
     #[test]
+    #[cfg_attr(miri, ignore)] // 15 geometry/cut combos over a 200-vertex graph: too slow under miri
     fn merge_equals_sketch_of_concatenation() {
         let mut rng = Pcg64::seed_from_u64(11);
         let g = gen::powerlaw_cluster_graph(200, 3, 0.5, &mut rng);
@@ -846,6 +847,7 @@ mod tests {
     /// Collision bias shrinks as width grows (sanity on the tradeoff the
     /// `repro sketch` experiment charts).
     #[test]
+    #[cfg_attr(miri, ignore)] // 300-vertex graphs + width-128 readouts: too slow under miri
     fn wider_sketches_estimate_triangles_better() {
         let mut rng = Pcg64::seed_from_u64(16);
         let g = gen::powerlaw_cluster_graph(300, 4, 0.6, &mut rng);

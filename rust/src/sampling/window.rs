@@ -1301,6 +1301,7 @@ mod tests {
     /// toward recency: over many trials, a recent edge must be present
     /// far more often than one several half-lives old.
     #[test]
+    #[cfg_attr(miri, ignore)] // 80k offers across 200 trials: statistical, too slow under miri
     fn decay_prefers_recent_edges() {
         let n = 400u32;
         let (mut old_hits, mut new_hits) = (0u32, 0u32);
@@ -1386,6 +1387,7 @@ mod tests {
     /// SlidingScalars: the windowed value equals a brute-force sum over
     /// the retained quantized window, and never loses in-window credit.
     #[test]
+    #[cfg_attr(miri, ignore)] // quadratic brute-force reference: too slow under miri
     fn sliding_scalars_match_brute_force_quantized_window() {
         let w = 40usize;
         let mut acc = SlidingScalars::<2>::new(w);

@@ -18,16 +18,22 @@ use std::time::{Duration, Instant};
 /// One benchmark result.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Bench id (`family/arm/.../param`, DESIGN.md §5).
     pub name: String,
+    /// Timed iterations behind the statistics.
     pub iters: usize,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Median iteration (what the CI gate compares).
     pub median: Duration,
+    /// Mean over all timed iterations.
     pub mean: Duration,
     /// Optional elements-per-iteration for throughput reporting.
     pub elements: Option<u64>,
 }
 
 impl BenchResult {
+    /// Elements per second at the median time, when `elements` is set.
     pub fn throughput(&self) -> Option<f64> {
         self.elements
             .map(|e| e as f64 / self.median.as_secs_f64().max(1e-12))
@@ -49,7 +55,9 @@ fn fmt_dur(d: Duration) -> String {
 
 /// Benchmark runner: fixed warmup iterations then timed iterations.
 pub struct Bencher {
+    /// Untimed warmup iterations before measurement.
     pub warmup: usize,
+    /// Timed iterations per bench (min 1).
     pub iters: usize,
     results: Vec<BenchResult>,
 }
@@ -61,6 +69,7 @@ impl Default for Bencher {
 }
 
 impl Bencher {
+    /// Runner with the given warmup/timed iteration counts.
     pub fn new(warmup: usize, iters: usize) -> Self {
         Bencher { warmup, iters: iters.max(1), results: Vec::new() }
     }
@@ -101,6 +110,7 @@ impl Bencher {
         self.results.last().expect("result pushed above")
     }
 
+    /// Everything benched so far, in run order.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }
@@ -155,8 +165,11 @@ impl Bencher {
 /// tolerance.
 #[derive(Debug, Clone)]
 pub struct Regression {
+    /// Bench id that regressed.
     pub name: String,
+    /// Baseline median, nanoseconds.
     pub baseline_ns: f64,
+    /// This run's median, nanoseconds.
     pub current_ns: f64,
 }
 
@@ -174,6 +187,7 @@ pub struct CompareReport {
     pub checked: usize,
     /// Bench ids in this run with no baseline entry (reported, not gated).
     pub unbaselined: Vec<String>,
+    /// Medians that landed above baseline by more than the tolerance.
     pub regressions: Vec<Regression>,
 }
 
@@ -255,10 +269,15 @@ fn json_escape(s: &str) -> String {
 ///   (default 0.10 = 10%).
 #[derive(Debug, Clone, Default)]
 pub struct BenchArgs {
+    /// `--test`: compile-and-launch smoke mode, no timed runs.
     pub smoke: bool,
+    /// `--json`: where to write `BENCH_<target>.json`.
     pub json: Option<PathBuf>,
+    /// `--filter`: only run bench ids containing this substring.
     pub filter: Option<String>,
+    /// `--compare`: baseline JSON to gate against after the run.
     pub compare: Option<PathBuf>,
+    /// `--tolerance`: allowed median growth for `--compare`.
     pub tolerance: Option<f64>,
     /// Positional (unconsumed) arguments, e.g. a bench-specific scale —
     /// read these instead of re-parsing `std::env::args`, so flag/value
@@ -272,6 +291,7 @@ impl BenchArgs {
         Self::from_iter(target, std::env::args().skip(1))
     }
 
+    /// Parse an explicit argument list (tests drive this directly).
     pub fn from_iter(target: &str, args: impl IntoIterator<Item = String>) -> Self {
         let mut out = BenchArgs::default();
         let mut it = args.into_iter();
@@ -294,6 +314,9 @@ impl BenchArgs {
                 }
                 "--tolerance" => {
                     let v = it.next().unwrap_or_default();
+                    // repro-lint: allow(panic-hygiene): a malformed
+                    // tolerance must abort the bench run, not disarm the
+                    // CI gate by falling back to a default.
                     let t = v.parse().unwrap_or_else(|_| panic!("--tolerance {v}: not a number"));
                     out.tolerance = Some(t);
                 }

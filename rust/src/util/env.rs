@@ -1,0 +1,142 @@
+//! The environment-variable registry (ISSUE 9).
+//!
+//! Every `STREAM_DESCRIPTORS_*` variable the crate reads is declared in
+//! one table — [`REGISTRY`] — carrying its name, what it controls and the
+//! values it accepts.  All process-environment reads of these variables go
+//! through [`var`]/[`var_os`], which refuse (panic) on a name the table
+//! does not list, so a new knob cannot ship half-wired: adding the read
+//! without the registry row fails the first test that touches it, and
+//! `tools/repro-lint` additionally rejects, at source level,
+//!
+//! * any `STREAM_DESCRIPTORS_*` string literal that is not a registered
+//!   name (non-test code), and
+//! * any direct `std::env::var`/`var_os` call outside this module.
+//!
+//! The same lint keeps the README and DESIGN.md environment tables in
+//! sync with [`REGISTRY`] in both directions — an undocumented variable
+//! (the pre-ISSUE-9 fate of `STREAM_DESCRIPTORS_ARTIFACTS`) or a stale
+//! doc row fails CI.  The procedure for adding a variable is documented
+//! in DESIGN.md §12.
+//!
+//! Semantics are deliberately thin: [`var`] returns `None` when the
+//! variable is unset *or not valid UTF-8*, and performs no trimming or
+//! empty-string collapsing — each consumer keeps its established
+//! convention (the force-arm vars treat empty as unset, the fault plan
+//! trims before parsing), so routing reads through the registry changed
+//! no observable behaviour.
+
+use std::ffi::OsString;
+
+/// One registered environment variable: the single source of truth the
+/// README/DESIGN tables and the `repro-lint` env lint are checked against.
+#[derive(Debug, Clone, Copy)]
+pub struct EnvSpec {
+    /// The variable name (`STREAM_DESCRIPTORS_*`).
+    pub name: &'static str,
+    /// What the variable controls, one sentence.
+    pub purpose: &'static str,
+    /// Accepted values, human-readable (`scalar | sse42 | avx2`, a path,
+    /// a fault-plan string, ...).
+    pub accepted: &'static str,
+}
+
+/// Every environment variable the crate reads, sorted by name.
+///
+/// Keep this table, the README "Environment variables" table and the
+/// DESIGN.md §12 table in sync — `repro-lint` fails CI when they drift.
+pub const REGISTRY: &[EnvSpec] = &[
+    EnvSpec {
+        name: "STREAM_DESCRIPTORS_ARTIFACTS",
+        purpose: "Directory holding the PJRT/HLO artifact manifest the `pjrt` \
+                  runtime loads instead of the repo-relative `artifacts/`",
+        accepted: "a directory path (unset: `<repo>/artifacts`)",
+    },
+    EnvSpec {
+        name: "STREAM_DESCRIPTORS_FAULT_PLAN",
+        purpose: "Process-wide deterministic fault-injection plan for chaos \
+                  runs (an explicitly injected plan always wins)",
+        accepted: "`;`-separated events: `read_error@N`, `panic@W:T`, \
+                  `lose@W:T`, `stall@W:T` (unset/empty: no faults)",
+    },
+    EnvSpec {
+        name: "STREAM_DESCRIPTORS_FORCE_INGEST",
+        purpose: "Pin the ingest text-parser dispatch arm (CI feature \
+                  matrix); panics if the CPU cannot run the forced arm",
+        accepted: "`scalar` | `sse42` | `avx2` (unset/empty: auto-detect)",
+    },
+    EnvSpec {
+        name: "STREAM_DESCRIPTORS_FORCE_KERNEL",
+        purpose: "Pin the slot-list intersection dispatch arm (CI feature \
+                  matrix); panics if the CPU cannot run the forced arm",
+        accepted: "`scalar` | `sse42` | `avx2` (unset/empty: auto-detect)",
+    },
+];
+
+/// The registry row for `name`, if the variable is registered.
+pub fn spec(name: &str) -> Option<&'static EnvSpec> {
+    REGISTRY.iter().find(|s| s.name == name)
+}
+
+fn assert_registered(name: &str) {
+    assert!(
+        spec(name).is_some(),
+        "env var `{name}` read outside the util::env registry — add it to \
+         util::env::REGISTRY and the README/DESIGN tables (DESIGN.md §12)"
+    );
+}
+
+/// Read a registered variable as UTF-8; `None` when unset or not valid
+/// UTF-8.  Panics if `name` is not in [`REGISTRY`].
+pub fn var(name: &str) -> Option<String> {
+    assert_registered(name);
+    std::env::var(name).ok()
+}
+
+/// Read a registered variable as an `OsString`; `None` when unset.
+/// Panics if `name` is not in [`REGISTRY`].
+pub fn var_os(name: &str) -> Option<OsString> {
+    assert_registered(name);
+    std::env::var_os(name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_is_sorted_unique_and_prefixed() {
+        for w in REGISTRY.windows(2) {
+            assert!(w[0].name < w[1].name, "{} !< {}", w[0].name, w[1].name);
+        }
+        for s in REGISTRY {
+            assert!(
+                s.name.starts_with("STREAM_DESCRIPTORS_"),
+                "{} lacks the STREAM_DESCRIPTORS_ prefix",
+                s.name
+            );
+            assert!(!s.purpose.is_empty() && !s.accepted.is_empty());
+        }
+    }
+
+    #[test]
+    fn lookup_finds_every_row() {
+        for s in REGISTRY {
+            assert_eq!(spec(s.name).map(|r| r.name), Some(s.name));
+        }
+        assert!(spec("STREAM_DESCRIPTORS_NOT_A_VAR").is_none());
+    }
+
+    #[test]
+    fn unset_registered_var_reads_none() {
+        // CI never sets ARTIFACTS; a set-but-empty force var is Some("")
+        // (the consumer treats empty as unset, not this layer)
+        assert_eq!(var("STREAM_DESCRIPTORS_ARTIFACTS"), None);
+        assert_eq!(var_os("STREAM_DESCRIPTORS_ARTIFACTS"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the util::env registry")]
+    fn unregistered_read_panics() {
+        let _ = var("STREAM_DESCRIPTORS_NOT_A_VAR");
+    }
+}

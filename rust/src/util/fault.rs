@@ -149,10 +149,11 @@ impl FaultPlan {
         Ok(FaultPlan { events })
     }
 
-    /// Parse [`FAULT_PLAN_ENV`]; `Ok(None)` when unset or empty.
+    /// Parse [`FAULT_PLAN_ENV`]; `Ok(None)` when unset or empty.  The
+    /// read resolves through the [`crate::util::env`] registry.
     pub fn from_env() -> crate::Result<Option<FaultPlan>> {
-        match std::env::var(FAULT_PLAN_ENV) {
-            Ok(s) if !s.trim().is_empty() => {
+        match crate::util::env::var(FAULT_PLAN_ENV) {
+            Some(s) if !s.trim().is_empty() => {
                 let plan = FaultPlan::parse(&s)
                     .map_err(|e| crate::anyhow!("{FAULT_PLAN_ENV}: {e}"))?;
                 Ok(Some(plan))

@@ -9,18 +9,26 @@ use std::fmt;
 /// Parsed JSON value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any number (JSON has one numeric type).
     Num(f64),
+    /// A string, escapes resolved.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object, keys sorted.
     Obj(BTreeMap<String, Json>),
 }
 
 /// Parse error with byte offset.
 #[derive(Debug, Clone)]
 pub struct JsonError {
+    /// Byte offset the parser stopped at.
     pub pos: usize,
+    /// What it expected or found there.
     pub msg: String,
 }
 
@@ -33,6 +41,7 @@ impl fmt::Display for JsonError {
 impl std::error::Error for JsonError {}
 
 impl Json {
+    /// Parse a complete JSON document (trailing characters are an error).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -44,6 +53,7 @@ impl Json {
         Ok(v)
     }
 
+    /// Object field lookup (`None` for non-objects and absent keys).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(m) => m.get(key),
@@ -51,6 +61,7 @@ impl Json {
         }
     }
 
+    /// The string value, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -58,6 +69,7 @@ impl Json {
         }
     }
 
+    /// The numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -65,10 +77,12 @@ impl Json {
         }
     }
 
+    /// The numeric value truncated to `usize`, if this is a number.
     pub fn as_usize(&self) -> Option<usize> {
         self.as_f64().map(|n| n as usize)
     }
 
+    /// The elements, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -76,6 +90,7 @@ impl Json {
         }
     }
 
+    /// The key → value map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(m) => Some(m),

@@ -2,20 +2,16 @@
 //! own: an error/context type ([`err`]), a PCG PRNG ([`rng`]), a JSON
 //! parser ([`json`]), a criterion-style micro-benchmark harness ([`bench`]),
 //! temp-dir helpers ([`tmp`]), NUMA topology discovery ([`topology`]),
-//! the shared SIMD dispatch-arm substrate ([`simd`]) and the deterministic
-//! fault-injection plan ([`fault`]).
+//! the shared SIMD dispatch-arm substrate ([`simd`]), the deterministic
+//! fault-injection plan ([`fault`]) and the environment-variable registry
+//! ([`env`]).
 //! (The image's cargo registry carries only the xla crate's build closure —
 //! no anyhow/rand/serde_json/criterion/tokio — so these are implemented
 //! from scratch and tested like everything else; the default build depends
 //! on nothing outside std.)
 
-// Rustdoc sweep status (ISSUE 5): the crate-level
-// `#![warn(missing_docs)]` is gated off here until this module gets
-// its own documentation pass; sampling/descriptors/coordinator/graph
-// are fully swept.
-#![allow(missing_docs)]
-
 pub mod bench;
+pub mod env;
 pub mod err;
 pub mod fault;
 pub mod json;

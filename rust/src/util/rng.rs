@@ -33,6 +33,7 @@ impl Pcg64 {
         rng
     }
 
+    /// Next 32 random bits (the native PCG-XSH-RR output).
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -42,6 +43,7 @@ impl Pcg64 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 random bits (two 32-bit draws).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64
@@ -68,11 +70,13 @@ impl Pcg64 {
         }
     }
 
+    /// Uniform integer in `[lo, hi)`, as `usize`.
     #[inline]
     pub fn gen_range_usize(&mut self, lo: usize, hi: usize) -> usize {
         self.gen_range_u64(lo as u64, hi as u64) as usize
     }
 
+    /// Uniform integer in `[lo, hi)`, as `u32`.
     #[inline]
     pub fn gen_range_u32(&mut self, lo: u32, hi: u32) -> u32 {
         self.gen_range_u64(lo as u64, hi as u64) as u32

@@ -81,11 +81,22 @@ pub fn available_arms() -> Vec<KernelArm> {
 /// unset (CI matrix legs export the var blank).  Panics on an unknown
 /// spelling or an arm the CPU cannot execute — a forced leg must never
 /// silently test a different code path than its label claims.
+///
+/// `env_var` must be a name registered in [`crate::util::env::REGISTRY`]
+/// (the read goes through the registry, which panics on an unknown name).
 pub fn forced_arm(env_var: &str) -> Option<KernelArm> {
-    let v = std::env::var(env_var).unwrap_or_default();
+    forced_arm_from(env_var, crate::util::env::var(env_var))
+}
+
+/// Pure selection logic behind [`forced_arm`]; split out so tests can
+/// drive every value shape without mutating the process environment.
+fn forced_arm_from(env_var: &str, value: Option<String>) -> Option<KernelArm> {
+    let v = value.unwrap_or_default();
     if v.is_empty() {
         return None;
     }
+    // repro-lint: allow(panic-hygiene): a forced CI leg that cannot run
+    // its labeled arm must abort, never silently fall back to scalar.
     let arm = KernelArm::parse(&v)
         .unwrap_or_else(|| panic!("{env_var}={v}: expected scalar | sse42 | avx2"));
     assert!(arm.supported(), "{env_var}={v}: arm not supported by this CPU");
@@ -125,7 +136,27 @@ mod tests {
     }
 
     #[test]
-    fn unset_env_is_no_override() {
-        assert_eq!(forced_arm("STREAM_DESCRIPTORS_TEST_UNSET_VAR"), None);
+    fn unset_and_empty_values_are_no_override() {
+        assert_eq!(forced_arm_from("STREAM_DESCRIPTORS_FORCE_KERNEL", None), None);
+        assert_eq!(
+            forced_arm_from("STREAM_DESCRIPTORS_FORCE_KERNEL", Some(String::new())),
+            None
+        );
+        assert_eq!(
+            forced_arm_from("STREAM_DESCRIPTORS_FORCE_KERNEL", Some("scalar".into())),
+            Some(KernelArm::Scalar)
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "expected scalar | sse42 | avx2")]
+    fn unknown_forced_spelling_panics() {
+        forced_arm_from("STREAM_DESCRIPTORS_FORCE_KERNEL", Some("avx512".into()));
+    }
+
+    #[test]
+    #[should_panic(expected = "outside the util::env registry")]
+    fn unregistered_force_var_is_refused() {
+        forced_arm("STREAM_DESCRIPTORS_TEST_UNSET_VAR");
     }
 }

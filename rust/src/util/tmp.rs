@@ -12,6 +12,7 @@ pub struct TempDir {
 }
 
 impl TempDir {
+    /// Create `sd-<prefix>-<pid>-<n>` under the system temp dir.
     pub fn new(prefix: &str) -> std::io::Result<Self> {
         let n = COUNTER.fetch_add(1, Ordering::Relaxed);
         let path = std::env::temp_dir().join(format!(
@@ -22,6 +23,7 @@ impl TempDir {
         Ok(TempDir { path })
     }
 
+    /// The directory's path (valid until drop).
     pub fn path(&self) -> &std::path::Path {
         &self.path
     }

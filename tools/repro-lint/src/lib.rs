@@ -1,0 +1,994 @@
+//! Repo-invariant lints for the stream-descriptors reproduction.
+//!
+//! This crate is the static-analysis layer described in DESIGN.md §12: a
+//! dependency-free pass over the `rust/**` and `benches/**` sources (plus
+//! the README/DESIGN environment-variable tables) that enforces invariants
+//! rustc and clippy cannot express:
+//!
+//! * **`safety-contract`** — every `unsafe` token (block, fn, or impl)
+//!   carries an adjacent `// SAFETY:` comment spelling out its contract.
+//! * **`env-registry`** — every `STREAM_DESCRIPTORS_*` literal in non-test
+//!   code names a row of `util::env::REGISTRY`; no code outside
+//!   `util/env.rs` reads the process environment with `env::var`[`_os`]
+//!   directly; the README.md and DESIGN.md environment tables stay in sync
+//!   with the registry in both directions.
+//! * **`panic-hygiene`** — non-test library code has no `.unwrap()`,
+//!   bare-message `.expect(..)`, or `panic!` unless the statement carries a
+//!   `// repro-lint: allow(panic-hygiene): <reason>` marker.
+//! * **`bench-id-schema`** — bench ids in `benches/**` follow the DESIGN §5
+//!   `family/arm/.../param` grammar, so the bench-gate baselines stay
+//!   greppable and stable.
+//! * **`missing-docs-gate`** — no `allow(missing_docs)` escape hatches
+//!   survive in `rust/src/**`.
+//!
+//! The analysis is textual, not a real parse: sources are scanned into a
+//! *code view* (comments and string/char contents blanked to spaces, so
+//! columns stay aligned with the raw text), a comment side-channel, a
+//! string-literal table, and a per-line `#[cfg(test)]`-region map.  That is
+//! exact enough for every rule above and keeps the crate dependency-free.
+//!
+//! Diagnostics print as `path:line: [lint-name] message` — pointable from a
+//! terminal or CI log — and the binary exits non-zero on any finding.
+
+use std::collections::BTreeSet;
+use std::fmt;
+use std::fs;
+use std::io;
+use std::path::{Path, PathBuf};
+
+/// A single lint finding, pointing at a 1-based line of a repo-relative file.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Diagnostic {
+    /// Repo-relative path (`/`-separated) of the offending file.
+    pub path: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// Lint name, e.g. `safety-contract`.
+    pub lint: &'static str,
+    /// Human-readable description of the violation.
+    pub msg: String,
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}: [{}] {}", self.path, self.line, self.lint, self.msg)
+    }
+}
+
+/// One source line, split into aligned code and comment channels.
+#[derive(Debug, Default)]
+pub struct Line {
+    /// The raw line with comments and string/char *contents* blanked to
+    /// spaces; delimiters (`"`, `'`) are kept, so columns line up with the
+    /// raw text.
+    pub code: String,
+    /// Concatenated comment text appearing on this line (line, block, and
+    /// doc comments alike), without the `//`/`/*` introducers.
+    pub comment: String,
+}
+
+/// A string literal, located by the line/column of its opening quote in
+/// the code view.
+#[derive(Debug)]
+pub struct StrLit {
+    /// 0-based line of the opening quote.
+    pub line: usize,
+    /// 0-based char column of the opening quote.
+    pub col: usize,
+    /// Literal content, escapes left as written (`\n` stays two chars).
+    pub text: String,
+}
+
+/// A scanned source file ready for linting.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Repo-relative `/`-separated path, used in diagnostics.
+    pub rel: String,
+    /// Per-line code/comment views.
+    pub lines: Vec<Line>,
+    /// Every string literal with its location.
+    pub strings: Vec<StrLit>,
+    /// `test_lines[i]` is true when line `i` sits inside a `#[cfg(test)]`
+    /// item (or the whole file is test code, e.g. under `rust/tests/`).
+    pub test_lines: Vec<bool>,
+}
+
+impl SourceFile {
+    /// Scan `raw` into code/comment/string views and mark test regions.
+    /// `force_test` marks the whole file as test code.
+    pub fn parse(rel: &str, raw: &str, force_test: bool) -> SourceFile {
+        let (lines, strings) = scan(raw);
+        let test_lines = if force_test {
+            vec![true; lines.len()]
+        } else {
+            mark_tests(&lines)
+        };
+        SourceFile { rel: rel.to_string(), lines, strings, test_lines }
+    }
+}
+
+#[derive(Clone, Copy)]
+enum St {
+    Code,
+    LineComment,
+    BlockComment(u32),
+    /// Inside a string literal; `raw_hashes` is `Some(n)` for `r#…#"` forms.
+    Str { raw_hashes: Option<usize> },
+}
+
+fn prev_is_ident(chars: &[char], i: usize) -> bool {
+    i > 0 && (chars[i - 1].is_alphanumeric() || chars[i - 1] == '_')
+}
+
+/// At `chars[i]`, match an opening `r"`, `r#"`, `br"`, … raw-string
+/// delimiter; returns `(hashes, delimiter_len)`.
+fn raw_string_open(chars: &[char], i: usize) -> Option<(usize, usize)> {
+    let mut j = i;
+    if chars.get(j) == Some(&'b') {
+        j += 1;
+    }
+    if chars.get(j) != Some(&'r') {
+        return None;
+    }
+    j += 1;
+    let mut hashes = 0;
+    while chars.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    if chars.get(j) == Some(&'"') {
+        Some((hashes, j + 1 - i))
+    } else {
+        None
+    }
+}
+
+fn scan(raw: &str) -> (Vec<Line>, Vec<StrLit>) {
+    let chars: Vec<char> = raw.chars().collect();
+    let mut lines: Vec<Line> = Vec::new();
+    let mut strings: Vec<StrLit> = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut line = 0usize;
+    let mut st = St::Code;
+    // string literal under construction: (start line, start col, text)
+    let mut cur: Option<(usize, usize, String)> = None;
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        if c == '\n' {
+            lines.push(Line {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            line += 1;
+            if matches!(st, St::LineComment) {
+                st = St::Code;
+            }
+            i += 1;
+            continue;
+        }
+        match st {
+            St::Code => {
+                let next = chars.get(i + 1).copied();
+                if c == '/' && next == Some('/') {
+                    code.push_str("  ");
+                    st = St::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    code.push_str("  ");
+                    st = St::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    cur = Some((line, code.chars().count(), String::new()));
+                    code.push('"');
+                    st = St::Str { raw_hashes: None };
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && !prev_is_ident(&chars, i) {
+                    if let Some((hashes, len)) = raw_string_open(&chars, i) {
+                        // record the opening-quote position (last delim char)
+                        cur = Some((line, code.chars().count() + len - 1, String::new()));
+                        for &d in chars.iter().skip(i).take(len) {
+                            code.push(d);
+                        }
+                        st = St::Str { raw_hashes: Some(hashes) };
+                        i += len;
+                    } else if c == 'b' && next == Some('"') {
+                        code.push('b');
+                        cur = Some((line, code.chars().count(), String::new()));
+                        code.push('"');
+                        st = St::Str { raw_hashes: None };
+                        i += 2;
+                    } else {
+                        code.push(c);
+                        i += 1;
+                    }
+                } else if c == '\'' {
+                    // lifetime vs char literal: a backslash or a closing
+                    // quote two ahead means a char literal.
+                    let is_char = match chars.get(i + 1) {
+                        Some('\\') => true,
+                        Some(_) => chars.get(i + 2) == Some(&'\''),
+                        None => false,
+                    };
+                    code.push('\'');
+                    i += 1;
+                    if is_char {
+                        while i < chars.len() && chars[i] != '\'' && chars[i] != '\n' {
+                            if chars[i] == '\\' && i + 1 < chars.len() && chars[i + 1] != '\n' {
+                                code.push_str("  ");
+                                i += 2;
+                            } else {
+                                code.push(' ');
+                                i += 1;
+                            }
+                        }
+                        if chars.get(i) == Some(&'\'') {
+                            code.push('\'');
+                            i += 1;
+                        }
+                    }
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            St::LineComment => {
+                comment.push(c);
+                code.push(' ');
+                i += 1;
+            }
+            St::BlockComment(depth) => {
+                let next = chars.get(i + 1).copied();
+                if c == '*' && next == Some('/') {
+                    code.push_str("  ");
+                    st = if depth == 1 { St::Code } else { St::BlockComment(depth - 1) };
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    code.push_str("  ");
+                    st = St::BlockComment(depth + 1);
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            St::Str { raw_hashes } => match raw_hashes {
+                None => {
+                    if c == '\\' {
+                        if let Some((_, _, text)) = cur.as_mut() {
+                            text.push('\\');
+                        }
+                        code.push(' ');
+                        i += 1;
+                        if i < chars.len() && chars[i] != '\n' {
+                            if let Some((_, _, text)) = cur.as_mut() {
+                                text.push(chars[i]);
+                            }
+                            code.push(' ');
+                            i += 1;
+                        }
+                    } else if c == '"' {
+                        code.push('"');
+                        if let Some((l, col, text)) = cur.take() {
+                            strings.push(StrLit { line: l, col, text });
+                        }
+                        st = St::Code;
+                        i += 1;
+                    } else {
+                        if let Some((_, _, text)) = cur.as_mut() {
+                            text.push(c);
+                        }
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+                Some(h) => {
+                    let closes = c == '"' && (1..=h).all(|k| chars.get(i + k) == Some(&'#'));
+                    if closes {
+                        code.push('"');
+                        for _ in 0..h {
+                            code.push('#');
+                        }
+                        if let Some((l, col, text)) = cur.take() {
+                            strings.push(StrLit { line: l, col, text });
+                        }
+                        st = St::Code;
+                        i += 1 + h;
+                    } else {
+                        if let Some((_, _, text)) = cur.as_mut() {
+                            text.push(c);
+                        }
+                        code.push(' ');
+                        i += 1;
+                    }
+                }
+            },
+        }
+    }
+    if !code.is_empty() || !comment.is_empty() {
+        lines.push(Line { code, comment });
+    }
+    (lines, strings)
+}
+
+/// Mark every line belonging to a `#[cfg(test)]` item: from the attribute,
+/// brace-match the item that follows (or stop at a top-level `;` for
+/// brace-less items).
+fn mark_tests(lines: &[Line]) -> Vec<bool> {
+    let n = lines.len();
+    let mut test = vec![false; n];
+    let mut i = 0usize;
+    while i < n {
+        if lines[i].code.trim() == "#[cfg(test)]" {
+            let mut depth: i64 = 0;
+            let mut opened = false;
+            let mut j = i;
+            let end = loop {
+                j += 1;
+                if j >= n {
+                    break n - 1;
+                }
+                let mut done = false;
+                for c in lines[j].code.chars() {
+                    match c {
+                        '{' => {
+                            depth += 1;
+                            opened = true;
+                        }
+                        '}' => {
+                            depth -= 1;
+                            if opened && depth == 0 {
+                                done = true;
+                                break;
+                            }
+                        }
+                        ';' if !opened && depth == 0 => {
+                            done = true;
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+                if done {
+                    break j;
+                }
+            };
+            for t in test.iter_mut().take(end + 1).skip(i) {
+                *t = true;
+            }
+            i = end;
+        }
+        i += 1;
+    }
+    test
+}
+
+/// Find `word` in `s` at or after byte `from` with non-identifier chars on
+/// both sides; returns the byte offset of the match.
+fn find_word(s: &str, word: &str, from: usize) -> Option<usize> {
+    let bytes = s.as_bytes();
+    let is_ident = |b: u8| b.is_ascii_alphanumeric() || b == b'_';
+    let mut at = from;
+    while let Some(pos) = s[at..].find(word) {
+        let start = at + pos;
+        let end = start + word.len();
+        let ok_before = start == 0 || !is_ident(bytes[start - 1]);
+        let ok_after = end >= bytes.len() || !is_ident(bytes[end]);
+        if ok_before && ok_after {
+            return Some(start);
+        }
+        at = start + word.len();
+    }
+    None
+}
+
+/// Collect the contiguous comment/attribute block immediately above
+/// 0-based `line` (doc comments included); a blank line breaks adjacency.
+fn leading_comment(f: &SourceFile, line: usize) -> String {
+    let mut out = String::new();
+    let mut i = line;
+    while i > 0 {
+        i -= 1;
+        let l = &f.lines[i];
+        let code = l.code.trim();
+        if code.is_empty() && !l.comment.is_empty() {
+            out.push_str(&l.comment);
+            out.push('\n');
+        } else if code.starts_with("#[") || code.starts_with("#![") {
+            // attributes may sit between the contract comment and the item
+        } else {
+            break;
+        }
+    }
+    out
+}
+
+/// Extract `STREAM_DESCRIPTORS_*` names from arbitrary text.
+pub fn stream_vars(text: &str) -> Vec<String> {
+    const PREFIX: &str = "STREAM_DESCRIPTORS_";
+    let mut out = Vec::new();
+    let mut from = 0usize;
+    while let Some(pos) = text[from..].find(PREFIX) {
+        let tail = from + pos + PREFIX.len();
+        let rest: String = text[tail..]
+            .chars()
+            .take_while(|c| c.is_ascii_uppercase() || c.is_ascii_digit() || *c == '_')
+            .collect();
+        if !rest.is_empty() {
+            out.push(format!("{PREFIX}{}", rest.trim_end_matches('_')));
+        }
+        from = tail;
+    }
+    out
+}
+
+/// Validate one bench id against the DESIGN §5 `family/arm/.../param`
+/// grammar; `None` means valid, `Some(reason)` explains the violation.
+/// `{...}` format placeholders count as one opaque token.
+pub fn check_bench_id(id: &str) -> Option<String> {
+    if id.is_empty() {
+        return Some("empty id".into());
+    }
+    if id.chars().any(char::is_whitespace) {
+        return Some("contains whitespace".into());
+    }
+    let mut skeleton = String::new();
+    let mut depth = 0usize;
+    for c in id.chars() {
+        match c {
+            '{' => {
+                depth += 1;
+                if depth == 1 {
+                    skeleton.push('P');
+                }
+            }
+            '}' => {
+                if depth == 0 {
+                    return Some("unbalanced `}` in format placeholder".into());
+                }
+                depth -= 1;
+            }
+            _ if depth > 0 => {}
+            _ => skeleton.push(c),
+        }
+    }
+    if depth != 0 {
+        return Some("unbalanced `{` in format placeholder".into());
+    }
+    let segs: Vec<&str> = skeleton.split('/').collect();
+    if segs.len() < 2 {
+        return Some("needs at least two `/`-segments (`family/arm`)".into());
+    }
+    if segs.iter().any(|s| s.is_empty()) {
+        return Some("empty `/`-segment".into());
+    }
+    for (k, seg) in segs.iter().enumerate() {
+        for c in seg.chars() {
+            if !(c.is_ascii_alphanumeric() || "._=|+-".contains(c)) {
+                return Some(format!("character `{c}` outside `[A-Za-z0-9._=|+-]`"));
+            }
+        }
+        if k + 1 != segs.len() && seg.contains('=') {
+            return Some("`key=value` params belong in the final segment only".into());
+        }
+    }
+    None
+}
+
+/// The individual lint passes.  Each takes a scanned [`SourceFile`] and
+/// returns findings; [`lint_repo`] wires them to their scopes.
+pub mod lints {
+    use super::*;
+
+    fn diag(f: &SourceFile, line0: usize, lint: &'static str, msg: String) -> Diagnostic {
+        Diagnostic { path: f.rel.clone(), line: line0 + 1, lint, msg }
+    }
+
+    /// `safety-contract`: every line containing an `unsafe` token must have
+    /// a `SAFETY` comment adjacent — trailing on the same line or in the
+    /// comment/attribute block directly above.
+    pub fn safety_contract(f: &SourceFile) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        for (i, l) in f.lines.iter().enumerate() {
+            if find_word(&l.code, "unsafe", 0).is_none() {
+                continue;
+            }
+            if l.comment.contains("SAFETY") || leading_comment(f, i).contains("SAFETY") {
+                continue;
+            }
+            out.push(diag(
+                f,
+                i,
+                "safety-contract",
+                "`unsafe` without an adjacent `// SAFETY:` contract (DESIGN.md §12)".into(),
+            ));
+        }
+        out
+    }
+
+    /// `missing-docs-gate`: no `allow(missing_docs)` escape hatches.
+    pub fn missing_docs_gate(f: &SourceFile) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        for (i, l) in f.lines.iter().enumerate() {
+            if l.code.contains("allow(missing_docs)") {
+                out.push(diag(
+                    f,
+                    i,
+                    "missing-docs-gate",
+                    "`allow(missing_docs)` gate — document the items instead (DESIGN.md §12)"
+                        .into(),
+                ));
+            }
+        }
+        out
+    }
+
+    /// True when the statement containing 0-based `line` carries a
+    /// `// repro-lint: allow(panic-hygiene): ...` marker — trailing on a
+    /// statement line or in the comment block above the statement head.
+    fn panic_allowed(f: &SourceFile, line: usize) -> bool {
+        const MARK: &str = "repro-lint: allow(panic-hygiene)";
+        if f.lines[line].comment.contains(MARK) {
+            return true;
+        }
+        let mut head = line;
+        while head > 0 {
+            let prev = &f.lines[head - 1];
+            let t = prev.code.trim();
+            if t.is_empty() || t.starts_with("#[") || t.starts_with("#![") {
+                break;
+            }
+            if matches!(t.chars().last(), Some(';' | '{' | '}' | ',')) {
+                break;
+            }
+            if prev.comment.contains(MARK) {
+                return true;
+            }
+            head -= 1;
+        }
+        leading_comment(f, head).contains(MARK)
+    }
+
+    /// An `.expect(` whose first argument is not a string literal (the
+    /// json parser's `self.expect(..)` combinator is exempt).
+    fn bad_expect(f: &SourceFile, line: usize) -> bool {
+        let code = &f.lines[line].code;
+        let mut from = 0usize;
+        while let Some(pos) = code[from..].find(".expect(") {
+            let abs = from + pos;
+            from = abs + ".expect(".len();
+            if code[..abs].ends_with("self") {
+                continue;
+            }
+            let after = code[from..].trim_start();
+            let ok = if after.is_empty() {
+                f.lines
+                    .get(line + 1)
+                    .is_some_and(|n| n.code.trim_start().starts_with('"'))
+            } else {
+                after.starts_with('"')
+            };
+            if !ok {
+                return true;
+            }
+        }
+        false
+    }
+
+    /// `panic-hygiene`: `.unwrap()`, message-less `.expect(..)`, and
+    /// `panic!` are banned in non-test library code unless the statement
+    /// carries an allow marker (see [`panic_allowed`]).
+    pub fn panic_hygiene(f: &SourceFile) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        for (i, l) in f.lines.iter().enumerate() {
+            if f.test_lines[i] {
+                continue;
+            }
+            let mut hits: Vec<&str> = Vec::new();
+            if l.code.contains(".unwrap()") {
+                hits.push("`.unwrap()`");
+            }
+            let mut at = 0usize;
+            while let Some(p) = find_word(&l.code, "panic", at) {
+                if l.code[p + 5..].starts_with('!') {
+                    hits.push("`panic!`");
+                    break;
+                }
+                at = p + 5;
+            }
+            if bad_expect(f, i) {
+                hits.push("`.expect(..)` without a string-literal invariant");
+            }
+            if hits.is_empty() || panic_allowed(f, i) {
+                continue;
+            }
+            for h in hits {
+                out.push(diag(
+                    f,
+                    i,
+                    "panic-hygiene",
+                    format!(
+                        "{h} in non-test library code — return an error, spell out the \
+                         invariant in `.expect(\"...\")`, or mark the statement with \
+                         `// repro-lint: allow(panic-hygiene): <reason>` (DESIGN.md §12)"
+                    ),
+                ));
+            }
+        }
+        out
+    }
+
+    /// `env-registry` (literal half): every `STREAM_DESCRIPTORS_*` string
+    /// literal in non-test code must name a registry row.
+    pub fn env_literals(f: &SourceFile, registry: &BTreeSet<String>) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        for s in &f.strings {
+            if f.test_lines[s.line] {
+                continue;
+            }
+            for name in stream_vars(&s.text) {
+                if !registry.contains(&name) {
+                    out.push(diag(
+                        f,
+                        s.line,
+                        "env-registry",
+                        format!(
+                            "`{name}` is not in util::env::REGISTRY — register it there and \
+                             document it in the README/DESIGN env tables (DESIGN.md §12)"
+                        ),
+                    ));
+                }
+            }
+        }
+        out
+    }
+
+    /// `env-registry` (read half): only `util/env.rs` may call
+    /// `env::var`/`env::var_os`; everything else resolves through the
+    /// registry wrappers.
+    pub fn env_direct_reads(f: &SourceFile) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        for (i, l) in f.lines.iter().enumerate() {
+            if f.test_lines[i] {
+                continue;
+            }
+            let mut from = 0usize;
+            while let Some(pos) = l.code[from..].find("env::var") {
+                let abs = from + pos;
+                from = abs + "env::var".len();
+                if l.code[..abs].ends_with("util::") {
+                    continue;
+                }
+                out.push(diag(
+                    f,
+                    i,
+                    "env-registry",
+                    "direct `env::var` read — route it through util::env so the registry \
+                     and the README/DESIGN tables stay authoritative (DESIGN.md §12)"
+                        .into(),
+                ));
+            }
+        }
+        out
+    }
+
+    /// Parse `name: "STREAM_DESCRIPTORS_*"` rows out of `util/env.rs`.
+    pub fn parse_registry(env_rs: &str) -> BTreeSet<String> {
+        let mut out = BTreeSet::new();
+        for line in env_rs.lines() {
+            if let Some(rest) = line.trim_start().strip_prefix("name: \"") {
+                if let Some(end) = rest.find('"') {
+                    out.insert(rest[..end].to_string());
+                }
+            }
+        }
+        out
+    }
+
+    /// `env-registry` (docs half): every `STREAM_DESCRIPTORS_*` mention in
+    /// a doc must be registered, and every registry row must appear in the
+    /// doc's environment table (a markdown `|`-row).
+    pub fn env_doc_tables(
+        doc_rel: &str,
+        doc: &str,
+        registry: &BTreeSet<String>,
+    ) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        let mut table_rows: BTreeSet<String> = BTreeSet::new();
+        for (i, line) in doc.lines().enumerate() {
+            let names = stream_vars(line);
+            if line.trim_start().starts_with('|') {
+                table_rows.extend(names.iter().cloned());
+            }
+            for name in names {
+                if !registry.contains(&name) {
+                    out.push(Diagnostic {
+                        path: doc_rel.to_string(),
+                        line: i + 1,
+                        lint: "env-registry",
+                        msg: format!(
+                            "`{name}` is documented here but absent from \
+                             util::env::REGISTRY — stale docs or an unregistered variable"
+                        ),
+                    });
+                }
+            }
+        }
+        for name in registry {
+            if !table_rows.contains(name) {
+                out.push(Diagnostic {
+                    path: doc_rel.to_string(),
+                    line: 1,
+                    lint: "env-registry",
+                    msg: format!(
+                        "`{name}` is in util::env::REGISTRY but missing from the \
+                         {doc_rel} environment-variable table"
+                    ),
+                });
+            }
+        }
+        out
+    }
+
+    /// Walk code from (0-based `line`, char `col`), skipping whitespace and
+    /// line breaks, and resolve the grammar `[=] [format ! (] "…"` to the
+    /// string literal it opens.
+    fn literal_after(f: &SourceFile, line: usize, col: usize) -> Option<(usize, String)> {
+        let mut l = line;
+        let mut c = col;
+        let mut expect = 0u8; // 0 start, 1 after `format`, 2 after `!`, 3 after `(`
+        let limit = (line + 4).min(f.lines.len());
+        while l < limit {
+            let chars: Vec<char> = f.lines[l].code.chars().collect();
+            while c < chars.len() {
+                let ch = chars[c];
+                if ch.is_whitespace() {
+                    c += 1;
+                    continue;
+                }
+                match (expect, ch) {
+                    (0, '=') => c += 1,
+                    (_, '"') => {
+                        let text = f
+                            .strings
+                            .iter()
+                            .find(|s| s.line == l && s.col == c)?
+                            .text
+                            .clone();
+                        return Some((l, text));
+                    }
+                    (0, 'f') => {
+                        let ident: String = chars[c..]
+                            .iter()
+                            .take_while(|k| k.is_alphanumeric() || **k == '_')
+                            .collect();
+                        if ident != "format" {
+                            return None;
+                        }
+                        c += ident.chars().count();
+                        expect = 1;
+                    }
+                    (1, '!') => {
+                        c += 1;
+                        expect = 2;
+                    }
+                    (2, '(') => {
+                        c += 1;
+                        expect = 3;
+                    }
+                    _ => return None,
+                }
+            }
+            l += 1;
+            c = 0;
+        }
+        None
+    }
+
+    /// Collect `(line0, id)` bench-id literals anchored at `.bench(` calls
+    /// and `let id =` bindings.
+    pub fn collect_bench_ids(f: &SourceFile) -> Vec<(usize, String)> {
+        let mut out = Vec::new();
+        for (i, l) in f.lines.iter().enumerate() {
+            let mut from = 0usize;
+            while let Some(pos) = l.code[from..].find(".bench(") {
+                let abs = from + pos + ".bench(".len();
+                from = abs;
+                let col = l.code[..abs].chars().count();
+                if let Some(hit) = literal_after(f, i, col) {
+                    out.push(hit);
+                }
+            }
+            from = 0;
+            while let Some(pos) = find_word(&l.code, "id", from) {
+                from = pos + 2;
+                let toks: Vec<&str> = l.code[..pos].split_whitespace().collect();
+                let is_let = matches!(toks.as_slice(), [.., "let"] | [.., "let", "mut"]);
+                if !is_let {
+                    continue;
+                }
+                let col = l.code[..pos + 2].chars().count();
+                if let Some(hit) = literal_after(f, i, col) {
+                    out.push(hit);
+                }
+            }
+        }
+        out
+    }
+
+    /// `bench-id-schema`: every bench id found by [`collect_bench_ids`]
+    /// must satisfy [`check_bench_id`].
+    pub fn bench_id_schema(f: &SourceFile) -> Vec<Diagnostic> {
+        let mut out = Vec::new();
+        for (line0, id) in collect_bench_ids(f) {
+            if let Some(reason) = check_bench_id(&id) {
+                out.push(diag(
+                    f,
+                    line0,
+                    "bench-id-schema",
+                    format!(
+                        "bench id \"{id}\": {reason} — ids follow the DESIGN §5 \
+                         `family/arm/.../param` grammar"
+                    ),
+                ));
+            }
+        }
+        out
+    }
+}
+
+fn collect_rs(dir: &Path, rel_base: &str, out: &mut Vec<(PathBuf, String)>) -> io::Result<()> {
+    let mut entries: Vec<_> = fs::read_dir(dir)?.collect::<io::Result<_>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let path = e.path();
+        let name = e.file_name().to_string_lossy().into_owned();
+        let rel = if rel_base.is_empty() { name.clone() } else { format!("{rel_base}/{name}") };
+        if path.is_dir() {
+            collect_rs(&path, &rel, out)?;
+        } else if name.ends_with(".rs") {
+            out.push((path, rel));
+        }
+    }
+    Ok(())
+}
+
+/// Run every lint over the repository at `root` and return the findings,
+/// sorted by path and line.  Scopes per lint:
+///
+/// | lint | scope |
+/// |---|---|
+/// | `safety-contract` | `rust/**`, `benches/**` |
+/// | `env-registry` | `rust/**`, `benches/**`, `README.md`, `DESIGN.md` |
+/// | `panic-hygiene` | `rust/src/**` (non-test code) |
+/// | `bench-id-schema` | `benches/**` |
+/// | `missing-docs-gate` | `rust/src/**` |
+pub fn lint_repo(root: &Path) -> io::Result<Vec<Diagnostic>> {
+    const ENV_RS: &str = "rust/src/util/env.rs";
+    if !root.join("rust/src").is_dir() {
+        return Err(io::Error::new(
+            io::ErrorKind::NotFound,
+            format!("{} has no rust/src — pass --root <repo>", root.display()),
+        ));
+    }
+    let mut files = Vec::new();
+    collect_rs(&root.join("rust"), "rust", &mut files)?;
+    collect_rs(&root.join("benches"), "benches", &mut files)?;
+
+    let registry = fs::read_to_string(root.join(ENV_RS))
+        .map(|s| lints::parse_registry(&s))
+        .unwrap_or_default();
+    let mut out = Vec::new();
+    if registry.is_empty() {
+        out.push(Diagnostic {
+            path: ENV_RS.to_string(),
+            line: 1,
+            lint: "env-registry",
+            msg: "no `name: \"STREAM_DESCRIPTORS_*\"` registry rows found — the env \
+                  registry is the anchor for every other env check"
+                .to_string(),
+        });
+    }
+
+    for (path, rel) in &files {
+        let raw = fs::read_to_string(path)?;
+        let force_test = rel.starts_with("rust/tests/");
+        let f = SourceFile::parse(rel, &raw, force_test);
+        out.extend(lints::safety_contract(&f));
+        if rel.starts_with("rust/src/") {
+            out.extend(lints::missing_docs_gate(&f));
+            out.extend(lints::panic_hygiene(&f));
+        }
+        if rel != ENV_RS {
+            out.extend(lints::env_literals(&f, &registry));
+            out.extend(lints::env_direct_reads(&f));
+        }
+        if rel.starts_with("benches/") {
+            out.extend(lints::bench_id_schema(&f));
+        }
+    }
+
+    for doc in ["README.md", "DESIGN.md"] {
+        match fs::read_to_string(root.join(doc)) {
+            Ok(s) => out.extend(lints::env_doc_tables(doc, &s, &registry)),
+            Err(e) => out.push(Diagnostic {
+                path: doc.to_string(),
+                line: 1,
+                lint: "env-registry",
+                msg: format!("unreadable ({e}) — the env table lives here"),
+            }),
+        }
+    }
+    out.sort();
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scanner_blanks_comments_and_strings() {
+        let src = "let x = \"unsafe // not code\"; // trailing unsafe\nlet y = 1;\n";
+        let f = SourceFile::parse("t.rs", src, false);
+        assert_eq!(f.lines.len(), 2);
+        assert!(!f.lines[0].code.contains("unsafe"));
+        assert!(f.lines[0].comment.contains("trailing unsafe"));
+        assert_eq!(f.strings.len(), 1);
+        assert_eq!(f.strings[0].text, "unsafe // not code");
+        // columns stay aligned with the raw text
+        assert_eq!(f.strings[0].col, src.find('"').expect("literal present"));
+    }
+
+    #[test]
+    fn scanner_handles_chars_lifetimes_and_raw_strings() {
+        let src = "fn f<'a>(c: char) -> bool { c == '/' || c == '\\'' }\nlet r = r#\"//\"#;\n";
+        let f = SourceFile::parse("t.rs", src, false);
+        assert!(f.lines[0].comment.is_empty(), "char '/' must not open a comment");
+        assert!(f.lines[1].comment.is_empty(), "raw string // must not open a comment");
+        assert_eq!(f.strings.len(), 1);
+        assert_eq!(f.strings[0].text, "//");
+    }
+
+    #[test]
+    fn cfg_test_region_is_marked() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}\n";
+        let f = SourceFile::parse("t.rs", src, false);
+        assert_eq!(
+            f.test_lines,
+            vec![false, true, true, true, true, false],
+            "attr through closing brace"
+        );
+    }
+
+    #[test]
+    fn cfg_not_test_attrs_do_not_open_regions() {
+        let src = "#![cfg_attr(not(test), deny(clippy::unwrap_used))]\nfn a() {}\n";
+        let f = SourceFile::parse("t.rs", src, false);
+        assert!(f.test_lines.iter().all(|t| !t));
+    }
+
+    #[test]
+    fn bench_id_grammar() {
+        assert_eq!(check_bench_id("gabe/{name}/b={frac}|E|"), None);
+        assert_eq!(check_bench_id("intersect/{}/{small}v{big}"), None);
+        assert_eq!(check_bench_id("l1/pairwise_dist/256x256xD60"), None);
+        assert!(check_bench_id("solo").is_some(), "one segment");
+        assert!(check_bench_id("has space/x").is_some(), "whitespace");
+        assert!(check_bench_id("a//b").is_some(), "empty segment");
+        assert!(check_bench_id("a/b=1/c").is_some(), "param before final segment");
+        assert!(check_bench_id("a/b:c").is_some(), "`:` outside the alphabet");
+        assert!(check_bench_id("a/{b").is_some(), "unbalanced placeholder");
+    }
+
+    #[test]
+    fn stream_var_extraction() {
+        assert_eq!(
+            stream_vars("set STREAM_DESCRIPTORS_FORCE_KERNEL=scalar and x"),
+            vec!["STREAM_DESCRIPTORS_FORCE_KERNEL".to_string()]
+        );
+        assert!(stream_vars("STREAM_DESCRIPTORS_ alone").is_empty());
+    }
+}

@@ -1,0 +1,54 @@
+//! CLI for the repo-invariant lints (DESIGN.md §12).
+//!
+//! ```text
+//! repro-lint [--root <repo>]
+//! ```
+//!
+//! Prints one `path:line: [lint-name] message` per finding and exits
+//! non-zero when anything fires; CI runs it as the blocking
+//! `static-analysis` job.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+fn main() -> ExitCode {
+    let mut root = PathBuf::from(".");
+    let mut args = std::env::args().skip(1);
+    while let Some(a) = args.next() {
+        match a.as_str() {
+            "--root" => match args.next() {
+                Some(p) => root = PathBuf::from(p),
+                None => {
+                    eprintln!("repro-lint: --root needs a path");
+                    return ExitCode::FAILURE;
+                }
+            },
+            "-h" | "--help" => {
+                println!("usage: repro-lint [--root <repo>]");
+                println!("lints rust/** and benches/** for repo invariants (DESIGN.md §12)");
+                return ExitCode::SUCCESS;
+            }
+            other => {
+                eprintln!("repro-lint: unknown argument `{other}`");
+                return ExitCode::FAILURE;
+            }
+        }
+    }
+    match repro_lint::lint_repo(&root) {
+        Ok(diags) if diags.is_empty() => {
+            eprintln!("repro-lint: clean");
+            ExitCode::SUCCESS
+        }
+        Ok(diags) => {
+            for d in &diags {
+                println!("{d}");
+            }
+            eprintln!("repro-lint: {} finding(s)", diags.len());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("repro-lint: error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -1,0 +1,89 @@
+//! Each fixture under `tests/fixtures/` violates exactly one repo
+//! invariant; these tests pin the lint name, the 1-based line, and the
+//! `path:line: [lint] message` shape, so every failure mode stays
+//! pointable from a CI log.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use repro_lint::{lints, SourceFile};
+
+fn fixture(name: &str) -> SourceFile {
+    let path = Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/fixtures").join(name);
+    let raw = std::fs::read_to_string(&path).expect("fixture readable");
+    SourceFile::parse(&format!("tests/fixtures/{name}"), &raw, false)
+}
+
+#[test]
+fn missing_safety_contract_is_flagged() {
+    let d = lints::safety_contract(&fixture("missing_safety.rs"));
+    assert_eq!(d.len(), 1, "only the undocumented site fires: {d:?}");
+    assert_eq!(d[0].lint, "safety-contract");
+    assert_eq!(d[0].line, 3);
+    let shown = d[0].to_string();
+    assert!(
+        shown.starts_with("tests/fixtures/missing_safety.rs:3: [safety-contract]"),
+        "pointable diagnostic, got: {shown}"
+    );
+}
+
+#[test]
+fn unregistered_env_var_is_flagged() {
+    let registry: BTreeSet<String> = ["STREAM_DESCRIPTORS_FORCE_KERNEL".to_string()].into();
+    let f = fixture("unregistered_env.rs");
+    let d = lints::env_literals(&f, &registry);
+    assert_eq!(d.len(), 1, "test-module names are exempt: {d:?}");
+    assert_eq!(d[0].lint, "env-registry");
+    assert_eq!(d[0].line, 2);
+    assert!(d[0].msg.contains("STREAM_DESCRIPTORS_BOGUS_KNOB"));
+
+    let d = lints::env_direct_reads(&f);
+    assert_eq!(d.len(), 1, "util::env::var and test reads are exempt: {d:?}");
+    assert_eq!(d[0].line, 6, "the std::env::var call: {d:?}");
+    assert!(d[0].to_string().starts_with("tests/fixtures/unregistered_env.rs:6: [env-registry]"));
+}
+
+#[test]
+fn nontest_unwrap_is_flagged() {
+    let d = lints::panic_hygiene(&fixture("nontest_unwrap.rs"));
+    assert_eq!(d.len(), 1, "marked panic, spelled-out expect, and test unwrap are exempt: {d:?}");
+    assert_eq!(d[0].lint, "panic-hygiene");
+    assert_eq!(d[0].line, 2);
+    assert!(d[0].msg.contains("`.unwrap()`"));
+    assert!(d[0].to_string().starts_with("tests/fixtures/nontest_unwrap.rs:2: [panic-hygiene]"));
+}
+
+#[test]
+fn malformed_bench_ids_are_flagged() {
+    let f = fixture("bad_bench_id.rs");
+    let ids = lints::collect_bench_ids(&f);
+    assert_eq!(ids.len(), 3, "two literals and one format! binding: {ids:?}");
+    let d = lints::bench_id_schema(&f);
+    assert_eq!(d.len(), 2, "the format! id is schema-clean: {d:?}");
+    assert!(d.iter().all(|x| x.lint == "bench-id-schema"));
+    assert_eq!(d[0].line, 3, "\"solo\" has a single segment: {d:?}");
+    assert_eq!(d[1].line, 6, "\"has space/arm\" contains whitespace: {d:?}");
+    assert!(d[0].to_string().starts_with("tests/fixtures/bad_bench_id.rs:3: [bench-id-schema]"));
+}
+
+#[test]
+fn missing_docs_gate_is_flagged() {
+    let d = lints::missing_docs_gate(&fixture("missing_docs_gate.rs"));
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert_eq!(d[0].lint, "missing-docs-gate");
+    assert_eq!(d[0].line, 1);
+}
+
+#[test]
+fn doc_table_drift_is_flagged() {
+    let registry: BTreeSet<String> = ["STREAM_DESCRIPTORS_FORCE_KERNEL".to_string()].into();
+    // prose naming an unregistered var + no table row for the registered one
+    let doc = "# env\n\nSet STREAM_DESCRIPTORS_OLD_KNOB to 1.\n";
+    let d = lints::env_doc_tables("README.md", doc, &registry);
+    assert_eq!(d.len(), 2, "{d:?}");
+    assert!(d.iter().any(|x| x.line == 3 && x.msg.contains("STREAM_DESCRIPTORS_OLD_KNOB")));
+    assert!(d.iter().any(|x| x.msg.contains("missing from the README.md")));
+    // a synced table row satisfies both directions
+    let doc = "| `STREAM_DESCRIPTORS_FORCE_KERNEL` | forces a kernel arm |\n";
+    assert!(lints::env_doc_tables("README.md", doc, &registry).is_empty());
+}

@@ -1,0 +1,7 @@
+fn main() {
+    let mut b = Bencher::new(0, 2);
+    b.bench("solo", None, || 1 + 1);
+    let id = format!("gabe/{}/b=0.1|E|", "ba");
+    b.bench(&id, None, || 2 + 2);
+    b.bench("has space/arm", None, || 3 + 3);
+}

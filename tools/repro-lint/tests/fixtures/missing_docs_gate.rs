@@ -1,0 +1,3 @@
+#![allow(missing_docs)]
+
+pub fn undocumented() {}

@@ -1,0 +1,10 @@
+pub fn peek(v: &[u8]) -> u8 {
+    let p = v.as_ptr();
+    unsafe { *p }
+}
+
+pub fn peek_documented(v: &[u8]) -> u8 {
+    let p = v.as_ptr();
+    // SAFETY: `p` comes from a live slice the caller guarantees non-empty.
+    unsafe { *p }
+}

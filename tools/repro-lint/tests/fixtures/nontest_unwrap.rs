@@ -1,0 +1,22 @@
+pub fn first(v: &[u32]) -> u32 {
+    *v.first().unwrap()
+}
+
+pub fn loud(flag: bool) {
+    if flag {
+        // repro-lint: allow(panic-hygiene): fixture — the abort is the point.
+        panic!("deliberate");
+    }
+}
+
+pub fn spelled(v: &[u32]) -> u32 {
+    *v.first().expect("caller guarantees non-empty input")
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn unwrap_in_tests_is_fine() {
+        assert_eq!(super::spelled(&[1]), *[1].first().unwrap());
+    }
+}

@@ -1,0 +1,16 @@
+pub fn registered_read() -> Option<String> {
+    crate::util::env::var("STREAM_DESCRIPTORS_BOGUS_KNOB")
+}
+
+pub fn direct_read() -> Option<String> {
+    std::env::var("PATH").ok()
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn test_only_names_are_exempt() {
+        let _ = "STREAM_DESCRIPTORS_TEST_ONLY";
+        let _ = std::env::var("HOME");
+    }
+}

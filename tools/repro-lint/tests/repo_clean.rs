@@ -1,0 +1,36 @@
+//! `cargo test -p repro-lint` doubles as the CI `static-analysis` gate:
+//! the real repository two levels up must scan clean, and the bench-id
+//! anchors must actually be matching the bench corpus (an anchor that
+//! silently matches nothing would green-wash the schema lint).
+
+use std::path::Path;
+
+#[test]
+fn repository_scans_clean() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("../..");
+    let diags = repro_lint::lint_repo(&root).expect("repo readable");
+    assert!(
+        diags.is_empty(),
+        "repo invariants violated:\n{}",
+        diags.iter().map(ToString::to_string).collect::<Vec<_>>().join("\n")
+    );
+}
+
+#[test]
+fn bench_id_corpus_is_covered() {
+    let benches = Path::new(env!("CARGO_MANIFEST_DIR")).join("../../benches");
+    let mut ids = Vec::new();
+    for entry in std::fs::read_dir(&benches).expect("benches/ readable") {
+        let path = entry.expect("dir entry").path();
+        if path.extension().is_some_and(|e| e == "rs") {
+            let raw = std::fs::read_to_string(&path).expect("bench source readable");
+            let f = repro_lint::SourceFile::parse("bench.rs", &raw, false);
+            ids.extend(repro_lint::lints::collect_bench_ids(&f).into_iter().map(|(_, id)| id));
+        }
+    }
+    assert!(
+        ids.len() >= 10,
+        "six bench families should yield at least 10 anchored ids, got {}: {ids:?}",
+        ids.len()
+    );
+}
