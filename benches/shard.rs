@@ -1,0 +1,66 @@
+//! Sharded-merge bench (ISSUE 10): wall-clock of the K-shard
+//! ingest+merge path ([`run_sharded_edges`]) as the shard count grows,
+//! for both backends.  The interesting read is the scaling shape: the
+//! per-shard passes run on K threads, then the merge re-parses K
+//! serialized states and (reservoir) replays the weighted merged
+//! sample, so the curve shows where merge overhead eats the fan-out
+//! win.
+//!
+//! Ids are `shard/<backend>/<net>/k=<K>` (the repro-lint bench-id
+//! schema keeps `=` in the final segment only); `-- --json <dir>`
+//! writes `BENCH_shard.json`, `-- --filter shard/sketch/` limits the
+//! run.
+
+use std::process::ExitCode;
+
+use stream_descriptors::checkpoint::{hash_partition, run_sharded_edges, ShardConfig};
+use stream_descriptors::coordinator::DescriptorKind;
+use stream_descriptors::gen;
+use stream_descriptors::graph::Graph;
+use stream_descriptors::sampling::Backend;
+use stream_descriptors::util::bench::{BenchArgs, Bencher};
+use stream_descriptors::util::rng::Pcg64;
+
+fn families() -> Vec<(&'static str, Graph)> {
+    let mut rng = Pcg64::seed_from_u64(2);
+    vec![
+        ("er", gen::er_graph(20_000, 60_000, &mut rng)),
+        ("plc", gen::powerlaw_cluster_graph(20_000, 4, 0.5, &mut rng)),
+    ]
+}
+
+fn main() -> ExitCode {
+    let args = BenchArgs::parse("shard");
+    let mut b = Bencher::new(1, 5);
+    if args.smoke {
+        println!("shard: smoke mode, skipping timed runs");
+        return args.finish("shard", &b);
+    }
+    for (name, g) in families() {
+        let m = g.m() as u64;
+        let budget = g.m() / 5;
+        let backends = [
+            ("reservoir", Backend::Reservoir),
+            ("sketch", Backend::sketch_default()),
+        ];
+        for (bname, backend) in backends {
+            for k in [1usize, 2, 4, 8] {
+                let id = format!("shard/{bname}/{name}/k={k}");
+                if !args.matches(&id) {
+                    continue;
+                }
+                let parts = hash_partition(&g.edges, k);
+                let cfg = ShardConfig {
+                    kind: DescriptorKind::Gabe,
+                    budget,
+                    seed: 3,
+                    backend,
+                };
+                b.bench(id, Some(m), || {
+                    run_sharded_edges(&parts, &cfg).expect("sharded run").edges
+                });
+            }
+        }
+    }
+    args.finish("shard", &b)
+}

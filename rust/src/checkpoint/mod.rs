@@ -33,7 +33,10 @@ use std::io::Write;
 use std::path::{Path, PathBuf};
 use std::sync::Arc;
 
-use crate::coordinator::{santa_pass1, DescriptorKind, WorkerEstimate, WorkerState};
+use crate::coordinator::{
+    merge_reservoir_states, merge_sketch_states, santa_pass1, DescriptorKind, WorkerEstimate,
+    WorkerState,
+};
 use crate::graph::stream::EdgeStream;
 use crate::graph::Edge;
 use crate::sampling::{Backend, EstimatorConfig, WindowConfig};
@@ -697,6 +700,444 @@ fn write_direct_checkpoint(
         .map_err(|e| e.context(format!("writing checkpoint at arrival {t}")))
 }
 
+// ---------------------------------------------------------------------------
+// Sharded runner (ISSUE 10): independent per-shard passes + state merge
+// ---------------------------------------------------------------------------
+
+/// `.sds` shard-state magic — a sibling of the `.sdc` checkpoint magic,
+/// distinct on the last byte so neither reader decodes the other's files.
+pub const SHARD_MAGIC: [u8; 4] = [0x89, b'S', b'D', b'S'];
+
+/// Shard-state format version; readers reject anything else by name.
+pub const SHARD_VERSION: u16 = 1;
+
+/// One shard worker's serialized estimator state, self-describing enough
+/// to be merged by a process that never saw the worker: a config echo
+/// (kind, budget, *base* seed, window, backend), the shard geometry
+/// (`shard` of `shards`), the shard's arrival count, SANTA's shared
+/// pass-1 degree table, and the [`Enc`]-serialized [`WorkerState`]
+/// bytes.  This is the process-boundary contract of `repro shard`: shard
+/// workers communicate with the merger *only* through these blobs.
+///
+/// The echoed seed is the run's base seed, not the shard worker's derived
+/// one — [`ensure_mergeable`] compares base seeds so two shards of
+/// different runs can never be merged, while each reservoir shard still
+/// samples under its own splitmix-derived stream (see
+/// [`run_sharded_edges`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ShardState {
+    /// Which estimator the shard ran.
+    pub kind: DescriptorKind,
+    /// Reservoir budget (per shard).
+    pub budget: usize,
+    /// Base RNG seed of the sharded run (pre-derivation).
+    pub seed: u64,
+    /// Window policy + snapshot cadence (full-history for `repro shard`).
+    pub window: WindowConfig,
+    /// Estimation backend of the run.
+    pub backend: Backend,
+    /// Total shard count of the run this state belongs to.
+    pub shards: u32,
+    /// This state's shard index in `0..shards`.
+    pub shard: u32,
+    /// Edges this shard consumed (its partition's size, not the total).
+    pub arrivals: u64,
+    /// SANTA's *global* pass-1 degree table (identical across shards);
+    /// `None` for GABE/MAEVE.
+    pub degrees: Option<Arc<Vec<u32>>>,
+    /// The [`Enc`]-serialized `WorkerState` bytes.
+    pub bytes: Vec<u8>,
+}
+
+impl ShardState {
+    /// Encode the blob: header, config echo, geometry, body, trailing
+    /// FNV-1a checksum (same failure philosophy as [`CheckpointDoc`]).
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut out = Enc::new();
+        out.raw(&SHARD_MAGIC);
+        out.u16(SHARD_VERSION);
+        out.u16(0); // flags: none defined in version 1
+        let (kind_tag, exact) = match self.kind {
+            DescriptorKind::Gabe => (0u8, 0u8),
+            DescriptorKind::Maeve => (1, 0),
+            DescriptorKind::Santa { exact_wedges } => (2, exact_wedges as u8),
+        };
+        out.u8(kind_tag);
+        out.u8(exact);
+        out.usize(self.budget);
+        out.u64(self.seed);
+        self.window.save(&mut out);
+        self.backend.save(&mut out);
+        out.u32(self.shards);
+        out.u32(self.shard);
+        out.u64(self.arrivals);
+        match &self.degrees {
+            None => out.u8(0),
+            Some(deg) => {
+                out.u8(1);
+                out.usize(deg.len());
+                for &d in deg.iter() {
+                    out.u32(d);
+                }
+            }
+        }
+        out.usize(self.bytes.len());
+        out.raw(&self.bytes);
+        let mut bytes = out.into_bytes();
+        let sum = fnv1a64(&bytes);
+        bytes.extend_from_slice(&sum.to_le_bytes());
+        bytes
+    }
+
+    /// Decode and validate a blob: magic, version, flags, checksum, every
+    /// tag and count, full consumption.
+    pub fn from_bytes(bytes: &[u8]) -> crate::Result<ShardState> {
+        crate::ensure!(
+            bytes.len() >= SHARD_MAGIC.len() + 4 + 8,
+            "shard state too short ({} bytes)",
+            bytes.len()
+        );
+        crate::ensure!(bytes[..4] == SHARD_MAGIC, "not a shard state (bad magic)");
+        let (payload, sum) = bytes.split_at(bytes.len() - 8);
+        let mut want = [0u8; 8];
+        want.copy_from_slice(sum);
+        crate::ensure!(
+            fnv1a64(payload) == u64::from_le_bytes(want),
+            "shard state checksum mismatch (corrupt or torn blob)"
+        );
+        let mut d = Dec::new(&payload[4..]);
+        let version = d.u16()?;
+        crate::ensure!(
+            version == SHARD_VERSION,
+            "shard state version {version} is not supported (this build reads {SHARD_VERSION})"
+        );
+        let flags = d.u16()?;
+        crate::ensure!(flags == 0, "shard state flags {flags:#06x} are not supported");
+        let kind_tag = d.u8()?;
+        let exact = d.u8()?;
+        crate::ensure!(exact <= 1, "shard state exact-wedges flag {exact} is not a boolean");
+        let kind = match kind_tag {
+            0 | 1 => {
+                crate::ensure!(exact == 0, "non-santa shard state carries an exact-wedges flag");
+                if kind_tag == 0 {
+                    DescriptorKind::Gabe
+                } else {
+                    DescriptorKind::Maeve
+                }
+            }
+            2 => DescriptorKind::Santa { exact_wedges: exact == 1 },
+            t => return Err(crate::anyhow!("shard state descriptor tag {t} is unknown")),
+        };
+        let budget = d.usize()?;
+        crate::ensure!(budget >= 1, "shard state budget must be ≥ 1 (got 0)");
+        let seed = d.u64()?;
+        let window = WindowConfig::load(&mut d)?;
+        let backend = Backend::load(&mut d)?;
+        let shards = d.u32()?;
+        crate::ensure!(shards >= 1, "shard state claims a zero-shard run");
+        let shard = d.u32()?;
+        crate::ensure!(
+            shard < shards,
+            "shard index {shard} is out of range for a {shards}-shard run"
+        );
+        let arrivals = d.u64()?;
+        let degrees = match d.u8()? {
+            0 => None,
+            1 => {
+                let n = d.seq_len(4)?;
+                let mut deg = Vec::with_capacity(n);
+                for _ in 0..n {
+                    deg.push(d.u32()?);
+                }
+                Some(Arc::new(deg))
+            }
+            t => return Err(crate::anyhow!("shard state degree-table tag {t} is unknown")),
+        };
+        let is_santa = matches!(kind, DescriptorKind::Santa { .. });
+        crate::ensure!(
+            is_santa == degrees.is_some(),
+            "shard state degree table is {} but the descriptor is {kind:?}",
+            if degrees.is_some() { "present" } else { "missing" }
+        );
+        let blen = d.seq_len(1)?;
+        let bytes = d.bytes(blen)?.to_vec();
+        d.finish()?;
+        Ok(ShardState {
+            kind,
+            budget,
+            seed,
+            window,
+            backend,
+            shards,
+            shard,
+            arrivals,
+            degrees,
+            bytes,
+        })
+    }
+}
+
+/// Reject a merge across incompatible shard states, one loud error per
+/// mismatch axis (ISSUE 10, satellite 3): descriptor kind, budget, base
+/// seed, window config, backend, shard-count geometry, duplicate shard
+/// indices, a missing shard, and SANTA degree-table disagreement.  Merge
+/// correctness rests on all shards sampling the *same run*; any mismatch
+/// here would silently bias the merged estimate, so none is tolerated.
+pub fn ensure_mergeable(states: &[ShardState]) -> crate::Result<()> {
+    crate::ensure!(!states.is_empty(), "shard merge: no shard states");
+    let head = &states[0];
+    for s in &states[1..] {
+        crate::ensure!(
+            s.kind == head.kind,
+            "shard merge: descriptor kind mismatch ({:?} vs {:?})",
+            head.kind,
+            s.kind
+        );
+        crate::ensure!(
+            s.budget == head.budget,
+            "shard merge: budget mismatch ({} vs {})",
+            head.budget,
+            s.budget
+        );
+        crate::ensure!(
+            s.seed == head.seed,
+            "shard merge: base-seed mismatch ({:#x} vs {:#x})",
+            head.seed,
+            s.seed
+        );
+        crate::ensure!(
+            s.window == head.window,
+            "shard merge: window mismatch ({:?} vs {:?})",
+            head.window,
+            s.window
+        );
+        crate::ensure!(
+            s.backend == head.backend,
+            "shard merge: backend mismatch ({} vs {})",
+            head.backend,
+            s.backend
+        );
+        crate::ensure!(
+            s.shards == head.shards,
+            "shard merge: shard-count mismatch ({} vs {})",
+            head.shards,
+            s.shards
+        );
+        crate::ensure!(
+            s.degrees == head.degrees,
+            "shard merge: santa degree tables disagree across shards"
+        );
+    }
+    crate::ensure!(
+        states.len() == head.shards as usize,
+        "shard merge: {} of {} shard states present",
+        states.len(),
+        head.shards
+    );
+    let mut seen = vec![false; head.shards as usize];
+    for s in states {
+        crate::ensure!(
+            !seen[s.shard as usize],
+            "shard merge: duplicate shard index {}",
+            s.shard
+        );
+        seen[s.shard as usize] = true;
+    }
+    Ok(())
+}
+
+/// Configuration of a sharded run ([`run_sharded_edges`]): K independent
+/// ingest+estimate passes whose states merge into one descriptor.
+/// Windows and checkpoints are unavailable — shard arrival clocks
+/// disagree, so there is no common barrier (same restriction as the
+/// coordinator's `shard_reservoir` mode).
+#[derive(Debug, Clone)]
+pub struct ShardConfig {
+    /// Which estimator to run.
+    pub kind: DescriptorKind,
+    /// Reservoir budget (per shard).
+    pub budget: usize,
+    /// Base RNG seed; reservoir shard `j` samples under
+    /// `seed ^ (j · 0x9e37_79b9_7f4a_7c15)` (the coordinator's derived
+    /// worker seeds) while sketch shards keep the base seed (merging
+    /// requires identical hash parameters).
+    pub seed: u64,
+    /// Estimation backend.
+    pub backend: Backend,
+}
+
+impl Default for ShardConfig {
+    fn default() -> Self {
+        ShardConfig {
+            kind: DescriptorKind::Gabe,
+            budget: 100_000,
+            seed: 0xc00d,
+            backend: Backend::Reservoir,
+        }
+    }
+}
+
+impl ShardConfig {
+    /// Check every knob before spawning workers.
+    pub fn validate(&self) -> crate::Result<()> {
+        crate::ensure!(self.budget >= 1, "budget must be ≥ 1 (got 0)");
+        crate::ensure!(
+            !matches!(self.kind, DescriptorKind::Santa { exact_wedges: true }),
+            "santa exact_wedges is incompatible with a sharded run (the closed-form \
+             accumulators are not shard-mergeable)"
+        );
+        self.estimator_config(self.seed).validate()
+    }
+
+    /// The estimator config shard workers run (full-history window).
+    pub(crate) fn estimator_config(&self, seed: u64) -> EstimatorConfig {
+        EstimatorConfig::new(self.budget).with_seed(seed).with_backend(self.backend)
+    }
+}
+
+/// A sharded run's output.
+#[derive(Debug)]
+pub struct ShardOutcome {
+    /// The merged estimate.
+    pub estimate: WorkerEstimate,
+    /// Total arrivals across all shards.
+    pub edges: u64,
+    /// Per-shard arrival counts, in shard order.
+    pub per_shard_edges: Vec<u64>,
+}
+
+/// Partition edges by a splitmix64-style hash of the canonical edge
+/// label, so the same edge always lands in the same shard regardless of
+/// arrival order — the partitioner `repro shard` applies to a single
+/// input stream.
+pub fn hash_partition(edges: &[Edge], shards: usize) -> Vec<Vec<Edge>> {
+    assert!(shards >= 1, "hash_partition needs at least one shard");
+    let mut out: Vec<Vec<Edge>> = (0..shards).map(|_| Vec::new()).collect();
+    for &e in edges {
+        let label = ((e.u as u64) << 32) | e.v as u64;
+        // splitmix64 finalizer: full-avalanche mix of the label
+        let mut z = label.wrapping_add(0x9e37_79b9_7f4a_7c15);
+        z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+        z ^= z >> 31;
+        out[(z % shards as u64) as usize].push(e);
+    }
+    out
+}
+
+/// Run one independent ingest+estimate pass per shard (in-process worker
+/// threads) and merge the K serialized states into one descriptor.
+///
+/// The workers communicate with the merging thread *only* through
+/// [`ShardState`] blobs — serialized, checksummed, and re-parsed on the
+/// main thread exactly as a multi-process deployment would ship them —
+/// so this function doubles as the in-process reference for the
+/// process-boundary contract.  SANTA's exact pass 1 runs over *all*
+/// shards first (the degree table is global); sketch shards then merge
+/// entrywise, reservoir shards by weighted subsampling under
+/// `cfg.seed ^ RESERVOIR_MERGE_SEED` (DESIGN.md §13).
+pub fn run_sharded_edges(
+    shards: &[Vec<Edge>],
+    cfg: &ShardConfig,
+) -> crate::Result<ShardOutcome> {
+    cfg.validate().map_err(|e| e.context("shard config"))?;
+    crate::ensure!(!shards.is_empty(), "sharded run needs at least one shard");
+    let k = shards.len();
+
+    // SANTA pass 1 is global: degrees over the union of all shards, shared
+    // verbatim by every shard state (merge checks they agree)
+    let degrees: Option<Arc<Vec<u32>>> = match cfg.kind {
+        DescriptorKind::Santa { .. } => {
+            let mut deg: Vec<u32> = Vec::new();
+            for part in shards {
+                for e in part {
+                    let top = e.u.max(e.v) as usize;
+                    if deg.len() <= top {
+                        deg.resize(top + 1, 0);
+                    }
+                    deg[e.u as usize] += 1;
+                    deg[e.v as usize] += 1;
+                }
+            }
+            Some(Arc::new(deg))
+        }
+        _ => None,
+    };
+
+    // one worker per shard; each returns a serialized ShardState blob
+    let blobs: Vec<crate::Result<Vec<u8>>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..k)
+            .map(|j| {
+                let degrees = degrees.clone();
+                scope.spawn(move || -> crate::Result<Vec<u8>> {
+                    // reservoir shards sample under derived per-shard
+                    // seeds (independent streams, satellite 3); sketch
+                    // shards keep the base seed (identical hash params)
+                    let seed = if cfg.backend.is_sketch() {
+                        cfg.seed
+                    } else {
+                        cfg.seed ^ (j as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                    };
+                    let mut state =
+                        WorkerState::new(cfg.kind, &cfg.estimator_config(seed), &degrees);
+                    for &e in &shards[j] {
+                        state.push(e);
+                    }
+                    let mut enc = Enc::new();
+                    state.save(&mut enc);
+                    Ok(ShardState {
+                        kind: cfg.kind,
+                        budget: cfg.budget,
+                        seed: cfg.seed,
+                        window: WindowConfig::default(),
+                        backend: cfg.backend,
+                        shards: k as u32,
+                        shard: j as u32,
+                        arrivals: shards[j].len() as u64,
+                        degrees,
+                        bytes: enc.into_bytes(),
+                    }
+                    .to_bytes())
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| {
+                h.join()
+                    .unwrap_or_else(|_| Err(crate::anyhow!("shard worker panicked")))
+            })
+            .collect()
+    });
+
+    // the merging side: parse every blob back (round-trip through the
+    // wire format), validate compatibility, then merge
+    let mut states = Vec::with_capacity(k);
+    for (j, blob) in blobs.into_iter().enumerate() {
+        let blob = blob.map_err(|e| e.context(format!("shard {j}")))?;
+        states.push(
+            ShardState::from_bytes(&blob).map_err(|e| e.context(format!("shard {j} state")))?,
+        );
+    }
+    ensure_mergeable(&states)?;
+    let per_shard_edges: Vec<u64> = states.iter().map(|s| s.arrivals).collect();
+    let edges: u64 = per_shard_edges.iter().sum();
+    let inner: Vec<Vec<u8>> = states.into_iter().map(|s| s.bytes).collect();
+    let estimate = if cfg.backend.is_sketch() {
+        merge_sketch_states(cfg.kind, &inner, &degrees)
+            .map_err(|e| e.context("merging sketch shard states"))?
+    } else {
+        merge_reservoir_states(
+            cfg.kind,
+            &inner,
+            &degrees,
+            cfg.seed ^ crate::sampling::merge::RESERVOIR_MERGE_SEED,
+        )
+        .map_err(|e| e.context("merging reservoir shard states"))?
+    };
+    Ok(ShardOutcome { estimate, edges, per_shard_edges })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1013,5 +1454,233 @@ mod tests {
         let mut s = VecStream::shuffled(g.edges.clone(), 3);
         let err = resume_direct(&mut s, &ppath, &base).unwrap_err();
         assert!(err.to_string().contains("pipeline"), "{err}");
+    }
+
+    // ---- ISSUE 10: shard-state format + sharded runner ----
+
+    fn sample_shard_state(shard: u32) -> ShardState {
+        ShardState {
+            kind: DescriptorKind::Gabe,
+            budget: 64,
+            seed: 0xfeed,
+            window: WindowConfig::default(),
+            backend: Backend::Reservoir,
+            shards: 2,
+            shard,
+            arrivals: 100 + shard as u64,
+            degrees: None,
+            bytes: vec![1, 2, 3, 4],
+        }
+    }
+
+    #[test]
+    fn shard_state_roundtrip_preserves_everything() {
+        let s = ShardState {
+            kind: DescriptorKind::Santa { exact_wedges: false },
+            budget: 512,
+            seed: 0xabcd,
+            window: WindowConfig::default(),
+            backend: Backend::Sketch { width: 16, depth: 2 },
+            shards: 4,
+            shard: 3,
+            arrivals: 999,
+            degrees: Some(Arc::new(vec![2, 7, 1, 8])),
+            bytes: vec![5, 5, 5],
+        };
+        assert_eq!(ShardState::from_bytes(&s.to_bytes()).unwrap(), s);
+    }
+
+    #[test]
+    fn corrupt_shard_states_fail_loudly() {
+        let good = sample_shard_state(0).to_bytes();
+        // a checkpoint document is not a shard state (and vice versa)
+        let err = ShardState::from_bytes(&sample_doc().to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("magic"), "{err}");
+        assert!(CheckpointDoc::from_bytes(&good).is_err());
+        // future version (checksum refreshed so the version check fires)
+        let mut bad = good.clone();
+        bad[4] = 2;
+        let sum = fnv1a64(&bad[..bad.len() - 8]).to_le_bytes();
+        let n = bad.len();
+        bad[n - 8..].copy_from_slice(&sum);
+        let err = ShardState::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("version 2"), "{err}");
+        // nonzero flags
+        let mut bad = good.clone();
+        bad[6] = 1;
+        let sum = fnv1a64(&bad[..bad.len() - 8]).to_le_bytes();
+        let n = bad.len();
+        bad[n - 8..].copy_from_slice(&sum);
+        let err = ShardState::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("flags"), "{err}");
+        // any flipped body bit is a checksum mismatch
+        let mut bad = good.clone();
+        bad[12] ^= 0x10;
+        let err = ShardState::from_bytes(&bad).unwrap_err();
+        assert!(err.to_string().contains("checksum"), "{err}");
+        // truncation at every prefix errors, never panics
+        for cut in 0..good.len() {
+            assert!(ShardState::from_bytes(&good[..cut]).is_err(), "cut={cut}");
+        }
+        // trailing garbage after the checksum
+        let mut bad = good;
+        bad.push(0);
+        assert!(ShardState::from_bytes(&bad).is_err());
+        // out-of-range shard index is rejected at parse time
+        let oob = ShardState { shard: 2, ..sample_shard_state(0) };
+        let err = ShardState::from_bytes(&oob.to_bytes()).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+    }
+
+    /// Satellite 3: every mismatch axis between shard states is its own
+    /// loud error — kind, budget, base seed, window, backend, geometry,
+    /// duplicates, missing shards, and degree-table disagreement.
+    #[test]
+    fn shard_merge_rejects_each_mismatch_axis() {
+        let a = sample_shard_state(0);
+        for (mutant, named) in [
+            (ShardState { kind: DescriptorKind::Maeve, ..sample_shard_state(1) }, "kind"),
+            (ShardState { budget: 65, ..sample_shard_state(1) }, "budget"),
+            (ShardState { seed: 0xfeee, ..sample_shard_state(1) }, "seed"),
+            (
+                ShardState {
+                    backend: Backend::Sketch { width: 16, depth: 2 },
+                    ..sample_shard_state(1)
+                },
+                "backend",
+            ),
+            (ShardState { shards: 3, ..sample_shard_state(1) }, "shard-count"),
+            (sample_shard_state(0), "duplicate"),
+        ] {
+            let err = ensure_mergeable(&[a.clone(), mutant]).unwrap_err();
+            assert!(err.to_string().contains(named), "{named}: {err}");
+        }
+        // a missing shard is named by count
+        let err = ensure_mergeable(&[a.clone()]).unwrap_err();
+        assert!(err.to_string().contains("1 of 2"), "{err}");
+        // santa shards must agree on the global degree table
+        let santa = |deg: Vec<u32>, shard: u32| ShardState {
+            kind: DescriptorKind::Santa { exact_wedges: false },
+            degrees: Some(Arc::new(deg)),
+            ..sample_shard_state(shard)
+        };
+        let err =
+            ensure_mergeable(&[santa(vec![1, 1], 0), santa(vec![2, 2], 1)]).unwrap_err();
+        assert!(err.to_string().contains("degree tables"), "{err}");
+        // the complete, consistent set passes
+        ensure_mergeable(&[a, sample_shard_state(1)]).unwrap();
+    }
+
+    #[test]
+    fn hash_partition_is_stable_and_complete() {
+        let g = gen::er_graph(80, 300, &mut Pcg64::seed_from_u64(93));
+        let parts = hash_partition(&g.edges, 4);
+        assert_eq!(parts.iter().map(Vec::len).sum::<usize>(), g.m());
+        assert!(parts.iter().all(|p| !p.is_empty()), "300 edges over 4 hash shards");
+        // the assignment depends only on the edge label, not arrival order
+        let mut shuffled = g.edges.clone();
+        shuffled.reverse();
+        let parts2 = hash_partition(&shuffled, 4);
+        for (p, q) in parts.iter().zip(&parts2) {
+            let mut p = p.clone();
+            let mut q = q.clone();
+            p.sort_unstable();
+            q.sort_unstable();
+            assert_eq!(p, q);
+        }
+    }
+
+    /// The shard tentpole's exactness anchor: with budget ≥ |E| every
+    /// shard keeps its whole partition, the merged sample is the whole
+    /// edge set, and the sharded run agrees with the direct run for every
+    /// descriptor (to rounding — the merge assembles sums in a different
+    /// order than the direct push sequence).
+    #[test]
+    #[cfg_attr(miri, ignore)] // 3 descriptors × 2 runs: too slow under miri
+    fn sharded_run_full_budget_matches_direct() {
+        let g = gen::powerlaw_cluster_graph(70, 3, 0.5, &mut Pcg64::seed_from_u64(94));
+        for kind in [
+            DescriptorKind::Gabe,
+            DescriptorKind::Maeve,
+            DescriptorKind::Santa { exact_wedges: false },
+        ] {
+            let cfg = ShardConfig { kind, budget: g.m() + 1, seed: 7, ..Default::default() };
+            let parts = hash_partition(&g.edges, 3);
+            let sharded = run_sharded_edges(&parts, &cfg).unwrap();
+            assert_eq!(sharded.edges as usize, g.m());
+            assert_eq!(sharded.per_shard_edges.len(), 3);
+
+            let dcfg = DirectConfig {
+                kind,
+                budget: g.m() + 1,
+                seed: 7,
+                ..Default::default()
+            };
+            let mut s = VecStream::new(g.edges.clone());
+            let direct = run_direct(&mut s, &dcfg).unwrap();
+            match (&sharded.estimate, &direct.estimate) {
+                (WorkerEstimate::Gabe(x), WorkerEstimate::Gabe(y)) => {
+                    for (a, b) in x.counts.iter().zip(&y.counts) {
+                        assert!((a - b).abs() < 1e-6, "{a} vs {b}");
+                    }
+                    assert_eq!(x.degrees, y.degrees);
+                    assert_eq!(x.ne, y.ne);
+                }
+                (WorkerEstimate::Maeve(x), WorkerEstimate::Maeve(y)) => {
+                    for (a, b) in x.triangles.iter().zip(&y.triangles) {
+                        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+                    }
+                    for (a, b) in x.paths.iter().zip(&y.paths) {
+                        assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+                    }
+                    assert_eq!(x.degrees, y.degrees);
+                }
+                (WorkerEstimate::Santa(x), WorkerEstimate::Santa(y)) => {
+                    for (a, b) in x.traces.iter().zip(&y.traces) {
+                        assert!((a - b).abs() < 1e-6 * b.abs().max(1.0), "{a} vs {b}");
+                    }
+                }
+                _ => panic!("descriptor kind changed across the shard boundary"),
+            }
+        }
+    }
+
+    /// Sketch shards merge entrywise: the sharded sketch run is
+    /// bit-identical with the direct sketch run (cell updates are ±1
+    /// integer increments, so summation order cannot matter).
+    #[test]
+    fn sharded_sketch_run_matches_direct_bit_for_bit() {
+        let g = gen::er_graph(60, 180, &mut Pcg64::seed_from_u64(95));
+        let backend = Backend::sketch_default();
+        let cfg = ShardConfig {
+            kind: DescriptorKind::Gabe,
+            budget: 48,
+            seed: 11,
+            backend,
+        };
+        let parts = hash_partition(&g.edges, 4);
+        let sharded = run_sharded_edges(&parts, &cfg).unwrap();
+        let dcfg = DirectConfig {
+            kind: DescriptorKind::Gabe,
+            budget: 48,
+            seed: 11,
+            backend,
+            ..Default::default()
+        };
+        let mut s = VecStream::new(g.edges.clone());
+        let direct = run_direct(&mut s, &dcfg).unwrap();
+        assert!(estimates_bit_identical(&sharded.estimate, &direct.estimate));
+    }
+
+    #[test]
+    fn sharded_run_rejects_exact_wedges_and_empty_input() {
+        let cfg = ShardConfig {
+            kind: DescriptorKind::Santa { exact_wedges: true },
+            ..Default::default()
+        };
+        let err = run_sharded_edges(&[vec![]], &cfg).unwrap_err();
+        assert!(err.to_string().contains("exact_wedges"), "{err}");
+        let err = run_sharded_edges(&[], &ShardConfig::default()).unwrap_err();
+        assert!(err.to_string().contains("at least one shard"), "{err}");
     }
 }

@@ -135,6 +135,16 @@ pub struct CoordinatorConfig {
     /// stream.  All sketch workers share the base [`Self::seed`] so
     /// their hash parameters (and hence their matrices) are mergeable.
     pub backend: Backend,
+    /// Shard the stream round-robin for *reservoir* pipelines too (ISSUE
+    /// 10): each edge reaches exactly one worker, and the master merges
+    /// the workers' reservoirs by weighted subsampling
+    /// ([`crate::sampling::MergeableState`], DESIGN.md §13) instead of
+    /// averaging independent full-stream estimates.  Off by default —
+    /// the historical broadcast/average pipeline is untouched.  Shard
+    /// workers keep their derived per-worker RNG seeds (independent
+    /// sampling streams; the merge draws its priorities from its own
+    /// seeded stream).
+    pub shard_reservoir: bool,
 }
 
 impl Default for CoordinatorConfig {
@@ -155,6 +165,7 @@ impl Default for CoordinatorConfig {
             resume: None,
             stop_after: 0,
             backend: Backend::Reservoir,
+            shard_reservoir: false,
         }
     }
 }
@@ -195,6 +206,19 @@ impl CoordinatorConfig {
                 self.checkpoint_every == 0 && self.resume.is_none(),
                 "the sketch pipeline shards the stream, so workers have no common \
                  barrier to checkpoint at — use a direct run for checkpoint/resume"
+            );
+        } else if self.shard_reservoir {
+            crate::ensure!(
+                !self.window.policy.is_windowed() && self.window.stride == 0,
+                "the sharded reservoir pipeline partitions the stream, so shard \
+                 window clocks disagree — windows and snapshot strides are \
+                 unavailable (ISSUE 10)"
+            );
+            crate::ensure!(
+                self.checkpoint_every == 0 && self.resume.is_none(),
+                "the sharded reservoir pipeline partitions the stream, so workers \
+                 have no common barrier to checkpoint at — use a direct run for \
+                 checkpoint/resume"
             );
         }
         Ok(())
@@ -553,7 +577,7 @@ fn weighted_average(per_worker: &[WorkerEstimate], arrivals: &[u64]) -> WorkerEs
 /// estimate (ISSUE 8).  Entrywise bucket addition commutes, so on a
 /// clean run the merged state — and hence the estimate — is bit-for-bit
 /// what a direct single-state run over the same stream produces.
-fn merge_sketch_states(
+pub(crate) fn merge_sketch_states(
     kind: DescriptorKind,
     blobs: &[Vec<u8>],
     degrees: &Option<Arc<Vec<u32>>>,
@@ -570,6 +594,45 @@ fn merge_sketch_states(
     }
     let merged = merged.ok_or_else(|| crate::anyhow!("no worker states to merge"))?;
     Ok(merged.into_results().1)
+}
+
+/// Decode the survivors' shipped reservoir states and merge them by
+/// weighted subsampling (ISSUE 10, DESIGN.md §13): the descriptor's
+/// `merge_reservoir_shards` lifts each shard reservoir into a weighted
+/// merged sample under `merge_seed`, replays it exactly and rescales by
+/// the merged sample's own inclusion probabilities.  On a degraded run
+/// only the survivors' shards are merged — the estimate then describes
+/// the surviving partition, flagged via `HealthReport::degraded`.
+pub(crate) fn merge_reservoir_states(
+    kind: DescriptorKind,
+    blobs: &[Vec<u8>],
+    degrees: &Option<Arc<Vec<u32>>>,
+    merge_seed: u64,
+) -> crate::Result<WorkerEstimate> {
+    crate::ensure!(!blobs.is_empty(), "no worker states to merge");
+    let mut gabe = Vec::new();
+    let mut maeve = Vec::new();
+    let mut santa = Vec::new();
+    for bytes in blobs {
+        let mut d = Dec::new(bytes);
+        match WorkerState::load(kind, &mut d, degrees)? {
+            WorkerState::Gabe(s) => gabe.push(s),
+            WorkerState::Maeve(s) => maeve.push(s),
+            WorkerState::Santa(s) => santa.push(s),
+        }
+        d.finish()?;
+    }
+    match kind {
+        DescriptorKind::Gabe => {
+            Ok(WorkerEstimate::Gabe(GabeState::merge_reservoir_shards(&gabe, merge_seed)?))
+        }
+        DescriptorKind::Maeve => {
+            Ok(WorkerEstimate::Maeve(MaeveState::merge_reservoir_shards(&maeve, merge_seed)?))
+        }
+        DescriptorKind::Santa { .. } => {
+            Ok(WorkerEstimate::Santa(SantaPass2::merge_reservoir_shards(&santa, merge_seed)?))
+        }
+    }
 }
 
 /// How one supervised worker thread ended: `Done` carries the estimate
@@ -762,8 +825,17 @@ pub fn run_pipeline(
             !cfg.backend.is_sketch(),
             "coordinator config: santa exact_wedges is incompatible with the sketch backend"
         );
+        crate::ensure!(
+            !cfg.shard_reservoir,
+            "coordinator config: santa exact_wedges is incompatible with the sharded \
+             reservoir pipeline (the closed-form accumulators are not shard-mergeable)"
+        );
     }
     let sketch_mode = cfg.backend.is_sketch();
+    // shard mode partitions the stream round-robin (each edge reaches one
+    // worker) instead of broadcasting it; sketches always shard, and
+    // reservoirs shard when `shard_reservoir` opts in (ISSUE 10)
+    let shard_mode = sketch_mode || cfg.shard_reservoir;
     let start = Instant::now();
 
     // fault schedule: an injected plan wins, else the environment (how
@@ -839,15 +911,16 @@ pub fn run_pipeline(
     let (exits, fan_stats, ckpt_written) = std::thread::scope(
         |scope| -> crate::Result<ScopeOut> {
             let mut fan = Fanout::new(topo.nodes.len());
-            // sketch mode: chunks go to one worker each (round-robin
-            // shards) over these senders instead of through the fan-out
+            // shard mode (sketches, or reservoirs with `shard_reservoir`):
+            // chunks go to one worker each (round-robin shards) over
+            // these senders instead of through the fan-out
             let mut shard_txs: Vec<SyncSender<Arc<[Edge]>>> = Vec::new();
             let (ckpt_tx, ckpt_rx) = channel::<(usize, u64, Vec<u8>)>();
             let mut handles = Vec::with_capacity(cfg.workers);
             for (wid, slot) in slots.iter().enumerate() {
                 let (tx, rx): (SyncSender<Arc<[Edge]>>, Receiver<Arc<[Edge]>>) =
                     sync_channel(cfg.queue_depth);
-                if sketch_mode {
+                if shard_mode {
                     shard_txs.push(tx);
                 } else {
                     fan.add_worker(slot.node, tx);
@@ -950,7 +1023,7 @@ pub fn run_pipeline(
                             }
                         }
                     }
-                    let shipped = if sketch_mode {
+                    let shipped = if shard_mode {
                         let mut enc = Enc::new();
                         state.save(&mut enc);
                         Some(enc.into_bytes())
@@ -1003,7 +1076,7 @@ pub fn run_pipeline(
                 let got = if want == 0 { 0 } else { stream.next_batch(&mut staging, want) };
                 edges += got as u64;
                 if staging.len() >= cfg.chunk_size {
-                    let sent = if sketch_mode {
+                    let sent = if shard_mode {
                         shard(&mut staging, &mut shard_next, &mut shard_chunks, &shard_txs)
                     } else {
                         fan.broadcast(&mut staging)
@@ -1022,7 +1095,7 @@ pub fn run_pipeline(
                 }
             }
             if !staging.is_empty() {
-                if sketch_mode {
+                if shard_mode {
                     shard(&mut staging, &mut shard_next, &mut shard_chunks, &shard_txs);
                 } else {
                     fan.broadcast(&mut staging);
@@ -1030,7 +1103,7 @@ pub fn run_pipeline(
             }
             drop(shard_txs); // shard queues close; workers drain and exit
             let mut stats = fan.finish(); // drops senders: queues close, workers drain
-            if sketch_mode {
+            if shard_mode {
                 stats = FanoutStats { chunks: shard_chunks, replicas: shard_chunks };
             }
 
@@ -1126,14 +1199,23 @@ pub fn run_pipeline(
         snapshots.push(SnapshotPoint { t, averaged: average(&ests) });
     }
 
-    // sketch mode merges the survivors' shipped states exactly (the
-    // shards partition the stream — averaging shard estimates would be
-    // wrong); otherwise a clean run keeps the historical unweighted mean
-    // (bit-identical with pre-fault-tolerance pipelines) and a degraded
-    // run weights each survivor by its arrival count
+    // sketch mode merges the survivors' shipped states exactly and the
+    // sharded reservoir mode merges them by weighted subsampling (in
+    // both, the shards partition the stream — averaging shard estimates
+    // would be wrong); otherwise a clean run keeps the historical
+    // unweighted mean (bit-identical with pre-fault-tolerance pipelines)
+    // and a degraded run weights each survivor by its arrival count
     let averaged = if sketch_mode {
         merge_sketch_states(kind, &sketch_blobs, &degrees)
             .map_err(|e| e.context("merging sketch worker states"))?
+    } else if shard_mode {
+        merge_reservoir_states(
+            kind,
+            &sketch_blobs,
+            &degrees,
+            cfg.seed ^ crate::sampling::merge::RESERVOIR_MERGE_SEED,
+        )
+        .map_err(|e| e.context("merging sharded reservoir worker states"))?
     } else if degraded {
         weighted_average(&per_worker, &arrivals)
     } else {
@@ -1827,5 +1909,99 @@ mod tests {
         for (a, b) in full.per_worker.iter().zip(&resumed.per_worker) {
             assert_bit_identical(a, b);
         }
+    }
+
+    // ---- ISSUE 10: sharded reservoir pipeline ----
+
+    /// With budget ≥ |E| every shard reservoir stores its whole partition,
+    /// so the weighted merge reassembles the complete edge set (all
+    /// inclusion probabilities are 1) and the merged estimate is exact —
+    /// for any worker count, unlike the historical broadcast/average
+    /// path where exactness holds per worker.
+    #[test]
+    fn shard_reservoir_full_budget_is_exact() {
+        let g = gen::powerlaw_cluster_graph(80, 3, 0.5, &mut Pcg64::seed_from_u64(82));
+        let want = subgraph_census(&g);
+        for workers in [1usize, 2, 4] {
+            let cfg = CoordinatorConfig {
+                workers,
+                budget: g.m(),
+                chunk_size: 5,
+                queue_depth: 2,
+                seed: 17,
+                shard_reservoir: true,
+                ..Default::default()
+            };
+            let mut s = VecStream::shuffled(g.edges.clone(), 4);
+            let r = run_pipeline(&mut s, DescriptorKind::Gabe, &cfg).unwrap();
+            assert_eq!(r.edges as usize, g.m());
+            assert!(
+                (triangle_of(&r.averaged) - want[idx::TRIANGLE]).abs() < 1e-6,
+                "workers={workers}: {} vs {}",
+                triangle_of(&r.averaged),
+                want[idx::TRIANGLE]
+            );
+            // each edge reached exactly one worker
+            assert_eq!(r.placement.chunk_replicas, r.placement.chunks);
+        }
+    }
+
+    #[test]
+    fn shard_reservoir_santa_matches_exact_traces() {
+        let g = gen::er_graph(50, 130, &mut Pcg64::seed_from_u64(83));
+        let cfg = CoordinatorConfig {
+            workers: 3,
+            budget: g.m(),
+            chunk_size: 9,
+            queue_depth: 2,
+            seed: 23,
+            shard_reservoir: true,
+            ..Default::default()
+        };
+        let mut s = VecStream::shuffled(g.edges.clone(), 6);
+        let r = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: false }, &cfg)
+            .unwrap();
+        let WorkerEstimate::Santa(got) = &r.averaged else { panic!() };
+        let exact = crate::exact::santa_exact(&g);
+        for k in 0..5 {
+            assert!(
+                (got.traces[k] - exact.traces[k]).abs() < 1e-6 * exact.traces[k].abs().max(1.0),
+                "trace {k}: {} vs {}",
+                got.traces[k],
+                exact.traces[k]
+            );
+        }
+    }
+
+    #[test]
+    fn shard_reservoir_rejects_windows_checkpoints_and_exact_wedges() {
+        use crate::sampling::{WindowConfig, WindowPolicy};
+        let base = CoordinatorConfig {
+            workers: 2,
+            budget: 64,
+            shard_reservoir: true,
+            ..Default::default()
+        };
+        for bad in [
+            CoordinatorConfig {
+                window: WindowConfig::new(WindowPolicy::Sliding { w: 8 }),
+                ..base.clone()
+            },
+            CoordinatorConfig {
+                window: WindowConfig::new(WindowPolicy::None).with_stride(4),
+                ..base.clone()
+            },
+            CoordinatorConfig { checkpoint_every: 32, ..base.clone() },
+            CoordinatorConfig { resume: Some(PathBuf::from("/nonexistent.sdc")), ..base.clone() },
+        ] {
+            let err = bad.validate().unwrap_err();
+            assert!(err.to_string().contains("sharded reservoir"), "{err}");
+        }
+        // exact_wedges is a per-run rejection (kind is not part of the config)
+        let g = gen::er_graph(20, 40, &mut Pcg64::seed_from_u64(84));
+        let mut s = VecStream::new(g.edges.clone());
+        let err = run_pipeline(&mut s, DescriptorKind::Santa { exact_wedges: true }, &base)
+            .unwrap_err();
+        assert!(err.to_string().contains("exact_wedges"), "{err}");
     }
 }

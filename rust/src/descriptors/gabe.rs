@@ -19,8 +19,9 @@ use crate::graph::stream::EdgeStream;
 use crate::graph::Graph;
 use crate::sampling::window::{EdgeRing, WindowAcc};
 use crate::sampling::{
-    Backend, EstimatorConfig, GraphSketch, ReservoirAction, Series, Snapshot, Weights,
-    WindowConfig, WindowPolicy, WindowedReservoir,
+    sample_inclusion_probability, Backend, EstimatorConfig, GraphSketch, MergeableState,
+    MergedReservoir, ReservoirAction, Series, Snapshot, Weights, WindowConfig, WindowPolicy,
+    WindowedReservoir,
 };
 
 // WindowAcc counter indices (one per reservoir-estimated pattern).
@@ -501,6 +502,73 @@ impl GabeState {
         Ok(())
     }
 
+    /// Merge K *reservoir*-backend shard states into one estimate
+    /// (ISSUE 10, the statistical half of [`crate::sampling::merge`]).
+    ///
+    /// The shard reservoirs are lifted into [`MergedReservoir`]s under
+    /// `merge_seed` and folded into one near-uniform sample of the
+    /// concatenated stream; the sample is then *replayed* through a
+    /// fresh state whose budget covers it (every weight 1, no RNG
+    /// draws), giving raw sample-graph pattern counts which are rescaled
+    /// by the inverse inclusion probability of each pattern's edge count
+    /// ([`sample_inclusion_probability`]) — unbiased by linearity, with
+    /// variance governed by the merged budget rather than the shard
+    /// count.  Degrees and the edge clock sum exactly across shards.
+    pub(crate) fn merge_reservoir_shards(
+        states: &[GabeState],
+        merge_seed: u64,
+    ) -> crate::Result<GabeEstimate> {
+        crate::ensure!(!states.is_empty(), "gabe shard merge: no shard states");
+        let mut merged: Option<MergedReservoir> = None;
+        let mut degrees: Vec<u32> = Vec::new();
+        let mut ne = 0u64;
+        for s in states {
+            crate::ensure!(
+                s.sketch.is_none(),
+                "gabe shard merge: sketch states merge entrywise, not by subsampling"
+            );
+            crate::ensure!(
+                matches!(s.window.policy, WindowPolicy::None),
+                "gabe shard merge: windowed states cannot be merged"
+            );
+            let WindowedReservoir::Full(r) = &s.reservoir else {
+                return Err(crate::anyhow!(
+                    "gabe shard merge: windowed reservoir in an unwindowed state"
+                ));
+            };
+            let lifted = MergedReservoir::from_reservoir(r, merge_seed);
+            merged = Some(match merged {
+                None => lifted,
+                Some(mut m) => {
+                    m.merge_state(&lifted)?;
+                    m
+                }
+            });
+            if degrees.len() < s.degrees.len() {
+                degrees.resize(s.degrees.len(), 0);
+            }
+            for (i, d) in s.degrees.iter().enumerate() {
+                degrees[i] += d;
+            }
+            ne += s.ne;
+        }
+        let (sample, t_total) = merged.expect("states is non-empty").into_sample();
+        let raw = replay_sample_counts(&sample);
+        let p = |f_edges: usize| sample_inclusion_probability(f_edges, t_total, sample.len());
+        let rescale = |raw: f64, p: f64| if raw == 0.0 { 0.0 } else { raw / p };
+        let c = ConnectedCounts {
+            triangle: rescale(raw.triangle, p(3)),
+            path4: rescale(raw.path4, p(3)),
+            cycle4: rescale(raw.cycle4, p(4)),
+            paw: rescale(raw.paw, p(4)),
+            diamond: rescale(raw.diamond, p(5)),
+            k4: rescale(raw.k4, p(6)),
+        };
+        let nv = degrees.len() as u64;
+        let counts = assemble_counts(nv as f64, ne as f64, &degrees, &c);
+        Ok(GabeEstimate { counts, nv, ne, degrees })
+    }
+
     /// Approximate resident bytes of the estimator state — the memory
     /// axis of the `repro sketch` accuracy-vs-memory comparison.
     pub fn resident_bytes(&self) -> usize {
@@ -514,6 +582,26 @@ impl GabeState {
                     + degrees
             }
         }
+    }
+}
+
+/// Raw connected-pattern counts of a merged sample: replay the edges
+/// through a fresh state whose budget covers them all — every offer
+/// stores, every weight is exactly 1, no RNG draw happens — so the
+/// accumulators end up holding the sample graph's pattern counts.
+fn replay_sample_counts(sample: &[crate::graph::Edge]) -> ConnectedCounts {
+    let mut st = GabeState::from_config(&EstimatorConfig::new(sample.len().max(1)));
+    for &e in sample {
+        st.push(e);
+    }
+    let vals = st.acc.values();
+    ConnectedCounts {
+        triangle: vals[A_TRI],
+        path4: vals[A_PATH4],
+        cycle4: vals[A_C4],
+        paw: vals[A_PAW],
+        diamond: vals[A_DIAMOND],
+        k4: vals[A_K4],
     }
 }
 
@@ -785,5 +873,51 @@ mod tests {
         let est = GabeEstimator::new(16).run(&mut s);
         assert_eq!(est.ne as usize, g.m());
         assert_eq!(est.degrees, g.degrees());
+    }
+
+    /// ISSUE 10: with budget ≥ |E| every shard reservoir holds its whole
+    /// shard, the merged sample is the entire edge set, every inclusion
+    /// probability is 1 and the shard merge must reproduce the exact
+    /// counts — the deterministic anchor of the replay-and-rescale path.
+    #[test]
+    fn shard_merge_with_full_budget_is_exact() {
+        let mut rng = Pcg64::seed_from_u64(21);
+        let g = gen::powerlaw_cluster_graph(60, 3, 0.5, &mut rng);
+        let want = subgraph_census(&g);
+        for k in [1usize, 3, 4] {
+            let cfg = EstimatorConfig::new(g.m() + 1);
+            let mut shards: Vec<GabeState> =
+                (0..k).map(|_| GabeState::from_config(&cfg)).collect();
+            for (i, &e) in g.edges.iter().enumerate() {
+                shards[i % k].push(e);
+            }
+            let est = GabeState::merge_reservoir_shards(&shards, 0xfeed).unwrap();
+            for i in 0..N_GRAPHLETS {
+                assert!(
+                    (est.counts[i] - want[i]).abs() < 1e-6,
+                    "k={k} graphlet {i}: {} vs {}",
+                    est.counts[i],
+                    want[i]
+                );
+            }
+            assert_eq!(est.degrees, g.degrees());
+            assert_eq!(est.ne as usize, g.m());
+        }
+    }
+
+    /// Shard merge rejects sketch and windowed states by name.
+    #[test]
+    fn shard_merge_rejects_sketch_and_windowed_states() {
+        let sketchy = GabeState::from_config(
+            &EstimatorConfig::new(8).with_backend(Backend::sketch_default()),
+        );
+        let err = GabeState::merge_reservoir_shards(&[sketchy], 1).unwrap_err();
+        assert!(err.to_string().contains("entrywise"), "{err}");
+        let windowed = GabeState::from_config(
+            &EstimatorConfig::new(8)
+                .with_window(WindowConfig::new(WindowPolicy::Sliding { w: 4 })),
+        );
+        let err = GabeState::merge_reservoir_shards(&[windowed], 1).unwrap_err();
+        assert!(err.to_string().contains("windowed"), "{err}");
     }
 }

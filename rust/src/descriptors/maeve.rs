@@ -16,8 +16,9 @@ use crate::graph::Graph;
 use crate::linalg::moments::maeve_layout;
 use crate::sampling::window::{EdgeRing, VertexCreditLog};
 use crate::sampling::{
-    Backend, EstimatorConfig, GraphSketch, ReservoirAction, Series, Snapshot, Weights,
-    WindowConfig, WindowPolicy, WindowedReservoir,
+    sample_inclusion_probability, Backend, EstimatorConfig, GraphSketch, MergeableState,
+    MergedReservoir, ReservoirAction, Series, Snapshot, Weights, WindowConfig, WindowPolicy,
+    WindowedReservoir,
 };
 
 /// Raw output of a MAEVE streaming run.
@@ -633,6 +634,76 @@ impl MaeveState {
         Ok(())
     }
 
+    /// Distributed reservoir merge (ISSUE 10, DESIGN.md §13): combine K
+    /// independent full-history shard states into one estimate by lifting
+    /// each shard reservoir into a weighted [`MergedReservoir`], merging
+    /// under `merge_seed`, replaying the merged uniform sample through a
+    /// fresh exact-regime state (budget ≥ sample, every weight 1) and
+    /// rescaling the raw per-vertex counts by the merged sample's own
+    /// inclusion probabilities: triangles (3 edges) by `1/p(3)`, 3-path
+    /// endpoints (2 edges) by `1/p(2)`.  Degrees, `nv` and `ne` are exact
+    /// shard sums.
+    pub(crate) fn merge_reservoir_shards(
+        states: &[MaeveState],
+        merge_seed: u64,
+    ) -> crate::Result<MaeveEstimate> {
+        crate::ensure!(!states.is_empty(), "maeve shard merge: no shard states");
+        let mut merged: Option<MergedReservoir> = None;
+        let mut degrees: Vec<u32> = Vec::new();
+        let mut ne = 0u64;
+        for s in states {
+            crate::ensure!(
+                s.sketch.is_none(),
+                "maeve shard merge: sketch states merge entrywise, not by subsampling"
+            );
+            crate::ensure!(
+                matches!(s.window.policy, WindowPolicy::None),
+                "maeve shard merge: windowed states cannot be merged"
+            );
+            let WindowedReservoir::Full(r) = &s.reservoir else {
+                return Err(crate::anyhow!(
+                    "maeve shard merge: windowed reservoir in an unwindowed state"
+                ));
+            };
+            let lifted = MergedReservoir::from_reservoir(r, merge_seed);
+            merged = Some(match merged {
+                None => lifted,
+                Some(mut m) => {
+                    m.merge_state(&lifted)?;
+                    m
+                }
+            });
+            if degrees.len() < s.degrees.len() {
+                degrees.resize(s.degrees.len(), 0);
+            }
+            for (i, d) in s.degrees.iter().enumerate() {
+                degrees[i] += d;
+            }
+            ne += s.ne;
+        }
+        let (sample, t_total) = merged.expect("states is non-empty").into_sample();
+        let mut replay = MaeveState::from_config(&EstimatorConfig::new(sample.len().max(1)));
+        for &e in &sample {
+            replay.push(e);
+        }
+        let p3 = sample_inclusion_probability(3, t_total, sample.len());
+        let p2 = sample_inclusion_probability(2, t_total, sample.len());
+        let n = degrees.len();
+        let mut triangles = replay.tri;
+        let mut paths = replay.path;
+        triangles.resize(n, 0.0);
+        paths.resize(n, 0.0);
+        for v in 0..n {
+            if triangles[v] != 0.0 {
+                triangles[v] /= p3;
+            }
+            if paths[v] != 0.0 {
+                paths[v] /= p2;
+            }
+        }
+        Ok(MaeveEstimate { nv: n as u64, ne, degrees, triangles, paths })
+    }
+
     /// Approximate resident bytes of the estimator state — the memory
     /// axis of the `repro sketch` accuracy-vs-memory comparison.
     pub fn resident_bytes(&self) -> usize {
@@ -826,6 +897,46 @@ mod tests {
         for snap in &series.snapshots {
             assert!(snap.estimate.triangles.iter().all(|x| x.is_finite()));
         }
+    }
+
+    /// ISSUE 10: with budget ≥ |E| per shard, the merged sample is the
+    /// whole edge set, every inclusion probability is 1 and the shard
+    /// merge reproduces the exact per-vertex counts.
+    #[test]
+    fn shard_merge_with_full_budget_is_exact() {
+        let mut rng = Pcg64::seed_from_u64(22);
+        let g = gen::powerlaw_cluster_graph(50, 3, 0.5, &mut rng);
+        let (tri, path) = exact_tp(&g);
+        for k in [1usize, 2, 4] {
+            let cfg = EstimatorConfig::new(g.m() + 1);
+            let mut shards: Vec<MaeveState> =
+                (0..k).map(|_| MaeveState::from_config(&cfg)).collect();
+            for (i, &e) in g.edges.iter().enumerate() {
+                shards[i % k].push(e);
+            }
+            let est = MaeveState::merge_reservoir_shards(&shards, 0xfeed).unwrap();
+            for v in 0..g.n {
+                assert!((est.triangles[v] - tri[v]).abs() < 1e-6, "k={k} tri[{v}]");
+                assert!((est.paths[v] - path[v]).abs() < 1e-6, "k={k} path[{v}]");
+            }
+            assert_eq!(est.degrees, g.degrees());
+            assert_eq!(est.ne as usize, g.m());
+        }
+    }
+
+    #[test]
+    fn shard_merge_rejects_sketch_and_windowed_states() {
+        let sketchy = MaeveState::from_config(
+            &EstimatorConfig::new(8).with_backend(Backend::sketch_default()),
+        );
+        let err = MaeveState::merge_reservoir_shards(&[sketchy], 1).unwrap_err();
+        assert!(err.to_string().contains("entrywise"), "{err}");
+        let windowed = MaeveState::from_config(
+            &EstimatorConfig::new(8)
+                .with_window(WindowConfig::new(WindowPolicy::Sliding { w: 4 })),
+        );
+        let err = MaeveState::merge_reservoir_shards(&[windowed], 1).unwrap_err();
+        assert!(err.to_string().contains("windowed"), "{err}");
     }
 
     #[test]

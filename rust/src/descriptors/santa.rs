@@ -23,8 +23,9 @@ use crate::graph::stream::EdgeStream;
 use crate::graph::{Graph, VertexId};
 use crate::sampling::window::WindowAcc;
 use crate::sampling::{
-    Backend, EstimatorConfig, GraphSketch, ReservoirAction, Series, Snapshot, Weights,
-    WindowConfig, WindowedReservoir,
+    sample_inclusion_probability, Backend, EstimatorConfig, GraphSketch, MergeableState,
+    MergedReservoir, ReservoirAction, Series, Snapshot, Weights, WindowConfig, WindowPolicy,
+    WindowedReservoir,
 };
 
 // WindowAcc trace-term indices (Tables 9–11 rows the reservoir estimates).
@@ -542,6 +543,95 @@ impl SantaPass2 {
         Ok(())
     }
 
+    /// Distributed reservoir merge (ISSUE 10, DESIGN.md §13) — SANTA's
+    /// hybrid: the **exact** edge terms are [`WindowAcc`] counters and
+    /// combine arrival-weighted across shards (summation, in the
+    /// full-history case), while the **sampled** wedge/triangle/4-cycle
+    /// terms are re-estimated by replaying the merged uniform sample
+    /// through a fresh exact-regime pass-2 state over the shared global
+    /// pass-1 degree profile, then rescaling each term by the merged
+    /// sample's inclusion probability for its edge count: wedges `1/p(2)`,
+    /// triangle terms `1/p(3)`, 4-cycles `1/p(4)`.
+    ///
+    /// Every shard must have been built over the *same* full-stream
+    /// degree profile (SANTA's pass 1 is global even in shard mode — the
+    /// walk weights need true degrees).
+    pub(crate) fn merge_reservoir_shards(
+        states: &[SantaPass2],
+        merge_seed: u64,
+    ) -> crate::Result<SantaEstimate> {
+        crate::ensure!(!states.is_empty(), "santa shard merge: no shard states");
+        let degrees = states[0].degrees.clone();
+        let mut merged: Option<MergedReservoir> = None;
+        let mut acc = WindowAcc::<7>::new(WindowPolicy::None);
+        let mut t_acc = 0u64;
+        let mut ne = 0u64;
+        for s in states {
+            crate::ensure!(
+                s.sketch.is_none(),
+                "santa shard merge: sketch states merge entrywise, not by subsampling"
+            );
+            crate::ensure!(
+                !s.cfg.exact_wedges,
+                "santa shard merge: exact_wedges states are not shard-mergeable \
+                 (the closed-form per-vertex accumulators are not transported)"
+            );
+            crate::ensure!(
+                matches!(s.cfg.est.window.policy, WindowPolicy::None),
+                "santa shard merge: windowed states cannot be merged"
+            );
+            crate::ensure!(
+                *s.degrees == *degrees,
+                "santa shard merge: shards disagree on the pass-1 degree profile"
+            );
+            let WindowedReservoir::Full(r) = &s.reservoir else {
+                return Err(crate::anyhow!(
+                    "santa shard merge: windowed reservoir in an unwindowed state"
+                ));
+            };
+            let lifted = MergedReservoir::from_reservoir(r, merge_seed);
+            merged = Some(match merged {
+                None => lifted,
+                Some(mut m) => {
+                    m.merge_state(&lifted)?;
+                    m
+                }
+            });
+            acc.combine_weighted(&s.acc, t_acc, s.ne)?;
+            t_acc += s.ne;
+            ne += s.ne;
+        }
+        let (sample, t_total) = merged.expect("states is non-empty").into_sample();
+        let mut replay = SantaPass2::new(
+            SantaConfig {
+                est: EstimatorConfig::new(sample.len().max(1)),
+                exact_wedges: false,
+            },
+            degrees.clone(),
+        );
+        for &e in &sample {
+            replay.push(e);
+        }
+        let raw = replay.acc.values();
+        let p = |f_edges: usize| sample_inclusion_probability(f_edges, t_total, sample.len());
+        let rescale = |raw: f64, p: f64| if raw == 0.0 { 0.0 } else { raw / p };
+        let tr3_tri = rescale(raw[A_TR3_TRI], p(3));
+        let tr4_wedge = rescale(raw[A_TR4_WEDGE], p(2));
+        let tr4_tri = rescale(raw[A_TR4_TRI], p(3));
+        let tr4_c4 = rescale(raw[A_TR4_C4], p(4));
+        let vals = acc.values();
+        let nv = degrees.len() as f64;
+        let non_isolated = degrees.iter().filter(|&&d| d > 0).count() as f64;
+        let traces = [
+            nv,
+            non_isolated,
+            non_isolated + vals[A_TR2_EDGE],
+            non_isolated + vals[A_TR3_EDGE] + tr3_tri,
+            non_isolated + vals[A_TR4_EDGE] + tr4_wedge + tr4_tri + tr4_c4,
+        ];
+        Ok(SantaEstimate { nv: degrees.len() as u64, ne, traces })
+    }
+
     /// Approximate resident set of the estimation state in bytes (the
     /// `repro sketch` accuracy-vs-memory axis).  Counts the backend
     /// (sketch matrices or reservoir + sample graph) plus per-vertex
@@ -878,6 +968,65 @@ mod tests {
             let rel = (mean[k] - want[k]).abs() / want[k].abs().max(1.0);
             assert!(rel < 0.05, "tr(L^{k}): mean {} vs {}", mean[k], want[k]);
         }
+    }
+
+    /// ISSUE 10: with budget ≥ |E| per shard, the merged sample is the
+    /// whole edge set, every inclusion probability is 1 and the shard
+    /// merge reproduces the dense traces exactly (edge terms from the
+    /// arrival-weighted accumulator sum, sampled terms from the replay).
+    #[test]
+    fn shard_merge_with_full_budget_matches_dense_traces() {
+        let mut rng = Pcg64::seed_from_u64(26);
+        let g = gen::powerlaw_cluster_graph(40, 3, 0.5, &mut rng);
+        let want = dense_traces(&g);
+        let degrees = std::sync::Arc::new(g.degrees());
+        for k in [1usize, 2, 4] {
+            let mut shards: Vec<SantaPass2> = (0..k)
+                .map(|_| SantaPass2::new(SantaConfig::new(g.m() + 1), degrees.clone()))
+                .collect();
+            for (i, &e) in g.edges.iter().enumerate() {
+                shards[i % k].push(e);
+            }
+            let est = SantaPass2::merge_reservoir_shards(&shards, 0xfeed).unwrap();
+            for t in 0..5 {
+                assert!(
+                    (est.traces[t] - want[t]).abs() < 1e-6 * want[t].abs().max(1.0),
+                    "k={k} tr(L^{t}): {} vs {}",
+                    est.traces[t],
+                    want[t]
+                );
+            }
+            assert_eq!(est.ne as usize, g.m());
+        }
+    }
+
+    #[test]
+    fn shard_merge_rejects_incompatible_states() {
+        use crate::sampling::{Backend, WindowConfig, WindowPolicy};
+        let degrees = std::sync::Arc::new(vec![2u32, 2, 2]);
+        let sketchy = SantaPass2::new(
+            SantaConfig::new(8).with_backend(Backend::sketch_default()),
+            degrees.clone(),
+        );
+        let err = SantaPass2::merge_reservoir_shards(&[sketchy], 1).unwrap_err();
+        assert!(err.to_string().contains("entrywise"), "{err}");
+        let wedgy = SantaPass2::new(
+            SantaConfig::new(8).with_exact_wedges(true),
+            degrees.clone(),
+        );
+        let err = SantaPass2::merge_reservoir_shards(&[wedgy], 1).unwrap_err();
+        assert!(err.to_string().contains("exact_wedges"), "{err}");
+        let windowed = SantaPass2::new(
+            SantaConfig::new(8)
+                .with_window(WindowConfig::new(WindowPolicy::Sliding { w: 4 })),
+            degrees.clone(),
+        );
+        let err = SantaPass2::merge_reservoir_shards(&[windowed], 1).unwrap_err();
+        assert!(err.to_string().contains("windowed"), "{err}");
+        let a = SantaPass2::new(SantaConfig::new(8), degrees);
+        let b = SantaPass2::new(SantaConfig::new(8), std::sync::Arc::new(vec![1u32, 1]));
+        let err = SantaPass2::merge_reservoir_shards(&[a, b], 1).unwrap_err();
+        assert!(err.to_string().contains("degree profile"), "{err}");
     }
 
     #[test]

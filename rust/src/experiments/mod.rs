@@ -10,6 +10,7 @@ pub mod approx;
 pub mod classification;
 pub mod drift;
 pub mod scalability;
+pub mod shard;
 pub mod sketch;
 pub mod visualization;
 pub mod workers;

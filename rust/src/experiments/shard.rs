@@ -1,0 +1,208 @@
+//! `repro shard`: sharded ingest + distributed state merge (ISSUE 10).
+//!
+//! The command hash-partitions one edge stream into `K` shards (or
+//! replays `K` pre-split edge-list files given as a comma-separated
+//! `--input` list), runs one independent ingest+estimate pass per shard
+//! through [`crate::checkpoint::run_sharded_edges`] — in-process workers
+//! that communicate with the merger *only* via serialized
+//! [`crate::checkpoint::ShardState`] blobs — and merges the `K` states
+//! into one descriptor ([`crate::sampling::MergeableState`], DESIGN.md
+//! §13).  The same stream is also run directly (unsharded) so the
+//! report shows how far the merged estimate sits from the single-pass
+//! one; with a budget at or above the stream length the two agree to
+//! rounding, which is the acceptance band `repro shard --shards 4` is
+//! held to.
+
+use crate::analyze::{canberra, mean_relative_error};
+use crate::checkpoint::{hash_partition, run_direct, run_sharded_edges, DirectConfig, ShardConfig};
+use crate::coordinator::{DescriptorKind, WorkerEstimate};
+use crate::gen;
+use crate::graph::stream::{EdgeStream, FileStream, VecStream};
+use crate::graph::Edge;
+use crate::sampling::Backend;
+use crate::util::rng::Pcg64;
+use crate::Result;
+
+use super::{print_table, Ctx};
+
+/// Flatten an estimate into the vector the deviation metrics compare.
+fn summary(est: &WorkerEstimate) -> Vec<f64> {
+    match est {
+        WorkerEstimate::Gabe(e) => e.descriptor().to_vec(),
+        WorkerEstimate::Maeve(e) => e.descriptor().to_vec(),
+        WorkerEstimate::Santa(e) => e.traces.to_vec(),
+    }
+}
+
+/// Deviation between the direct and merged estimates: Canberra distance
+/// for the count descriptors, mean relative error for SANTA's traces
+/// (the same metrics the rest of the harness reports).
+fn deviation(kind: DescriptorKind, direct: &[f64], merged: &[f64]) -> f64 {
+    match kind {
+        DescriptorKind::Santa { .. } => mean_relative_error(direct, merged),
+        _ => canberra(direct, merged),
+    }
+}
+
+/// One sharded-vs-direct comparison over a fixed edge set.
+pub(crate) struct ShardReport {
+    pub(crate) edges: u64,
+    pub(crate) per_shard: Vec<u64>,
+    pub(crate) dev: f64,
+}
+
+/// Run the direct pass and the `k`-shard pass over the same edges and
+/// measure how far the merged descriptor sits from the direct one.
+pub(crate) fn compare(
+    edges: &[Edge],
+    kind: DescriptorKind,
+    budget: usize,
+    seed: u64,
+    backend: Backend,
+    k: usize,
+) -> Result<ShardReport> {
+    let dcfg = DirectConfig { kind, budget, seed, backend, ..Default::default() };
+    let mut s = VecStream::new(edges.to_vec());
+    let direct = run_direct(&mut s, &dcfg)?;
+
+    let parts = hash_partition(edges, k);
+    let scfg = ShardConfig { kind, budget, seed, backend };
+    let sharded = run_sharded_edges(&parts, &scfg)?;
+    crate::ensure!(
+        sharded.edges == direct.edges,
+        "shard passes consumed {} edges but the direct pass saw {}",
+        sharded.edges,
+        direct.edges
+    );
+    Ok(ShardReport {
+        edges: sharded.edges,
+        per_shard: sharded.per_shard_edges,
+        dev: deviation(kind, &summary(&direct.estimate), &summary(&sharded.estimate)),
+    })
+}
+
+/// Drain one edge-list file (text or binary `.sdg`) into memory.
+fn read_edges(path: &str) -> Result<Vec<Edge>> {
+    let mut stream = FileStream::open(path)?;
+    let mut edges = Vec::new();
+    let mut buf: Vec<Edge> = Vec::with_capacity(4096);
+    loop {
+        buf.clear();
+        if stream.next_batch(&mut buf, 4096) == 0 {
+            break;
+        }
+        edges.extend_from_slice(&buf);
+    }
+    if let Some(e) = stream.take_error() {
+        return Err(e.context(path.to_string()));
+    }
+    Ok(edges)
+}
+
+/// The `repro shard` entry point.  `input` is one edge-list file to
+/// hash-partition into `shards` parts, or a comma-separated list of
+/// pre-split shard files (then `shards` is the file count); with no
+/// input a synthetic powerlaw-cluster stream stands in.
+pub fn shard(
+    ctx: &Ctx,
+    input: Option<&str>,
+    descriptor: &str,
+    budget: usize,
+    shards: usize,
+    backend: Option<Backend>,
+) -> Result<()> {
+    crate::ensure!(shards >= 1, "--shards must be ≥ 1 (got {shards})");
+    let kind = match descriptor {
+        "gabe" => DescriptorKind::Gabe,
+        "maeve" => DescriptorKind::Maeve,
+        "santa" => DescriptorKind::Santa { exact_wedges: false },
+        other => {
+            return Err(crate::anyhow!("--descriptor {other} is not one of gabe, maeve, santa"))
+        }
+    };
+    let backend = backend.unwrap_or_default();
+
+    // assemble the stream: pre-split files keep their split, one file or
+    // the synthetic stand-in is hash-partitioned by `compare`
+    let (label, edges, k) = match input {
+        Some(list) if list.contains(',') => {
+            let mut edges = Vec::new();
+            let mut k = 0usize;
+            for path in list.split(',').filter(|p| !p.is_empty()) {
+                edges.extend(read_edges(path)?);
+                k += 1;
+            }
+            crate::ensure!(k >= 1, "--input lists no files");
+            (list.to_string(), edges, k)
+        }
+        Some(path) => (path.to_string(), read_edges(path)?, shards),
+        None => {
+            let n = ((1200.0 * ctx.scale).ceil() as usize).max(200);
+            let mut rng = Pcg64::seed_from_u64(ctx.seed ^ 0x54a8d);
+            let g = gen::powerlaw_cluster_graph(n, 3, 0.5, &mut rng);
+            let mut edges = g.edges;
+            Pcg64::seed_from_u64(ctx.seed ^ 1).shuffle(&mut edges);
+            (format!("synthetic plc n={n}"), edges, shards)
+        }
+    };
+    println!(
+        "repro shard: {label} — {} edges, {k} shards, {descriptor}/{backend}, budget {budget}",
+        edges.len()
+    );
+
+    let r = compare(&edges, kind, budget, ctx.seed, backend, k)?;
+    let rows = vec![vec![
+        descriptor.to_string(),
+        backend.to_string(),
+        k.to_string(),
+        r.edges.to_string(),
+        r.per_shard.iter().map(u64::to_string).collect::<Vec<_>>().join("/"),
+        format!("{:.6}", r.dev),
+    ]];
+    print_table(
+        "repro shard — merged vs direct estimate",
+        &["descriptor", "backend", "shards", "edges", "per-shard", "deviation"],
+        &rows,
+    );
+    ctx.write_csv(
+        "shard_merge.csv",
+        "descriptor,backend,shards,edges,deviation",
+        &[format!("{descriptor},{backend},{k},{},{}", r.edges, r.dev)],
+    )?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Full-budget anchor: with budget ≥ |E| every shard keeps its whole
+    /// partition, so the merged descriptor agrees with the direct run to
+    /// rounding — for every descriptor and both backends.
+    #[test]
+    fn compare_is_tight_at_full_budget() {
+        let mut rng = Pcg64::seed_from_u64(27);
+        let g = gen::powerlaw_cluster_graph(80, 3, 0.5, &mut rng);
+        for kind in [
+            DescriptorKind::Gabe,
+            DescriptorKind::Maeve,
+            DescriptorKind::Santa { exact_wedges: false },
+        ] {
+            let r = compare(&g.edges, kind, g.m() + 1, 5, Backend::Reservoir, 4).unwrap();
+            assert_eq!(r.edges as usize, g.m());
+            assert_eq!(r.per_shard.len(), 4);
+            assert!(r.dev < 1e-6, "{kind:?}: deviation {}", r.dev);
+        }
+        // sketches merge entrywise: zero deviation even at small budgets
+        let r = compare(
+            &g.edges,
+            DescriptorKind::Gabe,
+            16,
+            5,
+            Backend::sketch_default(),
+            4,
+        )
+        .unwrap();
+        assert_eq!(r.dev, 0.0, "sketch shards must merge exactly");
+    }
+}

@@ -49,6 +49,7 @@ struct Args {
     output: Option<String>,
     descriptor: String,
     budget: usize,
+    shards: usize,
     checkpoint: Option<String>,
     checkpoint_every: u64,
     resume: Option<String>,
@@ -73,6 +74,7 @@ const COMMANDS: &[(&str, &str)] = &[
     ("ablation", "design-choice ablations (MAEVE vs NetSimile; SANTA wedge term)"),
     ("sketch", "estimation backends head-to-head: error vs resident memory"),
     ("describe", "one descriptor over an edge list, checkpoint/resume-able"),
+    ("shard", "one descriptor via K independent shard passes, states merged"),
     ("convert", "convert a text edge list to the binary .sdg format"),
     ("all", "run everything"),
 ];
@@ -92,10 +94,11 @@ const FLAGS: &[(&str, &str, &str)] = &[
     ("--dataset", "NAME", "restrict table14/15 to one dataset (e.g. OHSU)"),
     ("--net", "NAME", "restrict table16/17 to one network (FO/US/CS/PT/FL/SF/U2)"),
     ("--results", "DIR", "output directory (default results/)"),
-    ("--input", "FILE", "edge list to read (convert, describe)"),
+    ("--input", "FILE", "edge list to read (convert, describe, shard)"),
     ("--output", "FILE", "binary edge list to write (convert)"),
-    ("--descriptor", "D", "descriptor for describe: gabe | maeve | santa (default gabe)"),
-    ("--budget", "N", "reservoir budget for describe (default 100000)"),
+    ("--descriptor", "D", "descriptor for describe/shard: gabe | maeve | santa (default gabe)"),
+    ("--budget", "N", "reservoir budget for describe/shard (default 100000)"),
+    ("--shards", "K", "shard count for the shard command (default 4)"),
     ("--checkpoint", "FILE", "write .sdc checkpoints here during describe"),
     ("--checkpoint-every", "N", "checkpoint cadence in arrivals (describe; 0 = off)"),
     ("--resume", "FILE", "resume describe from a .sdc checkpoint"),
@@ -154,6 +157,7 @@ fn parse_from(mut it: impl Iterator<Item = String>) -> Result<Args, String> {
         output: None,
         descriptor: "gabe".into(),
         budget: 100_000,
+        shards: 4,
         checkpoint: None,
         checkpoint_every: 0,
         resume: None,
@@ -191,6 +195,7 @@ fn parse_from(mut it: impl Iterator<Item = String>) -> Result<Args, String> {
             "--output" => a.output = Some(val),
             "--descriptor" => a.descriptor = val,
             "--budget" => a.budget = val.parse().map_err(int)?,
+            "--shards" => a.shards = val.parse().map_err(int)?,
             "--checkpoint" => a.checkpoint = Some(val),
             "--checkpoint-every" => a.checkpoint_every = val.parse().map_err(int)?,
             "--resume" => a.resume = Some(val),
@@ -436,6 +441,14 @@ fn main() -> ExitCode {
                 experiments::sketch::head_to_head(&ctx, args.width, args.depth, args.backend)
             }
             "describe" => describe(&args),
+            "shard" => experiments::shard::shard(
+                &ctx,
+                args.input.as_deref(),
+                &args.descriptor,
+                args.budget,
+                args.shards,
+                args.backend,
+            ),
             "convert" => convert(&args),
             "all" => {
                 experiments::approx::fig4(&ctx)?;
@@ -640,6 +653,7 @@ COMMANDS:
   ablation     design-choice ablations (MAEVE vs NetSimile; SANTA wedge term)
   sketch       estimation backends head-to-head: error vs resident memory
   describe     one descriptor over an edge list, checkpoint/resume-able
+  shard        one descriptor via K independent shard passes, states merged
   convert      convert a text edge list to the binary .sdg format
   all          run everything
 
@@ -656,10 +670,11 @@ OPTIONS:
   --dataset NAME     restrict table14/15 to one dataset (e.g. OHSU)
   --net NAME         restrict table16/17 to one network (FO/US/CS/PT/FL/SF/U2)
   --results DIR      output directory (default results/)
-  --input FILE       edge list to read (convert, describe)
+  --input FILE       edge list to read (convert, describe, shard)
   --output FILE      binary edge list to write (convert)
-  --descriptor D     descriptor for describe: gabe | maeve | santa (default gabe)
-  --budget N         reservoir budget for describe (default 100000)
+  --descriptor D     descriptor for describe/shard: gabe | maeve | santa (default gabe)
+  --budget N         reservoir budget for describe/shard (default 100000)
+  --shards K         shard count for the shard command (default 4)
   --checkpoint FILE  write .sdc checkpoints here during describe
   --checkpoint-every N checkpoint cadence in arrivals (describe; 0 = off)
   --resume FILE      resume describe from a .sdc checkpoint

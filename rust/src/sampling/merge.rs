@@ -1,0 +1,401 @@
+//! First-class mergeable estimator state (ISSUE 10).
+//!
+//! PR 8 proved the *sketch* half of the scale-out story: hash-bucket
+//! matrices over disjoint shards add entrywise and the merge is exact.
+//! This module closes the reservoir half with the weighted-subsampling
+//! construction from the Network Sampling survey (PAPERS.md): K
+//! independent reservoirs, each a uniform sample of its own shard, merge
+//! into one *near-uniform* sample of the concatenated stream by keeping
+//! each reservoir's items with probability proportional to the stream
+//! length that reservoir observed, re-drawing down to the shared budget
+//! `b`.
+//!
+//! The mechanism is an Efraimidis–Spirakis style priority draw made
+//! *intrinsic*: lifting a [`Reservoir`] into a [`MergedReservoir`]
+//! stamps every stored edge with
+//!
+//! ```text
+//! weight   w = t / s           (stream arrivals each stored edge represents)
+//! priority k = ln(u) / w       (u ∈ (0,1) derived from the merge seed + edge)
+//! ```
+//!
+//! where `u` comes from one [`Pcg64`] draw keyed by `seed ⊕ mix(edge)` —
+//! the existing PCG generator, so merges are deterministic under a fixed
+//! seed.  Merging is then *union + keep the `b` largest priorities*.
+//! Because priorities are fixed at lift time and top-`b` of a multiset
+//! union is a semilattice operation, the merge is associative and
+//! permutation-invariant **bit-for-bit**: an item ranked below `b` in
+//! `A ∪ B` can only rank lower in `A ∪ B ∪ C`.
+//!
+//! Statistically, a stream edge of shard `j` (length `t_j`, sample size
+//! `s_j`) survives into the merged sample with probability
+//! `(s_j/t_j) · P(top-b | weights) ≈ b / Σ t_j` — uniform over the
+//! concatenated stream.  When every shard has equal length and equal
+//! sample size the weights coincide and top-`b` over i.i.d. uniform keys
+//! is *exactly* a uniform `b`-subset.  The property suite in
+//! `rust/tests/mergeable_state.rs` pins both the bit-level laws and a
+//! 3σ inclusion-frequency census.
+//!
+//! [`MergeableState`] is the one trait both backends implement:
+//! [`GraphSketch`] keeps its exact entrywise merge, [`MergedReservoir`]
+//! carries the invariant-guaranteed reservoir merge, and [`Reservoir`]
+//! gets a convenience impl that lifts both sides at their aggregate
+//! weights (deterministic, but weight-coarsening — see the impl note).
+//! Descriptor-level merging (GABE/MAEVE/SANTA shard estimates) builds on
+//! top via replay-and-rescale with [`sample_inclusion_probability`]; the
+//! coordinator and `repro shard` drive it end to end.
+
+use crate::graph::Edge;
+use crate::sampling::reservoir::Reservoir;
+use crate::sampling::sketch::GraphSketch;
+use crate::util::rng::Pcg64;
+
+/// One state that can absorb another instance of itself produced over a
+/// *disjoint* portion of the stream.  The law every implementation obeys
+/// under a fixed seed:
+///
+/// * **associative** — `merge(merge(a, b), c) == merge(a, merge(b, c))`;
+/// * **permutation-invariant** — shard order does not change the result;
+/// * **exact or statistical** — sketches merge exactly
+///   (`merge(sk(A), sk(B)) == sk(A ++ B)` bit-for-bit); reservoirs merge
+///   into a statistically correct (near-uniform) sample of the
+///   concatenation.
+///
+/// Mismatched configurations (budget, merge seed, sketch geometry/hash
+/// seed) are loud errors — a silent merge across configs would corrupt
+/// the estimate.
+pub trait MergeableState {
+    /// Fold `other`'s state into `self`.
+    fn merge_state(&mut self, other: &Self) -> crate::Result<()>;
+}
+
+/// Merge seed used by the convenience [`Reservoir`] impl (callers that
+/// want distinct deterministic merge streams pass their own seed through
+/// [`MergedReservoir::from_reservoir`]).
+pub const RESERVOIR_MERGE_SEED: u64 = 0x6d65_7267; // "merg"
+
+/// Probability that `f_edges` *specific* stream edges all land in a
+/// uniform `sample_len`-subset of a `t`-edge stream:
+/// `Π_{i=0}^{f-1} (s - i) / (t - i)`.
+///
+/// This is the replay-and-rescale dual of
+/// [`detection_probability`](crate::sampling::detection_probability):
+/// after a merged reservoir has been reduced to a uniform sample, every
+/// pattern counted *inside the sample* was detected with exactly this
+/// probability, so dividing the raw sample count by it restores an
+/// unbiased estimate of the stream count (linearity of expectation, per
+/// pattern instance).
+#[inline]
+pub fn sample_inclusion_probability(f_edges: usize, t: u64, sample_len: usize) -> f64 {
+    if f_edges == 0 {
+        return 1.0;
+    }
+    if (sample_len as u64) >= t {
+        return 1.0; // the sample is the whole stream
+    }
+    if f_edges > sample_len {
+        return 0.0; // cannot fit the pattern in the sample
+    }
+    let mut p = 1.0f64;
+    for i in 0..f_edges {
+        p *= (sample_len - i) as f64 / (t - i as u64) as f64;
+    }
+    p
+}
+
+/// One lifted reservoir item: the edge, the number of stream arrivals it
+/// represents, and its intrinsic merge priority.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MergeItem {
+    /// The sampled edge.
+    pub edge: Edge,
+    /// Stream arrivals this item stands for (`t / s` of its reservoir).
+    pub weight: f64,
+    /// Efraimidis–Spirakis key `ln(u) / weight`, fixed at lift time —
+    /// larger wins.  Intrinsic priorities are what make the merge
+    /// associative: no re-draw ever happens after the lift.
+    pub priority: f64,
+}
+
+/// A reservoir lifted into mergeable form: ≤ `budget` weighted items in
+/// canonical order (priority descending, edge ascending on ties) plus
+/// the total arrival count the items summarize.
+///
+/// This is the invariance-guaranteed carrier: merging any number of
+/// `MergedReservoir`s built with the same `(budget, seed)` is
+/// bit-associative and order-independent (module docs).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MergedReservoir {
+    budget: usize,
+    seed: u64,
+    total_t: u64,
+    items: Vec<MergeItem>,
+}
+
+/// `u ∈ (0, 1)` for an edge under a merge seed — one PCG draw keyed by
+/// `seed ⊕ splitmix(edge)`, mapped to the open unit interval (53-bit
+/// mantissa, half-ulp offset keeps 0 and 1 unreachable so `ln(u)` stays
+/// finite and negative).
+fn uniform_key(seed: u64, e: Edge) -> f64 {
+    let label = ((e.u as u64) << 32) | e.v as u64;
+    let mut rng = Pcg64::seed_from_u64(seed ^ label.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    ((rng.next_u64() >> 11) as f64 + 0.5) / (1u64 << 53) as f64
+}
+
+/// Canonical item order: priority descending, edge ascending on ties —
+/// deterministic regardless of the order items arrived in.
+fn canonical_sort(items: &mut [MergeItem]) {
+    items.sort_by(|a, b| {
+        b.priority
+            .total_cmp(&a.priority)
+            .then_with(|| (a.edge.u, a.edge.v).cmp(&(b.edge.u, b.edge.v)))
+    });
+}
+
+impl MergedReservoir {
+    /// Lift a reservoir: every stored edge becomes an item of weight
+    /// `t / s` with its intrinsic priority under `seed`.
+    pub fn from_reservoir(r: &Reservoir, seed: u64) -> MergedReservoir {
+        let s = r.len();
+        let weight = if s == 0 { 1.0 } else { r.t() as f64 / s as f64 };
+        let mut items: Vec<MergeItem> = r
+            .edges()
+            .iter()
+            .map(|&edge| {
+                let u = uniform_key(seed, edge);
+                MergeItem { edge, weight, priority: u.ln() / weight }
+            })
+            .collect();
+        canonical_sort(&mut items);
+        MergedReservoir { budget: r.budget(), seed, total_t: r.t() as u64, items }
+    }
+
+    /// The shared budget `b`.
+    pub fn budget(&self) -> usize {
+        self.budget
+    }
+
+    /// The merge seed the priorities were drawn under.
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Total stream arrivals the merged sample summarizes.
+    pub fn total_t(&self) -> u64 {
+        self.total_t
+    }
+
+    /// The surviving items, in canonical order.
+    pub fn items(&self) -> &[MergeItem] {
+        &self.items
+    }
+
+    /// Number of surviving items.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    /// `true` when no item survived (empty shards).
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// The merged sample as plain edges (canonical order) plus the total
+    /// arrival count — the input to descriptor replay-and-rescale.
+    pub fn into_sample(self) -> (Vec<Edge>, u64) {
+        (self.items.into_iter().map(|i| i.edge).collect(), self.total_t)
+    }
+}
+
+impl MergeableState for MergedReservoir {
+    /// Union + keep the `budget` largest priorities; arrival clocks add.
+    fn merge_state(&mut self, other: &Self) -> crate::Result<()> {
+        crate::ensure!(
+            self.budget == other.budget,
+            "reservoir merge: budget mismatch ({} vs {})",
+            self.budget,
+            other.budget
+        );
+        crate::ensure!(
+            self.seed == other.seed,
+            "reservoir merge: merge-seed mismatch ({:#x} vs {:#x})",
+            self.seed,
+            other.seed
+        );
+        self.items.extend_from_slice(&other.items);
+        canonical_sort(&mut self.items);
+        self.items.truncate(self.budget);
+        self.total_t += other.total_t;
+        Ok(())
+    }
+}
+
+impl MergeableState for GraphSketch {
+    /// The exact entrywise merge (ISSUE 8), unchanged — `merge_state` is
+    /// the trait spelling of [`GraphSketch::merge`].
+    fn merge_state(&mut self, other: &Self) -> crate::Result<()> {
+        self.merge(other)
+    }
+}
+
+impl MergeableState for Reservoir {
+    /// Convenience merge at *aggregate* weights: both sides are lifted
+    /// under [`RESERVOIR_MERGE_SEED`] with one weight per reservoir
+    /// (`t / s`), merged, and the top-`b` edges written back; the clock
+    /// becomes `t_a + t_b` and the RNG is left untouched.
+    ///
+    /// Deterministic under the fixed seed, but **weight-coarsening**: a
+    /// chain of pairwise merges re-derives weights from the intermediate
+    /// aggregate (`(t_a+t_b)/s` instead of the per-shard `t_j/s_j`), so
+    /// unlike [`MergedReservoir`] this impl is *not* bit-for-bit
+    /// grouping-invariant for shards of unequal length.  Multi-shard
+    /// merges that need the exact laws must lift once and merge the
+    /// lifted carriers — that is what every shard path in this crate
+    /// does.
+    fn merge_state(&mut self, other: &Self) -> crate::Result<()> {
+        let mut a = MergedReservoir::from_reservoir(self, RESERVOIR_MERGE_SEED);
+        let b = MergedReservoir::from_reservoir(other, RESERVOIR_MERGE_SEED);
+        a.merge_state(&b)?;
+        let (edges, t) = a.into_sample();
+        self.set_merged(edges, t as usize);
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(budget: usize, first: u32, n: u32, rng_seed: u64) -> Reservoir {
+        let mut r = Reservoir::new(budget, Pcg64::seed_from_u64(rng_seed));
+        for i in first..first + n {
+            r.offer(Edge::new(i, i + 1));
+        }
+        r
+    }
+
+    #[test]
+    fn inclusion_probability_identities() {
+        // empty pattern and whole-stream samples are certain
+        assert_eq!(sample_inclusion_probability(0, 100, 10), 1.0);
+        assert_eq!(sample_inclusion_probability(3, 50, 50), 1.0);
+        assert_eq!(sample_inclusion_probability(3, 50, 80), 1.0);
+        // pattern larger than the sample is undetectable
+        assert_eq!(sample_inclusion_probability(4, 100, 3), 0.0);
+        // 2 of 3-from-5: (3/5)(2/4)
+        let p = sample_inclusion_probability(2, 5, 3);
+        assert!((p - 0.3).abs() < 1e-12, "{p}");
+        // monotone decreasing in pattern size
+        let mut last = 1.0;
+        for f in 1..=6 {
+            let p = sample_inclusion_probability(f, 1000, 100);
+            assert!(p < last);
+            last = p;
+        }
+    }
+
+    #[test]
+    fn lift_is_deterministic_and_canonical() {
+        let r = filled(8, 0, 30, 5);
+        let a = MergedReservoir::from_reservoir(&r, 99);
+        let b = MergedReservoir::from_reservoir(&r, 99);
+        assert_eq!(a, b);
+        assert_eq!(a.total_t(), 30);
+        for w in a.items().windows(2) {
+            assert!(w[0].priority >= w[1].priority, "canonical order broken");
+        }
+        for it in a.items() {
+            assert!((it.weight - 30.0 / 8.0).abs() < 1e-12);
+            assert!(it.priority < 0.0 && it.priority.is_finite());
+        }
+    }
+
+    #[test]
+    fn merged_reservoir_is_associative_and_order_independent() {
+        let seed = 0xfeed;
+        let parts: Vec<MergedReservoir> = [(0u32, 40u32, 1u64), (100, 25, 2), (200, 60, 3)]
+            .iter()
+            .map(|&(first, n, s)| MergedReservoir::from_reservoir(&filled(10, first, n, s), seed))
+            .collect();
+        let fold = |order: &[usize]| {
+            let mut m = parts[order[0]].clone();
+            for &i in &order[1..] {
+                m.merge_state(&parts[i]).unwrap();
+            }
+            m
+        };
+        let left = fold(&[0, 1, 2]);
+        // right-associated: b+c first, then a
+        let mut bc = parts[1].clone();
+        bc.merge_state(&parts[2]).unwrap();
+        let mut right = parts[0].clone();
+        right.merge_state(&bc).unwrap();
+        assert_eq!(left, right, "associativity");
+        for perm in [[1, 0, 2], [2, 1, 0], [0, 2, 1], [2, 0, 1], [1, 2, 0]] {
+            assert_eq!(fold(&perm), left, "permutation {perm:?}");
+        }
+        assert_eq!(left.total_t(), 40 + 25 + 60);
+        assert!(left.len() <= 10);
+    }
+
+    #[test]
+    fn merge_rejects_budget_and_seed_mismatch() {
+        let mut a = MergedReservoir::from_reservoir(&filled(5, 0, 20, 1), 7);
+        let wrong_budget = MergedReservoir::from_reservoir(&filled(6, 0, 20, 1), 7);
+        let err = a.merge_state(&wrong_budget).unwrap_err();
+        assert!(err.to_string().contains("budget mismatch"), "{err}");
+        let wrong_seed = MergedReservoir::from_reservoir(&filled(5, 0, 20, 1), 8);
+        let err = a.merge_state(&wrong_seed).unwrap_err();
+        assert!(err.to_string().contains("merge-seed mismatch"), "{err}");
+    }
+
+    #[test]
+    fn reservoir_trait_merge_bounds_and_clock() {
+        let mut a = filled(12, 0, 50, 4);
+        let b = filled(12, 100, 70, 5);
+        let union_before: Vec<Edge> =
+            a.edges().iter().chain(b.edges()).copied().collect();
+        a.merge_state(&b).unwrap();
+        assert_eq!(a.t(), 120);
+        assert_eq!(a.len(), 12);
+        for e in a.edges() {
+            assert!(union_before.contains(e), "merged edge {e:?} not from either sample");
+        }
+        // deterministic: same inputs, same merged sample
+        let mut a2 = filled(12, 0, 50, 4);
+        a2.merge_state(&filled(12, 100, 70, 5)).unwrap();
+        assert_eq!(a.edges(), a2.edges());
+    }
+
+    #[test]
+    fn sketch_trait_merge_delegates_to_exact_merge() {
+        let mut a = GraphSketch::new(16, 2, 3);
+        let mut b = GraphSketch::new(16, 2, 3);
+        let mut whole = GraphSketch::new(16, 2, 3);
+        for i in 0..40u32 {
+            let sk = if i % 2 == 0 { &mut a } else { &mut b };
+            sk.update(i, i + 1);
+            whole.update(i, i + 1);
+        }
+        a.merge_state(&b).unwrap();
+        assert_eq!(a, whole);
+        let other_seed = GraphSketch::new(16, 2, 4);
+        assert!(a.merge_state(&other_seed).is_err());
+    }
+
+    #[test]
+    fn small_budget_merge_keeps_global_top_priorities() {
+        // with budget 3, the merged sample must be exactly the 3 items of
+        // largest priority across the union — verified by brute force
+        let seed = 11;
+        let a = MergedReservoir::from_reservoir(&filled(3, 0, 30, 1), seed);
+        let b = MergedReservoir::from_reservoir(&filled(3, 50, 30, 2), seed);
+        let mut all: Vec<MergeItem> = a.items().iter().chain(b.items()).copied().collect();
+        all.sort_by(|x, y| y.priority.total_cmp(&x.priority));
+        let mut m = a.clone();
+        m.merge_state(&b).unwrap();
+        let want: Vec<Edge> = all[..3].iter().map(|i| i.edge).collect();
+        let got: Vec<Edge> = m.items().iter().map(|i| i.edge).collect();
+        assert_eq!(got, want);
+    }
+}

@@ -14,12 +14,19 @@
 //!
 //! The reservoir is one of two estimation backends: [`sketch`] holds the
 //! hash-bucket-matrix alternative ([`Backend::Sketch`]) and the shared
-//! [`EstimatorConfig`] every estimator consumes (ISSUE 8).
+//! [`EstimatorConfig`] every estimator consumes (ISSUE 8).  Both
+//! backends implement [`merge::MergeableState`] (ISSUE 10): sketches
+//! merge exactly, reservoirs merge by weighted subsampling — the basis
+//! of the sharded scale-out path (`repro shard`, DESIGN.md §13).
 
+pub mod merge;
 pub mod reservoir;
 pub mod sketch;
 pub mod window;
 
+pub use merge::{
+    sample_inclusion_probability, MergeItem, MergeableState, MergedReservoir,
+};
 pub use reservoir::{Reservoir, ReservoirAction};
 pub use sketch::{Backend, EstimatorConfig, GraphSketch};
 pub use window::{Series, Snapshot, WindowConfig, WindowPolicy, WindowedReservoir};

@@ -106,6 +106,17 @@ impl Reservoir {
         }
     }
 
+    /// Install a merged sample (ISSUE 10): replace the stored edges and
+    /// the arrival clock with the outcome of a distributed merge
+    /// ([`crate::sampling::merge`]).  The RNG is left untouched — merge
+    /// priorities are drawn from their own seeded stream, never from the
+    /// sampler's, so merging cannot perturb future offer decisions.
+    pub(crate) fn set_merged(&mut self, edges: Vec<Edge>, t: usize) {
+        debug_assert!(edges.len() <= self.budget, "merged sample exceeds budget");
+        self.edges = edges;
+        self.t = t;
+    }
+
     /// Reset for a fresh stream (keeps budget and RNG state).
     pub fn clear(&mut self) {
         self.edges.clear();

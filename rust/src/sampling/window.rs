@@ -977,6 +977,58 @@ impl<const K: usize> WindowAcc<K> {
         }
     }
 
+    /// Fold another shard's accumulator into this one, arrival-weighted
+    /// (ISSUE 10, the counter half of [`crate::sampling::merge`]).
+    ///
+    /// * `Plain` — per-arrival credit *sums* combine by plain addition:
+    ///   `t_a·(S_a/t_a) + t_b·(S_b/t_b) = S_a + S_b`, i.e. the
+    ///   arrival-weighted combination of per-arrival rates reduces to
+    ///   summation, exactly.
+    /// * `Decay` — the decayed sums are clock-relative, so the combined
+    ///   value is the arrival-weighted convex combination
+    ///   `(t_a·a + t_b·b) / (t_a + t_b)`; both sides must share `rho`.
+    /// * `Sliding` — the two shards' bucket clocks have no common phase;
+    ///   combining them would silently misalign the trailing edge, so
+    ///   this is a loud error (shard merges reject sliding windows up
+    ///   front — this is the backstop).
+    pub(crate) fn combine_weighted(
+        &mut self,
+        other: &WindowAcc<K>,
+        t_self: u64,
+        t_other: u64,
+    ) -> crate::Result<()> {
+        match (self, other) {
+            (WindowAcc::Plain(a), WindowAcc::Plain(b)) => {
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x += y;
+                }
+                Ok(())
+            }
+            (
+                WindowAcc::Decay { vals: a, rho: ra },
+                WindowAcc::Decay { vals: b, rho: rb },
+            ) => {
+                crate::ensure!(
+                    ra.to_bits() == rb.to_bits(),
+                    "accumulator merge: decay factors differ ({ra} vs {rb})"
+                );
+                let (ta, tb) = (t_self as f64, t_other as f64);
+                let total = (ta + tb).max(1.0);
+                for (x, y) in a.iter_mut().zip(b) {
+                    *x = (ta * *x + tb * y) / total;
+                }
+                Ok(())
+            }
+            (WindowAcc::Sliding(_), WindowAcc::Sliding(_)) => Err(crate::anyhow!(
+                "accumulator merge: sliding-window phases differ across shards; \
+                 sliding windows cannot be merged"
+            )),
+            _ => Err(crate::anyhow!(
+                "accumulator merge: window policies differ across shards"
+            )),
+        }
+    }
+
     /// Serialize: a variant tag, then the arm's own state.
     pub(crate) fn save(&self, out: &mut Enc) {
         match self {
@@ -1192,6 +1244,39 @@ mod tests {
 
     fn edges(n: u32) -> Vec<Edge> {
         (0..n).map(|i| Edge::new(i, i + 1)).collect()
+    }
+
+    /// ISSUE 10: plain accumulators combine by exact summation (the
+    /// arrival-weighted combination of per-arrival rates), decay
+    /// accumulators by the arrival-weighted convex combination, and
+    /// sliding/mixed combinations are loud errors.
+    #[test]
+    fn combine_weighted_sums_plain_and_blends_decay() {
+        let mut a = WindowAcc::<2>::Plain([1.5, -2.0]);
+        let b = WindowAcc::<2>::Plain([0.25, 8.0]);
+        a.combine_weighted(&b, 10, 30).unwrap();
+        assert_eq!(a.values(), [1.75, 6.0]);
+
+        let mut a = WindowAcc::<1>::Decay { vals: [4.0], rho: 0.5 };
+        let b = WindowAcc::<1>::Decay { vals: [8.0], rho: 0.5 };
+        a.combine_weighted(&b, 10, 30).unwrap();
+        // (10·4 + 30·8) / 40 = 7
+        assert_eq!(a.values(), [7.0]);
+
+        let mut a = WindowAcc::<1>::Decay { vals: [4.0], rho: 0.5 };
+        let b = WindowAcc::<1>::Decay { vals: [8.0], rho: 0.25 };
+        let err = a.combine_weighted(&b, 1, 1).unwrap_err();
+        assert!(err.to_string().contains("decay factors differ"), "{err}");
+
+        let mut a = WindowAcc::<1>::new(WindowPolicy::Sliding { w: 8 });
+        let b = WindowAcc::<1>::new(WindowPolicy::Sliding { w: 8 });
+        let err = a.combine_weighted(&b, 1, 1).unwrap_err();
+        assert!(err.to_string().contains("sliding-window phases"), "{err}");
+
+        let mut a = WindowAcc::<1>::Plain([0.0]);
+        let b = WindowAcc::<1>::new(WindowPolicy::Sliding { w: 8 });
+        let err = a.combine_weighted(&b, 1, 1).unwrap_err();
+        assert!(err.to_string().contains("policies differ"), "{err}");
     }
 
     /// The load-bearing differential: a sliding reservoir whose window

@@ -21,7 +21,7 @@ use stream_descriptors::coordinator::{
 use stream_descriptors::gen;
 use stream_descriptors::graph::stream::VecStream;
 use stream_descriptors::graph::Graph;
-use stream_descriptors::sampling::{WindowConfig, WindowPolicy};
+use stream_descriptors::sampling::{Backend, WindowConfig, WindowPolicy};
 use stream_descriptors::util::fault::FaultPlan;
 use stream_descriptors::util::rng::Pcg64;
 use stream_descriptors::util::tmp::TempDir;
@@ -227,6 +227,72 @@ fn absorbed_panic_reproduces_the_clean_run() {
     assert_eq!(faulty.health.faults_injected, 2);
     assert!(!faulty.health.degraded);
     assert_bit_identical(&clean.averaged, &faulty.averaged, "absorbed panic");
+}
+
+/// Lost-*shard* leg (ISSUE 10): in sketch shard mode each chunk reaches
+/// exactly one worker, so losing a worker loses its share of the stream
+/// — the run must complete, flag `degraded`, and the survivors' merged
+/// state must be **bit-for-bit** a direct sketch pass over exactly the
+/// surviving chunks (chunk `c` routes round-robin to worker `c % W`; a
+/// permanently lost worker drains and discards its queue).
+///
+/// GABE and MAEVE only: SANTA's pass-1 degree profile is computed by
+/// the master over the *full* stream, so its degraded estimate has no
+/// direct-run twin over the surviving subsequence.
+#[test]
+fn lost_sketch_shard_merges_exactly_the_surviving_chunks() {
+    let g = test_graph();
+    let backend = Backend::Sketch { width: 32, depth: 3 };
+    let (workers, chunk_size, lost) = (3usize, 32usize, 1usize);
+
+    // the stream order the pipeline will see, pre-shuffled so the test
+    // can slice out the chunks the lost worker swallowed
+    let mut order = g.edges.clone();
+    Pcg64::seed_from_u64(19).shuffle(&mut order);
+    let surviving: Vec<_> = order
+        .chunks(chunk_size)
+        .enumerate()
+        .filter(|(c, _)| c % workers != lost)
+        .flat_map(|(_, chunk)| chunk.iter().copied())
+        .collect();
+
+    for kind in [DescriptorKind::Gabe, DescriptorKind::Maeve] {
+        let cfg = CoordinatorConfig {
+            workers,
+            budget: g.m() / 3,
+            chunk_size,
+            queue_depth: 2,
+            seed: 47,
+            backend,
+            max_restarts: 1,
+            // `lose` re-fires on the restart replay, exhausting the budget:
+            // worker 1 is declared lost on its first chunk and every chunk
+            // routed to it afterwards is discarded
+            fault: Some(FaultPlan::parse(&format!("lose@{lost}:5")).unwrap()),
+            ..Default::default()
+        };
+        let mut s = VecStream::new(order.clone());
+        let degraded = run_pipeline(&mut s, kind, &cfg).unwrap();
+        assert!(degraded.health.degraded, "{kind:?}");
+        assert_eq!(degraded.health.lost_workers, vec![lost], "{kind:?}");
+        assert_eq!(degraded.per_worker.len(), workers - 1, "{kind:?}: survivors only");
+        assert_eq!(degraded.edges, g.m() as u64, "{kind:?}: master must drain the stream");
+
+        let direct_cfg = DirectConfig {
+            kind,
+            budget: g.m() / 3,
+            seed: 47,
+            backend,
+            ..Default::default()
+        };
+        let mut s = VecStream::new(surviving.clone());
+        let direct = run_direct(&mut s, &direct_cfg).unwrap();
+        assert_bit_identical(
+            &degraded.averaged,
+            &direct.estimate,
+            &format!("{kind:?}: degraded merge vs direct run over surviving chunks"),
+        );
+    }
 }
 
 /// Corrupt checkpoints are rejected loudly on resume, never half-loaded:
